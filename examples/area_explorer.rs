@@ -1,0 +1,58 @@
+//! Explore the gate-level silicon-area model: Fig 6 sweep, the §4.2
+//! density headline, per-component area breakdowns, and the
+//! bits-per-value storage table — all pure analytic (no artifacts).
+//!
+//! Run: `cargo run --release --example area_explorer`
+
+use anyhow::Result;
+use boosters::bfp::bits_per_value;
+use boosters::experiments::figs;
+use boosters::hw_model::{bf16_dot_unit, fp32_dot_unit, hbfp_dot_unit};
+use boosters::report::Table;
+
+fn main() -> Result<()> {
+    figs::fig6()?.print();
+    println!();
+    figs::density()?.print();
+    println!();
+
+    let mut breakdown = Table::new(
+        "Dot-unit area breakdown @ N = 64 (gate counts)",
+        &["unit", "multipliers", "adder_tree", "acc+act", "exp", "converters", "total"],
+    );
+    for (name, u) in [
+        ("FP32", fp32_dot_unit(64)),
+        ("BF16", bf16_dot_unit(64)),
+        ("HBFP8", hbfp_dot_unit(8, 64)),
+        ("HBFP6", hbfp_dot_unit(6, 64)),
+        ("HBFP4", hbfp_dot_unit(4, 64)),
+    ] {
+        breakdown.row(vec![
+            name.into(),
+            u.multipliers.to_string(),
+            u.adder_tree.to_string(),
+            (u.accumulator + u.activation).to_string(),
+            u.exponent_logic.to_string(),
+            u.converters.to_string(),
+            u.total().to_string(),
+        ]);
+    }
+    breakdown.print();
+    println!();
+
+    let mut storage = Table::new(
+        "Storage: bits/value (mantissa + amortized 10-bit exponent)",
+        &["format", "b=16", "b=64", "b=576", "vs FP32 @64"],
+    );
+    for m in [8u32, 6, 5, 4] {
+        storage.row(vec![
+            format!("HBFP{m}"),
+            format!("{:.2}", bits_per_value(m, 16)),
+            format!("{:.2}", bits_per_value(m, 64)),
+            format!("{:.2}", bits_per_value(m, 576)),
+            format!("{:.1}x", 32.0 / bits_per_value(m, 64)),
+        ]);
+    }
+    storage.print();
+    Ok(())
+}

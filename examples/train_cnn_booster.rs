@@ -1,0 +1,60 @@
+//! End-to-end validation driver (DESIGN.md requirement): trains the CNN
+//! on the synthetic CIFAR stand-in under FP32, standalone HBFP4, and the
+//! Accuracy Booster, logging full loss curves — the run recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `cargo run --release --example train_cnn_booster [-- full]`
+
+use anyhow::Result;
+use boosters::config::PrecisionPolicy;
+use boosters::coordinator::TrainerData;
+use boosters::experiments::common::{config_for, run_one};
+use boosters::experiments::Preset;
+use boosters::report::{results_dir, Table};
+use boosters::runtime::{artifacts_dir, Engine};
+
+fn main() -> Result<()> {
+    let full = std::env::args().any(|a| a == "full");
+    let preset = if full { Preset::Full } else { Preset::Quick };
+    let engine = Engine::new()?;
+    let variant = engine.load_variant_by_name(&artifacts_dir(), "cnn_bs64")?;
+    let cfg0 = config_for(&variant, PrecisionPolicy::Fp32, preset);
+    let data = TrainerData::for_variant(&variant, &cfg0)?;
+    println!(
+        "CNN: {} params, block 64, {} epochs x {} steps, batch {}",
+        variant.manifest.total_weights(),
+        cfg0.epochs,
+        cfg0.steps_per_epoch,
+        variant.manifest.batch
+    );
+
+    let mut table = Table::new(
+        "End-to-end: CNN on synthetic CIFAR stand-in",
+        &["policy", "final_val_acc", "best_val_acc", "wall_secs"],
+    );
+    for policy in [
+        PrecisionPolicy::Fp32,
+        PrecisionPolicy::Hbfp { bits: 4 },
+        PrecisionPolicy::booster(1),
+    ] {
+        let cfg = config_for(&variant, policy.clone(), preset);
+        println!("--- {}", policy.label());
+        let (acc, hist, _) = run_one(&engine, &variant, &data, cfg, true)?;
+        hist.write_csv(
+            &results_dir().join(format!(
+                "e2e_cnn_{}.csv",
+                policy.label().replace(['+', '(', ')'], "_")
+            )),
+        )?;
+        table.row(vec![
+            policy.label(),
+            format!("{acc:.4}"),
+            format!("{:.4}", hist.best_val_acc()),
+            format!("{:.1}", hist.total_wall_secs()),
+        ]);
+    }
+    table.print();
+    table.write_csv(&results_dir().join("e2e_cnn_summary.csv"))?;
+    println!("curves in results/e2e_cnn_*.csv");
+    Ok(())
+}

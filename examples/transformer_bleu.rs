@@ -1,0 +1,19 @@
+//! Table-3 scenario as a standalone example: train the decoder-only
+//! transformer on the synthetic translation task under each precision
+//! policy, greedy-decode the validation set, and score corpus BLEU.
+//!
+//! Run: `cargo run --release --example transformer_bleu [-- full]`
+
+use anyhow::Result;
+use boosters::experiments::{table3, Preset};
+use boosters::runtime::{artifacts_dir, Engine};
+
+fn main() -> Result<()> {
+    let full = std::env::args().any(|a| a == "full");
+    let preset = if full { Preset::Full } else { Preset::Quick };
+    let engine = Engine::new()?;
+    let table = table3::run(&engine, &artifacts_dir(), preset)?;
+    table.print();
+    println!("(paper Table 3: FP32 34.77, HBFP6 34.47, HBFP4 32.64, Booster 36.08)");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Fig-1 scenario as a standalone example: quantize the weights of a
+//! trained FP32 CNN at HBFP6/HBFP4 across block sizes and report the
+//! Wasserstein distances per layer, plus the §3 R² association between
+//! distance and accuracy (computed over the stored Table-1 CSV when one
+//! exists from a previous `repro table1` run).
+//!
+//! Run: `cargo run --release --example wasserstein_report`
+
+use anyhow::Result;
+use boosters::experiments::{figs, Preset};
+use boosters::metrics::r_squared;
+use boosters::report::results_dir;
+use boosters::runtime::{artifacts_dir, Engine};
+
+fn main() -> Result<()> {
+    let engine = Engine::new()?;
+    let table = figs::fig1(&engine, &artifacts_dir(), Preset::Quick)?;
+    table.print();
+
+    // Optional R² cross-check against an existing Table-1 sweep: join the
+    // mean Wasserstein distance per (format, block) with its accuracy.
+    let t1 = results_dir().join("table1_cnn.csv");
+    let w1 = results_dir().join("fig1_wasserstein.csv");
+    if t1.exists() && w1.exists() {
+        let parse = |p: &std::path::Path| -> Vec<Vec<String>> {
+            std::fs::read_to_string(p)
+                .unwrap_or_default()
+                .lines()
+                .skip(1)
+                .map(|l| l.split(',').map(str::to_string).collect())
+                .collect()
+        };
+        let acc_rows = parse(&t1);
+        let w_rows = parse(&w1);
+        let mut dists = Vec::new();
+        let mut accs = Vec::new();
+        for row in &acc_rows {
+            // ["HBFP4", "64", gain, acc, best]
+            let (fmt, block) = (&row[0], &row[1]);
+            if fmt == "FP32" {
+                continue;
+            }
+            let ws: Vec<f64> = w_rows
+                .iter()
+                .filter(|w| &w[1] == fmt && &w[2] == block)
+                .filter_map(|w| w[3].parse().ok())
+                .collect();
+            if ws.is_empty() {
+                continue;
+            }
+            dists.push(ws.iter().sum::<f64>() / ws.len() as f64);
+            accs.push(row[3].parse::<f64>().unwrap_or(0.0));
+        }
+        if dists.len() >= 3 {
+            println!(
+                "\nR²(Wasserstein distance, val accuracy) over {} sweep points: {:.3}",
+                dists.len(),
+                r_squared(&dists, &accs)
+            );
+            println!("(paper §3 reports ≈0.99 on its sweep)");
+        }
+    } else {
+        println!("\n(run `repro table1 --model cnn` first to get the R² join)");
+    }
+    Ok(())
+}

@@ -1,0 +1,196 @@
+"""AOT compiler: lower every model variant to HLO text + manifest.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 rust crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+One artifact directory per variant ``<model>_bs<block>[_pallas]``:
+
+    artifacts/<variant>/train_step.hlo.txt
+    artifacts/<variant>/eval.hlo.txt
+    artifacts/<variant>/decode.hlo.txt      (transformer only)
+    artifacts/<variant>/manifest.json
+
+plus ``artifacts/index.json`` (variant registry) and
+``artifacts/golden_bfp.json`` (the rust<->python numerics contract).
+
+Block size is baked per artifact (it changes padded shapes); mantissa
+widths / rounding mode / seed / lr stay runtime scalars so the rust
+PrecisionScheduler drives the whole format sweep and the Accuracy Booster
+schedule from a handful of artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import golden, train
+from .kernels import bfp_pallas
+from .kernels import ref as R
+from .models import cnn, mlp, transformer
+from .models.common import ModelDef
+
+# The paper's block-size axis (Table 1 / Fig 1 / Fig 6).
+PAPER_BLOCK_SIZES = (16, 25, 36, 49, 64, 256, 576)
+
+BATCH = {"mlp": 128, "cnn": 64, "transformer": 32}
+OPT = {"mlp": "sgdm", "cnn": "sgdm", "transformer": "adam"}
+
+
+@dataclasses.dataclass
+class Variant:
+    model: str
+    block: int
+    pallas: bool = False
+
+    @property
+    def name(self) -> str:
+        return f"{self.model}_bs{self.block}" + ("_pallas" if self.pallas else "")
+
+
+def default_variants(quick: bool) -> List[Variant]:
+    vs: List[Variant] = []
+    blocks = (16, 64) if quick else PAPER_BLOCK_SIZES
+    for b in blocks:
+        vs.append(Variant("mlp", b))
+        vs.append(Variant("cnn", b))
+    vs.append(Variant("mlp", 64, pallas=True))  # flagship Pallas-kernel build
+    vs.append(Variant("transformer", 64))
+    return vs
+
+
+def build_model(kind: str) -> ModelDef:
+    if kind == "mlp":
+        return mlp.build(mlp.HP())
+    if kind == "cnn":
+        return cnn.build(cnn.HP())
+    if kind == "transformer":
+        return transformer.build(transformer.HP())
+    raise ValueError(kind)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32():
+    return jax.ShapeDtypeStruct((), jnp.float32)
+
+
+def lower_variant(v: Variant, out_dir: str) -> dict:
+    model = build_model(v.model)
+    qflat = bfp_pallas.quantize_flat_pallas if v.pallas else R.quantize_flat
+    opt_kind = OPT[v.model]
+    batch = BATCH[v.model]
+    train_step, eval_batch, ospec = train.make_fns(model, v.block, opt_kind, qflat)
+
+    in_dt = jnp.float32 if model.input_dtype == "f32" else jnp.int32
+    x_spec = jax.ShapeDtypeStruct((batch,) + model.input_shape, in_dt)
+    y_spec = jax.ShapeDtypeStruct((batch,) + model.label_shape, jnp.int32)
+    p_specs = [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in model.builder.specs]
+    o_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in ospec.slot_shapes]
+
+    vdir = os.path.join(out_dir, v.name)
+    os.makedirs(vdir, exist_ok=True)
+
+    train_args = p_specs + o_specs + [x_spec, y_spec] + [_f32()] * 5
+    lowered = jax.jit(train_step).lower(*train_args)
+    with open(os.path.join(vdir, "train_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    eval_args = p_specs + [x_spec, y_spec] + [_f32()] * 4
+    lowered = jax.jit(eval_batch).lower(*eval_args)
+    with open(os.path.join(vdir, "eval.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    artifacts = {"train_step": "train_step.hlo.txt", "eval": "eval.hlo.txt"}
+    decode_info = None
+    if v.model == "transformer":
+        hp = model.hyper
+        dec = train.make_decode(model, v.block, qflat)
+        src_spec = jax.ShapeDtypeStruct((batch, hp["src_len"]), jnp.int32)
+        lowered = jax.jit(dec).lower(*(p_specs + [src_spec] + [_f32()] * 4))
+        with open(os.path.join(vdir, "decode.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        artifacts["decode"] = "decode.hlo.txt"
+        decode_info = {
+            "src_len": hp["src_len"],
+            "tgt_len": hp["tgt_len"],
+            "out_len": hp["tgt_len"] + 1,
+            "bos": hp["vocab"] - 6,
+            "sep": hp["vocab"] - 5,
+            "eos": hp["vocab"] - 4,
+        }
+
+    manifest = {
+        "variant": v.name,
+        "model": v.model,
+        "block": v.block,
+        "pallas": v.pallas,
+        "batch": batch,
+        "input_shape": list(model.input_shape),
+        "input_dtype": model.input_dtype,
+        "label_shape": list(model.label_shape),
+        "num_classes": model.num_classes,
+        "hyper": model.hyper,
+        "params": [s.to_json() for s in model.builder.specs],
+        "opt": ospec.to_json(),
+        "scalars_train": ["bits_mid", "bits_edge", "rmode_grad", "seed", "lr"],
+        "scalars_eval": ["bits_mid", "bits_edge", "rmode_grad", "seed"],
+        "artifacts": artifacts,
+        "decode": decode_info,
+    }
+    with open(os.path.join(vdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return {"name": v.name, "model": v.model, "block": v.block, "pallas": v.pallas}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default="default",
+        help="comma list like cnn_bs64,mlp_bs16,transformer_bs64[_pallas] or 'default'",
+    )
+    ap.add_argument("--quick", action="store_true", help="small variant set for CI")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.variants == "default":
+        variants = default_variants(args.quick)
+    else:
+        variants = []
+        for tok in args.variants.split(","):
+            pallas = tok.endswith("_pallas")
+            core = tok[: -len("_pallas")] if pallas else tok
+            m, bs = core.rsplit("_bs", 1)
+            variants.append(Variant(m, int(bs), pallas))
+
+    index = []
+    for v in variants:
+        print(f"[aot] lowering {v.name} ...", flush=True)
+        index.append(lower_variant(v, args.out))
+
+    golden.write(os.path.join(args.out, "golden_bfp.json"))
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump({"variants": index}, f, indent=1)
+    print(f"[aot] wrote {len(index)} variants + golden vectors to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Golden-vector generation pinning the BFP numerics contract.
+
+Emits ``artifacts/golden_bfp.json``: inputs + bit-exact expected outputs of
+``ref.quantize_flat`` across mantissa widths, block sizes, rounding modes,
+seeds and padding edge cases. ``rust/src/bfp/tests`` replays these and must
+match exactly (every f32 is exactly representable as a JSON double, so the
+round-trip is lossless).
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref as R
+
+
+def _case(rng, n, block, m, rmode, seed, site, scale):
+    x = (rng.standard_normal(n) * scale).astype(np.float32)
+    # Sprinkle exact zeros / tiny values / exact powers of two to pin the
+    # edge cases (zero blocks, denormal guard, exponent extraction).
+    if n >= 8:
+        x[0] = 0.0
+        x[1] = 2.0**-130  # denormal
+        x[2] = -1.0
+        x[3] = 0.5
+        x[4] = 2.0**10
+    out = R.quantize_flat(
+        jnp.asarray(x),
+        block,
+        jnp.float32(m),
+        jnp.float32(rmode),
+        jnp.float32(seed),
+        site,
+    )
+    return {
+        "n": n,
+        "block": block,
+        "m_bits": m,
+        "rmode": rmode,
+        "seed": seed,
+        "site": site,
+        "input": [float(v) for v in x],
+        "output": [float(v) for v in np.asarray(out)],
+    }
+
+
+def generate() -> dict:
+    rng = np.random.default_rng(20260710)
+    cases = []
+    for block in (16, 25, 64, 576):
+        for m in (4, 5, 6, 8, 24):
+            for rmode in (0, 1):
+                cases.append(_case(rng, 3 * block + 7, block, m, rmode, 7, 0, 1.0))
+    # Extra shapes: shorter than one block, widely scaled, all-zero.
+    cases.append(_case(rng, 9, 64, 4, 0, 7, 3, 1e-3))
+    cases.append(_case(rng, 130, 49, 6, 1, 12345, 2, 100.0))
+    zero = {
+        "n": 32,
+        "block": 16,
+        "m_bits": 4,
+        "rmode": 0,
+        "seed": 0,
+        "site": 0,
+        "input": [0.0] * 32,
+        "output": [0.0] * 32,
+    }
+    cases.append(zero)
+    # Hash vectors for the xorshift stream itself.
+    idx = np.arange(64, dtype=np.uint32)
+    hashes = {
+        str(seed): [int(v) for v in np.asarray(R.xorshift_hash(jnp.asarray(idx), jnp.uint32(seed)))]
+        for seed in (0, 7, 12345)
+    }
+    return {"cases": cases, "xorshift": hashes}
+
+
+def write(path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(generate(), f)
+
+
+if __name__ == "__main__":
+    import sys
+
+    write(sys.argv[1] if len(sys.argv) > 1 else "golden_bfp.json")

@@ -1,0 +1,212 @@
+"""L2 plumbing — HBFP dot products with custom VJP.
+
+HBFP rule (Drumond et al., and §2 of the paper): *every* dot-product
+operand — activations, weights and gradients, in both the forward and the
+backward pass — is converted to BFP with blocks along the contraction
+dimension; everything else (norms, softmax, residual adds, optimizer math)
+stays FP32.
+
+``hbfp_dot`` implements that with a custom VJP:
+
+    fwd:  y  = Q_K(x)  @ Q_K(w)            (round-to-nearest-even)
+    bwd:  dx = Q_N(g)  @ Q_N(w)ᵀ           (rounding mode = rmode_grad,
+          dw = Q_M(x)ᵀ @ Q_M(g)             0 = nearest, 1 = stochastic)
+
+Mantissa width, gradient rounding mode and the stochastic-rounding seed are
+traced scalars: the rust coordinator flips them per epoch (the Accuracy
+Booster schedule) without recompiling the AOT artifact.
+
+``site`` is a static per-call-site salt so every quantizer invocation draws
+an independent stochastic-rounding stream. Each dot consumes SITE_STRIDE
+slots. The quantizer itself is pluggable: the plain jnp reference or the
+Pallas kernel (``aot.py --pallas``) — they are bit-identical (pytest).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref as R
+
+# Each hbfp_dot uses sites [site, site + SITE_STRIDE) for its six
+# quantizer invocations (2 fwd + 4 bwd).
+SITE_STRIDE = 8
+
+QuantFlatFn = Callable[..., jax.Array]
+
+# f32 scalar constants for the rounding-mode argument.
+NEAREST = jnp.float32(0.0)
+
+
+def quantize_along_axis(
+    qflat: QuantFlatFn,
+    t: jax.Array,
+    axis: int,
+    block: int,
+    m_bits: jax.Array,
+    rmode: jax.Array,
+    seed: jax.Array,
+    site: int,
+) -> jax.Array:
+    """Move ``axis`` last, quantize row-major blocks with ``qflat``."""
+    moved = jnp.moveaxis(t, axis, -1)
+    q = qflat(moved, block, m_bits, rmode, seed, site)
+    return jnp.moveaxis(q, -1, axis)
+
+
+def make_hbfp_dot(block: int, site: int, qflat: QuantFlatFn = R.quantize_flat):
+    """Build the custom-VJP HBFP matmul for one call site.
+
+    Returns ``dot(x, w, m_bits, rmode_grad, seed) -> y`` for x:[M,K],
+    w:[K,N]. ``block`` and ``site`` are static; the scalars are traced.
+    """
+
+    def _fwd_value(x, w, m_bits, rmode_grad, seed):
+        del rmode_grad
+        xq = qflat(x, block, m_bits, NEAREST, seed, site)
+        wq = quantize_along_axis(qflat, w, 0, block, m_bits, NEAREST, seed, site + 1)
+        return jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+    @jax.custom_vjp
+    def hbfp_dot(x, w, m_bits, rmode_grad, seed):
+        return _fwd_value(x, w, m_bits, rmode_grad, seed)
+
+    def fwd(x, w, m_bits, rmode_grad, seed):
+        y = _fwd_value(x, w, m_bits, rmode_grad, seed)
+        return y, (x, w, m_bits, rmode_grad, seed)
+
+    def bwd(res, g):
+        x, w, m_bits, rmode_grad, seed = res
+        # dx = Q(g) @ Q(w)^T, contraction (and blocks) along N.
+        gq_n = qflat(g, block, m_bits, rmode_grad, seed, site + 2)
+        wq_n = quantize_along_axis(
+            qflat, w, 1, block, m_bits, rmode_grad, seed, site + 3
+        )
+        dx = jnp.dot(gq_n, wq_n.T, preferred_element_type=jnp.float32)
+        # dw = Q(x)^T @ Q(g), contraction (and blocks) along M.
+        xq_m = quantize_along_axis(
+            qflat, x, 0, block, m_bits, rmode_grad, seed, site + 4
+        )
+        gq_m = quantize_along_axis(
+            qflat, g, 0, block, m_bits, rmode_grad, seed, site + 5
+        )
+        dw = jnp.dot(xq_m.T, gq_m, preferred_element_type=jnp.float32)
+        zero = jnp.zeros_like(m_bits)
+        return dx, dw, zero, jnp.zeros_like(rmode_grad), jnp.zeros_like(seed)
+
+    hbfp_dot.defvjp(fwd, bwd)
+    return hbfp_dot
+
+
+class SiteAllocator:
+    """Hands out static stochastic-rounding site salts during model build."""
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def alloc(self) -> int:
+        s = self._next
+        self._next += SITE_STRIDE
+        return s
+
+
+class HbfpContext:
+    """Per-model-build context: block size, quantizer flavour, site salts.
+
+    Models never call the quantizer directly; they go through ``dot`` /
+    ``batched_dot`` so that every dot product in fwd *and* bwd follows the
+    HBFP rule with a unique rounding stream.
+    """
+
+    def __init__(self, block: int, qflat: QuantFlatFn = R.quantize_flat) -> None:
+        self.block = block
+        self.qflat = qflat
+        self.sites = SiteAllocator()
+
+    def dot(self, x: jax.Array, w: jax.Array, m_bits, rmode_grad, seed) -> jax.Array:
+        """HBFP matmul for 2-D ``x`` [M,K] @ ``w`` [K,N]."""
+        fn = make_hbfp_dot(self.block, self.sites.alloc(), self.qflat)
+        return fn(x, w, m_bits, rmode_grad, seed)
+
+    def batched_dot(self, x: jax.Array, w: jax.Array, m_bits, rmode_grad, seed):
+        """HBFP matmul with leading batch dims on both operands.
+
+        x: [..., M, K], w: [..., K, N] with identical leading dims (used by
+        attention: scores = Q @ Kᵀ and ctx = P @ V per (batch, head)).
+        """
+        fn = make_hbfp_dot(self.block, self.sites.alloc(), self.qflat)
+        lead = x.shape[:-2]
+        xm = x.reshape((-1,) + x.shape[-2:])
+        wm = w.reshape((-1,) + w.shape[-2:])
+        out = jax.vmap(lambda a, b: fn(a, b, m_bits, rmode_grad, seed))(xm, wm)
+        return out.reshape(lead + out.shape[-2:])
+
+    def linear(self, x, w, b, m_bits, rmode_grad, seed):
+        """Affine layer: HBFP dot + FP32 bias."""
+        y = self.dot(x, w, m_bits, rmode_grad, seed)
+        return y if b is None else y + b
+
+
+# ---------------------------------------------------------------------------
+# FP32 building blocks (the "H" in HBFP — never quantized)
+# ---------------------------------------------------------------------------
+
+
+def conv2d_im2col(
+    ctx: HbfpContext,
+    x: jax.Array,  # [B, H, W, Cin]  NHWC
+    w: jax.Array,  # [kh, kw, Cin, Cout]
+    m_bits,
+    rmode_grad,
+    seed,
+    stride: int = 1,
+) -> jax.Array:
+    """Convolution lowered to im2col + HBFP matmul (SAME padding).
+
+    This mirrors how an HBFP accelerator executes convs: the im2col stream
+    feeds the blocked fixed-point dot-product array, blocks running along
+    K = kh*kw*Cin.
+    """
+    kh, kw, cin, cout = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # [B, H', W', Cin*kh*kw]
+    b, ho, wo, k = patches.shape
+    # conv_general_dilated_patches orders features as (Cin, kh, kw); align
+    # the weight layout to match before flattening to [K, Cout].
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(kh * kw * cin, cout)
+    y = ctx.dot(patches.reshape(b * ho * wo, k), wmat, m_bits, rmode_grad, seed)
+    return y.reshape(b, ho, wo, cout)
+
+
+def batchnorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5):
+    """Batch-statistics norm over all axes but the channel (last) axis.
+
+    FP32 per HBFP; uses batch stats in both train and eval (no running
+    averages — eval batches are the same size, see DESIGN.md §3).
+    """
+    axes = tuple(range(x.ndim - 1))
+    mean = jnp.mean(x, axis=axes, keepdims=True)
+    var = jnp.var(x, axis=axes, keepdims=True)
+    xhat = (x - mean) * jax.lax.rsqrt(var + eps)
+    return xhat * gamma + beta
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy; labels are int class ids."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,201 @@
+"""L1 — Pallas kernels for the HBFP hot spot.
+
+Two kernels:
+
+  * ``bfp_quantize_pallas`` — the BFP quantizer over a (nblocks, block)
+    array, tiled so each grid step owns ``tile_nb`` blocks. Numerically
+    identical (bit-exact) to ``ref.quantize_blocks``; the model path can be
+    built on top of it (``aot.py --pallas``) and is asserted against the
+    jnp path in pytest.
+
+  * ``bfp_matmul_pallas`` — a fused quantize+matmul: the MXU-oriented
+    adaptation of the paper's fixed-point datapath. Operand tiles are
+    quantized in VMEM (one shared exponent per ``bk``-wide row — the HBFP
+    block) immediately before the dot, the way an HBFP accelerator converts
+    on the fly ahead of its systolic array. Used by the kernel benchmarks
+    and validated against ``ref.pallas_tile_quantize_ref`` composition.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): BlockSpecs below are chosen
+so an operand tile + its quantized copy stay < 4 MiB VMEM and the dot hits
+the 128x128 MXU shape. On this image Pallas must run ``interpret=True``
+(the CPU PJRT plugin cannot execute Mosaic custom-calls), so these kernels
+are *numerics-exact, structure-only* stand-ins for the TPU build; VMEM and
+MXU utilization are estimated analytically in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Interpret mode is mandatory on CPU-PJRT (see module docstring).
+INTERPRET = True
+
+# Default tile sizes. 8 blocks per grid step keeps the quantizer tile
+# (8 x 576 x 4 B x 2 copies ~= 36 KiB) far under VMEM even for the largest
+# paper block size; the matmul tiles target the 128-lane MXU geometry.
+TILE_NB = 8
+TILE_M = 32
+TILE_N = 32
+
+
+def _quantize_tile(v, m_bits, rmode, seed, base_idx):
+    """Quantize a (tnb, b) tile; same algebra as ref.quantize_blocks."""
+    tnb, b = v.shape
+    maxabs = jnp.max(jnp.abs(v), axis=1, keepdims=True)
+    bits = lax.bitcast_convert_type(maxabs, jnp.uint32)
+    e = (((bits >> jnp.uint32(23)) & jnp.uint32(0xFF)).astype(jnp.int32) - 127).astype(
+        jnp.float32
+    )
+    s = jnp.exp2(e - m_bits + 2.0)
+    half = jnp.exp2(m_bits - 1.0)
+    idx = base_idx + lax.broadcasted_iota(jnp.uint32, (tnb, b), 0) * jnp.uint32(
+        b
+    ) + lax.broadcasted_iota(jnp.uint32, (tnb, b), 1)
+    scaled = v / s
+    h = (idx * jnp.uint32(2654435761) + seed * jnp.uint32(0x9E3779B9)).astype(jnp.uint32)
+    h = h ^ (h << jnp.uint32(13))
+    h = h ^ (h >> jnp.uint32(17))
+    h = h ^ (h << jnp.uint32(5))
+    u = (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+    q = jnp.where(rmode > 0.5, jnp.floor(scaled + u), jnp.round(scaled))
+    q = jnp.clip(q, -half, half - 1.0)
+    out = q * s
+    out = jnp.where(maxabs < jnp.float32(2.0**-126), 0.0, out)
+    return jnp.where(m_bits >= 23.0, v, out)
+
+
+def _quant_kernel(scal_ref, v_ref, o_ref, *, block: int, tile_nb: int):
+    m_bits = scal_ref[0]
+    rmode = scal_ref[1]
+    seed = scal_ref[2].astype(jnp.uint32)
+    base = scal_ref[3].astype(jnp.uint32)
+    tile = pl.program_id(0)
+    # Global element index of this tile's first element (row-major).
+    tile_base = base + (tile * tile_nb * block).astype(jnp.uint32)
+    o_ref[...] = _quantize_tile(v_ref[...], m_bits, rmode, seed, tile_base)
+
+
+def bfp_quantize_pallas(
+    v: jax.Array,
+    m_bits: jax.Array,
+    rmode: jax.Array,
+    seed: jax.Array,
+    base_idx: jax.Array,
+    tile_nb: int = TILE_NB,
+) -> jax.Array:
+    """Pallas BFP quantizer over (nblocks, block); bit-exact vs ref.
+
+    ``nblocks`` is padded up to a multiple of ``tile_nb`` internally;
+    padded rows quantize to zero and are stripped before returning.
+    """
+    nb, block = v.shape
+    tile_nb = min(tile_nb, max(nb, 1))
+    pad = (-nb) % tile_nb
+    vp = jnp.pad(v, ((0, pad), (0, 0)))
+    nbp = nb + pad
+    scal = jnp.stack(
+        [
+            m_bits.astype(jnp.float32),
+            rmode.astype(jnp.float32),
+            seed.astype(jnp.float32),
+            base_idx.astype(jnp.float32),
+        ]
+    )
+    out = pl.pallas_call(
+        functools.partial(_quant_kernel, block=block, tile_nb=tile_nb),
+        grid=(nbp // tile_nb,),
+        in_specs=[
+            # Scalars are replicated to every grid step (index_map -> 0).
+            pl.BlockSpec((4,), lambda i: (0,)),
+            pl.BlockSpec((tile_nb, block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_nb, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbp, block), jnp.float32),
+        interpret=INTERPRET,
+    )(scal, vp.astype(jnp.float32))
+    return out[:nb]
+
+
+def _matmul_kernel(scal_ref, x_ref, w_ref, o_ref, *, bk: int):
+    """One (TM, TN) output tile; k-loop is grid dim 2 with accumulation.
+
+    Operand tiles are quantized with tile-local blocking: one shared
+    exponent per bk-wide row of x, and per bk-wide column of w (i.e. the
+    contraction dimension is the block dimension on both sides), exactly
+    what an HBFP converter in front of a systolic array does.
+    """
+    m_bits = scal_ref[0]
+    rmode = scal_ref[1]
+    seed = scal_ref[2].astype(jnp.uint32)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (TM, bk)
+    w = w_ref[...]  # (bk, TN)
+    zero = jnp.uint32(0)
+    xq = _quantize_tile(x, m_bits, rmode, seed, zero)
+    wq = _quantize_tile(w.T, m_bits, rmode, seed, zero).T
+    o_ref[...] += jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def bfp_matmul_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    m_bits: jax.Array,
+    rmode: jax.Array,
+    seed: jax.Array,
+    block: int = 64,
+    tile_m: int = TILE_M,
+    tile_n: int = TILE_N,
+) -> jax.Array:
+    """Fused BFP matmul: y = Q_tile(x) @ Q_tile(w), blocks of ``block``
+    along K. Shapes must divide evenly by the tile sizes (bench path)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (k, k2)
+    assert m % tile_m == 0 and n % tile_n == 0 and k % block == 0, (m, n, k, block)
+    scal = jnp.stack(
+        [m_bits.astype(jnp.float32), rmode.astype(jnp.float32), seed.astype(jnp.float32)]
+    )
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, bk=block),
+        grid=(m // tile_m, n // tile_n, k // block),
+        in_specs=[
+            pl.BlockSpec((3,), lambda i, j, kk: (0,)),
+            pl.BlockSpec((tile_m, block), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(scal, x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def quantize_flat_pallas(
+    t: jax.Array,
+    block: int,
+    m_bits: jax.Array,
+    rmode: jax.Array,
+    seed: jax.Array,
+    site: int,
+) -> jax.Array:
+    """Drop-in replacement for ref.quantize_flat built on the Pallas
+    quantizer; used when artifacts are built with --pallas."""
+    flat = t.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    padded = jnp.pad(flat, (0, pad))
+    blocks = padded.reshape(-1, block)
+    base = jnp.uint32(site * 40503)  # < 2^24, survives the f32 round-trip
+    out = bfp_quantize_pallas(
+        blocks, m_bits, rmode, seed.astype(jnp.uint32), base
+    )
+    return out.reshape(-1)[:n].reshape(t.shape)

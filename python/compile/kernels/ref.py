@@ -1,0 +1,176 @@
+"""Pure-jnp reference (oracle) for BFP quantization and blocked dot products.
+
+This module is the single source of truth for HBFP numerics. The Pallas
+kernel (`bfp_pallas.py`) and the Rust software implementation
+(`rust/src/bfp/`) must match it **bit-exactly**; golden vectors generated
+from this module (see `python/compile/golden.py`) pin the contract.
+
+Quantization scheme (see DESIGN.md §2):
+
+  For a block v[0..b) and mantissa width ``m`` (two's complement, sign
+  included):
+
+    e     = floor(log2(max|v|))          -- IEEE exponent field, bit-exact
+    s     = 2^(e - m + 2)                -- the Eq.1 interval
+    q     = clamp(round(v / s), -2^(m-1), 2^(m-1) - 1)
+    v_hat = q * s
+
+  * All-zero / denormal-max blocks dequantize to exactly 0.
+  * ``m >= 23`` is the FP32 bypass (identity) by convention: the shared
+    exponent plus a >=23-bit mantissa subsumes f32 precision, and the rust
+    coordinator uses it to run the FP32 baseline from the same executable.
+  * Rounding is round-half-to-even (``rmode == 0``) or stochastic with a
+    counter-based XORshift hash (``rmode == 1``).
+
+All functions take mantissa width / rounding mode / seed as *traced scalar
+arrays* so that the AOT-compiled step function can be steered by the rust
+coordinator at runtime without recompilation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# Exponent of the smallest normal f32; blocks whose max|v| is below this
+# (i.e. zero or denormal) quantize to exactly zero.
+_MIN_NORMAL_EXP = -126
+
+
+def floor_log2(x: jax.Array) -> jax.Array:
+    """floor(log2(x)) for positive normal f32 via the IEEE exponent field.
+
+    Bit-exact and reproducible across jnp / Pallas / rust (f32::to_bits).
+    Returns -127 for zeros and denormals (callers must mask those blocks).
+    """
+    bits = lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    return ((bits >> jnp.uint32(23)) & jnp.uint32(0xFF)).astype(jnp.int32) - 127
+
+
+def xorshift_hash(idx: jax.Array, seed: jax.Array) -> jax.Array:
+    """Counter-based XORshift32 hash -> u32. idx/seed are u32 arrays.
+
+    Mirrors the XORshift circuits the paper's area model prices for
+    stochastic rounding; identical algebra in rust/src/bfp/rounding.rs.
+    """
+    h = (idx * jnp.uint32(2654435761) + seed * jnp.uint32(0x9E3779B9)).astype(jnp.uint32)
+    h = h ^ (h << jnp.uint32(13))
+    h = h ^ (h >> jnp.uint32(17))
+    h = h ^ (h << jnp.uint32(5))
+    return h
+
+
+def uniform_u01(idx: jax.Array, seed: jax.Array) -> jax.Array:
+    """u in [0, 1) with 24 bits of randomness from xorshift_hash."""
+    h = xorshift_hash(idx, seed)
+    return (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+
+
+def _round(x: jax.Array, rmode: jax.Array, idx: jax.Array, seed: jax.Array) -> jax.Array:
+    """rmode == 0 -> round-half-to-even; rmode == 1 -> stochastic."""
+    nearest = jnp.round(x)  # ties-to-even, matches f32::round_ties_even
+    u = uniform_u01(idx, seed)
+    stochastic = jnp.floor(x + u)
+    return jnp.where(rmode > 0.5, stochastic, nearest)
+
+
+def quantize_blocks(
+    v: jax.Array,
+    m_bits: jax.Array,
+    rmode: jax.Array,
+    seed: jax.Array,
+    base_idx: jax.Array,
+) -> jax.Array:
+    """Quantize ``v`` of shape (nblocks, b): one shared exponent per row.
+
+    ``m_bits``/``rmode``/``seed``/``base_idx`` are scalar arrays (f32/f32/
+    u32/u32). Returns dequantized values, same shape/dtype as ``v``.
+    """
+    v = v.astype(jnp.float32)
+    nb, b = v.shape
+    maxabs = jnp.max(jnp.abs(v), axis=1, keepdims=True)
+    e = floor_log2(maxabs).astype(jnp.float32)
+    # s = 2^(e - m + 2); exp2 on integer-valued floats is exact.
+    s = jnp.exp2(e - m_bits + 2.0)
+    half = jnp.exp2(m_bits - 1.0)  # 2^(m-1)
+    idx = base_idx + jnp.arange(nb * b, dtype=jnp.uint32).reshape(nb, b)
+    q = _round(v / s, rmode, idx, seed)
+    q = jnp.clip(q, -half, half - 1.0)
+    out = q * s
+    # zero/denormal blocks -> 0; m >= 23 -> FP32 bypass.
+    out = jnp.where(maxabs < jnp.float32(2.0**_MIN_NORMAL_EXP), 0.0, out)
+    return jnp.where(m_bits >= 23.0, v, out)
+
+
+def quantize_flat(
+    t: jax.Array,
+    block: int,
+    m_bits: jax.Array,
+    rmode: jax.Array,
+    seed: jax.Array,
+    site: int,
+) -> jax.Array:
+    """Quantize an arbitrary tensor in row-major blocks of ``block``.
+
+    Callers arrange the contraction axis last so blocks run along it
+    (wrapping to the next row when the axis is shorter than the block, as
+    in 2-D HBFP tiles). ``site`` is a static per-call-site salt keeping
+    stochastic rounding streams independent.
+    """
+    flat = t.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    padded = jnp.pad(flat, (0, pad))
+    blocks = padded.reshape(-1, block)
+    # Salt kept < 2^24 per site so it survives an f32 round-trip when the
+    # Pallas path ships it through a float scalar vector (bit-exactness).
+    base = jnp.uint32(site * 40503)
+    out = quantize_blocks(blocks, m_bits, rmode, seed.astype(jnp.uint32), base)
+    return out.reshape(-1)[:n].reshape(t.shape)
+
+
+def quantize_along_axis(
+    t: jax.Array,
+    axis: int,
+    block: int,
+    m_bits: jax.Array,
+    rmode: jax.Array,
+    seed: jax.Array,
+    site: int,
+) -> jax.Array:
+    """Move ``axis`` last, quantize row-major blocks, move back."""
+    moved = jnp.moveaxis(t, axis, -1)
+    q = quantize_flat(moved, block, m_bits, rmode, seed, site)
+    return jnp.moveaxis(q, -1, axis)
+
+
+def bfp_dot_ref(
+    x: jax.Array,
+    w: jax.Array,
+    block: int,
+    m_bits: jax.Array,
+    rmode: jax.Array,
+    seed: jax.Array,
+    site: int = 0,
+) -> jax.Array:
+    """Reference HBFP forward dot: y = Q(x) @ Q(w), blocks along K.
+
+    x: [M, K], w: [K, N]. Both operands quantized with the contraction
+    dimension innermost (w is transposed for blocking, then restored).
+    """
+    xq = quantize_flat(x, block, m_bits, rmode, seed, site)
+    wq = quantize_along_axis(w, 0, block, m_bits, rmode, seed, site + 1)
+    return xq @ wq
+
+
+def pallas_tile_quantize_ref(
+    v: jax.Array, m_bits: jax.Array, rmode: jax.Array, seed: jax.Array
+) -> jax.Array:
+    """Oracle for the fused Pallas matmul's *tile-local* blocking.
+
+    The fused kernel (bench-only path) quantizes each (tm, bk) operand tile
+    with one exponent per row of the tile; for a (nb, b) input this is the
+    same as quantize_blocks with base_idx = 0.
+    """
+    return quantize_blocks(v, m_bits, rmode, seed.astype(jnp.uint32), jnp.uint32(0))

@@ -1,0 +1,13 @@
+"""L2 model zoo: MLP, ResNet-mini CNN, decoder-only Transformer.
+
+Every model exposes:
+  * ``HP`` hyperparameter dataclass,
+  * ``build(hp)`` -> ``ModelDef`` with the ordered parameter specs
+    (name/shape/init — consumed by the rust initializer via manifest.json)
+    and a ``forward(params, x, scalars, ctx)`` callable where every dot
+    product routes through the HBFP context.
+"""
+
+from .common import InitKind, ModelDef, ParamBuilder, ParamSpec, Scalars
+
+__all__ = ["InitKind", "ModelDef", "ParamBuilder", "ParamSpec", "Scalars"]

@@ -1,0 +1,95 @@
+"""ResNet-mini — the CIFAR-family CNN stand-in (DESIGN.md §3).
+
+Same layer taxonomy as the paper's ResNet20/50/74: a first 3x3 conv (edge),
+a stack of residual stages (middle: all convs including 1x1 downsample
+skips), global average pooling, and a final fully-connected classifier
+(edge). BatchNorm weights stay FP32, initialized to 1 (paper Appendix A.1).
+
+``HP.blocks_per_stage`` scales depth: 1 -> "ResNet8-mini", 2 ->
+"ResNet14-mini", 3 -> "ResNet20-mini" — the knob the Table-1/2 harness uses
+to emulate the paper's model-size axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from ..hbfp import HbfpContext, batchnorm, conv2d_im2col
+from .common import ModelDef, ParamBuilder, Scalars
+
+
+@dataclasses.dataclass
+class HP:
+    image: int = 16  # input is image x image x 3
+    base_channels: int = 16
+    blocks_per_stage: int = 2
+    stages: int = 2  # channel doubling + stride-2 per extra stage
+    classes: int = 10
+
+
+def build(hp: HP) -> ModelDef:
+    pb = ParamBuilder()
+    pb.he_conv("conv1.weight", 3, 3, 3, hp.base_channels)
+    pb.ones("bn1.gamma", (hp.base_channels,))
+    pb.zeros("bn1.beta", (hp.base_channels,))
+
+    chans = [hp.base_channels * (2**s) for s in range(hp.stages)]
+    for s, c in enumerate(chans):
+        cin = chans[s - 1] if s > 0 else hp.base_channels
+        for b in range(hp.blocks_per_stage):
+            bc_in = cin if b == 0 else c
+            p = f"stage{s}.block{b}"
+            pb.he_conv(f"{p}.conv1.weight", 3, 3, bc_in, c)
+            pb.ones(f"{p}.bn1.gamma", (c,))
+            pb.zeros(f"{p}.bn1.beta", (c,))
+            pb.he_conv(f"{p}.conv2.weight", 3, 3, c, c)
+            pb.ones(f"{p}.bn2.gamma", (c,))
+            pb.zeros(f"{p}.bn2.beta", (c,))
+            if bc_in != c:
+                pb.he_conv(f"{p}.down.weight", 1, 1, bc_in, c)
+
+    pb.xavier("fc.weight", chans[-1], hp.classes)
+    pb.zeros("fc.bias", (hp.classes,))
+
+    def forward(params, x, scalars: Scalars, ctx: HbfpContext):
+        g = lambda n: pb.get(params, n)
+        mid, edge = scalars.bits_mid, scalars.bits_edge
+        rm, seed = scalars.rmode_grad, scalars.seed
+
+        # First conv: edge precision (paper §2/§3).
+        h = conv2d_im2col(ctx, x, g("conv1.weight"), edge, rm, seed)
+        h = jnp.maximum(batchnorm(h, g("bn1.gamma"), g("bn1.beta")), 0.0)
+
+        for s, c in enumerate(chans):
+            cin = chans[s - 1] if s > 0 else hp.base_channels
+            for b in range(hp.blocks_per_stage):
+                bc_in = cin if b == 0 else c
+                stride = 2 if (s > 0 and b == 0) else 1
+                p = f"stage{s}.block{b}"
+                y = conv2d_im2col(ctx, h, g(f"{p}.conv1.weight"), mid, rm, seed, stride)
+                y = jnp.maximum(batchnorm(y, g(f"{p}.bn1.gamma"), g(f"{p}.bn1.beta")), 0.0)
+                y = conv2d_im2col(ctx, y, g(f"{p}.conv2.weight"), mid, rm, seed)
+                y = batchnorm(y, g(f"{p}.bn2.gamma"), g(f"{p}.bn2.beta"))
+                skip = h
+                if bc_in != c:
+                    skip = conv2d_im2col(
+                        ctx, h, g(f"{p}.down.weight"), mid, rm, seed, stride
+                    )
+                h = jnp.maximum(y + skip, 0.0)
+
+        h = jnp.mean(h, axis=(1, 2))  # global average pool, FP32
+        # Classifier head: edge precision.
+        return ctx.linear(h, g("fc.weight"), g("fc.bias"), edge, rm, seed)
+
+    return ModelDef(
+        name="cnn",
+        builder=pb,
+        forward=forward,
+        input_shape=(hp.image, hp.image, 3),
+        input_dtype="f32",
+        label_shape=(),
+        num_classes=hp.classes,
+        hyper=dataclasses.asdict(hp),
+    )

@@ -1,0 +1,136 @@
+"""Shared model-building machinery.
+
+Parameters are a *flat ordered list* of f32 arrays; the order is the
+contract between the AOT artifacts and the rust runtime (recorded in
+manifest.json). Initialization happens in rust (so each run can seed its
+own weights without touching python); the specs below carry everything the
+initializer needs: shape + init kind + the numeric std/bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Sequence
+
+import jax
+import numpy as np
+
+
+class InitKind:
+    """Init kinds understood by rust/src/coordinator/init.rs."""
+
+    ZEROS = "zeros"
+    ONES = "ones"
+    NORMAL = "normal"  # N(0, std^2)
+    UNIFORM = "uniform"  # U(-bound, bound)
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    name: str
+    shape: tuple
+    init: str = InitKind.NORMAL
+    scale: float = 0.02  # std for NORMAL, bound for UNIFORM
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "init": self.init,
+            "scale": self.scale,
+        }
+
+
+@dataclasses.dataclass
+class Scalars:
+    """Runtime scalars threaded into every forward/backward.
+
+    The rust PrecisionScheduler drives these per step:
+      bits_mid   mantissa width for middle layers' dots
+      bits_edge  mantissa width for first/last layers' dots
+      rmode_grad 0 = nearest-even, 1 = stochastic (gradients only)
+      seed       stochastic-rounding stream seed (integer-valued f32)
+    """
+
+    bits_mid: jax.Array
+    bits_edge: jax.Array
+    rmode_grad: jax.Array
+    seed: jax.Array
+
+    NAMES = ("bits_mid", "bits_edge", "rmode_grad", "seed")
+
+    @staticmethod
+    def from_list(xs: Sequence[jax.Array]) -> "Scalars":
+        return Scalars(*xs)
+
+
+class ParamBuilder:
+    """Registers parameter specs during model construction and resolves
+    them positionally at trace time."""
+
+    def __init__(self) -> None:
+        self.specs: List[ParamSpec] = []
+        self._index: Dict[str, int] = {}
+
+    def add(self, name: str, shape: tuple, init: str, scale: float = 0.0) -> int:
+        if name in self._index:
+            raise ValueError(f"duplicate param {name}")
+        idx = len(self.specs)
+        self.specs.append(ParamSpec(name, tuple(shape), init, scale))
+        self._index[name] = idx
+        return idx
+
+    def he_conv(self, name: str, kh: int, kw: int, cin: int, cout: int) -> int:
+        # He init (paper Appendix A.1): std = sqrt(2 / n_out_activations),
+        # with n = kh*kw*cout fan-out as in He et al. 2015.
+        std = math.sqrt(2.0 / (kh * kw * cout))
+        return self.add(name, (kh, kw, cin, cout), InitKind.NORMAL, std)
+
+    def xavier(self, name: str, fan_in: int, fan_out: int) -> int:
+        bound = math.sqrt(6.0 / (fan_in + fan_out))
+        return self.add(name, (fan_in, fan_out), InitKind.UNIFORM, bound)
+
+    def zeros(self, name: str, shape: tuple) -> int:
+        return self.add(name, shape, InitKind.ZEROS)
+
+    def ones(self, name: str, shape: tuple) -> int:
+        return self.add(name, shape, InitKind.ONES)
+
+    def normal(self, name: str, shape: tuple, std: float) -> int:
+        return self.add(name, shape, InitKind.NORMAL, std)
+
+    def get(self, params: Sequence[jax.Array], name: str) -> jax.Array:
+        return params[self._index[name]]
+
+    def init_numpy(self, seed: int) -> List[np.ndarray]:
+        """Python-side initializer (tests / smoke training only; the rust
+        runtime uses its own RNG with the same specs)."""
+        rng = np.random.default_rng(seed)
+        out = []
+        for s in self.specs:
+            if s.init == InitKind.ZEROS:
+                out.append(np.zeros(s.shape, np.float32))
+            elif s.init == InitKind.ONES:
+                out.append(np.ones(s.shape, np.float32))
+            elif s.init == InitKind.NORMAL:
+                out.append(rng.normal(0.0, s.scale, s.shape).astype(np.float32))
+            elif s.init == InitKind.UNIFORM:
+                out.append(rng.uniform(-s.scale, s.scale, s.shape).astype(np.float32))
+            else:
+                raise ValueError(s.init)
+        return out
+
+
+@dataclasses.dataclass
+class ModelDef:
+    """Everything aot.py needs to lower one model family."""
+
+    name: str
+    builder: ParamBuilder
+    forward: Callable  # (params, x, scalars: Scalars, ctx) -> logits
+    input_shape: tuple  # per-example input shape (images: HWC; text: (L,))
+    input_dtype: str  # "f32" | "i32"
+    label_shape: tuple  # per-example label shape
+    num_classes: int
+    hyper: dict  # free-form hp record for the manifest

@@ -1,0 +1,56 @@
+"""MLP classifier — the fast model for the full Table-1 format x block
+sweep and for the Pallas-quantizer flagship artifact.
+
+Layer taxonomy for the layer-aware policy: the input projection and the
+classifier head are *edge* layers (bits_edge), the hidden projections are
+*middle* layers (bits_mid) — the MLP analogue of "first conv / last fc".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from ..hbfp import HbfpContext
+from .common import ModelDef, ParamBuilder, Scalars
+
+
+@dataclasses.dataclass
+class HP:
+    in_dim: int = 48  # 4x4x3 synthetic patches, flattened
+    hidden: int = 96
+    depth: int = 2  # number of hidden layers
+    classes: int = 10
+
+
+def build(hp: HP) -> ModelDef:
+    pb = ParamBuilder()
+    dims = [hp.in_dim] + [hp.hidden] * hp.depth + [hp.classes]
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        pb.xavier(f"fc{i}.weight", a, b)
+        pb.zeros(f"fc{i}.bias", (b,))
+    n_layers = len(dims) - 1
+
+    def forward(params, x, scalars: Scalars, ctx: HbfpContext):
+        h = x.reshape(x.shape[0], -1)
+        for i in range(n_layers):
+            w = pb.get(params, f"fc{i}.weight")
+            b = pb.get(params, f"fc{i}.bias")
+            edge = i == 0 or i == n_layers - 1
+            bits = scalars.bits_edge if edge else scalars.bits_mid
+            h = ctx.linear(h, w, b, bits, scalars.rmode_grad, scalars.seed)
+            if i != n_layers - 1:
+                h = jnp.maximum(h, 0.0)
+        return h
+
+    return ModelDef(
+        name="mlp",
+        builder=pb,
+        forward=forward,
+        input_shape=(hp.in_dim,),
+        input_dtype="f32",
+        label_shape=(),
+        num_classes=hp.classes,
+        hyper=dataclasses.asdict(hp),
+    )

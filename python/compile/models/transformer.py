@@ -1,0 +1,120 @@
+"""Decoder-only Transformer for the synthetic translation task (Table 3).
+
+The paper trains an encoder-decoder Transformer-Base on IWSLT'14 De-En; we
+substitute a decoder-only seq2seq over `[BOS] src [SEP] tgt [EOS]` on the
+deterministic transduction grammar from rust/src/data/synth_text.rs
+(DESIGN.md §3) — the same arithmetic profile (attention + FFN matmuls) and
+the same metric (BLEU via greedy decode).
+
+Layer taxonomy: the token embedding (a gather, FP32 — not a dot product)
+and the output projection are the paper's "first/last layers"; the output
+projection therefore runs at bits_edge, every other matmul (QKV/out
+projections, attention scores, attention-context, FFN) at bits_mid.
+Dropout is omitted (deterministic synthetic task; documented substitution).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..hbfp import HbfpContext, layernorm
+from .common import ModelDef, ParamBuilder, Scalars
+
+
+@dataclasses.dataclass
+class HP:
+    vocab: int = 32  # ids 0..25 payload, 26=BOS, 27=SEP, 28=EOS, 29=PAD
+    src_len: int = 8
+    tgt_len: int = 8
+    d_model: int = 64
+    heads: int = 4
+    layers: int = 2
+    d_ff: int = 128
+
+    @property
+    def seq_len(self) -> int:
+        # [BOS] src [SEP] tgt [EOS]
+        return self.src_len + self.tgt_len + 3
+
+
+def build(hp: HP) -> ModelDef:
+    pb = ParamBuilder()
+    d, L = hp.d_model, hp.seq_len
+    pb.normal("embed.weight", (hp.vocab, d), std=d**-0.5)
+    pb.normal("pos.weight", (L, d), std=0.02)
+    for i in range(hp.layers):
+        p = f"layer{i}"
+        pb.ones(f"{p}.ln1.gamma", (d,))
+        pb.zeros(f"{p}.ln1.beta", (d,))
+        for nm in ("q", "k", "v", "o"):
+            pb.xavier(f"{p}.attn.{nm}.weight", d, d)
+        pb.ones(f"{p}.ln2.gamma", (d,))
+        pb.zeros(f"{p}.ln2.beta", (d,))
+        pb.xavier(f"{p}.ffn.w1", d, hp.d_ff)
+        pb.zeros(f"{p}.ffn.b1", (hp.d_ff,))
+        pb.xavier(f"{p}.ffn.w2", hp.d_ff, d)
+        pb.zeros(f"{p}.ffn.b2", (d,))
+    pb.ones("ln_f.gamma", (d,))
+    pb.zeros("ln_f.beta", (d,))
+    pb.xavier("out.weight", d, hp.vocab)
+
+    dh = d // hp.heads
+    neg_inf = jnp.float32(-1e9)
+
+    def forward(params, tokens, scalars: Scalars, ctx: HbfpContext):
+        g = lambda n: pb.get(params, n)
+        mid, edge = scalars.bits_mid, scalars.bits_edge
+        rm, seed = scalars.rmode_grad, scalars.seed
+        B = tokens.shape[0]
+
+        h = g("embed.weight")[tokens] + g("pos.weight")[None, :, :]
+        causal = jnp.tril(jnp.ones((L, L), jnp.float32))
+
+        def proj(x2d, name):
+            return ctx.dot(x2d, g(name), mid, rm, seed)
+
+        for i in range(hp.layers):
+            p = f"layer{i}"
+            x = layernorm(h, g(f"{p}.ln1.gamma"), g(f"{p}.ln1.beta"))
+            x2 = x.reshape(B * L, d)
+            q = proj(x2, f"{p}.attn.q.weight").reshape(B, L, hp.heads, dh)
+            k = proj(x2, f"{p}.attn.k.weight").reshape(B, L, hp.heads, dh)
+            v = proj(x2, f"{p}.attn.v.weight").reshape(B, L, hp.heads, dh)
+            # [B*H, L, dh]
+            q = q.transpose(0, 2, 1, 3).reshape(B * hp.heads, L, dh)
+            k = k.transpose(0, 2, 1, 3).reshape(B * hp.heads, L, dh)
+            v = v.transpose(0, 2, 1, 3).reshape(B * hp.heads, L, dh)
+            # Attention scores and context are dot products too -> HBFP.
+            scores = ctx.batched_dot(q, k.transpose(0, 2, 1), mid, rm, seed)
+            scores = scores * jnp.float32(dh**-0.5)
+            scores = jnp.where(causal[None] > 0.5, scores, neg_inf)
+            probs = jax.nn.softmax(scores, axis=-1)  # FP32
+            cx = ctx.batched_dot(probs, v, mid, rm, seed)
+            cx = cx.reshape(B, hp.heads, L, dh).transpose(0, 2, 1, 3).reshape(B * L, d)
+            h = h + proj(cx, f"{p}.attn.o.weight").reshape(B, L, d)
+
+            x = layernorm(h, g(f"{p}.ln2.gamma"), g(f"{p}.ln2.beta"))
+            y = ctx.linear(x.reshape(B * L, d), g(f"{p}.ffn.w1"), g(f"{p}.ffn.b1"), mid, rm, seed)
+            y = jnp.maximum(y, 0.0)
+            y = ctx.linear(y, g(f"{p}.ffn.w2"), g(f"{p}.ffn.b2"), mid, rm, seed)
+            h = h + y.reshape(B, L, d)
+
+        h = layernorm(h, g("ln_f.gamma"), g("ln_f.beta"))
+        # Output projection: edge precision (paper keeps first/last layers
+        # at HBFP6 under the Booster schedule).
+        logits = ctx.dot(h.reshape(B * L, d), g("out.weight"), edge, rm, seed)
+        return logits.reshape(B, L, hp.vocab)
+
+    return ModelDef(
+        name="transformer",
+        builder=pb,
+        forward=forward,
+        input_shape=(L,),
+        input_dtype="i32",
+        label_shape=(L,),
+        num_classes=hp.vocab,
+        hyper=dataclasses.asdict(hp),
+    )

@@ -1,0 +1,203 @@
+"""L2 step functions: loss, optimizers, train/eval/decode.
+
+Each function here is a *whole-step* jax function lowered once by aot.py —
+forward, backward, and the optimizer update fuse into a single HLO module
+so the rust hot loop is exactly one PJRT execute per step (no per-layer
+host round-trips; see DESIGN.md §7 L2).
+
+Flat calling convention (the manifest records it):
+
+  train_step(*params, *opt_state, x, y,
+             bits_mid, bits_edge, rmode_grad, seed, lr)
+      -> (*params', *opt_state', loss, metric)
+
+  eval_batch(*params, x, y, bits_mid, bits_edge, rmode_grad, seed)
+      -> (loss, metric)
+
+  decode_greedy(*params, src, bits_mid, bits_edge, rmode_grad, seed)
+      -> tokens                              (transformer only)
+
+Optimizers follow the paper's recipes (Appendix A): SGD + Nesterov
+momentum 0.9 / weight-decay 1e-4 for the CNN/MLP family, Adam(0.9, 0.98)
+with weight decay 1e-4 for the transformer. Weight decay applies to rank>=2
+tensors only (weights, not biases/norm scales), the standard convention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .hbfp import HbfpContext, softmax_xent
+from .models.common import ModelDef, Scalars
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 1e-4
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.98, 1e-9
+
+
+@dataclasses.dataclass
+class OptSpec:
+    kind: str  # "sgdm" | "adam"
+    slot_names: List[str]
+    slot_shapes: List[tuple]
+
+    def to_json(self) -> dict:
+        return {
+            "kind": self.kind,
+            "momentum": MOMENTUM,
+            "weight_decay": WEIGHT_DECAY,
+            "adam_betas": [ADAM_B1, ADAM_B2],
+            "slots": [
+                {"name": n, "shape": list(s)}
+                for n, s in zip(self.slot_names, self.slot_shapes)
+            ],
+        }
+
+
+def opt_spec(model: ModelDef, kind: str) -> OptSpec:
+    names, shapes = [], []
+    if kind == "sgdm":
+        for s in model.builder.specs:
+            names.append(f"momentum.{s.name}")
+            shapes.append(s.shape)
+    elif kind == "adam":
+        for prefix in ("adam_m", "adam_v"):
+            for s in model.builder.specs:
+                names.append(f"{prefix}.{s.name}")
+                shapes.append(s.shape)
+        names.append("adam_t")
+        shapes.append(())
+    else:
+        raise ValueError(kind)
+    return OptSpec(kind, names, shapes)
+
+
+def _decay_mask(params: Sequence[jax.Array]) -> List[bool]:
+    return [p.ndim >= 2 for p in params]
+
+
+def _sgdm_update(params, grads, bufs, lr):
+    """PyTorch-style SGD with Nesterov momentum + decoupled-into-grad wd."""
+    new_p, new_b = [], []
+    for p, g, b, wd in zip(params, grads, bufs, _decay_mask(params)):
+        g = g + WEIGHT_DECAY * p if wd else g
+        b2 = MOMENTUM * b + g
+        step = g + MOMENTUM * b2  # nesterov
+        new_p.append(p - lr * step)
+        new_b.append(b2)
+    return new_p, new_b
+
+
+def _adam_update(params, grads, ms, vs, t, lr):
+    t2 = t + 1.0
+    bc1 = 1.0 - ADAM_B1**t2
+    bc2 = 1.0 - ADAM_B2**t2
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v, wd in zip(params, grads, ms, vs, _decay_mask(params)):
+        g = g + WEIGHT_DECAY * p if wd else g
+        m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(m2)
+        new_v.append(v2)
+    return new_p, new_m, new_v, t2
+
+
+def _loss_and_metric(model: ModelDef, params, x, y, scalars: Scalars, ctx):
+    logits = model.forward(params, x, scalars, ctx)
+    if model.name == "transformer":
+        # y holds next-token labels per position, -1 = don't score.
+        mask = (y >= 0).astype(jnp.float32)
+        labels = jnp.maximum(y, 0)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum((logz - gold) * mask) / denom
+        acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / denom
+        return loss, acc
+    loss = softmax_xent(logits, y)
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+def make_fns(model: ModelDef, block: int, opt_kind: str, qflat):
+    """Build (train_step, eval_batch) flat-argument functions."""
+    n_params = len(model.builder.specs)
+    ospec = opt_spec(model, opt_kind)
+    n_opt = len(ospec.slot_names)
+
+    def split(args):
+        params = list(args[:n_params])
+        opt = list(args[n_params : n_params + n_opt])
+        rest = args[n_params + n_opt :]
+        return params, opt, rest
+
+    def train_step(*args):
+        params, opt, rest = split(args)
+        x, y, bits_mid, bits_edge, rmode_grad, seed, lr = rest
+        scalars = Scalars(bits_mid, bits_edge, rmode_grad, seed)
+
+        def loss_fn(ps):
+            ctx = HbfpContext(block, qflat)
+            loss, acc = _loss_and_metric(model, ps, x, y, scalars, ctx)
+            return loss, acc
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        if opt_kind == "sgdm":
+            new_p, bufs = _sgdm_update(params, grads, opt, lr)
+            new_opt = bufs
+        else:
+            ms, vs, t = opt[:n_params], opt[n_params : 2 * n_params], opt[-1]
+            new_p, m2, v2, t2 = _adam_update(params, grads, ms, vs, t, lr)
+            new_opt = m2 + v2 + [t2]
+        return tuple(new_p) + tuple(new_opt) + (loss, acc)
+
+    def eval_batch(*args):
+        params = list(args[:n_params])
+        x, y, bits_mid, bits_edge, rmode_grad, seed = args[n_params:]
+        scalars = Scalars(bits_mid, bits_edge, rmode_grad, seed)
+        ctx = HbfpContext(block, qflat)
+        loss, acc = _loss_and_metric(model, params, x, y, scalars, ctx)
+        return loss, acc
+
+    return train_step, eval_batch, ospec
+
+
+def make_decode(model: ModelDef, block: int, qflat):
+    """Greedy decode for the transformer: src -> generated tgt + EOS.
+
+    Builds `[BOS] src [SEP] 0...` and fills positions left-to-right with
+    argmax; the whole loop is a single lax.fori_loop inside one HLO module.
+    """
+    hp = model.hyper
+    src_len, tgt_len, vocab = hp["src_len"], hp["tgt_len"], hp["vocab"]
+    L = src_len + tgt_len + 3
+    BOS, SEP = vocab - 6 + 0, vocab - 6 + 1  # ids 26, 27 for vocab=32
+
+    def decode(*args):
+        params = list(args[: len(model.builder.specs)])
+        src, bits_mid, bits_edge, rmode_grad, seed = args[len(params) :]
+        scalars = Scalars(bits_mid, bits_edge, rmode_grad, seed)
+        B = src.shape[0]
+        buf = jnp.full((B, L), 0, jnp.int32)
+        buf = buf.at[:, 0].set(BOS)
+        buf = buf.at[:, 1 : 1 + src_len].set(src)
+        buf = buf.at[:, 1 + src_len].set(SEP)
+        start = 2 + src_len  # first generated position
+
+        def body(i, buf):
+            ctx = HbfpContext(block, qflat)
+            logits = model.forward(params, buf, scalars, ctx)
+            nxt = jnp.argmax(logits[:, start + i - 1, :], axis=-1).astype(jnp.int32)
+            return buf.at[:, start + i].set(nxt)
+
+        buf = jax.lax.fori_loop(0, tgt_len + 1, body, buf)
+        return (buf[:, start:],)
+
+    return decode

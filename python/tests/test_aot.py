@@ -1,0 +1,90 @@
+"""AOT-layer tests: variant parsing, manifest consistency, HLO-text
+emission shape (fast: uses the MLP, and checks an existing artifacts dir
+when present rather than re-lowering everything)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, train
+from compile.kernels import ref as R
+
+
+def test_default_variant_set_covers_paper_axes():
+    names = [v.name for v in aot.default_variants(quick=False)]
+    # Full block axis for both image models.
+    for b in aot.PAPER_BLOCK_SIZES:
+        assert f"mlp_bs{b}" in names
+        assert f"cnn_bs{b}" in names
+    assert "transformer_bs64" in names
+    assert "mlp_bs64_pallas" in names
+    # Quick set is a strict subset.
+    quick = [v.name for v in aot.default_variants(quick=True)]
+    assert set(quick) <= set(names)
+
+
+def test_variant_name_roundtrip():
+    v = aot.Variant("cnn", 576)
+    assert v.name == "cnn_bs576"
+    vp = aot.Variant("mlp", 64, pallas=True)
+    assert vp.name == "mlp_bs64_pallas"
+
+
+def test_opt_spec_layouts():
+    m = aot.build_model("mlp")
+    sgd = train.opt_spec(m, "sgdm")
+    assert len(sgd.slot_names) == len(m.builder.specs)
+    adam = train.opt_spec(m, "adam")
+    assert len(adam.slot_names) == 2 * len(m.builder.specs) + 1
+    assert adam.slot_names[-1] == "adam_t"
+    with pytest.raises(ValueError):
+        train.opt_spec(m, "rmsprop")
+
+
+def test_hlo_text_emission_is_parseable_text():
+    model = aot.build_model("mlp")
+    ts, _, ospec = train.make_fns(model, 64, "sgdm", R.quantize_flat)
+    p = [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in model.builder.specs]
+    o = [jax.ShapeDtypeStruct(s, jnp.float32) for s in ospec.slot_shapes]
+    x = jax.ShapeDtypeStruct((8, 48), jnp.float32)
+    y = jax.ShapeDtypeStruct((8,), jnp.int32)
+    f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(ts).lower(*(p + o + [x, y] + [f32] * 5))
+    text = aot.to_hlo_text(lowered)
+    # HLO text module header + a tuple root with the right arity.
+    assert text.startswith("HloModule"), text[:60]
+    assert "ENTRY" in text
+    # All entry parameters present (fusion may add internal ones).
+    assert text.count("parameter(") >= len(p) + len(o) + 2 + 5
+    assert "tuple(" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/index.json")),
+    reason="artifacts not built",
+)
+def test_built_artifacts_consistent_with_models():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "index.json")) as f:
+        index = json.load(f)
+    assert len(index["variants"]) >= 4
+    for entry in index["variants"]:
+        vdir = os.path.join(root, entry["name"])
+        with open(os.path.join(vdir, "manifest.json")) as f:
+            man = json.load(f)
+        assert man["variant"] == entry["name"]
+        assert man["block"] == entry["block"]
+        model = aot.build_model(man["model"])
+        assert len(man["params"]) == len(model.builder.specs)
+        for spec, got in zip(model.builder.specs, man["params"]):
+            assert got["name"] == spec.name
+            assert tuple(got["shape"]) == tuple(spec.shape)
+        for key, fname in man["artifacts"].items():
+            path = os.path.join(vdir, fname)
+            assert os.path.exists(path), path
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), (entry["name"], key)

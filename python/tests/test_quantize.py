@@ -1,0 +1,174 @@
+"""Kernel-vs-oracle and quantizer-property tests (the core L1 signal).
+
+Hypothesis sweeps shapes / mantissa widths / block sizes / rounding modes
+and asserts the Pallas kernel is **bit-exact** against the pure-jnp
+reference, plus the mathematical invariants Eq. 1 implies.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref as R
+from compile.kernels import bfp_pallas as P
+
+F32 = jnp.float32
+
+
+def q_ref(x, block, m, rmode=0.0, seed=7.0, site=0):
+    return np.asarray(
+        R.quantize_flat(jnp.asarray(x), block, F32(m), F32(rmode), F32(seed), site)
+    )
+
+
+def q_pallas(x, block, m, rmode=0.0, seed=7.0, site=0):
+    return np.asarray(
+        P.quantize_flat_pallas(jnp.asarray(x), block, F32(m), F32(rmode), F32(seed), site)
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 700),
+    block=st.sampled_from([4, 16, 25, 49, 64, 576]),
+    m=st.sampled_from([2, 3, 4, 5, 6, 8, 12, 24]),
+    rmode=st.sampled_from([0.0, 1.0]),
+    seed=st.integers(0, 2**20),
+    scale=st.sampled_from([1e-4, 1.0, 1e4]),
+)
+def test_pallas_matches_ref_bitexact(n, block, m, rmode, seed, scale):
+    rng = np.random.default_rng(n * 31 + m)
+    x = (rng.standard_normal(n) * scale).astype(np.float32)
+    a = q_ref(x, block, m, rmode, float(seed))
+    b = q_pallas(x, block, m, rmode, float(seed))
+    assert a.dtype == np.float32
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(1, 12),
+    block=st.sampled_from([8, 16, 64]),
+    m=st.sampled_from([3, 4, 6, 8]),
+)
+def test_error_bound_eq1(nb, block, m):
+    """Nearest rounding error is at most interval/2 = 2^(e-m+1) per block,
+    except for elements clipped at +2^(m-1)-1 (one extra interval)."""
+    rng = np.random.default_rng(nb * 7 + block)
+    x = rng.standard_normal((nb, block)).astype(np.float32)
+    out = np.asarray(
+        R.quantize_blocks(jnp.asarray(x), F32(m), F32(0.0), jnp.uint32(0), jnp.uint32(0))
+    )
+    for i in range(nb):
+        e = np.floor(np.log2(np.abs(x[i]).max()))
+        interval = 2.0 ** (e - m + 2)
+        assert np.all(np.abs(out[i] - x[i]) <= interval * 1.0 + 1e-12)
+
+
+def test_bypass_is_identity():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(333).astype(np.float32)
+    np.testing.assert_array_equal(q_ref(x, 64, 24), x)
+    np.testing.assert_array_equal(q_ref(x, 16, 32), x)
+
+
+def test_zero_and_denormal_blocks():
+    x = np.zeros(64, np.float32)
+    np.testing.assert_array_equal(q_ref(x, 16, 4), x)
+    x = np.full(64, 2.0**-135, np.float32)  # denormal max
+    np.testing.assert_array_equal(q_ref(x, 16, 4), np.zeros(64, np.float32))
+
+
+def test_idempotent_nearest():
+    """Quantizing a quantized tensor with the same (m, b) is the identity —
+    representable points are fixed points of the quantizer."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal(256).astype(np.float32)
+    for m in (4, 6, 8):
+        once = q_ref(x, 64, m)
+        twice = q_ref(once, 64, m)
+        np.testing.assert_array_equal(once, twice)
+
+
+def test_error_monotone_in_mantissa():
+    """More mantissa bits -> no larger L2 error (§2 of the paper)."""
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal(4096).astype(np.float32)
+    errs = []
+    for m in (2, 3, 4, 5, 6, 8, 10):
+        errs.append(float(np.square(q_ref(x, 64, m) - x).sum()))
+    assert all(a >= b - 1e-9 for a, b in zip(errs, errs[1:])), errs
+
+
+def test_error_grows_with_block_size_for_small_mantissa():
+    """Larger blocks -> more magnitude disparity under one exponent -> more
+    distortion (the Fig 1 effect), for heavy-tailed data at m=4."""
+    rng = np.random.default_rng(11)
+    # Log-normal magnitudes create intra-block disparity.
+    x = (rng.standard_normal(2304) * np.exp(rng.standard_normal(2304))).astype(np.float32)
+    errs = [float(np.square(q_ref(x, b, 4) - x).sum()) for b in (16, 64, 576)]
+    assert errs[0] <= errs[1] <= errs[2], errs
+
+
+def test_stochastic_rounding_unbiased():
+    """E[Q_sr(x)] ~= x: stochastic rounding is unbiased across seeds."""
+    x = np.full(64, 0.3, np.float32)
+    acc = np.zeros(64, np.float64)
+    n = 400
+    for seed in range(n):
+        acc += q_ref(x, 64, 4, rmode=1.0, seed=float(seed))
+    mean = acc / n
+    # interval at e=-2, m=4 is 2^-4; mean error should be << interval/2
+    assert abs(mean.mean() - 0.3) < 0.004, mean.mean()
+
+
+def test_exponent_extraction_exact_at_powers_of_two():
+    for e in (-10, -1, 0, 1, 7):
+        x = np.array([2.0**e] * 16, np.float32)
+        out = q_ref(x, 16, 6)
+        np.testing.assert_array_equal(out, x)  # exact powers of two survive
+
+
+def test_shared_exponent_kills_small_elements():
+    """An element ≪ max in the same block quantizes to 0 at m=4 — the
+    precision-loss mechanism of §2."""
+    x = np.array([1024.0] + [1e-3] * 15, np.float32)
+    out = q_ref(x, 16, 4)
+    assert out[0] == 1024.0
+    np.testing.assert_array_equal(out[1:], np.zeros(15, np.float32))
+
+
+def test_pallas_fused_matmul_matches_tile_ref():
+    """bfp_matmul_pallas == Q_tile(x) @ Q_tile(w) with tile-local blocking."""
+    rng = np.random.default_rng(9)
+    m, k, n, block = 32, 128, 32, 64
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(
+        P.bfp_matmul_pallas(jnp.asarray(x), jnp.asarray(w), F32(4), F32(0), F32(7), block=block)
+    )
+    # Reference: quantize each (tile, bk) row-block with base_idx 0.
+    def tq(t2d):  # rows are blocks of `block`
+        blocks = t2d.reshape(-1, block)
+        q = R.quantize_blocks(jnp.asarray(blocks), F32(4), F32(0.0), jnp.uint32(7), jnp.uint32(0))
+        return np.asarray(q).reshape(t2d.shape)
+
+    xq = tq(x)
+    wq = tq(np.ascontiguousarray(w.T)).T
+    np.testing.assert_allclose(got, xq @ wq, rtol=1e-6, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(axis=st.sampled_from([0, 1]), m=st.sampled_from([4, 6]))
+def test_quantize_along_axis_blocks_run_along_axis(axis, m):
+    """Blocking along an axis == blocking the transposed flat layout."""
+    rng = np.random.default_rng(2)
+    t = rng.standard_normal((12, 20)).astype(np.float32)
+    got = np.asarray(
+        R.quantize_along_axis(jnp.asarray(t), axis, 16, F32(m), F32(0.0), F32(7), 0)
+    )
+    moved = np.moveaxis(t, axis, -1)
+    want = q_ref(moved.reshape(-1), 16, m).reshape(moved.shape)
+    np.testing.assert_array_equal(got, np.moveaxis(want, -1, axis))

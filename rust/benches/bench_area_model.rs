@@ -1,0 +1,30 @@
+//! Fig 6 + §4.2 density regeneration bench: evaluates the full analytic
+//! area model across the paper's block-size sweep and prints the series
+//! (values are checked in unit tests; here we time the evaluation and
+//! emit the numbers that go into EXPERIMENTS.md).
+
+use boosters::hw_model::{area_gain_hbfp, bf16_gain, fig6_series};
+use boosters::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("analytic area model (Fig 6 / Table 1 gains)");
+    let blocks: Vec<u64> = vec![4, 8, 16, 25, 36, 49, 64, 128, 256, 400, 576, 1024];
+
+    suite.bench("fig6_series full sweep", || {
+        std::hint::black_box(fig6_series(&blocks));
+    });
+
+    println!("\nblock  HBFP8  HBFP6  HBFP5  HBFP4");
+    for row in fig6_series(&blocks) {
+        println!(
+            "{:5}  {:5.2}  {:5.2}  {:5.2}  {:5.2}",
+            row.block, row.hbfp8, row.hbfp6, row.hbfp5, row.hbfp4
+        );
+    }
+    println!(
+        "\nheadline: HBFP4@64 {:.1}x vs FP32 (paper 21.3x), BF16 {:.1}x (paper 4.9x)",
+        area_gain_hbfp(4, 64),
+        bf16_gain(64)
+    );
+    suite.finish();
+}

@@ -1,0 +1,59 @@
+//! Table-2 / Fig-3 bench: the Accuracy-Booster scheduler itself (pure L3
+//! logic, should be ~free) and the cost of the precision *switch* — the
+//! same executable serving HBFP4 and HBFP6 steps back to back, which is
+//! the paper's bit-sliced-datapath story in software form.
+
+use boosters::config::PrecisionPolicy;
+use boosters::coordinator::{init_state, PrecisionScheduler, TrainerData};
+use boosters::experiments::common::config_for;
+use boosters::experiments::Preset;
+use boosters::runtime::{artifacts_dir, Engine};
+use boosters::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("booster: scheduler + precision switching");
+
+    // Pure scheduler decisions: millions/sec expected.
+    let sched = PrecisionScheduler::new(PrecisionPolicy::booster(1), 160, true);
+    suite.bench_items("scalars_at x 160 epochs x 100 steps", Some(16_000.0), || {
+        let mut acc = 0.0f32;
+        for e in 0..160 {
+            for s in 0..100 {
+                acc += sched.scalars_at(e, s).bits_mid;
+            }
+        }
+        std::hint::black_box(acc);
+    });
+
+    let artifacts = artifacts_dir();
+    if !artifacts.join("index.json").exists() {
+        println!("### runtime part skipped: artifacts/ missing");
+        suite.finish();
+        return;
+    }
+    let engine = Engine::new().expect("pjrt client");
+    let v = engine
+        .load_variant_by_name(&artifacts, "cnn_bs64")
+        .expect("cnn_bs64");
+    let cfg = config_for(&v, PrecisionPolicy::booster(1), Preset::Quick);
+    let data = TrainerData::for_variant(&v, &cfg).expect("data");
+    let mut state = init_state(&v.manifest, 1).expect("init");
+    let idx: Vec<usize> = (0..v.manifest.batch).collect();
+    let (x, y) = data.batch(&idx, false);
+
+    // Alternate 4-bit / 6-bit steps on the SAME executable: no recompile,
+    // no cache miss — the runtime-scalar design at work.
+    let s4 = sched.scalars_at(0, 0);
+    let s6 = sched.scalars_at(159, 0);
+    assert_eq!(s4.bits_mid, 4.0);
+    assert_eq!(s6.bits_mid, 6.0);
+    suite.bench_items(
+        "alternating hbfp4/hbfp6 train_step pair",
+        Some(2.0 * v.manifest.batch as f64),
+        || {
+            std::hint::black_box(engine.train_step(&v, &mut state, &x, &y, s4, 0.01).unwrap());
+            std::hint::black_box(engine.train_step(&v, &mut state, &x, &y, s6, 0.01).unwrap());
+        },
+    );
+    suite.finish();
+}

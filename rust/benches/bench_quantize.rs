@@ -1,0 +1,49 @@
+//! Hot-path microbenches for the rust BFP substrate: the quantizer (the
+//! L3 analogue of the L1 Pallas kernel), packing, and fixed-point dots.
+//! This is the §Perf L3 surface — before/after numbers live in
+//! EXPERIMENTS.md.
+
+use boosters::bfp::{
+    bfp_dot_fixed_point, quantize_flat, BfpTensor, BlockFormat, Quantizer,
+};
+use boosters::util::bench::BenchSuite;
+use boosters::util::Rng;
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.normal_scaled(1.0)).collect()
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("bfp quantizer hot path");
+    let x = randn(1 << 20, 1); // 1M elements ≈ a large conv layer
+    let n = x.len() as f64;
+
+    for (m, b) in [(4u32, 64usize), (6, 64), (4, 576), (8, 16)] {
+        let q = Quantizer::nearest(m);
+        suite.bench_items(&format!("quantize_flat m={m} b={b} (1M f32)"), Some(n), || {
+            std::hint::black_box(quantize_flat(&x, b, q, 0));
+        });
+    }
+    let qs = Quantizer::stochastic(4, 7);
+    suite.bench_items("quantize_flat m=4 b=64 stochastic (1M f32)", Some(n), || {
+        std::hint::black_box(quantize_flat(&x, 64, qs, 0));
+    });
+
+    let fmt = BlockFormat::new(4, 64).unwrap();
+    suite.bench_items("BfpTensor::encode m=4 b=64 (1M f32)", Some(n), || {
+        std::hint::black_box(BfpTensor::encode(&x, fmt).unwrap());
+    });
+    let enc = BfpTensor::encode(&x, fmt).unwrap();
+    suite.bench_items("BfpTensor::decode m=4 b=64 (1M f32)", Some(n), || {
+        std::hint::black_box(enc.decode());
+    });
+
+    let a = randn(1 << 16, 2);
+    let b = randn(1 << 16, 3);
+    suite.bench_items("bfp_dot_fixed_point m=4 b=64 (64k)", Some(a.len() as f64), || {
+        std::hint::black_box(bfp_dot_fixed_point(&a, &b, fmt).unwrap());
+    });
+
+    suite.finish();
+}

@@ -1,0 +1,52 @@
+//! Runtime-layer benches: artifact compile time, single train-step and
+//! eval latency per model family — the end-to-end L3 hot loop that every
+//! table's wall-clock is made of. Requires `make artifacts`.
+
+use boosters::config::PrecisionPolicy;
+use boosters::coordinator::{init_state, TrainerData};
+use boosters::experiments::common::config_for;
+use boosters::experiments::Preset;
+use boosters::runtime::{artifacts_dir, Engine, StepScalars};
+use boosters::util::bench::BenchSuite;
+
+fn main() {
+    let artifacts = artifacts_dir();
+    if !artifacts.join("index.json").exists() {
+        println!("### bench skipped: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::new().expect("pjrt client");
+    let mut suite = BenchSuite::new("runtime: AOT step latency");
+
+    for name in ["mlp_bs64", "mlp_bs64_pallas", "cnn_bs64", "transformer_bs64"] {
+        let v = match engine.load_variant_by_name(&artifacts, name) {
+            Ok(v) => v,
+            Err(_) => continue,
+        };
+        let cfg = config_for(&v, PrecisionPolicy::booster(1), Preset::Quick);
+        let data = TrainerData::for_variant(&v, &cfg).expect("data");
+        let mut state = init_state(&v.manifest, 42).expect("init");
+        let idx: Vec<usize> = (0..v.manifest.batch).collect();
+        let (x, y) = data.batch(&idx, false);
+        let sc = StepScalars::hbfp(4.0);
+        let items = Some(v.manifest.batch as f64);
+
+        suite.bench_items(&format!("{name} train_step (batch)"), items, || {
+            std::hint::black_box(
+                engine.train_step(&v, &mut state, &x, &y, sc, 0.01).unwrap(),
+            );
+        });
+        suite.bench_items(&format!("{name} eval_batch"), items, || {
+            std::hint::black_box(engine.eval_batch(&v, &state, &x, &y, sc).unwrap());
+        });
+        // FP32-bypass step for the emulation-overhead ratio (paper: HBFP
+        // emulation ≈ 1.5x FP32 wall-clock on GPU).
+        let sc32 = StepScalars::fp32();
+        suite.bench_items(&format!("{name} train_step fp32-bypass"), items, || {
+            std::hint::black_box(
+                engine.train_step(&v, &mut state, &x, &y, sc32, 0.01).unwrap(),
+            );
+        });
+    }
+    suite.finish();
+}

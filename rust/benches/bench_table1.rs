@@ -1,0 +1,51 @@
+//! Table-1 bench: times the building blocks of the standalone-HBFP sweep
+//! (one training step per (format, block) cell) rather than the full
+//! multi-minute sweep — `repro table1` regenerates the actual table; this
+//! bench tracks the per-cell cost that the sweep's wall-clock is made of.
+
+use boosters::config::PrecisionPolicy;
+use boosters::coordinator::{init_state, PrecisionScheduler, TrainerData};
+use boosters::experiments::common::config_for;
+use boosters::experiments::Preset;
+use boosters::runtime::{artifacts_dir, Engine};
+use boosters::util::bench::BenchSuite;
+
+fn main() {
+    let artifacts = artifacts_dir();
+    if !artifacts.join("index.json").exists() {
+        println!("### bench skipped: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::new().expect("pjrt client");
+    let mut suite = BenchSuite::new("table1: per-cell step cost (cnn)");
+
+    for block in [16usize, 64, 576] {
+        let v = match engine.load_variant_by_name(&artifacts, &format!("cnn_bs{block}")) {
+            Ok(v) => v,
+            Err(_) => continue,
+        };
+        let cfg = config_for(&v, PrecisionPolicy::Hbfp { bits: 4 }, Preset::Quick);
+        let data = TrainerData::for_variant(&v, &cfg).expect("data");
+        let mut state = init_state(&v.manifest, 1).expect("init");
+        let idx: Vec<usize> = (0..v.manifest.batch).collect();
+        let (x, y) = data.batch(&idx, false);
+        for bits in [8.0f32, 6.0, 5.0, 4.0] {
+            let sched = PrecisionScheduler::new(
+                PrecisionPolicy::Hbfp { bits: bits as u32 },
+                8,
+                true,
+            );
+            let sc = sched.scalars_at(0, 0);
+            suite.bench_items(
+                &format!("cnn b={block} hbfp{bits} train_step"),
+                Some(v.manifest.batch as f64),
+                || {
+                    std::hint::black_box(
+                        engine.train_step(&v, &mut state, &x, &y, sc, 0.01).unwrap(),
+                    );
+                },
+            );
+        }
+    }
+    suite.finish();
+}

@@ -1,0 +1,56 @@
+//! Table-3 bench: transformer train-step and greedy-decode latency (the
+//! two phases behind the BLEU table), per precision.
+
+use boosters::config::PrecisionPolicy;
+use boosters::coordinator::{init_state, TrainerData};
+use boosters::experiments::common::config_for;
+use boosters::experiments::Preset;
+use boosters::runtime::{artifacts_dir, Engine, StepScalars};
+use boosters::util::bench::BenchSuite;
+
+fn main() {
+    let artifacts = artifacts_dir();
+    if !artifacts.join("index.json").exists() {
+        println!("### bench skipped: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::new().expect("pjrt client");
+    let v = engine
+        .load_variant_by_name(&artifacts, "transformer_bs64")
+        .expect("transformer_bs64");
+    let cfg = config_for(&v, PrecisionPolicy::booster(1), Preset::Quick);
+    let data = TrainerData::for_variant(&v, &cfg).expect("data");
+    let text = match &data {
+        TrainerData::Text(t) => t,
+        _ => unreachable!(),
+    };
+    let mut state = init_state(&v.manifest, 1).expect("init");
+    let idx: Vec<usize> = (0..v.manifest.batch).collect();
+    let (x, y) = data.batch(&idx, false);
+    let (src, _refs) = text.decode_batch(&idx, true);
+
+    let mut suite = BenchSuite::new("transformer: step + decode latency");
+    for (label, sc) in [
+        ("fp32", StepScalars::fp32()),
+        ("hbfp6", StepScalars::hbfp(6.0)),
+        ("hbfp4", StepScalars::hbfp(4.0)),
+    ] {
+        suite.bench_items(
+            &format!("train_step {label} (batch {})", v.manifest.batch),
+            Some(v.manifest.batch as f64),
+            || {
+                std::hint::black_box(
+                    engine.train_step(&v, &mut state, &x, &y, sc, 1e-4).unwrap(),
+                );
+            },
+        );
+        suite.bench_items(
+            &format!("greedy_decode {label} (batch {})", v.manifest.batch),
+            Some(v.manifest.batch as f64),
+            || {
+                std::hint::black_box(engine.decode(&v, &state, &src, sc).unwrap());
+            },
+        );
+    }
+    suite.finish();
+}

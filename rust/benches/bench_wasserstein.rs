@@ -1,0 +1,42 @@
+//! Fig-1 bench: Wasserstein-distance computation over quantized tensors —
+//! the analysis path that sweeps (layer x format x block) on checkpoints.
+
+use boosters::metrics::{wasserstein1, wasserstein1_quantized};
+use boosters::util::bench::BenchSuite;
+use boosters::util::Rng;
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.normal_scaled(0.1)).collect()
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("wasserstein: Fig-1 analysis path");
+    // Typical CNN layer sizes in this repro.
+    for n in [432usize, 9216, 147_456] {
+        let x = randn(n, n as u64);
+        suite.bench_items(&format!("W1(x, Q_4,64(x)) n={n}"), Some(n as f64), || {
+            std::hint::black_box(wasserstein1_quantized(&x, 4, 64));
+        });
+    }
+    let a = randn(65_536, 1);
+    let b = randn(65_536, 2);
+    suite.bench_items("W1 equal-size 64k", Some(65_536.0), || {
+        std::hint::black_box(wasserstein1(&a, &b));
+    });
+    suite.bench_items("W1 unequal-size 64k vs 16k (quantile grid)", None, || {
+        std::hint::black_box(wasserstein1(&a, &b[..16_384]));
+    });
+    // The full Fig-1 sweep shape: 4 layers x 2 formats x 7 blocks.
+    let layers: Vec<Vec<f32>> = vec![randn(432, 3), randn(2304, 4), randn(9216, 5), randn(320, 6)];
+    suite.bench("fig1 full sweep (4 layers x 2 fmts x 7 blocks)", || {
+        for l in &layers {
+            for m in [6u32, 4] {
+                for b in [16usize, 25, 36, 49, 64, 256, 576] {
+                    std::hint::black_box(wasserstein1_quantized(l, m, b));
+                }
+            }
+        }
+    });
+    suite.finish();
+}

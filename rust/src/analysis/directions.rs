@@ -1,0 +1,140 @@
+//! Filter-normalized random directions (Li et al. 2018, used by §3).
+//!
+//! For each parameter tensor, draw a Gaussian direction and rescale each
+//! *filter* (output-feature slice) to the norm of the corresponding
+//! weight filter: `d_f <- d_f / ||d_f|| * ||w_f||`. This removes the
+//! scale-invariance artifacts that make raw-direction landscapes
+//! misleading — the property the paper relies on to compare sharpness
+//! across numeric formats.
+
+use crate::runtime::Tensor;
+use crate::util::Rng;
+
+/// Number of filters = size of the trailing axis (convs are HWIO with
+/// Cout last; linears are [in, out] with out last); vectors (biases,
+/// norm weights) are treated as a single filter and conventionally left
+/// out of the perturbation (their direction is zeroed), matching the
+/// original loss-landscape code's handling of 1-D parameters.
+pub fn filter_normalized_direction(params: &[Tensor], rng: &mut Rng) -> Vec<Tensor> {
+    params
+        .iter()
+        .map(|p| {
+            let w = p.as_f32().expect("params are f32");
+            let shape = p.shape().to_vec();
+            if shape.len() < 2 {
+                return Tensor::zeros(&shape);
+            }
+            let cout = *shape.last().unwrap();
+            let mut d: Vec<f32> = (0..w.len()).map(|_| rng.normal_scaled(1.0)).collect();
+            // Filters are strided over the trailing axis.
+            for f in 0..cout {
+                let mut dn = 0.0f64;
+                let mut wn = 0.0f64;
+                let mut i = f;
+                while i < w.len() {
+                    dn += (d[i] as f64) * (d[i] as f64);
+                    wn += (w[i] as f64) * (w[i] as f64);
+                    i += cout;
+                }
+                let scale = if dn > 0.0 {
+                    (wn.sqrt() / dn.sqrt()) as f32
+                } else {
+                    0.0
+                };
+                let mut i = f;
+                while i < w.len() {
+                    d[i] *= scale;
+                    i += cout;
+                }
+            }
+            Tensor::from_f32(&shape, d).unwrap()
+        })
+        .collect()
+}
+
+/// θ' = θ + α·d1 (+ β·d2). Directions must be parallel to `params`.
+pub fn perturb(
+    params: &[Tensor],
+    d1: &[Tensor],
+    alpha: f32,
+    d2: Option<(&[Tensor], f32)>,
+) -> Vec<Tensor> {
+    params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let w = p.as_f32().unwrap();
+            let a = d1[i].as_f32().unwrap();
+            let mut out: Vec<f32> = w.iter().zip(a).map(|(&x, &da)| x + alpha * da).collect();
+            if let Some((d2s, beta)) = d2 {
+                let b = d2s[i].as_f32().unwrap();
+                for (o, &db) in out.iter_mut().zip(b) {
+                    *o += beta * db;
+                }
+            }
+            Tensor::from_f32(p.shape(), out).unwrap()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn param(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::from_f32(shape, (0..n).map(|_| rng.normal_scaled(0.5)).collect()).unwrap()
+    }
+
+    #[test]
+    fn filter_norms_match_weights() {
+        let p = param(&[3, 3, 8, 16], 1);
+        let mut rng = Rng::new(2);
+        let d = filter_normalized_direction(std::slice::from_ref(&p), &mut rng);
+        let w = p.as_f32().unwrap();
+        let dv = d[0].as_f32().unwrap();
+        let cout = 16;
+        for f in 0..cout {
+            let norm = |v: &[f32]| -> f64 {
+                let mut s = 0.0;
+                let mut i = f;
+                while i < v.len() {
+                    s += (v[i] as f64) * (v[i] as f64);
+                    i += cout;
+                }
+                s.sqrt()
+            };
+            let (nw, nd) = (norm(w), norm(dv));
+            assert!((nw - nd).abs() < 1e-4 * nw.max(1.0), "filter {f}: {nw} vs {nd}");
+        }
+    }
+
+    #[test]
+    fn vectors_get_zero_direction() {
+        let p = param(&[32], 3);
+        let mut rng = Rng::new(4);
+        let d = filter_normalized_direction(std::slice::from_ref(&p), &mut rng);
+        assert!(d[0].as_f32().unwrap().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn perturb_axes() {
+        let p = param(&[4, 4], 5);
+        let mut rng = Rng::new(6);
+        let d1 = filter_normalized_direction(std::slice::from_ref(&p), &mut rng);
+        let d2 = filter_normalized_direction(std::slice::from_ref(&p), &mut rng);
+        let zero = perturb(std::slice::from_ref(&p), &d1, 0.0, Some((&d2, 0.0)));
+        assert_eq!(zero[0], p);
+        let moved = perturb(std::slice::from_ref(&p), &d1, 0.5, None);
+        assert_ne!(moved[0], p);
+        // Linearity: θ + 2αd == perturb twice by α.
+        let twice = perturb(&moved, &d1, 0.5, None);
+        let direct = perturb(std::slice::from_ref(&p), &d1, 1.0, None);
+        let a = twice[0].as_f32().unwrap();
+        let b = direct[0].as_f32().unwrap();
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Loss-landscape slices (Fig 2) and grids (Fig 5): evaluate the AOT eval
+//! executable at θ + α·d1 (+ β·d2) over a sweep of α (and β), with the
+//! quantization scalars of the configuration under study — so each curve
+//! shows the loss surface *as seen through that numeric format*.
+
+use crate::runtime::{Engine, ModelVariant, StepScalars, Tensor, TrainState};
+use anyhow::Result;
+
+use super::directions::perturb;
+
+/// A 1-D landscape slice.
+#[derive(Debug, Clone)]
+pub struct LandscapeCurve {
+    pub label: String,
+    pub alphas: Vec<f32>,
+    pub losses: Vec<f64>,
+}
+
+impl LandscapeCurve {
+    pub fn min_loss(&self) -> f64 {
+        self.losses.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Curvature proxy at the center: mean second difference over the
+    /// inner third of the sweep (sharpness comparisons in §3).
+    pub fn sharpness(&self) -> f64 {
+        let n = self.losses.len();
+        if n < 5 {
+            return 0.0;
+        }
+        let (lo, hi) = (n / 3, 2 * n / 3);
+        let mut acc = 0.0;
+        let mut cnt = 0;
+        for i in lo.max(1)..hi.min(n - 1) {
+            acc += self.losses[i - 1] - 2.0 * self.losses[i] + self.losses[i + 1];
+            cnt += 1;
+        }
+        if cnt == 0 {
+            0.0
+        } else {
+            acc / cnt as f64
+        }
+    }
+}
+
+/// Average eval loss of `params` over the provided batches.
+fn loss_at(
+    engine: &Engine,
+    variant: &ModelVariant,
+    params: &[Tensor],
+    batches: &[(Tensor, Tensor)],
+    scalars: StepScalars,
+) -> Result<f64> {
+    let state = TrainState::from_tensors(params, &[])?;
+    let mut acc = 0.0;
+    for (x, y) in batches {
+        acc += engine.eval_batch(variant, &state, x, y, scalars)?.loss as f64;
+    }
+    Ok(acc / batches.len() as f64)
+}
+
+/// 1-D slice: losses at θ + α·d over `alphas`.
+#[allow(clippy::too_many_arguments)]
+pub fn landscape_1d(
+    engine: &Engine,
+    variant: &ModelVariant,
+    label: &str,
+    params: &[Tensor],
+    direction: &[Tensor],
+    alphas: &[f32],
+    batches: &[(Tensor, Tensor)],
+    scalars: StepScalars,
+) -> Result<LandscapeCurve> {
+    let mut losses = Vec::with_capacity(alphas.len());
+    for &a in alphas {
+        let p = perturb(params, direction, a, None);
+        losses.push(loss_at(engine, variant, &p, batches, scalars)?);
+    }
+    Ok(LandscapeCurve {
+        label: label.into(),
+        alphas: alphas.to_vec(),
+        losses,
+    })
+}
+
+/// 2-D grid: row-major losses at θ + α·d1 + β·d2 (Fig 5's 3-D surface).
+#[allow(clippy::too_many_arguments)]
+pub fn landscape_2d(
+    engine: &Engine,
+    variant: &ModelVariant,
+    params: &[Tensor],
+    d1: &[Tensor],
+    d2: &[Tensor],
+    alphas: &[f32],
+    betas: &[f32],
+    batches: &[(Tensor, Tensor)],
+    scalars: StepScalars,
+) -> Result<Vec<Vec<f64>>> {
+    let mut grid = Vec::with_capacity(alphas.len());
+    for &a in alphas {
+        let mut row = Vec::with_capacity(betas.len());
+        for &b in betas {
+            let p = perturb(params, d1, a, Some((d2, b)));
+            row.push(loss_at(engine, variant, &p, batches, scalars)?);
+        }
+        grid.push(row);
+    }
+    Ok(grid)
+}
+
+/// Standard symmetric sweep grid.
+pub fn alpha_grid(half_range: f32, points: usize) -> Vec<f32> {
+    let n = points.max(3) | 1; // force odd so α=0 is sampled
+    (0..n)
+        .map(|i| (i as f32 / (n - 1) as f32 * 2.0 - 1.0) * half_range)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_grid_symmetric_with_center() {
+        let g = alpha_grid(1.0, 11);
+        assert_eq!(g.len(), 11);
+        assert!((g[5]).abs() < 1e-7);
+        assert_eq!(g[0], -1.0);
+        assert_eq!(*g.last().unwrap(), 1.0);
+        // Even requests are bumped to odd.
+        assert_eq!(alpha_grid(1.0, 10).len(), 11);
+    }
+
+    #[test]
+    fn curve_summaries() {
+        let c = LandscapeCurve {
+            label: "t".into(),
+            alphas: alpha_grid(1.0, 9),
+            losses: vec![4.0, 2.5, 1.2, 0.5, 0.2, 0.5, 1.2, 2.5, 4.0],
+        };
+        assert_eq!(c.min_loss(), 0.2);
+        assert!(c.sharpness() > 0.0); // convex center
+        let flat = LandscapeCurve {
+            label: "f".into(),
+            alphas: c.alphas.clone(),
+            losses: vec![1.0; 9],
+        };
+        assert_eq!(flat.sharpness(), 0.0);
+        assert!(c.sharpness() > flat.sharpness());
+    }
+}

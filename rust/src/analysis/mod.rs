@@ -1,0 +1,13 @@
+//! Offline analyses over trained weights and eval executables:
+//! filter-normalized loss landscapes (Fig 2/5) and Wasserstein sweeps
+//! (Fig 1).
+
+pub mod directions;
+pub mod landscape;
+pub mod spectral;
+pub mod wasserstein_sweep;
+
+pub use directions::{filter_normalized_direction, perturb};
+pub use spectral::{conv_bank_high_freq, dft_magnitudes, high_freq_energy_fraction};
+pub use landscape::{landscape_1d, landscape_2d, LandscapeCurve};
+pub use wasserstein_sweep::{layer_sweep, WassersteinPoint};

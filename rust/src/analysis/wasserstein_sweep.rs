@@ -1,0 +1,115 @@
+//! Fig 1: Wasserstein distance between FP32 weight tensors and their
+//! HBFP quantizations, per layer, across mantissa widths and block sizes.
+
+use crate::checkpoint::Checkpoint;
+use crate::metrics::wasserstein1_quantized;
+
+/// One measurement point of the Fig-1 sweep.
+#[derive(Debug, Clone)]
+pub struct WassersteinPoint {
+    pub layer: String,
+    pub m_bits: u32,
+    pub block: usize,
+    pub distance: f64,
+}
+
+/// Sweep selected layers of a checkpoint over (m, b) combinations.
+pub fn layer_sweep(
+    ck: &Checkpoint,
+    layers: &[&str],
+    m_bits: &[u32],
+    blocks: &[usize],
+) -> Vec<WassersteinPoint> {
+    let mut out = Vec::new();
+    for &layer in layers {
+        let Some(t) = ck.get(layer) else { continue };
+        let data = t.as_f32().expect("weights are f32");
+        for &m in m_bits {
+            for &b in blocks {
+                out.push(WassersteinPoint {
+                    layer: layer.to_string(),
+                    m_bits: m,
+                    block: b,
+                    distance: wasserstein1_quantized(data, m, b),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// The four Fig-1 layers for the CNN: first conv, two middle convs, fc.
+pub fn fig1_layers(param_names: &[String]) -> Vec<String> {
+    let mut picks = Vec::new();
+    if let Some(first) = param_names.iter().find(|n| n.starts_with("conv1")) {
+        picks.push(first.clone());
+    }
+    // Two representative middle convs: first conv of each stage block 1.
+    for cand in ["stage0.block1.conv1.weight", "stage1.block1.conv1.weight"] {
+        if param_names.iter().any(|n| n == cand) {
+            picks.push(cand.to_string());
+        }
+    }
+    if let Some(last) = param_names.iter().find(|n| n.starts_with("fc.weight")) {
+        picks.push(last.clone());
+    }
+    picks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+    use crate::util::Rng;
+
+    fn ck() -> Checkpoint {
+        let mut rng = Rng::new(11);
+        let mut t = |n: usize| {
+            Tensor::from_f32(&[n], (0..n).map(|_| rng.normal_scaled(0.1)).collect()).unwrap()
+        };
+        Checkpoint::new(
+            vec!["conv1.weight".into(), "fc.weight".into()],
+            vec![t(432), t(320)],
+        )
+    }
+
+    #[test]
+    fn sweep_shape_and_ordering() {
+        let ck = ck();
+        let pts = layer_sweep(&ck, &["conv1.weight", "fc.weight"], &[4, 6], &[16, 64, 576]);
+        assert_eq!(pts.len(), 2 * 2 * 3);
+        // HBFP4 distances dominate HBFP6 at every (layer, block).
+        for p4 in pts.iter().filter(|p| p.m_bits == 4) {
+            let p6 = pts
+                .iter()
+                .find(|p| p.m_bits == 6 && p.layer == p4.layer && p.block == p4.block)
+                .unwrap();
+            assert!(p4.distance > p6.distance, "{p4:?} vs {p6:?}");
+        }
+    }
+
+    #[test]
+    fn missing_layers_skipped() {
+        let ck = ck();
+        let pts = layer_sweep(&ck, &["nope.weight"], &[4], &[16]);
+        assert!(pts.is_empty());
+    }
+
+    #[test]
+    fn fig1_layer_selection() {
+        let names: Vec<String> = [
+            "conv1.weight",
+            "stage0.block1.conv1.weight",
+            "stage1.block1.conv1.weight",
+            "fc.weight",
+            "fc.bias",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let picks = fig1_layers(&names);
+        assert_eq!(picks.len(), 4);
+        assert_eq!(picks[0], "conv1.weight");
+        assert_eq!(picks[3], "fc.weight");
+    }
+}

@@ -1,0 +1,329 @@
+//! Packed BFP block storage: `m`-bit two's-complement mantissas + one
+//! 10-bit shared exponent per block. This is the wire/storage format an
+//! HBFP accelerator would hold in SRAM; [`BfpTensor`] round-trips exactly
+//! with [`super::quantize`] and substantiates the memory-footprint claims
+//! (bits/value) quoted in the README.
+
+use super::quantize::{floor_log2, Quantizer};
+use super::rounding::round_value;
+use super::{EXPONENT_MAX, EXPONENT_MIN};
+use anyhow::{anyhow, Result};
+
+/// A BFP format descriptor: mantissa width and block size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockFormat {
+    pub mantissa_bits: u32,
+    pub block_size: usize,
+}
+
+impl BlockFormat {
+    pub fn new(mantissa_bits: u32, block_size: usize) -> Result<Self> {
+        if !(2..=16).contains(&mantissa_bits) {
+            return Err(anyhow!("mantissa bits {mantissa_bits} out of [2,16]"));
+        }
+        if block_size == 0 {
+            return Err(anyhow!("block size must be positive"));
+        }
+        Ok(Self {
+            mantissa_bits,
+            block_size,
+        })
+    }
+
+    /// Storage bits for one block: b mantissas + the shared exponent.
+    pub fn bits_per_block(&self) -> usize {
+        self.block_size * self.mantissa_bits as usize + super::EXPONENT_BITS as usize
+    }
+
+    pub fn bits_per_value(&self) -> f64 {
+        self.bits_per_block() as f64 / self.block_size as f64
+    }
+
+    /// Compression ratio vs FP32 storage.
+    pub fn compression_vs_fp32(&self) -> f64 {
+        32.0 / self.bits_per_value()
+    }
+}
+
+/// One encoded block: integer mantissas + shared exponent.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BfpBlock {
+    pub exponent: i32,
+    /// Two's-complement mantissas in [-2^(m-1), 2^(m-1) - 1].
+    pub mantissas: Vec<i32>,
+    pub format: BlockFormat,
+}
+
+impl BfpBlock {
+    /// Encode a block of f32s (round-to-nearest-even).
+    pub fn encode(v: &[f32], fmt: BlockFormat) -> Result<Self> {
+        Self::encode_with(v, fmt, Quantizer::nearest(fmt.mantissa_bits), 0)
+    }
+
+    pub fn encode_with(v: &[f32], fmt: BlockFormat, q: Quantizer, base_idx: u32) -> Result<Self> {
+        if v.len() != fmt.block_size {
+            return Err(anyhow!("block len {} != format b {}", v.len(), fmt.block_size));
+        }
+        let maxabs = v.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        if maxabs < f32::MIN_POSITIVE {
+            return Ok(Self {
+                exponent: 0,
+                mantissas: vec![0; fmt.block_size],
+                format: fmt,
+            });
+        }
+        let e = floor_log2(maxabs);
+        if !(EXPONENT_MIN..=EXPONENT_MAX).contains(&e) {
+            return Err(anyhow!("exponent {e} exceeds the 10-bit shared-exponent range"));
+        }
+        let m = fmt.mantissa_bits as i32;
+        let s = (2.0f64).powi(e - m + 2) as f32;
+        let half = (1i64 << (m - 1)) as f32;
+        let mantissas = v
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| {
+                let r = round_value(x / s, q.mode, base_idx.wrapping_add(i as u32), q.seed);
+                r.clamp(-half, half - 1.0) as i32
+            })
+            .collect();
+        Ok(Self {
+            exponent: e,
+            mantissas,
+            format: fmt,
+        })
+    }
+
+    /// Decode back to f32: mant * 2^(e - m + 2).
+    pub fn decode(&self) -> Vec<f32> {
+        let s = (2.0f64).powi(self.exponent - self.format.mantissa_bits as i32 + 2) as f32;
+        self.mantissas.iter().map(|&q| q as f32 * s).collect()
+    }
+
+    /// Pack to a bit stream: 10-bit exponent then b m-bit mantissas.
+    pub fn pack(&self) -> Vec<u8> {
+        let mut bits = BitWriter::new();
+        bits.write((self.exponent - EXPONENT_MIN) as u32, super::EXPONENT_BITS);
+        let m = self.format.mantissa_bits;
+        let mask = (1u32 << m) - 1;
+        for &q in &self.mantissas {
+            bits.write((q as u32) & mask, m);
+        }
+        bits.finish()
+    }
+
+    /// Unpack from [`Self::pack`] output.
+    pub fn unpack(bytes: &[u8], fmt: BlockFormat) -> Result<Self> {
+        let mut r = BitReader::new(bytes);
+        let e = r.read(super::EXPONENT_BITS)? as i32 + EXPONENT_MIN;
+        let m = fmt.mantissa_bits;
+        let sign_bit = 1u32 << (m - 1);
+        let mut mantissas = Vec::with_capacity(fmt.block_size);
+        for _ in 0..fmt.block_size {
+            let raw = r.read(m)?;
+            // Sign-extend the m-bit two's-complement value.
+            let v = if raw & sign_bit != 0 {
+                (raw | !((1u32 << m) - 1)) as i32
+            } else {
+                raw as i32
+            };
+            mantissas.push(v);
+        }
+        Ok(Self {
+            exponent: e,
+            mantissas,
+            format: fmt,
+        })
+    }
+}
+
+/// A whole tensor stored as packed BFP blocks (row-major, zero-padded
+/// tail) — what an accelerator's operand SRAM would hold.
+#[derive(Debug, Clone)]
+pub struct BfpTensor {
+    pub format: BlockFormat,
+    pub len: usize,
+    pub blocks: Vec<BfpBlock>,
+}
+
+impl BfpTensor {
+    pub fn encode(t: &[f32], fmt: BlockFormat) -> Result<Self> {
+        let b = fmt.block_size;
+        let mut blocks = Vec::with_capacity(t.len().div_ceil(b));
+        let mut buf = vec![0.0f32; b];
+        for chunk in t.chunks(b) {
+            if chunk.len() == b {
+                blocks.push(BfpBlock::encode(chunk, fmt)?);
+            } else {
+                buf.fill(0.0);
+                buf[..chunk.len()].copy_from_slice(chunk);
+                blocks.push(BfpBlock::encode(&buf, fmt)?);
+            }
+        }
+        Ok(Self {
+            format: fmt,
+            len: t.len(),
+            blocks,
+        })
+    }
+
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len);
+        for blk in &self.blocks {
+            out.extend_from_slice(&blk.decode());
+        }
+        out.truncate(self.len);
+        out
+    }
+
+    /// Total storage bits (the memory-saving claim of §4.2).
+    pub fn storage_bits(&self) -> usize {
+        self.blocks.len() * self.format.bits_per_block()
+    }
+}
+
+// --- minimal bit I/O -------------------------------------------------------
+
+struct BitWriter {
+    bytes: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    fn new() -> Self {
+        Self {
+            bytes: Vec::new(),
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    fn write(&mut self, v: u32, bits: u32) {
+        debug_assert!(bits <= 32);
+        self.acc |= (v as u64 & ((1u64 << bits) - 1)) << self.nbits;
+        self.nbits += bits;
+        while self.nbits >= 8 {
+            self.bytes.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.bytes.push((self.acc & 0xFF) as u8);
+        }
+        self.bytes
+    }
+}
+
+struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Self {
+            bytes,
+            pos: 0,
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    fn read(&mut self, bits: u32) -> Result<u32> {
+        while self.nbits < bits {
+            let b = *self
+                .bytes
+                .get(self.pos)
+                .ok_or_else(|| anyhow!("bit stream exhausted"))?;
+            self.acc |= (b as u64) << self.nbits;
+            self.nbits += 8;
+            self.pos += 1;
+        }
+        let v = (self.acc & ((1u64 << bits) - 1)) as u32;
+        self.acc >>= bits;
+        self.nbits -= bits;
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::quantize::quantize_flat;
+    use crate::util::Rng;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal_scaled(1.0)).collect()
+    }
+
+    #[test]
+    fn format_validation() {
+        assert!(BlockFormat::new(1, 16).is_err());
+        assert!(BlockFormat::new(4, 0).is_err());
+        let f = BlockFormat::new(4, 64).unwrap();
+        assert_eq!(f.bits_per_block(), 64 * 4 + 10);
+        assert!((f.compression_vs_fp32() - 32.0 / 4.15625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn encode_decode_equals_quantizer() {
+        // Decoding an encoded tensor must equal the float quantizer output
+        // exactly: packed BFP is a lossless carrier of quantized values.
+        let x = randn(333, 1);
+        for (m, b) in [(4u32, 16usize), (6, 64), (8, 49)] {
+            let fmt = BlockFormat::new(m, b).unwrap();
+            let t = BfpTensor::encode(&x, fmt).unwrap();
+            let want = quantize_flat(&x, b, Quantizer::nearest(m), 0);
+            assert_eq!(t.decode(), want, "m={m} b={b}");
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let x = randn(64, 2);
+        let fmt = BlockFormat::new(5, 64).unwrap();
+        let blk = BfpBlock::encode(&x, fmt).unwrap();
+        let packed = blk.pack();
+        assert_eq!(packed.len(), fmt.bits_per_block().div_ceil(8));
+        let back = BfpBlock::unpack(&packed, fmt).unwrap();
+        assert_eq!(back, blk);
+    }
+
+    #[test]
+    fn pack_unpack_negative_mantissas() {
+        let fmt = BlockFormat::new(4, 8).unwrap();
+        let blk = BfpBlock {
+            exponent: -3,
+            mantissas: vec![-8, -1, 0, 1, 7, -5, 3, -2],
+            format: fmt,
+        };
+        let back = BfpBlock::unpack(&blk.pack(), fmt).unwrap();
+        assert_eq!(back, blk);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let x = randn(100, 3);
+        let fmt = BlockFormat::new(4, 64).unwrap();
+        let t = BfpTensor::encode(&x, fmt).unwrap();
+        assert_eq!(t.blocks.len(), 2); // 100 -> 2 blocks of 64
+        assert_eq!(t.storage_bits(), 2 * (64 * 4 + 10));
+        // ~7.4x smaller than FP32 for this tensor.
+        let ratio = (100.0 * 32.0) / t.storage_bits() as f64;
+        assert!(ratio > 5.9, "{ratio}");
+    }
+
+    #[test]
+    fn zero_tensor() {
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        let t = BfpTensor::encode(&[0.0; 20], fmt).unwrap();
+        assert_eq!(t.decode(), vec![0.0; 20]);
+    }
+}

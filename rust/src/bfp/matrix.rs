@@ -1,0 +1,229 @@
+//! Software BFP GEMM — a full fixed-point matrix multiply over encoded
+//! operands, the datapath an HBFP accelerator executes and the substrate
+//! behind the emulation-vs-hardware cross-checks: `hbfp_gemm` must agree
+//! with quantize-then-float-GEMM to f64 rounding, for any (m, b).
+//!
+//! Layout contract matches the compiled graph (hbfp.py): `x` is blocked
+//! row-major (contraction dim K innermost), `w` is blocked along K too
+//! (transposed before flattening), both padded with zeros to a block
+//! multiple.
+
+use super::block::{BfpBlock, BlockFormat};
+use super::quantize::Quantizer;
+use anyhow::{bail, Result};
+
+/// A [rows, cols] f32 matrix, row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if rows * cols != data.len() {
+            bail!("shape {rows}x{cols} != {} elems", data.len());
+        }
+        Ok(Self { rows, cols, data })
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = vec![0.0f32; self.data.len()];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        Mat {
+            rows: self.cols,
+            cols: self.rows,
+            data: out,
+        }
+    }
+
+    /// Plain f64-accumulated float GEMM (reference).
+    pub fn matmul(&self, rhs: &Mat) -> Result<Mat> {
+        if self.cols != rhs.rows {
+            bail!("inner dims {} vs {}", self.cols, rhs.rows);
+        }
+        let mut out = Mat::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for j in 0..rhs.cols {
+                let mut acc = 0.0f64;
+                for k in 0..self.cols {
+                    acc += self.at(i, k) as f64 * rhs.at(k, j) as f64;
+                }
+                out.data[i * rhs.cols + j] = acc as f32;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// One operand row encoded as BFP blocks along K (zero-padded tail).
+fn encode_row(row: &[f32], fmt: BlockFormat, q: Quantizer, base: u32) -> Result<Vec<BfpBlock>> {
+    let b = fmt.block_size;
+    let mut blocks = Vec::with_capacity(row.len().div_ceil(b));
+    let mut buf = vec![0.0f32; b];
+    for (bi, chunk) in row.chunks(b).enumerate() {
+        let idx = base.wrapping_add((bi * b) as u32);
+        if chunk.len() == b {
+            blocks.push(BfpBlock::encode_with(chunk, fmt, q, idx)?);
+        } else {
+            buf.fill(0.0);
+            buf[..chunk.len()].copy_from_slice(chunk);
+            blocks.push(BfpBlock::encode_with(&buf, fmt, q, idx)?);
+        }
+    }
+    Ok(blocks)
+}
+
+/// Fixed-point HBFP GEMM: y = Q(x) @ Q(w) with integer MACs per block
+/// pair, one exponent add per block pair, FP32 result store.
+pub fn hbfp_gemm(x: &Mat, w: &Mat, fmt: BlockFormat) -> Result<Mat> {
+    if x.cols != w.rows {
+        bail!("inner dims {} vs {}", x.cols, w.rows);
+    }
+    let q = Quantizer::nearest(fmt.mantissa_bits);
+    // Encode x rows (K innermost) and w columns (transpose first).
+    let xrows: Vec<Vec<BfpBlock>> = (0..x.rows)
+        .map(|i| encode_row(&x.data[i * x.cols..(i + 1) * x.cols], fmt, q, 0))
+        .collect::<Result<_>>()?;
+    let wt = w.transpose();
+    let wcols: Vec<Vec<BfpBlock>> = (0..wt.rows)
+        .map(|j| encode_row(&wt.data[j * wt.cols..(j + 1) * wt.cols], fmt, q, 0))
+        .collect::<Result<_>>()?;
+
+    let mut out = Mat::zeros(x.rows, w.cols);
+    for (i, xr) in xrows.iter().enumerate() {
+        for (j, wc) in wcols.iter().enumerate() {
+            let mut acc = 0.0f64;
+            for (bx, bw) in xr.iter().zip(wc) {
+                // Integer MAC inside the block pair.
+                let mut iacc: i64 = 0;
+                for (&a, &b) in bx.mantissas.iter().zip(&bw.mantissas) {
+                    iacc += a as i64 * b as i64;
+                }
+                let shift = (bx.exponent - fmt.mantissa_bits as i32 + 2)
+                    + (bw.exponent - fmt.mantissa_bits as i32 + 2);
+                acc += iacc as f64 * (2.0f64).powi(shift);
+            }
+            out.data[i * w.cols + j] = acc as f32;
+        }
+    }
+    Ok(out)
+}
+
+/// Quantize-then-float reference for [`hbfp_gemm`] (what the compiled
+/// emulation graph computes, modulo its f32 accumulation order).
+pub fn dequant_gemm(x: &Mat, w: &Mat, fmt: BlockFormat) -> Result<Mat> {
+    let q = Quantizer::nearest(fmt.mantissa_bits);
+    let mut xq = x.clone();
+    for i in 0..x.rows {
+        let row = &x.data[i * x.cols..(i + 1) * x.cols];
+        let enc = encode_row(row, fmt, q, 0)?;
+        let mut flat: Vec<f32> = enc.iter().flat_map(|b| b.decode()).collect();
+        flat.truncate(x.cols);
+        xq.data[i * x.cols..(i + 1) * x.cols].copy_from_slice(&flat);
+    }
+    let wt = w.transpose();
+    let mut wqt = wt.clone();
+    for j in 0..wt.rows {
+        let row = &wt.data[j * wt.cols..(j + 1) * wt.cols];
+        let enc = encode_row(row, fmt, q, 0)?;
+        let mut flat: Vec<f32> = enc.iter().flat_map(|b| b.decode()).collect();
+        flat.truncate(wt.cols);
+        wqt.data[j * wt.cols..(j + 1) * wt.cols].copy_from_slice(&flat);
+    }
+    xq.matmul(&wqt.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randmat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::new(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| rng.normal_scaled(1.0)).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fixed_point_gemm_matches_dequant_gemm() {
+        for (m, b, (r, k, c)) in [
+            (4u32, 16usize, (5usize, 40usize, 7usize)),
+            (6, 64, (8, 100, 8)),
+            (8, 25, (3, 25, 3)),
+        ] {
+            let fmt = BlockFormat::new(m, b).unwrap();
+            let x = randmat(r, k, 1);
+            let w = randmat(k, c, 2);
+            let fixed = hbfp_gemm(&x, &w, fmt).unwrap();
+            let float = dequant_gemm(&x, &w, fmt).unwrap();
+            for (a, bb) in fixed.data.iter().zip(&float.data) {
+                assert!(
+                    (a - bb).abs() <= 1e-4 * bb.abs().max(1.0),
+                    "m={m} b={b}: {a} vs {bb}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn high_mantissa_approaches_exact() {
+        let fmt = BlockFormat::new(12, 16).unwrap();
+        let x = randmat(6, 48, 3);
+        let w = randmat(48, 5, 4);
+        let exact = x.matmul(&w).unwrap();
+        let got = hbfp_gemm(&x, &w, fmt).unwrap();
+        for (a, b) in got.data.iter().zip(&exact.data) {
+            assert!((a - b).abs() < 5e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn shape_errors() {
+        let x = randmat(2, 3, 5);
+        let w = randmat(4, 2, 6);
+        assert!(hbfp_gemm(&x, &w, BlockFormat::new(4, 16).unwrap()).is_err());
+        assert!(Mat::new(2, 2, vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let x = randmat(3, 7, 8);
+        assert_eq!(x.transpose().transpose(), x);
+    }
+
+    #[test]
+    fn padding_tail_blocks() {
+        // K = 10 with b = 16: single padded block per row; GEMM must not
+        // pick up padding contributions.
+        let fmt = BlockFormat::new(6, 16).unwrap();
+        let x = randmat(2, 10, 9);
+        let w = randmat(10, 2, 10);
+        let got = hbfp_gemm(&x, &w, fmt).unwrap();
+        let want = dequant_gemm(&x, &w, fmt).unwrap();
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Software Block Floating Point — the numeric-format substrate.
+//!
+//! From-scratch implementation of the paper's BFP encoding:
+//! a block of `b` values shares one (10-bit) exponent; each value keeps an
+//! `m`-bit two's-complement mantissa. Dot products between BFP blocks are
+//! pure fixed-point integer arithmetic plus one exponent add ([`dot`]).
+//!
+//! [`quantize`] is **bit-exact** against the python oracle
+//! (`python/compile/kernels/ref.py`) — pinned by the golden vectors in
+//! `artifacts/golden_bfp.json` (integration test `rust/tests/golden_bfp.rs`)
+//! — so host-side analysis (Wasserstein sweeps, Fig 1) sees exactly the
+//! numerics the AOT-compiled training graph applies.
+
+pub mod block;
+pub mod dot;
+pub mod matrix;
+pub mod quantize;
+pub mod rounding;
+
+pub use block::{BfpBlock, BfpTensor, BlockFormat};
+pub use dot::{bfp_dot_blocks, bfp_dot_fixed_point, dequant_dot};
+pub use matrix::{dequant_gemm, hbfp_gemm, Mat};
+pub use quantize::{floor_log2, quantize_blocks_into, quantize_flat, quantize_tensor, Quantizer};
+pub use rounding::{uniform_u01, xorshift_hash, RoundMode};
+
+/// The paper's exponent bitwidth lower bound (§2): 10 bits, range
+/// [-512, 511]; fixed across the whole parameter space so mixed-mantissa
+/// datapaths share one exponent format.
+pub const EXPONENT_BITS: u32 = 10;
+pub const EXPONENT_MIN: i32 = -512;
+pub const EXPONENT_MAX: i32 = 511;
+
+/// Bits per value for an HBFP(m, b) encoding, amortizing the shared
+/// exponent over the block (the §2 "exponent overhead amortization").
+pub fn bits_per_value(mantissa_bits: u32, block_size: usize) -> f64 {
+    mantissa_bits as f64 + EXPONENT_BITS as f64 / block_size as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponent_amortization() {
+        // HBFP4 @ b=64: 4 + 10/64 ≈ 4.156 bits/value.
+        let b = bits_per_value(4, 64);
+        assert!((b - 4.15625).abs() < 1e-12);
+        // Large blocks asymptote to the mantissa width (fixed point).
+        assert!(bits_per_value(4, 576) < bits_per_value(4, 16));
+    }
+}

@@ -1,0 +1,286 @@
+//! FP32 -> BFP quantization, bit-exact with `python/compile/kernels/ref.py`.
+//!
+//! Every operation mirrors the jnp reference in f32 arithmetic:
+//! exponent extraction reads the IEEE-754 exponent field, the interval is
+//! `2^(e - m + 2)` (Eq. 1), clipping is to `[-2^(m-1), 2^(m-1) - 1]`, and
+//! `m >= 23` is the FP32 bypass. The golden-vector integration test pins
+//! this contract across the language boundary.
+
+use super::rounding::{round_value, RoundMode};
+
+/// floor(log2(|x|)) via the IEEE exponent field; -127 for zero/denormal.
+#[inline]
+pub fn floor_log2(x: f32) -> i32 {
+    ((x.to_bits() >> 23) & 0xFF) as i32 - 127
+}
+
+/// 2^k as f32, exact for the full k range incl. subnormal results
+/// (matches jnp.exp2 on integer-valued floats).
+#[inline]
+fn exp2i(k: i32) -> f32 {
+    // f64 powi is exact for k >= -1074; the f32 cast rounds to the nearest
+    // representable (subnormal) value exactly like jnp.exp2's f32 output.
+    (2.0f64).powi(k) as f32
+}
+
+/// One quantization configuration (mantissa width + rounding + stream).
+#[derive(Debug, Clone, Copy)]
+pub struct Quantizer {
+    pub m_bits: u32,
+    pub mode: RoundMode,
+    pub seed: u32,
+}
+
+impl Quantizer {
+    pub fn nearest(m_bits: u32) -> Self {
+        Self {
+            m_bits,
+            mode: RoundMode::NearestEven,
+            seed: 0,
+        }
+    }
+
+    pub fn stochastic(m_bits: u32, seed: u32) -> Self {
+        Self {
+            m_bits,
+            mode: RoundMode::Stochastic,
+            seed,
+        }
+    }
+
+    /// FP32 bypass convention (ref.py): m >= 23 is the identity.
+    pub fn is_bypass(&self) -> bool {
+        self.m_bits >= 23
+    }
+}
+
+/// Quantize one block of values sharing a single exponent.
+///
+/// `base_idx` is the global element index of `v[0]` in the enclosing
+/// tensor (drives the per-element stochastic rounding stream).
+/// Returns the shared exponent actually used (for packing / stats).
+pub fn quantize_block_into(v: &[f32], out: &mut [f32], q: Quantizer, base_idx: u32) -> i32 {
+    debug_assert_eq!(v.len(), out.len());
+    if q.is_bypass() {
+        out.copy_from_slice(v);
+        return 0;
+    }
+    let mut maxabs = 0.0f32;
+    for &x in v {
+        let a = x.abs();
+        if a > maxabs {
+            maxabs = a;
+        }
+    }
+    // Zero / denormal-max blocks dequantize to exactly 0.
+    if maxabs < exp2i(-126) {
+        out.fill(0.0);
+        return 0;
+    }
+    let e = floor_log2(maxabs);
+    let m = q.m_bits as i32;
+    let s = exp2i(e - m + 2); // Eq. 1 interval
+    let half = exp2i(m - 1); // 2^(m-1)
+    let lo = -half;
+    let hi = half - 1.0;
+    // Hot-path: dividing by an exact power of two equals multiplying by
+    // its (exactly representable) reciprocal — bit-identical per IEEE-754,
+    // ~1.9x faster (EXPERIMENTS.md §Perf). Fall back to division when the
+    // reciprocal exponent leaves the normal range.
+    let sinv_e = m - 2 - e;
+    let sinv = if (-126..=127).contains(&sinv_e) {
+        Some(exp2i(sinv_e))
+    } else {
+        None
+    };
+    match (q.mode, sinv) {
+        (RoundMode::NearestEven, Some(si)) => {
+            for (&x, o) in v.iter().zip(out.iter_mut()) {
+                *o = (x * si).round_ties_even().clamp(lo, hi) * s;
+            }
+        }
+        (RoundMode::Stochastic, Some(si)) => {
+            for (i, (&x, o)) in v.iter().zip(out.iter_mut()).enumerate() {
+                let idx = base_idx.wrapping_add(i as u32);
+                let u = super::rounding::uniform_u01(idx, q.seed);
+                *o = (x * si + u).floor().clamp(lo, hi) * s;
+            }
+        }
+        (_, None) => {
+            for (i, (&x, o)) in v.iter().zip(out.iter_mut()).enumerate() {
+                let idx = base_idx.wrapping_add(i as u32);
+                let r = round_value(x / s, q.mode, idx, q.seed);
+                *o = r.clamp(lo, hi) * s;
+            }
+        }
+    }
+    e
+}
+
+/// Quantize a (nblocks, b) row-major buffer in place-ish (into `out`).
+pub fn quantize_blocks_into(v: &[f32], block: usize, out: &mut [f32], q: Quantizer, base: u32) {
+    debug_assert_eq!(v.len() % block, 0);
+    for (bi, (src, dst)) in v.chunks(block).zip(out.chunks_mut(block)).enumerate() {
+        quantize_block_into(src, dst, q, base.wrapping_add((bi * block) as u32));
+    }
+}
+
+/// Quantize an arbitrary-length tensor in row-major blocks of `block`
+/// with zero padding at the tail — identical semantics (and stochastic
+/// stream) to `ref.quantize_flat`.
+pub fn quantize_flat(t: &[f32], block: usize, q: Quantizer, site: u32) -> Vec<f32> {
+    // Salt < 2^24 per site: survives the f32 round-trip on the jax side.
+    let base = site.wrapping_mul(40503);
+    let n = t.len();
+    let mut out = vec![0.0f32; n];
+    let full = n / block * block;
+    quantize_blocks_into(&t[..full], block, &mut out[..full], q, base);
+    if full < n {
+        // Tail block: pad with zeros (padding never changes max|v| upward
+        // ... it can only lower it to 0 for an all-pad block).
+        let mut vbuf = vec![0.0f32; block];
+        vbuf[..n - full].copy_from_slice(&t[full..]);
+        let mut obuf = vec![0.0f32; block];
+        quantize_block_into(&vbuf, &mut obuf, q, base.wrapping_add(full as u32));
+        out[full..].copy_from_slice(&obuf[..n - full]);
+    }
+    out
+}
+
+/// Convenience: quantize a tensor (as stored, row-major) and return the
+/// result — the exact transform the compiled graph applies to a forward
+/// operand with the contraction axis innermost.
+pub fn quantize_tensor(t: &[f32], block: usize, m_bits: u32) -> Vec<f32> {
+    quantize_flat(t, block, Quantizer::nearest(m_bits), 0)
+}
+
+/// Sum of squared quantization error (distortion diagnostic).
+pub fn sq_error(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randn(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal_scaled(scale as f64)).collect()
+    }
+
+    #[test]
+    fn floor_log2_matches_ieee() {
+        assert_eq!(floor_log2(1.0), 0);
+        assert_eq!(floor_log2(1.9), 0);
+        assert_eq!(floor_log2(2.0), 1);
+        assert_eq!(floor_log2(0.5), -1);
+        assert_eq!(floor_log2(3.7e4), 15);
+        assert_eq!(floor_log2(0.0), -127);
+    }
+
+    #[test]
+    fn exp2i_exact() {
+        assert_eq!(exp2i(0), 1.0);
+        assert_eq!(exp2i(10), 1024.0);
+        assert_eq!(exp2i(-126), f32::MIN_POSITIVE);
+        assert!(exp2i(-130) > 0.0 && exp2i(-130) < f32::MIN_POSITIVE); // subnormal
+    }
+
+    #[test]
+    fn bypass_is_identity() {
+        let x = randn(100, 1, 1.0);
+        assert_eq!(quantize_flat(&x, 16, Quantizer::nearest(23), 0), x);
+        assert_eq!(quantize_flat(&x, 16, Quantizer::nearest(32), 0), x);
+    }
+
+    #[test]
+    fn zero_block() {
+        let x = vec![0.0f32; 32];
+        assert_eq!(quantize_flat(&x, 16, Quantizer::nearest(4), 0), x);
+    }
+
+    #[test]
+    fn error_bound_nearest() {
+        let x = randn(256, 2, 1.0);
+        for m in [3u32, 4, 6, 8] {
+            let out = quantize_flat(&x, 64, Quantizer::nearest(m), 0);
+            for (blk, (xs, os)) in x.chunks(64).zip(out.chunks(64)).enumerate() {
+                let maxabs = xs.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                let interval = exp2i(floor_log2(maxabs) - m as i32 + 2);
+                for (x, o) in xs.iter().zip(os) {
+                    assert!(
+                        (x - o).abs() <= interval,
+                        "m={m} blk={blk} x={x} o={o} interval={interval}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let x = randn(300, 3, 2.0);
+        for m in [4u32, 6] {
+            let once = quantize_flat(&x, 49, Quantizer::nearest(m), 0);
+            let twice = quantize_flat(&once, 49, Quantizer::nearest(m), 0);
+            assert_eq!(once, twice);
+        }
+    }
+
+    #[test]
+    fn shared_exponent_kills_small_values() {
+        let mut x = vec![1e-3f32; 16];
+        x[0] = 1024.0;
+        let out = quantize_flat(&x, 16, Quantizer::nearest(4), 0);
+        assert_eq!(out[0], 1024.0);
+        assert!(out[1..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn error_monotone_in_mantissa() {
+        let x = randn(4096, 4, 1.0);
+        let mut prev = f64::INFINITY;
+        for m in [2u32, 3, 4, 5, 6, 8, 10] {
+            let e = sq_error(&x, &quantize_flat(&x, 64, Quantizer::nearest(m), 0));
+            assert!(e <= prev + 1e-9, "m={m}: {e} > {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn stochastic_seed_sensitivity_and_determinism() {
+        let x = randn(128, 5, 1.0);
+        let a = quantize_flat(&x, 64, Quantizer::stochastic(4, 1), 0);
+        let b = quantize_flat(&x, 64, Quantizer::stochastic(4, 2), 0);
+        let a2 = quantize_flat(&x, 64, Quantizer::stochastic(4, 1), 0);
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn tail_padding_matches_explicit_pad() {
+        let x = randn(70, 6, 1.0);
+        let q = Quantizer::nearest(4);
+        let out = quantize_flat(&x, 64, q, 0);
+        let mut padded = x.clone();
+        padded.resize(128, 0.0);
+        let full = quantize_flat(&padded, 64, q, 0);
+        assert_eq!(out, &full[..70]);
+    }
+
+    #[test]
+    fn powers_of_two_survive() {
+        for e in [-10i32, -1, 0, 1, 7] {
+            let x = vec![exp2i(e); 16];
+            let out = quantize_flat(&x, 16, Quantizer::nearest(6), 0);
+            assert_eq!(out, x);
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Rounding modes. The stochastic path reproduces the counter-based
+//! XORshift32 stream of `ref.py` exactly (same u32 algebra) — the same
+//! circuit the hardware model prices in `hw_model::converter`.
+
+/// How mantissas are rounded during FP32 -> BFP conversion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Round half to even (IEEE default); used for forward-pass operands.
+    NearestEven,
+    /// Unbiased stochastic rounding; the paper's gradient-path choice.
+    Stochastic,
+}
+
+impl RoundMode {
+    /// Runtime-scalar encoding shared with the compiled graph (0/1).
+    pub fn as_scalar(self) -> f32 {
+        match self {
+            RoundMode::NearestEven => 0.0,
+            RoundMode::Stochastic => 1.0,
+        }
+    }
+}
+
+/// Counter-based XORshift32 hash; identical to `ref.xorshift_hash`.
+#[inline]
+pub fn xorshift_hash(idx: u32, seed: u32) -> u32 {
+    let mut h = idx
+        .wrapping_mul(2654435761)
+        .wrapping_add(seed.wrapping_mul(0x9E37_79B9));
+    h ^= h << 13;
+    h ^= h >> 17;
+    h ^= h << 5;
+    h
+}
+
+/// u in [0, 1) with 24 random bits; identical to `ref.uniform_u01`.
+#[inline]
+pub fn uniform_u01(idx: u32, seed: u32) -> f32 {
+    (xorshift_hash(idx, seed) >> 8) as f32 * (2.0f32).powi(-24)
+}
+
+/// Apply the selected rounding to a pre-scaled mantissa value.
+#[inline]
+pub fn round_value(x: f32, mode: RoundMode, idx: u32, seed: u32) -> f32 {
+    match mode {
+        RoundMode::NearestEven => x.round_ties_even(),
+        RoundMode::Stochastic => (x + uniform_u01(idx, seed)).floor(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_even_ties() {
+        assert_eq!(round_value(0.5, RoundMode::NearestEven, 0, 0), 0.0);
+        assert_eq!(round_value(1.5, RoundMode::NearestEven, 0, 0), 2.0);
+        assert_eq!(round_value(-0.5, RoundMode::NearestEven, 0, 0), 0.0);
+        assert_eq!(round_value(2.5, RoundMode::NearestEven, 0, 0), 2.0);
+    }
+
+    #[test]
+    fn stochastic_bounds() {
+        // floor(x + u) is always floor(x) or ceil(x).
+        for idx in 0..200u32 {
+            let x = 3.3f32;
+            let r = round_value(x, RoundMode::Stochastic, idx, 7);
+            assert!(r == 3.0 || r == 4.0, "{r}");
+        }
+    }
+
+    #[test]
+    fn stochastic_unbiased() {
+        let x = 0.25f32;
+        let n = 20_000;
+        let sum: f64 = (0..n)
+            .map(|i| round_value(x, RoundMode::Stochastic, i, 42) as f64)
+            .sum();
+        let mean = sum / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn hash_is_deterministic_and_seed_sensitive() {
+        assert_eq!(xorshift_hash(5, 7), xorshift_hash(5, 7));
+        assert_ne!(xorshift_hash(5, 7), xorshift_hash(5, 8));
+        assert_ne!(xorshift_hash(5, 7), xorshift_hash(6, 7));
+    }
+
+    #[test]
+    fn u01_in_range() {
+        for i in 0..1000 {
+            let u = uniform_u01(i, 9);
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+}

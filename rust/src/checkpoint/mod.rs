@@ -1,0 +1,170 @@
+//! Checkpoints: named f32 tensors in a simple self-describing binary
+//! container (JSON header + raw little-endian payload). Used for the
+//! Fig 1 / Fig 2 analyses, which quantize *trained* weights offline.
+
+use crate::runtime::Tensor;
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"BOOSTCK1";
+
+/// A named set of f32 tensors plus free-form metadata.
+#[derive(Debug, Default, Clone)]
+pub struct Checkpoint {
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+    pub meta: std::collections::BTreeMap<String, String>,
+}
+
+impl Checkpoint {
+    pub fn new(names: Vec<String>, tensors: Vec<Tensor>) -> Self {
+        assert_eq!(names.len(), tensors.len());
+        Self {
+            names,
+            tensors,
+            meta: Default::default(),
+        }
+    }
+
+    pub fn with_meta(mut self, key: &str, value: impl ToString) -> Self {
+        self.meta.insert(key.to_string(), value.to_string());
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| &self.tensors[i])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let header = Json::obj(vec![
+            (
+                "names",
+                Json::Arr(self.names.iter().map(Json::str).collect()),
+            ),
+            (
+                "shapes",
+                Json::Arr(
+                    self.tensors
+                        .iter()
+                        .map(|t| {
+                            Json::Arr(
+                                t.shape().iter().map(|&d| Json::num(d as f64)).collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            ("meta", Json::from_map(&self.meta)),
+        ]);
+        let hjson = header.render().into_bytes();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(hjson.len() as u64).to_le_bytes())?;
+        f.write_all(&hjson)?;
+        for t in &self.tensors {
+            let data = t.as_f32().context("checkpoints store f32 tensors only")?;
+            for &v in data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(anyhow!("{} is not a booster checkpoint", path.display()));
+        }
+        let mut lenb = [0u8; 8];
+        f.read_exact(&mut lenb)?;
+        let hlen = u64::from_le_bytes(lenb) as usize;
+        let mut hjson = vec![0u8; hlen];
+        f.read_exact(&mut hjson)?;
+        let header = Json::parse(std::str::from_utf8(&hjson)?)?;
+        let names: Vec<String> = header
+            .req("names")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+        let shapes: Vec<Vec<usize>> = header
+            .req("shapes")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize_vec())
+            .collect::<Result<_>>()?;
+        let mut meta = std::collections::BTreeMap::new();
+        if let Json::Obj(fields) = header.req("meta")? {
+            for (k, v) in fields {
+                meta.insert(k.clone(), v.as_str()?.to_string());
+            }
+        }
+        let mut tensors = Vec::with_capacity(shapes.len());
+        for shape in &shapes {
+            let n: usize = shape.iter().product();
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            tensors.push(Tensor::from_f32(shape, data)?);
+        }
+        Ok(Self {
+            names,
+            tensors,
+            meta,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let ck = Checkpoint::new(
+            vec!["a".into(), "b".into()],
+            vec![
+                Tensor::from_f32(&[2, 3], vec![1., -2., 3.5, 0., 1e-7, -4.]).unwrap(),
+                Tensor::from_f32(&[4], vec![9., 8., 7., 6.]).unwrap(),
+            ],
+        )
+        .with_meta("variant", "cnn_bs64")
+        .with_meta("val_acc", 0.93);
+        let dir = std::env::temp_dir().join("boosters_test_ck");
+        let path = dir.join("m.ck");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.names, ck.names);
+        assert_eq!(back.tensors[0], ck.tensors[0]);
+        assert_eq!(back.tensors[1], ck.tensors[1]);
+        assert_eq!(back.meta.get("variant").unwrap(), "cnn_bs64");
+        assert_eq!(back.get("b").unwrap().shape(), &[4]);
+        assert!(back.get("zzz").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("boosters_test_ck2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.ck");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,344 @@
+//! Experiment configuration: JSON-loadable run specs, the precision
+//! policy grammar, and learning-rate schedules.
+//!
+//! The precision policy is the paper's subject matter, so it is a
+//! first-class config object here (see [`PrecisionPolicy`]): every
+//! experiment row in Tables 1–3 is a `TrainConfig` with a different
+//! policy, and the Accuracy Booster itself is
+//! `booster(low=4, high=6, boost_epochs=1)`.
+
+use crate::util::Json;
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+/// Which mantissa widths the scheduler feeds per epoch/layer-class.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PrecisionPolicy {
+    /// FP32 baseline (bits >= 23 bypass).
+    Fp32,
+    /// Standalone HBFP(bits) everywhere, all epochs.
+    Hbfp { bits: u32 },
+    /// Layer-aware only: `edge` bits for first/last layers, `mid` inside
+    /// ("HBFP4+Layers" in Fig 2).
+    HbfpLayers { mid: u32, edge: u32 },
+    /// The paper's Accuracy Booster: `low` bits everywhere with `high`
+    /// bits on edge layers, switching middle layers to `high` for the
+    /// final `boost_epochs` epochs.
+    Booster {
+        low: u32,
+        high: u32,
+        boost_epochs: usize,
+    },
+    /// Cyclic precision (CPT-style related-work baseline): mid bits cycle
+    /// between `min` and `max` per epoch.
+    Cyclic { min: u32, max: u32, edge: u32 },
+}
+
+impl PrecisionPolicy {
+    pub fn booster(boost_epochs: usize) -> Self {
+        PrecisionPolicy::Booster {
+            low: 4,
+            high: 6,
+            boost_epochs,
+        }
+    }
+
+    /// Short label used in tables/CSV file names.
+    pub fn label(&self) -> String {
+        match self {
+            PrecisionPolicy::Fp32 => "fp32".into(),
+            PrecisionPolicy::Hbfp { bits } => format!("hbfp{bits}"),
+            PrecisionPolicy::HbfpLayers { mid, edge } => format!("hbfp{mid}+layers{edge}"),
+            PrecisionPolicy::Booster {
+                low,
+                high,
+                boost_epochs,
+            } => format!("booster{low}-{high}(last{boost_epochs})"),
+            PrecisionPolicy::Cyclic { min, max, .. } => format!("cyclic{min}-{max}"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            PrecisionPolicy::Fp32 => Json::obj(vec![("kind", Json::str("fp32"))]),
+            PrecisionPolicy::Hbfp { bits } => Json::obj(vec![
+                ("kind", Json::str("hbfp")),
+                ("bits", Json::num(*bits as f64)),
+            ]),
+            PrecisionPolicy::HbfpLayers { mid, edge } => Json::obj(vec![
+                ("kind", Json::str("hbfp_layers")),
+                ("mid", Json::num(*mid as f64)),
+                ("edge", Json::num(*edge as f64)),
+            ]),
+            PrecisionPolicy::Booster {
+                low,
+                high,
+                boost_epochs,
+            } => Json::obj(vec![
+                ("kind", Json::str("booster")),
+                ("low", Json::num(*low as f64)),
+                ("high", Json::num(*high as f64)),
+                ("boost_epochs", Json::num(*boost_epochs as f64)),
+            ]),
+            PrecisionPolicy::Cyclic { min, max, edge } => Json::obj(vec![
+                ("kind", Json::str("cyclic")),
+                ("min", Json::num(*min as f64)),
+                ("max", Json::num(*max as f64)),
+                ("edge", Json::num(*edge as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let u32of = |key: &str| -> Result<u32> { Ok(v.req(key)?.as_usize()? as u32) };
+        Ok(match v.req("kind")?.as_str()? {
+            "fp32" => PrecisionPolicy::Fp32,
+            "hbfp" => PrecisionPolicy::Hbfp { bits: u32of("bits")? },
+            "hbfp_layers" => PrecisionPolicy::HbfpLayers {
+                mid: u32of("mid")?,
+                edge: u32of("edge")?,
+            },
+            "booster" => PrecisionPolicy::Booster {
+                low: u32of("low")?,
+                high: u32of("high")?,
+                boost_epochs: v.req("boost_epochs")?.as_usize()?,
+            },
+            "cyclic" => PrecisionPolicy::Cyclic {
+                min: u32of("min")?,
+                max: u32of("max")?,
+                edge: u32of("edge")?,
+            },
+            other => bail!("unknown policy kind {other}"),
+        })
+    }
+}
+
+/// Learning-rate schedule: linear warmup then step decay at fixed epoch
+/// fractions (the paper's 82/122-of-160 recipe generalized). A negative
+/// `decay_factor` selects inverse-sqrt (the transformer recipe).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LrSchedule {
+    pub base: f64,
+    /// Warmup steps (linear from base/10).
+    pub warmup_steps: usize,
+    /// Epoch fractions at which lr decays by `decay_factor`.
+    pub decay_at: Vec<f64>,
+    pub decay_factor: f64,
+}
+
+impl Default for LrSchedule {
+    fn default() -> Self {
+        Self {
+            base: 0.1,
+            warmup_steps: 40,
+            decay_at: vec![0.5, 0.75],
+            decay_factor: 0.1,
+        }
+    }
+}
+
+impl LrSchedule {
+    /// Inverse-sqrt schedule (transformer recipe, Appendix A.2).
+    pub fn inverse_sqrt(base: f64, warmup_steps: usize) -> Self {
+        Self {
+            base,
+            warmup_steps,
+            decay_at: vec![],
+            decay_factor: -1.0, // sentinel selecting inverse-sqrt
+        }
+    }
+
+    pub fn lr_at(&self, global_step: usize, epoch: usize, total_epochs: usize) -> f64 {
+        if self.decay_factor < 0.0 {
+            // inverse-sqrt with linear warmup: base * min(s/w, sqrt(w/s)).
+            let s = (global_step + 1) as f64;
+            let w = self.warmup_steps.max(1) as f64;
+            return self.base * (s / w).min((w / s).sqrt());
+        }
+        let mut lr = self.base;
+        if global_step < self.warmup_steps {
+            let frac = (global_step + 1) as f64 / self.warmup_steps as f64;
+            lr *= 0.1 + 0.9 * frac;
+        }
+        let progress = epoch as f64 / total_epochs.max(1) as f64;
+        for &at in &self.decay_at {
+            if progress >= at {
+                lr *= self.decay_factor;
+            }
+        }
+        lr
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("base", Json::num(self.base)),
+            ("warmup_steps", Json::num(self.warmup_steps as f64)),
+            (
+                "decay_at",
+                Json::Arr(self.decay_at.iter().map(|&v| Json::num(v)).collect()),
+            ),
+            ("decay_factor", Json::num(self.decay_factor)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            base: v.req("base")?.as_f64()?,
+            warmup_steps: v.req("warmup_steps")?.as_usize()?,
+            decay_at: v
+                .req("decay_at")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Result<_>>()?,
+            decay_factor: v.req("decay_factor")?.as_f64()?,
+        })
+    }
+}
+
+/// One training run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    /// Artifact variant, e.g. "cnn_bs64".
+    pub variant: String,
+    pub policy: PrecisionPolicy,
+    pub epochs: usize,
+    /// Steps per epoch (bounded by dataset/batch).
+    pub steps_per_epoch: usize,
+    pub seed: u64,
+    pub lr: LrSchedule,
+    /// Batches of validation data per eval.
+    pub eval_batches: usize,
+    /// Stochastic rounding for gradient quantization.
+    pub stochastic_grad: bool,
+    /// Dataset size knobs.
+    pub train_size: usize,
+    pub val_size: usize,
+}
+
+impl TrainConfig {
+    pub fn quick(variant: &str, policy: PrecisionPolicy) -> Self {
+        Self {
+            variant: variant.into(),
+            policy,
+            epochs: 8,
+            steps_per_epoch: 16,
+            seed: 42,
+            lr: LrSchedule::default(),
+            eval_batches: 4,
+            stochastic_grad: true,
+            train_size: 4096,
+            val_size: 1024,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variant", Json::str(&self.variant)),
+            ("policy", self.policy.to_json()),
+            ("epochs", Json::num(self.epochs as f64)),
+            ("steps_per_epoch", Json::num(self.steps_per_epoch as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("lr", self.lr.to_json()),
+            ("eval_batches", Json::num(self.eval_batches as f64)),
+            ("stochastic_grad", Json::Bool(self.stochastic_grad)),
+            ("train_size", Json::num(self.train_size as f64)),
+            ("val_size", Json::num(self.val_size as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            variant: v.req("variant")?.as_str()?.to_string(),
+            policy: PrecisionPolicy::from_json(v.req("policy")?)?,
+            epochs: v.req("epochs")?.as_usize()?,
+            steps_per_epoch: v.req("steps_per_epoch")?.as_usize()?,
+            seed: v.req("seed")?.as_i64()? as u64,
+            lr: LrSchedule::from_json(v.req("lr")?)?,
+            eval_batches: v.req("eval_batches")?.as_usize()?,
+            stochastic_grad: v.req("stochastic_grad")?.as_bool()?,
+            train_size: v.req("train_size")?.as_usize()?,
+            val_size: v.req("val_size")?.as_usize()?,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().render())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_labels() {
+        assert_eq!(PrecisionPolicy::Fp32.label(), "fp32");
+        assert_eq!(PrecisionPolicy::Hbfp { bits: 6 }.label(), "hbfp6");
+        assert_eq!(PrecisionPolicy::booster(1).label(), "booster4-6(last1)");
+    }
+
+    #[test]
+    fn lr_warmup_and_decay() {
+        let s = LrSchedule {
+            base: 0.1,
+            warmup_steps: 10,
+            decay_at: vec![0.5, 0.75],
+            decay_factor: 0.1,
+        };
+        assert!(s.lr_at(0, 0, 100) < 0.1);
+        assert!((s.lr_at(50, 10, 100) - 0.1).abs() < 1e-12);
+        assert!((s.lr_at(5000, 50, 100) - 0.01).abs() < 1e-12);
+        assert!((s.lr_at(9000, 80, 100) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_sqrt_peaks_at_warmup() {
+        let s = LrSchedule::inverse_sqrt(0.0005, 100);
+        let before = s.lr_at(10, 0, 10);
+        let at = s.lr_at(99, 0, 10);
+        let after = s.lr_at(400, 5, 10);
+        assert!(before < at, "{before} {at}");
+        assert!(after < at, "{after} {at}");
+        assert!((after - 0.0005 * 0.5).abs() < 1e-5); // sqrt(100/400)=0.5
+    }
+
+    #[test]
+    fn json_roundtrip_all_policies() {
+        for p in [
+            PrecisionPolicy::Fp32,
+            PrecisionPolicy::Hbfp { bits: 5 },
+            PrecisionPolicy::HbfpLayers { mid: 4, edge: 6 },
+            PrecisionPolicy::booster(10),
+            PrecisionPolicy::Cyclic {
+                min: 3,
+                max: 8,
+                edge: 8,
+            },
+        ] {
+            let back = PrecisionPolicy::from_json(&p.to_json()).unwrap();
+            assert_eq!(back, p);
+        }
+    }
+
+    #[test]
+    fn config_roundtrip_via_file() {
+        let c = TrainConfig::quick("cnn_bs64", PrecisionPolicy::booster(1));
+        let dir = std::env::temp_dir().join("boosters_test_cfg");
+        let p = dir.join("run.json");
+        c.save(&p).unwrap();
+        let back = TrainConfig::load(&p).unwrap();
+        assert_eq!(back, c);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

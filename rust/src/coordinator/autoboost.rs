@@ -1,0 +1,165 @@
+//! AutoBoost — the paper's §2 hypothesis turned into a controller.
+//!
+//! §2: "After reaching a certain loss value during small mantissa
+//! bitwidth training, switching the tensors to a larger mantissa bitwidth
+//! enables the sensitive fine-tuning performed in the final epochs."
+//! The published Accuracy Booster fixes the switch at the *last epoch*;
+//! this extension (paper future-work territory, exercised by the
+//! `repro ablation` driver and `bench_booster`) triggers the switch
+//! *adaptively* when the validation loss plateaus — no schedule
+//! hyperparameter, same bit-sliced datapath story.
+//!
+//! Trigger: relative improvement of the windowed-mean val loss over the
+//! previous window falls below `min_rel_improvement` for `patience`
+//! consecutive epochs. Once boosted, never un-boosts (matching the
+//! Booster's monotone precision trajectory).
+
+use crate::runtime::StepScalars;
+
+#[derive(Debug, Clone)]
+pub struct AutoBoost {
+    pub low_bits: u32,
+    pub high_bits: u32,
+    /// Epochs per comparison window.
+    pub window: usize,
+    /// Plateau threshold: relative improvement below this counts.
+    pub min_rel_improvement: f64,
+    /// Consecutive plateau epochs required to trigger.
+    pub patience: usize,
+    /// Stochastic gradient rounding below the bypass width.
+    pub stochastic_grad: bool,
+    losses: Vec<f64>,
+    plateau_run: usize,
+    boosted_at: Option<usize>,
+}
+
+impl AutoBoost {
+    pub fn new(low_bits: u32, high_bits: u32) -> Self {
+        Self {
+            low_bits,
+            high_bits,
+            window: 3,
+            min_rel_improvement: 0.02,
+            patience: 2,
+            stochastic_grad: true,
+            losses: Vec::new(),
+            plateau_run: 0,
+            boosted_at: None,
+        }
+    }
+
+    pub fn boosted(&self) -> bool {
+        self.boosted_at.is_some()
+    }
+
+    pub fn boosted_at(&self) -> Option<usize> {
+        self.boosted_at
+    }
+
+    /// Feed the epoch's validation loss; returns true if this epoch ends
+    /// with the controller in the boosted state.
+    pub fn observe(&mut self, epoch: usize, val_loss: f64) -> bool {
+        self.losses.push(val_loss);
+        if self.boosted() {
+            return true;
+        }
+        let w = self.window;
+        if self.losses.len() >= 2 * w {
+            let n = self.losses.len();
+            let recent: f64 = self.losses[n - w..].iter().sum::<f64>() / w as f64;
+            let prior: f64 = self.losses[n - 2 * w..n - w].iter().sum::<f64>() / w as f64;
+            let rel = (prior - recent) / prior.abs().max(1e-12);
+            if rel < self.min_rel_improvement {
+                self.plateau_run += 1;
+            } else {
+                self.plateau_run = 0;
+            }
+            if self.plateau_run >= self.patience {
+                self.boosted_at = Some(epoch);
+            }
+        }
+        self.boosted()
+    }
+
+    /// Mantissa widths for the *next* epoch's steps.
+    pub fn bits(&self) -> (f32, f32) {
+        let mid = if self.boosted() {
+            self.high_bits
+        } else {
+            self.low_bits
+        };
+        (mid as f32, self.high_bits as f32)
+    }
+
+    pub fn scalars(&self, epoch: usize, step: usize) -> StepScalars {
+        let (mid, edge) = self.bits();
+        let seed = (epoch as u32)
+            .wrapping_mul(0x2545F)
+            .wrapping_add(step as u32)
+            % 0xFF_FFFF;
+        StepScalars {
+            bits_mid: mid,
+            bits_edge: edge,
+            rmode_grad: if self.stochastic_grad && mid < 23.0 { 1.0 } else { 0.0 },
+            seed: seed as f32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn does_not_boost_while_improving() {
+        let mut ab = AutoBoost::new(4, 6);
+        for e in 0..20 {
+            // Steady 10% improvement per epoch — never plateaus.
+            let boosted = ab.observe(e, 2.0 * 0.9f64.powi(e as i32));
+            assert!(!boosted, "boosted at epoch {e}");
+            assert_eq!(ab.bits(), (4.0, 6.0));
+        }
+    }
+
+    #[test]
+    fn boosts_on_plateau_and_stays_boosted() {
+        let mut ab = AutoBoost::new(4, 6);
+        let mut boosted_epoch = None;
+        for e in 0..30 {
+            // Improve for 8 epochs, then flatline.
+            let loss = if e < 8 { 2.0 - 0.2 * e as f64 } else { 0.45 };
+            if ab.observe(e, loss) && boosted_epoch.is_none() {
+                boosted_epoch = Some(e);
+            }
+        }
+        let be = boosted_epoch.expect("should boost on plateau");
+        assert!(be >= 8, "boosted too early: {be}");
+        assert!(be < 20, "boosted too late: {be}");
+        assert_eq!(ab.bits(), (6.0, 6.0));
+        assert_eq!(ab.boosted_at(), Some(be));
+    }
+
+    #[test]
+    fn noise_resets_plateau_run() {
+        let mut ab = AutoBoost::new(4, 6);
+        // Alternate plateau-ish and improving windows; patience=2 should
+        // not trip on a single flat epoch.
+        let losses = [2.0, 1.9, 1.8, 1.79, 1.6, 1.5, 1.4, 1.3, 1.2, 1.1];
+        for (e, &l) in losses.iter().enumerate() {
+            ab.observe(e, l);
+        }
+        assert!(!ab.boosted());
+    }
+
+    #[test]
+    fn scalars_reflect_state() {
+        let mut ab = AutoBoost::new(4, 6);
+        assert_eq!(ab.scalars(0, 0).bits_mid, 4.0);
+        assert_eq!(ab.scalars(0, 0).rmode_grad, 1.0);
+        for e in 0..12 {
+            ab.observe(e, 1.0); // immediate plateau
+        }
+        assert!(ab.boosted());
+        assert_eq!(ab.scalars(12, 0).bits_mid, 6.0);
+    }
+}

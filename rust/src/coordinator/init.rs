@@ -1,0 +1,107 @@
+//! Parameter / optimizer-state initialization from manifest init specs.
+//!
+//! The manifest carries `(init kind, scale)` per parameter (computed by
+//! the python model builders: He for convs, Xavier for linears, 0/1 for
+//! biases and norm weights), so runs seed their own weights in pure rust.
+
+use crate::runtime::{Manifest, Tensor, TrainState};
+use crate::util::Rng;
+use anyhow::{anyhow, Result};
+
+/// Materialize one parameter from its spec.
+pub fn init_param(spec: &crate::runtime::ParamSpec, rng: &mut Rng) -> Result<Tensor> {
+    let n = spec.numel();
+    let data: Vec<f32> = match spec.init.as_str() {
+        "zeros" => vec![0.0; n],
+        "ones" => vec![1.0; n],
+        "normal" => (0..n).map(|_| rng.normal_scaled(spec.scale)).collect(),
+        "uniform" => (0..n)
+            .map(|_| rng.uniform_in(-spec.scale, spec.scale) as f32)
+            .collect(),
+        other => return Err(anyhow!("unknown init kind {other}")),
+    };
+    Tensor::from_f32(&spec.shape, data)
+}
+
+/// Initial parameters as host tensors.
+pub fn init_params(manifest: &Manifest, seed: u64) -> Result<Vec<Tensor>> {
+    let mut rng = Rng::new(seed);
+    manifest
+        .params
+        .iter()
+        .map(|s| init_param(s, &mut rng))
+        .collect()
+}
+
+/// Optimizer slots start at zero (momentum buffers, Adam moments, t).
+pub fn init_opt(manifest: &Manifest) -> Vec<Tensor> {
+    manifest
+        .opt
+        .slots
+        .iter()
+        .map(|s| Tensor::zeros(&s.shape))
+        .collect()
+}
+
+/// Full training state (params + optimizer) ready for the engine.
+pub fn init_state(manifest: &Manifest, seed: u64) -> Result<TrainState> {
+    let params = init_params(manifest, seed)?;
+    let opt = init_opt(manifest);
+    TrainState::from_tensors(&params, &opt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParamSpec;
+
+    fn spec(init: &str, scale: f64) -> ParamSpec {
+        ParamSpec {
+            name: "t".into(),
+            shape: vec![64, 32],
+            init: init.into(),
+            scale,
+        }
+    }
+
+    #[test]
+    fn zeros_ones() {
+        let mut rng = Rng::new(0);
+        let z = init_param(&spec("zeros", 0.0), &mut rng).unwrap();
+        assert!(z.as_f32().unwrap().iter().all(|&v| v == 0.0));
+        let o = init_param(&spec("ones", 0.0), &mut rng).unwrap();
+        assert!(o.as_f32().unwrap().iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn normal_has_requested_std() {
+        let mut rng = Rng::new(1);
+        let t = init_param(&spec("normal", 0.05), &mut rng).unwrap();
+        let d = t.as_f32().unwrap();
+        let var: f64 =
+            d.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d.len() as f64;
+        assert!((var.sqrt() - 0.05).abs() < 0.01, "{}", var.sqrt());
+    }
+
+    #[test]
+    fn uniform_bounded() {
+        let mut rng = Rng::new(2);
+        let t = init_param(&spec("uniform", 0.3), &mut rng).unwrap();
+        assert!(t.as_f32().unwrap().iter().all(|&v| v.abs() <= 0.3));
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let mut rng = Rng::new(3);
+        assert!(init_param(&spec("he_but_wrong", 1.0), &mut rng).is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let ta = init_param(&spec("normal", 1.0), &mut a).unwrap();
+        let tb = init_param(&spec("normal", 1.0), &mut b).unwrap();
+        assert_eq!(ta, tb);
+    }
+}

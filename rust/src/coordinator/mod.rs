@@ -1,0 +1,25 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! The Accuracy Booster is, operationally, a *scheduling* idea: run 99.7%
+//! of training arithmetic at HBFP4 and switch the mantissa width to 6 for
+//! (a) the first/last layers always and (b) every layer in the final
+//! epoch(s). This module owns that decision loop:
+//!
+//! * [`PrecisionScheduler`] maps (policy, epoch) -> the runtime scalars
+//!   `{bits_mid, bits_edge, rmode, seed}` the AOT-compiled step function
+//!   consumes — the software analogue of bit-slicing HBFP6 ops onto an
+//!   HBFP4 datapath without recompilation or retuning.
+//! * [`Trainer`] drives epochs: shuffle -> train steps -> eval, with the
+//!   LR schedule and metrics capture.
+//! * [`init`] materializes initial parameters/optimizer state from the
+//!   manifest's init specs with a seeded RNG (no python at run time).
+
+pub mod autoboost;
+pub mod init;
+pub mod precision;
+pub mod trainer;
+
+pub use autoboost::AutoBoost;
+pub use init::init_state;
+pub use precision::PrecisionScheduler;
+pub use trainer::{RunResult, Trainer, TrainerData};

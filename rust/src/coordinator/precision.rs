@@ -1,0 +1,217 @@
+//! The epoch-driven mixed-mantissa scheduler (the Accuracy Booster).
+
+use crate::config::PrecisionPolicy;
+use crate::runtime::StepScalars;
+
+/// FP32-bypass mantissa width (>= 23 per the quantizer contract).
+pub const FP32_BITS: f32 = 32.0;
+
+/// Decides the per-step precision scalars from the policy and the
+/// training clock. Stateless; the trainer queries it each step.
+#[derive(Debug, Clone)]
+pub struct PrecisionScheduler {
+    policy: PrecisionPolicy,
+    total_epochs: usize,
+    stochastic_grad: bool,
+}
+
+impl PrecisionScheduler {
+    pub fn new(policy: PrecisionPolicy, total_epochs: usize, stochastic_grad: bool) -> Self {
+        Self {
+            policy,
+            total_epochs,
+            stochastic_grad,
+        }
+    }
+
+    pub fn policy(&self) -> &PrecisionPolicy {
+        &self.policy
+    }
+
+    /// Mantissa widths (mid, edge) for a given epoch.
+    pub fn bits_at(&self, epoch: usize) -> (f32, f32) {
+        match &self.policy {
+            PrecisionPolicy::Fp32 => (FP32_BITS, FP32_BITS),
+            PrecisionPolicy::Hbfp { bits } => (*bits as f32, *bits as f32),
+            PrecisionPolicy::HbfpLayers { mid, edge } => (*mid as f32, *edge as f32),
+            PrecisionPolicy::Booster {
+                low,
+                high,
+                boost_epochs,
+            } => {
+                // Edge layers always high; middle layers switch to high
+                // for the final `boost_epochs` epochs.
+                let boosted = epoch + boost_epochs >= self.total_epochs;
+                let mid = if boosted { *high } else { *low };
+                (mid as f32, *high as f32)
+            }
+            PrecisionPolicy::Cyclic { min, max, edge } => {
+                // Triangular cycle over epochs (CPT-style baseline).
+                let span = (max - min) as f32;
+                let period = 8.0f32;
+                let phase = (epoch as f32 % period) / period;
+                let tri = if phase < 0.5 {
+                    2.0 * phase
+                } else {
+                    2.0 - 2.0 * phase
+                };
+                ((*min as f32 + span * tri).round(), *edge as f32)
+            }
+        }
+    }
+
+    /// Whether epoch runs in the boosted (high-precision) phase.
+    pub fn is_boosted(&self, epoch: usize) -> bool {
+        match &self.policy {
+            PrecisionPolicy::Booster { boost_epochs, .. } => {
+                epoch + boost_epochs >= self.total_epochs
+            }
+            _ => false,
+        }
+    }
+
+    /// Full scalar set for one training step. The seed folds epoch and
+    /// step so every stochastic-rounding draw in the run is unique.
+    pub fn scalars_at(&self, epoch: usize, step: usize) -> StepScalars {
+        let (mid, edge) = self.bits_at(epoch);
+        let rmode = if self.stochastic_grad && mid < 23.0 {
+            1.0
+        } else {
+            0.0
+        };
+        // 16M steps per epoch headroom inside the f32-exact u24 window.
+        let seed = (epoch as u32)
+            .wrapping_mul(0x2545F)
+            .wrapping_add(step as u32)
+            % 0xFF_FFFF;
+        StepScalars {
+            bits_mid: mid,
+            bits_edge: edge,
+            rmode_grad: rmode,
+            seed: seed as f32,
+        }
+    }
+
+    /// Scalars for evaluation: deterministic (nearest) rounding.
+    pub fn eval_scalars(&self, epoch: usize) -> StepScalars {
+        let (mid, edge) = self.bits_at(epoch);
+        StepScalars {
+            bits_mid: mid,
+            bits_edge: edge,
+            rmode_grad: 0.0,
+            seed: 0.0,
+        }
+    }
+
+    /// Fraction of training arithmetic executed at the low mantissa width
+    /// (the paper's 99.7% claim): approximated as the epoch fraction times
+    /// the non-edge compute fraction.
+    pub fn low_precision_fraction(&self, edge_flop_fraction: f64) -> f64 {
+        match &self.policy {
+            PrecisionPolicy::Booster { boost_epochs, .. } => {
+                let epoch_frac =
+                    1.0 - (*boost_epochs.min(&self.total_epochs) as f64) / self.total_epochs as f64;
+                epoch_frac * (1.0 - edge_flop_fraction)
+            }
+            PrecisionPolicy::Hbfp { .. } => 1.0,
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn booster_switches_last_epoch_only() {
+        let s = PrecisionScheduler::new(PrecisionPolicy::booster(1), 20, true);
+        for e in 0..19 {
+            assert_eq!(s.bits_at(e), (4.0, 6.0), "epoch {e}");
+            assert!(!s.is_boosted(e));
+        }
+        assert_eq!(s.bits_at(19), (6.0, 6.0));
+        assert!(s.is_boosted(19));
+    }
+
+    #[test]
+    fn booster_last_10() {
+        let s = PrecisionScheduler::new(
+            PrecisionPolicy::Booster {
+                low: 4,
+                high: 6,
+                boost_epochs: 10,
+            },
+            160,
+            true,
+        );
+        assert_eq!(s.bits_at(149), (4.0, 6.0));
+        assert_eq!(s.bits_at(150), (6.0, 6.0));
+        assert_eq!(s.bits_at(159), (6.0, 6.0));
+    }
+
+    #[test]
+    fn fp32_never_quantizes_and_never_stochastic() {
+        let s = PrecisionScheduler::new(PrecisionPolicy::Fp32, 10, true);
+        let sc = s.scalars_at(3, 5);
+        assert!(sc.bits_mid >= 23.0 && sc.bits_edge >= 23.0);
+        assert_eq!(sc.rmode_grad, 0.0);
+    }
+
+    #[test]
+    fn hbfp_uses_stochastic_grads_when_asked() {
+        let s = PrecisionScheduler::new(PrecisionPolicy::Hbfp { bits: 4 }, 10, true);
+        assert_eq!(s.scalars_at(0, 0).rmode_grad, 1.0);
+        let s2 = PrecisionScheduler::new(PrecisionPolicy::Hbfp { bits: 4 }, 10, false);
+        assert_eq!(s2.scalars_at(0, 0).rmode_grad, 0.0);
+    }
+
+    #[test]
+    fn eval_is_deterministic() {
+        let s = PrecisionScheduler::new(PrecisionPolicy::booster(1), 10, true);
+        let sc = s.eval_scalars(3);
+        assert_eq!(sc.rmode_grad, 0.0);
+        assert_eq!(sc.seed, 0.0);
+        assert_eq!((sc.bits_mid, sc.bits_edge), (4.0, 6.0));
+    }
+
+    #[test]
+    fn seeds_unique_across_steps_and_epochs() {
+        let s = PrecisionScheduler::new(PrecisionPolicy::Hbfp { bits: 4 }, 10, true);
+        let mut seen = std::collections::HashSet::new();
+        for e in 0..10 {
+            for st in 0..50 {
+                assert!(seen.insert(s.scalars_at(e, st).seed.to_bits()));
+            }
+        }
+    }
+
+    #[test]
+    fn paper_low_precision_fraction() {
+        // ResNet20 on CIFAR10: 160 epochs, booster(last 1), edge layers
+        // ~1.08% of FLOPs -> ~98.3% of ops at HBFP4; the paper's 99.7%
+        // is the average over its (larger) model zoo where edge layers
+        // are 0.27-0.39%.
+        let s = PrecisionScheduler::new(PrecisionPolicy::booster(1), 160, true);
+        let f = s.low_precision_fraction(0.0027);
+        assert!(f > 0.99, "{f}");
+    }
+
+    #[test]
+    fn cyclic_stays_in_band() {
+        let s = PrecisionScheduler::new(
+            PrecisionPolicy::Cyclic {
+                min: 3,
+                max: 8,
+                edge: 8,
+            },
+            32,
+            true,
+        );
+        for e in 0..32 {
+            let (mid, edge) = s.bits_at(e);
+            assert!((3.0..=8.0).contains(&mid), "epoch {e}: {mid}");
+            assert_eq!(edge, 8.0);
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! The training orchestrator: epoch loop over the AOT-compiled step
+//! function, with the precision scheduler in the driver's seat.
+
+use crate::config::TrainConfig;
+use crate::data::{Batcher, ImageDataset, ImageGenSpec, TextDataset, TextGenSpec};
+use crate::metrics::{corpus_bleu, EpochStats, RunHistory};
+use crate::runtime::{Engine, ModelVariant, StepScalars, Tensor, TrainState};
+use crate::util::{Rng, Stopwatch};
+use anyhow::{anyhow, Result};
+
+use super::init::init_state;
+use super::precision::PrecisionScheduler;
+
+/// Dataset wrapper: images (mlp/cnn) or token sequences (transformer).
+pub enum TrainerData {
+    Images(ImageDataset),
+    Text(TextDataset),
+}
+
+impl TrainerData {
+    /// Build the dataset matching a variant's manifest. MLP variants view
+    /// the image task as flattened patches at their input width.
+    pub fn for_variant(variant: &ModelVariant, cfg: &TrainConfig) -> Result<Self> {
+        let m = &variant.manifest;
+        match m.model.as_str() {
+            "cnn" => Ok(TrainerData::Images(ImageDataset::generate(
+                ImageGenSpec {
+                    image: m.input_shape[0],
+                    classes: m.num_classes,
+                    train_size: cfg.train_size,
+                    val_size: cfg.val_size,
+                    ..Default::default()
+                },
+                cfg.seed ^ 0xDA7A,
+            ))),
+            "mlp" => {
+                // MLP input is a flat patch; synthesize 4x4x3 images.
+                let side = ((m.input_shape[0] / 3) as f64).sqrt() as usize;
+                if side * side * 3 != m.input_shape[0] {
+                    return Err(anyhow!("mlp input {} not a HWC patch", m.input_shape[0]));
+                }
+                Ok(TrainerData::Images(ImageDataset::generate(
+                    ImageGenSpec {
+                        image: side,
+                        classes: m.num_classes,
+                        noise: 0.25,
+                        train_size: cfg.train_size,
+                        val_size: cfg.val_size,
+                    },
+                    cfg.seed ^ 0xDA7A,
+                )))
+            }
+            "transformer" => Ok(TrainerData::Text(TextDataset::generate(
+                TextGenSpec {
+                    train_size: cfg.train_size,
+                    val_size: cfg.val_size,
+                    ..Default::default()
+                },
+                cfg.seed ^ 0x7E97,
+            ))),
+            other => Err(anyhow!("unknown model kind {other}")),
+        }
+    }
+
+    pub fn train_size(&self) -> usize {
+        match self {
+            TrainerData::Images(d) => d.train_y.len(),
+            TrainerData::Text(d) => d.train_src.len() / d.spec.src_len,
+        }
+    }
+
+    pub fn val_size(&self) -> usize {
+        match self {
+            TrainerData::Images(d) => d.val_y.len(),
+            TrainerData::Text(d) => d.val_src.len() / d.spec.src_len,
+        }
+    }
+
+    pub fn batch(&self, idx: &[usize], val: bool) -> (Tensor, Tensor) {
+        match self {
+            TrainerData::Images(d) => d.batch(idx, val),
+            TrainerData::Text(d) => d.batch(idx, val),
+        }
+    }
+}
+
+/// Result of one training run.
+pub struct RunResult {
+    pub history: RunHistory,
+    pub params: Vec<Tensor>,
+    pub state: TrainState,
+}
+
+impl RunResult {
+    pub fn final_val_acc(&self) -> f64 {
+        self.history.final_val_acc()
+    }
+}
+
+/// Epoch-loop driver. Owns nothing heavier than references; the engine
+/// and datasets are supplied by the caller so sweeps can share them.
+pub struct Trainer<'a> {
+    pub engine: &'a Engine,
+    pub variant: &'a ModelVariant,
+    pub data: &'a TrainerData,
+    pub cfg: TrainConfig,
+    /// Per-epoch callback (progress printing); epoch stats are final.
+    pub on_epoch: Option<Box<dyn Fn(&EpochStats) + 'a>>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        variant: &'a ModelVariant,
+        data: &'a TrainerData,
+        cfg: TrainConfig,
+    ) -> Self {
+        Self {
+            engine,
+            variant,
+            data,
+            cfg,
+            on_epoch: None,
+        }
+    }
+
+    pub fn with_progress(mut self, f: impl Fn(&EpochStats) + 'a) -> Self {
+        self.on_epoch = Some(Box::new(f));
+        self
+    }
+
+    /// Evaluate current params over `eval_batches` fixed validation
+    /// batches; returns (loss, metric) averages.
+    pub fn evaluate(&self, state: &TrainState, scalars: StepScalars) -> Result<(f64, f64)> {
+        let batch = self.variant.manifest.batch;
+        let n_batches = self
+            .cfg
+            .eval_batches
+            .min(self.data.val_size() / batch)
+            .max(1);
+        let mut loss = 0.0;
+        let mut acc = 0.0;
+        for b in Batcher::sequential(n_batches * batch, batch) {
+            let (x, y) = self.data.batch(&b, true);
+            let s = self.engine.eval_batch(self.variant, state, &x, &y, scalars)?;
+            loss += s.loss as f64;
+            acc += s.metric as f64;
+        }
+        Ok((loss / n_batches as f64, acc / n_batches as f64))
+    }
+
+    /// Run the full schedule; returns history + final parameters.
+    pub fn run(&self) -> Result<RunResult> {
+        let m = &self.variant.manifest;
+        let mut state = init_state(m, self.cfg.seed)?;
+        let sched = PrecisionScheduler::new(
+            self.cfg.policy.clone(),
+            self.cfg.epochs,
+            self.cfg.stochastic_grad,
+        );
+        let mut batcher = Batcher::new(self.data.train_size(), m.batch);
+        let steps = self
+            .cfg
+            .steps_per_epoch
+            .min(batcher.batches_per_epoch())
+            .max(1);
+        let mut rng = Rng::new(self.cfg.seed ^ 0x5FF1E);
+        let mut history = RunHistory::new(format!("{}/{}", m.variant, self.cfg.policy.label()));
+        let mut global_step = 0usize;
+
+        for epoch in 0..self.cfg.epochs {
+            let sw = Stopwatch::start();
+            batcher.shuffle(&mut rng);
+            let mut tr_loss = 0.0;
+            let mut tr_acc = 0.0;
+            let mut lr_last = 0.0;
+            for s in 0..steps {
+                let (x, y) = self.data.batch(batcher.batch_indices(s), false);
+                let scalars = sched.scalars_at(epoch, global_step);
+                let lr = self
+                    .cfg
+                    .lr
+                    .lr_at(global_step, epoch, self.cfg.epochs) as f32;
+                lr_last = lr as f64;
+                let stats = self
+                    .engine
+                    .train_step(self.variant, &mut state, &x, &y, scalars, lr)?;
+                tr_loss += stats.loss as f64;
+                tr_acc += stats.metric as f64;
+                global_step += 1;
+            }
+            let eval_sc = sched.eval_scalars(epoch);
+            let (val_loss, val_acc) = self.evaluate(&state, eval_sc)?;
+            let (bits_mid, bits_edge) = sched.bits_at(epoch);
+            let e = EpochStats {
+                epoch,
+                train_loss: tr_loss / steps as f64,
+                train_acc: tr_acc / steps as f64,
+                val_loss,
+                val_acc,
+                lr: lr_last,
+                bits_mid,
+                bits_edge,
+                wall_secs: sw.secs(),
+            };
+            if let Some(cb) = &self.on_epoch {
+                cb(&e);
+            }
+            history.push(e);
+        }
+
+        let params = state.params_to_tensors()?;
+        Ok(RunResult {
+            history,
+            params,
+            state,
+        })
+    }
+}
+
+/// Greedy-decode the validation set and score corpus BLEU (Table 3).
+pub fn evaluate_bleu(
+    engine: &Engine,
+    variant: &ModelVariant,
+    state: &TrainState,
+    data: &TextDataset,
+    n_batches: usize,
+    scalars: StepScalars,
+) -> Result<f64> {
+    let batch = variant.manifest.batch;
+    let dec = variant
+        .manifest
+        .decode
+        .as_ref()
+        .ok_or_else(|| anyhow!("variant has no decode info"))?;
+    let n_batches = n_batches.min(data.val_src.len() / data.spec.src_len / batch).max(1);
+    let mut hyps = Vec::new();
+    let mut refs = Vec::new();
+    for b in Batcher::sequential(n_batches * batch, batch) {
+        let (src, r) = data.decode_batch(&b, true);
+        let out = engine.decode(variant, state, &src, scalars)?;
+        let toks = out.as_i32()?;
+        for row in toks.chunks(dec.out_len) {
+            hyps.push(row.to_vec());
+        }
+        refs.extend(r);
+    }
+    Ok(corpus_bleu(&hyps, &refs, Some(dec.eos)).bleu)
+}

@@ -1,0 +1,84 @@
+//! Epoch batching: shuffled fixed-size index batches (drop-last, since the
+//! AOT artifacts bake the batch dimension).
+
+use crate::util::Rng;
+
+pub struct Batcher {
+    n: usize,
+    batch: usize,
+    order: Vec<usize>,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize) -> Self {
+        Self {
+            n,
+            batch,
+            order: (0..n).collect(),
+        }
+    }
+
+    /// Reshuffle for a new epoch with a per-epoch RNG stream.
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        rng.shuffle(&mut self.order);
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.n / self.batch
+    }
+
+    /// Index slice for batch `i` of the current epoch order.
+    pub fn batch_indices(&self, i: usize) -> &[usize] {
+        let start = i * self.batch;
+        &self.order[start..start + self.batch]
+    }
+
+    /// Sequential (unshuffled) batches over the first `n` items — used for
+    /// validation so every eval sees the same examples.
+    pub fn sequential(n: usize, batch: usize) -> Vec<Vec<usize>> {
+        (0..n / batch)
+            .map(|i| (i * batch..(i + 1) * batch).collect())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_cover_without_replacement() {
+        let mut b = Batcher::new(100, 16);
+        let mut rng = Rng::new(4);
+        b.shuffle(&mut rng);
+        assert_eq!(b.batches_per_epoch(), 6);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..b.batches_per_epoch() {
+            for &ix in b.batch_indices(i) {
+                assert!(seen.insert(ix), "duplicate {ix}");
+                assert!(ix < 100);
+            }
+        }
+        assert_eq!(seen.len(), 96); // drop-last
+    }
+
+    #[test]
+    fn sequential_is_ordered() {
+        let bs = Batcher::sequential(64, 32);
+        assert_eq!(bs.len(), 2);
+        assert_eq!(bs[0], (0..32).collect::<Vec<_>>());
+        assert_eq!(bs[1], (32..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shuffle_changes_order_but_not_set() {
+        let mut b = Batcher::new(50, 10);
+        let before = b.order.clone();
+        let mut rng = Rng::new(1);
+        b.shuffle(&mut rng);
+        assert_ne!(b.order, before);
+        let mut s = b.order.clone();
+        s.sort();
+        assert_eq!(s, before);
+    }
+}

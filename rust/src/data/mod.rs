@@ -1,0 +1,23 @@
+//! Synthetic dataset substrates (DESIGN.md §3 substitutions).
+//!
+//! The paper trains on CIFAR10/100 and IWSLT'14 De-En — multi-GPU-day
+//! workloads. We substitute deterministic synthetic tasks that exercise
+//! the *same code paths* (conv/residual/softmax pipelines; attention
+//! seq2seq + BLEU) at laptop scale while keeping format-induced accuracy
+//! degradation measurable and ordered:
+//!
+//! * [`synth_images`] — class-conditional oriented-grating images
+//!   (the CIFAR stand-in),
+//! * [`synth_text`] — a deterministic token-mapping + reversal
+//!   transduction grammar (the IWSLT stand-in).
+//!
+//! Everything is generated from a [`crate::util::Rng`] seed: no files, no
+//! downloads, bit-reproducible runs.
+
+pub mod batcher;
+pub mod synth_images;
+pub mod synth_text;
+
+pub use batcher::Batcher;
+pub use synth_images::{ImageDataset, ImageGenSpec};
+pub use synth_text::{TextDataset, TextGenSpec};

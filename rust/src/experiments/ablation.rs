@@ -1,0 +1,193 @@
+//! Ablation driver — the design-choice studies DESIGN.md calls out:
+//!
+//!  * **Schedule family**: fixed Booster (paper) vs AutoBoost (adaptive,
+//!    loss-plateau-triggered — §2's hypothesis operationalized) vs cyclic
+//!    precision (CPT-style related-work baseline) vs plain HBFP4.
+//!  * **Boost placement**: boosting the FIRST epochs instead of the last
+//!    (tests the frequency-principle claim that the *end* of training is
+//!    what needs mantissa).
+//!  * **Edge-layer ablation**: Booster without the first/last-layer
+//!    HBFP6 override.
+//!
+//! Uses the same AOT artifact for every arm — only runtime scalars move.
+
+use crate::config::PrecisionPolicy;
+use crate::coordinator::{init_state, AutoBoost, Trainer, TrainerData};
+use crate::experiments::common::{config_for, run_one, Preset};
+use crate::metrics::{EpochStats, RunHistory};
+use crate::report::{fmt_pct, results_dir, Table};
+use crate::runtime::Engine;
+use crate::util::{Rng, Stopwatch};
+use anyhow::Result;
+use std::path::Path;
+
+/// A Booster that boosts the FIRST k epochs instead of the last (the
+/// wrong-way control for the frequency-principle argument).
+fn inverse_booster_bits(epoch: usize, boost_epochs: usize) -> (f32, f32) {
+    if epoch < boost_epochs {
+        (6.0, 6.0)
+    } else {
+        (4.0, 6.0)
+    }
+}
+
+/// Manual epoch loop for the two arms the PrecisionScheduler does not
+/// cover (AutoBoost and the inverse Booster).
+#[allow(clippy::too_many_arguments)]
+fn run_custom(
+    engine: &Engine,
+    variant: &crate::runtime::ModelVariant,
+    data: &TrainerData,
+    cfg: &crate::config::TrainConfig,
+    label: &str,
+    mut bits_for_epoch: impl FnMut(usize, f64) -> (f32, f32),
+) -> Result<RunHistory> {
+    let m = &variant.manifest;
+    let mut state = init_state(m, cfg.seed)?;
+    let mut batcher = crate::data::Batcher::new(data.train_size(), m.batch);
+    let steps = cfg.steps_per_epoch.min(batcher.batches_per_epoch()).max(1);
+    let mut rng = Rng::new(cfg.seed ^ 0x5FF1E);
+    let mut history = RunHistory::new(label.to_string());
+    let mut global_step = 0usize;
+    let mut last_val_loss = f64::INFINITY;
+
+    for epoch in 0..cfg.epochs {
+        let sw = Stopwatch::start();
+        batcher.shuffle(&mut rng);
+        let (bits_mid, bits_edge) = bits_for_epoch(epoch, last_val_loss);
+        let mut tr_loss = 0.0;
+        let mut tr_acc = 0.0;
+        let mut lr_last = 0.0;
+        for s in 0..steps {
+            let (x, y) = data.batch(batcher.batch_indices(s), false);
+            let lr = cfg.lr.lr_at(global_step, epoch, cfg.epochs) as f32;
+            lr_last = lr as f64;
+            let seed = (epoch * 100_003 + s) as u32 % 0xFF_FFFF;
+            let scalars = crate::runtime::StepScalars {
+                bits_mid,
+                bits_edge,
+                rmode_grad: if bits_mid < 23.0 { 1.0 } else { 0.0 },
+                seed: seed as f32,
+            };
+            let st = engine.train_step(variant, &mut state, &x, &y, scalars, lr)?;
+            tr_loss += st.loss as f64;
+            tr_acc += st.metric as f64;
+            global_step += 1;
+        }
+        // Eval with this epoch's precision, deterministic rounding.
+        let eval_sc = crate::runtime::StepScalars {
+            bits_mid,
+            bits_edge,
+            rmode_grad: 0.0,
+            seed: 0.0,
+        };
+        let trainer = Trainer::new(engine, variant, data, cfg.clone());
+        let (val_loss, val_acc) = trainer.evaluate(&state, eval_sc)?;
+        last_val_loss = val_loss;
+        history.push(EpochStats {
+            epoch,
+            train_loss: tr_loss / steps as f64,
+            train_acc: tr_acc / steps as f64,
+            val_loss,
+            val_acc,
+            lr: lr_last,
+            bits_mid,
+            bits_edge,
+            wall_secs: sw.secs(),
+        });
+    }
+    Ok(history)
+}
+
+pub fn run(engine: &Engine, artifacts: &Path, model: &str, preset: Preset) -> Result<Table> {
+    let v = engine.load_variant_by_name(artifacts, &format!("{model}_bs64"))?;
+    let cfg = config_for(&v, PrecisionPolicy::booster(1), preset);
+    let data = TrainerData::for_variant(&v, &cfg)?;
+    let boost_k = (cfg.epochs / 8).max(1);
+
+    let mut table = Table::new(
+        &format!("Ablations — schedule design choices, {model} @ block 64"),
+        &["arm", "final_val_acc", "best_val_acc", "boost_epochs_used"],
+    );
+
+    // Paper arms via the standard scheduler.
+    for policy in [
+        PrecisionPolicy::Hbfp { bits: 4 },
+        PrecisionPolicy::Booster {
+            low: 4,
+            high: 6,
+            boost_epochs: boost_k,
+        },
+        PrecisionPolicy::Cyclic {
+            min: 4,
+            max: 6,
+            edge: 6,
+        },
+    ] {
+        let c = config_for(&v, policy.clone(), preset);
+        println!("[ablation] {} ...", policy.label());
+        let (acc, hist, _) = run_one(engine, &v, &data, c, false)?;
+        table.row(vec![
+            policy.label(),
+            fmt_pct(acc),
+            fmt_pct(hist.best_val_acc()),
+            if matches!(policy, PrecisionPolicy::Booster { .. }) {
+                boost_k.to_string()
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+
+    // AutoBoost: adaptive switch on val-loss plateau.
+    println!("[ablation] autoboost ...");
+    let mut ab = AutoBoost::new(4, 6);
+    ab.window = 2;
+    ab.patience = 1;
+    let hist = run_custom(engine, &v, &data, &cfg, "autoboost", |epoch, last_loss| {
+        if epoch > 0 {
+            ab.observe(epoch - 1, last_loss);
+        }
+        ab.bits()
+    })?;
+    hist.write_csv(&results_dir().join(format!("ablation_autoboost_{model}.csv")))?;
+    table.row(vec![
+        "autoboost4-6(plateau)".into(),
+        fmt_pct(hist.final_val_acc()),
+        fmt_pct(hist.best_val_acc()),
+        ab.boosted_at()
+            .map(|e| format!("from ep{e}"))
+            .unwrap_or_else(|| "never".into()),
+    ]);
+
+    // Inverse Booster: boost the FIRST epochs (control).
+    println!("[ablation] inverse booster ...");
+    let hist = run_custom(engine, &v, &data, &cfg, "inverse", |epoch, _| {
+        inverse_booster_bits(epoch, boost_k)
+    })?;
+    table.row(vec![
+        format!("inverse-booster(first{boost_k})"),
+        fmt_pct(hist.final_val_acc()),
+        fmt_pct(hist.best_val_acc()),
+        boost_k.to_string(),
+    ]);
+
+    // Booster without edge-layer override (edge runs at 4 bits too).
+    println!("[ablation] booster w/o edge layers ...");
+    let hist = run_custom(engine, &v, &data, &cfg, "noedge", |epoch, _| {
+        if epoch + boost_k >= cfg.epochs {
+            (6.0, 6.0)
+        } else {
+            (4.0, 4.0)
+        }
+    })?;
+    table.row(vec![
+        "booster-no-edge-override".into(),
+        fmt_pct(hist.final_val_acc()),
+        fmt_pct(hist.best_val_acc()),
+        boost_k.to_string(),
+    ]);
+
+    table.write_csv(&results_dir().join(format!("ablation_{model}.csv")))?;
+    Ok(table)
+}

@@ -1,0 +1,165 @@
+//! Shared experiment plumbing: presets, policy parsing, run helpers.
+
+use crate::config::{LrSchedule, PrecisionPolicy, TrainConfig};
+use crate::coordinator::{Trainer, TrainerData};
+use crate::metrics::RunHistory;
+use crate::runtime::{Engine, ModelVariant};
+use anyhow::{anyhow, Result};
+
+/// Experiment scale. The paper trains 160-300 epochs on CIFAR; `Quick`
+/// validates the shape in ~minutes, `Full` is the EXPERIMENTS.md setting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Preset {
+    Quick,
+    Full,
+}
+
+impl Preset {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "quick" => Ok(Preset::Quick),
+            "full" => Ok(Preset::Full),
+            other => Err(anyhow!("unknown preset {other} (quick|full)")),
+        }
+    }
+
+    /// (epochs, steps_per_epoch) per model family.
+    pub fn schedule(&self, model: &str) -> (usize, usize) {
+        match (self, model) {
+            (Preset::Quick, "mlp") => (8, 16),
+            (Preset::Quick, "cnn") => (8, 16),
+            (Preset::Quick, "transformer") => (12, 32),
+            (Preset::Full, "mlp") => (20, 30),
+            (Preset::Full, "cnn") => (18, 30),
+            (Preset::Full, "transformer") => (40, 64),
+            _ => (8, 16),
+        }
+    }
+
+    pub fn block_sizes(&self) -> &'static [usize] {
+        match self {
+            Preset::Quick => &[16, 64, 576],
+            Preset::Full => &[16, 25, 36, 49, 64, 256, 576],
+        }
+    }
+}
+
+/// Parse CLI policy strings: fp32 | hbfpN | hbfpN+layersM | boosterK |
+/// cyclicMIN-MAX.
+pub fn parse_policy(s: &str) -> Result<PrecisionPolicy> {
+    if s == "fp32" {
+        return Ok(PrecisionPolicy::Fp32);
+    }
+    if let Some(rest) = s.strip_prefix("booster") {
+        let k: usize = if rest.is_empty() { 1 } else { rest.parse()? };
+        return Ok(PrecisionPolicy::booster(k));
+    }
+    if let Some(rest) = s.strip_prefix("cyclic") {
+        let (a, b) = rest
+            .split_once('-')
+            .ok_or_else(|| anyhow!("cyclic needs MIN-MAX"))?;
+        return Ok(PrecisionPolicy::Cyclic {
+            min: a.parse()?,
+            max: b.parse()?,
+            edge: 8,
+        });
+    }
+    if let Some(rest) = s.strip_prefix("hbfp") {
+        if let Some((mid, edge)) = rest.split_once("+layers") {
+            return Ok(PrecisionPolicy::HbfpLayers {
+                mid: mid.parse()?,
+                edge: edge.parse()?,
+            });
+        }
+        return Ok(PrecisionPolicy::Hbfp { bits: rest.parse()? });
+    }
+    Err(anyhow!("unknown policy {s}"))
+}
+
+/// Default TrainConfig for (variant, policy, preset).
+pub fn config_for(variant: &ModelVariant, policy: PrecisionPolicy, preset: Preset) -> TrainConfig {
+    let m = &variant.manifest;
+    let (epochs, steps) = preset.schedule(&m.model);
+    let lr = if m.model == "transformer" {
+        LrSchedule::inverse_sqrt(0.003, 60)
+    } else {
+        LrSchedule {
+            base: 0.08,
+            warmup_steps: 20,
+            decay_at: vec![0.5, 0.75],
+            decay_factor: 0.1,
+        }
+    };
+    TrainConfig {
+        variant: m.variant.clone(),
+        policy,
+        epochs,
+        steps_per_epoch: steps,
+        seed: 42,
+        lr,
+        eval_batches: 6,
+        stochastic_grad: true,
+        train_size: (steps * m.batch).max(1024),
+        val_size: (6 * m.batch).max(512),
+    }
+}
+
+/// Train one configuration and return (final val metric, history).
+pub fn run_one(
+    engine: &Engine,
+    variant: &ModelVariant,
+    data: &TrainerData,
+    cfg: TrainConfig,
+    verbose: bool,
+) -> Result<(f64, RunHistory, crate::coordinator::RunResult)> {
+    let label = format!("{}/{}", variant.manifest.variant, cfg.policy.label());
+    let trainer = if verbose {
+        let l = label.clone();
+        Trainer::new(engine, variant, data, cfg).with_progress(move |e| {
+            println!(
+                "  [{l}] epoch {:>3}  train_loss {:.4}  val_acc {:.4}  bits {}/{}  ({:.1}s)",
+                e.epoch, e.train_loss, e.val_acc, e.bits_mid, e.bits_edge, e.wall_secs
+            );
+        })
+    } else {
+        Trainer::new(engine, variant, data, cfg)
+    };
+    let result = trainer.run()?;
+    Ok((result.final_val_acc(), result.history.clone(), result))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(parse_policy("fp32").unwrap(), PrecisionPolicy::Fp32);
+        assert_eq!(
+            parse_policy("hbfp6").unwrap(),
+            PrecisionPolicy::Hbfp { bits: 6 }
+        );
+        assert_eq!(
+            parse_policy("hbfp4+layers6").unwrap(),
+            PrecisionPolicy::HbfpLayers { mid: 4, edge: 6 }
+        );
+        assert_eq!(parse_policy("booster").unwrap(), PrecisionPolicy::booster(1));
+        assert_eq!(
+            parse_policy("booster10").unwrap(),
+            PrecisionPolicy::booster(10)
+        );
+        assert!(matches!(
+            parse_policy("cyclic3-8").unwrap(),
+            PrecisionPolicy::Cyclic { min: 3, max: 8, .. }
+        ));
+        assert!(parse_policy("nonsense").is_err());
+    }
+
+    #[test]
+    fn presets() {
+        assert_eq!(Preset::parse("quick").unwrap(), Preset::Quick);
+        assert_eq!(Preset::Quick.block_sizes().len(), 3);
+        assert_eq!(Preset::Full.block_sizes().len(), 7);
+        assert!(Preset::Full.schedule("cnn").0 > Preset::Quick.schedule("cnn").0);
+    }
+}

@@ -1,0 +1,234 @@
+//! Figure drivers: Fig 1 (Wasserstein), Fig 2/5 (loss landscapes),
+//! Fig 4 (seed error bars), Fig 6 (area ratio sweep) and the §4.2
+//! density headline.
+
+use crate::analysis::{filter_normalized_direction, landscape::alpha_grid, landscape_1d, layer_sweep};
+use crate::analysis::wasserstein_sweep::fig1_layers;
+use crate::checkpoint::Checkpoint;
+use crate::config::PrecisionPolicy;
+use crate::coordinator::{PrecisionScheduler, TrainerData};
+use crate::experiments::common::{config_for, run_one, Preset};
+use crate::hw_model::{area_gain_hbfp, bf16_gain, booster_density, fig6_series};
+use crate::metrics::r_squared;
+use crate::report::{results_dir, Table};
+use crate::runtime::Engine;
+use crate::util::Rng;
+use anyhow::Result;
+use std::path::Path;
+
+/// Fig 1 — Wasserstein distances of HBFP6/HBFP4 weight tensors vs FP32
+/// for four layers of a *trained* FP32 CNN, across block sizes.
+pub fn fig1(engine: &Engine, artifacts: &Path, preset: Preset) -> Result<Table> {
+    let v = engine.load_variant_by_name(artifacts, "cnn_bs64")?;
+    let cfg = config_for(&v, PrecisionPolicy::Fp32, preset);
+    let data = TrainerData::for_variant(&v, &cfg)?;
+    println!("[fig1] training FP32 reference model ...");
+    let (_, _, result) = run_one(engine, &v, &data, cfg, false)?;
+    let names: Vec<String> = v.manifest.params.iter().map(|p| p.name.clone()).collect();
+    let ck = Checkpoint::new(names.clone(), result.params.clone());
+    ck.save(&results_dir().join("fig1_fp32_cnn.ck"))?;
+
+    let layers = fig1_layers(&names);
+    let layer_refs: Vec<&str> = layers.iter().map(|s| s.as_str()).collect();
+    let blocks: Vec<usize> = preset.block_sizes().to_vec();
+    let points = layer_sweep(&ck, &layer_refs, &[6, 4], &blocks);
+
+    let mut table = Table::new(
+        "Fig 1 — Wasserstein distance to FP32 (trained CNN weights)",
+        &["layer", "format", "block", "wasserstein"],
+    );
+    for p in &points {
+        table.row(vec![
+            p.layer.clone(),
+            format!("HBFP{}", p.m_bits),
+            p.block.to_string(),
+            format!("{:.3e}", p.distance),
+        ]);
+    }
+    table.write_csv(&results_dir().join("fig1_wasserstein.csv"))?;
+
+    // Headline checks printed alongside (paper: HBFP4 ≈ 3.5x HBFP6, and
+    // edge layers sit above middle layers).
+    let avg = |m: u32| {
+        let v: Vec<f64> = points
+            .iter()
+            .filter(|p| p.m_bits == m)
+            .map(|p| p.distance)
+            .collect();
+        v.iter().sum::<f64>() / v.len() as f64
+    };
+    println!(
+        "[fig1] mean W: HBFP4/HBFP6 ratio = {:.2} (paper ≈ 3.5)",
+        avg(4) / avg(6)
+    );
+    Ok(table)
+}
+
+/// §3's R² claim: correlation between Wasserstein distance and the
+/// accuracy gap, computed from a (distance, accuracy) series.
+pub fn wasserstein_accuracy_r2(distances: &[f64], accuracies: &[f64]) -> f64 {
+    r_squared(distances, accuracies)
+}
+
+/// Fig 2 — 1-D loss-landscape slices for the five configurations.
+pub fn fig2(engine: &Engine, artifacts: &Path, preset: Preset) -> Result<Table> {
+    let v = engine.load_variant_by_name(artifacts, "cnn_bs64")?;
+    let cfg0 = config_for(&v, PrecisionPolicy::Fp32, preset);
+    let data = TrainerData::for_variant(&v, &cfg0)?;
+    let policies = vec![
+        PrecisionPolicy::Fp32,
+        PrecisionPolicy::Hbfp { bits: 6 },
+        PrecisionPolicy::Hbfp { bits: 4 },
+        PrecisionPolicy::HbfpLayers { mid: 4, edge: 6 },
+        PrecisionPolicy::booster(1),
+    ];
+    // Fixed eval batches for every curve.
+    let batches: Vec<_> = (0..2)
+        .map(|i| {
+            let idx: Vec<usize> =
+                (i * v.manifest.batch..(i + 1) * v.manifest.batch).collect();
+            data.batch(&idx, true)
+        })
+        .collect();
+    let alphas = alpha_grid(0.6, 21);
+
+    let mut table = Table::new(
+        "Fig 2 — loss landscape slices (min depth + sharpness)",
+        &["policy", "min_loss", "sharpness", "curve_csv"],
+    );
+    for policy in policies {
+        let cfg = config_for(&v, policy.clone(), preset);
+        println!("[fig2] training {} ...", policy.label());
+        let epochs = cfg.epochs;
+        let (_, _, result) = run_one(engine, &v, &data, cfg, false)?;
+        let mut rng = Rng::new(1234);
+        let dir = filter_normalized_direction(&result.params, &mut rng);
+        let sched = PrecisionScheduler::new(policy.clone(), epochs, false);
+        let scalars = sched.eval_scalars(epochs - 1);
+        println!("[fig2] sweeping landscape for {} ...", policy.label());
+        let curve = landscape_1d(
+            engine,
+            &v,
+            &policy.label(),
+            &result.params,
+            &dir,
+            &alphas,
+            &batches,
+            scalars,
+        )?;
+        // CSV per curve.
+        let fname = format!(
+            "fig2_landscape_{}.csv",
+            policy.label().replace(['+', '(', ')'], "_")
+        );
+        let mut csv = Table::new(&curve.label, &["alpha", "loss"]);
+        for (a, l) in curve.alphas.iter().zip(&curve.losses) {
+            csv.row(vec![format!("{a:.4}"), format!("{l:.6}")]);
+        }
+        csv.write_csv(&results_dir().join(&fname))?;
+        table.row(vec![
+            policy.label(),
+            format!("{:.4}", curve.min_loss()),
+            format!("{:.4}", curve.sharpness()),
+            fname,
+        ]);
+    }
+    table.write_csv(&results_dir().join("fig2_summary.csv"))?;
+    Ok(table)
+}
+
+/// Fig 4 — error bars: N seeds x {FP32, HBFP6, Booster}.
+pub fn fig4(engine: &Engine, artifacts: &Path, preset: Preset, seeds: usize) -> Result<Table> {
+    let v = engine.load_variant_by_name(artifacts, "cnn_bs64")?;
+    let policies = vec![
+        PrecisionPolicy::Fp32,
+        PrecisionPolicy::Hbfp { bits: 6 },
+        PrecisionPolicy::booster(1),
+    ];
+    let mut table = Table::new(
+        &format!("Fig 4 — seed variability ({seeds} seeds)"),
+        &["policy", "mean_val_acc", "std", "min", "max"],
+    );
+    for policy in policies {
+        let mut accs = Vec::new();
+        for s in 0..seeds {
+            let mut cfg = config_for(&v, policy.clone(), preset);
+            cfg.seed = 1000 + s as u64;
+            let data = TrainerData::for_variant(&v, &cfg)?;
+            println!("[fig4] {} seed {} ...", policy.label(), cfg.seed);
+            let (acc, _, _) = run_one(engine, &v, &data, cfg, false)?;
+            accs.push(acc);
+        }
+        let mean = crate::util::mean(&accs);
+        let std = crate::util::stddev(&accs);
+        table.row(vec![
+            policy.label(),
+            format!("{:.4}", mean),
+            format!("{:.4}", std),
+            format!("{:.4}", accs.iter().copied().fold(f64::INFINITY, f64::min)),
+            format!("{:.4}", accs.iter().copied().fold(0.0f64, f64::max)),
+        ]);
+    }
+    table.write_csv(&results_dir().join("fig4_seeds.csv"))?;
+    Ok(table)
+}
+
+/// Fig 6 — silicon-area ratio FP32/HBFP across block sizes.
+pub fn fig6() -> Result<Table> {
+    let blocks: Vec<u64> = vec![4, 8, 16, 25, 36, 49, 64, 128, 256, 400, 576, 1024];
+    let mut table = Table::new(
+        "Fig 6 — silicon area ratio (FP32 / HBFP)",
+        &["block", "HBFP8", "HBFP6", "HBFP5", "HBFP4"],
+    );
+    for row in fig6_series(&blocks) {
+        table.row(vec![
+            row.block.to_string(),
+            format!("{:.2}", row.hbfp8),
+            format!("{:.2}", row.hbfp6),
+            format!("{:.2}", row.hbfp5),
+            format!("{:.2}", row.hbfp4),
+        ]);
+    }
+    table.write_csv(&results_dir().join("fig6_area_ratio.csv"))?;
+    Ok(table)
+}
+
+/// §4.2 density headline vs the paper's numbers.
+pub fn density() -> Result<Table> {
+    let mut table = Table::new(
+        "Arithmetic density (§4.2) — model vs paper",
+        &["quantity", "model", "paper"],
+    );
+    table.row(vec![
+        "HBFP4 vs FP32 @ b=64".into(),
+        format!("{:.1}x", area_gain_hbfp(4, 64)),
+        "21.3x".into(),
+    ]);
+    table.row(vec![
+        "HBFP4 vs FP32 @ b=576".into(),
+        format!("{:.1}x", area_gain_hbfp(4, 576)),
+        "23.9x".into(),
+    ]);
+    table.row(vec![
+        "HBFP6 vs FP32 @ b=64".into(),
+        format!("{:.1}x", area_gain_hbfp(6, 64)),
+        "13.9x".into(),
+    ]);
+    table.row(vec![
+        "BF16 vs FP32".into(),
+        format!("{:.1}x", bf16_gain(64)),
+        "4.9x".into(),
+    ]);
+    table.row(vec![
+        "HBFP4 vs BF16 @ b=64".into(),
+        format!("{:.1}x", area_gain_hbfp(4, 64) / bf16_gain(64)),
+        "4.4x".into(),
+    ]);
+    table.row(vec![
+        "Booster density (99.7% @4b) @ b=64".into(),
+        format!("{:.1}x", booster_density(64, 0.003)),
+        "≈21.3x".into(),
+    ]);
+    table.write_csv(&results_dir().join("density_headline.csv"))?;
+    Ok(table)
+}

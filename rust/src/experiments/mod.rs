@@ -1,0 +1,15 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §5).
+//!
+//! Each driver builds the workload, sweeps the configurations the paper
+//! sweeps, and renders a [`crate::report::Table`] with the same rows the
+//! paper reports (plus CSV dumps under `results/`). The CLI (`repro`),
+//! the examples and the benches are all thin wrappers over these.
+
+pub mod ablation;
+pub mod common;
+pub mod figs;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+pub use common::{parse_policy, Preset};

@@ -1,0 +1,76 @@
+//! Table 1 — Top-1 validation accuracy of standalone HBFP configurations
+//! across mantissa widths {8,6,5,4} and the paper's block-size axis, with
+//! the analytic area-gain column.
+
+use crate::config::PrecisionPolicy;
+use crate::coordinator::TrainerData;
+use crate::experiments::common::{config_for, run_one, Preset};
+use crate::hw_model::area_gain_hbfp;
+use crate::report::{fmt_pct, results_dir, Table};
+use crate::runtime::Engine;
+use anyhow::Result;
+use std::path::Path;
+
+pub const MANTISSAS: [u32; 4] = [8, 6, 5, 4];
+
+/// Run the Table-1 sweep for one model family ("cnn" or "mlp").
+pub fn run(engine: &Engine, artifacts: &Path, model: &str, preset: Preset) -> Result<Table> {
+    let mut table = Table::new(
+        &format!("Table 1 — standalone HBFP, {model} (synthetic task)"),
+        &["format", "block", "area_gain", "final_val_acc", "best_val_acc"],
+    );
+
+    // FP32 baseline: block size is irrelevant under bypass; use bs64.
+    let v64 = engine.load_variant_by_name(artifacts, &format!("{model}_bs64"))?;
+    let data = TrainerData::for_variant(&v64, &config_for(&v64, PrecisionPolicy::Fp32, preset))?;
+    let cfg = config_for(&v64, PrecisionPolicy::Fp32, preset);
+    println!("[table1] {model} fp32 baseline ...");
+    let (acc, hist, _) = run_one(engine, &v64, &data, cfg, false)?;
+    table.row(vec![
+        "FP32".into(),
+        "-".into(),
+        "1.0".into(),
+        fmt_pct(acc),
+        fmt_pct(hist.best_val_acc()),
+    ]);
+
+    for &block in preset.block_sizes() {
+        let variant = if block == 64 {
+            // reuse already-loaded bs64
+            None
+        } else {
+            Some(engine.load_variant_by_name(artifacts, &format!("{model}_bs{block}"))?)
+        };
+        let v = variant.as_ref().unwrap_or(&v64);
+        for &m in &MANTISSAS {
+            // HBFP8 only at the paper's single row (b=576) unless full.
+            if m == 8 && preset == Preset::Quick && block != 576 {
+                continue;
+            }
+            let policy = PrecisionPolicy::Hbfp { bits: m };
+            let cfg = config_for(v, policy, preset);
+            println!("[table1] {model} hbfp{m} b={block} ...");
+            let (acc, hist, _) = run_one(engine, v, &data, cfg, false)?;
+            table.row(vec![
+                format!("HBFP{m}"),
+                block.to_string(),
+                format!("{:.1}", area_gain_hbfp(m as u64, block as u64)),
+                fmt_pct(acc),
+                fmt_pct(hist.best_val_acc()),
+            ]);
+        }
+    }
+
+    table.write_csv(&results_dir().join(format!("table1_{model}.csv")))?;
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mantissa_axis_matches_paper() {
+        assert_eq!(MANTISSAS, [8, 6, 5, 4]);
+    }
+}

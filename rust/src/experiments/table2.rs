@@ -1,0 +1,62 @@
+//! Table 2 — Accuracy Boosters (last-1 and last-10 epochs) vs FP32 and
+//! the HBFP4 / HBFP4+Layers ablations (Fig 2's configurations), at the
+//! paper's sweet-spot block size 64.
+
+use crate::config::PrecisionPolicy;
+use crate::coordinator::TrainerData;
+use crate::experiments::common::{config_for, run_one, Preset};
+use crate::metrics::RunHistory;
+use crate::report::{fmt_pct, results_dir, Table};
+use crate::runtime::Engine;
+use anyhow::Result;
+use std::path::Path;
+
+/// The Table-2 policy ladder (incl. the Fig-2 ablation rungs).
+pub fn policies(total_epochs: usize) -> Vec<PrecisionPolicy> {
+    vec![
+        PrecisionPolicy::Fp32,
+        PrecisionPolicy::Hbfp { bits: 6 },
+        PrecisionPolicy::Hbfp { bits: 4 },
+        PrecisionPolicy::HbfpLayers { mid: 4, edge: 6 },
+        PrecisionPolicy::booster(1),
+        PrecisionPolicy::Booster {
+            low: 4,
+            high: 6,
+            boost_epochs: (total_epochs / 8).max(2), // the "last 10 of 160" analogue
+        },
+    ]
+}
+
+pub struct Table2Output {
+    pub table: Table,
+    pub histories: Vec<RunHistory>,
+}
+
+pub fn run(engine: &Engine, artifacts: &Path, model: &str, preset: Preset) -> Result<Table2Output> {
+    let v = engine.load_variant_by_name(artifacts, &format!("{model}_bs64"))?;
+    let cfg0 = config_for(&v, PrecisionPolicy::Fp32, preset);
+    let data = TrainerData::for_variant(&v, &cfg0)?;
+    let mut table = Table::new(
+        &format!("Table 2 — Accuracy Boosters, {model} @ block 64"),
+        &["policy", "final_val_acc", "best_val_acc", "final_val_loss"],
+    );
+    let mut histories = Vec::new();
+    for policy in policies(cfg0.epochs) {
+        let cfg = config_for(&v, policy.clone(), preset);
+        println!("[table2] {model} {} ...", policy.label());
+        let (acc, hist, _) = run_one(engine, &v, &data, cfg, false)?;
+        table.row(vec![
+            policy.label(),
+            fmt_pct(acc),
+            fmt_pct(hist.best_val_acc()),
+            format!("{:.4}", hist.final_val_loss()),
+        ]);
+        hist.write_csv(&results_dir().join(format!(
+            "fig3_curve_{model}_{}.csv",
+            policy.label().replace(['+', '(', ')'], "_")
+        )))?;
+        histories.push(hist);
+    }
+    table.write_csv(&results_dir().join(format!("table2_{model}.csv")))?;
+    Ok(Table2Output { table, histories })
+}

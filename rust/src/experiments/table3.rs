@@ -1,0 +1,55 @@
+//! Table 3 — BLEU scores for the transformer on the synthetic translation
+//! task: FP32 / HBFP6 / HBFP4 / Booster (block 64, Adam, inverse-sqrt lr).
+
+use crate::config::PrecisionPolicy;
+use crate::coordinator::{trainer::evaluate_bleu, TrainerData};
+use crate::experiments::common::{config_for, run_one, Preset};
+use crate::report::{fmt_pct, results_dir, Table};
+use crate::runtime::Engine;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+pub fn policies() -> Vec<PrecisionPolicy> {
+    vec![
+        PrecisionPolicy::Fp32,
+        PrecisionPolicy::Hbfp { bits: 6 },
+        PrecisionPolicy::Hbfp { bits: 4 },
+        PrecisionPolicy::booster(1),
+    ]
+}
+
+pub fn run(engine: &Engine, artifacts: &Path, preset: Preset) -> Result<Table> {
+    let v = engine.load_variant_by_name(artifacts, "transformer_bs64")?;
+    let cfg0 = config_for(&v, PrecisionPolicy::Fp32, preset);
+    let data = TrainerData::for_variant(&v, &cfg0)?;
+    let text = match &data {
+        TrainerData::Text(t) => t,
+        _ => return Err(anyhow!("transformer variant must use text data")),
+    };
+    let mut table = Table::new(
+        "Table 3 — Transformer BLEU, synthetic De→En stand-in @ block 64",
+        &["policy", "BLEU", "token_acc", "final_val_loss"],
+    );
+    for policy in policies() {
+        let cfg = config_for(&v, policy.clone(), preset);
+        println!("[table3] transformer {} ...", policy.label());
+        let (acc, hist, result) = run_one(engine, &v, &data, cfg, false)?;
+        // BLEU decodes with the *final-epoch* precision of the policy
+        // (FP32 bypass for fp32; the boosted bits for Booster).
+        let sched = crate::coordinator::PrecisionScheduler::new(
+            policy.clone(),
+            hist.epochs.len(),
+            false,
+        );
+        let scalars = sched.eval_scalars(hist.epochs.len().saturating_sub(1));
+        let bleu = evaluate_bleu(engine, &v, &result.state, text, 4, scalars)?;
+        table.row(vec![
+            policy.label(),
+            format!("{bleu:.2}"),
+            fmt_pct(acc),
+            format!("{:.4}", hist.final_val_loss()),
+        ]);
+    }
+    table.write_csv(&results_dir().join("table3_transformer.csv"))?;
+    Ok(table)
+}

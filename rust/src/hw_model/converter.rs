@@ -1,0 +1,112 @@
+//! FP32 <-> BFP converter blocks (Appendix F, last paragraph).
+//!
+//! Converting a block of N FP32 values to BFP needs:
+//!   * N-1 exponent comparators (max-exponent tree),
+//!   * N exponent subtractors (distance to the shared exponent),
+//!   * N shifters (mantissa alignment), and
+//!   * XORshift circuits generating random bits for stochastic rounding.
+//!
+//! Datapath widths follow what the conversion actually touches: exponent
+//! compare is over the 8-bit FP32 exponent field; the per-element
+//! exponent delta saturates at m+1 (any larger shift underflows to 0), so
+//! the delta subtractor and the alignment shifter run at narrow widths
+//! (m+2-bit mantissa datapath, shift range m+1). A full 24-bit barrel
+//! shifter per element would dominate the whole HBFP4 MAC and contradicts
+//! the paper's 21.3x headline — see EXPERIMENTS.md §HW-model for the
+//! calibration discussion.
+//!
+//! In the weight-stationary dot-product array the *weight* operand is
+//! converted once per tile and reused across the systolic pass, so only
+//! one streaming converter bank (activations) plus the shared
+//! max-exponent tree sits on the per-unit area path; the amortized weight
+//! converter is priced at the tile-load rate (1/ROWS of a bank).
+
+use super::gates::MUX2;
+use super::units::*;
+
+const FP32_EXP: u64 = 8;
+
+/// Rows a weight tile is reused across in the systolic array (the
+/// amortization factor for the weight-side converter bank).
+pub const WEIGHT_REUSE_ROWS: u64 = 64;
+
+/// Exponent-compare cost in the max tree: lean 8-bit comparator + steer
+/// mux on the 8-bit exponent word.
+fn exp_compare() -> u64 {
+    comparator_lean(FP32_EXP) + FP32_EXP * MUX2
+}
+
+/// Per-element conversion datapath for an m-bit mantissa target:
+/// saturating exponent-delta subtract + narrow alignment shift + round.
+fn per_element(m: u64) -> u64 {
+    let delta_bits = 64 - (m + 1).leading_zeros() as u64 + 1; // log2(m+1)+1
+    subtractor(delta_bits.max(4))          // saturating exponent delta
+        + barrel_shifter(m + 2, m + 1)     // align at the m+2-bit datapath
+        + ripple_adder(m)                  // round increment
+        + m * MUX2                         // stochastic-bit injection mux
+}
+
+/// Converter bank turning one block of `n` FP32 values into BFP with
+/// `m`-bit mantissas (shared 10-bit exponent): streamed activations.
+pub fn fp32_to_bfp_converter_bank(n: u64, m: u64) -> u64 {
+    let max_exp = (n - 1) * exp_compare();
+    max_exp + n * per_element(m) + xorshift32()
+}
+
+/// Both operand banks of a dot unit: one streamed (activations) + one
+/// amortized across WEIGHT_REUSE_ROWS systolic rows (weights).
+pub fn dot_unit_converters(n: u64, m: u64) -> u64 {
+    let bank = fp32_to_bfp_converter_bank(n, m);
+    bank + bank.div_ceil(WEIGHT_REUSE_ROWS)
+}
+
+/// BFP dot-product result -> FP32 normalization (one per unit output).
+pub fn bfp_to_fp32_converter(acc_bits: u64) -> u64 {
+    leading_zero_counter(acc_bits) + barrel_shifter(acc_bits, acc_bits) + ripple_adder(10)
+}
+
+/// Word-level output mux (used when bit-slicing HBFP6 onto HBFP4 lanes —
+/// §4.2's mixed-mantissa execution); priced for completeness.
+pub fn bitslice_steering(m: u64, lanes: u64) -> u64 {
+    lanes * m * MUX2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converter_scales_linearly_in_block() {
+        let c16 = fp32_to_bfp_converter_bank(16, 4);
+        let c64 = fp32_to_bfp_converter_bank(64, 4);
+        let c256 = fp32_to_bfp_converter_bank(256, 4);
+        let r1 = (c64 - c16) as f64 / (64.0 - 16.0);
+        let r2 = (c256 - c64) as f64 / (256.0 - 64.0);
+        assert!((r1 - r2).abs() / r1 < 0.05, "{r1} vs {r2}");
+    }
+
+    #[test]
+    fn converter_much_cheaper_than_fp32_mac() {
+        // The whole point of BFP: conversion logic per element must be far
+        // below an FP32 multiply-add.
+        use super::super::fp::{fp_adder, fp_multiplier, FP32};
+        let conv = per_element(4);
+        let mac = fp_multiplier(FP32) + fp_adder(FP32);
+        assert!(conv * 20 < mac, "conv {conv} vs mac {mac}");
+    }
+
+    #[test]
+    fn weight_bank_amortized() {
+        let both = dot_unit_converters(64, 4);
+        let one = fp32_to_bfp_converter_bank(64, 4);
+        assert!(both < one + one / 32);
+        assert!(both > one);
+    }
+
+    #[test]
+    fn converter_mantissa_dependence_is_mild() {
+        let a = fp32_to_bfp_converter_bank(64, 4);
+        let b = fp32_to_bfp_converter_bank(64, 8);
+        assert!((b as f64 - a as f64) / (a as f64) < 0.8);
+    }
+}

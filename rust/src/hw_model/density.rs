@@ -1,0 +1,171 @@
+//! Arithmetic-density gains: Fig 6 series, Table-1 area-gain column,
+//! and the §4.2 headline ratios (HBFP4 vs FP32, vs BFloat16).
+//!
+//! With the §4 operation fixed (dot product of size N + activation),
+//! density gain == area ratio. Our gate model is the paper's counting
+//! scheme rebuilt from Appendix F; EXPERIMENTS.md compares the resulting
+//! ratios against the paper's own table values row by row.
+
+use super::dot_unit::{bf16_dot_unit, fp32_dot_unit, hbfp_dot_unit};
+
+/// Density/area gain of HBFP(m) with block size b over FP32 (same N = b).
+pub fn area_gain_hbfp(m: u64, b: u64) -> f64 {
+    fp32_dot_unit(b).total() as f64 / hbfp_dot_unit(m, b).total() as f64
+}
+
+/// Gain of BFloat16 over FP32 (block-size independent; both pure-FP).
+pub fn bf16_gain(n: u64) -> f64 {
+    fp32_dot_unit(n).total() as f64 / bf16_dot_unit(n).total() as f64
+}
+
+/// Gain of HBFP(m1) over HBFP(m2) at block size b.
+pub fn area_gain_vs(m1: u64, m2: u64, b: u64) -> f64 {
+    hbfp_dot_unit(m2, b).total() as f64 / hbfp_dot_unit(m1, b).total() as f64
+}
+
+/// Accuracy Boosters run 99.7% of ops at HBFP4 with HBFP6 bit-sliced onto
+/// the same 4-bit lanes at unchanged throughput (§4.2) — so the deployed
+/// density is HBFP4's, derated by the small HBFP6 fraction executed at
+/// half rate (two 4-bit slices per 6-bit op, conservatively).
+pub fn booster_density(b: u64, hbfp6_frac: f64) -> f64 {
+    let d4 = area_gain_hbfp(4, b);
+    // HBFP6 ops occupy 2 lane-cycles; throughput-weighted density:
+    let slowdown = 1.0 / (1.0 - hbfp6_frac + 2.0 * hbfp6_frac);
+    d4 * slowdown
+}
+
+/// One row of the Fig 6 sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct Fig6Row {
+    pub block: u64,
+    pub hbfp8: f64,
+    pub hbfp6: f64,
+    pub hbfp5: f64,
+    pub hbfp4: f64,
+}
+
+/// Silicon-area ratio FP32/HBFP across a block-size sweep (Fig 6).
+pub fn fig6_series(blocks: &[u64]) -> Vec<Fig6Row> {
+    blocks
+        .iter()
+        .map(|&b| Fig6Row {
+            block: b,
+            hbfp8: area_gain_hbfp(8, b),
+            hbfp6: area_gain_hbfp(6, b),
+            hbfp5: area_gain_hbfp(5, b),
+            hbfp4: area_gain_hbfp(4, b),
+        })
+        .collect()
+}
+
+/// The paper's block-size axis.
+pub const PAPER_BLOCKS: [u64; 7] = [16, 25, 36, 49, 64, 256, 576];
+
+/// Paper Table-1 area-gain column for cross-checking (format, block, gain).
+pub const PAPER_TABLE1_GAINS: [(u64, u64, f64); 22] = [
+    (8, 576, 10.0),
+    (6, 16, 11.2),
+    (6, 25, 12.3),
+    (6, 36, 13.1),
+    (6, 49, 13.6),
+    (6, 64, 13.9),
+    (6, 256, 14.8),
+    (6, 576, 15.0),
+    (5, 16, 13.4),
+    (5, 25, 15.0),
+    (5, 36, 16.2),
+    (5, 49, 16.9),
+    (5, 64, 17.5),
+    (5, 256, 18.9),
+    (5, 576, 19.2),
+    (4, 16, 15.5),
+    (4, 25, 17.8),
+    (4, 36, 19.3),
+    (4, 49, 20.4),
+    (4, 64, 21.3),
+    (4, 256, 23.4),
+    (4, 576, 23.9),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_in_block_size() {
+        // Fig 6: gains rise with block size and saturate.
+        for m in [4u64, 5, 6, 8] {
+            let mut prev = 0.0;
+            for b in PAPER_BLOCKS {
+                let g = area_gain_hbfp(m, b);
+                assert!(g > prev, "m={m} b={b}: {g} <= {prev}");
+                prev = g;
+            }
+            // Saturation: the 256 -> 576 step is small.
+            let d = area_gain_hbfp(m, 576) / area_gain_hbfp(m, 256);
+            assert!(d < 1.10, "m={m}: {d}");
+        }
+    }
+
+    #[test]
+    fn monotone_in_mantissa() {
+        for b in PAPER_BLOCKS {
+            assert!(area_gain_hbfp(4, b) > area_gain_hbfp(5, b));
+            assert!(area_gain_hbfp(5, b) > area_gain_hbfp(6, b));
+            assert!(area_gain_hbfp(6, b) > area_gain_hbfp(8, b));
+        }
+    }
+
+    #[test]
+    fn headline_ratios_in_band() {
+        // §4.2: HBFP4 up to 21.3x vs FP32 at b=64 (23.9x at 576),
+        // BF16 4.9x, HBFP4-vs-BF16 4.4x. Our rebuilt gate model must land
+        // in the same regime (±35% band; exact constants are the authors').
+        let g64 = area_gain_hbfp(4, 64);
+        assert!(g64 > 13.8 && g64 < 28.8, "hbfp4@64 {g64}");
+        let bf = bf16_gain(64);
+        assert!(bf > 3.2 && bf < 6.7, "bf16 {bf}");
+        let vs_bf = g64 / bf;
+        assert!(vs_bf > 2.8 && vs_bf < 6.0, "hbfp4 vs bf16 {vs_bf}");
+    }
+
+    #[test]
+    fn paper_table_shape_tracks_model() {
+        // Relative *shape*: each paper gain normalized by the paper's
+        // HBFP6@64 value should match our model's same normalization
+        // within 30% — the sweep's structure is reproduced even if the
+        // absolute calibration differs.
+        let ours_ref = area_gain_hbfp(6, 64);
+        let paper_ref = 13.9;
+        for &(m, b, paper) in PAPER_TABLE1_GAINS.iter() {
+            let ours = area_gain_hbfp(m, b) / ours_ref;
+            let want = paper / paper_ref;
+            let rel = (ours - want).abs() / want;
+            assert!(rel < 0.30, "m={m} b={b}: ours {ours:.2} vs paper {want:.2}");
+        }
+    }
+
+    #[test]
+    fn hbfp4_vs_hbfp8_matches_infeasible_example() {
+        // §3: "HBFP4 with a block size of 576 ... a 2.4x improvement in
+        // area/power relative to HBFP8" — check the same ballpark.
+        let r = area_gain_vs(4, 8, 576);
+        assert!(r > 1.6 && r < 3.2, "{r}");
+    }
+
+    #[test]
+    fn booster_density_near_hbfp4() {
+        let d = booster_density(64, 0.003);
+        let d4 = area_gain_hbfp(4, 64);
+        assert!((d / d4 - 1.0).abs() < 0.01, "{d} vs {d4}");
+    }
+
+    #[test]
+    fn block64_reaches_90pct_of_max() {
+        // §4.2: "a block size of 64 is within 90% of the maximum area
+        // gain"; our model should agree for HBFP4.
+        let g64 = area_gain_hbfp(4, 64);
+        let gmax = area_gain_hbfp(4, 576);
+        assert!(g64 / gmax > 0.85, "{}", g64 / gmax);
+    }
+}

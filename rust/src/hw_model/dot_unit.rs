@@ -1,0 +1,114 @@
+//! Whole dot-product-plus-activation units — §4's fixed operation.
+//!
+//! FP32 unit of size N:   N FP32 multipliers + (N-1) FP32 adders (tree)
+//!                        + 1 FP32 accumulator adder + 1 FP activation.
+//! HBFP unit of size N:   N m-bit fixed multipliers + (N-1) fixed adders
+//!                        (tree, widths growing from 2m) + 1 signed
+//!                        10-bit exponent adder + 1 FP32 accumulator
+//!                        + 1 FP activation + FP32<->BFP converters.
+
+use super::converter::{bfp_to_fp32_converter, dot_unit_converters};
+use super::fp::{fp_activation_unit, fp_adder, fp_multiplier, FpFormat, FP32};
+use super::units::*;
+
+/// Area breakdown of one dot-product unit (gate counts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DotUnitArea {
+    pub multipliers: u64,
+    pub adder_tree: u64,
+    pub accumulator: u64,
+    pub activation: u64,
+    pub exponent_logic: u64,
+    pub converters: u64,
+}
+
+impl DotUnitArea {
+    pub fn total(&self) -> u64 {
+        self.multipliers
+            + self.adder_tree
+            + self.accumulator
+            + self.activation
+            + self.exponent_logic
+            + self.converters
+    }
+}
+
+/// Floating-point dot-product unit of size `n` for format `f`.
+pub fn fp_dot_unit(n: u64, f: FpFormat) -> DotUnitArea {
+    DotUnitArea {
+        multipliers: n * fp_multiplier(f),
+        // (n-1) FP adders arranged as a tree; FP adder width is fixed.
+        adder_tree: (n.saturating_sub(1)) * fp_adder(f),
+        accumulator: fp_adder(FP32), // FP32 accumulation in all designs
+        activation: fp_activation_unit(FP32),
+        exponent_logic: 0,
+        converters: 0,
+    }
+}
+
+pub fn fp32_dot_unit(n: u64) -> DotUnitArea {
+    fp_dot_unit(n, FP32)
+}
+
+pub fn bf16_dot_unit(n: u64) -> DotUnitArea {
+    fp_dot_unit(n, super::fp::BF16)
+}
+
+/// HBFP dot-product unit: `n`-wide, `m`-bit mantissas (block size == n:
+/// one shared exponent per operand vector, as in the paper's §4 model).
+pub fn hbfp_dot_unit(m: u64, n: u64) -> DotUnitArea {
+    // log2-width growth in the integer accumulation tree.
+    let acc_bits = 2 * m + 64 - n.leading_zeros() as u64;
+    DotUnitArea {
+        multipliers: n * signed_multiplier(m),
+        adder_tree: adder_tree(n, 2 * m),
+        accumulator: fp_adder(FP32),
+        activation: fp_activation_unit(FP32),
+        // One signed exponent adder per block pair (10-bit).
+        exponent_logic: ripple_adder(10),
+        converters: dot_unit_converters(n, m) + bfp_to_fp32_converter(acc_bits),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp32_unit_dominated_by_macs() {
+        let u = fp32_dot_unit(64);
+        assert!(u.multipliers + u.adder_tree > 9 * (u.accumulator + u.activation));
+    }
+
+    #[test]
+    fn hbfp_unit_converter_amortizes() {
+        // Converter fraction shrinks only mildly with n (it's per-element),
+        // but fixed overheads (accumulator/activation) amortize strongly.
+        let small = hbfp_dot_unit(4, 16);
+        let big = hbfp_dot_unit(4, 576);
+        let fixed_frac_small =
+            (small.accumulator + small.activation) as f64 / small.total() as f64;
+        let fixed_frac_big = (big.accumulator + big.activation) as f64 / big.total() as f64;
+        assert!(fixed_frac_big < fixed_frac_small / 10.0);
+    }
+
+    #[test]
+    fn mantissa_scaling() {
+        // HBFP8 -> HBFP4 should shrink the multiplier area superlinearly.
+        let h8 = hbfp_dot_unit(8, 64);
+        let h4 = hbfp_dot_unit(4, 64);
+        assert!(h8.multipliers as f64 / h4.multipliers as f64 > 3.0);
+        assert!(h8.total() > h4.total());
+    }
+
+    #[test]
+    fn exponent_bits_are_amortized() {
+        // §2 footnote: even at b=4, 5-bit vs 10-bit shared exponent moves
+        // total area by ~<10% (we model the 10-bit path only; here we just
+        // check exponent logic is a tiny fraction at any block size).
+        for n in [4u64, 16, 64] {
+            let u = hbfp_dot_unit(4, n);
+            assert!((u.exponent_logic as f64) < 0.03 * u.total() as f64);
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! Energy model companion to the area model.
+//!
+//! §2 discusses HBFP's *power* footprint alongside silicon area; the
+//! paper's headline is density, but the Broader-Impact section argues the
+//! energy case. We extend the Appendix-F counting style to switching
+//! energy: each gate's dynamic energy is proportional to its area times
+//! an activity factor, so a unit's relative energy per operation follows
+//! its gate count weighted per component class (multipliers toggle ~every
+//! cycle; converters only on operand load; the accumulator always).
+//!
+//! Outputs feed the `repro density` narrative and `bench_area_model`;
+//! absolute joules are out of scope (no technology node), ratios are the
+//! claim — mirroring how the paper treats its own model.
+
+use super::dot_unit::{bf16_dot_unit, fp32_dot_unit, hbfp_dot_unit, DotUnitArea};
+
+/// Activity factors per component class (fraction of cycles toggling).
+#[derive(Debug, Clone, Copy)]
+pub struct Activity {
+    pub multipliers: f64,
+    pub adder_tree: f64,
+    pub accumulator: f64,
+    pub activation: f64,
+    pub exponent_logic: f64,
+    pub converters: f64,
+}
+
+impl Default for Activity {
+    fn default() -> Self {
+        Self {
+            multipliers: 1.0,
+            adder_tree: 1.0,
+            accumulator: 1.0,
+            // Activation fires once per dot product, not per MAC.
+            activation: 0.1,
+            exponent_logic: 0.2,
+            // Converters toggle on operand load; weights are reused.
+            converters: 0.5,
+        }
+    }
+}
+
+/// Relative dynamic energy per dot-product operation (arbitrary units:
+/// gate-count x activity).
+pub fn unit_energy(u: &DotUnitArea, act: Activity) -> f64 {
+    u.multipliers as f64 * act.multipliers
+        + u.adder_tree as f64 * act.adder_tree
+        + u.accumulator as f64 * act.accumulator
+        + u.activation as f64 * act.activation
+        + u.exponent_logic as f64 * act.exponent_logic
+        + u.converters as f64 * act.converters
+}
+
+/// Energy-efficiency gain of HBFP(m) at block b over FP32 (ops/J ratio).
+pub fn energy_gain_hbfp(m: u64, b: u64) -> f64 {
+    let act = Activity::default();
+    unit_energy(&fp32_dot_unit(b), act) / unit_energy(&hbfp_dot_unit(m, b), act)
+}
+
+pub fn energy_gain_bf16(n: u64) -> f64 {
+    let act = Activity::default();
+    unit_energy(&fp32_dot_unit(n), act) / unit_energy(&bf16_dot_unit(n), act)
+}
+
+/// Whole-training-run energy ratio for a mixed schedule: the Booster runs
+/// `frac_low` of ops at HBFP(low) and the rest at HBFP(high).
+pub fn schedule_energy_gain(low: u64, high: u64, b: u64, frac_low: f64) -> f64 {
+    let per_low = 1.0 / energy_gain_hbfp(low, b);
+    let per_high = 1.0 / energy_gain_hbfp(high, b);
+    1.0 / (frac_low * per_low + (1.0 - frac_low) * per_high)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_tracks_area_direction() {
+        // Energy gains order the formats the same way area gains do.
+        assert!(energy_gain_hbfp(4, 64) > energy_gain_hbfp(6, 64));
+        assert!(energy_gain_hbfp(6, 64) > energy_gain_hbfp(8, 64));
+        assert!(energy_gain_hbfp(4, 64) > energy_gain_bf16(64));
+    }
+
+    #[test]
+    fn energy_gain_exceeds_area_gain_when_converters_idle() {
+        // Converters toggle less than MACs, so the energy ratio is at
+        // least as favourable as the area ratio for HBFP.
+        let area = super::super::density::area_gain_hbfp(4, 64);
+        let energy = energy_gain_hbfp(4, 64);
+        assert!(energy > 0.9 * area, "energy {energy} vs area {area}");
+    }
+
+    #[test]
+    fn booster_schedule_energy_is_nearly_hbfp4() {
+        let full4 = energy_gain_hbfp(4, 64);
+        let mix = schedule_energy_gain(4, 6, 64, 0.997);
+        assert!(mix / full4 > 0.98, "{mix} vs {full4}");
+        // And pure-high is strictly worse than the mix.
+        assert!(mix > energy_gain_hbfp(6, 64));
+    }
+
+    #[test]
+    fn custom_activity_profile() {
+        let idle_conv = Activity {
+            converters: 0.0,
+            ..Default::default()
+        };
+        let busy_conv = Activity {
+            converters: 1.0,
+            ..Default::default()
+        };
+        let u = hbfp_dot_unit(4, 64);
+        assert!(unit_energy(&u, idle_conv) < unit_energy(&u, busy_conv));
+    }
+}

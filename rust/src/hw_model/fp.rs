@@ -1,0 +1,87 @@
+//! Floating-point unit area models (FP32 and BFloat16).
+//!
+//! An FP adder aligns significands (exponent subtract + barrel shift),
+//! adds, renormalizes (LZC + shift) and rounds; an FP multiplier multiplies
+//! significands (array), adds exponents and renormalizes/rounds. Widths
+//! include the hidden bit.
+
+use super::units::*;
+
+/// An IEEE-like floating-point format (exponent / stored-mantissa bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FpFormat {
+    pub exp_bits: u64,
+    /// Stored mantissa bits (excluding the hidden bit).
+    pub man_bits: u64,
+}
+
+impl FpFormat {
+    /// Significand width including the hidden bit.
+    pub fn sig(&self) -> u64 {
+        self.man_bits + 1
+    }
+}
+
+pub const FP32: FpFormat = FpFormat {
+    exp_bits: 8,
+    man_bits: 23,
+};
+
+/// BFloat16: FP32's exponent, half the total bits.
+pub const BF16: FpFormat = FpFormat {
+    exp_bits: 8,
+    man_bits: 7,
+};
+
+/// Floating-point adder area.
+pub fn fp_adder(f: FpFormat) -> u64 {
+    let s = f.sig();
+    let exp_diff = subtractor(f.exp_bits);
+    let align = barrel_shifter(s, s); // shift smaller operand by up to s
+    let mant_add = ripple_adder(s + 1); // +1 carry headroom
+    let norm = leading_zero_counter(s + 1) + barrel_shifter(s + 1, s);
+    let exp_adjust = ripple_adder(f.exp_bits);
+    let round = ripple_adder(s); // increment-on-round
+    exp_diff + align + mant_add + norm + exp_adjust + round
+}
+
+/// Floating-point multiplier area.
+pub fn fp_multiplier(f: FpFormat) -> u64 {
+    let s = f.sig();
+    let mant_mul = array_multiplier(s, s);
+    let exp_add = ripple_adder(f.exp_bits) + subtractor(f.exp_bits); // +bias removal
+    let norm = barrel_shifter(2 * s, 1) + ripple_adder(f.exp_bits);
+    let round = ripple_adder(s);
+    mant_mul + exp_add + norm + round
+}
+
+/// The floating-point activation unit of §4's fixed operation
+/// ("dot product followed by activation"): modeled as a comparator +
+/// output mux over the FP32 word (a ReLU-class unit).
+pub fn fp_activation_unit(f: FpFormat) -> u64 {
+    let w = 1 + f.exp_bits + f.man_bits;
+    comparator(w) + w * super::gates::MUX2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp32_multiplier_dominates_adder() {
+        // The 24x24 significand array dwarfs the adder datapath.
+        assert!(fp_multiplier(FP32) > 3 * fp_adder(FP32));
+    }
+
+    #[test]
+    fn bf16_much_smaller_than_fp32() {
+        let r = fp_multiplier(FP32) as f64 / fp_multiplier(BF16) as f64;
+        assert!(r > 5.0, "bf16 multiplier ratio {r}"); // ~(24/8)^2
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(FP32.sig(), 24);
+        assert_eq!(BF16.sig(), 8);
+    }
+}

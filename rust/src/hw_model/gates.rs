@@ -1,0 +1,41 @@
+//! Basic gate costs (paper Appendix F counting rules).
+//!
+//! "The analytic model approximates the area of a circuit as the total
+//! number of basic gates (AND, OR, NOT) present in the circuit. An XOR
+//! gate is made up of 2 NOT, 2 AND and 1 OR, so its area is 5. A
+//! half-adder (XOR + AND) has area 6; a full adder (2 HA + OR) 13."
+
+/// Area of one basic gate.
+pub const GATE: u64 = 1;
+pub const NOT: u64 = GATE;
+pub const AND: u64 = GATE;
+pub const OR: u64 = GATE;
+
+/// XOR = 2 NOT + 2 AND + 1 OR.
+pub const XOR: u64 = 2 * NOT + 2 * AND + OR; // 5
+
+/// Half adder = XOR + AND.
+pub const HALF_ADDER: u64 = XOR + AND; // 6
+
+/// Full adder = 2 half adders + OR.
+pub const FULL_ADDER: u64 = 2 * HALF_ADDER + OR; // 13
+
+/// 2:1 multiplexer: out = (a AND !s) OR (b AND s).
+pub const MUX2: u64 = 2 * AND + OR + NOT; // 4
+
+/// D flip-flop approximated as 6 NAND-equivalents (registers appear in
+/// accumulators and the XORshift state).
+pub const DFF: u64 = 6;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn appendix_f_examples() {
+        assert_eq!(XOR, 5);
+        assert_eq!(HALF_ADDER, 6);
+        assert_eq!(FULL_ADDER, 13);
+        assert_eq!(MUX2, 4);
+    }
+}

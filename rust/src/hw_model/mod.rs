@@ -1,0 +1,26 @@
+//! Analytic gate-level silicon-area model (paper Appendix F).
+//!
+//! Area = number of basic gates (AND/OR/NOT = 1 each), composed
+//! hierarchically: XOR = 5, half-adder = 6, full-adder = 13, and upward
+//! through ripple adders, array multipliers, barrel shifters, FP units,
+//! FP32<->BFP converter banks and whole dot-product-plus-activation units.
+//!
+//! The headline quantity is **arithmetic density** ((ops/s)/area). With the
+//! operation fixed to "dot product of size N followed by an activation"
+//! (§4), density gain over FP32 equals the *area ratio* of the two units —
+//! regenerating Fig 6 and the area-gain columns of Table 1, plus the
+//! 21.3x-vs-FP32 / 4.4x-vs-BFloat16 claims of §4.2.
+
+pub mod converter;
+pub mod density;
+pub mod energy;
+pub mod dot_unit;
+pub mod fp;
+pub mod gates;
+pub mod units;
+
+pub use converter::{bfp_to_fp32_converter, fp32_to_bfp_converter_bank};
+pub use density::{area_gain_hbfp, area_gain_vs, bf16_gain, booster_density, fig6_series, Fig6Row};
+pub use energy::{energy_gain_bf16, energy_gain_hbfp, schedule_energy_gain, unit_energy, Activity};
+pub use dot_unit::{bf16_dot_unit, fp32_dot_unit, hbfp_dot_unit, DotUnitArea};
+pub use fp::{fp_adder, fp_multiplier, FpFormat, BF16, FP32};

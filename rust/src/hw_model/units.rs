@@ -1,0 +1,138 @@
+//! Composite integer/combinational units built from the Appendix-F gates.
+
+use super::gates::*;
+
+/// n-bit ripple-carry adder: (n-1) full adders + 1 half adder.
+pub fn ripple_adder(n: u64) -> u64 {
+    if n == 0 {
+        return 0;
+    }
+    (n - 1) * FULL_ADDER + HALF_ADDER
+}
+
+/// n-bit subtractor: invert one operand (n NOT) + adder with carry-in
+/// (n full adders).
+pub fn subtractor(n: u64) -> u64 {
+    n * NOT + n * FULL_ADDER
+}
+
+/// n-bit magnitude comparator, modeled as a subtractor (borrow chain).
+pub fn comparator(n: u64) -> u64 {
+    subtractor(n)
+}
+
+/// Optimized magnitude comparator (gate-minimized greater-than cell per
+/// bit + OR chain, ~6 gates/bit): what a synthesized max-exponent tree
+/// actually uses — the compare result is a single bit, not a difference.
+pub fn comparator_lean(n: u64) -> u64 {
+    6 * n
+}
+
+/// Unsigned n x m array multiplier: n*m partial-product AND gates plus
+/// (n-1) rows of m full adders.
+pub fn array_multiplier(n: u64, m: u64) -> u64 {
+    if n == 0 || m == 0 {
+        return 0;
+    }
+    n * m * AND + (n - 1) * m * FULL_ADDER
+}
+
+/// Signed (two's-complement, Baugh-Wooley) n x n multiplier: the array
+/// plus one extra adder row for the sign-correction terms.
+pub fn signed_multiplier(n: u64) -> u64 {
+    array_multiplier(n, n) + ripple_adder(n)
+}
+
+/// Logarithmic barrel shifter for an n-bit word over up to `max_shift`
+/// positions: ceil(log2(max_shift+1)) stages of n 2:1 muxes.
+pub fn barrel_shifter(n: u64, max_shift: u64) -> u64 {
+    let stages = 64 - max_shift.leading_zeros() as u64; // ceil(log2(s+1))
+    stages * n * MUX2
+}
+
+/// Leading-zero counter over n bits (normalization): ~n muxes + n OR.
+pub fn leading_zero_counter(n: u64) -> u64 {
+    n * MUX2 + n * OR
+}
+
+/// Comparator *tree* finding the max of `n` values of `bits` bits:
+/// (n-1) comparators + (n-1) word-muxes to steer the winner.
+pub fn max_tree(n: u64, bits: u64) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    (n - 1) * (comparator(bits) + bits * MUX2)
+}
+
+/// Adder tree summing n terms whose width grows by one bit per level:
+/// level l (0-based, ceil(log2 n) levels) has n/2^(l+1) adders of
+/// (w + l) bits.
+pub fn adder_tree(n: u64, w: u64) -> u64 {
+    let mut area = 0;
+    let mut terms = n;
+    let mut level = 0u64;
+    while terms > 1 {
+        let pairs = terms / 2;
+        area += pairs * ripple_adder(w + level);
+        terms = terms - pairs; // odd term forwarded
+        level += 1;
+    }
+    area
+}
+
+/// 32-bit XORshift PRNG for stochastic rounding: 3 shift-XOR stages
+/// (32 XOR each) + a 32-bit state register.
+pub fn xorshift32() -> u64 {
+    3 * 32 * XOR + 32 * DFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adder_scaling() {
+        assert_eq!(ripple_adder(1), HALF_ADDER);
+        assert_eq!(ripple_adder(8), 7 * 13 + 6);
+        assert!(ripple_adder(32) > ripple_adder(8));
+    }
+
+    #[test]
+    fn multiplier_quadratic() {
+        // Halving the width should shrink the multiplier superlinearly —
+        // the "arithmetic logic improves quadratically" claim of §1.
+        let m24 = array_multiplier(24, 24);
+        let m12 = array_multiplier(12, 12);
+        let m6 = array_multiplier(6, 6);
+        assert!(m24 as f64 / m12 as f64 > 3.5);
+        assert!(m12 as f64 / m6 as f64 > 3.5);
+    }
+
+    #[test]
+    fn mantissa_width_dominates_fixed_mac() {
+        // 4-bit vs 8-bit fixed multiplier: ~4x smaller (quadratic).
+        let r = signed_multiplier(8) as f64 / signed_multiplier(4) as f64;
+        assert!(r > 3.0 && r < 5.0, "{r}");
+    }
+
+    #[test]
+    fn barrel_shifter_log_stages() {
+        assert_eq!(barrel_shifter(24, 1), 24 * MUX2);
+        assert_eq!(barrel_shifter(24, 3), 2 * 24 * MUX2);
+        assert_eq!(barrel_shifter(24, 24), 5 * 24 * MUX2);
+    }
+
+    #[test]
+    fn adder_tree_counts() {
+        // 4 terms of width 8: 2 adders @8 + 1 adder @9.
+        assert_eq!(adder_tree(4, 8), 2 * ripple_adder(8) + ripple_adder(9));
+        // Odd n forwards a term.
+        assert!(adder_tree(5, 8) > adder_tree(4, 8));
+    }
+
+    #[test]
+    fn max_tree_zero_for_single() {
+        assert_eq!(max_tree(1, 8), 0);
+        assert!(max_tree(64, 8) > max_tree(16, 8));
+    }
+}

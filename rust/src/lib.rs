@@ -1,0 +1,44 @@
+//! # accuracy-boosters
+//!
+//! Rust + JAX/Pallas reproduction of *"Accuracy Boosters: Epoch-Driven
+//! Mixed-Mantissa Block Floating Point for DNN Training"* (Harma et al.).
+//!
+//! The crate is the **L3 coordinator** of a three-layer stack
+//! (see DESIGN.md):
+//!
+//! * [`runtime`] — loads AOT-compiled XLA artifacts (HLO text produced by
+//!   `python/compile/aot.py`) and executes them on a PJRT CPU client.
+//!   Python never runs on the training path.
+//! * [`coordinator`] — the paper's contribution as a system: the training
+//!   orchestrator whose [`coordinator::PrecisionScheduler`] flips mantissa
+//!   widths per epoch and per layer-class (the Accuracy Booster schedule)
+//!   by feeding runtime scalars into the compiled step function.
+//! * [`bfp`] — a from-scratch software Block-Floating-Point substrate,
+//!   bit-exact against the python oracle (golden-vector tested), used for
+//!   host-side analysis (Fig 1) and as the quantizer reference.
+//! * [`hw_model`] — the paper's gate-level analytic silicon-area model
+//!   (Appendix F): FP32 / BFloat16 / HBFP dot-product units, converters,
+//!   stochastic-rounding XORshift circuits; regenerates Fig 6 and the
+//!   area-gain columns of Table 1 exactly.
+//! * [`data`] — synthetic dataset substrates standing in for CIFAR and
+//!   IWSLT (DESIGN.md §3 documents the substitutions).
+//! * [`metrics`] — accuracy/loss tracking, BLEU-4, Wasserstein-1, R².
+//! * [`analysis`] — loss-landscape (filter-normalized directions) and
+//!   Wasserstein sweeps over checkpoints (Fig 1, 2, 5).
+//! * [`checkpoint`], [`config`], [`report`] — persistence, experiment
+//!   configuration, and paper-layout table/figure rendering.
+
+pub mod analysis;
+pub mod bfp;
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod hw_model;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+pub use anyhow::Result;

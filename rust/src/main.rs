@@ -1,0 +1,162 @@
+//! `repro` — the Accuracy Boosters CLI (L3 leader entrypoint).
+//!
+//! Everything the paper reports is a subcommand:
+//!
+//! ```text
+//! repro info                      # artifact registry + platform
+//! repro smoke                     # one AOT train step end-to-end
+//! repro train  --variant cnn_bs64 --policy booster1 --preset quick
+//! repro table1 --model cnn --preset quick
+//! repro table2 --model cnn
+//! repro table3
+//! repro fig1 | fig2 | fig4 | fig6
+//! repro density
+//! ```
+
+use anyhow::{bail, Result};
+use boosters::config::PrecisionPolicy;
+use boosters::coordinator::TrainerData;
+use boosters::experiments::{self, common::config_for, parse_policy, Preset};
+use boosters::report::results_dir;
+use boosters::runtime::{artifacts_dir, Engine, Index, StepScalars};
+use boosters::util::Args;
+
+const USAGE: &str = "\
+repro — Accuracy Boosters: epoch-driven mixed-mantissa HBFP DNN training
+
+USAGE: repro <subcommand> [--options]
+
+SUBCOMMANDS
+  info                         list artifacts + PJRT platform
+  smoke   [--variant V]        one AOT train step end-to-end (sanity)
+  train   [--variant V] [--policy P] [--preset quick|full]
+          [--epochs N] [--seed S]
+  table1  [--model cnn|mlp] [--preset]   standalone HBFP sweep
+  table2  [--model cnn|mlp] [--preset]   Accuracy Boosters vs baselines
+  table3  [--preset]                     transformer BLEU
+  fig1    [--preset]                     Wasserstein distances
+  fig2    [--preset]                     loss-landscape slices
+  fig4    [--preset] [--seeds N]         seed error bars
+  fig6                                   silicon-area ratio sweep
+  density                                §4.2 headline density numbers
+  ablation [--model] [--preset]          schedule-design ablations
+                                         (autoboost / cyclic / inverse)
+
+POLICIES: fp32 | hbfpN | hbfpN+layersM | booster[K] | cyclicMIN-MAX
+Artifacts dir: --artifacts PATH (default ./artifacts or $REPRO_ARTIFACTS)";
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let artifacts = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(artifacts_dir);
+    let preset = || Preset::parse(&args.get_or("preset", "quick"));
+
+    match args.subcommand.as_deref() {
+        None | Some("help") => println!("{USAGE}"),
+        Some("info") => {
+            let engine = Engine::new()?;
+            println!("platform: {}", engine.platform());
+            let index = Index::load(&artifacts)?;
+            println!("artifacts ({}):", index.variants.len());
+            for v in &index.variants {
+                let m = engine
+                    .load_variant_by_name(&artifacts, &v.name)
+                    .map(|mv| mv.manifest.total_weights())
+                    .unwrap_or(0);
+                println!(
+                    "  {:24} model={:12} block={:4} pallas={} params={}",
+                    v.name, v.model, v.block, v.pallas, m
+                );
+            }
+        }
+        Some("smoke") => {
+            let variant = args.get_or("variant", "mlp_bs64");
+            let engine = Engine::new()?;
+            println!("platform: {}", engine.platform());
+            let v = engine.load_variant_by_name(&artifacts, &variant)?;
+            let cfg = config_for(&v, PrecisionPolicy::booster(1), Preset::Quick);
+            let data = TrainerData::for_variant(&v, &cfg)?;
+            let mut state = boosters::coordinator::init_state(&v.manifest, 42)?;
+            let idx: Vec<usize> = (0..v.manifest.batch).collect();
+            let (x, y) = data.batch(&idx, false);
+            let sc = StepScalars::hbfp(4.0);
+            let s = engine.train_step(&v, &mut state, &x, &y, sc, 0.05)?;
+            println!("train_step: loss={:.4} metric={:.4}", s.loss, s.metric);
+            let e = engine.eval_batch(&v, &state, &x, &y, sc)?;
+            println!("eval:       loss={:.4} metric={:.4}", e.loss, e.metric);
+            println!("smoke OK ({})", v.manifest.variant);
+        }
+        Some("train") => {
+            let variant = args.get_or("variant", "cnn_bs64");
+            let engine = Engine::new()?;
+            let v = engine.load_variant_by_name(&artifacts, &variant)?;
+            let pol = parse_policy(&args.get_or("policy", "booster1"))?;
+            let mut cfg = config_for(&v, pol.clone(), preset()?);
+            if let Some(e) = args.get_parse::<usize>("epochs")? {
+                cfg.epochs = e;
+            }
+            if let Some(s) = args.get_parse::<u64>("seed")? {
+                cfg.seed = s;
+            }
+            let data = TrainerData::for_variant(&v, &cfg)?;
+            let (acc, hist, result) =
+                experiments::common::run_one(&engine, &v, &data, cfg, true)?;
+            println!(
+                "final val metric: {acc:.4} (best {:.4})",
+                hist.best_val_acc()
+            );
+            let stem = format!(
+                "train_{}_{}",
+                variant,
+                pol.label().replace(['+', '(', ')'], "_")
+            );
+            hist.write_csv(&results_dir().join(format!("{stem}.csv")))?;
+            let names: Vec<String> = v.manifest.params.iter().map(|p| p.name.clone()).collect();
+            boosters::checkpoint::Checkpoint::new(names, result.params)
+                .with_meta("variant", &variant)
+                .with_meta("policy", pol.label())
+                .with_meta("val_acc", acc)
+                .save(&results_dir().join(format!("{stem}.ck")))?;
+            println!("wrote results/{stem}.csv and .ck");
+        }
+        Some("table1") => {
+            let engine = Engine::new()?;
+            experiments::table1::run(&engine, &artifacts, &args.get_or("model", "cnn"), preset()?)?
+                .print();
+        }
+        Some("table2") => {
+            let engine = Engine::new()?;
+            experiments::table2::run(&engine, &artifacts, &args.get_or("model", "cnn"), preset()?)?
+                .table
+                .print();
+        }
+        Some("table3") => {
+            let engine = Engine::new()?;
+            experiments::table3::run(&engine, &artifacts, preset()?)?.print();
+        }
+        Some("fig1") => {
+            let engine = Engine::new()?;
+            experiments::figs::fig1(&engine, &artifacts, preset()?)?.print();
+        }
+        Some("fig2") => {
+            let engine = Engine::new()?;
+            experiments::figs::fig2(&engine, &artifacts, preset()?)?.print();
+        }
+        Some("fig4") => {
+            let engine = Engine::new()?;
+            let seeds = args.get_parse_or::<usize>("seeds", 5)?;
+            experiments::figs::fig4(&engine, &artifacts, preset()?, seeds)?.print();
+        }
+        Some("ablation") => {
+            let engine = Engine::new()?;
+            experiments::ablation::run(&engine, &artifacts, &args.get_or("model", "cnn"), preset()?)?
+                .print();
+        }
+        Some("fig6") => experiments::figs::fig6()?.print(),
+        Some("density") => experiments::figs::density()?.print(),
+        Some(other) => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! Corpus BLEU-4: modified n-gram precision with clipping, geometric mean,
+//! brevity penalty — the standard Papineni et al. definition used to score
+//! the Table-3 translation runs. Token sequences are i32 ids; generation
+//! stops at the first EOS.
+
+use std::collections::HashMap;
+
+/// n-gram multiset of a token sequence.
+pub fn sentence_ngrams(tokens: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut map: HashMap<&[i32], usize> = HashMap::new();
+    if tokens.len() >= n {
+        for w in tokens.windows(n) {
+            *map.entry(w).or_insert(0) += 1;
+        }
+    }
+    map
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BleuScore {
+    pub bleu: f64,
+    pub precisions: [f64; 4],
+    pub brevity_penalty: f64,
+    pub hyp_len: usize,
+    pub ref_len: usize,
+}
+
+/// Corpus-level BLEU-4 with smoothing epsilon for empty n-gram buckets
+/// (method-1 style: counts of 0 contribute exp-average over available
+/// orders only when sequences are shorter than 4).
+pub fn corpus_bleu(hyps: &[Vec<i32>], refs: &[Vec<i32>], eos: Option<i32>) -> BleuScore {
+    assert_eq!(hyps.len(), refs.len(), "hyp/ref count mismatch");
+    let trim = |s: &[i32]| -> Vec<i32> {
+        match eos {
+            Some(e) => s.iter().take_while(|&&t| t != e).copied().collect(),
+            None => s.to_vec(),
+        }
+    };
+    let mut match_counts = [0usize; 4];
+    let mut total_counts = [0usize; 4];
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+    for (h, r) in hyps.iter().zip(refs) {
+        let h = trim(h);
+        let r = trim(r);
+        hyp_len += h.len();
+        ref_len += r.len();
+        for n in 1..=4 {
+            let hg = sentence_ngrams(&h, n);
+            let rg = sentence_ngrams(&r, n);
+            for (gram, &c) in &hg {
+                let rc = rg.get(gram).copied().unwrap_or(0);
+                match_counts[n - 1] += c.min(rc);
+            }
+            total_counts[n - 1] += h.len().saturating_sub(n - 1);
+        }
+    }
+    let mut precisions = [0.0f64; 4];
+    let mut log_sum = 0.0;
+    let mut orders = 0;
+    for n in 0..4 {
+        if total_counts[n] == 0 {
+            precisions[n] = 0.0;
+            continue;
+        }
+        precisions[n] = match_counts[n] as f64 / total_counts[n] as f64;
+        orders += 1;
+        // epsilon-smooth zero precisions so one empty bucket doesn't zero
+        // the whole corpus score.
+        log_sum += precisions[n].max(1e-9).ln();
+    }
+    let geo = if orders > 0 {
+        (log_sum / orders as f64).exp()
+    } else {
+        0.0
+    };
+    let bp = if hyp_len >= ref_len || hyp_len == 0 {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    BleuScore {
+        bleu: 100.0 * bp * geo,
+        precisions,
+        brevity_penalty: bp,
+        hyp_len,
+        ref_len,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_is_100() {
+        let refs = vec![vec![1, 2, 3, 4, 5], vec![7, 8, 9, 10]];
+        let s = corpus_bleu(&refs, &refs, None);
+        assert!((s.bleu - 100.0).abs() < 1e-9, "{}", s.bleu);
+        assert_eq!(s.brevity_penalty, 1.0);
+    }
+
+    #[test]
+    fn disjoint_is_zero_ish() {
+        let hyp = vec![vec![1, 1, 1, 1, 1]];
+        let refs = vec![vec![2, 3, 4, 5, 6]];
+        let s = corpus_bleu(&hyp, &refs, None);
+        assert!(s.bleu < 1e-3, "{}", s.bleu);
+    }
+
+    #[test]
+    fn brevity_penalty_kicks_in() {
+        let hyp = vec![vec![1, 2]];
+        let refs = vec![vec![1, 2, 3, 4, 5, 6]];
+        let s = corpus_bleu(&hyp, &refs, None);
+        assert!(s.brevity_penalty < 1.0);
+        let long_hyp = vec![vec![1, 2, 3, 4, 5, 6]];
+        let s2 = corpus_bleu(&long_hyp, &refs, None);
+        assert_eq!(s2.brevity_penalty, 1.0);
+    }
+
+    #[test]
+    fn clipping_limits_repeats() {
+        // "the the the the" against a ref with a single "the".
+        let hyp = vec![vec![9, 9, 9, 9]];
+        let refs = vec![vec![9, 1, 2, 3]];
+        let s = corpus_bleu(&hyp, &refs, None);
+        assert!((s.precisions[0] - 0.25).abs() < 1e-12, "{:?}", s.precisions);
+    }
+
+    #[test]
+    fn eos_trimming() {
+        let hyp = vec![vec![1, 2, 3, 99, 7, 7, 7]];
+        let refs = vec![vec![1, 2, 3, 99]];
+        let s = corpus_bleu(&hyp, &refs, Some(99));
+        assert!((s.bleu - 100.0).abs() < 1e-9, "{}", s.bleu);
+    }
+
+    #[test]
+    fn partial_overlap_between_zero_and_hundred() {
+        // One wrong token in eight — some 4-grams still match, so the
+        // score sits strictly between 0 and 100.
+        let hyp = vec![vec![1, 2, 3, 4, 5, 9, 7, 8]];
+        let refs = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        let s = corpus_bleu(&hyp, &refs, None);
+        assert!(s.bleu > 5.0 && s.bleu < 95.0, "{}", s.bleu);
+        assert!(s.precisions[3] > 0.0);
+    }
+}

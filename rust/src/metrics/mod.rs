@@ -1,0 +1,12 @@
+//! Metrics: BLEU-4 (Table 3), Wasserstein-1 distance (Fig 1), accuracy /
+//! loss tracking (Fig 3/4), and the R² association check from §3.
+
+pub mod bleu;
+pub mod stats;
+pub mod tracker;
+pub mod wasserstein;
+
+pub use bleu::{corpus_bleu, sentence_ngrams, BleuScore};
+pub use stats::{pearson_r, r_squared};
+pub use tracker::{EpochStats, RunHistory};
+pub use wasserstein::{wasserstein1, wasserstein1_quantized};

@@ -1,0 +1,58 @@
+//! Small statistics helpers: Pearson r and R² (the §3 claim that
+//! Wasserstein distance and model accuracy have R² ≈ 0.99).
+
+/// Pearson correlation coefficient.
+pub fn pearson_r(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if x.len() < 2 {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&a, &b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+        syy += (b - my) * (b - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Coefficient of determination of the linear fit y ~ x.
+pub fn r_squared(x: &[f64], y: &[f64]) -> f64 {
+    let r = pearson_r(x, y);
+    r * r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_linear() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson_r(&x, &y) - 1.0).abs() < 1e-12);
+        let neg = [-2.0, -4.0, -6.0, -8.0];
+        assert!((pearson_r(&x, &neg) + 1.0).abs() < 1e-12);
+        assert!((r_squared(&x, &neg) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_series_is_zero() {
+        assert_eq!(pearson_r(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn noisy_linear_high_r2() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v + ((v * 7.3).sin())).collect();
+        assert!(r_squared(&x, &y) > 0.99);
+    }
+}

@@ -1,0 +1,157 @@
+//! Run history: per-epoch statistics, CSV/JSONL persistence, and the
+//! best/final summaries the tables report.
+
+use crate::util::Json;
+use std::io::Write;
+use std::path::Path;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub train_acc: f64,
+    pub val_loss: f64,
+    pub val_acc: f64,
+    pub lr: f64,
+    pub bits_mid: f32,
+    pub bits_edge: f32,
+    pub wall_secs: f64,
+}
+
+impl EpochStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::num(self.epoch as f64)),
+            ("train_loss", Json::num(self.train_loss)),
+            ("train_acc", Json::num(self.train_acc)),
+            ("val_loss", Json::num(self.val_loss)),
+            ("val_acc", Json::num(self.val_acc)),
+            ("lr", Json::num(self.lr)),
+            ("bits_mid", Json::num(self.bits_mid as f64)),
+            ("bits_edge", Json::num(self.bits_edge as f64)),
+            ("wall_secs", Json::num(self.wall_secs)),
+        ])
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RunHistory {
+    pub label: String,
+    pub epochs: Vec<EpochStats>,
+}
+
+impl RunHistory {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self {
+            label: label.into(),
+            epochs: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, e: EpochStats) {
+        self.epochs.push(e);
+    }
+
+    pub fn final_val_acc(&self) -> f64 {
+        self.epochs.last().map(|e| e.val_acc).unwrap_or(0.0)
+    }
+
+    pub fn best_val_acc(&self) -> f64 {
+        self.epochs.iter().map(|e| e.val_acc).fold(0.0, f64::max)
+    }
+
+    pub fn final_val_loss(&self) -> f64 {
+        self.epochs.last().map(|e| e.val_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_wall_secs(&self) -> f64 {
+        self.epochs.iter().map(|e| e.wall_secs).sum()
+    }
+
+    /// Write the Fig-3-style training curve as CSV.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(
+            f,
+            "epoch,train_loss,train_acc,val_loss,val_acc,lr,bits_mid,bits_edge,wall_secs"
+        )?;
+        for e in &self.epochs {
+            writeln!(
+                f,
+                "{},{:.6},{:.6},{:.6},{:.6},{:.6},{},{},{:.3}",
+                e.epoch,
+                e.train_loss,
+                e.train_acc,
+                e.val_loss,
+                e.val_acc,
+                e.lr,
+                e.bits_mid,
+                e.bits_edge,
+                e.wall_secs
+            )?;
+        }
+        Ok(())
+    }
+
+    pub fn write_jsonl(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        for e in &self.epochs {
+            writeln!(f, "{}", e.to_json().render())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(epoch: usize, val_acc: f64) -> EpochStats {
+        EpochStats {
+            epoch,
+            train_loss: 1.0,
+            train_acc: 0.5,
+            val_loss: 1.2,
+            val_acc,
+            lr: 0.1,
+            bits_mid: 4.0,
+            bits_edge: 6.0,
+            wall_secs: 2.0,
+        }
+    }
+
+    #[test]
+    fn summaries() {
+        let mut h = RunHistory::new("test");
+        h.push(stats(0, 0.5));
+        h.push(stats(1, 0.9));
+        h.push(stats(2, 0.8));
+        assert_eq!(h.final_val_acc(), 0.8);
+        assert_eq!(h.best_val_acc(), 0.9);
+        assert_eq!(h.total_wall_secs(), 6.0);
+    }
+
+    #[test]
+    fn csv_and_jsonl_write() {
+        let mut h = RunHistory::new("csv");
+        h.push(stats(0, 0.4));
+        let dir = std::env::temp_dir().join("boosters_test_tracker");
+        let path = dir.join("run.csv");
+        h.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.starts_with("epoch,"));
+        let jl = dir.join("run.jsonl");
+        h.write_jsonl(&jl).unwrap();
+        let line = std::fs::read_to_string(&jl).unwrap();
+        let v = Json::parse(line.trim()).unwrap();
+        assert_eq!(v.req("val_acc").unwrap().as_f64().unwrap(), 0.4);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,108 @@
+//! Wasserstein-1 distance between empirical 1-D distributions (§3, Fig 1).
+//!
+//! For two samples of equal size n, W1 reduces to the mean absolute
+//! difference of the sorted samples; for unequal sizes we integrate the
+//! quantile-function difference over a common grid. The Fig-1 use case —
+//! a tensor vs its quantized self — is always the equal-size fast path.
+
+use crate::bfp::{quantize_flat, Quantizer};
+
+/// W1 between two equal-length samples: mean |sort(a) - sort(b)|.
+pub fn wasserstein1(a: &[f32], b: &[f32]) -> f64 {
+    assert!(!a.is_empty() && !b.is_empty(), "empty sample");
+    if a.len() == b.len() {
+        let mut sa: Vec<f32> = a.to_vec();
+        let mut sb: Vec<f32> = b.to_vec();
+        sa.sort_by(f32::total_cmp);
+        sb.sort_by(f32::total_cmp);
+        sa.iter()
+            .zip(&sb)
+            .map(|(&x, &y)| (x as f64 - y as f64).abs())
+            .sum::<f64>()
+            / a.len() as f64
+    } else {
+        // Quantile integration on the union grid.
+        let mut sa: Vec<f32> = a.to_vec();
+        let mut sb: Vec<f32> = b.to_vec();
+        sa.sort_by(f32::total_cmp);
+        sb.sort_by(f32::total_cmp);
+        let grid = 4096;
+        (0..grid)
+            .map(|i| {
+                let q = (i as f64 + 0.5) / grid as f64;
+                (quantile(&sa, q) - quantile(&sb, q)).abs()
+            })
+            .sum::<f64>()
+            / grid as f64
+    }
+}
+
+fn quantile(sorted: &[f32], q: f64) -> f64 {
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] as f64 * (1.0 - frac) + sorted[hi] as f64 * frac
+}
+
+/// The Fig-1 measurement: W1 between a tensor and its HBFP(m, b)
+/// quantization (nearest rounding, the forward-pass transform).
+pub fn wasserstein1_quantized(t: &[f32], m_bits: u32, block: usize) -> f64 {
+    let q = quantize_flat(t, block, Quantizer::nearest(m_bits), 0);
+    wasserstein1(t, &q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal_scaled(1.0)).collect()
+    }
+
+    #[test]
+    fn identical_distributions_are_zero() {
+        let x = randn(500, 1);
+        assert_eq!(wasserstein1(&x, &x), 0.0);
+    }
+
+    #[test]
+    fn shift_equals_offset() {
+        // W1 between X and X + c is exactly |c|.
+        let x = randn(1000, 2);
+        let y: Vec<f32> = x.iter().map(|v| v + 0.75).collect();
+        assert!((wasserstein1(&x, &y) - 0.75).abs() < 1e-5);
+    }
+
+    #[test]
+    fn symmetric() {
+        let x = randn(300, 3);
+        let y = randn(300, 4);
+        assert!((wasserstein1(&x, &y) - wasserstein1(&y, &x)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unequal_sizes_consistent() {
+        let x = randn(512, 5);
+        let y: Vec<f32> = x.iter().map(|v| v + 0.5).collect();
+        let w = wasserstein1(&x, &y[..256]);
+        assert!((w - 0.5).abs() < 0.1, "{w}");
+    }
+
+    #[test]
+    fn hbfp4_more_distorted_than_hbfp6() {
+        // The Fig-1 headline: W(HBFP4) ≈ 3-4x W(HBFP6), growing with b.
+        let x = randn(4096, 6);
+        let w6 = wasserstein1_quantized(&x, 6, 64);
+        let w4 = wasserstein1_quantized(&x, 4, 64);
+        assert!(w4 > 2.0 * w6, "w4={w4} w6={w6}");
+        let w4_small = wasserstein1_quantized(&x, 4, 16);
+        let w4_big = wasserstein1_quantized(&x, 4, 576);
+        assert!(w4_big > w4_small, "w4@576={w4_big} w4@16={w4_small}");
+        // HBFP6 is ~flat across block sizes.
+        let w6_big = wasserstein1_quantized(&x, 6, 576);
+        assert!(w6_big < 2.0 * w6 + 1e-9, "w6@576={w6_big} w6@64={w6}");
+    }
+}

@@ -1,0 +1,273 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once on
+//! the CPU client, and drives train/eval/decode steps.
+//!
+//! Interchange is HLO *text* (aot.py writes it; `HloModuleProto::
+//! from_text_file` reparses and reassigns instruction ids — the serialized
+//! proto path is incompatible with xla_extension 0.5.1, see DESIGN.md).
+//!
+//! The client is `Rc`-based (not `Send`), so one `Engine` lives on one
+//! thread; the coordinator owns it for the whole run.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+use super::manifest::Manifest;
+use super::tensor::Tensor;
+
+/// Scalar knobs fed to the compiled step functions each call. This is the
+/// surface the PrecisionScheduler drives: changing mantissa widths here is
+/// the runtime analogue of bit-slicing an HBFP4 datapath to serve HBFP6.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepScalars {
+    pub bits_mid: f32,
+    pub bits_edge: f32,
+    /// 0 = round-to-nearest-even gradients, 1 = stochastic rounding.
+    pub rmode_grad: f32,
+    /// Stochastic-rounding stream seed (integer-valued).
+    pub seed: f32,
+}
+
+impl StepScalars {
+    pub fn fp32() -> Self {
+        // bits >= 23 is the FP32-bypass convention (ref.py).
+        Self {
+            bits_mid: 32.0,
+            bits_edge: 32.0,
+            rmode_grad: 0.0,
+            seed: 0.0,
+        }
+    }
+
+    pub fn hbfp(bits: f32) -> Self {
+        Self {
+            bits_mid: bits,
+            bits_edge: bits,
+            rmode_grad: 1.0,
+            seed: 0.0,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u32) -> Self {
+        self.seed = seed as f32;
+        self
+    }
+}
+
+/// Outcome of one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub loss: f32,
+    pub metric: f32,
+}
+
+/// Mutable training state held as host literals between steps (the PJRT
+/// CPU client copies on execute; keeping literals avoids an extra
+/// Vec<f32> materialization per step on the hot path).
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub opt: Vec<xla::Literal>,
+}
+
+impl TrainState {
+    /// Snapshot parameters to host tensors (for checkpoints / analysis).
+    pub fn params_to_tensors(&self) -> Result<Vec<Tensor>> {
+        self.params.iter().map(Tensor::from_literal).collect()
+    }
+
+    pub fn from_tensors(params: &[Tensor], opt: &[Tensor]) -> Result<Self> {
+        Ok(Self {
+            params: params.iter().map(|t| t.to_literal()).collect::<Result<_>>()?,
+            opt: opt.iter().map(|t| t.to_literal()).collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// A fully loaded model variant: manifest + compiled executables.
+pub struct ModelVariant {
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    train_step: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    decode: Option<xla::PjRtLoadedExecutable>,
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))
+    }
+
+    /// Load one variant directory (e.g. `artifacts/cnn_bs64`).
+    pub fn load_variant(&self, dir: &Path) -> Result<ModelVariant> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let get = |key: &str| -> Result<PathBuf> {
+            manifest
+                .artifact(key)
+                .map(|f| dir.join(f))
+                .ok_or_else(|| anyhow!("manifest missing artifact {key}"))
+        };
+        let train_step = self.compile_file(&get("train_step")?)?;
+        let eval = self.compile_file(&get("eval")?)?;
+        let decode = if manifest.artifact("decode").is_some() {
+            Some(self.compile_file(&get("decode")?)?)
+        } else {
+            None
+        };
+        Ok(ModelVariant {
+            manifest,
+            dir: dir.to_path_buf(),
+            train_step,
+            eval,
+            decode,
+        })
+    }
+
+    pub fn load_variant_by_name(&self, artifacts: &Path, name: &str) -> Result<ModelVariant> {
+        self.load_variant(&artifacts.join(name))
+            .with_context(|| format!("loading variant {name}"))
+    }
+
+    /// Run one fused train step: fwd + bwd + optimizer update in a single
+    /// PJRT execute. Updates `state` in place and returns loss/metric.
+    pub fn train_step(
+        &self,
+        variant: &ModelVariant,
+        state: &mut TrainState,
+        x: &Tensor,
+        y: &Tensor,
+        scalars: StepScalars,
+        lr: f32,
+    ) -> Result<StepStats> {
+        let m = &variant.manifest;
+        debug_assert_eq!(state.params.len(), m.n_params());
+        debug_assert_eq!(state.opt.len(), m.n_opt());
+
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(
+            state.params.len() + state.opt.len() + 2 + m.scalars_train.len(),
+        );
+        // Calling convention: *params, *opt, x, y, scalars...
+        args.extend(state.params.drain(..));
+        args.extend(state.opt.drain(..));
+        args.push(x.to_literal()?);
+        args.push(y.to_literal()?);
+        for s in [
+            scalars.bits_mid,
+            scalars.bits_edge,
+            scalars.rmode_grad,
+            scalars.seed,
+            lr,
+        ] {
+            args.push(xla::Literal::scalar(s));
+        }
+
+        let result = variant
+            .train_step
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("train_step execute: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let mut outs = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        let expected = m.n_params() + m.n_opt() + 2;
+        if outs.len() != expected {
+            return Err(anyhow!("expected {expected} outputs, got {}", outs.len()));
+        }
+        let metric = Tensor::from_literal(&outs.pop().unwrap())?.item()?;
+        let loss = Tensor::from_literal(&outs.pop().unwrap())?.item()?;
+        state.opt = outs.split_off(m.n_params());
+        state.params = outs;
+        Ok(StepStats { loss, metric })
+    }
+
+    /// Evaluate one batch: returns (loss, metric) without touching state.
+    pub fn eval_batch(
+        &self,
+        variant: &ModelVariant,
+        state: &TrainState,
+        x: &Tensor,
+        y: &Tensor,
+        scalars: StepScalars,
+    ) -> Result<StepStats> {
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(state.params.len() + 6);
+        for p in &state.params {
+            args.push(p.clone());
+        }
+        args.push(x.to_literal()?);
+        args.push(y.to_literal()?);
+        for s in [
+            scalars.bits_mid,
+            scalars.bits_edge,
+            scalars.rmode_grad,
+            scalars.seed,
+        ] {
+            args.push(xla::Literal::scalar(s));
+        }
+        let result = variant
+            .eval
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("eval execute: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let (loss, metric) = tuple.to_tuple2().map_err(|e| anyhow!("untuple: {e}"))?;
+        Ok(StepStats {
+            loss: Tensor::from_literal(&loss)?.item()?,
+            metric: Tensor::from_literal(&metric)?.item()?,
+        })
+    }
+
+    /// Greedy decode (transformer variants only): src tokens -> generated
+    /// target tokens of shape [batch, out_len].
+    pub fn decode(
+        &self,
+        variant: &ModelVariant,
+        state: &TrainState,
+        src: &Tensor,
+        scalars: StepScalars,
+    ) -> Result<Tensor> {
+        let exe = variant
+            .decode
+            .as_ref()
+            .ok_or_else(|| anyhow!("variant {} has no decode artifact", variant.manifest.variant))?;
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(state.params.len() + 5);
+        for p in &state.params {
+            args.push(p.clone());
+        }
+        args.push(src.to_literal()?);
+        for s in [
+            scalars.bits_mid,
+            scalars.bits_edge,
+            scalars.rmode_grad,
+            scalars.seed,
+        ] {
+            args.push(xla::Literal::scalar(s));
+        }
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("decode execute: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let toks = tuple.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        Tensor::from_literal(&toks)
+    }
+}

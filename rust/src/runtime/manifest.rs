@@ -1,0 +1,306 @@
+//! Artifact manifests: the contract between `python/compile/aot.py` and
+//! the rust runtime (parameter order, shapes, init specs, scalar order).
+//! Parsed with the in-tree JSON substrate (`util::json`).
+
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "zeros" | "ones" | "normal" | "uniform"
+    pub init: String,
+    /// std for normal, bound for uniform.
+    pub scale: f64,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.as_usize_vec()?,
+            init: v.req("init")?.as_str()?.to_string(),
+            scale: v.req("scale")?.as_f64()?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct OptSlot {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    /// "sgdm" | "adam"
+    pub kind: String,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    pub adam_betas: (f64, f64),
+    pub slots: Vec<OptSlot>,
+}
+
+impl OptSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        let betas = v.req("adam_betas")?.as_arr()?;
+        Ok(Self {
+            kind: v.req("kind")?.as_str()?.to_string(),
+            momentum: v.req("momentum")?.as_f64()?,
+            weight_decay: v.req("weight_decay")?.as_f64()?,
+            adam_betas: (betas[0].as_f64()?, betas[1].as_f64()?),
+            slots: v
+                .req("slots")?
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    Ok(OptSlot {
+                        name: s.req("name")?.as_str()?.to_string(),
+                        shape: s.req("shape")?.as_usize_vec()?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DecodeInfo {
+    pub src_len: usize,
+    pub tgt_len: usize,
+    pub out_len: usize,
+    pub bos: i32,
+    pub sep: i32,
+    pub eos: i32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub variant: String,
+    pub model: String,
+    pub block: usize,
+    pub pallas: bool,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    /// "f32" | "i32"
+    pub input_dtype: String,
+    pub label_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub params: Vec<ParamSpec>,
+    pub opt: OptSpec,
+    pub scalars_train: Vec<String>,
+    pub scalars_eval: Vec<String>,
+    pub artifacts: Vec<(String, String)>,
+    pub decode: Option<DecodeInfo>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("parsing manifest json")?;
+        let strings = |key: &str| -> Result<Vec<String>> {
+            v.req(key)?
+                .as_arr()?
+                .iter()
+                .map(|s| Ok(s.as_str()?.to_string()))
+                .collect()
+        };
+        let decode = match v.req("decode")? {
+            Json::Null => None,
+            d => Some(DecodeInfo {
+                src_len: d.req("src_len")?.as_usize()?,
+                tgt_len: d.req("tgt_len")?.as_usize()?,
+                out_len: d.req("out_len")?.as_usize()?,
+                bos: d.req("bos")?.as_i64()? as i32,
+                sep: d.req("sep")?.as_i64()? as i32,
+                eos: d.req("eos")?.as_i64()? as i32,
+            }),
+        };
+        Ok(Self {
+            variant: v.req("variant")?.as_str()?.to_string(),
+            model: v.req("model")?.as_str()?.to_string(),
+            block: v.req("block")?.as_usize()?,
+            pallas: v.req("pallas")?.as_bool()?,
+            batch: v.req("batch")?.as_usize()?,
+            input_shape: v.req("input_shape")?.as_usize_vec()?,
+            input_dtype: v.req("input_dtype")?.as_str()?.to_string(),
+            label_shape: v.req("label_shape")?.as_usize_vec()?,
+            num_classes: v.req("num_classes")?.as_usize()?,
+            params: v
+                .req("params")?
+                .as_arr()?
+                .iter()
+                .map(ParamSpec::from_json)
+                .collect::<Result<_>>()?,
+            opt: OptSpec::from_json(v.req("opt")?)?,
+            scalars_train: strings("scalars_train")?,
+            scalars_eval: strings("scalars_eval")?,
+            artifacts: match v.req("artifacts")? {
+                Json::Obj(fields) => fields
+                    .iter()
+                    .map(|(k, val)| Ok((k.clone(), val.as_str()?.to_string())))
+                    .collect::<Result<_>>()?,
+                other => return Err(anyhow!("artifacts must be an object, got {other:?}")),
+            },
+            decode,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn artifact(&self, key: &str) -> Option<&str> {
+        self.artifacts
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn n_opt(&self) -> usize {
+        self.opt.slots.len()
+    }
+
+    /// Total trainable parameter count.
+    pub fn total_weights(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Full input batch shape ([batch, ...input_shape]).
+    pub fn batch_input_shape(&self) -> Vec<usize> {
+        let mut s = vec![self.batch];
+        s.extend_from_slice(&self.input_shape);
+        s
+    }
+
+    pub fn batch_label_shape(&self) -> Vec<usize> {
+        let mut s = vec![self.batch];
+        s.extend_from_slice(&self.label_shape);
+        s
+    }
+
+    pub fn param_index(&self, name: &str) -> Result<usize> {
+        self.params
+            .iter()
+            .position(|p| p.name == name)
+            .ok_or_else(|| anyhow!("no param named {name}"))
+    }
+}
+
+/// The artifact registry written by aot.py.
+#[derive(Debug, Clone)]
+pub struct IndexEntry {
+    pub name: String,
+    pub model: String,
+    pub block: usize,
+    pub pallas: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Index {
+    pub variants: Vec<IndexEntry>,
+}
+
+impl Index {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(artifacts_dir.join("index.json"))
+            .context("reading artifacts/index.json — run `make artifacts` first")?;
+        let v = Json::parse(&text).context("parsing index.json")?;
+        Ok(Self {
+            variants: v
+                .req("variants")?
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Ok(IndexEntry {
+                        name: e.req("name")?.as_str()?.to_string(),
+                        model: e.req("model")?.as_str()?.to_string(),
+                        block: e.req("block")?.as_usize()?,
+                        pallas: e.req("pallas")?.as_bool()?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// Variants for a model family, sorted by block size.
+    pub fn for_model(&self, model: &str) -> Vec<&IndexEntry> {
+        let mut v: Vec<_> = self
+            .variants
+            .iter()
+            .filter(|e| e.model == model && !e.pallas)
+            .collect();
+        v.sort_by_key(|e| e.block);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> &'static str {
+        r#"{
+          "variant": "mlp_bs64", "model": "mlp", "block": 64, "pallas": false,
+          "batch": 128, "input_shape": [48], "input_dtype": "f32",
+          "label_shape": [], "num_classes": 10,
+          "params": [
+            {"name": "fc0.weight", "shape": [48, 96], "init": "uniform", "scale": 0.2},
+            {"name": "fc0.bias", "shape": [96], "init": "zeros", "scale": 0.0}
+          ],
+          "opt": {"kind": "sgdm", "momentum": 0.9, "weight_decay": 1e-4,
+                  "adam_betas": [0.9, 0.98],
+                  "slots": [{"name": "momentum.fc0.weight", "shape": [48, 96]},
+                            {"name": "momentum.fc0.bias", "shape": [96]}]},
+          "scalars_train": ["bits_mid", "bits_edge", "rmode_grad", "seed", "lr"],
+          "scalars_eval": ["bits_mid", "bits_edge", "rmode_grad", "seed"],
+          "artifacts": {"train_step": "train_step.hlo.txt", "eval": "eval.hlo.txt"},
+          "decode": null
+        }"#
+    }
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(sample_manifest()).unwrap();
+        assert_eq!(m.variant, "mlp_bs64");
+        assert_eq!(m.n_params(), 2);
+        assert_eq!(m.total_weights(), 48 * 96 + 96);
+        assert_eq!(m.batch_input_shape(), vec![128, 48]);
+        assert_eq!(m.batch_label_shape(), vec![128]);
+        assert_eq!(m.param_index("fc0.bias").unwrap(), 1);
+        assert!(m.param_index("nope").is_err());
+        assert_eq!(m.opt.kind, "sgdm");
+        assert_eq!(m.artifact("eval"), Some("eval.hlo.txt"));
+        assert!(m.decode.is_none());
+        assert_eq!(m.scalars_train.len(), 5);
+    }
+
+    #[test]
+    fn parse_decode_info() {
+        let doc = sample_manifest().replace(
+            "\"decode\": null",
+            r#""decode": {"src_len": 8, "tgt_len": 8, "out_len": 9,
+                          "bos": 26, "sep": 27, "eos": 28}"#,
+        );
+        let m = Manifest::parse(&doc).unwrap();
+        let d = m.decode.unwrap();
+        assert_eq!(d.out_len, 9);
+        assert_eq!(d.eos, 28);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"variant": "x"}"#).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! L3 runtime: the PJRT bridge to the AOT-compiled XLA artifacts.
+//!
+//! `python/compile/aot.py` lowers each model variant to HLO text once at
+//! build time; everything here runs pure rust + the XLA CPU plugin —
+//! python is never on the training path.
+
+mod engine;
+mod manifest;
+mod tensor;
+
+pub use engine::{Engine, ModelVariant, StepScalars, StepStats, TrainState};
+pub use manifest::{Index, IndexEntry, Manifest, OptSlot, OptSpec, ParamSpec};
+pub use tensor::Tensor;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$REPRO_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("REPRO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,158 @@
+//! Host tensors: the CPU-side value type flowing between the coordinator
+//! and the PJRT runtime. Only f32 and i32 exist in this system (HBFP's
+//! high-precision side is FP32; labels/tokens are i32).
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor::F32 {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor::F32 {
+            shape: shape.to_vec(),
+            data: vec![1.0; n],
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("shape {:?} != len {}", shape, data.len()));
+        }
+        Ok(Tensor::F32 {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("shape {:?} != len {}", shape, data.len()));
+        }
+        Ok(Tensor::I32 {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor::F32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            Tensor::F32 { .. } => Err(anyhow!("tensor is f32, expected i32")),
+        }
+    }
+
+    /// Scalar f32 extraction (shape []).
+    pub fn item(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            return Err(anyhow!("item() on tensor with {} elements", d.len()));
+        }
+        Ok(d[0])
+    }
+
+    /// Convert to an xla host literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    /// Convert back from an xla literal (f32 or i32 arrays only).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.primitive_type() {
+            xla::PrimitiveType::F32 => Tensor::from_f32(&dims, lit.to_vec::<f32>()?),
+            xla::PrimitiveType::S32 => Tensor::from_i32(&dims, lit.to_vec::<i32>()?),
+            other => Err(anyhow!("unsupported literal type {other:?}")),
+        }
+    }
+
+    /// L2 norm (f32 tensors).
+    pub fn l2_norm(&self) -> Result<f64> {
+        Ok(self
+            .as_f32()?
+            .iter()
+            .map(|&v| (v as f64) * (v as f64))
+            .sum::<f64>()
+            .sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert!(t.as_i32().is_err());
+        assert!(Tensor::from_f32(&[2, 2], vec![1.0]).is_err());
+        let s = Tensor::scalar(3.5);
+        assert_eq!(s.item().unwrap(), 3.5);
+        assert!(t.item().is_err());
+    }
+
+    #[test]
+    fn zeros_ones() {
+        assert_eq!(Tensor::zeros(&[4]).as_f32().unwrap(), &[0.0; 4]);
+        assert_eq!(Tensor::ones(&[3]).as_f32().unwrap(), &[1.0; 3]);
+    }
+
+    #[test]
+    fn l2() {
+        let t = Tensor::from_f32(&[2], vec![3.0, 4.0]).unwrap();
+        assert!((t.l2_norm().unwrap() - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,135 @@
+//! Micro-benchmark harness (criterion is unavailable offline, so we ship
+//! our own): warmup, timed iterations, mean / p50 / p95 / throughput
+//! reporting, plus a simple suite runner used by `cargo bench`
+//! (`harness = false` benches call [`BenchSuite::run`] from `main`).
+
+use crate::util::Stopwatch;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn throughput(&self) -> Option<f64> {
+        self.items.map(|n| n / (self.mean_ns / 1e9))
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:44} {:>10.3} ms/iter  (p50 {:>8.3}, p95 {:>8.3}, n={})",
+            self.name,
+            self.mean_ns / 1e6,
+            self.p50_ns / 1e6,
+            self.p95_ns / 1e6,
+            self.iters
+        );
+        if let Some(t) = self.throughput() {
+            s.push_str(&format!("  [{t:.3e} items/s]"));
+        }
+        s
+    }
+}
+
+/// Time `f` adaptively: warm up, then run until `budget_ms` or `max_iters`.
+pub fn bench_fn(name: &str, budget_ms: f64, items: Option<f64>, mut f: impl FnMut()) -> BenchResult {
+    // Warmup: one call, plus more if it's fast.
+    let sw = Stopwatch::start();
+    f();
+    let first_ms = sw.ms();
+    let warmups = if first_ms < 1.0 { 5 } else { 1 };
+    for _ in 1..warmups {
+        f();
+    }
+    let target_iters = ((budget_ms / first_ms.max(1e-3)).ceil() as usize).clamp(3, 1000);
+    let mut samples = Vec::with_capacity(target_iters);
+    for _ in 0..target_iters {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.secs() * 1e9);
+    }
+    samples.sort_by(f64::total_cmp);
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean,
+        p50_ns: pick(0.5),
+        p95_ns: pick(0.95),
+        items,
+    }
+}
+
+/// A named collection of benches with uniform reporting.
+pub struct BenchSuite {
+    pub title: String,
+    pub budget_ms: f64,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        // `REPRO_BENCH_BUDGET_MS` trims bench time in CI.
+        let budget_ms = std::env::var("REPRO_BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(300.0);
+        println!("### bench suite: {title}");
+        Self {
+            title: title.to_string(),
+            budget_ms,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn bench(&mut self, name: &str, f: impl FnMut()) {
+        self.bench_items(name, None, f);
+    }
+
+    pub fn bench_items(&mut self, name: &str, items: Option<f64>, f: impl FnMut()) {
+        let r = bench_fn(name, self.budget_ms, items, f);
+        println!("{}", r.report());
+        self.results.push(r);
+    }
+
+    /// Final summary line (keeps `cargo bench` output grep-friendly).
+    pub fn finish(self) {
+        println!(
+            "### {}: {} benches done",
+            self.title,
+            self.results.len()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench_fn("spin", 5.0, Some(1000.0), || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns);
+        assert!(r.iters >= 3);
+        assert!(r.throughput().unwrap() > 0.0);
+        assert!(r.report().contains("spin"));
+    }
+}

@@ -1,0 +1,111 @@
+//! Tiny CLI argument parser (no external deps): subcommand + `--key value`
+//! / `--flag` options.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.opts.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                bail!("unexpected positional argument {tok:?}");
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(key)?.unwrap_or(default))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("table1 --model cnn --preset full --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("table1"));
+        assert_eq!(a.get("model"), Some("cnn"));
+        assert_eq!(a.get_or("preset", "quick"), "full");
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form_and_parsing() {
+        let a = parse("train --epochs=12 --seed 7");
+        assert_eq!(a.get_parse::<usize>("epochs").unwrap(), Some(12));
+        assert_eq!(a.get_parse_or::<u64>("seed", 0).unwrap(), 7);
+        assert_eq!(a.get_parse_or::<u64>("missing", 3).unwrap(), 3);
+        assert!(a.get_parse::<usize>("seed").is_ok());
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(["x".into(), "y".into()]).is_err());
+        assert!(parse("train").get_parse::<usize>("epochs").unwrap().is_none());
+        let bad = Args::parse(["t".into(), "--epochs".into(), "abc".into()]).unwrap();
+        assert!(bad.get_parse::<usize>("epochs").is_err());
+    }
+}

@@ -1,0 +1,74 @@
+//! Cross-language numerics contract: replay the golden vectors emitted by
+//! `python/compile/golden.py` (from the jnp oracle) through the rust BFP
+//! quantizer and require **bit-exact** agreement, plus the raw XORshift
+//! stream. This is what licenses the rust-side analyses (Fig 1/2) to
+//! claim they see the same numerics the AOT training graph applies.
+//!
+//! Requires `make artifacts` (the golden file lives in artifacts/).
+
+use boosters::bfp::{quantize_flat, xorshift_hash, Quantizer, RoundMode};
+use boosters::runtime::artifacts_dir;
+use boosters::util::Json;
+
+fn load_golden() -> Option<Json> {
+    let path = artifacts_dir().join("golden_bfp.json");
+    let text = std::fs::read_to_string(&path).ok()?;
+    Some(Json::parse(&text).expect("golden json parses"))
+}
+
+#[test]
+fn golden_quantize_bitexact() {
+    let Some(doc) = load_golden() else {
+        panic!("artifacts/golden_bfp.json missing — run `make artifacts` first");
+    };
+    let cases = doc.req("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() > 30, "expected a full golden sweep");
+    let mut checked = 0usize;
+    for c in cases {
+        let input = c.req("input").unwrap().as_f32_vec().unwrap();
+        let want = c.req("output").unwrap().as_f32_vec().unwrap();
+        let block = c.req("block").unwrap().as_usize().unwrap();
+        let m = c.req("m_bits").unwrap().as_usize().unwrap() as u32;
+        let rmode = c.req("rmode").unwrap().as_usize().unwrap();
+        let seed = c.req("seed").unwrap().as_i64().unwrap() as u32;
+        let site = c.req("site").unwrap().as_usize().unwrap() as u32;
+        let q = Quantizer {
+            m_bits: m,
+            mode: if rmode == 1 {
+                RoundMode::Stochastic
+            } else {
+                RoundMode::NearestEven
+            },
+            seed,
+        };
+        let got = quantize_flat(&input, block, q, site);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "case m={m} b={block} rmode={rmode} seed={seed} site={site} elem {i}: {g} != {w}"
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked > 10_000, "checked {checked} values");
+}
+
+#[test]
+fn golden_xorshift_stream() {
+    let Some(doc) = load_golden() else {
+        panic!("artifacts/golden_bfp.json missing — run `make artifacts` first");
+    };
+    let streams = doc.req("xorshift").unwrap();
+    for (seed_str, arr) in match streams {
+        Json::Obj(fields) => fields.iter(),
+        _ => panic!("xorshift must be an object"),
+    } {
+        let seed: u32 = seed_str.parse().unwrap();
+        let want = arr.as_arr().unwrap();
+        for (idx, w) in want.iter().enumerate() {
+            let got = xorshift_hash(idx as u32, seed);
+            assert_eq!(got as i64, w.as_i64().unwrap(), "seed {seed} idx {idx}");
+        }
+    }
+}
