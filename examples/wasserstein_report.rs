@@ -35,9 +35,9 @@ fn main() -> Result<()> {
         let mut dists = Vec::new();
         let mut accs = Vec::new();
         for row in &acc_rows {
-            // ["HBFP4", "64", gain, acc, best]
+            // ["HBFP4", "64", gain, bits_per_val, plane, acc, best]
             let (fmt, block) = (&row[0], &row[1]);
-            if fmt == "FP32" {
+            if fmt == "FP32" || row.len() < 6 {
                 continue;
             }
             let ws: Vec<f64> = w_rows
@@ -49,7 +49,7 @@ fn main() -> Result<()> {
                 continue;
             }
             dists.push(ws.iter().sum::<f64>() / ws.len() as f64);
-            accs.push(row[3].parse::<f64>().unwrap_or(0.0));
+            accs.push(row[5].parse::<f64>().unwrap_or(0.0));
         }
         if dists.len() >= 3 {
             println!(

@@ -3,12 +3,14 @@
 //! same executable serving HBFP4 and HBFP6 steps back to back, which is
 //! the paper's bit-sliced-datapath story in software form.
 
+use boosters::bfp::{BfpMatrix, Quantizer};
 use boosters::config::PrecisionPolicy;
-use boosters::coordinator::{init_state, PrecisionScheduler, TrainerData};
+use boosters::coordinator::{init_state, AutoBoost, PrecisionScheduler, TrainerData};
 use boosters::experiments::common::config_for;
 use boosters::experiments::Preset;
 use boosters::runtime::{artifacts_dir, Engine};
 use boosters::util::bench::BenchSuite;
+use boosters::util::Rng;
 
 fn main() {
     let mut suite = BenchSuite::new("booster: scheduler + precision switching");
@@ -24,6 +26,38 @@ fn main() {
         }
         std::hint::black_box(acc);
     });
+
+    // Host-side packed-BFP weight store: the per-epoch cost the Trainer
+    // pays in `with_host_bfp_store` mode, at both precisions an
+    // AutoBoost/Booster run flips between. 1M params ≈ the CNN.
+    let mut rng = Rng::new(0xB00);
+    let mut weights: Vec<f32> = (0..1 << 20).map(|_| rng.normal_scaled(0.1)).collect();
+    let mut scratch = BfpMatrix::empty();
+    let mut buf: Vec<f32> = Vec::new();
+    let mut ab = AutoBoost::new(4, 6);
+    for boosted in [false, true] {
+        if boosted {
+            // Flatline losses trip the plateau trigger.
+            for e in 0..12 {
+                ab.observe(e, 1.0);
+            }
+            assert!(ab.boosted());
+        }
+        let fmt = ab.emulation_format(64).unwrap();
+        let m = fmt.mantissa_bits;
+        suite.bench_items(
+            &format!("host BFP weight-store round-trip m={m} b=64 (1M params)"),
+            Some(weights.len() as f64),
+            || {
+                scratch
+                    .encode_into(&weights, 1, weights.len(), fmt, Quantizer::nearest(m), 0)
+                    .unwrap();
+                scratch.decode_into(&mut buf);
+                weights.copy_from_slice(&buf);
+                std::hint::black_box(weights.len());
+            },
+        );
+    }
 
     let artifacts = artifacts_dir();
     if !artifacts.join("index.json").exists() {

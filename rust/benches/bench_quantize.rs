@@ -1,10 +1,12 @@
 //! Hot-path microbenches for the rust BFP substrate: the quantizer (the
-//! L3 analogue of the L1 Pallas kernel), packing, and fixed-point dots.
-//! This is the §Perf L3 surface — before/after numbers live in
-//! EXPERIMENTS.md.
+//! L3 analogue of the L1 Pallas kernel), packing, fixed-point dots, and
+//! the packed-vs-scalar GEMM comparison that gates the tensor-engine
+//! refactor (>= 4x on a 512^3 HBFP4 GEMM). This is the §Perf L3 surface
+//! — before/after numbers live in EXPERIMENTS.md.
 
 use boosters::bfp::{
-    bfp_dot_fixed_point, quantize_flat, BfpTensor, BlockFormat, Quantizer,
+    bfp_dot_fixed_point, hbfp_gemm, hbfp_gemm_scalar, quantize_flat, quantize_packed_into,
+    BfpMatrix, BfpTensor, BlockFormat, Mat, Quantizer,
 };
 use boosters::util::bench::BenchSuite;
 use boosters::util::Rng;
@@ -15,7 +17,7 @@ fn randn(n: usize, seed: u64) -> Vec<f32> {
 }
 
 fn main() {
-    let mut suite = BenchSuite::new("bfp quantizer hot path");
+    let mut suite = BenchSuite::new("bfp quantizer + packed tensor engine hot path");
     let x = randn(1 << 20, 1); // 1M elements ≈ a large conv layer
     let n = x.len() as f64;
 
@@ -30,7 +32,10 @@ fn main() {
         std::hint::black_box(quantize_flat(&x, 64, qs, 0));
     });
 
+    // Packed carrier: encode/decode into reused planes (zero steady-state
+    // allocation) vs the per-block BfpTensor objects.
     let fmt = BlockFormat::new(4, 64).unwrap();
+    let q4 = Quantizer::nearest(4);
     suite.bench_items("BfpTensor::encode m=4 b=64 (1M f32)", Some(n), || {
         std::hint::black_box(BfpTensor::encode(&x, fmt).unwrap());
     });
@@ -38,12 +43,54 @@ fn main() {
     suite.bench_items("BfpTensor::decode m=4 b=64 (1M f32)", Some(n), || {
         std::hint::black_box(enc.decode());
     });
+    let mut packed = BfpMatrix::empty();
+    suite.bench_items("BfpMatrix::encode_into m=4 b=64 (1M f32)", Some(n), || {
+        packed.encode_into(&x, 1, x.len(), fmt, q4, 0).unwrap();
+        std::hint::black_box(packed.storage_bits());
+    });
+    let mut dec = Vec::new();
+    suite.bench_items("BfpMatrix::decode_into m=4 b=64 (1M f32)", Some(n), || {
+        packed.decode_into(&mut dec);
+        std::hint::black_box(dec.len());
+    });
+    let mut qout = Vec::new();
+    suite.bench_items(
+        "quantize_packed_into m=4 b=64 reused bufs (1M f32)",
+        Some(n),
+        || {
+            quantize_packed_into(&x, 64, q4, 0, &mut packed, &mut qout).unwrap();
+            std::hint::black_box(qout.len());
+        },
+    );
 
     let a = randn(1 << 16, 2);
     let b = randn(1 << 16, 3);
     suite.bench_items("bfp_dot_fixed_point m=4 b=64 (64k)", Some(a.len() as f64), || {
         std::hint::black_box(bfp_dot_fixed_point(&a, &b, fmt).unwrap());
     });
+
+    // --- the acceptance-gate GEMM: 512 x 512 x 512 HBFP4, b = 64 -------
+    let dim = 512usize;
+    let macs = (dim * dim * dim) as f64;
+    let xm = Mat::new(dim, dim, randn(dim * dim, 4)).unwrap();
+    let wm = Mat::new(dim, dim, randn(dim * dim, 5)).unwrap();
+    suite.bench_items("hbfp_gemm SCALAR 512^3 m=4 b=64 (MACs)", Some(macs), || {
+        std::hint::black_box(hbfp_gemm_scalar(&xm, &wm, fmt).unwrap());
+    });
+    suite.bench_items("hbfp_gemm PACKED 512^3 m=4 b=64 (MACs)", Some(macs), || {
+        std::hint::black_box(hbfp_gemm(&xm, &wm, fmt).unwrap());
+    });
+    // Encode once, GEMM many times — the serving-shaped reuse pattern the
+    // packed layout exists for.
+    let xp = BfpMatrix::encode(&xm.data, dim, dim, fmt, q4).unwrap();
+    let wp = BfpMatrix::encode_transposed(&wm, fmt, q4).unwrap();
+    suite.bench_items(
+        "BfpMatrix::gemm PACKED pre-encoded 512^3 (MACs)",
+        Some(macs),
+        || {
+            std::hint::black_box(xp.gemm(&wp).unwrap());
+        },
+    );
 
     suite.finish();
 }

@@ -1,23 +1,69 @@
 //! Table-1 bench: times the building blocks of the standalone-HBFP sweep
-//! (one training step per (format, block) cell) rather than the full
-//! multi-minute sweep — `repro table1` regenerates the actual table; this
-//! bench tracks the per-cell cost that the sweep's wall-clock is made of.
+//! rather than the full multi-minute sweep — `repro table1` regenerates
+//! the actual table; this bench tracks the per-cell cost that the
+//! sweep's wall-clock is made of.
+//!
+//! Two sections:
+//! 1. host-side packed tensor-engine proxy (always runs): the 512^3
+//!    HBFP4 GEMM a table cell's layers amount to, scalar reference vs
+//!    packed kernel — the >= 4x acceptance gate of the BfpMatrix
+//!    refactor;
+//! 2. compiled train-step cost per (format, block) cell (requires
+//!    `make artifacts`).
 
+use boosters::bfp::{hbfp_gemm, hbfp_gemm_scalar, BfpMatrix, BlockFormat, Mat, Quantizer};
 use boosters::config::PrecisionPolicy;
 use boosters::coordinator::{init_state, PrecisionScheduler, TrainerData};
 use boosters::experiments::common::config_for;
 use boosters::experiments::Preset;
 use boosters::runtime::{artifacts_dir, Engine};
 use boosters::util::bench::BenchSuite;
+use boosters::util::Rng;
+
+fn randn(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.normal_scaled(1.0)).collect()
+}
 
 fn main() {
+    let mut suite = BenchSuite::new("table1: packed GEMM proxy + per-cell step cost");
+
+    // --- 1. host tensor-engine proxy (no artifacts needed) -------------
+    let dim = 512usize;
+    let macs = (dim * dim * dim) as f64;
+    let x = Mat::new(dim, dim, randn(dim * dim, 1)).unwrap();
+    let w = Mat::new(dim, dim, randn(dim * dim, 2)).unwrap();
+    let fmt = BlockFormat::new(4, 64).unwrap();
+    suite.bench_items("cell GEMM 512^3 hbfp4 SCALAR (MACs)", Some(macs), || {
+        std::hint::black_box(hbfp_gemm_scalar(&x, &w, fmt).unwrap());
+    });
+    suite.bench_items("cell GEMM 512^3 hbfp4 PACKED (MACs)", Some(macs), || {
+        std::hint::black_box(hbfp_gemm(&x, &w, fmt).unwrap());
+    });
+    let q = Quantizer::nearest(4);
+    let xp = BfpMatrix::encode(&x.data, dim, dim, fmt, q).unwrap();
+    let wp = BfpMatrix::encode_transposed(&w, fmt, q).unwrap();
+    suite.bench_items(
+        "cell GEMM 512^3 hbfp4 PACKED pre-encoded (MACs)",
+        Some(macs),
+        || {
+            std::hint::black_box(xp.gemm(&wp).unwrap());
+        },
+    );
+    // The paper's extreme block size exercises the long-block kernel.
+    let f576 = BlockFormat::new(4, 576).unwrap();
+    suite.bench_items("cell GEMM 512^3 hbfp4 b=576 PACKED (MACs)", Some(macs), || {
+        std::hint::black_box(hbfp_gemm(&x, &w, f576).unwrap());
+    });
+
+    // --- 2. compiled per-cell step cost (artifact-gated) ---------------
     let artifacts = artifacts_dir();
     if !artifacts.join("index.json").exists() {
-        println!("### bench skipped: artifacts/ missing (run `make artifacts`)");
+        println!("### train-step section skipped: artifacts/ missing (run `make artifacts`)");
+        suite.finish();
         return;
     }
     let engine = Engine::new().expect("pjrt client");
-    let mut suite = BenchSuite::new("table1: per-cell step cost (cnn)");
 
     for block in [16usize, 64, 576] {
         let v = match engine.load_variant_by_name(&artifacts, &format!("cnn_bs{block}")) {

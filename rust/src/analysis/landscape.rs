@@ -3,6 +3,7 @@
 //! quantization scalars of the configuration under study — so each curve
 //! shows the loss surface *as seen through that numeric format*.
 
+use crate::bfp::{quantize_packed_into, BfpMatrix, BlockFormat, Quantizer};
 use crate::runtime::{Engine, ModelVariant, StepScalars, Tensor, TrainState};
 use anyhow::Result;
 
@@ -83,6 +84,68 @@ pub fn landscape_1d(
     })
 }
 
+/// Snap every f32 parameter tensor to the HBFP(m, b) grid host-side,
+/// in place, through one shared packed carrier (i32-label tensors pass
+/// through; `m_bits` in 17..=22 delegates past the integer carrier and
+/// `m_bits >= 23` is the FP32 bypass — both still well-defined).
+/// This is the emulation view of "weights stored in BFP SRAM": the same
+/// packed planes the GEMM kernels consume, applied outside the graph.
+/// Shared by [`landscape_1d_hbfp`] and the Trainer's host-BFP-store
+/// emulation.
+pub fn quantize_params_packed(
+    params: &mut [Tensor],
+    m_bits: u32,
+    block: usize,
+    scratch: &mut BfpMatrix,
+    qbuf: &mut Vec<f32>,
+) -> Result<()> {
+    let q = Quantizer::nearest(m_bits);
+    for t in params.iter_mut() {
+        if let Ok(d) = t.as_f32_mut() {
+            quantize_packed_into(d, block, q, 0, scratch, qbuf)?;
+            d.copy_from_slice(qbuf);
+        }
+    }
+    Ok(())
+}
+
+/// 1-D slice of the loss surface *as stored in packed HBFP(m, b)*:
+/// perturbed parameters are snapped to the BFP grid host-side before
+/// evaluation (with FP32 scalars, so the only quantization is the one
+/// we applied). Complements [`landscape_1d`], whose quantization lives
+/// inside the compiled graph.
+#[allow(clippy::too_many_arguments)]
+pub fn landscape_1d_hbfp(
+    engine: &Engine,
+    variant: &ModelVariant,
+    label: &str,
+    params: &[Tensor],
+    direction: &[Tensor],
+    alphas: &[f32],
+    batches: &[(Tensor, Tensor)],
+    fmt: BlockFormat,
+) -> Result<LandscapeCurve> {
+    let mut scratch = BfpMatrix::empty();
+    let mut qbuf = Vec::new();
+    let mut losses = Vec::with_capacity(alphas.len());
+    for &a in alphas {
+        let mut p = perturb(params, direction, a, None);
+        quantize_params_packed(
+            &mut p,
+            fmt.mantissa_bits,
+            fmt.block_size,
+            &mut scratch,
+            &mut qbuf,
+        )?;
+        losses.push(loss_at(engine, variant, &p, batches, StepScalars::fp32())?);
+    }
+    Ok(LandscapeCurve {
+        label: label.into(),
+        alphas: alphas.to_vec(),
+        losses,
+    })
+}
+
 /// 2-D grid: row-major losses at θ + α·d1 + β·d2 (Fig 5's 3-D surface).
 #[allow(clippy::too_many_arguments)]
 pub fn landscape_2d(
@@ -129,6 +192,36 @@ mod tests {
         assert_eq!(*g.last().unwrap(), 1.0);
         // Even requests are bumped to odd.
         assert_eq!(alpha_grid(1.0, 10).len(), 11);
+    }
+
+    #[test]
+    fn params_snap_to_the_packed_grid() {
+        use crate::bfp::quantize_tensor;
+        use crate::util::Rng;
+        let mut rng = Rng::new(21);
+        let w: Vec<f32> = (0..200).map(|_| rng.normal_scaled(0.5)).collect();
+        let labels = Tensor::from_i32(&[3], vec![1, 2, 3]).unwrap();
+        let mut params = vec![
+            Tensor::from_f32(&[10, 20], w.clone()).unwrap(),
+            labels.clone(),
+        ];
+        let mut scratch = BfpMatrix::empty();
+        let mut qbuf = Vec::new();
+        quantize_params_packed(&mut params, 4, 64, &mut scratch, &mut qbuf).unwrap();
+        let want = quantize_tensor(&w, 64, 4);
+        let got = params[0].as_f32().unwrap().to_vec();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g == w) || (*g == 0.0 && *w == 0.0), "{g} vs {w}");
+        }
+        // Idempotent: already-snapped params survive a second pass.
+        quantize_params_packed(&mut params, 4, 64, &mut scratch, &mut qbuf).unwrap();
+        assert_eq!(params[0].as_f32().unwrap(), &got[..]);
+        // Labels pass through untouched.
+        assert_eq!(params[1], labels);
+        // The FP32 bypass leaves values untouched (emulated store is FP32).
+        let mut raw = vec![Tensor::from_f32(&[200], w.clone()).unwrap()];
+        quantize_params_packed(&mut raw, 32, 64, &mut scratch, &mut qbuf).unwrap();
+        assert_eq!(raw[0].as_f32().unwrap(), &w[..]);
     }
 
     #[test]

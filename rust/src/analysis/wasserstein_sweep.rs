@@ -2,7 +2,7 @@
 //! HBFP quantizations, per layer, across mantissa widths and block sizes.
 
 use crate::checkpoint::Checkpoint;
-use crate::metrics::wasserstein1_quantized;
+use crate::metrics::QuantSweep;
 
 /// One measurement point of the Fig-1 sweep.
 #[derive(Debug, Clone)]
@@ -14,6 +14,9 @@ pub struct WassersteinPoint {
 }
 
 /// Sweep selected layers of a checkpoint over (m, b) combinations.
+/// Every point re-quantizes the same weights, so the whole sweep shares
+/// one packed carrier and one decode buffer ([`QuantSweep`]) instead of
+/// allocating per measurement.
 pub fn layer_sweep(
     ck: &Checkpoint,
     layers: &[&str],
@@ -21,16 +24,18 @@ pub fn layer_sweep(
     blocks: &[usize],
 ) -> Vec<WassersteinPoint> {
     let mut out = Vec::new();
+    let mut sweep = QuantSweep::new();
     for &layer in layers {
         let Some(t) = ck.get(layer) else { continue };
         let data = t.as_f32().expect("weights are f32");
+        sweep.set_reference(data); // sorted once per layer
         for &m in m_bits {
             for &b in blocks {
                 out.push(WassersteinPoint {
                     layer: layer.to_string(),
                     m_bits: m,
                     block: b,
-                    distance: wasserstein1_quantized(data, m, b),
+                    distance: sweep.distance_to_reference(data, m, b),
                 });
             }
         }

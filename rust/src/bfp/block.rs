@@ -4,10 +4,21 @@
 //! with [`super::quantize`] and substantiates the memory-footprint claims
 //! (bits/value) quoted in the README.
 
+use super::packed::PlaneDtype;
 use super::quantize::{floor_log2, Quantizer};
 use super::rounding::round_value;
 use super::{EXPONENT_MAX, EXPONENT_MIN};
 use anyhow::{anyhow, Result};
+
+/// Power-of-two shift of one encoded block's dequantization scale:
+/// a mantissa `q` decodes to `q * 2^scale_shift(e, m)` (Eq. 1 interval
+/// `2^(e - m + 2)`). The single home of the `+2`; every datapath —
+/// scalar blocks, packed planes, the GEMM kernels — derives its scale
+/// from here.
+#[inline]
+pub fn scale_shift(exponent: i32, mantissa_bits: u32) -> i32 {
+    exponent - mantissa_bits as i32 + 2
+}
 
 /// A BFP format descriptor: mantissa width and block size.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,6 +54,25 @@ impl BlockFormat {
     pub fn compression_vs_fp32(&self) -> f64 {
         32.0 / self.bits_per_value()
     }
+
+    /// Host mantissa-plane element type for this format (`i8` up to
+    /// 8-bit mantissas, `i16` beyond) — the dtype
+    /// [`super::packed::BfpMatrix`] stores.
+    pub fn plane_dtype(&self) -> PlaneDtype {
+        if self.mantissa_bits <= 8 {
+            PlaneDtype::I8
+        } else {
+            PlaneDtype::I16
+        }
+    }
+
+    /// Wire-density storage bits for a `len`-element tensor blocked in
+    /// this format (zero-padded tail included). The software layout and
+    /// the `hw_model` density arithmetic agree through this number:
+    /// `storage_bits(len) / len -> bits_per_value()` as `len` grows.
+    pub fn storage_bits(&self, len: usize) -> usize {
+        len.div_ceil(self.block_size) * self.bits_per_block()
+    }
 }
 
 /// One encoded block: integer mantissas + shared exponent.
@@ -77,7 +107,7 @@ impl BfpBlock {
             return Err(anyhow!("exponent {e} exceeds the 10-bit shared-exponent range"));
         }
         let m = fmt.mantissa_bits as i32;
-        let s = (2.0f64).powi(e - m + 2) as f32;
+        let s = (2.0f64).powi(scale_shift(e, fmt.mantissa_bits)) as f32;
         let half = (1i64 << (m - 1)) as f32;
         let mantissas = v
             .iter()
@@ -94,9 +124,16 @@ impl BfpBlock {
         })
     }
 
+    /// Power-of-two shift of this block's dequantization scale (see
+    /// [`scale_shift`]).
+    #[inline]
+    pub fn scale_shift(&self) -> i32 {
+        scale_shift(self.exponent, self.format.mantissa_bits)
+    }
+
     /// Decode back to f32: mant * 2^(e - m + 2).
     pub fn decode(&self) -> Vec<f32> {
-        let s = (2.0f64).powi(self.exponent - self.format.mantissa_bits as i32 + 2) as f32;
+        let s = (2.0f64).powi(self.scale_shift()) as f32;
         self.mantissas.iter().map(|&q| q as f32 * s).collect()
     }
 
@@ -325,5 +362,33 @@ mod tests {
         let fmt = BlockFormat::new(4, 16).unwrap();
         let t = BfpTensor::encode(&[0.0; 20], fmt).unwrap();
         assert_eq!(t.decode(), vec![0.0; 20]);
+    }
+
+    #[test]
+    fn storage_bits_agrees_with_density_model() {
+        // The software layout and the hw_model/§2 density arithmetic
+        // must quote the same bits/value as block counts grow.
+        for (m, b) in [(4u32, 64usize), (6, 16), (8, 576)] {
+            let fmt = BlockFormat::new(m, b).unwrap();
+            let n = 64 * b; // whole blocks: exact agreement
+            assert_eq!(
+                fmt.storage_bits(n) as f64 / n as f64,
+                crate::bfp::bits_per_value(m, b),
+                "m={m} b={b}"
+            );
+            let ones = vec![1.0f32; n];
+            let t = BfpTensor::encode(&ones, fmt).unwrap();
+            assert_eq!(t.storage_bits(), fmt.storage_bits(n));
+        }
+    }
+
+    #[test]
+    fn scale_shift_is_the_decode_scale() {
+        let fmt = BlockFormat::new(4, 8).unwrap();
+        let blk = BfpBlock::encode(&[1.5f32; 8], fmt).unwrap();
+        assert_eq!(blk.scale_shift(), blk.exponent - 4 + 2);
+        assert_eq!(scale_shift(0, 4), -2);
+        let s = (2.0f64).powi(blk.scale_shift()) as f32;
+        assert_eq!(blk.decode()[0], blk.mantissas[0] as f32 * s);
     }
 }

@@ -6,8 +6,15 @@
 //! BFP, the dot product needs **no floating point** until the final
 //! accumulation, which is why the silicon cost in `hw_model` is dominated
 //! by small fixed-point multipliers.
+//!
+//! [`bfp_dot_fixed_point`] runs on the packed planes
+//! ([`super::gemm::packed_dot`]); [`bfp_dot_blocks`] is the per-block
+//! scalar reference it stays bit-identical to.
 
 use super::block::{BfpBlock, BfpTensor, BlockFormat};
+use super::gemm::packed_dot;
+use super::packed::BfpMatrix;
+use super::quantize::Quantizer;
 use anyhow::{anyhow, Result};
 
 /// Dot product of two encoded blocks using pure integer arithmetic:
@@ -25,24 +32,22 @@ pub fn bfp_dot_blocks(x: &BfpBlock, y: &BfpBlock) -> Result<f64> {
     for (&a, &b) in x.mantissas.iter().zip(&y.mantissas) {
         acc += a as i64 * b as i64;
     }
-    let shift = (x.exponent - x.format.mantissa_bits as i32 + 2)
-        + (y.exponent - y.format.mantissa_bits as i32 + 2);
+    let shift = x.scale_shift() + y.scale_shift();
     Ok(acc as f64 * (2.0f64).powi(shift))
 }
 
 /// Fixed-point dot product of two equal-length vectors, blocked with
-/// `fmt`: encode both sides, run integer MACs per block, accumulate.
+/// `fmt`: encode both sides into packed planes, run integer MACs per
+/// block pair, accumulate. Bit-identical to summing
+/// [`bfp_dot_blocks`] over a [`BfpTensor`] pair in block order.
 pub fn bfp_dot_fixed_point(x: &[f32], y: &[f32], fmt: BlockFormat) -> Result<f64> {
     if x.len() != y.len() {
         return Err(anyhow!("length mismatch {} vs {}", x.len(), y.len()));
     }
-    let tx = BfpTensor::encode(x, fmt)?;
-    let ty = BfpTensor::encode(y, fmt)?;
-    let mut acc = 0.0f64;
-    for (bx, by) in tx.blocks.iter().zip(&ty.blocks) {
-        acc += bfp_dot_blocks(bx, by)?;
-    }
-    Ok(acc)
+    let q = Quantizer::nearest(fmt.mantissa_bits);
+    let xp = BfpMatrix::encode(x, 1, x.len(), fmt, q)?;
+    let yp = BfpMatrix::encode(y, 1, y.len(), fmt, q)?;
+    packed_dot(&xp, &yp)
 }
 
 /// Float-side reference: dot of the dequantized tensors in f64.
@@ -77,6 +82,23 @@ mod tests {
                 (fixed - float).abs() <= 1e-9 * float.abs().max(1.0),
                 "m={m} b={b}: {fixed} vs {float}"
             );
+        }
+    }
+
+    #[test]
+    fn packed_dot_bit_identical_to_scalar_blocks() {
+        for (m, b, n) in [(3u32, 8usize, 77usize), (4, 64, 500), (8, 16, 130), (12, 25, 60)] {
+            let fmt = BlockFormat::new(m, b).unwrap();
+            let x = randn(n, 3);
+            let y = randn(n, 4);
+            let got = bfp_dot_fixed_point(&x, &y, fmt).unwrap();
+            let tx = BfpTensor::encode(&x, fmt).unwrap();
+            let ty = BfpTensor::encode(&y, fmt).unwrap();
+            let mut want = 0.0f64;
+            for (bx, by) in tx.blocks.iter().zip(&ty.blocks) {
+                want += bfp_dot_blocks(bx, by).unwrap();
+            }
+            assert_eq!(got.to_bits(), want.to_bits(), "m={m} b={b} n={n}");
         }
     }
 

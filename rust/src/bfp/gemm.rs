@@ -1,0 +1,427 @@
+//! Cache-tiled, register-blocked, optionally multi-threaded fixed-point
+//! GEMM over packed BFP operands — the production datapath behind
+//! [`super::matrix::hbfp_gemm`].
+//!
+//! # Kernel shape
+//!
+//! Output is computed in `TILE_J`-wide strips per activation row. For
+//! each block along the contraction axis, one activation block is
+//! loaded once and MAC'd against four weight blocks at a time (the
+//! register-blocked micro-kernel), accumulating in `i32` when both
+//! planes are 8-bit (the products fit 2^14, so i32 holds any practical
+//! block) and `i64` otherwise. Block sums are combined into the f64
+//! accumulator at tile edges via one exact power-of-two scale per block
+//! pair.
+//!
+//! # Thread partitioning rule
+//!
+//! Work is split over **whole activation rows** into contiguous bands,
+//! one `std::thread::scope` thread per band (bounded by
+//! `available_parallelism`, overridable with `BOOSTERS_GEMM_THREADS`).
+//! Each output element is still accumulated by exactly one thread in
+//! ascending block order, so the parallel result is bit-identical to
+//! the single-threaded one — and both are bit-identical to the scalar
+//! [`super::matrix::hbfp_gemm_scalar`] reference, which the property
+//! tests enforce.
+
+use super::block::scale_shift;
+use super::matrix::Mat;
+use super::packed::{BfpMatrix, Mantissa, MantissaPlane};
+use anyhow::{bail, Result};
+
+/// Output-strip width of the micro-kernel (f64 accumulators held in
+/// registers while one activation block streams the weight plane).
+const TILE_J: usize = 8;
+
+/// Below this many MACs, thread spawn overhead dominates; stay serial.
+const PARALLEL_MIN_MACS: usize = 1 << 22;
+
+/// Largest block size whose i8 x i8 block MAC provably fits i32
+/// (|product| <= 2^14, so 2^16 terms stay under 2^30).
+const MAX_I32_BLOCK: usize = 1 << 16;
+
+/// Exact 2^shift in f64. Bit-construction covers the normal range;
+/// `powi` handles the subnormal tail identically to the scalar path.
+#[inline]
+pub(crate) fn exp2_f64(shift: i32) -> f64 {
+    if (-1022..=1023).contains(&shift) {
+        f64::from_bits(((shift + 1023) as u64) << 52)
+    } else {
+        (2.0f64).powi(shift)
+    }
+}
+
+/// Integer MAC over one block pair.
+#[inline]
+fn dot_block<A: Mantissa, B: Mantissa>(a: &[A], w: &[B]) -> i64 {
+    if A::NARROW && B::NARROW && a.len() <= MAX_I32_BLOCK {
+        let mut acc = 0i32;
+        for (&x, &y) in a.iter().zip(w) {
+            acc += x.widen() * y.widen();
+        }
+        acc as i64
+    } else {
+        let mut acc = 0i64;
+        for (&x, &y) in a.iter().zip(w) {
+            acc += x.widen() as i64 * y.widen() as i64;
+        }
+        acc
+    }
+}
+
+/// Register-blocked micro-kernel: one activation block against four
+/// weight blocks, four accumulators live at once.
+#[inline]
+fn dot_block4<A: Mantissa, B: Mantissa>(
+    a: &[A],
+    w0: &[B],
+    w1: &[B],
+    w2: &[B],
+    w3: &[B],
+) -> [i64; 4] {
+    let n = a.len();
+    let (w0, w1, w2, w3) = (&w0[..n], &w1[..n], &w2[..n], &w3[..n]);
+    if A::NARROW && B::NARROW && n <= MAX_I32_BLOCK {
+        let (mut c0, mut c1, mut c2, mut c3) = (0i32, 0i32, 0i32, 0i32);
+        for i in 0..n {
+            let x = a[i].widen();
+            c0 += x * w0[i].widen();
+            c1 += x * w1[i].widen();
+            c2 += x * w2[i].widen();
+            c3 += x * w3[i].widen();
+        }
+        [c0 as i64, c1 as i64, c2 as i64, c3 as i64]
+    } else {
+        let (mut c0, mut c1, mut c2, mut c3) = (0i64, 0i64, 0i64, 0i64);
+        for i in 0..n {
+            let x = a[i].widen() as i64;
+            c0 += x * w0[i].widen() as i64;
+            c1 += x * w1[i].widen() as i64;
+            c2 += x * w2[i].widen() as i64;
+            c3 += x * w3[i].widen() as i64;
+        }
+        [c0, c1, c2, c3]
+    }
+}
+
+/// One contiguous band of activation rows (`r0 .. r0 + band_rows`).
+#[allow(clippy::too_many_arguments)]
+fn gemm_band<A: Mantissa, B: Mantissa>(
+    xm: &[A],
+    wm: &[B],
+    xsh: &[i32],
+    wsh: &[i32],
+    r0: usize,
+    band_rows: usize,
+    n: usize,
+    kb: usize,
+    b: usize,
+    out: &mut [f32],
+) {
+    let stride = kb * b;
+    let mut acc = [0.0f64; TILE_J];
+    for i in 0..band_rows {
+        let gi = r0 + i;
+        let xrow = &xm[gi * stride..(gi + 1) * stride];
+        let xs = &xsh[gi * kb..(gi + 1) * kb];
+        let orow = &mut out[i * n..(i + 1) * n];
+        let mut j0 = 0;
+        while j0 < n {
+            let tj = TILE_J.min(n - j0);
+            acc[..tj].fill(0.0);
+            for k in 0..kb {
+                let a = &xrow[k * b..(k + 1) * b];
+                let sx = xs[k];
+                let mut jj = 0;
+                while jj + 4 <= tj {
+                    let j = j0 + jj;
+                    let o0 = j * stride + k * b;
+                    let (o1, o2, o3) = (o0 + stride, o0 + 2 * stride, o0 + 3 * stride);
+                    let macs = dot_block4(
+                        a,
+                        &wm[o0..o0 + b],
+                        &wm[o1..o1 + b],
+                        &wm[o2..o2 + b],
+                        &wm[o3..o3 + b],
+                    );
+                    for (q, &mac) in macs.iter().enumerate() {
+                        if mac != 0 {
+                            acc[jj + q] += mac as f64 * exp2_f64(sx + wsh[(j + q) * kb + k]);
+                        }
+                    }
+                    jj += 4;
+                }
+                while jj < tj {
+                    let j = j0 + jj;
+                    let mac = dot_block(a, &wm[j * stride + k * b..j * stride + (k + 1) * b]);
+                    if mac != 0 {
+                        acc[jj] += mac as f64 * exp2_f64(sx + wsh[j * kb + k]);
+                    }
+                    jj += 1;
+                }
+            }
+            for (jj, &v) in acc[..tj].iter().enumerate() {
+                orow[j0 + jj] = v as f32;
+            }
+            j0 += tj;
+        }
+    }
+}
+
+/// Thread count for an `rows x cols` output with `k` MACs per element.
+fn gemm_threads(rows: usize, cols: usize, k: usize) -> usize {
+    let macs = rows.saturating_mul(cols).saturating_mul(k);
+    if macs < PARALLEL_MIN_MACS || rows < 2 {
+        return 1;
+    }
+    let hw = std::env::var("BOOSTERS_GEMM_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        });
+    hw.min(rows).min(16)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_dispatch<A: Mantissa, B: Mantissa>(
+    xm: &[A],
+    wm: &[B],
+    xsh: &[i32],
+    wsh: &[i32],
+    m: usize,
+    n: usize,
+    kb: usize,
+    b: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    if threads <= 1 {
+        gemm_band(xm, wm, xsh, wsh, 0, m, n, kb, b, out);
+        return;
+    }
+    let band = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, chunk) in out.chunks_mut(band * n).enumerate() {
+            let r0 = t * band;
+            s.spawn(move || {
+                gemm_band(xm, wm, xsh, wsh, r0, chunk.len() / n, n, kb, b, chunk);
+            });
+        }
+    });
+}
+
+/// `x (m x K)` times the matrix whose columns `rhs_t` packs
+/// (`rhs_t.rows = n` columns over `K`), producing `m x n`. Mantissa
+/// widths may differ between the operands (the bit-sliced
+/// mixed-precision case); block sizes must match.
+pub fn gemm_packed(x: &BfpMatrix, rhs_t: &BfpMatrix) -> Result<Mat> {
+    if x.cols != rhs_t.cols {
+        bail!("contraction dims {} vs {}", x.cols, rhs_t.cols);
+    }
+    if x.fmt.block_size != rhs_t.fmt.block_size {
+        bail!(
+            "block size mismatch {} vs {}",
+            x.fmt.block_size,
+            rhs_t.fmt.block_size
+        );
+    }
+    let (m, n) = (x.rows, rhs_t.rows);
+    let mut out = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return Ok(out);
+    }
+    let kb = x.blocks_per_row;
+    debug_assert_eq!(kb, rhs_t.blocks_per_row);
+    let b = x.fmt.block_size;
+    let xsh: Vec<i32> = x
+        .exponents
+        .iter()
+        .map(|&e| scale_shift(e, x.fmt.mantissa_bits))
+        .collect();
+    let wsh: Vec<i32> = rhs_t
+        .exponents
+        .iter()
+        .map(|&e| scale_shift(e, rhs_t.fmt.mantissa_bits))
+        .collect();
+    let threads = gemm_threads(m, n, kb * b);
+    match (&x.mantissas, &rhs_t.mantissas) {
+        (MantissaPlane::I8(a), MantissaPlane::I8(w)) => {
+            gemm_dispatch(a, w, &xsh, &wsh, m, n, kb, b, &mut out.data, threads)
+        }
+        (MantissaPlane::I8(a), MantissaPlane::I16(w)) => {
+            gemm_dispatch(a, w, &xsh, &wsh, m, n, kb, b, &mut out.data, threads)
+        }
+        (MantissaPlane::I16(a), MantissaPlane::I8(w)) => {
+            gemm_dispatch(a, w, &xsh, &wsh, m, n, kb, b, &mut out.data, threads)
+        }
+        (MantissaPlane::I16(a), MantissaPlane::I16(w)) => {
+            gemm_dispatch(a, w, &xsh, &wsh, m, n, kb, b, &mut out.data, threads)
+        }
+    }
+    Ok(out)
+}
+
+/// Flat fixed-point inner product of two identically shaped packed
+/// operands: integer MAC per block pair, one exponent add per pair,
+/// f64 accumulation across blocks in ascending order — the packed
+/// replacement for the scalar `bfp_dot_blocks` loop, bit-identical
+/// to it.
+pub fn packed_dot(x: &BfpMatrix, y: &BfpMatrix) -> Result<f64> {
+    if x.rows != y.rows || x.cols != y.cols {
+        bail!(
+            "shape mismatch {}x{} vs {}x{}",
+            x.rows,
+            x.cols,
+            y.rows,
+            y.cols
+        );
+    }
+    if x.fmt.block_size != y.fmt.block_size {
+        bail!(
+            "block size mismatch {} vs {}",
+            x.fmt.block_size,
+            y.fmt.block_size
+        );
+    }
+    let b = x.fmt.block_size;
+    let (mx, my) = (x.fmt.mantissa_bits, y.fmt.mantissa_bits);
+    Ok(match (&x.mantissas, &y.mantissas) {
+        (MantissaPlane::I8(a), MantissaPlane::I8(w)) => {
+            dot_typed(a, w, &x.exponents, &y.exponents, mx, my, b)
+        }
+        (MantissaPlane::I8(a), MantissaPlane::I16(w)) => {
+            dot_typed(a, w, &x.exponents, &y.exponents, mx, my, b)
+        }
+        (MantissaPlane::I16(a), MantissaPlane::I8(w)) => {
+            dot_typed(a, w, &x.exponents, &y.exponents, mx, my, b)
+        }
+        (MantissaPlane::I16(a), MantissaPlane::I16(w)) => {
+            dot_typed(a, w, &x.exponents, &y.exponents, mx, my, b)
+        }
+    })
+}
+
+fn dot_typed<A: Mantissa, B: Mantissa>(
+    a: &[A],
+    w: &[B],
+    xe: &[i32],
+    ye: &[i32],
+    mx: u32,
+    my: u32,
+    b: usize,
+) -> f64 {
+    let mut acc = 0.0f64;
+    for (bi, (xe, ye)) in xe.iter().zip(ye).enumerate() {
+        let mac = dot_block(&a[bi * b..(bi + 1) * b], &w[bi * b..(bi + 1) * b]);
+        if mac != 0 {
+            acc += mac as f64 * exp2_f64(scale_shift(*xe, mx) + scale_shift(*ye, my));
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::{BlockFormat, Quantizer};
+    use crate::util::Rng;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal_scaled(1.0)).collect()
+    }
+
+    #[test]
+    fn exp2_matches_powi_across_the_exponent_budget() {
+        // Encoded exponents live in [-512, 511]; pair shifts span about
+        // [-1052, 1022], crossing into the subnormal range.
+        for shift in (-1060..=1030).step_by(7) {
+            assert_eq!(
+                exp2_f64(shift).to_bits(),
+                (2.0f64).powi(shift).to_bits(),
+                "shift {shift}"
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_agrees_with_dequant_matmul() {
+        let fmt = BlockFormat::new(6, 16).unwrap();
+        let q = Quantizer::nearest(6);
+        let x = Mat::new(7, 50, randn(350, 1)).unwrap();
+        let w = Mat::new(50, 9, randn(450, 2)).unwrap();
+        let xp = BfpMatrix::encode(&x.data, 7, 50, fmt, q).unwrap();
+        let wp = BfpMatrix::encode_transposed(&w, fmt, q).unwrap();
+        let got = gemm_packed(&xp, &wp).unwrap();
+        let want = xp.to_mat().matmul(&wp.decode_transposed()).unwrap();
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn mixed_width_operands_compose() {
+        // HBFP6 activations against HBFP12 weights: i8 x i16 planes.
+        let f6 = BlockFormat::new(6, 32).unwrap();
+        let f12 = BlockFormat::new(12, 32).unwrap();
+        let x = Mat::new(3, 64, randn(192, 3)).unwrap();
+        let w = Mat::new(64, 4, randn(256, 4)).unwrap();
+        let xp = BfpMatrix::encode(&x.data, 3, 64, f6, Quantizer::nearest(6)).unwrap();
+        let wp = BfpMatrix::encode_transposed(&w, f12, Quantizer::nearest(12)).unwrap();
+        let got = gemm_packed(&xp, &wp).unwrap();
+        let want = xp.to_mat().matmul(&wp.decode_transposed()).unwrap();
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn threaded_result_is_bit_identical_to_serial() {
+        // Drives the dispatcher with explicit thread counts (no env-var
+        // mutation, which would race other tests in this binary).
+        let fmt = BlockFormat::new(4, 64).unwrap();
+        let q = Quantizer::nearest(4);
+        let x = Mat::new(96, 640, randn(96 * 640, 5)).unwrap();
+        let w = Mat::new(640, 96, randn(640 * 96, 6)).unwrap();
+        let xp = BfpMatrix::encode(&x.data, 96, 640, fmt, q).unwrap();
+        let wp = BfpMatrix::encode_transposed(&w, fmt, q).unwrap();
+        let xsh: Vec<i32> = xp.exponents.iter().map(|&e| scale_shift(e, 4)).collect();
+        let wsh: Vec<i32> = wp.exponents.iter().map(|&e| scale_shift(e, 4)).collect();
+        let (MantissaPlane::I8(a), MantissaPlane::I8(b)) = (&xp.mantissas, &wp.mantissas) else {
+            panic!("hbfp4 must use the i8 plane");
+        };
+        let mut serial = vec![0.0f32; 96 * 96];
+        let mut threaded = vec![0.0f32; 96 * 96];
+        gemm_dispatch(a, b, &xsh, &wsh, 96, 96, 10, 64, &mut serial, 1);
+        gemm_dispatch(a, b, &xsh, &wsh, 96, 96, 10, 64, &mut threaded, 4);
+        // Uneven band split: 96 rows over 5 threads -> 20,20,20,20,16.
+        let mut uneven = vec![0.0f32; 96 * 96];
+        gemm_dispatch(a, b, &xsh, &wsh, 96, 96, 10, 64, &mut uneven, 5);
+        for ((s, t), u) in serial.iter().zip(&threaded).zip(&uneven) {
+            assert_eq!(s.to_bits(), t.to_bits());
+            assert_eq!(s.to_bits(), u.to_bits());
+        }
+        // The public entry agrees with the explicit serial kernel.
+        let via_public = gemm_packed(&xp, &wp).unwrap();
+        for (s, p) in serial.iter().zip(&via_public.data) {
+            assert_eq!(s.to_bits(), p.to_bits());
+        }
+    }
+
+    #[test]
+    fn shape_and_block_mismatches_rejected() {
+        let f16 = BlockFormat::new(4, 16).unwrap();
+        let f64b = BlockFormat::new(4, 64).unwrap();
+        let q = Quantizer::nearest(4);
+        let a = BfpMatrix::encode(&randn(32, 7), 2, 16, f16, q).unwrap();
+        let b = BfpMatrix::encode(&randn(48, 8), 3, 16, f64b, q).unwrap();
+        let c = BfpMatrix::encode(&randn(34, 9), 2, 17, f16, q).unwrap();
+        assert!(gemm_packed(&a, &b).is_err()); // block size mismatch
+        assert!(gemm_packed(&a, &c).is_err()); // contraction mismatch
+        assert!(packed_dot(&a, &c).is_err());
+    }
+}

@@ -7,8 +7,15 @@
 //! row-major (contraction dim K innermost), `w` is blocked along K too
 //! (transposed before flattening), both padded with zeros to a block
 //! multiple.
+//!
+//! [`hbfp_gemm`] encodes each operand **once** into a packed
+//! [`BfpMatrix`] (structure-of-arrays mantissa/exponent planes) and runs
+//! the tiled parallel kernel in [`super::gemm`]. The original per-block
+//! triple loop survives as [`hbfp_gemm_scalar`], the bit-identical
+//! reference that property tests pin the packed path against.
 
 use super::block::{BfpBlock, BlockFormat};
+use super::packed::BfpMatrix;
 use super::quantize::Quantizer;
 use anyhow::{bail, Result};
 
@@ -74,10 +81,18 @@ impl Mat {
 }
 
 /// One operand row encoded as BFP blocks along K (zero-padded tail).
-fn encode_row(row: &[f32], fmt: BlockFormat, q: Quantizer, base: u32) -> Result<Vec<BfpBlock>> {
+/// `buf` is caller-provided block-size scratch, hoisted so per-row calls
+/// allocate only the block Vec itself.
+fn encode_row(
+    row: &[f32],
+    fmt: BlockFormat,
+    q: Quantizer,
+    base: u32,
+    buf: &mut [f32],
+) -> Result<Vec<BfpBlock>> {
     let b = fmt.block_size;
+    debug_assert_eq!(buf.len(), b);
     let mut blocks = Vec::with_capacity(row.len().div_ceil(b));
-    let mut buf = vec![0.0f32; b];
     for (bi, chunk) in row.chunks(b).enumerate() {
         let idx = base.wrapping_add((bi * b) as u32);
         if chunk.len() == b {
@@ -85,7 +100,7 @@ fn encode_row(row: &[f32], fmt: BlockFormat, q: Quantizer, base: u32) -> Result<
         } else {
             buf.fill(0.0);
             buf[..chunk.len()].copy_from_slice(chunk);
-            blocks.push(BfpBlock::encode_with(&buf, fmt, q, idx)?);
+            blocks.push(BfpBlock::encode_with(buf, fmt, q, idx)?);
         }
     }
     Ok(blocks)
@@ -93,18 +108,36 @@ fn encode_row(row: &[f32], fmt: BlockFormat, q: Quantizer, base: u32) -> Result<
 
 /// Fixed-point HBFP GEMM: y = Q(x) @ Q(w) with integer MACs per block
 /// pair, one exponent add per block pair, FP32 result store.
+///
+/// Production path: both operands are packed once into [`BfpMatrix`]
+/// planes, then multiplied by the tiled parallel fixed-point kernel.
+/// Bit-identical to [`hbfp_gemm_scalar`] (property-tested).
 pub fn hbfp_gemm(x: &Mat, w: &Mat, fmt: BlockFormat) -> Result<Mat> {
     if x.cols != w.rows {
         bail!("inner dims {} vs {}", x.cols, w.rows);
     }
     let q = Quantizer::nearest(fmt.mantissa_bits);
+    let xp = BfpMatrix::encode(&x.data, x.rows, x.cols, fmt, q)?;
+    let wp = BfpMatrix::encode_transposed(w, fmt, q)?;
+    xp.gemm(&wp)
+}
+
+/// The original per-block scalar GEMM, kept as the reference
+/// implementation the packed kernel is cross-checked against. Same
+/// numerics, allocation-bound performance.
+pub fn hbfp_gemm_scalar(x: &Mat, w: &Mat, fmt: BlockFormat) -> Result<Mat> {
+    if x.cols != w.rows {
+        bail!("inner dims {} vs {}", x.cols, w.rows);
+    }
+    let q = Quantizer::nearest(fmt.mantissa_bits);
+    let mut buf = vec![0.0f32; fmt.block_size];
     // Encode x rows (K innermost) and w columns (transpose first).
     let xrows: Vec<Vec<BfpBlock>> = (0..x.rows)
-        .map(|i| encode_row(&x.data[i * x.cols..(i + 1) * x.cols], fmt, q, 0))
+        .map(|i| encode_row(&x.data[i * x.cols..(i + 1) * x.cols], fmt, q, 0, &mut buf))
         .collect::<Result<_>>()?;
     let wt = w.transpose();
     let wcols: Vec<Vec<BfpBlock>> = (0..wt.rows)
-        .map(|j| encode_row(&wt.data[j * wt.cols..(j + 1) * wt.cols], fmt, q, 0))
+        .map(|j| encode_row(&wt.data[j * wt.cols..(j + 1) * wt.cols], fmt, q, 0, &mut buf))
         .collect::<Result<_>>()?;
 
     let mut out = Mat::zeros(x.rows, w.cols);
@@ -117,8 +150,7 @@ pub fn hbfp_gemm(x: &Mat, w: &Mat, fmt: BlockFormat) -> Result<Mat> {
                 for (&a, &b) in bx.mantissas.iter().zip(&bw.mantissas) {
                     iacc += a as i64 * b as i64;
                 }
-                let shift = (bx.exponent - fmt.mantissa_bits as i32 + 2)
-                    + (bw.exponent - fmt.mantissa_bits as i32 + 2);
+                let shift = bx.scale_shift() + bw.scale_shift();
                 acc += iacc as f64 * (2.0f64).powi(shift);
             }
             out.data[i * w.cols + j] = acc as f32;
@@ -129,26 +161,19 @@ pub fn hbfp_gemm(x: &Mat, w: &Mat, fmt: BlockFormat) -> Result<Mat> {
 
 /// Quantize-then-float reference for [`hbfp_gemm`] (what the compiled
 /// emulation graph computes, modulo its f32 accumulation order).
+///
+/// Consumes the packed encoding directly: `x` decodes in place from its
+/// planes, `w` is encoded column-wise and decoded straight back into the
+/// `k x n` orientation — no transpose round-trips, no full-matrix
+/// clones.
 pub fn dequant_gemm(x: &Mat, w: &Mat, fmt: BlockFormat) -> Result<Mat> {
+    if x.cols != w.rows {
+        bail!("inner dims {} vs {}", x.cols, w.rows);
+    }
     let q = Quantizer::nearest(fmt.mantissa_bits);
-    let mut xq = x.clone();
-    for i in 0..x.rows {
-        let row = &x.data[i * x.cols..(i + 1) * x.cols];
-        let enc = encode_row(row, fmt, q, 0)?;
-        let mut flat: Vec<f32> = enc.iter().flat_map(|b| b.decode()).collect();
-        flat.truncate(x.cols);
-        xq.data[i * x.cols..(i + 1) * x.cols].copy_from_slice(&flat);
-    }
-    let wt = w.transpose();
-    let mut wqt = wt.clone();
-    for j in 0..wt.rows {
-        let row = &wt.data[j * wt.cols..(j + 1) * wt.cols];
-        let enc = encode_row(row, fmt, q, 0)?;
-        let mut flat: Vec<f32> = enc.iter().flat_map(|b| b.decode()).collect();
-        flat.truncate(wt.cols);
-        wqt.data[j * wt.cols..(j + 1) * wt.cols].copy_from_slice(&flat);
-    }
-    xq.matmul(&wqt.transpose())
+    let xq = BfpMatrix::encode(&x.data, x.rows, x.cols, fmt, q)?.to_mat();
+    let wq = BfpMatrix::encode_transposed(w, fmt, q)?.decode_transposed();
+    xq.matmul(&wq)
 }
 
 #[cfg(test)]
@@ -188,6 +213,28 @@ mod tests {
     }
 
     #[test]
+    fn packed_gemm_bit_identical_to_scalar_reference() {
+        for (m, b, (r, k, c)) in [
+            (4u32, 16usize, (5usize, 40usize, 7usize)),
+            (6, 64, (4, 130, 9)),
+            (8, 25, (3, 26, 3)),
+        ] {
+            let fmt = BlockFormat::new(m, b).unwrap();
+            let x = randmat(r, k, 11);
+            let w = randmat(k, c, 12);
+            let packed = hbfp_gemm(&x, &w, fmt).unwrap();
+            let scalar = hbfp_gemm_scalar(&x, &w, fmt).unwrap();
+            for (i, (a, bb)) in packed.data.iter().zip(&scalar.data).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    bb.to_bits(),
+                    "m={m} b={b} elem {i}: {a} vs {bb}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn high_mantissa_approaches_exact() {
         let fmt = BlockFormat::new(12, 16).unwrap();
         let x = randmat(6, 48, 3);
@@ -203,7 +250,10 @@ mod tests {
     fn shape_errors() {
         let x = randmat(2, 3, 5);
         let w = randmat(4, 2, 6);
-        assert!(hbfp_gemm(&x, &w, BlockFormat::new(4, 16).unwrap()).is_err());
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        assert!(hbfp_gemm(&x, &w, fmt).is_err());
+        assert!(hbfp_gemm_scalar(&x, &w, fmt).is_err());
+        assert!(dequant_gemm(&x, &w, fmt).is_err());
         assert!(Mat::new(2, 2, vec![0.0; 3]).is_err());
     }
 

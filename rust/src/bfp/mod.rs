@@ -10,16 +10,42 @@
 //! `artifacts/golden_bfp.json` (integration test `rust/tests/golden_bfp.rs`)
 //! — so host-side analysis (Wasserstein sweeps, Fig 1) sees exactly the
 //! numerics the AOT-compiled training graph applies.
+//!
+//! # Packed memory layout (the production datapath)
+//!
+//! The hot path stores tensors as **structure-of-arrays planes** in
+//! [`packed::BfpMatrix`], not as per-block objects:
+//!
+//! * mantissa plane — contiguous `i8` (m <= 8) or `i16` (m <= 16)
+//!   integers chosen by [`block::BlockFormat::plane_dtype`]; rows are
+//!   padded to whole blocks, stride = `blocks_per_row * block_size`;
+//! * exponent plane — one `i32` per block, `blocks_per_row` per row;
+//! * scale rule — a mantissa decodes as `q * 2^scale_shift(e, m)` with
+//!   [`block::scale_shift`]`(e, m) = e - m + 2` (Eq. 1), the single
+//!   home of the `+2`.
+//!
+//! [`gemm`] runs a cache-tiled, register-blocked, row-band-parallel
+//! fixed-point GEMM over those planes (thread partitioning is by whole
+//! output rows, so parallel results are bit-identical to serial).
+//! Encoding happens once per operand; the scalar [`block::BfpBlock`] /
+//! [`matrix::hbfp_gemm_scalar`] path is retained as the reference the
+//! property tests cross-check bit-for-bit.
 
 pub mod block;
 pub mod dot;
+pub mod gemm;
 pub mod matrix;
+pub mod packed;
 pub mod quantize;
 pub mod rounding;
 
-pub use block::{BfpBlock, BfpTensor, BlockFormat};
+pub use block::{scale_shift, BfpBlock, BfpTensor, BlockFormat};
 pub use dot::{bfp_dot_blocks, bfp_dot_fixed_point, dequant_dot};
-pub use matrix::{dequant_gemm, hbfp_gemm, Mat};
+pub use gemm::{gemm_packed, packed_dot};
+pub use matrix::{dequant_gemm, hbfp_gemm, hbfp_gemm_scalar, Mat};
+pub use packed::{
+    quantize_packed, quantize_packed_into, BfpMatrix, Mantissa, MantissaPlane, PlaneDtype,
+};
 pub use quantize::{floor_log2, quantize_blocks_into, quantize_flat, quantize_tensor, Quantizer};
 pub use rounding::{uniform_u01, xorshift_hash, RoundMode};
 

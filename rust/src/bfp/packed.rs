@@ -1,0 +1,671 @@
+//! Packed structure-of-arrays BFP storage — the memory layout of the
+//! whole numeric substrate.
+//!
+//! # Layout contract
+//!
+//! A [`BfpMatrix`] holds a logical `rows x cols` f32 matrix blocked
+//! along its **columns** (the contraction axis) as two contiguous
+//! planes:
+//!
+//! * **Mantissa plane** — one `i8` (mantissa width `m <= 8`) or `i16`
+//!   (`m <= 16`) per value, chosen by [`BlockFormat::plane_dtype`].
+//!   Rows are padded with zero mantissas to a whole number of blocks,
+//!   so the row stride is `blocks_per_row * block_size` entries and
+//!   block `(r, k)` starts at `r * stride + k * block_size`.
+//! * **Exponent plane** — one `i32` shared exponent per block,
+//!   `blocks_per_row` entries per row; block `(r, k)` is at
+//!   `r * blocks_per_row + k`.
+//!
+//! Encoding happens **once**; GEMM/dot kernels ([`super::gemm`]) then
+//! stream the planes with no per-call re-encoding and no per-block heap
+//! objects — the change that turns the host-side HBFP hot path from
+//! allocation-bound into bandwidth-bound. The per-block scalar
+//! [`super::block::BfpBlock`] survives as the reference implementation
+//! the property tests cross-check against.
+//!
+//! Numerics are identical to [`super::quantize::quantize_flat`] (and
+//! therefore to the python oracle pinned by the golden vectors), with
+//! one documented exception: an integer mantissa cannot carry the sign
+//! of `-0.0`, so packed round-trips canonicalize `-0.0` to `+0.0`.
+
+use super::block::{scale_shift, BlockFormat};
+use super::matrix::Mat;
+use super::quantize::{exp2i, floor_log2, quantize_flat, Quantizer};
+use super::rounding::{round_value, uniform_u01, RoundMode};
+use anyhow::{anyhow, Result};
+
+/// Storage element type of the mantissa plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlaneDtype {
+    I8,
+    I16,
+}
+
+impl PlaneDtype {
+    /// Container bits per mantissa as stored on the host (the on-wire
+    /// density claim uses [`BlockFormat::bits_per_value`], not this).
+    pub fn container_bits(&self) -> u32 {
+        match self {
+            PlaneDtype::I8 => 8,
+            PlaneDtype::I16 => 16,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlaneDtype::I8 => "i8",
+            PlaneDtype::I16 => "i16",
+        }
+    }
+}
+
+/// Integer types usable as mantissa-plane elements.
+pub trait Mantissa: Copy + Send + Sync + 'static {
+    /// True for 8-bit storage: block MACs fit i32 accumulators.
+    const NARROW: bool;
+    fn widen(self) -> i32;
+    fn narrow(v: i32) -> Self;
+}
+
+impl Mantissa for i8 {
+    const NARROW: bool = true;
+
+    fn widen(self) -> i32 {
+        self as i32
+    }
+
+    fn narrow(v: i32) -> Self {
+        v as i8
+    }
+}
+
+impl Mantissa for i16 {
+    const NARROW: bool = false;
+
+    fn widen(self) -> i32 {
+        self as i32
+    }
+
+    fn narrow(v: i32) -> Self {
+        v as i16
+    }
+}
+
+/// The contiguous mantissa plane, monomorphized by width.
+#[derive(Debug, Clone)]
+pub enum MantissaPlane {
+    I8(Vec<i8>),
+    I16(Vec<i16>),
+}
+
+impl MantissaPlane {
+    pub fn len(&self) -> usize {
+        match self {
+            MantissaPlane::I8(v) => v.len(),
+            MantissaPlane::I16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> PlaneDtype {
+        match self {
+            MantissaPlane::I8(_) => PlaneDtype::I8,
+            MantissaPlane::I16(_) => PlaneDtype::I16,
+        }
+    }
+
+    /// Resize to `len` zeroed entries of `dtype`, reusing the existing
+    /// allocation when the dtype is unchanged (the sweep hot path).
+    fn prepare(&mut self, dtype: PlaneDtype, len: usize) {
+        match (&mut *self, dtype) {
+            (MantissaPlane::I8(v), PlaneDtype::I8) => {
+                v.clear();
+                v.resize(len, 0);
+            }
+            (MantissaPlane::I16(v), PlaneDtype::I16) => {
+                v.clear();
+                v.resize(len, 0);
+            }
+            (slot, PlaneDtype::I8) => *slot = MantissaPlane::I8(vec![0; len]),
+            (slot, PlaneDtype::I16) => *slot = MantissaPlane::I16(vec![0; len]),
+        }
+    }
+}
+
+/// A whole matrix encoded as packed BFP planes (see module docs for the
+/// layout contract). Encode once, GEMM many times.
+#[derive(Debug, Clone)]
+pub struct BfpMatrix {
+    pub fmt: BlockFormat,
+    /// Logical row count.
+    pub rows: usize,
+    /// Logical column count (contraction axis; padded per row).
+    pub cols: usize,
+    /// Blocks per row = ceil(cols / block_size); row stride in the
+    /// mantissa plane is `blocks_per_row * block_size`.
+    pub blocks_per_row: usize,
+    pub mantissas: MantissaPlane,
+    pub exponents: Vec<i32>,
+}
+
+impl Default for BfpMatrix {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl BfpMatrix {
+    /// An empty reusable buffer; [`Self::encode_into`] gives it shape.
+    pub fn empty() -> Self {
+        Self {
+            fmt: BlockFormat {
+                mantissa_bits: 4,
+                block_size: 1,
+            },
+            rows: 0,
+            cols: 0,
+            blocks_per_row: 0,
+            mantissas: MantissaPlane::I8(Vec::new()),
+            exponents: Vec::new(),
+        }
+    }
+
+    /// Row stride of the mantissa plane in elements.
+    pub fn row_stride(&self) -> usize {
+        self.blocks_per_row * self.fmt.block_size
+    }
+
+    /// Total storage bits of the encoded planes at wire density
+    /// (mantissa bits + amortized shared exponents) — by construction
+    /// equal to [`BlockFormat::storage_bits`] summed over rows, which
+    /// is what ties the software layout to the `hw_model` density
+    /// arithmetic.
+    pub fn storage_bits(&self) -> usize {
+        self.rows * self.blocks_per_row * self.fmt.bits_per_block()
+    }
+
+    /// Encode a row-major `rows x cols` buffer. Blocking runs along
+    /// columns with a zero-padded tail; every row restarts the
+    /// stochastic-rounding stream at `base` exactly like the scalar
+    /// `encode_row` path it replaces.
+    pub fn encode(
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        fmt: BlockFormat,
+        q: Quantizer,
+    ) -> Result<Self> {
+        let mut out = Self::empty();
+        out.encode_into(data, rows, cols, fmt, q, 0)?;
+        Ok(out)
+    }
+
+    /// [`Self::encode`] into an existing buffer, reusing allocations.
+    pub fn encode_into(
+        &mut self,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        fmt: BlockFormat,
+        q: Quantizer,
+        base: u32,
+    ) -> Result<()> {
+        if rows * cols != data.len() {
+            return Err(anyhow!("shape {rows}x{cols} != {} elems", data.len()));
+        }
+        self.reshape(rows, cols, fmt);
+        match &mut self.mantissas {
+            MantissaPlane::I8(p) => {
+                encode_plane(data, rows, cols, fmt, q, base, p, &mut self.exponents)
+            }
+            MantissaPlane::I16(p) => {
+                encode_plane(data, rows, cols, fmt, q, base, p, &mut self.exponents)
+            }
+        }
+        Ok(())
+    }
+
+    /// Encode the **columns** of `w` (a `k x n` matrix) as packed rows —
+    /// the weight-side layout of a GEMM, blocked along K — without
+    /// materializing the transpose.
+    pub fn encode_transposed(w: &Mat, fmt: BlockFormat, q: Quantizer) -> Result<Self> {
+        let mut out = Self::empty();
+        out.encode_transposed_into(w, fmt, q)?;
+        Ok(out)
+    }
+
+    /// [`Self::encode_transposed`] into an existing buffer.
+    pub fn encode_transposed_into(&mut self, w: &Mat, fmt: BlockFormat, q: Quantizer) -> Result<()> {
+        let (k, n) = (w.rows, w.cols);
+        self.reshape(n, k, fmt);
+        let stride = self.row_stride();
+        // Gather one padded column at a time; the zero tail is written
+        // once and never dirtied (only the first k entries are reused).
+        let mut col = vec![0.0f32; stride];
+        for j in 0..n {
+            for (i, c) in col[..k].iter_mut().enumerate() {
+                *c = w.data[i * n + j];
+            }
+            match &mut self.mantissas {
+                MantissaPlane::I8(p) => encode_padded_row(
+                    &col,
+                    fmt,
+                    q,
+                    0,
+                    &mut p[j * stride..(j + 1) * stride],
+                    &mut self.exponents[j * self.blocks_per_row..(j + 1) * self.blocks_per_row],
+                ),
+                MantissaPlane::I16(p) => encode_padded_row(
+                    &col,
+                    fmt,
+                    q,
+                    0,
+                    &mut p[j * stride..(j + 1) * stride],
+                    &mut self.exponents[j * self.blocks_per_row..(j + 1) * self.blocks_per_row],
+                ),
+            }
+        }
+        Ok(())
+    }
+
+    fn reshape(&mut self, rows: usize, cols: usize, fmt: BlockFormat) {
+        let bpr = cols.div_ceil(fmt.block_size);
+        self.fmt = fmt;
+        self.rows = rows;
+        self.cols = cols;
+        self.blocks_per_row = bpr;
+        let nblocks = rows * bpr;
+        self.exponents.clear();
+        self.exponents.resize(nblocks, 0);
+        self.mantissas.prepare(fmt.plane_dtype(), nblocks * fmt.block_size);
+    }
+
+    /// Decode to the logical `rows x cols` f32 buffer (padding dropped),
+    /// reusing `out`'s allocation.
+    pub fn decode_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.rows * self.cols, 0.0);
+        match &self.mantissas {
+            MantissaPlane::I8(p) => {
+                decode_plane(p, &self.exponents, self.rows, self.cols, self.fmt, out)
+            }
+            MantissaPlane::I16(p) => {
+                decode_plane(p, &self.exponents, self.rows, self.cols, self.fmt, out)
+            }
+        }
+    }
+
+    /// Decode to a fresh [`Mat`].
+    pub fn to_mat(&self) -> Mat {
+        let mut data = Vec::new();
+        self.decode_into(&mut data);
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data,
+        }
+    }
+
+    /// Decode a weight-side (`n` packed rows over K) matrix back to the
+    /// `k x n` orientation a float GEMM consumes — the replacement for
+    /// the old quantize/transpose/transpose-back dance in
+    /// `dequant_gemm`.
+    pub fn decode_transposed(&self) -> Mat {
+        let (n, k) = (self.rows, self.cols);
+        let mut out = Mat::zeros(k, n);
+        match &self.mantissas {
+            MantissaPlane::I8(p) => {
+                decode_plane_transposed(p, &self.exponents, n, k, self.fmt, &mut out.data)
+            }
+            MantissaPlane::I16(p) => {
+                decode_plane_transposed(p, &self.exponents, n, k, self.fmt, &mut out.data)
+            }
+        }
+        out
+    }
+
+    /// Tiled, multi-threaded fixed-point GEMM against a weight-side
+    /// operand encoded along the same contraction axis (see
+    /// [`super::gemm::gemm_packed`]). `self` is `m x K`, `rhs_t` packs
+    /// the `n` columns of a `K x n` weight matrix; the result is
+    /// `m x n`, bit-identical to the scalar [`super::matrix::hbfp_gemm_scalar`]
+    /// reference.
+    pub fn gemm(&self, rhs_t: &BfpMatrix) -> Result<Mat> {
+        super::gemm::gemm_packed(self, rhs_t)
+    }
+}
+
+/// Encode one block: max-magnitude shared exponent, `m`-bit mantissas
+/// (two's complement) via the selected rounding mode. Mirrors
+/// `quantize_block_into` / `BfpBlock::encode_with` operation for
+/// operation so all three paths are bit-compatible.
+fn encode_block<T: Mantissa>(v: &[f32], out: &mut [T], q: Quantizer, base_idx: u32) -> i32 {
+    debug_assert_eq!(v.len(), out.len());
+    let mut maxabs = 0.0f32;
+    for &x in v {
+        let a = x.abs();
+        if a > maxabs {
+            maxabs = a;
+        }
+    }
+    if maxabs < exp2i(-126) {
+        out.fill(T::narrow(0));
+        return 0;
+    }
+    let e = floor_log2(maxabs);
+    let m = q.m_bits as i32;
+    let half = (1i64 << (m - 1)) as f32;
+    let (lo, hi) = (-half, half - 1.0);
+    // Multiplying by the exact reciprocal of the power-of-two interval
+    // is bit-identical to dividing by it (IEEE-754); fall back to
+    // division when the reciprocal exponent leaves the normal range.
+    let sinv_e = -scale_shift(e, q.m_bits);
+    let sinv = if (-126..=127).contains(&sinv_e) {
+        Some(exp2i(sinv_e))
+    } else {
+        None
+    };
+    match (q.mode, sinv) {
+        (RoundMode::NearestEven, Some(si)) => {
+            for (&x, o) in v.iter().zip(out.iter_mut()) {
+                *o = T::narrow((x * si).round_ties_even().clamp(lo, hi) as i32);
+            }
+        }
+        (RoundMode::Stochastic, Some(si)) => {
+            for (i, (&x, o)) in v.iter().zip(out.iter_mut()).enumerate() {
+                let u = uniform_u01(base_idx.wrapping_add(i as u32), q.seed);
+                *o = T::narrow((x * si + u).floor().clamp(lo, hi) as i32);
+            }
+        }
+        (_, None) => {
+            let s = exp2i(scale_shift(e, q.m_bits));
+            for (i, (&x, o)) in v.iter().zip(out.iter_mut()).enumerate() {
+                let r = round_value(x / s, q.mode, base_idx.wrapping_add(i as u32), q.seed);
+                *o = T::narrow(r.clamp(lo, hi) as i32);
+            }
+        }
+    }
+    e
+}
+
+/// Encode one already-padded row (`len == blocks * block_size`).
+fn encode_padded_row<T: Mantissa>(
+    row: &[f32],
+    fmt: BlockFormat,
+    q: Quantizer,
+    base: u32,
+    plane_row: &mut [T],
+    exps_row: &mut [i32],
+) {
+    let b = fmt.block_size;
+    for (bi, (src, dst)) in row.chunks(b).zip(plane_row.chunks_mut(b)).enumerate() {
+        let idx = base.wrapping_add((bi * b) as u32);
+        exps_row[bi] = encode_block(src, dst, q, idx);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn encode_plane<T: Mantissa>(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: BlockFormat,
+    q: Quantizer,
+    base: u32,
+    plane: &mut [T],
+    exps: &mut [i32],
+) {
+    let b = fmt.block_size;
+    let bpr = cols.div_ceil(b);
+    let stride = bpr * b;
+    // One scratch block for the ragged tail, hoisted out of all loops.
+    let mut tail = vec![0.0f32; b];
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        for bi in 0..bpr {
+            let idx = base.wrapping_add((bi * b) as u32);
+            let lo = bi * b;
+            let hi = ((bi + 1) * b).min(cols);
+            let dst = &mut plane[r * stride + lo..r * stride + lo + b];
+            let e = if hi - lo == b {
+                encode_block(&row[lo..hi], dst, q, idx)
+            } else {
+                tail.fill(0.0);
+                tail[..hi - lo].copy_from_slice(&row[lo..hi]);
+                encode_block(&tail, dst, q, idx)
+            };
+            exps[r * bpr + bi] = e;
+        }
+    }
+}
+
+fn decode_plane<T: Mantissa>(
+    plane: &[T],
+    exps: &[i32],
+    rows: usize,
+    cols: usize,
+    fmt: BlockFormat,
+    out: &mut [f32],
+) {
+    let b = fmt.block_size;
+    let bpr = cols.div_ceil(b);
+    let stride = bpr * b;
+    for r in 0..rows {
+        for bi in 0..bpr {
+            let s = exp2i(scale_shift(exps[r * bpr + bi], fmt.mantissa_bits));
+            let lo = bi * b;
+            let hi = ((bi + 1) * b).min(cols);
+            let src = &plane[r * stride + lo..r * stride + lo + (hi - lo)];
+            let dst = &mut out[r * cols + lo..r * cols + hi];
+            for (o, &mq) in dst.iter_mut().zip(src) {
+                *o = mq.widen() as f32 * s;
+            }
+        }
+    }
+}
+
+fn decode_plane_transposed<T: Mantissa>(
+    plane: &[T],
+    exps: &[i32],
+    n: usize,
+    k: usize,
+    fmt: BlockFormat,
+    out: &mut [f32],
+) {
+    let b = fmt.block_size;
+    let bpr = k.div_ceil(b);
+    let stride = bpr * b;
+    for j in 0..n {
+        for bi in 0..bpr {
+            let s = exp2i(scale_shift(exps[j * bpr + bi], fmt.mantissa_bits));
+            let lo = bi * b;
+            let hi = ((bi + 1) * b).min(k);
+            for t in lo..hi {
+                out[t * n + j] = plane[j * stride + t].widen() as f32 * s;
+            }
+        }
+    }
+}
+
+/// Quantize a flat tensor through the packed carrier — same semantics
+/// (blocking, padding, stochastic stream, site salt) as
+/// [`quantize_flat`], reusing `scratch` and `out` across calls so
+/// sweeps over many `(m, b)` points allocate nothing after warmup.
+pub fn quantize_packed_into(
+    t: &[f32],
+    block: usize,
+    q: Quantizer,
+    site: u32,
+    scratch: &mut BfpMatrix,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    if q.is_bypass() {
+        out.clear();
+        out.extend_from_slice(t);
+        return Ok(());
+    }
+    if !(2..=16).contains(&q.m_bits) {
+        // Mantissas beyond the integer carrier (17..=22): delegate.
+        let flat = quantize_flat(t, block, q, site);
+        out.clear();
+        out.extend_from_slice(&flat);
+        return Ok(());
+    }
+    let fmt = BlockFormat::new(q.m_bits, block)?;
+    scratch.encode_into(t, 1, t.len(), fmt, q, site.wrapping_mul(40503))?;
+    scratch.decode_into(out);
+    Ok(())
+}
+
+/// Convenience wrapper over [`quantize_packed_into`] with fresh buffers.
+pub fn quantize_packed(t: &[f32], block: usize, q: Quantizer, site: u32) -> Vec<f32> {
+    let mut scratch = BfpMatrix::empty();
+    let mut out = Vec::new();
+    quantize_packed_into(t, block, q, site, &mut scratch, &mut out)
+        .expect("block size is validated by callers");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::BfpTensor;
+    use crate::util::Rng;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal_scaled(1.0)).collect()
+    }
+
+    /// f32 equality that identifies +/-0 but is bitwise otherwise.
+    fn same(a: f32, b: f32) -> bool {
+        (a == 0.0 && b == 0.0) || a.to_bits() == b.to_bits()
+    }
+
+    #[test]
+    fn plane_dtype_by_mantissa_width() {
+        assert_eq!(BlockFormat::new(4, 64).unwrap().plane_dtype(), PlaneDtype::I8);
+        assert_eq!(BlockFormat::new(8, 64).unwrap().plane_dtype(), PlaneDtype::I8);
+        assert_eq!(BlockFormat::new(9, 64).unwrap().plane_dtype(), PlaneDtype::I16);
+        assert_eq!(BlockFormat::new(16, 64).unwrap().plane_dtype(), PlaneDtype::I16);
+        assert_eq!(PlaneDtype::I8.container_bits(), 8);
+        assert_eq!(PlaneDtype::I16.label(), "i16");
+    }
+
+    #[test]
+    fn encode_decode_matches_quantize_flat() {
+        let x = randn(700, 1);
+        for (m, b) in [(2u32, 8usize), (4, 16), (6, 64), (8, 49), (12, 64), (16, 576)] {
+            let fmt = BlockFormat::new(m, b).unwrap();
+            let q = Quantizer::nearest(m);
+            let p = BfpMatrix::encode(&x, 1, x.len(), fmt, q).unwrap();
+            let mut got = Vec::new();
+            p.decode_into(&mut got);
+            let want = quantize_flat(&x, b, q, 0);
+            assert_eq!(got.len(), want.len());
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(same(*g, *w), "m={m} b={b} elem {i}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_stream_matches_flat_quantizer() {
+        let x = randn(300, 2);
+        for site in [0u32, 3, 17] {
+            let q = Quantizer::stochastic(4, 9);
+            let got = quantize_packed(&x, 64, q, site);
+            let want = quantize_flat(&x, 64, q, site);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(same(*g, *w), "site={site} elem {i}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_packed_bypass_and_wide_mantissas() {
+        let x = randn(130, 3);
+        assert_eq!(quantize_packed(&x, 16, Quantizer::nearest(23), 0), x);
+        let got = quantize_packed(&x, 16, Quantizer::nearest(18), 0);
+        let want = quantize_flat(&x, 16, Quantizer::nearest(18), 0);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn matrix_rows_restart_the_block_stream() {
+        // Encoding (2, 40) must equal encoding each row independently.
+        let x = randn(80, 4);
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        let q = Quantizer::nearest(4);
+        let both = BfpMatrix::encode(&x, 2, 40, fmt, q).unwrap();
+        let mut got = Vec::new();
+        both.decode_into(&mut got);
+        for r in 0..2 {
+            let row = quantize_flat(&x[r * 40..(r + 1) * 40], 16, q, 0);
+            for (i, (g, w)) in got[r * 40..(r + 1) * 40].iter().zip(&row).enumerate() {
+                assert!(same(*g, *w), "row {r} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_encode_matches_explicit_transpose() {
+        let w = Mat::new(37, 5, randn(185, 5)).unwrap();
+        let fmt = BlockFormat::new(6, 16).unwrap();
+        let q = Quantizer::nearest(6);
+        let a = BfpMatrix::encode_transposed(&w, fmt, q).unwrap();
+        let wt = w.transpose();
+        let b = BfpMatrix::encode(&wt.data, wt.rows, wt.cols, fmt, q).unwrap();
+        assert_eq!(a.exponents, b.exponents);
+        match (&a.mantissas, &b.mantissas) {
+            (MantissaPlane::I8(x), MantissaPlane::I8(y)) => assert_eq!(x, y),
+            other => panic!("dtype mismatch {other:?}"),
+        }
+        // And decode_transposed returns the k x n orientation.
+        let back = a.decode_transposed();
+        assert_eq!((back.rows, back.cols), (w.rows, w.cols));
+        let direct = b.to_mat().transpose();
+        assert_eq!(back.data, direct.data);
+    }
+
+    #[test]
+    fn storage_accounting_matches_scalar_tensor() {
+        let x = randn(100, 6);
+        let fmt = BlockFormat::new(4, 64).unwrap();
+        let p = BfpMatrix::encode(&x, 1, x.len(), fmt, Quantizer::nearest(4)).unwrap();
+        let t = BfpTensor::encode(&x, fmt).unwrap();
+        assert_eq!(p.storage_bits(), t.storage_bits());
+        assert_eq!(p.storage_bits(), fmt.storage_bits(x.len()));
+        assert_eq!(p.row_stride(), 2 * 64);
+    }
+
+    #[test]
+    fn buffer_reuse_across_shapes_and_dtypes() {
+        let mut m = BfpMatrix::empty();
+        let mut out = Vec::new();
+        let x = randn(640, 7);
+        for (mbits, b, n) in [(4u32, 64usize, 640usize), (12, 16, 100), (4, 576, 640), (6, 25, 33)] {
+            let fmt = BlockFormat::new(mbits, b).unwrap();
+            let q = Quantizer::nearest(mbits);
+            m.encode_into(&x[..n], 1, n, fmt, q, 0).unwrap();
+            assert_eq!(m.mantissas.dtype(), fmt.plane_dtype());
+            m.decode_into(&mut out);
+            let want = quantize_flat(&x[..n], b, q, 0);
+            for (i, (g, w)) in out.iter().zip(&want).enumerate() {
+                assert!(same(*g, *w), "m={mbits} b={b} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn shape_validation() {
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        assert!(BfpMatrix::encode(&[0.0; 10], 3, 4, fmt, Quantizer::nearest(4)).is_err());
+        let empty = BfpMatrix::encode(&[], 0, 0, fmt, Quantizer::nearest(4)).unwrap();
+        assert_eq!(empty.storage_bits(), 0);
+        assert!(empty.mantissas.is_empty());
+    }
+}

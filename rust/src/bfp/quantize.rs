@@ -2,10 +2,18 @@
 //!
 //! Every operation mirrors the jnp reference in f32 arithmetic:
 //! exponent extraction reads the IEEE-754 exponent field, the interval is
-//! `2^(e - m + 2)` (Eq. 1), clipping is to `[-2^(m-1), 2^(m-1) - 1]`, and
-//! `m >= 23` is the FP32 bypass. The golden-vector integration test pins
-//! this contract across the language boundary.
+//! `2^(e - m + 2)` (Eq. 1, [`super::block::scale_shift`]), clipping is to
+//! `[-2^(m-1), 2^(m-1) - 1]`, and `m >= 23` is the FP32 bypass. The
+//! golden-vector integration test pins this contract across the language
+//! boundary.
+//!
+//! Two equivalent entry points exist: the float-in/float-out
+//! [`quantize_flat`] / [`quantize_blocks_into`] here, and the packed
+//! [`super::packed::quantize_packed`] path that round-trips through the
+//! integer mantissa planes and reuses its buffers across sweep points —
+//! identical numerics (property-tested), different storage.
 
+use super::block::scale_shift;
 use super::rounding::{round_value, RoundMode};
 
 /// floor(log2(|x|)) via the IEEE exponent field; -127 for zero/denormal.
@@ -17,7 +25,7 @@ pub fn floor_log2(x: f32) -> i32 {
 /// 2^k as f32, exact for the full k range incl. subnormal results
 /// (matches jnp.exp2 on integer-valued floats).
 #[inline]
-fn exp2i(k: i32) -> f32 {
+pub(crate) fn exp2i(k: i32) -> f32 {
     // f64 powi is exact for k >= -1074; the f32 cast rounds to the nearest
     // representable (subnormal) value exactly like jnp.exp2's f32 output.
     (2.0f64).powi(k) as f32
@@ -79,7 +87,7 @@ pub fn quantize_block_into(v: &[f32], out: &mut [f32], q: Quantizer, base_idx: u
     }
     let e = floor_log2(maxabs);
     let m = q.m_bits as i32;
-    let s = exp2i(e - m + 2); // Eq. 1 interval
+    let s = exp2i(scale_shift(e, q.m_bits)); // Eq. 1 interval
     let half = exp2i(m - 1); // 2^(m-1)
     let lo = -half;
     let hi = half - 1.0;
@@ -87,7 +95,7 @@ pub fn quantize_block_into(v: &[f32], out: &mut [f32], q: Quantizer, base_idx: u
     // its (exactly representable) reciprocal — bit-identical per IEEE-754,
     // ~1.9x faster (EXPERIMENTS.md §Perf). Fall back to division when the
     // reciprocal exponent leaves the normal range.
-    let sinv_e = m - 2 - e;
+    let sinv_e = -scale_shift(e, q.m_bits);
     let sinv = if (-126..=127).contains(&sinv_e) {
         Some(exp2i(sinv_e))
     } else {

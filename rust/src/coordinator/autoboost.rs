@@ -14,7 +14,9 @@
 //! consecutive epochs. Once boosted, never un-boosts (matching the
 //! Booster's monotone precision trajectory).
 
+use crate::bfp::BlockFormat;
 use crate::runtime::StepScalars;
+use anyhow::Result;
 
 #[derive(Debug, Clone)]
 pub struct AutoBoost {
@@ -91,6 +93,15 @@ impl AutoBoost {
         (mid as f32, self.high_bits as f32)
     }
 
+    /// Packed-carrier format for the controller's *current* mid
+    /// precision — what [`super::Trainer`]'s host-side BFP weight-store
+    /// emulation should hold this epoch. Tracks the boost: HBFP(low)
+    /// planes before the switch, HBFP(high) after.
+    pub fn emulation_format(&self, block: usize) -> Result<BlockFormat> {
+        let (mid, _) = self.bits();
+        BlockFormat::new(mid as u32, block)
+    }
+
     pub fn scalars(&self, epoch: usize, step: usize) -> StepScalars {
         let (mid, edge) = self.bits();
         let seed = (epoch as u32)
@@ -149,6 +160,18 @@ mod tests {
             ab.observe(e, l);
         }
         assert!(!ab.boosted());
+    }
+
+    #[test]
+    fn emulation_format_tracks_the_boost() {
+        let mut ab = AutoBoost::new(4, 6);
+        let f = ab.emulation_format(64).unwrap();
+        assert_eq!((f.mantissa_bits, f.block_size), (4, 64));
+        for e in 0..12 {
+            ab.observe(e, 1.0); // immediate plateau
+        }
+        assert!(ab.boosted());
+        assert_eq!(ab.emulation_format(64).unwrap().mantissa_bits, 6);
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! The training orchestrator: epoch loop over the AOT-compiled step
 //! function, with the precision scheduler in the driver's seat.
 
+use crate::analysis::quantize_params_packed;
+use crate::bfp::BfpMatrix;
 use crate::config::TrainConfig;
 use crate::data::{Batcher, ImageDataset, ImageGenSpec, TextDataset, TextGenSpec};
 use crate::metrics::{corpus_bleu, EpochStats, RunHistory};
@@ -106,6 +108,12 @@ pub struct Trainer<'a> {
     pub cfg: TrainConfig,
     /// Per-epoch callback (progress printing); epoch stats are final.
     pub on_epoch: Option<Box<dyn Fn(&EpochStats) + 'a>>,
+    /// Host-side BFP weight-store emulation: when set, parameters are
+    /// round-tripped through a packed HBFP carrier of this block size
+    /// after every epoch, at the scheduler's current mid mantissa width
+    /// — emulating weights that *live* in accelerator BFP SRAM rather
+    /// than only passing through quantizers inside the graph.
+    pub host_bfp_block: Option<usize>,
 }
 
 impl<'a> Trainer<'a> {
@@ -121,11 +129,19 @@ impl<'a> Trainer<'a> {
             data,
             cfg,
             on_epoch: None,
+            host_bfp_block: None,
         }
     }
 
     pub fn with_progress(mut self, f: impl Fn(&EpochStats) + 'a) -> Self {
         self.on_epoch = Some(Box::new(f));
+        self
+    }
+
+    /// Enable host-side packed-BFP weight storage emulation (see
+    /// [`Trainer::host_bfp_block`]).
+    pub fn with_host_bfp_store(mut self, block: usize) -> Self {
+        self.host_bfp_block = Some(block);
         self
     }
 
@@ -167,6 +183,10 @@ impl<'a> Trainer<'a> {
         let mut rng = Rng::new(self.cfg.seed ^ 0x5FF1E);
         let mut history = RunHistory::new(format!("{}/{}", m.variant, self.cfg.policy.label()));
         let mut global_step = 0usize;
+        // Shared packed carrier + decode buffer for the emulated BFP
+        // weight store (allocated once, reused every epoch).
+        let mut emu_scratch = BfpMatrix::empty();
+        let mut emu_buf: Vec<f32> = Vec::new();
 
         for epoch in 0..self.cfg.epochs {
             let sw = Stopwatch::start();
@@ -188,6 +208,17 @@ impl<'a> Trainer<'a> {
                 tr_loss += stats.loss as f64;
                 tr_acc += stats.metric as f64;
                 global_step += 1;
+            }
+            if let Some(block) = self.host_bfp_block {
+                let (mid, _) = sched.bits_at(epoch);
+                // At bypass widths (>= 23) the emulated store holds FP32
+                // and the round-trip is the identity — skip the literal
+                // churn. Everything below that (including 17..=22, which
+                // the packed entry point delegates past the integer
+                // carrier) genuinely re-grids the weights.
+                if mid < 23.0 {
+                    requantize_params(&mut state, mid as u32, block, &mut emu_scratch, &mut emu_buf)?;
+                }
             }
             let eval_sc = sched.eval_scalars(epoch);
             let (val_loss, val_acc) = self.evaluate(&state, eval_sc)?;
@@ -216,6 +247,26 @@ impl<'a> Trainer<'a> {
             state,
         })
     }
+}
+
+/// Round-trip every f32 parameter through the packed HBFP carrier:
+/// snapshot, snap via the shared [`quantize_params_packed`] helper
+/// (row-major flat blocking — the storage emulation, not the graph's
+/// per-axis operand blocking), write the snapped literals back.
+fn requantize_params(
+    state: &mut TrainState,
+    m_bits: u32,
+    block: usize,
+    scratch: &mut BfpMatrix,
+    buf: &mut Vec<f32>,
+) -> Result<()> {
+    let mut params = state.params_to_tensors()?;
+    quantize_params_packed(&mut params, m_bits, block, scratch, buf)?;
+    state.params = params
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<_>>()?;
+    Ok(())
 }
 
 /// Greedy-decode the validation set and score corpus BLEU (Table 3).

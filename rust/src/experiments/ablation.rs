@@ -172,6 +172,30 @@ pub fn run(engine: &Engine, artifacts: &Path, model: &str, preset: Preset) -> Re
         boost_k.to_string(),
     ]);
 
+    // Booster with the packed-BFP host weight store: parameters live in
+    // (are round-tripped through) the same BfpMatrix planes the GEMM
+    // kernels consume, at the scheduler's current mid width — the
+    // closest software emulation of weights resident in BFP SRAM.
+    println!("[ablation] booster + host packed-BFP weight store ...");
+    let c = config_for(
+        &v,
+        PrecisionPolicy::Booster {
+            low: 4,
+            high: 6,
+            boost_epochs: boost_k,
+        },
+        preset,
+    );
+    let result = Trainer::new(engine, &v, &data, c)
+        .with_host_bfp_store(64)
+        .run()?;
+    table.row(vec![
+        "booster+host-bfp-store(b64)".into(),
+        fmt_pct(result.history.final_val_acc()),
+        fmt_pct(result.history.best_val_acc()),
+        boost_k.to_string(),
+    ]);
+
     // Booster without edge-layer override (edge runs at 4 bits too).
     println!("[ablation] booster w/o edge layers ...");
     let hist = run_custom(engine, &v, &data, &cfg, "noedge", |epoch, _| {

@@ -2,6 +2,7 @@
 //! across mantissa widths {8,6,5,4} and the paper's block-size axis, with
 //! the analytic area-gain column.
 
+use crate::bfp::BlockFormat;
 use crate::config::PrecisionPolicy;
 use crate::coordinator::TrainerData;
 use crate::experiments::common::{config_for, run_one, Preset};
@@ -14,10 +15,25 @@ use std::path::Path;
 pub const MANTISSAS: [u32; 4] = [8, 6, 5, 4];
 
 /// Run the Table-1 sweep for one model family ("cnn" or "mlp").
+///
+/// Alongside the paper's area-gain column, each row reports the packed
+/// software layout of the format — wire bits/value and the host mantissa
+/// plane dtype — so the silicon-density story and the [`BfpMatrix`]
+/// storage the runs emulate are visibly the same arithmetic.
+///
+/// [`BfpMatrix`]: crate::bfp::BfpMatrix
 pub fn run(engine: &Engine, artifacts: &Path, model: &str, preset: Preset) -> Result<Table> {
     let mut table = Table::new(
         &format!("Table 1 — standalone HBFP, {model} (synthetic task)"),
-        &["format", "block", "area_gain", "final_val_acc", "best_val_acc"],
+        &[
+            "format",
+            "block",
+            "area_gain",
+            "bits_per_val",
+            "plane",
+            "final_val_acc",
+            "best_val_acc",
+        ],
     );
 
     // FP32 baseline: block size is irrelevant under bypass; use bs64.
@@ -30,6 +46,8 @@ pub fn run(engine: &Engine, artifacts: &Path, model: &str, preset: Preset) -> Re
         "FP32".into(),
         "-".into(),
         "1.0".into(),
+        "32.00".into(),
+        "f32".into(),
         fmt_pct(acc),
         fmt_pct(hist.best_val_acc()),
     ]);
@@ -50,11 +68,14 @@ pub fn run(engine: &Engine, artifacts: &Path, model: &str, preset: Preset) -> Re
             let policy = PrecisionPolicy::Hbfp { bits: m };
             let cfg = config_for(v, policy, preset);
             println!("[table1] {model} hbfp{m} b={block} ...");
+            let fmt = BlockFormat::new(m, block)?;
             let (acc, hist, _) = run_one(engine, v, &data, cfg, false)?;
             table.row(vec![
                 format!("HBFP{m}"),
                 block.to_string(),
                 format!("{:.1}", area_gain_hbfp(m as u64, block as u64)),
+                format!("{:.2}", fmt.bits_per_value()),
+                fmt.plane_dtype().label().to_string(),
                 fmt_pct(acc),
                 fmt_pct(hist.best_val_acc()),
             ]);
@@ -72,5 +93,18 @@ mod tests {
     #[test]
     fn mantissa_axis_matches_paper() {
         assert_eq!(MANTISSAS, [8, 6, 5, 4]);
+    }
+
+    #[test]
+    fn sweep_formats_fit_the_i8_plane() {
+        // Every Table-1 cell (m <= 8) runs on the narrow mantissa plane;
+        // the density narrative and the host layout stay aligned.
+        for &m in MANTISSAS.iter() {
+            for &b in Preset::Full.block_sizes() {
+                let fmt = BlockFormat::new(m, b).unwrap();
+                assert_eq!(fmt.plane_dtype().label(), "i8", "m={m} b={b}");
+                assert!(fmt.bits_per_value() < 9.0);
+            }
+        }
     }
 }

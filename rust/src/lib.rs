@@ -16,6 +16,21 @@
 //! * [`bfp`] — a from-scratch software Block-Floating-Point substrate,
 //!   bit-exact against the python oracle (golden-vector tested), used for
 //!   host-side analysis (Fig 1) and as the quantizer reference.
+//!
+//!   Its production datapath is the **packed tensor engine**
+//!   ([`bfp::BfpMatrix`]): tensors live as two contiguous
+//!   structure-of-arrays planes — an `i8`/`i16` mantissa plane (dtype
+//!   chosen by [`bfp::BlockFormat::plane_dtype`], rows padded to whole
+//!   blocks, stride `blocks_per_row * block_size`) and one `i32` shared
+//!   exponent per block. Values decode as `q * 2^scale_shift(e, m)`
+//!   with `scale_shift(e, m) = e - m + 2` ([`bfp::scale_shift`]).
+//!   Operands are encoded once and multiplied by a cache-tiled,
+//!   register-blocked fixed-point GEMM ([`bfp::gemm`]) that parallelizes
+//!   over whole output-row bands via `std::thread::scope` — a
+//!   partitioning rule that keeps parallel results bit-identical to the
+//!   serial and scalar reference paths (property-tested), so every
+//!   analysis, sweep, and host-emulation consumer sees one set of
+//!   numerics at bandwidth-bound speed.
 //! * [`hw_model`] — the paper's gate-level analytic silicon-area model
 //!   (Appendix F): FP32 / BFloat16 / HBFP dot-product units, converters,
 //!   stochastic-rounding XORshift circuits; regenerates Fig 6 and the

@@ -9,4 +9,4 @@ pub mod wasserstein;
 pub use bleu::{corpus_bleu, sentence_ngrams, BleuScore};
 pub use stats::{pearson_r, r_squared};
 pub use tracker::{EpochStats, RunHistory};
-pub use wasserstein::{wasserstein1, wasserstein1_quantized};
+pub use wasserstein::{wasserstein1, wasserstein1_quantized, QuantSweep};

@@ -5,7 +5,7 @@
 //! quantile-function difference over a common grid. The Fig-1 use case —
 //! a tensor vs its quantized self — is always the equal-size fast path.
 
-use crate::bfp::{quantize_flat, Quantizer};
+use crate::bfp::{quantize_packed_into, BfpMatrix, Quantizer};
 
 /// W1 between two equal-length samples: mean |sort(a) - sort(b)|.
 pub fn wasserstein1(a: &[f32], b: &[f32]) -> f64 {
@@ -45,11 +45,74 @@ fn quantile(sorted: &[f32], q: f64) -> f64 {
     sorted[lo] as f64 * (1.0 - frac) + sorted[hi] as f64 * frac
 }
 
+/// Reusable buffers for quantization-distance sweeps: one packed BFP
+/// carrier, one decode buffer, and a cached **sorted** copy of the
+/// reference tensor. A Fig-1 sweep quantizes the same layer at many
+/// `(m, b)` points; with the reference sorted once per layer
+/// ([`QuantSweep::set_reference`]) each point costs one packed
+/// round-trip plus one sort of the quantized sample — not two sorts
+/// and four allocations.
+#[derive(Debug, Default)]
+pub struct QuantSweep {
+    packed: BfpMatrix,
+    qbuf: Vec<f32>,
+    sorted_ref: Vec<f32>,
+    sorted_q: Vec<f32>,
+}
+
+impl QuantSweep {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Sort and cache the reference sample for subsequent
+    /// [`QuantSweep::distance_to_reference`] calls.
+    pub fn set_reference(&mut self, t: &[f32]) {
+        assert!(!t.is_empty(), "empty sample");
+        self.sorted_ref.clear();
+        self.sorted_ref.extend_from_slice(t);
+        self.sorted_ref.sort_by(f32::total_cmp);
+    }
+
+    /// W1 between the cached reference and `t`'s HBFP(m, b)
+    /// quantization (nearest rounding, the forward-pass transform),
+    /// through the packed carrier. `t` must be the tensor last passed
+    /// to [`QuantSweep::set_reference`]; same arithmetic (and bits) as
+    /// [`wasserstein1`]'s equal-size path.
+    pub fn distance_to_reference(&mut self, t: &[f32], m_bits: u32, block: usize) -> f64 {
+        debug_assert_eq!(t.len(), self.sorted_ref.len(), "reference not set for this tensor");
+        quantize_packed_into(
+            t,
+            block,
+            Quantizer::nearest(m_bits),
+            0,
+            &mut self.packed,
+            &mut self.qbuf,
+        )
+        .expect("nearest quantization of an f32 tensor cannot fail");
+        self.sorted_q.clear();
+        self.sorted_q.extend_from_slice(&self.qbuf);
+        self.sorted_q.sort_by(f32::total_cmp);
+        self.sorted_ref
+            .iter()
+            .zip(&self.sorted_q)
+            .map(|(&x, &y)| (x as f64 - y as f64).abs())
+            .sum::<f64>()
+            / self.sorted_ref.len() as f64
+    }
+
+    /// One-shot W1 between `t` and its HBFP(m, b) quantization
+    /// (sets the reference itself).
+    pub fn distance(&mut self, t: &[f32], m_bits: u32, block: usize) -> f64 {
+        self.set_reference(t);
+        self.distance_to_reference(t, m_bits, block)
+    }
+}
+
 /// The Fig-1 measurement: W1 between a tensor and its HBFP(m, b)
-/// quantization (nearest rounding, the forward-pass transform).
+/// quantization. One-shot convenience over [`QuantSweep`].
 pub fn wasserstein1_quantized(t: &[f32], m_bits: u32, block: usize) -> f64 {
-    let q = quantize_flat(t, block, Quantizer::nearest(m_bits), 0);
-    wasserstein1(t, &q)
+    QuantSweep::new().distance(t, m_bits, block)
 }
 
 #[cfg(test)]
@@ -89,6 +152,25 @@ mod tests {
         let y: Vec<f32> = x.iter().map(|v| v + 0.5).collect();
         let w = wasserstein1(&x, &y[..256]);
         assert!((w - 0.5).abs() < 0.1, "{w}");
+    }
+
+    #[test]
+    fn sweep_buffers_reproduce_one_shot_distances() {
+        let x = randn(2048, 9);
+        let mut sweep = QuantSweep::new();
+        sweep.set_reference(&x);
+        for m in [4u32, 6, 12] {
+            for b in [16usize, 64, 576] {
+                // Cached-reference path == one-shot path == the plain
+                // quantize-then-wasserstein1 composition, to the bit.
+                let cached = sweep.distance_to_reference(&x, m, b);
+                let want = wasserstein1_quantized(&x, m, b);
+                assert_eq!(cached.to_bits(), want.to_bits(), "m={m} b={b}");
+                let q = crate::bfp::quantize_packed(&x, b, Quantizer::nearest(m), 0);
+                let composed = wasserstein1(&x, &q);
+                assert_eq!(cached.to_bits(), composed.to_bits(), "m={m} b={b}");
+            }
+        }
     }
 
     #[test]

@@ -3,7 +3,8 @@
 //! many-case randomized sweeps with explicit failure seeds instead).
 
 use boosters::bfp::{
-    bfp_dot_fixed_point, dequant_dot, quantize_flat, BfpTensor, BlockFormat, Quantizer,
+    bfp_dot_blocks, bfp_dot_fixed_point, dequant_dot, hbfp_gemm, hbfp_gemm_scalar, quantize_flat,
+    quantize_packed, scale_shift, BfpMatrix, BfpTensor, BlockFormat, Mat, Quantizer, RoundMode,
 };
 use boosters::config::PrecisionPolicy;
 use boosters::coordinator::PrecisionScheduler;
@@ -100,6 +101,149 @@ fn prop_pack_roundtrip() {
             t.decode(),
             quantize_flat(&x, block, Quantizer::nearest(m), 0),
             "case {case}"
+        );
+    }
+}
+
+/// The packed tensor engine (`BfpMatrix::gemm`, threaded tiled kernel)
+/// is **bit-identical** to the scalar per-block reference across the
+/// paper's mantissa/block grid, including ragged K with padded tail
+/// blocks — the refactor's central invariant.
+#[test]
+fn prop_packed_gemm_bit_identical_to_scalar() {
+    let mut rng = Rng::new(0x9E77);
+    for &m in &[3u32, 4, 6, 8] {
+        for &b in &[16usize, 64, 576] {
+            let fmt = BlockFormat::new(m, b).unwrap();
+            for case in 0..4 {
+                // Ragged K: rarely a block multiple, sometimes < b.
+                let k = 1 + rng.below(2 * b + 37);
+                let r = 1 + rng.below(6);
+                let c = 1 + rng.below(7);
+                let x = Mat::new(r, k, randn(&mut rng, r * k, 1.0)).unwrap();
+                let w = Mat::new(k, c, randn(&mut rng, k * c, 1.0)).unwrap();
+                let packed = hbfp_gemm(&x, &w, fmt).unwrap();
+                let scalar = hbfp_gemm_scalar(&x, &w, fmt).unwrap();
+                for (i, (p, s)) in packed.data.iter().zip(&scalar.data).enumerate() {
+                    assert_eq!(
+                        p.to_bits(),
+                        s.to_bits(),
+                        "case {case} m={m} b={b} k={k} elem {i}: {p} vs {s}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Mixed mantissa widths across the two operands (i8 x i16 planes, the
+/// bit-sliced mixed-precision case) agree bit-for-bit with an
+/// independently coded per-block reference.
+#[test]
+fn prop_packed_gemm_mixed_widths_match_block_reference() {
+    let mut rng = Rng::new(0xA11);
+    for case in 0..20 {
+        let b = [16usize, 32, 64][rng.below(3)];
+        let (mx, mw) = [(4u32, 12u32), (6, 10), (12, 4), (8, 16)][rng.below(4)];
+        let k = 1 + rng.below(150);
+        let (r, c) = (1 + rng.below(4), 1 + rng.below(4));
+        let fx = BlockFormat::new(mx, b).unwrap();
+        let fw = BlockFormat::new(mw, b).unwrap();
+        let x = Mat::new(r, k, randn(&mut rng, r * k, 1.0)).unwrap();
+        let w = Mat::new(k, c, randn(&mut rng, k * c, 1.0)).unwrap();
+        let xp = BfpMatrix::encode(&x.data, r, k, fx, Quantizer::nearest(mx)).unwrap();
+        let wp = BfpMatrix::encode_transposed(&w, fw, Quantizer::nearest(mw)).unwrap();
+        let got = xp.gemm(&wp).unwrap();
+        // Independent reference: scalar BfpTensor blocks per row/column,
+        // f64 accumulation in ascending block order.
+        let wt = w.transpose();
+        for i in 0..r {
+            let bx = BfpTensor::encode(&x.data[i * k..(i + 1) * k], fx).unwrap();
+            for j in 0..c {
+                let bw = BfpTensor::encode(&wt.data[j * k..(j + 1) * k], fw).unwrap();
+                let mut acc = 0.0f64;
+                for (xb, wb) in bx.blocks.iter().zip(&bw.blocks) {
+                    acc += bfp_dot_blocks(xb, wb).unwrap();
+                }
+                let want = acc as f32;
+                let gotv = got.at(i, j);
+                assert_eq!(
+                    gotv.to_bits(),
+                    want.to_bits(),
+                    "case {case} b={b} mx={mx} mw={mw} ({i},{j}): {gotv} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+/// `quantize_packed` round-trips through the integer planes to exactly
+/// the flat quantizer's output for both rounding modes and arbitrary
+/// sites, identifying only the sign of zero (an integer mantissa cannot
+/// carry -0.0).
+#[test]
+fn prop_quantize_packed_matches_flat() {
+    let mut rng = Rng::new(0xFACADE);
+    for case in 0..CASES {
+        let n = 1 + rng.below(900);
+        let block = [4usize, 16, 49, 64, 576][rng.below(5)];
+        let m = [2u32, 3, 4, 6, 8, 12, 16][rng.below(7)];
+        let site = rng.below(1 << 16) as u32;
+        let scale = [1e-6, 1.0, 3e4][rng.below(3)];
+        let x = randn(&mut rng, n, scale);
+        let q = if rng.below(2) == 0 {
+            Quantizer::nearest(m)
+        } else {
+            Quantizer::stochastic(m, rng.below(1 << 20) as u32)
+        };
+        let got = quantize_packed(&x, block, q, site);
+        let want = quantize_flat(&x, block, q, site);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let same = (*g == 0.0 && *w == 0.0) || g.to_bits() == w.to_bits();
+            assert!(
+                same,
+                "case {case} m={m} b={block} rmode={:?} site={site} elem {i}: {g} vs {w}",
+                q.mode
+            );
+        }
+        // Bit-level spot check that the sign-of-zero carve-out is the
+        // ONLY divergence.
+        if q.mode == RoundMode::NearestEven {
+            for (g, w) in got.iter().zip(&want) {
+                if *w != 0.0 {
+                    assert_eq!(g.to_bits(), w.to_bits());
+                }
+            }
+        }
+    }
+}
+
+/// The packed dot path (`bfp_dot_fixed_point` over planes) equals the
+/// scalar block loop bit-for-bit, and the decode scale everywhere is
+/// `2^scale_shift(e, m)`.
+#[test]
+fn prop_packed_dot_and_scale_shift() {
+    let mut rng = Rng::new(0xD0D0);
+    for case in 0..CASES {
+        let n = 1 + rng.below(600);
+        let block = [8usize, 16, 64, 576][rng.below(4)];
+        let m = [3u32, 4, 6, 8, 12][rng.below(5)];
+        let fmt = BlockFormat::new(m, block).unwrap();
+        let x = randn(&mut rng, n, 1.0);
+        let y = randn(&mut rng, n, 1.0);
+        let got = bfp_dot_fixed_point(&x, &y, fmt).unwrap();
+        let tx = BfpTensor::encode(&x, fmt).unwrap();
+        let ty = BfpTensor::encode(&y, fmt).unwrap();
+        let mut want = 0.0f64;
+        for (bx, by) in tx.blocks.iter().zip(&ty.blocks) {
+            assert_eq!(bx.scale_shift(), scale_shift(bx.exponent, m), "case {case}");
+            want += bfp_dot_blocks(bx, by).unwrap();
+        }
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "case {case} m={m} b={block} n={n}: {got} vs {want}"
         );
     }
 }

@@ -1,0 +1,306 @@
+//! API-compatible stand-in for the `xla-rs` bindings (xla_extension
+//! 0.5.x) used by `boosters::runtime`.
+//!
+//! The host-literal surface ([`Literal`], [`ArrayShape`]) is fully
+//! functional — tensors round-trip through it losslessly, so every
+//! host-side code path (BFP substrate, analysis, checkpointing,
+//! coordinator state plumbing) works as in the real build. What a stub
+//! cannot do is compile and execute HLO: [`PjRtClient::compile`]
+//! returns an error, so artifact-backed paths (`Engine::load_variant`)
+//! fail cleanly at run time with an actionable message. Swapping this
+//! crate for the real `xla` dependency requires no source changes in
+//! `boosters`.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error: every failure is a message string.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: &str) -> Result<T> {
+    Err(Error(msg.to_string()))
+}
+
+/// Element types we model (the system only uses F32 and S32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+    Tuple,
+}
+
+/// Array payload of a [`Literal`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host literal: an n-d array (f32 or i32) or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Literal {
+    Array { dims: Vec<i64>, data: Storage },
+    Tuple(Vec<Literal>),
+}
+
+/// Shape view returned by [`Literal::array_shape`].
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ptype: PrimitiveType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.ptype
+    }
+}
+
+/// Native element types convertible to/from [`Literal`] arrays.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> Storage;
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<Self>) -> Storage {
+        Storage::F32(data)
+    }
+
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>> {
+        match lit {
+            Literal::Array {
+                data: Storage::F32(d),
+                ..
+            } => Ok(d.clone()),
+            _ => err("literal is not an f32 array"),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<Self>) -> Storage {
+        Storage::I32(data)
+    }
+
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>> {
+        match lit {
+            Literal::Array {
+                data: Storage::I32(d),
+                ..
+            } => Ok(d.clone()),
+            _ => err("literal is not an i32 array"),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal::Array {
+            dims: vec![data.len() as i64],
+            data: T::wrap(data.to_vec()),
+        }
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal::Array {
+            dims: vec![],
+            data: Storage::F32(vec![v]),
+        }
+    }
+
+    fn numel(&self) -> usize {
+        match self {
+            Literal::Array { data, .. } => match data {
+                Storage::F32(d) => d.len(),
+                Storage::I32(d) => d.len(),
+            },
+            Literal::Tuple(_) => 0,
+        }
+    }
+
+    /// Reshape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.numel() {
+            return err(&format!(
+                "reshape to {dims:?} ({n} elems) from {} elems",
+                self.numel()
+            ));
+        }
+        match self {
+            Literal::Array { data, .. } => Ok(Literal::Array {
+                dims: dims.to_vec(),
+                data: data.clone(),
+            }),
+            Literal::Tuple(_) => err("cannot reshape a tuple literal"),
+        }
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { dims, data } => Ok(ArrayShape {
+                dims: dims.clone(),
+                ptype: match data {
+                    Storage::F32(_) => PrimitiveType::F32,
+                    Storage::I32(_) => PrimitiveType::S32,
+                },
+            }),
+            Literal::Tuple(_) => err("tuple literal has no array shape"),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(self)
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(v) => Ok(v),
+            Literal::Array { .. } => err("literal is not a tuple"),
+        }
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        let mut v = self.to_tuple()?;
+        if v.len() != 1 {
+            return err(&format!("expected 1-tuple, got {}-tuple", v.len()));
+        }
+        Ok(v.pop().unwrap())
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        let mut v = self.to_tuple()?;
+        if v.len() != 2 {
+            return err(&format!("expected 2-tuple, got {}-tuple", v.len()));
+        }
+        let b = v.pop().unwrap();
+        let a = v.pop().unwrap();
+        Ok((a, b))
+    }
+}
+
+/// Parsed HLO module handle. The stub verifies the file is readable but
+/// does not parse HLO text.
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        match std::fs::metadata(path) {
+            Ok(_) => Ok(HloModuleProto {
+                path: path.to_string(),
+            }),
+            Err(e) => err(&format!("reading HLO text {path}: {e}")),
+        }
+    }
+}
+
+/// Computation handle built from a parsed module.
+pub struct XlaComputation {
+    path: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            path: proto.path.clone(),
+        }
+    }
+}
+
+/// Device buffer handle returned by execution (never constructed here:
+/// the stub cannot execute).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        err("xla stub: no device buffers exist in this build")
+    }
+}
+
+/// Loaded executable handle (never constructed: compilation fails).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err("xla stub: execution requires the xla_extension native library")
+    }
+}
+
+/// CPU PJRT client. Construction succeeds (host-side tooling keeps
+/// working); compilation reports the stub.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (xla_extension unavailable; compiled artifacts disabled)".to_string()
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        err(&format!(
+            "xla stub: cannot compile {} — link the real xla crate (xla_extension 0.5.x) to run artifacts",
+            comp.path
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let s = l.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 2]);
+        assert!(matches!(s.primitive_type(), PrimitiveType::F32));
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn tuples_and_scalars() {
+        let t = Literal::Tuple(vec![Literal::scalar(1.0), Literal::scalar(2.0)]);
+        let (a, b) = t.to_tuple2().unwrap();
+        assert_eq!(a.to_vec::<f32>().unwrap(), vec![1.0]);
+        assert_eq!(b.to_vec::<f32>().unwrap(), vec![2.0]);
+        assert!(Literal::scalar(0.0).to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_compiles_nothing() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().contains("stub"));
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo").is_err());
+    }
+}
