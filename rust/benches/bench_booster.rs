@@ -3,8 +3,10 @@
 //! same executable serving HBFP4 and HBFP6 steps back to back, which is
 //! the paper's bit-sliced-datapath story in software form.
 
+use boosters::analysis::quantize_params_packed_cached;
 use boosters::bfp::{BfpMatrix, Quantizer};
 use boosters::config::PrecisionPolicy;
+use boosters::runtime::Tensor;
 use boosters::coordinator::{init_state, AutoBoost, PrecisionScheduler, TrainerData};
 use boosters::experiments::common::config_for;
 use boosters::experiments::Preset;
@@ -58,6 +60,26 @@ fn main() {
             },
         );
     }
+
+    // The exec-cached weight store: a frozen parameter tensor (content
+    // unchanged across epochs) is served from the operand cache instead
+    // of re-encoding — the Trainer emulation-loop fast path.
+    let rt = boosters::exec::global();
+    let frozen: Vec<f32> = {
+        let mut r = Rng::new(0xF60);
+        (0..1 << 18).map(|_| r.normal_scaled(0.1)).collect()
+    };
+    let mut qbuf: Vec<f32> = Vec::new();
+    suite.bench_items(
+        "host BFP store via exec cache, frozen tensor (256k params)",
+        Some(frozen.len() as f64),
+        || {
+            let mut params = vec![Tensor::from_f32(&[frozen.len()], frozen.clone()).unwrap()];
+            quantize_params_packed_cached(&mut params, 4, 64, rt, &mut qbuf).unwrap();
+            std::hint::black_box(params.len());
+        },
+    );
+    println!("### exec cache after store benches: {}", rt.cache_stats().summary());
 
     let artifacts = artifacts_dir();
     if !artifacts.join("index.json").exists() {

@@ -8,6 +8,7 @@ use boosters::bfp::{
     bfp_dot_fixed_point, hbfp_gemm, hbfp_gemm_scalar, quantize_flat, quantize_packed_into,
     BfpMatrix, BfpTensor, BlockFormat, Mat, Quantizer,
 };
+use boosters::exec::{BatchGemm, GemmOp};
 use boosters::util::bench::BenchSuite;
 use boosters::util::Rng;
 
@@ -91,6 +92,55 @@ fn main() {
             std::hint::black_box(xp.gemm(&wp).unwrap());
         },
     );
+
+    // --- batched serving path: 64 heterogeneous ops ---------------------
+    // A weight working set of 8 matrices reused across 64 requests with
+    // fresh activations — the serve-sim shape. BatchGemm shards every op
+    // into band tasks on the persistent pool and pulls weights from the
+    // operand cache; the sequential comparator runs the same ops one
+    // hbfp_gemm call at a time (the acceptance-gate comparison).
+    let rt = boosters::exec::global();
+    let batch_fmt = BlockFormat::new(4, 64).unwrap();
+    let wshapes = [(192usize, 96usize), (256, 64), (128, 128), (320, 48)];
+    let bweights: Vec<Mat> = (0..8)
+        .map(|i| {
+            let (k, n) = wshapes[i % wshapes.len()];
+            Mat::new(k, n, randn(k * n, 100 + i as u64)).unwrap()
+        })
+        .collect();
+    let bxs: Vec<(usize, Mat)> = (0..64)
+        .map(|i| {
+            let wi = i % bweights.len();
+            let k = bweights[wi].rows;
+            let m = 8 + (i * 7) % 48;
+            (wi, Mat::new(m, k, randn(m * k, 200 + i as u64)).unwrap())
+        })
+        .collect();
+    let batch_macs: f64 = bxs
+        .iter()
+        .map(|(wi, x)| (x.rows * bweights[*wi].cols * x.cols) as f64)
+        .sum();
+    suite.bench_items("BatchGemm 64 heterogeneous ops (MACs)", Some(batch_macs), || {
+        let ops: Vec<GemmOp> = bxs
+            .iter()
+            .map(|(wi, x)| GemmOp {
+                x,
+                w: &bweights[*wi],
+                fmt: batch_fmt,
+            })
+            .collect();
+        std::hint::black_box(BatchGemm::new(rt).run(&ops).unwrap());
+    });
+    suite.bench_items(
+        "sequential hbfp_gemm same 64 ops (MACs)",
+        Some(batch_macs),
+        || {
+            for (wi, x) in &bxs {
+                std::hint::black_box(hbfp_gemm(x, &bweights[*wi], batch_fmt).unwrap());
+            }
+        },
+    );
+    println!("### exec cache after batch benches: {}", rt.cache_stats().summary());
 
     suite.finish();
 }

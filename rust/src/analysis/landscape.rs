@@ -3,7 +3,8 @@
 //! quantization scalars of the configuration under study — so each curve
 //! shows the loss surface *as seen through that numeric format*.
 
-use crate::bfp::{quantize_packed_into, BfpMatrix, BlockFormat, Quantizer};
+use crate::bfp::{quantize_flat, quantize_packed_into, BfpMatrix, BlockFormat, Quantizer};
+use crate::exec::ExecRuntime;
 use crate::runtime::{Engine, ModelVariant, StepScalars, Tensor, TrainState};
 use anyhow::Result;
 
@@ -103,6 +104,45 @@ pub fn quantize_params_packed(
     for t in params.iter_mut() {
         if let Ok(d) = t.as_f32_mut() {
             quantize_packed_into(d, block, q, 0, scratch, qbuf)?;
+            d.copy_from_slice(qbuf);
+        }
+    }
+    Ok(())
+}
+
+/// [`quantize_params_packed`] routed through an [`ExecRuntime`]'s
+/// encoded-operand cache: each tensor's encoding is keyed by its
+/// content, so a tensor whose values did not change since the last
+/// round-trip (a frozen layer, a plateaued parameter, a repeated
+/// evaluation point) is served from cache instead of re-encoded.
+/// Bit-identical to the uncached helper — cached planes come from the
+/// same deterministic nearest-rounding encode.
+///
+/// This is what the Trainer's host-BFP weight store calls every epoch;
+/// hit/miss counts are visible via [`crate::metrics::exec_cache_snapshot`].
+pub fn quantize_params_packed_cached(
+    params: &mut [Tensor],
+    m_bits: u32,
+    block: usize,
+    rt: &ExecRuntime,
+    qbuf: &mut Vec<f32>,
+) -> Result<()> {
+    let q = Quantizer::nearest(m_bits);
+    if q.is_bypass() {
+        return Ok(());
+    }
+    for t in params.iter_mut() {
+        if let Ok(d) = t.as_f32_mut() {
+            if !(2..=16).contains(&m_bits) {
+                // Mantissas beyond the integer carrier (17..=22):
+                // delegate exactly like `quantize_packed_into`.
+                let flat = quantize_flat(d, block, q, 0);
+                d.copy_from_slice(&flat);
+                continue;
+            }
+            let fmt = BlockFormat::new(m_bits, block)?;
+            let enc = rt.encode_cached(d, 1, d.len(), fmt)?;
+            enc.decode_into(qbuf);
             d.copy_from_slice(qbuf);
         }
     }
@@ -222,6 +262,35 @@ mod tests {
         let mut raw = vec![Tensor::from_f32(&[200], w.clone()).unwrap()];
         quantize_params_packed(&mut raw, 32, 64, &mut scratch, &mut qbuf).unwrap();
         assert_eq!(raw[0].as_f32().unwrap(), &w[..]);
+    }
+
+    #[test]
+    fn cached_param_quantize_matches_uncached_and_hits() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(77);
+        let w: Vec<f32> = (0..300).map(|_| rng.normal_scaled(0.5)).collect();
+        let rt = ExecRuntime::with_threads(1);
+        let mut qbuf = Vec::new();
+        for m in [4u32, 18, 32] {
+            let mut cached = vec![Tensor::from_f32(&[300], w.clone()).unwrap()];
+            quantize_params_packed_cached(&mut cached, m, 64, &rt, &mut qbuf).unwrap();
+            let mut plain = vec![Tensor::from_f32(&[300], w.clone()).unwrap()];
+            let mut scratch = BfpMatrix::empty();
+            let mut buf = Vec::new();
+            quantize_params_packed(&mut plain, m, 64, &mut scratch, &mut buf).unwrap();
+            let (a, b) = (cached[0].as_f32().unwrap(), plain[0].as_f32().unwrap());
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert!(
+                    (*x == 0.0 && *y == 0.0) || x.to_bits() == y.to_bits(),
+                    "m={m} elem {i}: {x} vs {y}"
+                );
+            }
+        }
+        // Unchanged content re-quantized at the same format hits the cache.
+        let before = rt.cache_stats().hits;
+        let mut again = vec![Tensor::from_f32(&[300], w.clone()).unwrap()];
+        quantize_params_packed_cached(&mut again, 4, 64, &rt, &mut qbuf).unwrap();
+        assert!(rt.cache_stats().hits > before);
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod wasserstein_sweep;
 pub use directions::{filter_normalized_direction, perturb};
 pub use spectral::{conv_bank_high_freq, dft_magnitudes, high_freq_energy_fraction};
 pub use landscape::{
-    landscape_1d, landscape_1d_hbfp, landscape_2d, quantize_params_packed, LandscapeCurve,
+    landscape_1d, landscape_1d_hbfp, landscape_2d, quantize_params_packed,
+    quantize_params_packed_cached, LandscapeCurve,
 };
 pub use wasserstein_sweep::{layer_sweep, WassersteinPoint};

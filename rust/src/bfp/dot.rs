@@ -37,9 +37,13 @@ pub fn bfp_dot_blocks(x: &BfpBlock, y: &BfpBlock) -> Result<f64> {
 }
 
 /// Fixed-point dot product of two equal-length vectors, blocked with
-/// `fmt`: encode both sides into packed planes, run integer MACs per
-/// block pair, accumulate. Bit-identical to summing
-/// [`bfp_dot_blocks`] over a [`BfpTensor`] pair in block order.
+/// `fmt`: encode both sides into packed planes (large vectors encode in
+/// parallel on the [`crate::exec`] pool, bit-identically to serial),
+/// run integer MACs per block pair, accumulate serially in block order.
+/// Operands are deliberately **not** routed through the exec operand
+/// cache: dot operands are overwhelmingly one-shot, and inserting them
+/// would evict the serving path's reusable weight encodings. Bit-identical
+/// to summing [`bfp_dot_blocks`] over a [`BfpTensor`] pair in block order.
 pub fn bfp_dot_fixed_point(x: &[f32], y: &[f32], fmt: BlockFormat) -> Result<f64> {
     if x.len() != y.len() {
         return Err(anyhow!("length mismatch {} vs {}", x.len(), y.len()));

@@ -15,26 +15,34 @@
 //!
 //! # Thread partitioning rule
 //!
-//! Work is split over **whole activation rows** into contiguous bands,
-//! one `std::thread::scope` thread per band (bounded by
-//! `available_parallelism`, overridable with `BOOSTERS_GEMM_THREADS`).
-//! Each output element is still accumulated by exactly one thread in
-//! ascending block order, so the parallel result is bit-identical to
-//! the single-threaded one — and both are bit-identical to the scalar
-//! [`super::matrix::hbfp_gemm_scalar`] reference, which the property
-//! tests enforce.
+//! Work is split over **whole activation rows** into contiguous bands.
+//! Bands run as work items on the persistent [`crate::exec`] worker
+//! pool (sized by [`crate::util::gemm_thread_budget`]:
+//! `BOOSTERS_GEMM_THREADS` override, else `available_parallelism`) —
+//! no per-call thread spawn. Each output element is still accumulated
+//! by exactly one band job in ascending block order, so the parallel
+//! result is bit-identical to the single-threaded one — and both are
+//! bit-identical to the scalar [`super::matrix::hbfp_gemm_scalar`]
+//! reference, which the property tests enforce.
+//!
+//! The tiled micro-kernel itself sits behind the [`GemmKernel`] trait
+//! ([`ScalarTiledKernel`] is the portable implementation) so a
+//! SIMD-explicit kernel can slot in without touching the dispatch,
+//! banding, or scheduling layers.
 
 use super::block::scale_shift;
 use super::matrix::Mat;
 use super::packed::{BfpMatrix, Mantissa, MantissaPlane};
+use crate::exec::pool::Job;
 use anyhow::{bail, Result};
 
 /// Output-strip width of the micro-kernel (f64 accumulators held in
 /// registers while one activation block streams the weight plane).
 const TILE_J: usize = 8;
 
-/// Below this many MACs, thread spawn overhead dominates; stay serial.
-const PARALLEL_MIN_MACS: usize = 1 << 22;
+/// Below this many MACs, dispatch overhead dominates; stay serial.
+/// Shared with the batch scheduler's whole-batch heuristic.
+pub(crate) const PARALLEL_MIN_MACS: usize = 1 << 22;
 
 /// Largest block size whose i8 x i8 block MAC provably fits i32
 /// (|product| <= 2^14, so 2^16 terms stay under 2^30).
@@ -168,50 +176,85 @@ fn gemm_band<A: Mantissa, B: Mantissa>(
     }
 }
 
-/// Thread count for an `rows x cols` output with `k` MACs per element.
+/// One contiguous band of a GEMM: activation rows `r0 .. r0 + rows` of
+/// `x` against every packed column of `w`, writing the band's slice of
+/// the output. `xsh`/`wsh` are the precomputed per-block scale shifts
+/// ([`band_shifts`]) of the full operands.
+pub struct BandTask<'a> {
+    pub x: &'a BfpMatrix,
+    pub w: &'a BfpMatrix,
+    pub xsh: &'a [i32],
+    pub wsh: &'a [i32],
+    pub r0: usize,
+    pub rows: usize,
+    pub out: &'a mut [f32],
+}
+
+/// A band-level GEMM micro-kernel. Implementations must be pure
+/// functions of the task (no scheduling decisions) and must accumulate
+/// each output element's blocks in ascending contraction order so that
+/// every kernel is bit-compatible with the scalar reference. A
+/// SIMD-explicit kernel slots in by implementing this trait.
+pub trait GemmKernel: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn run_band(&self, task: BandTask<'_>);
+}
+
+/// The portable cache-tiled, register-blocked kernel (see module docs).
+pub struct ScalarTiledKernel;
+
+impl GemmKernel for ScalarTiledKernel {
+    fn name(&self) -> &'static str {
+        "scalar-tiled"
+    }
+
+    fn run_band(&self, t: BandTask<'_>) {
+        let n = t.w.rows;
+        let kb = t.x.blocks_per_row;
+        let b = t.x.fmt.block_size;
+        debug_assert_eq!(kb, t.w.blocks_per_row);
+        match (&t.x.mantissas, &t.w.mantissas) {
+            (MantissaPlane::I8(a), MantissaPlane::I8(w)) => {
+                gemm_band(a, w, t.xsh, t.wsh, t.r0, t.rows, n, kb, b, t.out)
+            }
+            (MantissaPlane::I8(a), MantissaPlane::I16(w)) => {
+                gemm_band(a, w, t.xsh, t.wsh, t.r0, t.rows, n, kb, b, t.out)
+            }
+            (MantissaPlane::I16(a), MantissaPlane::I8(w)) => {
+                gemm_band(a, w, t.xsh, t.wsh, t.r0, t.rows, n, kb, b, t.out)
+            }
+            (MantissaPlane::I16(a), MantissaPlane::I16(w)) => {
+                gemm_band(a, w, t.xsh, t.wsh, t.r0, t.rows, n, kb, b, t.out)
+            }
+        }
+    }
+}
+
+static SCALAR_KERNEL: ScalarTiledKernel = ScalarTiledKernel;
+
+/// The kernel the runtime currently dispatches to. One home, so a
+/// future SIMD kernel (or per-arch selection) swaps in here.
+pub fn active_kernel() -> &'static dyn GemmKernel {
+    &SCALAR_KERNEL
+}
+
+/// Per-block decode scale shifts of a packed operand — hoisted out of
+/// the band loop and shared between the single-op path and the batch
+/// scheduler.
+pub(crate) fn band_shifts(m: &BfpMatrix) -> Vec<i32> {
+    m.exponents
+        .iter()
+        .map(|&e| scale_shift(e, m.fmt.mantissa_bits))
+        .collect()
+}
+
+/// Band count for an `rows x cols` output with `k` MACs per element.
 fn gemm_threads(rows: usize, cols: usize, k: usize) -> usize {
     let macs = rows.saturating_mul(cols).saturating_mul(k);
     if macs < PARALLEL_MIN_MACS || rows < 2 {
         return 1;
     }
-    let hw = std::env::var("BOOSTERS_GEMM_THREADS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .filter(|&t| t >= 1)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
-        });
-    hw.min(rows).min(16)
-}
-
-#[allow(clippy::too_many_arguments)]
-fn gemm_dispatch<A: Mantissa, B: Mantissa>(
-    xm: &[A],
-    wm: &[B],
-    xsh: &[i32],
-    wsh: &[i32],
-    m: usize,
-    n: usize,
-    kb: usize,
-    b: usize,
-    out: &mut [f32],
-    threads: usize,
-) {
-    if threads <= 1 {
-        gemm_band(xm, wm, xsh, wsh, 0, m, n, kb, b, out);
-        return;
-    }
-    let band = m.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (t, chunk) in out.chunks_mut(band * n).enumerate() {
-            let r0 = t * band;
-            s.spawn(move || {
-                gemm_band(xm, wm, xsh, wsh, r0, chunk.len() / n, n, kb, b, chunk);
-            });
-        }
-    });
+    crate::util::gemm_thread_budget().min(rows).min(16)
 }
 
 /// `x (m x K)` times the matrix whose columns `rhs_t` packs
@@ -219,6 +262,18 @@ fn gemm_dispatch<A: Mantissa, B: Mantissa>(
 /// widths may differ between the operands (the bit-sliced
 /// mixed-precision case); block sizes must match.
 pub fn gemm_packed(x: &BfpMatrix, rhs_t: &BfpMatrix) -> Result<Mat> {
+    gemm_packed_with(x, rhs_t, active_kernel(), None)
+}
+
+/// [`gemm_packed`] with an explicit kernel and band-count override
+/// (`None` = auto: size heuristic + pool budget). Bands execute on the
+/// persistent [`crate::exec`] pool; any band count is bit-identical.
+pub(crate) fn gemm_packed_with(
+    x: &BfpMatrix,
+    rhs_t: &BfpMatrix,
+    kernel: &dyn GemmKernel,
+    threads: Option<usize>,
+) -> Result<Mat> {
     if x.cols != rhs_t.cols {
         bail!("contraction dims {} vs {}", x.cols, rhs_t.cols);
     }
@@ -237,31 +292,43 @@ pub fn gemm_packed(x: &BfpMatrix, rhs_t: &BfpMatrix) -> Result<Mat> {
     let kb = x.blocks_per_row;
     debug_assert_eq!(kb, rhs_t.blocks_per_row);
     let b = x.fmt.block_size;
-    let xsh: Vec<i32> = x
-        .exponents
-        .iter()
-        .map(|&e| scale_shift(e, x.fmt.mantissa_bits))
-        .collect();
-    let wsh: Vec<i32> = rhs_t
-        .exponents
-        .iter()
-        .map(|&e| scale_shift(e, rhs_t.fmt.mantissa_bits))
-        .collect();
-    let threads = gemm_threads(m, n, kb * b);
-    match (&x.mantissas, &rhs_t.mantissas) {
-        (MantissaPlane::I8(a), MantissaPlane::I8(w)) => {
-            gemm_dispatch(a, w, &xsh, &wsh, m, n, kb, b, &mut out.data, threads)
-        }
-        (MantissaPlane::I8(a), MantissaPlane::I16(w)) => {
-            gemm_dispatch(a, w, &xsh, &wsh, m, n, kb, b, &mut out.data, threads)
-        }
-        (MantissaPlane::I16(a), MantissaPlane::I8(w)) => {
-            gemm_dispatch(a, w, &xsh, &wsh, m, n, kb, b, &mut out.data, threads)
-        }
-        (MantissaPlane::I16(a), MantissaPlane::I16(w)) => {
-            gemm_dispatch(a, w, &xsh, &wsh, m, n, kb, b, &mut out.data, threads)
-        }
+    let xsh = band_shifts(x);
+    let wsh = band_shifts(rhs_t);
+    let threads = threads.unwrap_or_else(|| gemm_threads(m, n, kb * b));
+    if threads <= 1 {
+        kernel.run_band(BandTask {
+            x,
+            w: rhs_t,
+            xsh: &xsh,
+            wsh: &wsh,
+            r0: 0,
+            rows: m,
+            out: &mut out.data,
+        });
+        return Ok(out);
     }
+    let band = m.div_ceil(threads);
+    let jobs: Vec<Job> = out
+        .data
+        .chunks_mut(band * n)
+        .enumerate()
+        .map(|(t, chunk)| {
+            let r0 = t * band;
+            let (xsh, wsh) = (xsh.as_slice(), wsh.as_slice());
+            Box::new(move || {
+                kernel.run_band(BandTask {
+                    x,
+                    w: rhs_t,
+                    xsh,
+                    wsh,
+                    r0,
+                    rows: chunk.len() / n,
+                    out: chunk,
+                });
+            }) as Job
+        })
+        .collect();
+    crate::exec::global().pool().scope_run(jobs);
     Ok(out)
 }
 
@@ -381,7 +448,7 @@ mod tests {
 
     #[test]
     fn threaded_result_is_bit_identical_to_serial() {
-        // Drives the dispatcher with explicit thread counts (no env-var
+        // Drives the dispatcher with explicit band counts (no env-var
         // mutation, which would race other tests in this binary).
         let fmt = BlockFormat::new(4, 64).unwrap();
         let q = Quantizer::nearest(4);
@@ -389,27 +456,38 @@ mod tests {
         let w = Mat::new(640, 96, randn(640 * 96, 6)).unwrap();
         let xp = BfpMatrix::encode(&x.data, 96, 640, fmt, q).unwrap();
         let wp = BfpMatrix::encode_transposed(&w, fmt, q).unwrap();
-        let xsh: Vec<i32> = xp.exponents.iter().map(|&e| scale_shift(e, 4)).collect();
-        let wsh: Vec<i32> = wp.exponents.iter().map(|&e| scale_shift(e, 4)).collect();
-        let (MantissaPlane::I8(a), MantissaPlane::I8(b)) = (&xp.mantissas, &wp.mantissas) else {
-            panic!("hbfp4 must use the i8 plane");
-        };
-        let mut serial = vec![0.0f32; 96 * 96];
-        let mut threaded = vec![0.0f32; 96 * 96];
-        gemm_dispatch(a, b, &xsh, &wsh, 96, 96, 10, 64, &mut serial, 1);
-        gemm_dispatch(a, b, &xsh, &wsh, 96, 96, 10, 64, &mut threaded, 4);
-        // Uneven band split: 96 rows over 5 threads -> 20,20,20,20,16.
-        let mut uneven = vec![0.0f32; 96 * 96];
-        gemm_dispatch(a, b, &xsh, &wsh, 96, 96, 10, 64, &mut uneven, 5);
-        for ((s, t), u) in serial.iter().zip(&threaded).zip(&uneven) {
+        // hbfp4 lives on the narrow plane; the typed accessor replaces
+        // the old panic-on-mismatch destructure.
+        assert!(xp.mantissas.try_i8().is_ok());
+        assert!(wp.mantissas.try_i8().is_ok());
+        let kernel = active_kernel();
+        let serial = gemm_packed_with(&xp, &wp, kernel, Some(1)).unwrap();
+        let threaded = gemm_packed_with(&xp, &wp, kernel, Some(4)).unwrap();
+        // Uneven band split: 96 rows over 5 bands -> 20,20,20,20,16.
+        let uneven = gemm_packed_with(&xp, &wp, kernel, Some(5)).unwrap();
+        for ((s, t), u) in serial.data.iter().zip(&threaded.data).zip(&uneven.data) {
             assert_eq!(s.to_bits(), t.to_bits());
             assert_eq!(s.to_bits(), u.to_bits());
         }
         // The public entry agrees with the explicit serial kernel.
         let via_public = gemm_packed(&xp, &wp).unwrap();
-        for (s, p) in serial.iter().zip(&via_public.data) {
+        for (s, p) in serial.data.iter().zip(&via_public.data) {
             assert_eq!(s.to_bits(), p.to_bits());
         }
+    }
+
+    #[test]
+    fn plane_accessor_error_path_is_typed() {
+        // The hot path reports dtype mismatches as typed errors instead
+        // of panicking (see `MantissaPlane::try_i8`/`try_i16`).
+        let f12 = BlockFormat::new(12, 16).unwrap();
+        let wide = BfpMatrix::encode(&randn(32, 10), 2, 16, f12, Quantizer::nearest(12)).unwrap();
+        assert!(wide.mantissas.try_i16().is_ok());
+        let err = wide.mantissas.try_i8().unwrap_err();
+        assert_eq!(err.expected, crate::bfp::PlaneDtype::I8);
+        assert_eq!(err.found, crate::bfp::PlaneDtype::I16);
+        assert!(err.to_string().contains("i16"), "{err}");
+        assert!(active_kernel().name().contains("scalar"));
     }
 
     #[test]

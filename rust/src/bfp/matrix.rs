@@ -109,17 +109,21 @@ fn encode_row(
 /// Fixed-point HBFP GEMM: y = Q(x) @ Q(w) with integer MACs per block
 /// pair, one exponent add per block pair, FP32 result store.
 ///
-/// Production path: both operands are packed once into [`BfpMatrix`]
-/// planes, then multiplied by the tiled parallel fixed-point kernel.
-/// Bit-identical to [`hbfp_gemm_scalar`] (property-tested).
+/// Production path: the activation operand is packed fresh (parallel
+/// encode on the [`crate::exec`] pool for large tensors); the weight
+/// operand is pulled through the exec **encoded-operand cache**, so
+/// repeated multiplies against the same weights — the serving/emulation
+/// pattern — encode them exactly once. Cached planes are byte-identical
+/// to fresh ones (deterministic nearest rounding), so the result stays
+/// bit-identical to [`hbfp_gemm_scalar`] (property-tested).
 pub fn hbfp_gemm(x: &Mat, w: &Mat, fmt: BlockFormat) -> Result<Mat> {
     if x.cols != w.rows {
         bail!("inner dims {} vs {}", x.cols, w.rows);
     }
     let q = Quantizer::nearest(fmt.mantissa_bits);
     let xp = BfpMatrix::encode(&x.data, x.rows, x.cols, fmt, q)?;
-    let wp = BfpMatrix::encode_transposed(w, fmt, q)?;
-    xp.gemm(&wp)
+    let wp = crate::exec::global().encode_transposed_cached(w, fmt)?;
+    xp.gemm(wp.as_ref())
 }
 
 /// The original per-block scalar GEMM, kept as the reference
@@ -172,7 +176,11 @@ pub fn dequant_gemm(x: &Mat, w: &Mat, fmt: BlockFormat) -> Result<Mat> {
     }
     let q = Quantizer::nearest(fmt.mantissa_bits);
     let xq = BfpMatrix::encode(&x.data, x.rows, x.cols, fmt, q)?.to_mat();
-    let wq = BfpMatrix::encode_transposed(w, fmt, q)?.decode_transposed();
+    // Shares the exec operand cache with `hbfp_gemm`: comparing the two
+    // on the same (w, fmt) encodes the weights once, not twice.
+    let wq = crate::exec::global()
+        .encode_transposed_cached(w, fmt)?
+        .decode_transposed();
     xq.matmul(&wq)
 }
 

@@ -26,7 +26,10 @@
 //!
 //! [`gemm`] runs a cache-tiled, register-blocked, row-band-parallel
 //! fixed-point GEMM over those planes (thread partitioning is by whole
-//! output rows, so parallel results are bit-identical to serial).
+//! output rows, so parallel results are bit-identical to serial). The
+//! micro-kernel sits behind the [`GemmKernel`] trait; bands execute as
+//! work items on the persistent [`crate::exec`] pool, and weight-side
+//! encodings are reused across calls through the exec operand cache.
 //! Encoding happens once per operand; the scalar [`block::BfpBlock`] /
 //! [`matrix::hbfp_gemm_scalar`] path is retained as the reference the
 //! property tests cross-check bit-for-bit.
@@ -41,10 +44,11 @@ pub mod rounding;
 
 pub use block::{scale_shift, BfpBlock, BfpTensor, BlockFormat};
 pub use dot::{bfp_dot_blocks, bfp_dot_fixed_point, dequant_dot};
-pub use gemm::{gemm_packed, packed_dot};
+pub use gemm::{active_kernel, gemm_packed, packed_dot, BandTask, GemmKernel, ScalarTiledKernel};
 pub use matrix::{dequant_gemm, hbfp_gemm, hbfp_gemm_scalar, Mat};
 pub use packed::{
     quantize_packed, quantize_packed_into, BfpMatrix, Mantissa, MantissaPlane, PlaneDtype,
+    PlaneDtypeError,
 };
 pub use quantize::{floor_log2, quantize_blocks_into, quantize_flat, quantize_tensor, Quantizer};
 pub use rounding::{uniform_u01, xorshift_hash, RoundMode};

@@ -32,6 +32,7 @@ use super::block::{scale_shift, BlockFormat};
 use super::matrix::Mat;
 use super::quantize::{exp2i, floor_log2, quantize_flat, Quantizer};
 use super::rounding::{round_value, uniform_u01, RoundMode};
+use crate::exec::pool::{Job, WorkerPool};
 use anyhow::{anyhow, Result};
 
 /// Storage element type of the mantissa plane.
@@ -58,6 +59,29 @@ impl PlaneDtype {
         }
     }
 }
+
+/// Typed error for mantissa-plane dtype mismatches — the safe
+/// replacement for panicking plane destructures on the execution path.
+/// Implements `std::error::Error`, so it downcasts cleanly through
+/// `anyhow` chains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlaneDtypeError {
+    pub expected: PlaneDtype,
+    pub found: PlaneDtype,
+}
+
+impl std::fmt::Display for PlaneDtypeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mantissa plane holds {} but {} was requested",
+            self.found.label(),
+            self.expected.label()
+        )
+    }
+}
+
+impl std::error::Error for PlaneDtypeError {}
 
 /// Integer types usable as mantissa-plane elements.
 pub trait Mantissa: Copy + Send + Sync + 'static {
@@ -114,6 +138,28 @@ impl MantissaPlane {
         match self {
             MantissaPlane::I8(_) => PlaneDtype::I8,
             MantissaPlane::I16(_) => PlaneDtype::I16,
+        }
+    }
+
+    /// The narrow plane, or a typed mismatch error.
+    pub fn try_i8(&self) -> Result<&[i8], PlaneDtypeError> {
+        match self {
+            MantissaPlane::I8(v) => Ok(v),
+            MantissaPlane::I16(_) => Err(PlaneDtypeError {
+                expected: PlaneDtype::I8,
+                found: PlaneDtype::I16,
+            }),
+        }
+    }
+
+    /// The wide plane, or a typed mismatch error.
+    pub fn try_i16(&self) -> Result<&[i16], PlaneDtypeError> {
+        match self {
+            MantissaPlane::I16(v) => Ok(v),
+            MantissaPlane::I8(_) => Err(PlaneDtypeError {
+                expected: PlaneDtype::I16,
+                found: PlaneDtype::I8,
+            }),
         }
     }
 
@@ -204,6 +250,10 @@ impl BfpMatrix {
     }
 
     /// [`Self::encode`] into an existing buffer, reusing allocations.
+    /// Large tensors are encoded in parallel on the [`crate::exec`]
+    /// pool — bit-identical to serial encoding, because every block is
+    /// encoded independently (the stochastic stream is indexed by
+    /// absolute block position).
     pub fn encode_into(
         &mut self,
         data: &[f32],
@@ -213,17 +263,81 @@ impl BfpMatrix {
         q: Quantizer,
         base: u32,
     ) -> Result<()> {
+        self.encode_into_with(data, rows, cols, fmt, q, base, Some(crate::exec::global().pool()))
+    }
+
+    /// [`Self::encode_into`] on an explicit pool — used by
+    /// [`crate::exec::ExecRuntime`] so private runtimes (including
+    /// strict-serial ones) never spill work onto the global pool.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn encode_into_on(
+        &mut self,
+        pool: &WorkerPool,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        fmt: BlockFormat,
+        q: Quantizer,
+        base: u32,
+    ) -> Result<()> {
+        self.encode_into_with(data, rows, cols, fmt, q, base, Some(pool))
+    }
+
+    /// Strictly serial [`Self::encode_into`], for callers that already
+    /// run inside an exec-pool job.
+    pub(crate) fn encode_into_serial(
+        &mut self,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        fmt: BlockFormat,
+        q: Quantizer,
+        base: u32,
+    ) -> Result<()> {
+        self.encode_into_with(data, rows, cols, fmt, q, base, None)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn encode_into_with(
+        &mut self,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        fmt: BlockFormat,
+        q: Quantizer,
+        base: u32,
+        pool: Option<&WorkerPool>,
+    ) -> Result<()> {
         if rows * cols != data.len() {
             return Err(anyhow!("shape {rows}x{cols} != {} elems", data.len()));
         }
         self.reshape(rows, cols, fmt);
+        let threads = encode_threads(data.len(), pool);
         match &mut self.mantissas {
-            MantissaPlane::I8(p) => {
-                encode_plane(data, rows, cols, fmt, q, base, p, &mut self.exponents)
-            }
-            MantissaPlane::I16(p) => {
-                encode_plane(data, rows, cols, fmt, q, base, p, &mut self.exponents)
-            }
+            MantissaPlane::I8(p) => encode_plane_dispatch(
+                data,
+                rows,
+                cols,
+                fmt,
+                q,
+                base,
+                p,
+                &mut self.exponents,
+                pool,
+                threads,
+            ),
+            MantissaPlane::I16(p) => encode_plane_dispatch(
+                data,
+                rows,
+                cols,
+                fmt,
+                q,
+                base,
+                p,
+                &mut self.exponents,
+                pool,
+                threads,
+            ),
         }
         Ok(())
     }
@@ -237,36 +351,63 @@ impl BfpMatrix {
         Ok(out)
     }
 
-    /// [`Self::encode_transposed`] into an existing buffer.
+    /// [`Self::encode_transposed`] into an existing buffer. Columns are
+    /// independent, so wide weight matrices encode in parallel on the
+    /// [`crate::exec`] pool, bit-identically to the serial path.
     pub fn encode_transposed_into(&mut self, w: &Mat, fmt: BlockFormat, q: Quantizer) -> Result<()> {
+        self.encode_transposed_with(w, fmt, q, Some(crate::exec::global().pool()))
+    }
+
+    /// [`Self::encode_transposed_into`] on an explicit pool (see
+    /// [`Self::encode_into_on`]).
+    pub(crate) fn encode_transposed_on(
+        &mut self,
+        pool: &WorkerPool,
+        w: &Mat,
+        fmt: BlockFormat,
+        q: Quantizer,
+    ) -> Result<()> {
+        self.encode_transposed_with(w, fmt, q, Some(pool))
+    }
+
+    fn encode_transposed_with(
+        &mut self,
+        w: &Mat,
+        fmt: BlockFormat,
+        q: Quantizer,
+        pool: Option<&WorkerPool>,
+    ) -> Result<()> {
         let (k, n) = (w.rows, w.cols);
         self.reshape(n, k, fmt);
+        if n == 0 || k == 0 {
+            return Ok(());
+        }
         let stride = self.row_stride();
-        // Gather one padded column at a time; the zero tail is written
-        // once and never dirtied (only the first k entries are reused).
-        let mut col = vec![0.0f32; stride];
-        for j in 0..n {
-            for (i, c) in col[..k].iter_mut().enumerate() {
-                *c = w.data[i * n + j];
-            }
-            match &mut self.mantissas {
-                MantissaPlane::I8(p) => encode_padded_row(
-                    &col,
-                    fmt,
-                    q,
-                    0,
-                    &mut p[j * stride..(j + 1) * stride],
-                    &mut self.exponents[j * self.blocks_per_row..(j + 1) * self.blocks_per_row],
-                ),
-                MantissaPlane::I16(p) => encode_padded_row(
-                    &col,
-                    fmt,
-                    q,
-                    0,
-                    &mut p[j * stride..(j + 1) * stride],
-                    &mut self.exponents[j * self.blocks_per_row..(j + 1) * self.blocks_per_row],
-                ),
-            }
+        let bpr = self.blocks_per_row;
+        let threads = encode_threads(n * k, pool).min(n);
+        match &mut self.mantissas {
+            MantissaPlane::I8(p) => encode_transposed_plane(
+                w,
+                fmt,
+                q,
+                p,
+                &mut self.exponents,
+                stride,
+                bpr,
+                pool,
+                threads,
+            ),
+            MantissaPlane::I16(p) => encode_transposed_plane(
+                w,
+                fmt,
+                q,
+                p,
+                &mut self.exponents,
+                stride,
+                bpr,
+                pool,
+                threads,
+            ),
         }
         Ok(())
     }
@@ -407,6 +548,39 @@ fn encode_padded_row<T: Mantissa>(
     }
 }
 
+/// Encode blocks `k0 .. k0 + exps_chunk.len()` of one logical row of
+/// `cols` values. Blocks are indexed absolutely (`k0` offsets both the
+/// ragged-tail check and the stochastic stream), so any partition of a
+/// row's block range reproduces the serial encoding bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn encode_blocks_range<T: Mantissa>(
+    row: &[f32],
+    cols: usize,
+    k0: usize,
+    fmt: BlockFormat,
+    q: Quantizer,
+    base: u32,
+    plane_chunk: &mut [T],
+    exps_chunk: &mut [i32],
+    tail: &mut [f32],
+) {
+    let b = fmt.block_size;
+    for (i, exp_slot) in exps_chunk.iter_mut().enumerate() {
+        let bi = k0 + i;
+        let idx = base.wrapping_add((bi * b) as u32);
+        let lo = bi * b;
+        let hi = ((bi + 1) * b).min(cols);
+        let dst = &mut plane_chunk[i * b..(i + 1) * b];
+        *exp_slot = if hi - lo == b {
+            encode_block(&row[lo..hi], dst, q, idx)
+        } else {
+            tail.fill(0.0);
+            tail[..hi - lo].copy_from_slice(&row[lo..hi]);
+            encode_block(tail, dst, q, idx)
+        };
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn encode_plane<T: Mantissa>(
     data: &[f32],
@@ -425,20 +599,155 @@ fn encode_plane<T: Mantissa>(
     let mut tail = vec![0.0f32; b];
     for r in 0..rows {
         let row = &data[r * cols..(r + 1) * cols];
-        for bi in 0..bpr {
-            let idx = base.wrapping_add((bi * b) as u32);
-            let lo = bi * b;
-            let hi = ((bi + 1) * b).min(cols);
-            let dst = &mut plane[r * stride + lo..r * stride + lo + b];
-            let e = if hi - lo == b {
-                encode_block(&row[lo..hi], dst, q, idx)
-            } else {
-                tail.fill(0.0);
-                tail[..hi - lo].copy_from_slice(&row[lo..hi]);
-                encode_block(&tail, dst, q, idx)
-            };
-            exps[r * bpr + bi] = e;
+        encode_blocks_range(
+            row,
+            cols,
+            0,
+            fmt,
+            q,
+            base,
+            &mut plane[r * stride..(r + 1) * stride],
+            &mut exps[r * bpr..(r + 1) * bpr],
+            &mut tail,
+        );
+    }
+}
+
+/// Tensors below this size are always encoded serially (pool dispatch
+/// would cost more than it saves).
+const PARALLEL_MIN_ENCODE: usize = 1 << 16;
+
+fn encode_threads(elems: usize, pool: Option<&WorkerPool>) -> usize {
+    match pool {
+        Some(p) if elems >= PARALLEL_MIN_ENCODE => p.threads().clamp(1, 16),
+        _ => 1,
+    }
+}
+
+/// Serial-or-parallel plane encode: multi-row tensors split into row
+/// bands, single-row tensors split along the block axis. Either split
+/// is bit-identical to the serial loop (per-block independence).
+#[allow(clippy::too_many_arguments)]
+fn encode_plane_dispatch<T: Mantissa>(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: BlockFormat,
+    q: Quantizer,
+    base: u32,
+    plane: &mut [T],
+    exps: &mut [i32],
+    pool: Option<&WorkerPool>,
+    threads: usize,
+) {
+    let b = fmt.block_size;
+    let bpr = cols.div_ceil(b);
+    let pool = match pool {
+        Some(p) if threads > 1 && (rows >= 2 || bpr >= 2) => p,
+        _ => {
+            encode_plane(data, rows, cols, fmt, q, base, plane, exps);
+            return;
         }
+    };
+    let stride = bpr * b;
+    if rows >= 2 {
+        let band = rows.div_ceil(threads.min(rows));
+        let jobs: Vec<Job> = plane
+            .chunks_mut(band * stride)
+            .zip(exps.chunks_mut(band * bpr))
+            .zip(data.chunks(band * cols))
+            .map(|((pchunk, echunk), dchunk)| {
+                Box::new(move || {
+                    encode_plane(dchunk, dchunk.len() / cols, cols, fmt, q, base, pchunk, echunk);
+                }) as Job
+            })
+            .collect();
+        pool.scope_run(jobs);
+    } else {
+        let kband = bpr.div_ceil(threads.min(bpr));
+        let jobs: Vec<Job> = plane
+            .chunks_mut(kband * b)
+            .zip(exps.chunks_mut(kband))
+            .enumerate()
+            .map(|(t, (pchunk, echunk))| {
+                let k0 = t * kband;
+                Box::new(move || {
+                    let mut tail = vec![0.0f32; b];
+                    encode_blocks_range(data, cols, k0, fmt, q, base, pchunk, echunk, &mut tail);
+                }) as Job
+            })
+            .collect();
+        pool.scope_run(jobs);
+    }
+}
+
+/// Parallel column-wise weight encode: each job gathers and encodes a
+/// contiguous range of columns into its own plane band.
+#[allow(clippy::too_many_arguments)]
+fn encode_transposed_plane<T: Mantissa>(
+    w: &Mat,
+    fmt: BlockFormat,
+    q: Quantizer,
+    plane: &mut [T],
+    exps: &mut [i32],
+    stride: usize,
+    bpr: usize,
+    pool: Option<&WorkerPool>,
+    threads: usize,
+) {
+    let n = w.cols;
+    let pool = match pool {
+        Some(p) if threads > 1 && n >= 2 => p,
+        _ => {
+            encode_transposed_cols(w, fmt, q, 0, plane, exps, stride, bpr);
+            return;
+        }
+    };
+    let jband = n.div_ceil(threads);
+    let jobs: Vec<Job> = plane
+        .chunks_mut(jband * stride)
+        .zip(exps.chunks_mut(jband * bpr))
+        .enumerate()
+        .map(|(t, (pchunk, echunk))| {
+            let j0 = t * jband;
+            Box::new(move || {
+                encode_transposed_cols(w, fmt, q, j0, pchunk, echunk, stride, bpr);
+            }) as Job
+        })
+        .collect();
+    pool.scope_run(jobs);
+}
+
+/// Gather-and-encode columns `j0 ..` of `w` into the given plane band.
+#[allow(clippy::too_many_arguments)]
+fn encode_transposed_cols<T: Mantissa>(
+    w: &Mat,
+    fmt: BlockFormat,
+    q: Quantizer,
+    j0: usize,
+    plane_chunk: &mut [T],
+    exps_chunk: &mut [i32],
+    stride: usize,
+    bpr: usize,
+) {
+    let (k, n) = (w.rows, w.cols);
+    let ncols = plane_chunk.len() / stride;
+    // Gather one padded column at a time; the zero tail is written once
+    // and never dirtied (only the first k entries are reused).
+    let mut col = vec![0.0f32; stride];
+    for jj in 0..ncols {
+        let j = j0 + jj;
+        for (i, c) in col[..k].iter_mut().enumerate() {
+            *c = w.data[i * n + j];
+        }
+        encode_padded_row(
+            &col,
+            fmt,
+            q,
+            0,
+            &mut plane_chunk[jj * stride..(jj + 1) * stride],
+            &mut exps_chunk[jj * bpr..(jj + 1) * bpr],
+        );
     }
 }
 
@@ -620,10 +929,18 @@ mod tests {
         let wt = w.transpose();
         let b = BfpMatrix::encode(&wt.data, wt.rows, wt.cols, fmt, q).unwrap();
         assert_eq!(a.exponents, b.exponents);
-        match (&a.mantissas, &b.mantissas) {
-            (MantissaPlane::I8(x), MantissaPlane::I8(y)) => assert_eq!(x, y),
-            other => panic!("dtype mismatch {other:?}"),
-        }
+        // Typed accessors replace the old panic-on-mismatch destructure.
+        assert_eq!(
+            a.mantissas.try_i8().expect("m=6 uses the narrow plane"),
+            b.mantissas.try_i8().expect("m=6 uses the narrow plane")
+        );
+        assert_eq!(
+            a.mantissas.try_i16().unwrap_err(),
+            PlaneDtypeError {
+                expected: PlaneDtype::I16,
+                found: PlaneDtype::I8,
+            }
+        );
         // And decode_transposed returns the k x n orientation.
         let back = a.decode_transposed();
         assert_eq!((back.rows, back.cols), (w.rows, w.cols));
@@ -658,6 +975,42 @@ mod tests {
                 assert!(same(*g, *w), "m={mbits} b={b} elem {i}");
             }
         }
+    }
+
+    #[test]
+    fn parallel_encode_bit_identical_to_serial() {
+        // Above PARALLEL_MIN_ENCODE the pool path kicks in; both the
+        // multi-row (row-band) and single-row (block-range) splits must
+        // reproduce the serial planes exactly, ragged tails included.
+        let n = PARALLEL_MIN_ENCODE + 1234;
+        let x = randn(n.max(300 * 256), 11);
+        for (rows, cols) in [(1usize, n), (128, n / 128)] {
+            let data = &x[..rows * cols];
+            for q in [Quantizer::nearest(4), Quantizer::stochastic(4, 77)] {
+                let mut par = BfpMatrix::empty();
+                par.encode_into(data, rows, cols, BlockFormat::new(4, 64).unwrap(), q, 5)
+                    .unwrap();
+                let mut ser = BfpMatrix::empty();
+                ser.encode_into_serial(data, rows, cols, BlockFormat::new(4, 64).unwrap(), q, 5)
+                    .unwrap();
+                assert_eq!(par.exponents, ser.exponents, "rows={rows}");
+                assert_eq!(
+                    par.mantissas.try_i8().unwrap(),
+                    ser.mantissas.try_i8().unwrap(),
+                    "rows={rows}"
+                );
+            }
+        }
+        // Transposed (weight-side) parallel encode, wide enough to split.
+        let w = Mat::new(300, 256, x[..300 * 256].to_vec()).unwrap();
+        let fmt = BlockFormat::new(6, 64).unwrap();
+        let q = Quantizer::nearest(6);
+        let par = BfpMatrix::encode_transposed(&w, fmt, q).unwrap();
+        let wt = w.transpose();
+        let mut ser = BfpMatrix::empty();
+        ser.encode_into_serial(&wt.data, wt.rows, wt.cols, fmt, q, 0).unwrap();
+        assert_eq!(par.exponents, ser.exponents);
+        assert_eq!(par.mantissas.try_i8().unwrap(), ser.mantissas.try_i8().unwrap());
     }
 
     #[test]

@@ -1,8 +1,7 @@
 //! The training orchestrator: epoch loop over the AOT-compiled step
 //! function, with the precision scheduler in the driver's seat.
 
-use crate::analysis::quantize_params_packed;
-use crate::bfp::BfpMatrix;
+use crate::analysis::quantize_params_packed_cached;
 use crate::config::TrainConfig;
 use crate::data::{Batcher, ImageDataset, ImageGenSpec, TextDataset, TextGenSpec};
 use crate::metrics::{corpus_bleu, EpochStats, RunHistory};
@@ -183,9 +182,10 @@ impl<'a> Trainer<'a> {
         let mut rng = Rng::new(self.cfg.seed ^ 0x5FF1E);
         let mut history = RunHistory::new(format!("{}/{}", m.variant, self.cfg.policy.label()));
         let mut global_step = 0usize;
-        // Shared packed carrier + decode buffer for the emulated BFP
-        // weight store (allocated once, reused every epoch).
-        let mut emu_scratch = BfpMatrix::empty();
+        // Shared decode buffer for the emulated BFP weight store
+        // (allocated once, reused every epoch). The encodings themselves
+        // go through the exec operand cache, so a parameter tensor that
+        // did not change since its last round-trip is not re-encoded.
         let mut emu_buf: Vec<f32> = Vec::new();
 
         for epoch in 0..self.cfg.epochs {
@@ -217,7 +217,7 @@ impl<'a> Trainer<'a> {
                 // the packed entry point delegates past the integer
                 // carrier) genuinely re-grids the weights.
                 if mid < 23.0 {
-                    requantize_params(&mut state, mid as u32, block, &mut emu_scratch, &mut emu_buf)?;
+                    requantize_params(&mut state, mid as u32, block, &mut emu_buf)?;
                 }
             }
             let eval_sc = sched.eval_scalars(epoch);
@@ -250,18 +250,20 @@ impl<'a> Trainer<'a> {
 }
 
 /// Round-trip every f32 parameter through the packed HBFP carrier:
-/// snapshot, snap via the shared [`quantize_params_packed`] helper
-/// (row-major flat blocking — the storage emulation, not the graph's
-/// per-axis operand blocking), write the snapped literals back.
+/// snapshot, snap via the shared [`quantize_params_packed_cached`]
+/// helper (row-major flat blocking — the storage emulation, not the
+/// graph's per-axis operand blocking) on the global exec runtime, write
+/// the snapped literals back. Routing through the runtime means
+/// unchanged tensors are served from the encoded-operand cache
+/// (`metrics::exec_cache_snapshot` exposes the hit/miss counters).
 fn requantize_params(
     state: &mut TrainState,
     m_bits: u32,
     block: usize,
-    scratch: &mut BfpMatrix,
     buf: &mut Vec<f32>,
 ) -> Result<()> {
     let mut params = state.params_to_tensors()?;
-    quantize_params_packed(&mut params, m_bits, block, scratch, buf)?;
+    quantize_params_packed_cached(&mut params, m_bits, block, crate::exec::global(), buf)?;
     state.params = params
         .iter()
         .map(|t| t.to_literal())

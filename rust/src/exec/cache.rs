@@ -1,0 +1,371 @@
+//! Encoded-operand cache: content-addressed reuse of packed BFP planes.
+//!
+//! Serving and emulation workloads multiply **the same weight planes**
+//! against a stream of fresh activations, and the Trainer's host-BFP
+//! weight store re-grids parameter tensors every epoch even when a
+//! tensor did not change. Encoding is the expensive part of those paths
+//! (quantize + plane packing); the cache makes it pay-once.
+//!
+//! # Keying
+//!
+//! Entries are keyed by [`CacheKey`]: a 128-bit content fingerprint of
+//! the raw f32 bits plus the logical shape, the `(mantissa_bits,
+//! block_size)` format, and the layout flag (row-encoded vs
+//! column/transposed-encoded). Two FNV-1a streams over independent
+//! bases make accidental collisions across a process lifetime
+//! negligible; shape is mixed in so a reshape of the same bytes cannot
+//! alias.
+//!
+//! **Only deterministic nearest-even encodings are cacheable.**
+//! Stochastic rounding depends on `(seed, site)` and must never be
+//! served from cache; the runtime's `encode_*_cached` entry points
+//! therefore always encode with [`Quantizer::nearest`].
+//!
+//! # Bounds and counters
+//!
+//! The cache is LRU-evicted under two simultaneous caps (entry count
+//! and approximate plane bytes). Hit/miss/eviction counters are atomic
+//! and cheap; [`OperandCache::stats`] snapshots them for the metrics
+//! surface ([`crate::metrics::exec_cache_snapshot`]) and the serve-sim
+//! report.
+
+use crate::bfp::{BfpMatrix, BlockFormat, MantissaPlane};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Identity of one encoded operand (see module docs for the contract).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// 128-bit content fingerprint over raw f32 bits + shape.
+    pub content: (u64, u64),
+    pub m_bits: u32,
+    pub block: usize,
+    /// True for weight-side (column/transposed) encodings.
+    pub transposed: bool,
+}
+
+impl CacheKey {
+    pub fn for_matrix(
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        fmt: BlockFormat,
+        transposed: bool,
+    ) -> Self {
+        Self {
+            content: content_fingerprint(data, rows, cols),
+            m_bits: fmt.mantissa_bits,
+            block: fmt.block_size,
+            transposed,
+        }
+    }
+}
+
+/// Two independent FNV-1a streams over the f32 bit patterns, with the
+/// shape folded into the bases. Deterministic across runs and
+/// platforms.
+pub fn content_fingerprint(data: &[f32], rows: usize, cols: usize) -> (u64, u64) {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h1: u64 = 0xcbf2_9ce4_8422_2325 ^ (rows as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    let mut h2: u64 = 0x6c62_272e_07bb_0142 ^ (cols as u64).wrapping_mul(0xc2b2_ae3d_27d4_eb4f);
+    for &x in data {
+        let b = x.to_bits() as u64;
+        h1 = (h1 ^ b).wrapping_mul(PRIME);
+        h2 = (h2 ^ b.rotate_left(17)).wrapping_mul(PRIME);
+    }
+    (h1, h2)
+}
+
+/// Approximate resident bytes of one encoded matrix (mantissa plane +
+/// exponent plane), used for the byte cap.
+fn plane_bytes(m: &BfpMatrix) -> usize {
+    let elem = match &m.mantissas {
+        MantissaPlane::I8(_) => 1,
+        MantissaPlane::I16(_) => 2,
+    };
+    m.mantissas.len() * elem + m.exponents.len() * std::mem::size_of::<i32>()
+}
+
+struct Entry {
+    value: Arc<BfpMatrix>,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct CacheState {
+    entries: HashMap<CacheKey, Entry>,
+    tick: u64,
+    bytes: usize,
+}
+
+/// Counter snapshot (also re-exported through [`crate::metrics`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub bytes: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} hits / {} misses ({:.1}% hit rate), {} entries, {:.1} KiB resident, {} evictions",
+            self.hits,
+            self.misses,
+            100.0 * self.hit_rate(),
+            self.entries,
+            self.bytes as f64 / 1024.0,
+            self.evictions
+        )
+    }
+}
+
+/// Bounded, thread-safe, content-addressed store of encoded operands.
+pub struct OperandCache {
+    state: Mutex<CacheState>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    max_entries: usize,
+    max_bytes: usize,
+}
+
+impl OperandCache {
+    pub fn new(max_entries: usize, max_bytes: usize) -> Self {
+        Self {
+            state: Mutex::new(CacheState {
+                entries: HashMap::new(),
+                tick: 0,
+                bytes: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            max_entries: max_entries.max(1),
+            max_bytes: max_bytes.max(1),
+        }
+    }
+
+    /// Look up an encoding, refreshing its LRU stamp. Counts a hit or a
+    /// miss.
+    pub fn lookup(&self, key: &CacheKey) -> Option<Arc<BfpMatrix>> {
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        match st.entries.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&e.value))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert an encoding, evicting least-recently-used entries until
+    /// both caps hold. Values larger than the whole byte budget are not
+    /// cached at all.
+    pub fn insert(&self, key: CacheKey, value: Arc<BfpMatrix>) {
+        let bytes = plane_bytes(&value);
+        if bytes > self.max_bytes {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        if let Some(old) = st.entries.insert(
+            key,
+            Entry {
+                value,
+                bytes,
+                last_used: tick,
+            },
+        ) {
+            st.bytes -= old.bytes;
+        }
+        st.bytes += bytes;
+        while st.entries.len() > self.max_entries || st.bytes > self.max_bytes {
+            let victim = st
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            let Some(victim) = victim else { break };
+            if victim == key && st.entries.len() == 1 {
+                break;
+            }
+            if let Some(e) = st.entries.remove(&victim) {
+                st.bytes -= e.bytes;
+            }
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The cache's main entry point: return the cached encoding for
+    /// `key`, or run `encode` (outside the lock), cache the result, and
+    /// return it. Errors from `encode` propagate and cache nothing.
+    pub fn get_or_encode(
+        &self,
+        key: CacheKey,
+        encode: impl FnOnce() -> Result<BfpMatrix>,
+    ) -> Result<Arc<BfpMatrix>> {
+        if let Some(v) = self.lookup(&key) {
+            return Ok(v);
+        }
+        let value = Arc::new(encode()?);
+        self.insert(key, Arc::clone(&value));
+        Ok(value)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let st = self.state.lock().unwrap();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: st.entries.len(),
+            bytes: st.bytes,
+        }
+    }
+
+    /// Drop every entry (counters are preserved).
+    pub fn clear(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.entries.clear();
+        st.bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::Quantizer;
+
+    fn fmt(m: u32, b: usize) -> BlockFormat {
+        BlockFormat::new(m, b).unwrap()
+    }
+
+    fn encode(data: &[f32], f: BlockFormat) -> BfpMatrix {
+        BfpMatrix::encode(data, 1, data.len(), f, Quantizer::nearest(f.mantissa_bits)).unwrap()
+    }
+
+    #[test]
+    fn fingerprint_separates_content_shape_and_format() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [1.0f32, 2.0, 3.0, 5.0];
+        assert_eq!(content_fingerprint(&a, 2, 2), content_fingerprint(&a, 2, 2));
+        assert_ne!(content_fingerprint(&a, 2, 2), content_fingerprint(&b, 2, 2));
+        assert_ne!(content_fingerprint(&a, 2, 2), content_fingerprint(&a, 1, 4));
+        let k1 = CacheKey::for_matrix(&a, 2, 2, fmt(4, 16), false);
+        let k2 = CacheKey::for_matrix(&a, 2, 2, fmt(6, 16), false);
+        let k3 = CacheKey::for_matrix(&a, 2, 2, fmt(4, 16), true);
+        assert_ne!(k1, k2);
+        assert_ne!(k1, k3);
+    }
+
+    #[test]
+    fn hit_miss_counting_and_reuse() {
+        let cache = OperandCache::new(8, 1 << 20);
+        let data: Vec<f32> = (0..64).map(|i| i as f32 * 0.25 - 4.0).collect();
+        let key = CacheKey::for_matrix(&data, 1, 64, fmt(4, 16), false);
+        let first = cache
+            .get_or_encode(key, || Ok(encode(&data, fmt(4, 16))))
+            .unwrap();
+        let second = cache
+            .get_or_encode(key, || panic!("must be served from cache"))
+            .unwrap();
+        assert!(Arc::ptr_eq(&first, &second));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!(s.bytes > 0);
+        assert!(s.hit_rate() > 0.49 && s.hit_rate() < 0.51);
+    }
+
+    #[test]
+    fn entry_cap_evicts_lru() {
+        let cache = OperandCache::new(2, 1 << 20);
+        let f = fmt(4, 16);
+        let mk = |seed: f32| -> (CacheKey, Vec<f32>) {
+            let d: Vec<f32> = (0..32).map(|i| i as f32 + seed).collect();
+            (CacheKey::for_matrix(&d, 1, 32, f, false), d)
+        };
+        let (k1, d1) = mk(0.5);
+        let (k2, d2) = mk(1.5);
+        let (k3, d3) = mk(2.5);
+        cache.get_or_encode(k1, || Ok(encode(&d1, f))).unwrap();
+        cache.get_or_encode(k2, || Ok(encode(&d2, f))).unwrap();
+        // Touch k1 so k2 is the LRU victim when k3 arrives.
+        assert!(cache.lookup(&k1).is_some());
+        cache.get_or_encode(k3, || Ok(encode(&d3, f))).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.evictions, 1);
+        assert!(cache.lookup(&k1).is_some());
+        assert!(cache.lookup(&k2).is_none(), "k2 was the LRU victim");
+    }
+
+    #[test]
+    fn byte_cap_and_oversized_values() {
+        let f = fmt(4, 16);
+        let d: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        let enc = encode(&d, f);
+        let bytes = plane_bytes(&enc);
+        // A cache smaller than one entry refuses to store it.
+        let tiny = OperandCache::new(8, bytes - 1);
+        let key = CacheKey::for_matrix(&d, 1, 256, f, false);
+        tiny.insert(key, Arc::new(enc.clone()));
+        assert_eq!(tiny.stats().entries, 0);
+        // A cache holding exactly one entry evicts on the second insert.
+        let one = OperandCache::new(8, bytes + bytes / 2);
+        one.insert(key, Arc::new(enc.clone()));
+        let d2: Vec<f32> = (0..256).map(|i| i as f32 + 0.5).collect();
+        let key2 = CacheKey::for_matrix(&d2, 1, 256, f, false);
+        one.insert(key2, Arc::new(encode(&d2, f)));
+        let s = one.stats();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.evictions, 1);
+        assert!(one.lookup(&key2).is_some());
+    }
+
+    #[test]
+    fn encode_errors_propagate_and_cache_nothing() {
+        let cache = OperandCache::new(4, 1 << 20);
+        let d = [1.0f32; 8];
+        let key = CacheKey::for_matrix(&d, 1, 8, fmt(4, 8), false);
+        let r = cache.get_or_encode(key, || anyhow::bail!("encode failed"));
+        assert!(r.is_err());
+        assert_eq!(cache.stats().entries, 0);
+        // The failed attempt counted as a miss, not a hit.
+        assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn clear_preserves_counters() {
+        let cache = OperandCache::new(4, 1 << 20);
+        let d = [2.0f32; 16];
+        let f = fmt(4, 16);
+        let key = CacheKey::for_matrix(&d, 1, 16, f, false);
+        cache.get_or_encode(key, || Ok(encode(&d, f))).unwrap();
+        cache.clear();
+        let s = cache.stats();
+        assert_eq!(s.entries, 0);
+        assert_eq!(s.bytes, 0);
+        assert_eq!(s.misses, 1);
+    }
+}

@@ -1,0 +1,221 @@
+//! The BFP **execution runtime**: persistent worker pool,
+//! encoded-operand cache, and batched/sharded GEMM scheduling — the
+//! host-side throughput layer the paper's density argument needs to pay
+//! off at system level.
+//!
+//! PR 1 made the fixed-point datapath bandwidth-bound per call; this
+//! subsystem makes it saturable across calls. Every host-side consumer
+//! (packed GEMM, fixed-point dots, quantization sweeps, the Trainer's
+//! host-BFP weight store, the serve-sim workload) runs on one shared
+//! runtime instead of spawning threads and re-encoding operands per
+//! call.
+//!
+//! # Pool lifecycle
+//!
+//! The process-wide [`ExecRuntime`] (reached via [`global`]) is created
+//! lazily on first use and lives for the remainder of the process. Its
+//! [`WorkerPool`] is sized **once** at creation from
+//! [`crate::util::gemm_thread_budget`] (`BOOSTERS_GEMM_THREADS`
+//! override, else `available_parallelism`, capped at 16); later changes
+//! to the environment variable do not resize a pool that already
+//! exists. A budget of 1 spawns no OS threads: all work runs inline on
+//! the caller, which is the strict-serial reference mode. Tests and
+//! embedders can build private runtimes with [`ExecRuntime::with_threads`];
+//! dropping one joins its workers.
+//!
+//! Work enters the pool through [`WorkerPool::scope_run`], a scoped
+//! fork-join over persistent threads: the caller blocks (and helps
+//! drain the queue) until every job it submitted has retired, so jobs
+//! may borrow the caller's operands and output bands directly.
+//!
+//! # Cache keying
+//!
+//! The [`OperandCache`] is content-addressed: `(128-bit fingerprint of
+//! the raw f32 bits + shape, mantissa_bits, block_size, transposed)`
+//! — see [`cache::CacheKey`]. Only deterministic nearest-even
+//! encodings are cacheable (stochastic rounding depends on seed/site
+//! state); the `encode_*_cached` entry points enforce this by
+//! construction. The cache is LRU-bounded by entry count and by
+//! approximate resident bytes (`BOOSTERS_CACHE_ENTRIES` /
+//! `BOOSTERS_CACHE_MB` override the defaults of 96 entries / 128 MiB),
+//! and its hit/miss/eviction counters are surfaced through
+//! [`crate::metrics::exec_cache_snapshot`].
+//!
+//! # Determinism guarantees
+//!
+//! The runtime schedules *where* work runs, never *what* is computed:
+//!
+//! * every output element is produced by exactly one band job, which
+//!   accumulates its blocks in ascending contraction order;
+//! * encoding is per-block independent, so parallel encode equals
+//!   serial encode bit-for-bit (including the stochastic stream, which
+//!   is indexed by absolute block position);
+//! * cached operands are byte-identical to freshly encoded ones
+//!   (deterministic nearest rounding, content-addressed identity).
+//!
+//! Consequently [`BatchGemm`] and `gemm_packed` results are
+//! **bit-identical** across thread counts, shard sizes, batch
+//! orderings, and cache hits/misses — and bit-identical to the scalar
+//! reference [`crate::bfp::hbfp_gemm_scalar`]. `tests/property_exec.rs`
+//! pins all of these.
+
+pub mod cache;
+pub mod pool;
+pub mod scheduler;
+
+pub use cache::{CacheKey, CacheStats, OperandCache};
+pub use pool::{Job, WorkerPool};
+pub use scheduler::{BatchGemm, GemmOp};
+
+use crate::bfp::{BfpMatrix, BlockFormat, Mat, Quantizer};
+use anyhow::Result;
+use std::sync::{Arc, OnceLock};
+
+/// Default operand-cache bounds (overridable via `BOOSTERS_CACHE_ENTRIES`
+/// / `BOOSTERS_CACHE_MB`).
+const DEFAULT_CACHE_ENTRIES: usize = 96;
+const DEFAULT_CACHE_BYTES: usize = 128 << 20;
+
+fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).filter(|&n| n >= 1)
+}
+
+/// One worker pool + one operand cache: the unit every execution-path
+/// consumer shares. See the module docs for lifecycle and guarantees.
+pub struct ExecRuntime {
+    pool: WorkerPool,
+    cache: OperandCache,
+}
+
+impl ExecRuntime {
+    pub fn new(threads: usize, cache_entries: usize, cache_bytes: usize) -> Self {
+        Self {
+            pool: WorkerPool::with_threads(threads),
+            cache: OperandCache::new(cache_entries, cache_bytes),
+        }
+    }
+
+    /// A runtime with explicit parallelism and default cache bounds.
+    pub fn with_threads(threads: usize) -> Self {
+        Self::new(threads, DEFAULT_CACHE_ENTRIES, DEFAULT_CACHE_BYTES)
+    }
+
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    pub fn cache(&self) -> &OperandCache {
+        &self.cache
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// A batch scheduler bound to this runtime.
+    pub fn batch(&self) -> BatchGemm<'_> {
+        BatchGemm::new(self)
+    }
+
+    /// Row-encode `data` (`rows x cols`, blocked along columns) through
+    /// the operand cache, encoding on **this runtime's** pool on a miss.
+    /// Nearest rounding only — see module docs.
+    pub fn encode_cached(
+        &self,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        fmt: BlockFormat,
+    ) -> Result<Arc<BfpMatrix>> {
+        let key = CacheKey::for_matrix(data, rows, cols, fmt, false);
+        self.cache.get_or_encode(key, || {
+            let mut m = BfpMatrix::empty();
+            m.encode_into_on(
+                &self.pool,
+                data,
+                rows,
+                cols,
+                fmt,
+                Quantizer::nearest(fmt.mantissa_bits),
+                0,
+            )?;
+            Ok(m)
+        })
+    }
+
+    /// Column-encode the weight matrix `w` (`k x n`, blocked along K)
+    /// through the operand cache, encoding on **this runtime's** pool on
+    /// a miss. Nearest rounding only.
+    pub fn encode_transposed_cached(&self, w: &Mat, fmt: BlockFormat) -> Result<Arc<BfpMatrix>> {
+        let key = CacheKey::for_matrix(&w.data, w.rows, w.cols, fmt, true);
+        self.cache.get_or_encode(key, || {
+            let mut m = BfpMatrix::empty();
+            m.encode_transposed_on(&self.pool, w, fmt, Quantizer::nearest(fmt.mantissa_bits))?;
+            Ok(m)
+        })
+    }
+}
+
+static GLOBAL: OnceLock<ExecRuntime> = OnceLock::new();
+
+/// The process-wide runtime. Created on first use; the pool is sized by
+/// [`crate::util::gemm_thread_budget`] (capped at 16 workers).
+pub fn global() -> &'static ExecRuntime {
+    GLOBAL.get_or_init(|| {
+        ExecRuntime::new(
+            crate::util::gemm_thread_budget().min(16),
+            env_usize("BOOSTERS_CACHE_ENTRIES").unwrap_or(DEFAULT_CACHE_ENTRIES),
+            env_usize("BOOSTERS_CACHE_MB")
+                .map(|mb| mb << 20)
+                .unwrap_or(DEFAULT_CACHE_BYTES),
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn global_runtime_is_singleton_and_sized() {
+        let a = global() as *const ExecRuntime;
+        let b = global() as *const ExecRuntime;
+        assert_eq!(a, b);
+        assert!(global().pool().threads() >= 1);
+    }
+
+    #[test]
+    fn cached_encode_is_bit_identical_to_direct_encode() {
+        let rt = ExecRuntime::with_threads(2);
+        let mut rng = Rng::new(31);
+        let data: Vec<f32> = (0..500).map(|_| rng.normal_scaled(1.0)).collect();
+        let fmt = BlockFormat::new(4, 64).unwrap();
+        let cached = rt.encode_cached(&data, 1, data.len(), fmt).unwrap();
+        let direct = BfpMatrix::encode(&data, 1, data.len(), fmt, Quantizer::nearest(4)).unwrap();
+        assert_eq!(cached.exponents, direct.exponents);
+        assert_eq!(
+            cached.mantissas.try_i8().unwrap(),
+            direct.mantissas.try_i8().unwrap()
+        );
+        // Second call is a hit returning the same planes.
+        let again = rt.encode_cached(&data, 1, data.len(), fmt).unwrap();
+        assert!(Arc::ptr_eq(&cached, &again));
+        let s = rt.cache_stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn transposed_and_row_encodings_do_not_alias() {
+        let rt = ExecRuntime::with_threads(1);
+        let mut rng = Rng::new(32);
+        let w = Mat::new(16, 4, (0..64).map(|_| rng.normal_scaled(1.0)).collect()).unwrap();
+        let fmt = BlockFormat::new(6, 16).unwrap();
+        let t = rt.encode_transposed_cached(&w, fmt).unwrap();
+        let r = rt.encode_cached(&w.data, 16, 4, fmt).unwrap();
+        // Same bytes, different layout flag: two distinct entries.
+        assert_eq!(rt.cache_stats().entries, 2);
+        assert_eq!((t.rows, t.cols), (4, 16));
+        assert_eq!((r.rows, r.cols), (16, 4));
+    }
+}

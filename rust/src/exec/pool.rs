@@ -1,0 +1,281 @@
+//! Persistent worker pool — the thread substrate of the execution
+//! runtime.
+//!
+//! PR 1's GEMM spawned a fresh `std::thread::scope` per call, paying
+//! thread creation and teardown on every multiply. The pool here is
+//! spawned **once** (per [`WorkerPool`]; the process-wide instance lives
+//! in [`crate::exec::global`]) and serves band-level work items from a
+//! shared FIFO queue for the rest of the process lifetime.
+//!
+//! # Scoped execution over a persistent pool
+//!
+//! [`WorkerPool::scope_run`] accepts jobs that **borrow** from the
+//! caller's stack (operand planes, output bands) even though the worker
+//! threads are long-lived. The lifetime is erased with one audited
+//! `transmute` and re-established by construction: `scope_run` does not
+//! return until every submitted job has retired, so no borrow can
+//! outlive the frame that owns it — the same contract
+//! `std::thread::scope` enforces, amortized over persistent threads.
+//!
+//! While waiting, the submitting thread **helps drain the queue**
+//! instead of sleeping. This keeps the pool deadlock-free under nested
+//! or concurrent `scope_run` calls (some thread always makes progress)
+//! and puts the caller's core to work instead of parking it.
+//!
+//! # Determinism
+//!
+//! The pool schedules *which thread* runs a job, never *what* the job
+//! computes: callers partition work into disjoint output regions and
+//! each region is produced by exactly one job. Results are therefore
+//! bit-identical regardless of worker count, queue order, or whether
+//! the caller ran inline — the property the GEMM stack's tests pin.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A unit of work. Jobs may borrow from the submitting frame ('env);
+/// [`WorkerPool::scope_run`] guarantees they retire before it returns.
+pub type Job<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job<'static>>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Per-`scope_run` completion state: outstanding job count + a flag
+/// recording whether any job panicked (re-raised at the caller).
+struct ScopeState {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+/// A fixed-size persistent worker pool (see module docs).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads` workers. `threads <= 1` spawns no OS
+    /// threads at all: every `scope_run` executes inline on the caller,
+    /// which is the strict-serial mode `BOOSTERS_GEMM_THREADS=1` asks
+    /// for.
+    pub fn with_threads(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let mut handles = Vec::new();
+        if threads > 1 {
+            for i in 0..threads {
+                let sh = Arc::clone(&shared);
+                let h = std::thread::Builder::new()
+                    .name(format!("bfp-exec-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn exec worker");
+                handles.push(h);
+            }
+        }
+        Self {
+            shared,
+            handles,
+            threads,
+        }
+    }
+
+    /// Configured parallelism (1 means strictly inline/serial).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `jobs` to completion, blocking the caller until every job has
+    /// retired. Jobs may borrow from the caller's frame; disjointness of
+    /// any mutable borrows is the caller's responsibility (hand each job
+    /// its own `chunks_mut` region). If any job panics, the panic is
+    /// re-raised here after the whole scope has drained, and the pool
+    /// remains usable.
+    pub fn scope_run<'env>(&self, jobs: Vec<Job<'env>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        if self.handles.is_empty() || jobs.len() == 1 {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let state = Arc::new(ScopeState {
+            remaining: Mutex::new(jobs.len()),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for job in jobs {
+                // SAFETY: `scope_run` blocks below until `remaining`
+                // reaches zero, so every borrow captured by `job` is
+                // live for the whole execution window; the 'static view
+                // never escapes it (jobs are consumed exactly once).
+                let job: Job<'static> =
+                    unsafe { std::mem::transmute::<Job<'env>, Job<'static>>(job) };
+                let st = Arc::clone(&state);
+                q.push_back(Box::new(move || {
+                    if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                        st.panicked.store(true, Ordering::Release);
+                    }
+                    let mut left = st.remaining.lock().unwrap();
+                    *left -= 1;
+                    if *left == 0 {
+                        st.done.notify_all();
+                    }
+                }));
+            }
+            self.shared.work_cv.notify_all();
+        }
+        // Help drain the queue while this scope is outstanding (the jobs
+        // popped here may belong to other concurrent scopes — running
+        // them is what keeps nested waits deadlock-free). Stop helping
+        // the moment our own jobs have all retired, so a small scope is
+        // never held hostage by a large concurrent one.
+        loop {
+            if *state.remaining.lock().unwrap() == 0 {
+                break;
+            }
+            let job = self.shared.queue.lock().unwrap().pop_front();
+            match job {
+                Some(job) => job(),
+                None => break,
+            }
+        }
+        let mut left = state.remaining.lock().unwrap();
+        while *left > 0 {
+            left = state.done.wait(left).unwrap();
+        }
+        drop(left);
+        if state.panicked.load(Ordering::Acquire) {
+            panic!("exec worker pool: a parallel job panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break Some(job);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(job) => job(),
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn scope_run_fills_disjoint_regions() {
+        let pool = WorkerPool::with_threads(4);
+        let mut out = vec![0usize; 64];
+        let jobs: Vec<Job> = out
+            .chunks_mut(5)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = i * 100 + j + 1;
+                    }
+                }) as Job
+            })
+            .collect();
+        pool.scope_run(jobs);
+        for (idx, &v) in out.iter().enumerate() {
+            assert_eq!(v, (idx / 5) * 100 + idx % 5 + 1, "element {idx}");
+        }
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = WorkerPool::with_threads(1);
+        assert_eq!(pool.threads(), 1);
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<Job> = (0..7)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Job
+            })
+            .collect();
+        pool.scope_run(jobs);
+        assert_eq!(counter.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn panicking_job_propagates_and_pool_survives() {
+        let pool = WorkerPool::with_threads(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_run(vec![
+                Box::new(|| panic!("boom")) as Job,
+                Box::new(|| {}) as Job,
+            ]);
+        }));
+        assert!(caught.is_err(), "scope_run must re-raise job panics");
+        // The pool keeps serving scopes after a panic.
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<Job> = (0..8)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Job
+            })
+            .collect();
+        pool.scope_run(jobs);
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn many_scopes_reuse_the_same_workers() {
+        let pool = WorkerPool::with_threads(3);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..20 {
+            let jobs: Vec<Job> = (0..6)
+                .map(|_| {
+                    Box::new(|| {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    }) as Job
+                })
+                .collect();
+            pool.scope_run(jobs);
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 120);
+    }
+}

@@ -1,0 +1,298 @@
+//! `BatchGemm` — the batched/sharded GEMM scheduler of the execution
+//! runtime.
+//!
+//! A serving workload is a stream of heterogeneous `(A, B, format)`
+//! multiplies. Running them one `gemm_packed` call at a time leaves the
+//! pool idle at every op boundary and re-encodes weight operands that
+//! repeat across requests. `BatchGemm` instead:
+//!
+//! 1. **encodes** all activation operands in parallel on the pool and
+//!    pulls weight operands through the runtime's encoded-operand cache
+//!    ([`super::cache`]) so repeated weights are packed once;
+//! 2. **shards** every op into band-level work items (contiguous
+//!    activation-row ranges, sized by each op's share of the batch MAC
+//!    volume) and runs the whole batch's bands on the pool as one
+//!    scope — small ops no longer serialize behind large ones;
+//! 3. returns results **in submission order**.
+//!
+//! # Determinism
+//!
+//! Band partitioning never changes numerics: each output element is
+//! accumulated by exactly one band job in ascending block order, so any
+//! shard size, any pool width, and any batch ordering produce results
+//! bit-identical to per-op [`crate::bfp::hbfp_gemm_scalar`] — the
+//! invariant `tests/property_exec.rs` pins.
+
+use super::pool::Job;
+use super::ExecRuntime;
+use crate::bfp::gemm::{active_kernel, band_shifts, BandTask, PARALLEL_MIN_MACS};
+use crate::bfp::{BfpMatrix, BlockFormat, Mat, Quantizer};
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+/// One GEMM in a batch: `x (m x K)` times `w (K x n)` with both
+/// operands quantized to `fmt` (nearest rounding — the deterministic
+/// forward-pass transform, required for operand caching).
+pub struct GemmOp<'a> {
+    pub x: &'a Mat,
+    pub w: &'a Mat,
+    pub fmt: BlockFormat,
+}
+
+/// Batched GEMM executor over an [`ExecRuntime`] (see module docs).
+pub struct BatchGemm<'rt> {
+    rt: &'rt ExecRuntime,
+    band_rows: Option<usize>,
+    cache_weights: bool,
+}
+
+impl<'rt> BatchGemm<'rt> {
+    pub fn new(rt: &'rt ExecRuntime) -> Self {
+        Self {
+            rt,
+            band_rows: None,
+            cache_weights: true,
+        }
+    }
+
+    /// Force a fixed shard height (activation rows per band) instead of
+    /// the MAC-proportional default. Any value yields bit-identical
+    /// results; this exists for tests and tuning.
+    pub fn band_rows(mut self, rows: usize) -> Self {
+        self.band_rows = Some(rows.max(1));
+        self
+    }
+
+    /// Disable the weight-operand cache for this batch (weights are
+    /// then encoded fresh, still in parallel).
+    pub fn cache_weights(mut self, on: bool) -> Self {
+        self.cache_weights = on;
+        self
+    }
+
+    /// Execute the batch; `out[i]` corresponds to `ops[i]`.
+    pub fn run(&self, ops: &[GemmOp<'_>]) -> Result<Vec<Mat>> {
+        for (i, op) in ops.iter().enumerate() {
+            if op.x.cols != op.w.rows {
+                bail!(
+                    "op {i}: inner dims {} vs {} do not contract",
+                    op.x.cols,
+                    op.w.rows
+                );
+            }
+        }
+
+        // ---- encode stage: activations in parallel, weights cached ----
+        let mut xs: Vec<BfpMatrix> = (0..ops.len()).map(|_| BfpMatrix::empty()).collect();
+        let mut xerrs: Vec<Option<anyhow::Error>> = (0..ops.len()).map(|_| None).collect();
+        {
+            let jobs: Vec<Job> = xs
+                .iter_mut()
+                .zip(xerrs.iter_mut())
+                .zip(ops)
+                .map(|((slot, err), op)| {
+                    let q = Quantizer::nearest(op.fmt.mantissa_bits);
+                    Box::new(move || {
+                        if let Err(e) =
+                            slot.encode_into_serial(&op.x.data, op.x.rows, op.x.cols, op.fmt, q, 0)
+                        {
+                            *err = Some(e);
+                        }
+                    }) as Job
+                })
+                .collect();
+            self.rt.pool().scope_run(jobs);
+        }
+        for (i, e) in xerrs.iter_mut().enumerate() {
+            if let Some(e) = e.take() {
+                return Err(e.context(format!("encoding activations of op {i}")));
+            }
+        }
+        let mut ws: Vec<Arc<BfpMatrix>> = Vec::with_capacity(ops.len());
+        for (i, op) in ops.iter().enumerate() {
+            let enc = if self.cache_weights {
+                self.rt.encode_transposed_cached(op.w, op.fmt)
+            } else {
+                let mut fresh = BfpMatrix::empty();
+                fresh
+                    .encode_transposed_on(
+                        self.rt.pool(),
+                        op.w,
+                        op.fmt,
+                        Quantizer::nearest(op.fmt.mantissa_bits),
+                    )
+                    .map(|_| Arc::new(fresh))
+            };
+            ws.push(enc.with_context(|| format!("encoding weights of op {i}"))?);
+        }
+
+        // ---- shard + execute stage ----
+        let shifts: Vec<(Vec<i32>, Vec<i32>)> = xs
+            .iter()
+            .zip(&ws)
+            .map(|(x, w)| (band_shifts(x), band_shifts(w)))
+            .collect();
+        let mut outs: Vec<Mat> = ops.iter().map(|op| Mat::zeros(op.x.rows, op.w.cols)).collect();
+        let threads = self.rt.pool().threads();
+        let total_macs: usize = ops
+            .iter()
+            .map(|op| op.x.rows.saturating_mul(op.w.cols).saturating_mul(op.x.cols))
+            .fold(0usize, usize::saturating_add);
+        let kernel = active_kernel();
+        let mut jobs: Vec<Job> = Vec::new();
+        for (((out, xp), wp), (xsh, wsh)) in
+            outs.iter_mut().zip(&xs).zip(&ws).zip(&shifts)
+        {
+            let (m, n) = (xp.rows, wp.rows);
+            if m == 0 || n == 0 {
+                continue;
+            }
+            let macs = m.saturating_mul(n).saturating_mul(xp.cols);
+            let band = self.band_for(m, macs, total_macs, threads);
+            let wref: &BfpMatrix = wp;
+            for (t, chunk) in out.data.chunks_mut(band * n).enumerate() {
+                let r0 = t * band;
+                let (xsh, wsh) = (xsh.as_slice(), wsh.as_slice());
+                jobs.push(Box::new(move || {
+                    kernel.run_band(BandTask {
+                        x: xp,
+                        w: wref,
+                        xsh,
+                        wsh,
+                        r0,
+                        rows: chunk.len() / n,
+                        out: chunk,
+                    });
+                }) as Job);
+            }
+        }
+        self.rt.pool().scope_run(jobs);
+        Ok(outs)
+    }
+
+    /// Shard height for one op: the explicit override, or a height that
+    /// gives the op a number of bands proportional to its share of the
+    /// batch MAC volume (targeting ~3 bands per pool thread overall).
+    /// Small batches stay whole-op serial.
+    fn band_for(&self, m: usize, macs: usize, total_macs: usize, threads: usize) -> usize {
+        if let Some(rows) = self.band_rows {
+            return rows;
+        }
+        if threads <= 1 || total_macs < PARALLEL_MIN_MACS {
+            return m.max(1);
+        }
+        let share = (macs as f64 / total_macs as f64 * (3 * threads) as f64).round() as usize;
+        let bands = share.clamp(1, m.max(1));
+        m.div_ceil(bands).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::hbfp_gemm_scalar;
+    use crate::util::Rng;
+
+    fn randmat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+        Mat::new(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| rng.normal_scaled(1.0)).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let rt = ExecRuntime::with_threads(2);
+        assert!(BatchGemm::new(&rt).run(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn shape_errors_name_the_offending_op() {
+        let rt = ExecRuntime::with_threads(1);
+        let mut rng = Rng::new(7);
+        let a = randmat(&mut rng, 2, 8);
+        let w_ok = randmat(&mut rng, 8, 3);
+        let w_bad = randmat(&mut rng, 9, 3);
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        let err = BatchGemm::new(&rt)
+            .run(&[
+                GemmOp { x: &a, w: &w_ok, fmt },
+                GemmOp { x: &a, w: &w_bad, fmt },
+            ])
+            .unwrap_err();
+        assert!(err.to_string().contains("op 1"), "{err}");
+    }
+
+    #[test]
+    fn heterogeneous_batch_matches_scalar_in_submission_order() {
+        let rt = ExecRuntime::with_threads(3);
+        let mut rng = Rng::new(0xBA7);
+        // Mixed shapes, formats, and plane dtypes (m=12 -> i16).
+        let cases = [(4u32, 16usize, 5usize, 40, 7), (6, 64, 9, 130, 4), (12, 16, 3, 33, 6)];
+        let mats: Vec<(Mat, Mat, BlockFormat)> = cases
+            .iter()
+            .map(|&(m, b, r, k, c)| {
+                let fmt = BlockFormat::new(m, b).unwrap();
+                (randmat(&mut rng, r, k), randmat(&mut rng, k, c), fmt)
+            })
+            .collect();
+        let ops: Vec<GemmOp> = mats
+            .iter()
+            .map(|(x, w, fmt)| GemmOp { x, w, fmt: *fmt })
+            .collect();
+        let outs = BatchGemm::new(&rt).run(&ops).unwrap();
+        assert_eq!(outs.len(), ops.len());
+        for (i, ((x, w, fmt), got)) in mats.iter().zip(&outs).enumerate() {
+            let want = hbfp_gemm_scalar(x, w, *fmt).unwrap();
+            assert_eq!((got.rows, got.cols), (want.rows, want.cols), "op {i}");
+            for (g, s) in got.data.iter().zip(&want.data) {
+                assert_eq!(g.to_bits(), s.to_bits(), "op {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn band_override_and_cache_toggle_keep_bits() {
+        let rt = ExecRuntime::with_threads(4);
+        let mut rng = Rng::new(0x5EED);
+        let fmt = BlockFormat::new(4, 64).unwrap();
+        let x = randmat(&mut rng, 23, 100);
+        let w = randmat(&mut rng, 100, 11);
+        let base = BatchGemm::new(&rt)
+            .run(&[GemmOp { x: &x, w: &w, fmt }])
+            .unwrap();
+        for band in [1usize, 4, 1000] {
+            for cached in [true, false] {
+                let got = BatchGemm::new(&rt)
+                    .band_rows(band)
+                    .cache_weights(cached)
+                    .run(&[GemmOp { x: &x, w: &w, fmt }])
+                    .unwrap();
+                for (g, b) in got[0].data.iter().zip(&base[0].data) {
+                    assert_eq!(g.to_bits(), b.to_bits(), "band {band} cached {cached}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_weights_hit_the_cache() {
+        let rt = ExecRuntime::with_threads(2);
+        let mut rng = Rng::new(0xCAC4E);
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        let w = randmat(&mut rng, 32, 8);
+        let x1 = randmat(&mut rng, 4, 32);
+        let x2 = randmat(&mut rng, 6, 32);
+        let ops = [
+            GemmOp { x: &x1, w: &w, fmt },
+            GemmOp { x: &x2, w: &w, fmt },
+        ];
+        BatchGemm::new(&rt).run(&ops).unwrap();
+        BatchGemm::new(&rt).run(&ops).unwrap();
+        let s = rt.cache_stats();
+        assert!(s.hits >= 3, "same weights must be encoded once: {s:?}");
+        assert_eq!(s.misses, 1, "{s:?}");
+    }
+}

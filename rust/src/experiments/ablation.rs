@@ -186,9 +186,17 @@ pub fn run(engine: &Engine, artifacts: &Path, model: &str, preset: Preset) -> Re
         },
         preset,
     );
+    let cache_before = crate::metrics::exec_cache_snapshot();
     let result = Trainer::new(engine, &v, &data, c)
         .with_host_bfp_store(64)
         .run()?;
+    let cache_after = crate::metrics::exec_cache_snapshot();
+    println!(
+        "[ablation] host-BFP store operand cache: +{} hits / +{} misses this arm ({})",
+        cache_after.hits - cache_before.hits,
+        cache_after.misses - cache_before.misses,
+        cache_after.summary()
+    );
     table.row(vec![
         "booster+host-bfp-store(b64)".into(),
         fmt_pct(result.history.final_val_acc()),

@@ -8,6 +8,7 @@
 pub mod ablation;
 pub mod common;
 pub mod figs;
+pub mod serve_sim;
 pub mod table1;
 pub mod table2;
 pub mod table3;

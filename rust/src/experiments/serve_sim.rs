@@ -1,0 +1,249 @@
+//! `repro serve-sim` — synthetic serving workload over the execution
+//! runtime.
+//!
+//! Replays a deterministic stream of mixed-size GEMM requests (random
+//! activation heights against a fixed working set of weight matrices in
+//! several HBFP formats) through [`BatchGemm`], batch by batch, and
+//! reports throughput, batch-attributed latency percentiles, and the
+//! operand-cache counters. This is the north-star serving shape in
+//! miniature: heterogeneous ops sharded across the persistent pool,
+//! weights encoded once and reused across the whole stream.
+//!
+//! With `verify` on (the `quick` preset default, used by the CI smoke
+//! step), a sample of responses is checked **bit-for-bit** against the
+//! scalar reference [`hbfp_gemm_scalar`], so the smoke run doubles as
+//! an end-to-end integration check of pool + cache + scheduler.
+
+use crate::bfp::{hbfp_gemm_scalar, BlockFormat, Mat};
+use crate::exec::{BatchGemm, CacheStats, ExecRuntime, GemmOp};
+use crate::report::Table;
+use crate::util::{Rng, Stopwatch};
+use anyhow::{ensure, Result};
+
+/// Workload shape knobs (CLI flags override the preset values).
+#[derive(Debug, Clone)]
+pub struct ServeSimConfig {
+    /// Total requests in the stream.
+    pub requests: usize,
+    /// Requests per `BatchGemm` submission.
+    pub batch: usize,
+    /// Distinct weight matrices in the working set.
+    pub weights: usize,
+    /// Cross-check a sample of responses against the scalar reference.
+    pub verify: bool,
+    pub seed: u64,
+}
+
+impl ServeSimConfig {
+    pub fn quick() -> Self {
+        Self {
+            requests: 96,
+            batch: 16,
+            weights: 6,
+            verify: true,
+            seed: 42,
+        }
+    }
+
+    pub fn full() -> Self {
+        Self {
+            requests: 512,
+            batch: 32,
+            weights: 12,
+            verify: false,
+            seed: 42,
+        }
+    }
+}
+
+/// Result summary (the table is the printable form).
+pub struct ServeSimReport {
+    pub table: Table,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub requests_per_s: f64,
+    pub cache: CacheStats,
+}
+
+fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_scaled(1.0)).collect()
+}
+
+fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let pos = ((sorted_ms.len() - 1) as f64 * q).round() as usize;
+    sorted_ms[pos]
+}
+
+/// Run the simulation on `rt` (normally [`crate::exec::global`]).
+pub fn run(rt: &ExecRuntime, cfg: &ServeSimConfig) -> Result<ServeSimReport> {
+    ensure!(cfg.requests > 0, "need at least one request");
+    ensure!(cfg.weights > 0, "need at least one weight matrix");
+    // (K, n) shapes and formats of the weight working set — mixed block
+    // sizes and mantissa widths, all on the paper's parameter grid.
+    let shapes = [(64usize, 48usize), (128, 96), (192, 64), (256, 128), (96, 192), (320, 64)];
+    let fmts = [
+        BlockFormat::new(4, 64)?,
+        BlockFormat::new(6, 64)?,
+        BlockFormat::new(4, 16)?,
+    ];
+    let mut rng = Rng::new(cfg.seed);
+    let mut weights: Vec<(Mat, BlockFormat)> = Vec::with_capacity(cfg.weights);
+    for i in 0..cfg.weights {
+        let (k, n) = shapes[i % shapes.len()];
+        let data = randn(&mut rng, k * n);
+        weights.push((Mat::new(k, n, data)?, fmts[i % fmts.len()]));
+    }
+    // Request stream: random weight pick, random activation height.
+    struct Request {
+        wi: usize,
+        x: Mat,
+    }
+    let mut requests: Vec<Request> = Vec::with_capacity(cfg.requests);
+    for _ in 0..cfg.requests {
+        let wi = rng.below(weights.len());
+        let k = weights[wi].0.rows;
+        let m = 1 + rng.below(48);
+        let data = randn(&mut rng, m * k);
+        requests.push(Request {
+            wi,
+            x: Mat::new(m, k, data)?,
+        });
+    }
+
+    let cache_before = rt.cache_stats();
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(cfg.requests);
+    let mut results: Vec<Mat> = Vec::with_capacity(cfg.requests);
+    let sw_all = Stopwatch::start();
+    for chunk in requests.chunks(cfg.batch.max(1)) {
+        let ops: Vec<GemmOp> = chunk
+            .iter()
+            .map(|r| GemmOp {
+                x: &r.x,
+                w: &weights[r.wi].0,
+                fmt: weights[r.wi].1,
+            })
+            .collect();
+        let sw = Stopwatch::start();
+        let outs = BatchGemm::new(rt).run(&ops)?;
+        let ms = sw.ms();
+        for _ in chunk {
+            lat_ms.push(ms);
+        }
+        results.extend(outs);
+    }
+    let total_s = sw_all.secs();
+
+    if cfg.verify {
+        for &idx in &[0, cfg.requests / 2, cfg.requests - 1] {
+            let r = &requests[idx];
+            let want = hbfp_gemm_scalar(&r.x, &weights[r.wi].0, weights[r.wi].1)?;
+            ensure!(
+                results[idx].data.len() == want.data.len(),
+                "request {idx}: shape drift vs scalar reference"
+            );
+            for (g, w) in results[idx].data.iter().zip(&want.data) {
+                ensure!(
+                    g.to_bits() == w.to_bits(),
+                    "request {idx}: response diverged from hbfp_gemm_scalar"
+                );
+            }
+        }
+    }
+
+    let total_macs: f64 = requests
+        .iter()
+        .map(|r| {
+            let w = &weights[r.wi].0;
+            (r.x.rows * w.cols * w.rows) as f64
+        })
+        .sum();
+    let mut sorted = lat_ms.clone();
+    sorted.sort_by(f64::total_cmp);
+    let (p50, p95, p99) = (
+        percentile(&sorted, 0.50),
+        percentile(&sorted, 0.95),
+        percentile(&sorted, 0.99),
+    );
+    let cache_after = rt.cache_stats();
+    let rps = cfg.requests as f64 / total_s.max(1e-9);
+
+    let mut table = Table::new(
+        "serve-sim — batched/sharded BFP GEMM serving emulation",
+        &["metric", "value"],
+    );
+    let mut kv = |k: &str, v: String| {
+        table.row(vec![k.to_string(), v]);
+    };
+    kv("requests", cfg.requests.to_string());
+    kv("batch size", cfg.batch.to_string());
+    kv("weight working set", cfg.weights.to_string());
+    kv("pool threads", rt.pool().threads().to_string());
+    kv("total MACs", format!("{total_macs:.3e}"));
+    kv("wall time (s)", format!("{total_s:.3}"));
+    kv("throughput (req/s)", format!("{rps:.1}"));
+    kv(
+        "throughput (MMAC/s)",
+        format!("{:.1}", total_macs / total_s.max(1e-9) / 1e6),
+    );
+    kv("latency p50 (ms)", format!("{p50:.3}"));
+    kv("latency p95 (ms)", format!("{p95:.3}"));
+    kv("latency p99 (ms)", format!("{p99:.3}"));
+    kv(
+        "cache hits (this run)",
+        (cache_after.hits - cache_before.hits).to_string(),
+    );
+    kv(
+        "cache misses (this run)",
+        (cache_after.misses - cache_before.misses).to_string(),
+    );
+    kv("cache", cache_after.summary());
+    kv(
+        "verified vs scalar",
+        if cfg.verify { "yes (bit-exact sample)" } else { "no" }.to_string(),
+    );
+
+    Ok(ServeSimReport {
+        table,
+        p50_ms: p50,
+        p95_ms: p95,
+        p99_ms: p99,
+        requests_per_s: rps,
+        cache: cache_after,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_preset_runs_verified_and_hits_the_cache() {
+        let rt = ExecRuntime::with_threads(2);
+        let mut cfg = ServeSimConfig::quick();
+        cfg.requests = 24;
+        cfg.batch = 8;
+        cfg.weights = 3;
+        let report = run(&rt, &cfg).unwrap();
+        // 24 requests over <= 3 distinct weights: one cache access per
+        // request, misses only on first encounters — everything else
+        // must be served from the operand cache.
+        assert!(report.cache.misses <= 3, "{:?}", report.cache);
+        assert!(report.cache.hits >= 21, "{:?}", report.cache);
+        assert_eq!(report.cache.hits + report.cache.misses, 24, "{:?}", report.cache);
+        assert!(report.requests_per_s > 0.0);
+        assert!(report.p50_ms <= report.p95_ms && report.p95_ms <= report.p99_ms);
+        assert_eq!(report.table.headers.len(), 2);
+    }
+
+    #[test]
+    fn degenerate_configs_rejected() {
+        let rt = ExecRuntime::with_threads(1);
+        let mut cfg = ServeSimConfig::quick();
+        cfg.requests = 0;
+        assert!(run(&rt, &cfg).is_err());
+    }
+}

@@ -83,6 +83,12 @@ pub fn run(engine: &Engine, artifacts: &Path, model: &str, preset: Preset) -> Re
     }
 
     table.write_csv(&results_dir().join(format!("table1_{model}.csv")))?;
+    // The sweep's quantization traffic runs on the exec runtime; print
+    // the operand-cache counters next to the accuracy numbers.
+    println!(
+        "[table1] exec operand cache: {}",
+        crate::metrics::exec_cache_snapshot().summary()
+    );
     Ok(table)
 }
 

@@ -26,11 +26,19 @@
 //!   with `scale_shift(e, m) = e - m + 2` ([`bfp::scale_shift`]).
 //!   Operands are encoded once and multiplied by a cache-tiled,
 //!   register-blocked fixed-point GEMM ([`bfp::gemm`]) that parallelizes
-//!   over whole output-row bands via `std::thread::scope` — a
-//!   partitioning rule that keeps parallel results bit-identical to the
-//!   serial and scalar reference paths (property-tested), so every
-//!   analysis, sweep, and host-emulation consumer sees one set of
-//!   numerics at bandwidth-bound speed.
+//!   over whole output-row bands — a partitioning rule that keeps
+//!   parallel results bit-identical to the serial and scalar reference
+//!   paths (property-tested), so every analysis, sweep, and
+//!   host-emulation consumer sees one set of numerics at
+//!   bandwidth-bound speed.
+//! * [`exec`] — the **execution runtime** those kernels run on: a
+//!   persistent worker pool (spawned once, sized by
+//!   `BOOSTERS_GEMM_THREADS` / `available_parallelism`), a
+//!   content-addressed encoded-operand cache with hit/miss counters,
+//!   and the [`exec::BatchGemm`] scheduler that shards many
+//!   heterogeneous GEMMs into band-level work items while preserving
+//!   bit-identity with the scalar reference. `repro serve-sim` replays
+//!   a synthetic mixed-size request stream through it.
 //! * [`hw_model`] — the paper's gate-level analytic silicon-area model
 //!   (Appendix F): FP32 / BFloat16 / HBFP dot-product units, converters,
 //!   stochastic-rounding XORshift circuits; regenerates Fig 6 and the
@@ -49,6 +57,7 @@ pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod experiments;
 pub mod hw_model;
 pub mod metrics;

@@ -41,6 +41,10 @@ SUBCOMMANDS
   density                                §4.2 headline density numbers
   ablation [--model] [--preset]          schedule-design ablations
                                          (autoboost / cyclic / inverse)
+  serve-sim [--preset] [--requests N]    replay a synthetic mixed-size
+            [--batch B] [--weights W]    GEMM request stream through the
+            [--verify]                   BatchGemm execution runtime and
+                                         report throughput/latency/cache
 
 POLICIES: fp32 | hbfpN | hbfpN+layersM | booster[K] | cyclicMIN-MAX
 Artifacts dir: --artifacts PATH (default ./artifacts or $REPRO_ARTIFACTS)";
@@ -153,6 +157,27 @@ fn main() -> Result<()> {
             let engine = Engine::new()?;
             experiments::ablation::run(&engine, &artifacts, &args.get_or("model", "cnn"), preset()?)?
                 .print();
+        }
+        Some("serve-sim") => {
+            // Pure host-side: no engine or artifacts needed.
+            let mut cfg = match preset()? {
+                Preset::Quick => experiments::serve_sim::ServeSimConfig::quick(),
+                Preset::Full => experiments::serve_sim::ServeSimConfig::full(),
+            };
+            if let Some(n) = args.get_parse::<usize>("requests")? {
+                cfg.requests = n;
+            }
+            if let Some(b) = args.get_parse::<usize>("batch")? {
+                cfg.batch = b;
+            }
+            if let Some(w) = args.get_parse::<usize>("weights")? {
+                cfg.weights = w;
+            }
+            if args.has_flag("verify") {
+                cfg.verify = true;
+            }
+            let report = experiments::serve_sim::run(boosters::exec::global(), &cfg)?;
+            report.table.print();
         }
         Some("fig6") => experiments::figs::fig6()?.print(),
         Some("density") => experiments::figs::density()?.print(),

@@ -1,5 +1,6 @@
 //! Metrics: BLEU-4 (Table 3), Wasserstein-1 distance (Fig 1), accuracy /
-//! loss tracking (Fig 3/4), and the R² association check from §3.
+//! loss tracking (Fig 3/4), the R² association check from §3, and the
+//! execution-runtime counters (operand-cache hits/misses).
 
 pub mod bleu;
 pub mod stats;
@@ -10,3 +11,15 @@ pub use bleu::{corpus_bleu, sentence_ngrams, BleuScore};
 pub use stats::{pearson_r, r_squared};
 pub use tracker::{EpochStats, RunHistory};
 pub use wasserstein::{wasserstein1, wasserstein1_quantized, QuantSweep};
+
+// The operand-cache counter snapshot is a metrics surface: experiment
+// drivers and serve-sim print it next to their accuracy/latency numbers.
+pub use crate::exec::CacheStats;
+
+/// Snapshot of the **global** execution runtime's encoded-operand cache
+/// counters (hits, misses, evictions, residency). Counters are
+/// cumulative for the process; sample before/after a phase to attribute
+/// traffic to it.
+pub fn exec_cache_snapshot() -> CacheStats {
+    crate::exec::global().cache_stats()
+}

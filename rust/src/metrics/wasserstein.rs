@@ -51,7 +51,10 @@ fn quantile(sorted: &[f32], q: f64) -> f64 {
 /// `(m, b)` points; with the reference sorted once per layer
 /// ([`QuantSweep::set_reference`]) each point costs one packed
 /// round-trip plus one sort of the quantized sample — not two sorts
-/// and four allocations.
+/// and four allocations. The round-trip itself runs on the
+/// [`crate::exec`] worker pool for large layers (parallel block
+/// encode, bit-identical to serial), so sweep wall-time scales with
+/// the machine.
 #[derive(Debug, Default)]
 pub struct QuantSweep {
     packed: BfpMatrix,

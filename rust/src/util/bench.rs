@@ -2,8 +2,15 @@
 //! our own): warmup, timed iterations, mean / p50 / p95 / throughput
 //! reporting, plus a simple suite runner used by `cargo bench`
 //! (`harness = false` benches call [`BenchSuite::run`] from `main`).
+//!
+//! Results can additionally be captured as JSON for check-in or CI
+//! artifacts: pass `--json PATH` to the bench binary (`cargo bench
+//! --bench bench_quantize -- --json BENCH_gemm.json`) or set
+//! `REPRO_BENCH_JSON=PATH`; [`BenchSuite::finish`] then writes the
+//! machine-readable suite next to the human-readable stdout report.
 
-use crate::util::Stopwatch;
+use crate::util::{Json, Stopwatch};
+use std::path::{Path, PathBuf};
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -23,6 +30,24 @@ impl BenchResult {
 
     pub fn throughput(&self) -> Option<f64> {
         self.items.map(|n| n / (self.mean_ns / 1e9))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.as_str())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("p50_ns", Json::Num(self.p50_ns)),
+            ("p95_ns", Json::Num(self.p95_ns)),
+            (
+                "items",
+                self.items.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "items_per_s",
+                self.throughput().map(Json::Num).unwrap_or(Json::Null),
+            ),
+        ])
     }
 
     pub fn report(&self) -> String {
@@ -103,14 +128,61 @@ impl BenchSuite {
         self.results.push(r);
     }
 
+    /// Machine-readable form of the whole suite.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("suite", Json::str(self.title.as_str())),
+            ("budget_ms", Json::Num(self.budget_ms)),
+            (
+                "results",
+                Json::arr(self.results.iter().map(BenchResult::to_json)),
+            ),
+        ])
+    }
+
+    /// Write the suite as JSON (parent directories created).
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut text = self.to_json().render();
+        text.push('\n');
+        std::fs::write(path, text)
+    }
+
     /// Final summary line (keeps `cargo bench` output grep-friendly).
+    /// Honors `--json PATH` / `REPRO_BENCH_JSON` (see module docs).
     pub fn finish(self) {
+        if let Some(path) = json_sink() {
+            match self.write_json(&path) {
+                Ok(()) => println!("### wrote {}", path.display()),
+                Err(e) => eprintln!("### bench json write failed ({}): {e}", path.display()),
+            }
+        }
         println!(
             "### {}: {} benches done",
             self.title,
             self.results.len()
         );
     }
+}
+
+/// `--json PATH` (or `--json=PATH`) from the bench binary's argv, else
+/// `REPRO_BENCH_JSON`. Scanned manually: cargo prepends its own flags
+/// to harness-false bench binaries.
+fn json_sink() -> Option<PathBuf> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--json" {
+            return args.next().map(PathBuf::from);
+        }
+        if let Some(rest) = a.strip_prefix("--json=") {
+            return Some(PathBuf::from(rest));
+        }
+    }
+    std::env::var_os("REPRO_BENCH_JSON").map(PathBuf::from)
 }
 
 #[cfg(test)]
@@ -131,5 +203,39 @@ mod tests {
         assert!(r.iters >= 3);
         assert!(r.throughput().unwrap() > 0.0);
         assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn json_roundtrips_the_suite() {
+        let r = BenchResult {
+            name: "gemm".into(),
+            iters: 12,
+            mean_ns: 1.5e6,
+            p50_ns: 1.4e6,
+            p95_ns: 2.0e6,
+            items: Some(1024.0),
+        };
+        let suite = BenchSuite {
+            title: "t".into(),
+            budget_ms: 20.0,
+            results: vec![r],
+        };
+        let back = Json::parse(&suite.to_json().render()).unwrap();
+        assert_eq!(back.req("suite").unwrap().as_str().unwrap(), "t");
+        let results = back.req("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].req("name").unwrap().as_str().unwrap(), "gemm");
+        assert_eq!(results[0].req("iters").unwrap().as_usize().unwrap(), 12);
+        assert!(results[0].req("items_per_s").unwrap().as_f64().unwrap() > 0.0);
+        // No-items results serialize throughput as null.
+        let r2 = BenchResult {
+            name: "x".into(),
+            iters: 3,
+            mean_ns: 1.0,
+            p50_ns: 1.0,
+            p95_ns: 1.0,
+            items: None,
+        };
+        assert!(r2.to_json().req("items_per_s").unwrap().is_null());
     }
 }

@@ -30,6 +30,24 @@ impl Default for Stopwatch {
     }
 }
 
+/// Worker-thread budget for the fixed-point execution runtime: the
+/// single home of the `BOOSTERS_GEMM_THREADS` override (any positive
+/// integer) with `available_parallelism` as the fallback. Used to size
+/// the persistent [`crate::exec`] worker pool and by the GEMM
+/// dispatcher's serial-vs-parallel heuristic; hoisted here so the two
+/// can never disagree.
+pub fn gemm_thread_budget() -> usize {
+    std::env::var("BOOSTERS_GEMM_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
 /// Mean of a slice (0.0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -51,6 +69,12 @@ pub fn stddev(xs: &[f64]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn thread_budget_is_positive() {
+        // Whatever the environment says, the budget is a usable count.
+        assert!(gemm_thread_budget() >= 1);
+    }
 
     #[test]
     fn mean_and_stddev() {

@@ -1,0 +1,188 @@
+//! Property tests for the execution runtime: `BatchGemm` must be
+//! bit-identical to the per-op scalar reference across thread counts,
+//! shard sizes, and batch orderings, on the paper's mantissa grid with
+//! ragged contraction dims — and the operand cache must behave as a
+//! pure memoization (hits change nothing but speed).
+
+use boosters::analysis::quantize_params_packed_cached;
+use boosters::bfp::{hbfp_gemm_scalar, BlockFormat, Mat, Quantizer};
+use boosters::exec::{BatchGemm, ExecRuntime, GemmOp};
+use boosters::runtime::Tensor;
+use boosters::util::Rng;
+
+fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_scaled(1.0)).collect()
+}
+
+/// The m in {3,4,6,8} x {16,64,576} grid with ragged K, 6 cases each:
+/// 72 heterogeneous ops (>= the 64 the acceptance gate requires).
+fn build_ops(rng: &mut Rng) -> Vec<(Mat, Mat, BlockFormat)> {
+    let mut out = Vec::new();
+    for &m in &[3u32, 4, 6, 8] {
+        for &b in &[16usize, 64, 576] {
+            let fmt = BlockFormat::new(m, b).unwrap();
+            for _ in 0..6 {
+                // Ragged K: rarely a block multiple, sometimes < b.
+                let k = 1 + rng.below(2 * b + 37);
+                let r = 1 + rng.below(6);
+                let c = 1 + rng.below(7);
+                let x = Mat::new(r, k, randn(rng, r * k)).unwrap();
+                let w = Mat::new(k, c, randn(rng, k * c)).unwrap();
+                out.push((x, w, fmt));
+            }
+        }
+    }
+    out
+}
+
+fn as_ops(triples: &[(Mat, Mat, BlockFormat)]) -> Vec<GemmOp<'_>> {
+    triples
+        .iter()
+        .map(|(x, w, fmt)| GemmOp { x, w, fmt: *fmt })
+        .collect()
+}
+
+fn assert_bits_eq(a: &Mat, b: &Mat, ctx: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{ctx}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: elem {i}: {x} vs {y}");
+    }
+}
+
+/// Acceptance gate: >= 64 heterogeneous ops, every result bit-identical
+/// to per-op `hbfp_gemm_scalar`.
+#[test]
+fn prop_batch_gemm_bit_identical_to_scalar_reference() {
+    let mut rng = Rng::new(0xBA7C4);
+    let triples = build_ops(&mut rng);
+    assert!(triples.len() >= 64, "need >= 64 ops, got {}", triples.len());
+    let rt = ExecRuntime::with_threads(4);
+    let got = BatchGemm::new(&rt).run(&as_ops(&triples)).unwrap();
+    assert_eq!(got.len(), triples.len());
+    for (i, ((x, w, fmt), out)) in triples.iter().zip(&got).enumerate() {
+        let want = hbfp_gemm_scalar(x, w, *fmt).unwrap();
+        assert_bits_eq(out, &want, &format!("op {i} (m={} b={})", fmt.mantissa_bits, fmt.block_size));
+    }
+}
+
+/// BOOSTERS_GEMM_THREADS=1 vs the default budget, and a spread of
+/// forced shard heights, all produce the same bits. (The CI workflow
+/// additionally runs the whole suite under both env settings.)
+#[test]
+fn prop_batch_gemm_invariant_to_threads_and_shard_size() {
+    let mut rng = Rng::new(0x51AB5);
+    let triples = build_ops(&mut rng);
+    let ops = as_ops(&triples);
+    let serial_rt = ExecRuntime::with_threads(1);
+    let base = BatchGemm::new(&serial_rt).run(&ops).unwrap();
+    let wide_rt = ExecRuntime::with_threads(boosters::util::gemm_thread_budget().clamp(2, 16));
+    let default_bands = BatchGemm::new(&wide_rt).run(&ops).unwrap();
+    for (i, (a, b)) in base.iter().zip(&default_bands).enumerate() {
+        assert_bits_eq(a, b, &format!("threads=1 vs default, op {i}"));
+    }
+    for band in [1usize, 2, 5, 10_000] {
+        let sharded = BatchGemm::new(&wide_rt).band_rows(band).run(&ops).unwrap();
+        for (i, (a, b)) in base.iter().zip(&sharded).enumerate() {
+            assert_bits_eq(a, b, &format!("band_rows={band}, op {i}"));
+        }
+    }
+}
+
+/// Reordering the batch permutes the outputs and changes nothing else.
+#[test]
+fn prop_batch_gemm_invariant_to_submission_order() {
+    let mut rng = Rng::new(0x0D3);
+    let triples = build_ops(&mut rng);
+    let rt = ExecRuntime::with_threads(3);
+    let forward = BatchGemm::new(&rt).run(&as_ops(&triples)).unwrap();
+    // A deterministic shuffle with its inverse mapping.
+    let mut perm: Vec<usize> = (0..triples.len()).collect();
+    rng.shuffle(&mut perm);
+    let shuffled: Vec<GemmOp> = perm
+        .iter()
+        .map(|&i| {
+            let (x, w, fmt) = &triples[i];
+            GemmOp { x, w, fmt: *fmt }
+        })
+        .collect();
+    let permuted = BatchGemm::new(&rt).run(&shuffled).unwrap();
+    for (pos, &orig) in perm.iter().enumerate() {
+        assert_bits_eq(
+            &permuted[pos],
+            &forward[orig],
+            &format!("permuted pos {pos} = original op {orig}"),
+        );
+    }
+}
+
+/// Cache hits are pure: a batch that reuses weights returns the same
+/// bits as a cold cache, and the counters show the reuse.
+#[test]
+fn prop_weight_cache_reuse_is_bit_pure() {
+    let mut rng = Rng::new(0xCAFE);
+    let fmt = BlockFormat::new(4, 64).unwrap();
+    let w = Mat::new(150, 12, randn(&mut rng, 150 * 12)).unwrap();
+    let xs: Vec<Mat> = (0..10)
+        .map(|_| {
+            let m = 1 + rng.below(20);
+            Mat::new(m, 150, randn(&mut rng, m * 150)).unwrap()
+        })
+        .collect();
+    let warm_rt = ExecRuntime::with_threads(2);
+    let ops: Vec<GemmOp> = xs.iter().map(|x| GemmOp { x, w: &w, fmt }).collect();
+    let first = BatchGemm::new(&warm_rt).run(&ops).unwrap();
+    let second = BatchGemm::new(&warm_rt).run(&ops).unwrap();
+    let stats = warm_rt.cache_stats();
+    assert_eq!(stats.misses, 1, "one weight, one miss: {stats:?}");
+    assert_eq!(stats.hits, 19, "{stats:?}");
+    let cold = BatchGemm::new(&warm_rt).cache_weights(false).run(&ops).unwrap();
+    for i in 0..ops.len() {
+        let want = hbfp_gemm_scalar(&xs[i], &w, fmt).unwrap();
+        assert_bits_eq(&first[i], &want, &format!("first run op {i}"));
+        assert_bits_eq(&second[i], &want, &format!("cached run op {i}"));
+        assert_bits_eq(&cold[i], &want, &format!("uncached run op {i}"));
+    }
+}
+
+/// The acceptance criterion's "Trainer emulation loop": epochs of
+/// host-BFP weight-store round-trips where one tensor trains (changes)
+/// and one is frozen. The frozen tensor must be served from the operand
+/// cache after its first epoch, and every snapped value must equal the
+/// scalar quantizer's output.
+#[test]
+fn trainer_emulation_loop_hits_operand_cache() {
+    let mut rng = Rng::new(0x7EA1);
+    let rt = ExecRuntime::with_threads(2);
+    let frozen_vals = randn(&mut rng, 320);
+    let mut live_vals = randn(&mut rng, 256);
+    let mut qbuf = Vec::new();
+    for epoch in 0..5 {
+        // The live tensor drifts every epoch (a training step); the
+        // frozen one never does.
+        for v in live_vals.iter_mut() {
+            *v += 0.01;
+        }
+        let mut params = vec![
+            Tensor::from_f32(&[16, 16], live_vals.clone()).unwrap(),
+            Tensor::from_f32(&[320], frozen_vals.clone()).unwrap(),
+        ];
+        quantize_params_packed_cached(&mut params, 4, 64, &rt, &mut qbuf).unwrap();
+        // Trainer writes the snapped literals back.
+        live_vals = params[0].as_f32().unwrap().to_vec();
+        // Snapped values match the uncached scalar quantizer bit-for-bit.
+        let want = boosters::bfp::quantize_packed(&frozen_vals, 64, Quantizer::nearest(4), 0);
+        let got = params[1].as_f32().unwrap();
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (*g == 0.0 && *w == 0.0) || g.to_bits() == w.to_bits(),
+                "epoch {epoch} elem {i}: {g} vs {w}"
+            );
+        }
+    }
+    let stats = rt.cache_stats();
+    assert!(
+        stats.hits >= 4,
+        "frozen tensor must hit the cache after epoch 0: {stats:?}"
+    );
+    assert!(stats.misses >= 5, "live tensor re-encodes every epoch: {stats:?}");
+}
