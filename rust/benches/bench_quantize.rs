@@ -8,9 +8,10 @@ use boosters::bfp::{
     bfp_dot_fixed_point, hbfp_gemm, hbfp_gemm_scalar, quantize_flat, quantize_packed_into,
     BfpMatrix, BfpTensor, BlockFormat, Mat, Quantizer,
 };
-use boosters::exec::{BatchGemm, GemmOp};
+use boosters::exec::{BatchGemm, OwnedGemmOp};
 use boosters::util::bench::BenchSuite;
 use boosters::util::Rng;
+use std::sync::Arc;
 
 fn randn(n: usize, seed: u64) -> Vec<f32> {
     let mut r = Rng::new(seed);
@@ -102,18 +103,18 @@ fn main() {
     let rt = boosters::exec::global();
     let batch_fmt = BlockFormat::new(4, 64).unwrap();
     let wshapes = [(192usize, 96usize), (256, 64), (128, 128), (320, 48)];
-    let bweights: Vec<Mat> = (0..8)
+    let bweights: Vec<Arc<Mat>> = (0..8)
         .map(|i| {
             let (k, n) = wshapes[i % wshapes.len()];
-            Mat::new(k, n, randn(k * n, 100 + i as u64)).unwrap()
+            Arc::new(Mat::new(k, n, randn(k * n, 100 + i as u64)).unwrap())
         })
         .collect();
-    let bxs: Vec<(usize, Mat)> = (0..64)
+    let bxs: Vec<(usize, Arc<Mat>)> = (0..64)
         .map(|i| {
             let wi = i % bweights.len();
             let k = bweights[wi].rows;
             let m = 8 + (i * 7) % 48;
-            (wi, Mat::new(m, k, randn(m * k, 200 + i as u64)).unwrap())
+            (wi, Arc::new(Mat::new(m, k, randn(m * k, 200 + i as u64)).unwrap()))
         })
         .collect();
     let batch_macs: f64 = bxs
@@ -121,18 +122,34 @@ fn main() {
         .map(|(wi, x)| (x.rows * bweights[*wi].cols * x.cols) as f64)
         .sum();
     suite.bench_items("BatchGemm 64 heterogeneous ops (MACs)", Some(batch_macs), || {
-        let ops: Vec<GemmOp> = bxs
+        let ops: Vec<OwnedGemmOp> = bxs
             .iter()
-            .map(|(wi, x)| GemmOp {
-                x,
-                w: &bweights[*wi],
-                fmt: batch_fmt,
+            .map(|(wi, x)| {
+                OwnedGemmOp::new(Arc::clone(x), Arc::clone(&bweights[*wi]), batch_fmt).unwrap()
             })
             .collect();
         std::hint::black_box(BatchGemm::new(rt).run(&ops).unwrap());
     });
+    // Clone-free one-op-at-a-time baseline: per-op BatchGemm on shared
+    // Arcs — the pure execution-stage cost, no service hop, no operand
+    // copies. This is the undistorted comparator for the batched bench.
     suite.bench_items(
-        "sequential hbfp_gemm same 64 ops (MACs)",
+        "sequential BatchGemm 1-op batches, same 64 ops (MACs)",
+        Some(batch_macs),
+        || {
+            for (wi, x) in &bxs {
+                let op =
+                    OwnedGemmOp::new(Arc::clone(x), Arc::clone(&bweights[*wi]), batch_fmt).unwrap();
+                std::hint::black_box(BatchGemm::new(rt).run(std::slice::from_ref(&op)).unwrap());
+            }
+        },
+    );
+    // The public single-op API: since PR 3 this routes through the
+    // async service (admission + ticket + operand copies), so the gap
+    // between this series and the 1-op-batch baseline above *is* the
+    // per-call service overhead.
+    suite.bench_items(
+        "sequential hbfp_gemm via service, same 64 ops (MACs)",
         Some(batch_macs),
         || {
             for (wi, x) in &bxs {

@@ -28,7 +28,11 @@
 //! The tiled micro-kernel itself sits behind the [`GemmKernel`] trait
 //! ([`ScalarTiledKernel`] is the portable implementation) so a
 //! SIMD-explicit kernel can slot in without touching the dispatch,
-//! banding, or scheduling layers.
+//! banding, or scheduling layers. Above this module, batch-level
+//! consumers enter through the asynchronous
+//! [`crate::exec::BfpService`] front door (single-op helpers like
+//! [`super::matrix::hbfp_gemm`] ride it via service sessions); this
+//! file stays the band-level execution substrate underneath.
 
 use super::block::scale_shift;
 use super::matrix::Mat;

@@ -109,21 +109,22 @@ fn encode_row(
 /// Fixed-point HBFP GEMM: y = Q(x) @ Q(w) with integer MACs per block
 /// pair, one exponent add per block pair, FP32 result store.
 ///
-/// Production path: the activation operand is packed fresh (parallel
-/// encode on the [`crate::exec`] pool for large tensors); the weight
-/// operand is pulled through the exec **encoded-operand cache**, so
-/// repeated multiplies against the same weights — the serving/emulation
-/// pattern — encode them exactly once. Cached planes are byte-identical
-/// to fresh ones (deterministic nearest rounding), so the result stays
-/// bit-identical to [`hbfp_gemm_scalar`] (property-tested).
+/// Production path (PR 3): the call is a **session onto the global
+/// [`crate::exec::BfpService`]** — the op is submitted through the
+/// service's admission loop (blocking admission: this is a synchronous
+/// contract) and executed by its batched stage, where the activation
+/// packs fresh in parallel and the weight operand is pulled through the
+/// encoded-operand cache, so repeated multiplies against the same
+/// weights — the serving/emulation pattern — encode them exactly once.
+/// Admission order and batch fusion never touch numerics: the result
+/// stays bit-identical to [`hbfp_gemm_scalar`] (property-tested).
 pub fn hbfp_gemm(x: &Mat, w: &Mat, fmt: BlockFormat) -> Result<Mat> {
     if x.cols != w.rows {
         bail!("inner dims {} vs {}", x.cols, w.rows);
     }
-    let q = Quantizer::nearest(fmt.mantissa_bits);
-    let xp = BfpMatrix::encode(&x.data, x.rows, x.cols, fmt, q)?;
-    let wp = crate::exec::global().encode_transposed_cached(w, fmt)?;
-    xp.gemm(wp.as_ref())
+    crate::exec::global_service()
+        .session("bfp::hbfp_gemm")
+        .gemm(x, w, fmt)
 }
 
 /// The original per-block scalar GEMM, kept as the reference
@@ -176,9 +177,11 @@ pub fn dequant_gemm(x: &Mat, w: &Mat, fmt: BlockFormat) -> Result<Mat> {
     }
     let q = Quantizer::nearest(fmt.mantissa_bits);
     let xq = BfpMatrix::encode(&x.data, x.rows, x.cols, fmt, q)?.to_mat();
-    // Shares the exec operand cache with `hbfp_gemm`: comparing the two
-    // on the same (w, fmt) encodes the weights once, not twice.
-    let wq = crate::exec::global()
+    // Encode-only session onto the global service: shares the operand
+    // cache with `hbfp_gemm`, so comparing the two on the same (w, fmt)
+    // encodes the weights once, not twice.
+    let wq = crate::exec::global_service()
+        .session("bfp::dequant_gemm")
         .encode_transposed_cached(w, fmt)?
         .decode_transposed();
     xq.matmul(&wq)

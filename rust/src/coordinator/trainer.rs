@@ -252,9 +252,11 @@ impl<'a> Trainer<'a> {
 /// Round-trip every f32 parameter through the packed HBFP carrier:
 /// snapshot, snap via the shared [`quantize_params_packed_cached`]
 /// helper (row-major flat blocking — the storage emulation, not the
-/// graph's per-axis operand blocking) on the global exec runtime, write
-/// the snapped literals back. Routing through the runtime means
-/// unchanged tensors are served from the encoded-operand cache
+/// graph's per-axis operand blocking), write the snapped literals back.
+/// The work runs on an **encode-only session** of the global execution
+/// service: it does not pass the GEMM admission loop (there is no GEMM
+/// here), but it shares the service's runtime and operand cache, so
+/// unchanged tensors are served from cache instead of re-encoding
 /// (`metrics::exec_cache_snapshot` exposes the hit/miss counters).
 fn requantize_params(
     state: &mut TrainState,
@@ -263,7 +265,8 @@ fn requantize_params(
     buf: &mut Vec<f32>,
 ) -> Result<()> {
     let mut params = state.params_to_tensors()?;
-    quantize_params_packed_cached(&mut params, m_bits, block, crate::exec::global(), buf)?;
+    let session = crate::exec::global_service().session("trainer host-BFP store");
+    quantize_params_packed_cached(&mut params, m_bits, block, session.runtime(), buf)?;
     state.params = params
         .iter()
         .map(|t| t.to_literal())

@@ -1,32 +1,44 @@
-//! The BFP **execution runtime**: persistent worker pool,
-//! encoded-operand cache, and batched/sharded GEMM scheduling — the
-//! host-side throughput layer the paper's density argument needs to pay
-//! off at system level.
+//! The BFP **execution service**: an asynchronous submit/ticket front
+//! door ([`service::BfpService`]) over a persistent worker pool, an
+//! encoded-operand cache, and the batched/sharded GEMM execution stage
+//! — the host-side throughput layer the paper's density argument needs
+//! to pay off at system level.
 //!
-//! PR 1 made the fixed-point datapath bandwidth-bound per call; this
-//! subsystem makes it saturable across calls. Every host-side consumer
-//! (packed GEMM, fixed-point dots, quantization sweeps, the Trainer's
-//! host-BFP weight store, the serve-sim workload) runs on one shared
-//! runtime instead of spawning threads and re-encoding operands per
-//! call.
+//! PR 1 made the fixed-point datapath bandwidth-bound per call; PR 2
+//! made it saturable across calls with [`BatchGemm`]; PR 3 moves batch
+//! formation off the caller's critical path. The **front door of this
+//! module is [`service::BfpService`]**:
+//!
+//! * [`BfpService::submit`](service::BfpService::submit) is
+//!   non-blocking — it admits an owned [`OwnedGemmOp`] wrapped in a
+//!   [`GemmRequest`] (optional deadline + [`Priority`] class) and hands
+//!   back a [`Ticket`]; a full bounded queue returns the typed
+//!   [`AdmissionError::QueueFull`] instead of blocking (backpressure is
+//!   the caller's signal, not a hidden wait);
+//! * a dedicated scheduler thread forms earliest-deadline-first,
+//!   MAC-budgeted batches and drives [`BatchGemm`] — now the internal
+//!   execution stage, its blocking `run` kept as a thin synchronous
+//!   facade for tests/benches;
+//! * synchronous consumers (`hbfp_gemm`, `dequant_gemm`, the Trainer's
+//!   host-BFP weight store) go through labeled
+//!   [`ServiceSession`](service::ServiceSession)s.
 //!
 //! # Pool lifecycle
 //!
-//! The process-wide [`ExecRuntime`] (reached via [`global`]) is created
-//! lazily on first use and lives for the remainder of the process. Its
-//! [`WorkerPool`] is sized **once** at creation from
-//! [`crate::util::gemm_thread_budget`] (`BOOSTERS_GEMM_THREADS`
-//! override, else `available_parallelism`, capped at 16); later changes
-//! to the environment variable do not resize a pool that already
-//! exists. A budget of 1 spawns no OS threads: all work runs inline on
-//! the caller, which is the strict-serial reference mode. Tests and
-//! embedders can build private runtimes with [`ExecRuntime::with_threads`];
-//! dropping one joins its workers.
-//!
-//! Work enters the pool through [`WorkerPool::scope_run`], a scoped
-//! fork-join over persistent threads: the caller blocks (and helps
-//! drain the queue) until every job it submitted has retired, so jobs
-//! may borrow the caller's operands and output bands directly.
+//! The process-wide [`ExecRuntime`] (reached via [`global`] /
+//! [`global_arc`], and serving the process-wide
+//! [`service::global`] service) is created lazily on first use and
+//! lives for the remainder of the process. Its [`WorkerPool`] is sized
+//! **once** at creation from [`crate::util::gemm_thread_budget`]
+//! (`BOOSTERS_GEMM_THREADS` override, else `available_parallelism`,
+//! capped at 16); later changes to the environment variable do not
+//! resize a pool that already exists. A budget of 1 spawns no OS
+//! threads: all work runs inline on the caller, which is the strict-
+//! serial reference mode. Tests and embedders can build private
+//! runtimes with [`ExecRuntime::with_threads`] (dropping one joins its
+//! workers) and private services with
+//! [`service::BfpService::with_threads`] (dropping one drains admitted
+//! work, then joins its scheduler).
 //!
 //! # Cache keying
 //!
@@ -36,14 +48,16 @@
 //! encodings are cacheable (stochastic rounding depends on seed/site
 //! state); the `encode_*_cached` entry points enforce this by
 //! construction. The cache is LRU-bounded by entry count and by
-//! approximate resident bytes (`BOOSTERS_CACHE_ENTRIES` /
-//! `BOOSTERS_CACHE_MB` override the defaults of 96 entries / 128 MiB),
-//! and its hit/miss/eviction counters are surfaced through
+//! approximate resident bytes; the caps come from
+//! [`crate::util::cache_budget`] (`BOOSTERS_CACHE_ENTRIES` /
+//! `BOOSTERS_CACHE_MB`, defaults 96 entries / 128 MiB), and its
+//! hit/miss/eviction counters are surfaced through
 //! [`crate::metrics::exec_cache_snapshot`].
 //!
 //! # Determinism guarantees
 //!
-//! The runtime schedules *where* work runs, never *what* is computed:
+//! The runtime and the service schedule *where and when* work runs,
+//! never *what* is computed:
 //!
 //! * every output element is produced by exactly one band job, which
 //!   accumulates its blocks in ascending contraction order;
@@ -51,34 +65,32 @@
 //!   serial encode bit-for-bit (including the stochastic stream, which
 //!   is indexed by absolute block position);
 //! * cached operands are byte-identical to freshly encoded ones
-//!   (deterministic nearest rounding, content-addressed identity).
+//!   (deterministic nearest rounding, content-addressed identity);
+//! * admission order, priority classes, deadlines, and batch-budget
+//!   cuts reorder **execution**, never accumulation.
 //!
-//! Consequently [`BatchGemm`] and `gemm_packed` results are
-//! **bit-identical** across thread counts, shard sizes, batch
-//! orderings, and cache hits/misses — and bit-identical to the scalar
-//! reference [`crate::bfp::hbfp_gemm_scalar`]. `tests/property_exec.rs`
-//! pins all of these.
+//! Consequently service responses, [`BatchGemm`], and `gemm_packed`
+//! results are **bit-identical** across thread counts, shard sizes,
+//! batch orderings, arrival orders, and cache hits/misses — and
+//! bit-identical to the scalar reference
+//! [`crate::bfp::hbfp_gemm_scalar`]. `tests/property_exec.rs` and
+//! `tests/property_service.rs` pin all of these.
 
 pub mod cache;
 pub mod pool;
+pub mod queue;
 pub mod scheduler;
+pub mod service;
 
 pub use cache::{CacheKey, CacheStats, OperandCache};
 pub use pool::{Job, WorkerPool};
-pub use scheduler::{BatchGemm, GemmOp};
+pub use queue::{AdmissionError, GemmRequest, GemmResponse, Priority, Ticket};
+pub use scheduler::{BatchGemm, OwnedGemmOp};
+pub use service::{BfpService, ServiceConfig, ServiceSession, ServiceStats};
 
 use crate::bfp::{BfpMatrix, BlockFormat, Mat, Quantizer};
 use anyhow::Result;
 use std::sync::{Arc, OnceLock};
-
-/// Default operand-cache bounds (overridable via `BOOSTERS_CACHE_ENTRIES`
-/// / `BOOSTERS_CACHE_MB`).
-const DEFAULT_CACHE_ENTRIES: usize = 96;
-const DEFAULT_CACHE_BYTES: usize = 128 << 20;
-
-fn env_usize(name: &str) -> Option<usize> {
-    std::env::var(name).ok().and_then(|v| v.parse().ok()).filter(|&n| n >= 1)
-}
 
 /// One worker pool + one operand cache: the unit every execution-path
 /// consumer shares. See the module docs for lifecycle and guarantees.
@@ -97,7 +109,8 @@ impl ExecRuntime {
 
     /// A runtime with explicit parallelism and default cache bounds.
     pub fn with_threads(threads: usize) -> Self {
-        Self::new(threads, DEFAULT_CACHE_ENTRIES, DEFAULT_CACHE_BYTES)
+        let (entries, bytes) = crate::util::default_cache_budget();
+        Self::new(threads, entries, bytes)
     }
 
     pub fn pool(&self) -> &WorkerPool {
@@ -112,7 +125,9 @@ impl ExecRuntime {
         self.cache.stats()
     }
 
-    /// A batch scheduler bound to this runtime.
+    /// A batch scheduler bound to this runtime — the synchronous
+    /// execution-stage facade ([`service::BfpService`] is the async
+    /// front door).
     pub fn batch(&self) -> BatchGemm<'_> {
         BatchGemm::new(self)
     }
@@ -156,20 +171,35 @@ impl ExecRuntime {
     }
 }
 
-static GLOBAL: OnceLock<ExecRuntime> = OnceLock::new();
+static GLOBAL: OnceLock<Arc<ExecRuntime>> = OnceLock::new();
+
+fn global_cell() -> &'static Arc<ExecRuntime> {
+    GLOBAL.get_or_init(|| {
+        let (entries, bytes) = crate::util::cache_budget();
+        Arc::new(ExecRuntime::new(
+            crate::util::gemm_thread_budget().min(16),
+            entries,
+            bytes,
+        ))
+    })
+}
 
 /// The process-wide runtime. Created on first use; the pool is sized by
 /// [`crate::util::gemm_thread_budget`] (capped at 16 workers).
 pub fn global() -> &'static ExecRuntime {
-    GLOBAL.get_or_init(|| {
-        ExecRuntime::new(
-            crate::util::gemm_thread_budget().min(16),
-            env_usize("BOOSTERS_CACHE_ENTRIES").unwrap_or(DEFAULT_CACHE_ENTRIES),
-            env_usize("BOOSTERS_CACHE_MB")
-                .map(|mb| mb << 20)
-                .unwrap_or(DEFAULT_CACHE_BYTES),
-        )
-    })
+    global_cell().as_ref()
+}
+
+/// Owning handle to the process-wide runtime — what
+/// [`service::BfpService`] and other thread-crossing embedders hold.
+pub fn global_arc() -> Arc<ExecRuntime> {
+    Arc::clone(global_cell())
+}
+
+/// The process-wide service over the global runtime (see
+/// [`service::global`]).
+pub fn global_service() -> &'static BfpService {
+    service::global()
 }
 
 #[cfg(test)]
@@ -183,6 +213,7 @@ mod tests {
         let b = global() as *const ExecRuntime;
         assert_eq!(a, b);
         assert!(global().pool().threads() >= 1);
+        assert!(Arc::ptr_eq(&global_arc(), &global_arc()));
     }
 
     #[test]

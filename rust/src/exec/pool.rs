@@ -33,8 +33,51 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Lock a runtime mutex, turning a poisoned lock (a worker panicked
+/// while holding it) into a panic that **names the owning subsystem**
+/// instead of the opaque `PoisonError` backtrace a bare
+/// `lock().unwrap()` produces. The original panic has already been
+/// reported on its own thread; this message ties the cascade back to
+/// it.
+pub(crate) fn lock_or_poisoned<'a, T>(m: &'a Mutex<T>, subsystem: &str) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|_| {
+        panic!("exec {subsystem}: mutex poisoned by a panicked worker (see panic above)")
+    })
+}
+
+/// [`Condvar::wait`] with the same named-subsystem poison diagnostics as
+/// [`lock_or_poisoned`].
+pub(crate) fn wait_or_poisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    subsystem: &str,
+) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|_| {
+        panic!("exec {subsystem}: mutex poisoned by a panicked worker (see panic above)")
+    })
+}
+
+/// [`Condvar::wait_timeout`] variant of [`wait_or_poisoned`]. Returns
+/// the reacquired guard; callers re-check their predicate and their own
+/// deadline, so the `WaitTimeoutResult` is not propagated.
+pub(crate) fn wait_timeout_or_poisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+    subsystem: &str,
+) -> MutexGuard<'a, T> {
+    cv.wait_timeout(guard, timeout)
+        .unwrap_or_else(|_| {
+            panic!(
+                "exec {subsystem}: mutex poisoned by a panicked worker (see the original panic above)"
+            )
+        })
+        .0
+}
 
 /// A unit of work. Jobs may borrow from the submitting frame ('env);
 /// [`WorkerPool::scope_run`] guarantees they retire before it returns.
@@ -118,7 +161,7 @@ impl WorkerPool {
             panicked: AtomicBool::new(false),
         });
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_or_poisoned(&self.shared.queue, "pool job queue");
             for job in jobs {
                 // SAFETY: `scope_run` blocks below until `remaining`
                 // reaches zero, so every borrow captured by `job` is
@@ -131,7 +174,7 @@ impl WorkerPool {
                     if catch_unwind(AssertUnwindSafe(job)).is_err() {
                         st.panicked.store(true, Ordering::Release);
                     }
-                    let mut left = st.remaining.lock().unwrap();
+                    let mut left = lock_or_poisoned(&st.remaining, "pool scope counter");
                     *left -= 1;
                     if *left == 0 {
                         st.done.notify_all();
@@ -146,18 +189,18 @@ impl WorkerPool {
         // the moment our own jobs have all retired, so a small scope is
         // never held hostage by a large concurrent one.
         loop {
-            if *state.remaining.lock().unwrap() == 0 {
+            if *lock_or_poisoned(&state.remaining, "pool scope counter") == 0 {
                 break;
             }
-            let job = self.shared.queue.lock().unwrap().pop_front();
+            let job = lock_or_poisoned(&self.shared.queue, "pool job queue").pop_front();
             match job {
                 Some(job) => job(),
                 None => break,
             }
         }
-        let mut left = state.remaining.lock().unwrap();
+        let mut left = lock_or_poisoned(&state.remaining, "pool scope counter");
         while *left > 0 {
-            left = state.done.wait(left).unwrap();
+            left = wait_or_poisoned(&state.done, left, "pool scope counter");
         }
         drop(left);
         if state.panicked.load(Ordering::Acquire) {
@@ -179,7 +222,7 @@ impl Drop for WorkerPool {
 fn worker_loop(shared: Arc<Shared>) {
     loop {
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = lock_or_poisoned(&shared.queue, "pool job queue");
             loop {
                 if let Some(job) = q.pop_front() {
                     break Some(job);
@@ -187,7 +230,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 if shared.shutdown.load(Ordering::Acquire) {
                     break None;
                 }
-                q = shared.work_cv.wait(q).unwrap();
+                q = wait_or_poisoned(&shared.work_cv, q, "pool job queue");
             }
         };
         match job {
@@ -260,6 +303,30 @@ mod tests {
             .collect();
         pool.scope_run(jobs);
         assert_eq!(counter.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn poisoned_lock_panic_names_the_subsystem() {
+        let m = Mutex::new(0usize);
+        // Poison it.
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = m.lock().unwrap();
+            panic!("worker died");
+        }));
+        assert!(m.is_poisoned());
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let _ = lock_or_poisoned(&m, "pool test fixture");
+        }))
+        .expect_err("poisoned lock must still panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .map(String::as_str)
+            .or_else(|| err.downcast_ref::<&str>().copied())
+            .unwrap_or("");
+        assert!(
+            msg.contains("pool test fixture"),
+            "diagnosable message must name the subsystem: {msg:?}"
+        );
     }
 
     #[test]

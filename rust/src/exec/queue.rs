@@ -1,0 +1,524 @@
+//! Admission queue of the BFP execution service: bounded submission,
+//! per-request QoS, and the deadline-aware batch-selection policy.
+//!
+//! [`super::service::BfpService`] splits into two halves. This module is
+//! the **admission half**: a bounded MPSC queue of pending
+//! [`GemmRequest`]s plus the [`Ticket`] handles their callers hold. The
+//! service's scheduler thread drains it with [`SubmitQueue::pop_batch`],
+//! which forms one execution batch per call: requests sorted
+//! **earliest-deadline-first within priority class** (no-deadline
+//! requests sort after every deadline in their class, FIFO among
+//! themselves), cut off at a MAC budget so one giant batch cannot
+//! monopolize the pool while a deadline burns.
+//!
+//! # Backpressure contract
+//!
+//! `push` never blocks: a full queue returns
+//! [`AdmissionError::QueueFull`] to the submitter immediately, which is
+//! the service's backpressure signal (`submit` is non-blocking by API
+//! contract). `push_blocking` exists for the synchronous facades, which
+//! are allowed to wait for space — they were blocking APIs to begin
+//! with.
+//!
+//! # Ordering vs numerics
+//!
+//! Admission order, batch formation, and priority classes decide *when*
+//! a request executes, never *what* it computes: every batch runs
+//! through the bit-deterministic [`super::scheduler::BatchGemm`] stage,
+//! so any admission order yields results bit-identical to the scalar
+//! reference (`tests/property_service.rs` pins this).
+
+use super::pool::{lock_or_poisoned, wait_or_poisoned, wait_timeout_or_poisoned};
+use super::scheduler::OwnedGemmOp;
+use crate::bfp::Mat;
+use anyhow::{anyhow, Result};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Priority class of a request. Within a batch-selection pass, every
+/// `Interactive` request outranks every `Bulk` one; deadlines order
+/// requests inside a class. Sustained `Interactive` load can therefore
+/// starve `Bulk` — that is the intended semantics of a priority class,
+/// not an accident of the implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-sensitive serving traffic.
+    Interactive,
+    /// Throughput traffic (sweeps, training-side requantization).
+    Bulk,
+}
+
+/// One unit of admission: an owned op plus its QoS envelope.
+pub struct GemmRequest {
+    pub op: OwnedGemmOp,
+    /// Deadline **relative to submission**; the service records the
+    /// absolute deadline at admission. A missed deadline is *observed*
+    /// (per-response flag + service counter), never enforced by
+    /// cancellation — results stay bit-identical either way.
+    pub deadline: Option<Duration>,
+    pub priority: Priority,
+}
+
+impl GemmRequest {
+    pub fn new(op: OwnedGemmOp) -> Self {
+        Self {
+            op,
+            deadline: None,
+            priority: Priority::Bulk,
+        }
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+}
+
+/// Typed admission failure. `submit` hands these back instead of
+/// blocking or panicking; callers decide whether to shed, retry, or
+/// fall back to the blocking facade.
+#[derive(Debug)]
+pub enum AdmissionError {
+    /// The bounded queue is at capacity — backpressure, try later.
+    QueueFull { capacity: usize },
+    /// The service is shutting down and admits nothing new.
+    ShuttingDown,
+    /// The op can never execute (shape mismatch); submitting again will
+    /// not help.
+    InvalidShape { reason: String },
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::QueueFull { capacity } => {
+                write!(f, "admission queue full ({capacity} pending requests)")
+            }
+            AdmissionError::ShuttingDown => write!(f, "service is shutting down"),
+            AdmissionError::InvalidShape { reason } => {
+                write!(f, "request rejected at admission: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Completed-request payload handed back through a [`Ticket`].
+#[derive(Debug)]
+pub struct GemmResponse {
+    pub out: Mat,
+    /// Admission → start of the executing batch.
+    pub queue_ms: f64,
+    /// Admission → fulfillment (what a client observes).
+    pub total_ms: f64,
+    /// The request finished after its absolute deadline.
+    pub deadline_missed: bool,
+}
+
+#[derive(Debug)]
+struct TicketState {
+    outcome: Option<Result<GemmResponse>>,
+    taken: bool,
+}
+
+/// Shared completion slot between a [`Ticket`] and the scheduler
+/// thread.
+#[derive(Debug)]
+pub(crate) struct TicketInner {
+    state: Mutex<TicketState>,
+    cv: Condvar,
+}
+
+impl TicketInner {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new(TicketState {
+                outcome: None,
+                taken: false,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Publish the outcome and wake every waiter. Called exactly once
+    /// per request by the scheduler thread.
+    pub(crate) fn fulfill(&self, outcome: Result<GemmResponse>) {
+        let mut st = lock_or_poisoned(&self.state, "service ticket");
+        debug_assert!(st.outcome.is_none() && !st.taken, "ticket fulfilled twice");
+        st.outcome = Some(outcome);
+        self.cv.notify_all();
+    }
+}
+
+/// The caller's handle to one in-flight request. The result is a
+/// take-once value: the first successful `wait`/`wait_deadline` moves
+/// the [`GemmResponse`] out; later calls report it as already taken.
+#[derive(Debug)]
+pub struct Ticket {
+    inner: Arc<TicketInner>,
+}
+
+impl Ticket {
+    pub(crate) fn from_inner(inner: Arc<TicketInner>) -> Self {
+        Self { inner }
+    }
+
+    /// Non-blocking readiness probe: `true` once the request has been
+    /// fulfilled (even if the result was already taken).
+    pub fn poll(&self) -> bool {
+        let st = lock_or_poisoned(&self.inner.state, "service ticket");
+        st.outcome.is_some() || st.taken
+    }
+
+    /// Block until the request completes and take its result.
+    pub fn wait(&self) -> Result<GemmResponse> {
+        let mut st = lock_or_poisoned(&self.inner.state, "service ticket");
+        loop {
+            if let Some(outcome) = st.outcome.take() {
+                st.taken = true;
+                return outcome;
+            }
+            if st.taken {
+                return Err(anyhow!("ticket result already taken"));
+            }
+            st = wait_or_poisoned(&self.inner.cv, st, "service ticket");
+        }
+    }
+
+    /// [`Ticket::wait`] bounded by `timeout`: `None` if the request is
+    /// still in flight when the timeout expires (the ticket stays valid
+    /// — poll or wait again later).
+    pub fn wait_deadline(&self, timeout: Duration) -> Option<Result<GemmResponse>> {
+        let until = Instant::now() + timeout;
+        let mut st = lock_or_poisoned(&self.inner.state, "service ticket");
+        loop {
+            if let Some(outcome) = st.outcome.take() {
+                st.taken = true;
+                return Some(outcome);
+            }
+            if st.taken {
+                return Some(Err(anyhow!("ticket result already taken")));
+            }
+            let now = Instant::now();
+            if now >= until {
+                return None;
+            }
+            st = wait_timeout_or_poisoned(&self.inner.cv, st, until - now, "service ticket");
+        }
+    }
+}
+
+/// One admitted request as the scheduler thread sees it.
+pub(crate) struct Pending {
+    pub(crate) op: OwnedGemmOp,
+    pub(crate) ticket: Arc<TicketInner>,
+    pub(crate) submitted_at: Instant,
+    pub(crate) deadline_at: Option<Instant>,
+    pub(crate) priority: Priority,
+    pub(crate) macs: usize,
+    seq: u64,
+}
+
+impl Pending {
+    /// Earliest-deadline-first key: priority class, then deadline
+    /// (absent deadlines sort last within the class, FIFO by admission
+    /// time), then admission sequence as the total-order tiebreak.
+    fn edf_key(&self) -> (Priority, u8, Instant, u64) {
+        match self.deadline_at {
+            Some(d) => (self.priority, 0, d, self.seq),
+            None => (self.priority, 1, self.submitted_at, self.seq),
+        }
+    }
+}
+
+struct QueueState {
+    pending: Vec<Pending>,
+    seq: u64,
+    shutdown: bool,
+    /// Guarded by the state mutex (not an atomic): the scheduler checks
+    /// it under the same lock it waits on, so a `resume` can never slip
+    /// between the check and the wait (no lost wakeup).
+    paused: bool,
+    peak_depth: usize,
+}
+
+/// Bounded submission queue + EDF batch selection (see module docs).
+pub(crate) struct SubmitQueue {
+    state: Mutex<QueueState>,
+    /// Signals the scheduler thread: work arrived / shutdown / resume.
+    work_cv: Condvar,
+    /// Signals blocked submitters: space freed.
+    space_cv: Condvar,
+    capacity: usize,
+}
+
+impl SubmitQueue {
+    pub(crate) fn new(capacity: usize) -> Self {
+        Self {
+            state: Mutex::new(QueueState {
+                pending: Vec::new(),
+                seq: 0,
+                shutdown: false,
+                paused: false,
+                peak_depth: 0,
+            }),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub(crate) fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub(crate) fn depth(&self) -> usize {
+        lock_or_poisoned(&self.state, "service queue").pending.len()
+    }
+
+    pub(crate) fn peak_depth(&self) -> usize {
+        lock_or_poisoned(&self.state, "service queue").peak_depth
+    }
+
+    /// Stop the scheduler from forming batches (admission continues) —
+    /// the drain-control / backpressure-test hook.
+    pub(crate) fn set_paused(&self, paused: bool) {
+        let mut st = lock_or_poisoned(&self.state, "service queue");
+        st.paused = paused;
+        drop(st);
+        if !paused {
+            self.work_cv.notify_all();
+        }
+    }
+
+    fn admit_locked(
+        &self,
+        st: &mut QueueState,
+        op: OwnedGemmOp,
+        deadline: Option<Duration>,
+        priority: Priority,
+    ) -> Arc<TicketInner> {
+        let ticket = TicketInner::new();
+        let now = Instant::now();
+        st.seq += 1;
+        let macs = op.macs();
+        st.pending.push(Pending {
+            op,
+            ticket: Arc::clone(&ticket),
+            submitted_at: now,
+            deadline_at: deadline.map(|d| now + d),
+            priority,
+            macs,
+            seq: st.seq,
+        });
+        st.peak_depth = st.peak_depth.max(st.pending.len());
+        self.work_cv.notify_one();
+        ticket
+    }
+
+    /// Non-blocking admission (the `submit` contract).
+    pub(crate) fn push(&self, req: GemmRequest) -> Result<Arc<TicketInner>, AdmissionError> {
+        let mut st = lock_or_poisoned(&self.state, "service queue");
+        if st.shutdown {
+            return Err(AdmissionError::ShuttingDown);
+        }
+        if st.pending.len() >= self.capacity {
+            return Err(AdmissionError::QueueFull {
+                capacity: self.capacity,
+            });
+        }
+        Ok(self.admit_locked(&mut st, req.op, req.deadline, req.priority))
+    }
+
+    /// Blocking admission for the synchronous facades: waits for space
+    /// instead of returning `QueueFull`.
+    pub(crate) fn push_blocking(
+        &self,
+        req: GemmRequest,
+    ) -> Result<Arc<TicketInner>, AdmissionError> {
+        let mut st = lock_or_poisoned(&self.state, "service queue");
+        loop {
+            if st.shutdown {
+                return Err(AdmissionError::ShuttingDown);
+            }
+            if st.pending.len() < self.capacity {
+                return Ok(self.admit_locked(&mut st, req.op, req.deadline, req.priority));
+            }
+            st = wait_or_poisoned(&self.space_cv, st, "service queue");
+        }
+    }
+
+    /// Block until work is available (or shutdown) and carve one
+    /// execution batch: EDF order, cut at `max_macs` cumulative MAC
+    /// volume (always at least one request) and `max_ops` requests.
+    /// Returns `None` only when the queue is shut down **and** fully
+    /// drained, so no admitted ticket is ever abandoned.
+    pub(crate) fn pop_batch(&self, max_macs: usize, max_ops: usize) -> Option<Vec<Pending>> {
+        let mut st = lock_or_poisoned(&self.state, "service queue");
+        loop {
+            let runnable = !st.pending.is_empty() && (!st.paused || st.shutdown);
+            if runnable {
+                break;
+            }
+            if st.shutdown && st.pending.is_empty() {
+                return None;
+            }
+            st = wait_or_poisoned(&self.work_cv, st, "service queue");
+        }
+        let mut order: Vec<usize> = (0..st.pending.len()).collect();
+        order.sort_by_key(|&i| st.pending[i].edf_key());
+        let mut rank = vec![usize::MAX; st.pending.len()];
+        let mut budget = 0usize;
+        let mut taken = 0usize;
+        for &i in &order {
+            if taken >= max_ops.max(1) {
+                break;
+            }
+            let macs = st.pending[i].macs;
+            if taken > 0 && budget.saturating_add(macs) > max_macs {
+                break;
+            }
+            budget = budget.saturating_add(macs);
+            rank[i] = taken;
+            taken += 1;
+        }
+        let mut batch: Vec<Option<Pending>> = (0..taken).map(|_| None).collect();
+        let mut rest = Vec::with_capacity(st.pending.len() - taken);
+        for (i, p) in std::mem::take(&mut st.pending).into_iter().enumerate() {
+            match rank[i] {
+                usize::MAX => rest.push(p),
+                r => batch[r] = Some(p),
+            }
+        }
+        st.pending = rest;
+        drop(st);
+        self.space_cv.notify_all();
+        Some(batch.into_iter().map(|p| p.expect("rank fully assigned")).collect())
+    }
+
+    /// Begin shutdown: new admissions fail, the scheduler drains what
+    /// is already admitted (ignoring pause) and then stops.
+    pub(crate) fn shutdown(&self) {
+        let mut st = lock_or_poisoned(&self.state, "service queue");
+        st.shutdown = true;
+        drop(st);
+        self.work_cv.notify_all();
+        self.space_cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::BlockFormat;
+    use std::sync::Arc;
+
+    fn op(m: usize, k: usize, n: usize) -> OwnedGemmOp {
+        let x = Arc::new(Mat::zeros(m, k));
+        let w = Arc::new(Mat::zeros(k, n));
+        OwnedGemmOp::new(x, w, BlockFormat::new(4, 16).unwrap()).unwrap()
+    }
+
+    fn req(m: usize) -> GemmRequest {
+        GemmRequest::new(op(m, 16, 2))
+    }
+
+    #[test]
+    fn bounded_push_reports_queue_full() {
+        let q = SubmitQueue::new(2);
+        q.push(req(1)).unwrap();
+        q.push(req(2)).unwrap();
+        match q.push(req(3)) {
+            Err(AdmissionError::QueueFull { capacity: 2 }) => {}
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.peak_depth(), 2);
+    }
+
+    #[test]
+    fn pop_batch_is_edf_within_priority_under_mac_budget() {
+        let q = SubmitQueue::new(16);
+        // Bulk with the earliest deadline, then interactive requests
+        // with deadlines out of submission order, then one with none.
+        q.push(req(1).with_priority(Priority::Bulk).with_deadline(Duration::from_millis(1)))
+            .unwrap();
+        q.push(
+            req(2)
+                .with_priority(Priority::Interactive)
+                .with_deadline(Duration::from_millis(500)),
+        )
+        .unwrap();
+        q.push(
+            req(3)
+                .with_priority(Priority::Interactive)
+                .with_deadline(Duration::from_millis(100)),
+        )
+        .unwrap();
+        q.push(req(4).with_priority(Priority::Interactive)).unwrap();
+        let batch = q.pop_batch(usize::MAX, 16).unwrap();
+        let rows: Vec<usize> = batch.iter().map(|p| p.op.x.rows).collect();
+        // Interactive first (EDF: 3 before 2, no-deadline 4 last), the
+        // bulk request last despite holding the earliest deadline.
+        assert_eq!(rows, vec![3, 2, 4, 1]);
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn mac_budget_cuts_batches_but_never_starves() {
+        let q = SubmitQueue::new(16);
+        for m in [8usize, 8, 8] {
+            q.push(req(m)).unwrap();
+        }
+        // Each op is 8 * 2 * 16 = 256 MACs; a 300-MAC budget takes one.
+        let b1 = q.pop_batch(300, 16).unwrap();
+        assert_eq!(b1.len(), 1);
+        // A budget smaller than any single op still takes one (progress
+        // guarantee), never zero.
+        let b2 = q.pop_batch(1, 16).unwrap();
+        assert_eq!(b2.len(), 1);
+        let b3 = q.pop_batch(usize::MAX, 16).unwrap();
+        assert_eq!(b3.len(), 1);
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn shutdown_drains_then_stops() {
+        let q = SubmitQueue::new(4);
+        q.push(req(1)).unwrap();
+        q.shutdown();
+        assert!(matches!(q.push(req(2)), Err(AdmissionError::ShuttingDown)));
+        // Already-admitted work still comes out...
+        assert_eq!(q.pop_batch(usize::MAX, 16).unwrap().len(), 1);
+        // ...then the queue reports done instead of blocking.
+        assert!(q.pop_batch(usize::MAX, 16).is_none());
+    }
+
+    #[test]
+    fn ticket_take_once_semantics() {
+        let inner = TicketInner::new();
+        let t = Ticket::from_inner(Arc::clone(&inner));
+        assert!(!t.poll());
+        assert!(t.wait_deadline(Duration::from_millis(1)).is_none());
+        inner.fulfill(Ok(GemmResponse {
+            out: Mat::zeros(1, 1),
+            queue_ms: 0.1,
+            total_ms: 0.2,
+            deadline_missed: false,
+        }));
+        assert!(t.poll());
+        let resp = t.wait().unwrap();
+        assert_eq!((resp.out.rows, resp.out.cols), (1, 1));
+        assert!(!resp.deadline_missed);
+        // Second take reports the result as gone (still "ready").
+        assert!(t.poll());
+        assert!(t.wait().is_err());
+        assert!(t.wait_deadline(Duration::from_millis(1)).unwrap().is_err());
+    }
+}

@@ -1,5 +1,15 @@
-//! `BatchGemm` — the batched/sharded GEMM scheduler of the execution
-//! runtime.
+//! `BatchGemm` — the batched/sharded GEMM **execution stage** of the
+//! execution runtime.
+//!
+//! Since PR 3 this is the internal stage the async
+//! [`super::service::BfpService`] drives: the service's admission loop
+//! forms deadline-aware, MAC-budgeted batches of [`OwnedGemmOp`]s and
+//! hands each batch to [`BatchGemm::run`]. The `run` entry point is
+//! kept public as a **thin synchronous facade** (tests, benches, and
+//! embedders that want batch-at-a-time semantics); new consumers should
+//! migrate to [`super::service::BfpService::submit`], which adds
+//! backpressure, deadlines, and cross-batch pipelining on top of the
+//! same execution stage.
 //!
 //! A serving workload is a stream of heterogeneous `(A, B, format)`
 //! multiplies. Running them one `gemm_packed` call at a time leaves the
@@ -21,7 +31,9 @@
 //! accumulated by exactly one band job in ascending block order, so any
 //! shard size, any pool width, and any batch ordering produce results
 //! bit-identical to per-op [`crate::bfp::hbfp_gemm_scalar`] — the
-//! invariant `tests/property_exec.rs` pins.
+//! invariant `tests/property_exec.rs` and `tests/property_service.rs`
+//! pin. The service may *reorder execution* across batches; it can
+//! never reorder accumulation within an op.
 
 use super::pool::Job;
 use super::ExecRuntime;
@@ -30,13 +42,48 @@ use crate::bfp::{BfpMatrix, BlockFormat, Mat, Quantizer};
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
-/// One GEMM in a batch: `x (m x K)` times `w (K x n)` with both
-/// operands quantized to `fmt` (nearest rounding — the deterministic
-/// forward-pass transform, required for operand caching).
-pub struct GemmOp<'a> {
-    pub x: &'a Mat,
-    pub w: &'a Mat,
+/// One GEMM: `x (m x K)` times `w (K x n)` with both operands quantized
+/// to `fmt` (nearest rounding — the deterministic forward-pass
+/// transform, required for operand caching).
+///
+/// Operands are **owned** (`Arc<Mat>`), so an op can cross threads,
+/// outlive its submitting frame, and share a weight matrix across many
+/// requests without copying — the contract the async
+/// [`super::service::BfpService`] needs. (The pre-service `GemmOp<'a>`
+/// borrowed its operands and could not leave the caller's stack; those
+/// `&'a` borrows are gone.)
+#[derive(Clone)]
+pub struct OwnedGemmOp {
+    pub x: Arc<Mat>,
+    pub w: Arc<Mat>,
     pub fmt: BlockFormat,
+}
+
+impl OwnedGemmOp {
+    /// Build an op, validating the contraction dims up front (the
+    /// service rejects malformed ops at admission, not mid-batch).
+    pub fn new(x: Arc<Mat>, w: Arc<Mat>, fmt: BlockFormat) -> Result<Self> {
+        if x.cols != w.rows {
+            bail!("inner dims {} vs {} do not contract", x.cols, w.rows);
+        }
+        Ok(Self { x, w, fmt })
+    }
+
+    /// Convenience for callers that hold plain `&Mat`s: copies both
+    /// operands into fresh `Arc`s. Callers with long-lived weights
+    /// should hold `Arc<Mat>` themselves and use [`OwnedGemmOp::new`].
+    pub fn from_mats(x: &Mat, w: &Mat, fmt: BlockFormat) -> Result<Self> {
+        Self::new(Arc::new(x.clone()), Arc::new(w.clone()), fmt)
+    }
+
+    /// MAC volume of this op (saturating) — the unit of the service's
+    /// per-batch admission budget.
+    pub fn macs(&self) -> usize {
+        self.x
+            .rows
+            .saturating_mul(self.w.cols)
+            .saturating_mul(self.x.cols)
+    }
 }
 
 /// Batched GEMM executor over an [`ExecRuntime`] (see module docs).
@@ -71,7 +118,13 @@ impl<'rt> BatchGemm<'rt> {
     }
 
     /// Execute the batch; `out[i]` corresponds to `ops[i]`.
-    pub fn run(&self, ops: &[GemmOp<'_>]) -> Result<Vec<Mat>> {
+    ///
+    /// This is the **synchronous facade** over the execution stage: the
+    /// caller blocks for the whole batch. It is what the
+    /// [`super::service::BfpService`] scheduler thread calls internally;
+    /// request-level consumers should migrate to `BfpService::submit`,
+    /// which pipelines batches and adds deadlines and backpressure.
+    pub fn run(&self, ops: &[OwnedGemmOp]) -> Result<Vec<Mat>> {
         for (i, op) in ops.iter().enumerate() {
             if op.x.cols != op.w.rows {
                 bail!(
@@ -111,13 +164,13 @@ impl<'rt> BatchGemm<'rt> {
         let mut ws: Vec<Arc<BfpMatrix>> = Vec::with_capacity(ops.len());
         for (i, op) in ops.iter().enumerate() {
             let enc = if self.cache_weights {
-                self.rt.encode_transposed_cached(op.w, op.fmt)
+                self.rt.encode_transposed_cached(op.w.as_ref(), op.fmt)
             } else {
                 let mut fresh = BfpMatrix::empty();
                 fresh
                     .encode_transposed_on(
                         self.rt.pool(),
-                        op.w,
+                        op.w.as_ref(),
                         op.fmt,
                         Quantizer::nearest(op.fmt.mantissa_bits),
                     )
@@ -132,17 +185,18 @@ impl<'rt> BatchGemm<'rt> {
             .zip(&ws)
             .map(|(x, w)| (band_shifts(x), band_shifts(w)))
             .collect();
-        let mut outs: Vec<Mat> = ops.iter().map(|op| Mat::zeros(op.x.rows, op.w.cols)).collect();
+        let mut outs: Vec<Mat> = ops
+            .iter()
+            .map(|op| Mat::zeros(op.x.rows, op.w.cols))
+            .collect();
         let threads = self.rt.pool().threads();
         let total_macs: usize = ops
             .iter()
-            .map(|op| op.x.rows.saturating_mul(op.w.cols).saturating_mul(op.x.cols))
+            .map(OwnedGemmOp::macs)
             .fold(0usize, usize::saturating_add);
         let kernel = active_kernel();
         let mut jobs: Vec<Job> = Vec::new();
-        for (((out, xp), wp), (xsh, wsh)) in
-            outs.iter_mut().zip(&xs).zip(&ws).zip(&shifts)
-        {
+        for (((out, xp), wp), (xsh, wsh)) in outs.iter_mut().zip(&xs).zip(&ws).zip(&shifts) {
             let (m, n) = (xp.rows, wp.rows);
             if m == 0 || n == 0 {
                 continue;
@@ -193,19 +247,33 @@ mod tests {
     use crate::bfp::hbfp_gemm_scalar;
     use crate::util::Rng;
 
-    fn randmat(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
-        Mat::new(
-            rows,
-            cols,
-            (0..rows * cols).map(|_| rng.normal_scaled(1.0)).collect(),
+    fn randmat(rng: &mut Rng, rows: usize, cols: usize) -> Arc<Mat> {
+        Arc::new(
+            Mat::new(
+                rows,
+                cols,
+                (0..rows * cols).map(|_| rng.normal_scaled(1.0)).collect(),
+            )
+            .unwrap(),
         )
-        .unwrap()
     }
 
     #[test]
     fn empty_batch_is_empty() {
         let rt = ExecRuntime::with_threads(2);
         assert!(BatchGemm::new(&rt).run(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn owned_op_validates_and_reports_macs() {
+        let mut rng = Rng::new(6);
+        let x = randmat(&mut rng, 2, 8);
+        let w = randmat(&mut rng, 8, 3);
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        let op = OwnedGemmOp::new(Arc::clone(&x), Arc::clone(&w), fmt).unwrap();
+        assert_eq!(op.macs(), 2 * 3 * 8);
+        let bad = randmat(&mut rng, 9, 3);
+        assert!(OwnedGemmOp::new(x, bad, fmt).is_err());
     }
 
     #[test]
@@ -216,10 +284,16 @@ mod tests {
         let w_ok = randmat(&mut rng, 8, 3);
         let w_bad = randmat(&mut rng, 9, 3);
         let fmt = BlockFormat::new(4, 16).unwrap();
+        // Struct-literal construction bypasses `new`'s validation; `run`
+        // still catches it and names the op.
         let err = BatchGemm::new(&rt)
             .run(&[
-                GemmOp { x: &a, w: &w_ok, fmt },
-                GemmOp { x: &a, w: &w_bad, fmt },
+                OwnedGemmOp {
+                    x: Arc::clone(&a),
+                    w: w_ok,
+                    fmt,
+                },
+                OwnedGemmOp { x: a, w: w_bad, fmt },
             ])
             .unwrap_err();
         assert!(err.to_string().contains("op 1"), "{err}");
@@ -230,22 +304,22 @@ mod tests {
         let rt = ExecRuntime::with_threads(3);
         let mut rng = Rng::new(0xBA7);
         // Mixed shapes, formats, and plane dtypes (m=12 -> i16).
-        let cases = [(4u32, 16usize, 5usize, 40, 7), (6, 64, 9, 130, 4), (12, 16, 3, 33, 6)];
-        let mats: Vec<(Mat, Mat, BlockFormat)> = cases
+        let cases = [
+            (4u32, 16usize, 5usize, 40, 7),
+            (6, 64, 9, 130, 4),
+            (12, 16, 3, 33, 6),
+        ];
+        let ops: Vec<OwnedGemmOp> = cases
             .iter()
             .map(|&(m, b, r, k, c)| {
                 let fmt = BlockFormat::new(m, b).unwrap();
-                (randmat(&mut rng, r, k), randmat(&mut rng, k, c), fmt)
+                OwnedGemmOp::new(randmat(&mut rng, r, k), randmat(&mut rng, k, c), fmt).unwrap()
             })
-            .collect();
-        let ops: Vec<GemmOp> = mats
-            .iter()
-            .map(|(x, w, fmt)| GemmOp { x, w, fmt: *fmt })
             .collect();
         let outs = BatchGemm::new(&rt).run(&ops).unwrap();
         assert_eq!(outs.len(), ops.len());
-        for (i, ((x, w, fmt), got)) in mats.iter().zip(&outs).enumerate() {
-            let want = hbfp_gemm_scalar(x, w, *fmt).unwrap();
+        for (i, (op, got)) in ops.iter().zip(&outs).enumerate() {
+            let want = hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap();
             assert_eq!((got.rows, got.cols), (want.rows, want.cols), "op {i}");
             for (g, s) in got.data.iter().zip(&want.data) {
                 assert_eq!(g.to_bits(), s.to_bits(), "op {i}");
@@ -260,15 +334,14 @@ mod tests {
         let fmt = BlockFormat::new(4, 64).unwrap();
         let x = randmat(&mut rng, 23, 100);
         let w = randmat(&mut rng, 100, 11);
-        let base = BatchGemm::new(&rt)
-            .run(&[GemmOp { x: &x, w: &w, fmt }])
-            .unwrap();
+        let op = OwnedGemmOp::new(x, w, fmt).unwrap();
+        let base = BatchGemm::new(&rt).run(std::slice::from_ref(&op)).unwrap();
         for band in [1usize, 4, 1000] {
             for cached in [true, false] {
                 let got = BatchGemm::new(&rt)
                     .band_rows(band)
                     .cache_weights(cached)
-                    .run(&[GemmOp { x: &x, w: &w, fmt }])
+                    .run(std::slice::from_ref(&op))
                     .unwrap();
                 for (g, b) in got[0].data.iter().zip(&base[0].data) {
                     assert_eq!(g.to_bits(), b.to_bits(), "band {band} cached {cached}");
@@ -286,8 +359,8 @@ mod tests {
         let x1 = randmat(&mut rng, 4, 32);
         let x2 = randmat(&mut rng, 6, 32);
         let ops = [
-            GemmOp { x: &x1, w: &w, fmt },
-            GemmOp { x: &x2, w: &w, fmt },
+            OwnedGemmOp::new(x1, Arc::clone(&w), fmt).unwrap(),
+            OwnedGemmOp::new(x2, w, fmt).unwrap(),
         ];
         BatchGemm::new(&rt).run(&ops).unwrap();
         BatchGemm::new(&rt).run(&ops).unwrap();

@@ -1,0 +1,483 @@
+//! `BfpService` — the asynchronous front door of the BFP execution
+//! runtime.
+//!
+//! PR 2's [`super::BatchGemm`] made heterogeneous GEMM batches cheap,
+//! but its blocking `run(&[ops])` call couples batch formation to the
+//! caller: requests arriving while a batch is in flight wait at the
+//! API boundary, and every caller must assemble its own batches. The
+//! service moves batch formation off the caller's critical path — the
+//! same shape as the paper's own host/accelerator split, where the FP
+//! exponent management runs asynchronously off the fixed-point MAC
+//! datapath.
+//!
+//! # Architecture
+//!
+//! ```text
+//! submit(GemmRequest) ─▶ SubmitQueue (bounded, QoS-aware) ─▶ scheduler thread
+//!        │                                                      │ EDF + MAC-budget batch
+//!      Ticket ◀──────────── fulfill ◀── BatchGemm (execution stage, worker pool)
+//! ```
+//!
+//! * [`BfpService::submit`] is **non-blocking**: it validates the op,
+//!   stamps the QoS envelope ([`Priority`], optional deadline), and
+//!   either admits the request or returns a typed [`AdmissionError`]
+//!   (`QueueFull` is the backpressure signal — no hidden waiting).
+//! * A dedicated **scheduler thread** drains the queue, forming
+//!   earliest-deadline-first batches within a MAC budget
+//!   ([`ServiceConfig`]), and drives the [`super::BatchGemm`] execution
+//!   stage on the shared worker pool.
+//! * Callers hold a [`Ticket`] (`poll` / `wait` / `wait_deadline`) and
+//!   receive a [`GemmResponse`] carrying the result plus observed
+//!   queue/total latency and the deadline-miss flag.
+//!
+//! # Determinism
+//!
+//! Admission order, priorities, deadlines, pauses, and batch cuts
+//! decide *when* an op executes, never *what* it computes: every batch
+//! runs the bit-deterministic execution stage, so results are
+//! bit-identical to [`crate::bfp::hbfp_gemm_scalar`] across thread
+//! counts, arrival orders, and batch boundaries
+//! (`tests/property_service.rs`).
+//!
+//! # Sessions
+//!
+//! Synchronous consumers ([`crate::bfp::hbfp_gemm`],
+//! [`crate::bfp::dequant_gemm`], the Trainer's host-BFP weight store)
+//! go through a [`ServiceSession`] — a labeled handle that submits with
+//! blocking admission (those APIs were blocking contracts already) and
+//! exposes the runtime's operand cache for encode-only paths.
+
+use super::queue::{
+    AdmissionError, GemmRequest, GemmResponse, Pending, Priority, SubmitQueue, Ticket,
+};
+use super::scheduler::{BatchGemm, OwnedGemmOp};
+use super::ExecRuntime;
+use crate::bfp::{BfpMatrix, BlockFormat, Mat};
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Admission-loop knobs. The defaults suit the serve-sim workload
+/// shapes; embedders with very large or very small ops should scale
+/// `max_batch_macs` with them.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceConfig {
+    /// Bounded-queue capacity; beyond it `submit` returns
+    /// [`AdmissionError::QueueFull`].
+    pub queue_capacity: usize,
+    /// Max requests fused into one execution batch.
+    pub max_batch_ops: usize,
+    /// Max cumulative MAC volume per batch (a single larger op still
+    /// runs alone — the budget cuts batches, it never starves ops).
+    pub max_batch_macs: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            queue_capacity: 256,
+            max_batch_ops: 64,
+            max_batch_macs: 1 << 26,
+        }
+    }
+}
+
+#[derive(Default)]
+struct ServiceCounters {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    rejected: AtomicU64,
+    deadline_missed: AtomicU64,
+    batches: AtomicU64,
+}
+
+/// Counter snapshot of one service (see
+/// [`crate::metrics::exec_service_snapshot`] for the global one).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Requests admitted into the queue.
+    pub submitted: u64,
+    /// Requests fulfilled with a result.
+    pub completed: u64,
+    /// Requests fulfilled with an execution error.
+    pub failed: u64,
+    /// Requests turned away at admission (`QueueFull`).
+    pub rejected: u64,
+    /// Fulfilled requests that finished after their deadline.
+    pub deadline_missed: u64,
+    /// Execution batches formed by the admission loop.
+    pub batches: u64,
+    /// Requests pending right now.
+    pub queue_depth: usize,
+    /// High-water mark of the pending queue.
+    pub peak_queue_depth: usize,
+}
+
+impl ServiceStats {
+    /// Deadline-miss rate over fulfilled requests (0.0 when none had
+    /// finished yet).
+    pub fn miss_rate(&self) -> f64 {
+        let done = self.completed + self.failed;
+        if done == 0 {
+            0.0
+        } else {
+            self.deadline_missed as f64 / done as f64
+        }
+    }
+}
+
+/// The asynchronous BFP execution service (see module docs).
+pub struct BfpService {
+    rt: Arc<ExecRuntime>,
+    queue: Arc<SubmitQueue>,
+    counters: Arc<ServiceCounters>,
+    scheduler: Option<JoinHandle<()>>,
+}
+
+impl BfpService {
+    /// Spawn a service (and its scheduler thread) over `rt`. The
+    /// runtime is shared: the service's batches, direct `BatchGemm`
+    /// users, and encode-only consumers all see one pool and one
+    /// operand cache.
+    pub fn new(rt: Arc<ExecRuntime>, cfg: ServiceConfig) -> Self {
+        let queue = Arc::new(SubmitQueue::new(cfg.queue_capacity));
+        let counters = Arc::new(ServiceCounters::default());
+        let scheduler = {
+            let rt = Arc::clone(&rt);
+            let queue = Arc::clone(&queue);
+            let counters = Arc::clone(&counters);
+            std::thread::Builder::new()
+                .name("bfp-service-sched".into())
+                .spawn(move || scheduler_loop(&rt, &queue, &counters, cfg))
+                .expect("spawn service scheduler thread")
+        };
+        Self {
+            rt,
+            queue,
+            counters,
+            scheduler: Some(scheduler),
+        }
+    }
+
+    /// A service with default config over a private runtime — test and
+    /// embedder convenience.
+    pub fn with_threads(threads: usize) -> Self {
+        Self::new(
+            Arc::new(ExecRuntime::with_threads(threads)),
+            ServiceConfig::default(),
+        )
+    }
+
+    /// The shared runtime (pool + operand cache) this service executes
+    /// on.
+    pub fn runtime(&self) -> &ExecRuntime {
+        &self.rt
+    }
+
+    /// **Non-blocking** admission: validate, stamp QoS, enqueue. A full
+    /// queue or shutdown returns the typed [`AdmissionError`]
+    /// immediately — the caller, not the service, decides how to shed
+    /// load.
+    pub fn submit(&self, req: GemmRequest) -> Result<Ticket, AdmissionError> {
+        self.validate(&req)?;
+        match self.queue.push(req) {
+            Ok(inner) => {
+                self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(Ticket::from_inner(inner))
+            }
+            Err(e) => {
+                if matches!(e, AdmissionError::QueueFull { .. }) {
+                    self.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Blocking admission for synchronous facades: waits for queue
+    /// space instead of returning `QueueFull` (errors only on shutdown
+    /// or invalid shape).
+    pub fn submit_blocking(&self, req: GemmRequest) -> Result<Ticket, AdmissionError> {
+        self.validate(&req)?;
+        let inner = self.queue.push_blocking(req)?;
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(Ticket::from_inner(inner))
+    }
+
+    fn validate(&self, req: &GemmRequest) -> Result<(), AdmissionError> {
+        let (x, w) = (&req.op.x, &req.op.w);
+        if x.cols != w.rows {
+            return Err(AdmissionError::InvalidShape {
+                reason: format!("inner dims {} vs {} do not contract", x.cols, w.rows),
+            });
+        }
+        Ok(())
+    }
+
+    /// Labeled synchronous handle for consumers migrating from the
+    /// blocking PR-2 API (see module docs).
+    pub fn session(&self, label: &'static str) -> ServiceSession<'_> {
+        ServiceSession { svc: self, label }
+    }
+
+    /// Counter snapshot (cumulative for this service's lifetime).
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            submitted: self.counters.submitted.load(Ordering::Relaxed),
+            completed: self.counters.completed.load(Ordering::Relaxed),
+            failed: self.counters.failed.load(Ordering::Relaxed),
+            rejected: self.counters.rejected.load(Ordering::Relaxed),
+            deadline_missed: self.counters.deadline_missed.load(Ordering::Relaxed),
+            batches: self.counters.batches.load(Ordering::Relaxed),
+            queue_depth: self.queue.depth(),
+            peak_queue_depth: self.queue.peak_depth(),
+        }
+    }
+
+    /// Queue capacity this service admits up to.
+    pub fn queue_capacity(&self) -> usize {
+        self.queue.capacity()
+    }
+
+    /// Stop the admission loop from forming batches. Admission itself
+    /// stays open, so the bounded queue fills — the deterministic way
+    /// to probe backpressure (tests) or to quiesce execution before a
+    /// reconfiguration.
+    pub fn pause(&self) {
+        self.queue.set_paused(true);
+    }
+
+    /// Resume batch formation after [`BfpService::pause`].
+    pub fn resume(&self) {
+        self.queue.set_paused(false);
+    }
+}
+
+impl Drop for BfpService {
+    /// Graceful drain: admission closes, everything already admitted is
+    /// executed and fulfilled (a pause is overridden — no ticket is
+    /// ever abandoned), then the scheduler thread is joined.
+    fn drop(&mut self) {
+        self.queue.shutdown();
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn scheduler_loop(
+    rt: &ExecRuntime,
+    queue: &SubmitQueue,
+    counters: &ServiceCounters,
+    cfg: ServiceConfig,
+) {
+    while let Some(batch) = queue.pop_batch(cfg.max_batch_macs, cfg.max_batch_ops) {
+        counters.batches.fetch_add(1, Ordering::Relaxed);
+        let started = Instant::now();
+        let ops: Vec<OwnedGemmOp> = batch.iter().map(|p| p.op.clone()).collect();
+        match BatchGemm::new(rt).run(&ops) {
+            Ok(outs) => {
+                for (p, out) in batch.into_iter().zip(outs) {
+                    fulfill(p, Ok(out), started, counters);
+                }
+            }
+            Err(_) => {
+                // A batch-level failure must not poison neighbors that
+                // would succeed alone: retry each op by itself and give
+                // every ticket its own verdict.
+                for p in batch {
+                    let one = BatchGemm::new(rt)
+                        .run(std::slice::from_ref(&p.op))
+                        .map(|mut outs| outs.remove(0));
+                    fulfill(p, one, started, counters);
+                }
+            }
+        }
+    }
+}
+
+fn fulfill(p: Pending, result: Result<Mat>, started: Instant, counters: &ServiceCounters) {
+    let now = Instant::now();
+    let missed = p.deadline_at.map(|d| now > d).unwrap_or(false);
+    if missed {
+        counters.deadline_missed.fetch_add(1, Ordering::Relaxed);
+    }
+    match &result {
+        Ok(_) => counters.completed.fetch_add(1, Ordering::Relaxed),
+        Err(_) => counters.failed.fetch_add(1, Ordering::Relaxed),
+    };
+    let queue_ms = started.saturating_duration_since(p.submitted_at).as_secs_f64() * 1e3;
+    let total_ms = now.saturating_duration_since(p.submitted_at).as_secs_f64() * 1e3;
+    p.ticket.fulfill(result.map(|out| GemmResponse {
+        out,
+        queue_ms,
+        total_ms,
+        deadline_missed: missed,
+    }));
+}
+
+/// A labeled synchronous handle onto a [`BfpService`] — the migration
+/// path for PR-2's blocking consumers. GEMMs go through the full
+/// admission loop (blocking admission: these were blocking APIs);
+/// encode-only paths reach the shared operand cache directly.
+pub struct ServiceSession<'s> {
+    svc: &'s BfpService,
+    label: &'static str,
+}
+
+impl ServiceSession<'_> {
+    pub fn label(&self) -> &'static str {
+        self.label
+    }
+
+    /// The shared runtime, for encode-only consumers
+    /// (`quantize_params_packed_cached`, analysis sweeps).
+    pub fn runtime(&self) -> &ExecRuntime {
+        self.svc.runtime()
+    }
+
+    /// Submit one GEMM through the service and wait for it: the
+    /// synchronous `hbfp_gemm` contract over the asynchronous path.
+    /// Operands are copied into owned form; hold `Arc<Mat>`s and use
+    /// [`BfpService::submit`] directly to avoid the copies.
+    pub fn gemm(&self, x: &Mat, w: &Mat, fmt: BlockFormat) -> Result<Mat> {
+        let op = OwnedGemmOp::from_mats(x, w, fmt)?;
+        let ticket = self
+            .svc
+            .submit_blocking(GemmRequest::new(op).with_priority(Priority::Bulk))
+            .with_context(|| format!("session {:?}: admission failed", self.label))?;
+        ticket
+            .wait()
+            .map(|resp| resp.out)
+            .with_context(|| format!("session {:?}: execution failed", self.label))
+    }
+
+    /// Column-encode `w` through the shared operand cache (weight-side
+    /// layout, nearest rounding — the cacheable transform).
+    pub fn encode_transposed_cached(&self, w: &Mat, fmt: BlockFormat) -> Result<Arc<BfpMatrix>> {
+        self.runtime().encode_transposed_cached(w, fmt)
+    }
+}
+
+static SERVICE: OnceLock<BfpService> = OnceLock::new();
+
+/// The process-wide service over the global [`ExecRuntime`] (created on
+/// first use; its scheduler thread lives for the rest of the process).
+pub fn global() -> &'static BfpService {
+    SERVICE.get_or_init(|| BfpService::new(super::global_arc(), ServiceConfig::default()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::hbfp_gemm_scalar;
+    use crate::util::Rng;
+    use std::time::Duration;
+
+    fn randmat(rng: &mut Rng, rows: usize, cols: usize) -> Arc<Mat> {
+        Arc::new(
+            Mat::new(
+                rows,
+                cols,
+                (0..rows * cols).map(|_| rng.normal_scaled(1.0)).collect(),
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn submit_wait_roundtrip_matches_scalar() {
+        let svc = BfpService::with_threads(2);
+        let mut rng = Rng::new(0x5E21);
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        let x = randmat(&mut rng, 5, 40);
+        let w = randmat(&mut rng, 40, 7);
+        let op = OwnedGemmOp::new(Arc::clone(&x), Arc::clone(&w), fmt).unwrap();
+        let ticket = svc
+            .submit(GemmRequest::new(op).with_deadline(Duration::from_secs(60)))
+            .unwrap();
+        let resp = ticket.wait().unwrap();
+        let want = hbfp_gemm_scalar(&x, &w, fmt).unwrap();
+        assert_eq!((resp.out.rows, resp.out.cols), (want.rows, want.cols));
+        for (g, s) in resp.out.data.iter().zip(&want.data) {
+            assert_eq!(g.to_bits(), s.to_bits());
+        }
+        assert!(!resp.deadline_missed);
+        assert!(resp.total_ms >= resp.queue_ms);
+        let stats = svc.stats();
+        assert_eq!((stats.submitted, stats.completed), (1, 1));
+        assert_eq!(stats.deadline_missed, 0);
+    }
+
+    #[test]
+    fn invalid_shape_rejected_at_admission() {
+        let svc = BfpService::with_threads(1);
+        let mut rng = Rng::new(0xBAD);
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        // Bypass OwnedGemmOp::new's validation via the struct literal.
+        let op = OwnedGemmOp {
+            x: randmat(&mut rng, 2, 8),
+            w: randmat(&mut rng, 9, 3),
+            fmt,
+        };
+        match svc.submit(GemmRequest::new(op)) {
+            Err(AdmissionError::InvalidShape { reason }) => {
+                assert!(reason.contains("8"), "{reason}");
+            }
+            other => panic!("expected InvalidShape, got {other:?}"),
+        }
+        assert_eq!(svc.stats().submitted, 0);
+    }
+
+    #[test]
+    fn session_gemm_is_bit_identical_to_scalar() {
+        let svc = BfpService::with_threads(2);
+        let sess = svc.session("unit test");
+        assert_eq!(sess.label(), "unit test");
+        let mut rng = Rng::new(0x5E55);
+        let fmt = BlockFormat::new(6, 64).unwrap();
+        let x = randmat(&mut rng, 4, 130);
+        let w = randmat(&mut rng, 130, 9);
+        let got = sess.gemm(&x, &w, fmt).unwrap();
+        let want = hbfp_gemm_scalar(&x, &w, fmt).unwrap();
+        for (g, s) in got.data.iter().zip(&want.data) {
+            assert_eq!(g.to_bits(), s.to_bits());
+        }
+    }
+
+    #[test]
+    fn drop_drains_admitted_work() {
+        let svc = BfpService::with_threads(2);
+        svc.pause();
+        let mut rng = Rng::new(0xD2A1);
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|_| {
+                let op = OwnedGemmOp::new(
+                    randmat(&mut rng, 3, 32),
+                    randmat(&mut rng, 32, 4),
+                    fmt,
+                )
+                .unwrap();
+                svc.submit(GemmRequest::new(op)).unwrap()
+            })
+            .collect();
+        // Still paused — nothing fulfilled yet; drop must drain anyway.
+        drop(svc);
+        for t in &tickets {
+            assert!(t.poll(), "drop must fulfill every admitted ticket");
+            assert!(t.wait().is_ok());
+        }
+    }
+
+    #[test]
+    fn global_service_is_singleton() {
+        let a = global() as *const BfpService;
+        let b = global() as *const BfpService;
+        assert_eq!(a, b);
+        assert!(global().queue_capacity() >= 1);
+    }
+}

@@ -1,37 +1,88 @@
 //! `repro serve-sim` — synthetic serving workload over the execution
-//! runtime.
+//! service.
 //!
 //! Replays a deterministic stream of mixed-size GEMM requests (random
 //! activation heights against a fixed working set of weight matrices in
-//! several HBFP formats) through [`BatchGemm`], batch by batch, and
-//! reports throughput, batch-attributed latency percentiles, and the
-//! operand-cache counters. This is the north-star serving shape in
-//! miniature: heterogeneous ops sharded across the persistent pool,
-//! weights encoded once and reused across the whole stream.
+//! several HBFP formats) in one of two modes:
+//!
+//! * **sync** (`ServeMode::Sync`, the PR-2 shape): requests are chunked
+//!   into fixed batches and pushed through the blocking [`BatchGemm`]
+//!   facade, batch by batch — closed-loop, batch-attributed latency.
+//! * **async** (`ServeMode::Async`, `--async`): an **open-loop** client
+//!   submits through [`BfpService::submit`] at Poisson arrival times
+//!   (`offered_rps`), each request carrying a deadline; the service's
+//!   admission loop forms deadline-aware batches on its own thread.
+//!   Reported: achieved throughput, per-request p50/p95/p99 latency,
+//!   deadline-miss rate, admission rejections (queue full = shed load),
+//!   and queue-depth high-water mark.
 //!
 //! With `verify` on (the `quick` preset default, used by the CI smoke
-//! step), a sample of responses is checked **bit-for-bit** against the
+//! steps), a sample of responses is checked **bit-for-bit** against the
 //! scalar reference [`hbfp_gemm_scalar`], so the smoke run doubles as
-//! an end-to-end integration check of pool + cache + scheduler.
+//! an end-to-end integration check of queue + scheduler thread + pool +
+//! cache — including the invariant that asynchronous admission reorders
+//! execution but never numerics.
+//!
+//! With a JSON sink configured (`--json PATH` or `REPRO_BENCH_JSON`),
+//! the metrics are additionally written as a `BENCH_serve.json`-style
+//! artifact for the bench trajectory.
 
 use crate::bfp::{hbfp_gemm_scalar, BlockFormat, Mat};
-use crate::exec::{BatchGemm, CacheStats, ExecRuntime, GemmOp};
+use crate::exec::{
+    AdmissionError, BatchGemm, BfpService, CacheStats, ExecRuntime, GemmRequest, OwnedGemmOp,
+    Priority, ServiceConfig, ServiceStats,
+};
 use crate::report::Table;
-use crate::util::{Rng, Stopwatch};
-use anyhow::{ensure, Result};
+use crate::util::{Json, Rng, Stopwatch};
+use anyhow::{ensure, Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Submission discipline of the simulated client (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeMode {
+    Sync,
+    Async,
+}
+
+impl ServeMode {
+    fn label(self) -> &'static str {
+        match self {
+            ServeMode::Sync => "sync (blocking BatchGemm facade)",
+            ServeMode::Async => "async (BfpService open loop)",
+        }
+    }
+
+    fn json_tag(self) -> &'static str {
+        match self {
+            ServeMode::Sync => "sync",
+            ServeMode::Async => "async",
+        }
+    }
+}
 
 /// Workload shape knobs (CLI flags override the preset values).
 #[derive(Debug, Clone)]
 pub struct ServeSimConfig {
     /// Total requests in the stream.
     pub requests: usize,
-    /// Requests per `BatchGemm` submission.
+    /// Requests per `BatchGemm` submission (sync mode only; the async
+    /// admission loop forms its own batches).
     pub batch: usize,
     /// Distinct weight matrices in the working set.
     pub weights: usize,
     /// Cross-check a sample of responses against the scalar reference.
     pub verify: bool,
     pub seed: u64,
+    pub mode: ServeMode,
+    /// Async mode: Poisson arrival rate (req/s); 0 submits the whole
+    /// stream as fast as admission allows.
+    pub offered_rps: f64,
+    /// Async mode: per-request deadline.
+    pub deadline_ms: Option<f64>,
+    /// Write the metrics as a JSON artifact (`BENCH_serve.json`).
+    pub json: Option<PathBuf>,
 }
 
 impl ServeSimConfig {
@@ -42,6 +93,10 @@ impl ServeSimConfig {
             weights: 6,
             verify: true,
             seed: 42,
+            mode: ServeMode::Sync,
+            offered_rps: 2000.0,
+            deadline_ms: Some(25.0),
+            json: None,
         }
     }
 
@@ -52,6 +107,10 @@ impl ServeSimConfig {
             weights: 12,
             verify: false,
             seed: 42,
+            mode: ServeMode::Sync,
+            offered_rps: 4000.0,
+            deadline_ms: Some(25.0),
+            json: None,
         }
     }
 }
@@ -63,7 +122,23 @@ pub struct ServeSimReport {
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub requests_per_s: f64,
+    /// Requests that received a response (async admission may shed).
+    pub completed: usize,
+    /// Requests turned away with `AdmissionError::QueueFull`.
+    pub rejected: u64,
+    /// Deadline misses / completed (0.0 when no deadline was set).
+    pub deadline_miss_rate: f64,
+    /// Admission-queue high-water mark (async mode; 0 in sync mode).
+    pub peak_queue_depth: usize,
     pub cache: CacheStats,
+    json: Json,
+}
+
+impl ServeSimReport {
+    /// Machine-readable form (what the `--json` sink writes).
+    pub fn to_json(&self) -> &Json {
+        &self.json
+    }
 }
 
 fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -78,30 +153,50 @@ fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
     sorted_ms[pos]
 }
 
-/// Run the simulation on `rt` (normally [`crate::exec::global`]).
-pub fn run(rt: &ExecRuntime, cfg: &ServeSimConfig) -> Result<ServeSimReport> {
+struct Request {
+    wi: usize,
+    x: Arc<Mat>,
+}
+
+/// Outcome of driving the request stream in either mode.
+struct DriveOutcome {
+    /// Per-request latency (ms) for every completed request.
+    lat_ms: Vec<f64>,
+    /// `results[i]` is request `i`'s response (None when shed).
+    results: Vec<Option<Mat>>,
+    wall_s: f64,
+    rejected: u64,
+    misses: u64,
+    service: Option<ServiceStats>,
+}
+
+/// Run the simulation on `rt` (normally [`crate::exec::global_arc`]).
+pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport> {
     ensure!(cfg.requests > 0, "need at least one request");
     ensure!(cfg.weights > 0, "need at least one weight matrix");
     // (K, n) shapes and formats of the weight working set — mixed block
     // sizes and mantissa widths, all on the paper's parameter grid.
-    let shapes = [(64usize, 48usize), (128, 96), (192, 64), (256, 128), (96, 192), (320, 64)];
+    let shapes = [
+        (64usize, 48usize),
+        (128, 96),
+        (192, 64),
+        (256, 128),
+        (96, 192),
+        (320, 64),
+    ];
     let fmts = [
         BlockFormat::new(4, 64)?,
         BlockFormat::new(6, 64)?,
         BlockFormat::new(4, 16)?,
     ];
     let mut rng = Rng::new(cfg.seed);
-    let mut weights: Vec<(Mat, BlockFormat)> = Vec::with_capacity(cfg.weights);
+    let mut weights: Vec<(Arc<Mat>, BlockFormat)> = Vec::with_capacity(cfg.weights);
     for i in 0..cfg.weights {
         let (k, n) = shapes[i % shapes.len()];
         let data = randn(&mut rng, k * n);
-        weights.push((Mat::new(k, n, data)?, fmts[i % fmts.len()]));
+        weights.push((Arc::new(Mat::new(k, n, data)?), fmts[i % fmts.len()]));
     }
     // Request stream: random weight pick, random activation height.
-    struct Request {
-        wi: usize,
-        x: Mat,
-    }
     let mut requests: Vec<Request> = Vec::with_capacity(cfg.requests);
     for _ in 0..cfg.requests {
         let wi = rng.below(weights.len());
@@ -110,58 +205,49 @@ pub fn run(rt: &ExecRuntime, cfg: &ServeSimConfig) -> Result<ServeSimReport> {
         let data = randn(&mut rng, m * k);
         requests.push(Request {
             wi,
-            x: Mat::new(m, k, data)?,
+            x: Arc::new(Mat::new(m, k, data)?),
         });
     }
 
     let cache_before = rt.cache_stats();
-    let mut lat_ms: Vec<f64> = Vec::with_capacity(cfg.requests);
-    let mut results: Vec<Mat> = Vec::with_capacity(cfg.requests);
-    let sw_all = Stopwatch::start();
-    for chunk in requests.chunks(cfg.batch.max(1)) {
-        let ops: Vec<GemmOp> = chunk
-            .iter()
-            .map(|r| GemmOp {
-                x: &r.x,
-                w: &weights[r.wi].0,
-                fmt: weights[r.wi].1,
-            })
-            .collect();
-        let sw = Stopwatch::start();
-        let outs = BatchGemm::new(rt).run(&ops)?;
-        let ms = sw.ms();
-        for _ in chunk {
-            lat_ms.push(ms);
-        }
-        results.extend(outs);
-    }
-    let total_s = sw_all.secs();
+    let outcome = match cfg.mode {
+        ServeMode::Sync => drive_sync(rt, cfg, &requests, &weights)?,
+        ServeMode::Async => drive_async(rt, cfg, &mut rng, &requests, &weights)?,
+    };
 
     if cfg.verify {
+        let mut verified = 0usize;
         for &idx in &[0, cfg.requests / 2, cfg.requests - 1] {
+            let Some(got) = &outcome.results[idx] else {
+                continue; // shed by admission control; nothing to check
+            };
             let r = &requests[idx];
             let want = hbfp_gemm_scalar(&r.x, &weights[r.wi].0, weights[r.wi].1)?;
             ensure!(
-                results[idx].data.len() == want.data.len(),
+                got.data.len() == want.data.len(),
                 "request {idx}: shape drift vs scalar reference"
             );
-            for (g, w) in results[idx].data.iter().zip(&want.data) {
+            for (g, w) in got.data.iter().zip(&want.data) {
                 ensure!(
                     g.to_bits() == w.to_bits(),
                     "request {idx}: response diverged from hbfp_gemm_scalar"
                 );
             }
+            verified += 1;
         }
+        ensure!(verified > 0, "verification sample was entirely shed");
     }
 
     let total_macs: f64 = requests
         .iter()
-        .map(|r| {
+        .zip(&outcome.results)
+        .filter(|(_, out)| out.is_some())
+        .map(|(r, _)| {
             let w = &weights[r.wi].0;
             (r.x.rows * w.cols * w.rows) as f64
         })
         .sum();
-    let mut sorted = lat_ms.clone();
+    let mut sorted = outcome.lat_ms.clone();
     sorted.sort_by(f64::total_cmp);
     let (p50, p95, p99) = (
         percentile(&sorted, 0.50),
@@ -169,29 +255,63 @@ pub fn run(rt: &ExecRuntime, cfg: &ServeSimConfig) -> Result<ServeSimReport> {
         percentile(&sorted, 0.99),
     );
     let cache_after = rt.cache_stats();
-    let rps = cfg.requests as f64 / total_s.max(1e-9);
+    let completed = outcome.lat_ms.len();
+    let wall_s = outcome.wall_s.max(1e-9);
+    let rps = completed as f64 / wall_s;
+    let miss_rate = if completed == 0 {
+        0.0
+    } else {
+        outcome.misses as f64 / completed as f64
+    };
+    let peak_depth = outcome.service.map(|s| s.peak_queue_depth).unwrap_or(0);
 
     let mut table = Table::new(
-        "serve-sim — batched/sharded BFP GEMM serving emulation",
+        "serve-sim — BFP GEMM serving emulation over the execution service",
         &["metric", "value"],
     );
     let mut kv = |k: &str, v: String| {
         table.row(vec![k.to_string(), v]);
     };
+    kv("mode", cfg.mode.label().to_string());
     kv("requests", cfg.requests.to_string());
-    kv("batch size", cfg.batch.to_string());
+    match cfg.mode {
+        ServeMode::Sync => kv("batch size", cfg.batch.to_string()),
+        ServeMode::Async => {
+            kv(
+                "offered load (req/s)",
+                if cfg.offered_rps > 0.0 {
+                    format!("{:.0} (Poisson)", cfg.offered_rps)
+                } else {
+                    "unpaced".to_string()
+                },
+            );
+            kv(
+                "deadline (ms)",
+                cfg.deadline_ms
+                    .map(|d| format!("{d:.1}"))
+                    .unwrap_or_else(|| "none".to_string()),
+            );
+        }
+    }
     kv("weight working set", cfg.weights.to_string());
     kv("pool threads", rt.pool().threads().to_string());
-    kv("total MACs", format!("{total_macs:.3e}"));
-    kv("wall time (s)", format!("{total_s:.3}"));
-    kv("throughput (req/s)", format!("{rps:.1}"));
+    kv("completed", completed.to_string());
+    kv("rejected (queue full)", outcome.rejected.to_string());
+    kv("total MACs (completed)", format!("{total_macs:.3e}"));
+    kv("wall time (s)", format!("{wall_s:.3}"));
+    kv("achieved throughput (req/s)", format!("{rps:.1}"));
     kv(
         "throughput (MMAC/s)",
-        format!("{:.1}", total_macs / total_s.max(1e-9) / 1e6),
+        format!("{:.1}", total_macs / wall_s / 1e6),
     );
     kv("latency p50 (ms)", format!("{p50:.3}"));
     kv("latency p95 (ms)", format!("{p95:.3}"));
     kv("latency p99 (ms)", format!("{p99:.3}"));
+    kv("deadline-miss rate", format!("{:.3}", miss_rate));
+    if let Some(s) = &outcome.service {
+        kv("queue depth (peak)", s.peak_queue_depth.to_string());
+        kv("execution batches", s.batches.to_string());
+    }
     kv(
         "cache hits (this run)",
         (cache_after.hits - cache_before.hits).to_string(),
@@ -206,13 +326,198 @@ pub fn run(rt: &ExecRuntime, cfg: &ServeSimConfig) -> Result<ServeSimReport> {
         if cfg.verify { "yes (bit-exact sample)" } else { "no" }.to_string(),
     );
 
+    let json = Json::obj(vec![
+        ("suite", Json::str("serve_sim")),
+        ("mode", Json::str(cfg.mode.json_tag())),
+        ("requests", Json::Num(cfg.requests as f64)),
+        ("completed", Json::Num(completed as f64)),
+        ("rejected", Json::Num(outcome.rejected as f64)),
+        (
+            "offered_rps",
+            if cfg.mode == ServeMode::Async {
+                Json::Num(cfg.offered_rps)
+            } else {
+                Json::Null
+            },
+        ),
+        (
+            "deadline_ms",
+            match (cfg.mode, cfg.deadline_ms) {
+                (ServeMode::Async, Some(d)) => Json::Num(d),
+                _ => Json::Null,
+            },
+        ),
+        ("wall_s", Json::Num(wall_s)),
+        ("throughput_rps", Json::Num(rps)),
+        ("throughput_mmacs", Json::Num(total_macs / wall_s / 1e6)),
+        ("p50_ms", Json::Num(p50)),
+        ("p95_ms", Json::Num(p95)),
+        ("p99_ms", Json::Num(p99)),
+        ("deadline_miss_rate", Json::Num(miss_rate)),
+        ("peak_queue_depth", Json::Num(peak_depth as f64)),
+        ("pool_threads", Json::Num(rt.pool().threads() as f64)),
+        (
+            "cache",
+            Json::obj(vec![
+                (
+                    "hits",
+                    Json::Num((cache_after.hits - cache_before.hits) as f64),
+                ),
+                (
+                    "misses",
+                    Json::Num((cache_after.misses - cache_before.misses) as f64),
+                ),
+                (
+                    "evictions",
+                    Json::Num((cache_after.evictions - cache_before.evictions) as f64),
+                ),
+            ]),
+        ),
+        ("verified", Json::Bool(cfg.verify)),
+    ]);
+    if let Some(path) = &cfg.json {
+        let mut text = json.render();
+        text.push('\n');
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, text).with_context(|| format!("writing {}", path.display()))?;
+        println!("wrote serve-sim JSON artifact to {}", path.display());
+    }
+
     Ok(ServeSimReport {
         table,
         p50_ms: p50,
         p95_ms: p95,
         p99_ms: p99,
         requests_per_s: rps,
+        completed,
+        rejected: outcome.rejected,
+        deadline_miss_rate: miss_rate,
+        peak_queue_depth: peak_depth,
         cache: cache_after,
+        json,
+    })
+}
+
+/// Closed-loop batch-by-batch submission through the blocking facade
+/// (the PR-2 shape, kept as the baseline comparator).
+fn drive_sync(
+    rt: &Arc<ExecRuntime>,
+    cfg: &ServeSimConfig,
+    requests: &[Request],
+    weights: &[(Arc<Mat>, BlockFormat)],
+) -> Result<DriveOutcome> {
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(cfg.requests);
+    let mut results: Vec<Option<Mat>> = Vec::with_capacity(cfg.requests);
+    let sw_all = Stopwatch::start();
+    for chunk in requests.chunks(cfg.batch.max(1)) {
+        let ops: Vec<OwnedGemmOp> = chunk
+            .iter()
+            .map(|r| {
+                OwnedGemmOp::new(
+                    Arc::clone(&r.x),
+                    Arc::clone(&weights[r.wi].0),
+                    weights[r.wi].1,
+                )
+            })
+            .collect::<Result<_>>()?;
+        let sw = Stopwatch::start();
+        let outs = BatchGemm::new(rt).run(&ops)?;
+        let ms = sw.ms();
+        for _ in chunk {
+            lat_ms.push(ms);
+        }
+        results.extend(outs.into_iter().map(Some));
+    }
+    Ok(DriveOutcome {
+        lat_ms,
+        results,
+        wall_s: sw_all.secs(),
+        rejected: 0,
+        misses: 0,
+        service: None,
+    })
+}
+
+/// Open-loop submission through a private [`BfpService`] on `rt`:
+/// Poisson arrivals, non-blocking admission (queue-full responses are
+/// shed and counted), per-request deadlines, ticket-measured latency.
+fn drive_async(
+    rt: &Arc<ExecRuntime>,
+    cfg: &ServeSimConfig,
+    rng: &mut Rng,
+    requests: &[Request],
+    weights: &[(Arc<Mat>, BlockFormat)],
+) -> Result<DriveOutcome> {
+    let service = BfpService::new(Arc::clone(rt), ServiceConfig::default());
+    // Poisson process: exponential inter-arrival gaps at the offered
+    // rate, fixed up front so submission jitter cannot skew the plan.
+    let mut arrivals_s: Vec<f64> = Vec::with_capacity(requests.len());
+    let mut t = 0.0f64;
+    for _ in 0..requests.len() {
+        if cfg.offered_rps > 0.0 {
+            let u = rng.uniform().max(f64::MIN_POSITIVE);
+            t += -u.ln() / cfg.offered_rps;
+        }
+        arrivals_s.push(t);
+    }
+
+    let deadline = cfg
+        .deadline_ms
+        .map(|ms| Duration::from_secs_f64((ms / 1e3).max(0.0)));
+    let mut tickets: Vec<(usize, crate::exec::Ticket)> = Vec::with_capacity(requests.len());
+    let mut rejected = 0u64;
+    let sw_all = Stopwatch::start();
+    for (i, r) in requests.iter().enumerate() {
+        if cfg.offered_rps > 0.0 {
+            let now = sw_all.secs();
+            if arrivals_s[i] > now {
+                std::thread::sleep(Duration::from_secs_f64(arrivals_s[i] - now));
+            }
+        }
+        let op = OwnedGemmOp::new(
+            Arc::clone(&r.x),
+            Arc::clone(&weights[r.wi].0),
+            weights[r.wi].1,
+        )?;
+        let mut req = GemmRequest::new(op).with_priority(Priority::Interactive);
+        if let Some(d) = deadline {
+            req = req.with_deadline(d);
+        }
+        match service.submit(req) {
+            Ok(ticket) => tickets.push((i, ticket)),
+            Err(AdmissionError::QueueFull { .. }) => rejected += 1,
+            Err(e) => return Err(anyhow::Error::new(e).context("async submission")),
+        }
+    }
+
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(tickets.len());
+    let mut results: Vec<Option<Mat>> = (0..requests.len()).map(|_| None).collect();
+    let mut misses = 0u64;
+    for (i, ticket) in tickets {
+        let resp = ticket
+            .wait()
+            .with_context(|| format!("request {i} failed in the service"))?;
+        lat_ms.push(resp.total_ms);
+        if resp.deadline_missed {
+            misses += 1;
+        }
+        results[i] = Some(resp.out);
+    }
+    let wall_s = sw_all.secs();
+    let stats = service.stats();
+    drop(service);
+    Ok(DriveOutcome {
+        lat_ms,
+        results,
+        wall_s,
+        rejected,
+        misses,
+        service: Some(stats),
     })
 }
 
@@ -222,7 +527,7 @@ mod tests {
 
     #[test]
     fn quick_preset_runs_verified_and_hits_the_cache() {
-        let rt = ExecRuntime::with_threads(2);
+        let rt = Arc::new(ExecRuntime::with_threads(2));
         let mut cfg = ServeSimConfig::quick();
         cfg.requests = 24;
         cfg.batch = 8;
@@ -233,15 +538,65 @@ mod tests {
         // must be served from the operand cache.
         assert!(report.cache.misses <= 3, "{:?}", report.cache);
         assert!(report.cache.hits >= 21, "{:?}", report.cache);
-        assert_eq!(report.cache.hits + report.cache.misses, 24, "{:?}", report.cache);
+        assert_eq!(
+            report.cache.hits + report.cache.misses,
+            24,
+            "{:?}",
+            report.cache
+        );
         assert!(report.requests_per_s > 0.0);
+        assert_eq!(report.completed, 24);
+        assert_eq!(report.rejected, 0);
         assert!(report.p50_ms <= report.p95_ms && report.p95_ms <= report.p99_ms);
         assert_eq!(report.table.headers.len(), 2);
+        assert_eq!(
+            report.to_json().req("mode").unwrap().as_str().unwrap(),
+            "sync"
+        );
+    }
+
+    #[test]
+    fn async_mode_verifies_and_accounts_deadlines() {
+        let rt = Arc::new(ExecRuntime::with_threads(2));
+        let mut cfg = ServeSimConfig::quick();
+        cfg.requests = 24;
+        cfg.weights = 3;
+        cfg.mode = ServeMode::Async;
+        cfg.offered_rps = 0.0; // unpaced: no sleeps in unit tests
+        cfg.deadline_ms = Some(60_000.0); // generous: no misses expected
+        let report = run(&rt, &cfg).unwrap();
+        assert_eq!(report.completed + report.rejected as usize, 24);
+        assert!(report.completed > 0);
+        assert_eq!(report.deadline_miss_rate, 0.0, "60s deadlines cannot miss");
+        assert!(report.peak_queue_depth >= 1);
+        assert!(report.p50_ms <= report.p99_ms);
+        let j = report.to_json();
+        assert_eq!(j.req("mode").unwrap().as_str().unwrap(), "async");
+        assert!(j.req("throughput_rps").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_artifact_is_written_when_configured() {
+        let rt = Arc::new(ExecRuntime::with_threads(1));
+        let mut cfg = ServeSimConfig::quick();
+        cfg.requests = 6;
+        cfg.batch = 3;
+        cfg.weights = 2;
+        let dir = std::env::temp_dir().join("boosters_serve_sim_test");
+        let path = dir.join("BENCH_serve.json");
+        let _ = std::fs::remove_file(&path);
+        cfg.json = Some(path.clone());
+        run(&rt, &cfg).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.req("suite").unwrap().as_str().unwrap(), "serve_sim");
+        assert_eq!(back.req("requests").unwrap().as_usize().unwrap(), 6);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]
     fn degenerate_configs_rejected() {
-        let rt = ExecRuntime::with_threads(1);
+        let rt = Arc::new(ExecRuntime::with_threads(1));
         let mut cfg = ServeSimConfig::quick();
         cfg.requests = 0;
         assert!(run(&rt, &cfg).is_err());

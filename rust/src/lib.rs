@@ -31,14 +31,24 @@
 //!   paths (property-tested), so every analysis, sweep, and
 //!   host-emulation consumer sees one set of numerics at
 //!   bandwidth-bound speed.
-//! * [`exec`] — the **execution runtime** those kernels run on: a
-//!   persistent worker pool (spawned once, sized by
-//!   `BOOSTERS_GEMM_THREADS` / `available_parallelism`), a
-//!   content-addressed encoded-operand cache with hit/miss counters,
-//!   and the [`exec::BatchGemm`] scheduler that shards many
-//!   heterogeneous GEMMs into band-level work items while preserving
-//!   bit-identity with the scalar reference. `repro serve-sim` replays
-//!   a synthetic mixed-size request stream through it.
+//! * [`exec`] — the **execution service** those kernels run on. Its
+//!   front door is [`exec::BfpService`]: non-blocking
+//!   `submit(GemmRequest) -> Ticket` over owned ops
+//!   ([`exec::OwnedGemmOp`]), per-request QoS (deadline + priority
+//!   class), a bounded admission queue whose overflow is the typed
+//!   [`exec::AdmissionError`] backpressure signal, and a dedicated
+//!   scheduler thread forming earliest-deadline-first, MAC-budgeted
+//!   batches. Underneath sit the persistent worker pool (spawned once,
+//!   sized by `BOOSTERS_GEMM_THREADS` / `available_parallelism`), the
+//!   content-addressed encoded-operand cache (caps via
+//!   `BOOSTERS_CACHE_ENTRIES` / `BOOSTERS_CACHE_MB`, counters in
+//!   [`metrics`]), and the [`exec::BatchGemm`] execution stage (its
+//!   blocking `run` kept as a thin synchronous facade). Admission
+//!   order reorders execution, never accumulation: responses stay
+//!   bit-identical to the scalar reference across thread counts,
+//!   deadlines, and arrival orders. `repro serve-sim` replays a
+//!   synthetic mixed-size request stream through it, open-loop
+//!   (Poisson arrivals, deadline-miss accounting) in `--async` mode.
 //! * [`hw_model`] — the paper's gate-level analytic silicon-area model
 //!   (Appendix F): FP32 / BFloat16 / HBFP dot-product units, converters,
 //!   stochastic-rounding XORshift circuits; regenerates Fig 6 and the

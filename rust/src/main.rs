@@ -43,8 +43,12 @@ SUBCOMMANDS
                                          (autoboost / cyclic / inverse)
   serve-sim [--preset] [--requests N]    replay a synthetic mixed-size
             [--batch B] [--weights W]    GEMM request stream through the
-            [--verify]                   BatchGemm execution runtime and
-                                         report throughput/latency/cache
+            [--verify] [--async]         execution service; --async uses
+            [--rps R] [--deadline-ms D]  open-loop BfpService admission
+            [--json PATH]                (Poisson arrivals, deadlines,
+                                         miss rate, queue depth); --json
+                                         (or $REPRO_BENCH_JSON) writes a
+                                         BENCH_serve.json artifact
 
 POLICIES: fp32 | hbfpN | hbfpN+layersM | booster[K] | cyclicMIN-MAX
 Artifacts dir: --artifacts PATH (default ./artifacts or $REPRO_ARTIFACTS)";
@@ -176,7 +180,20 @@ fn main() -> Result<()> {
             if args.has_flag("verify") {
                 cfg.verify = true;
             }
-            let report = experiments::serve_sim::run(boosters::exec::global(), &cfg)?;
+            if args.has_flag("async") {
+                cfg.mode = experiments::serve_sim::ServeMode::Async;
+            }
+            if let Some(r) = args.get_parse::<f64>("rps")? {
+                cfg.offered_rps = r;
+            }
+            if let Some(d) = args.get_parse::<f64>("deadline-ms")? {
+                cfg.deadline_ms = Some(d);
+            }
+            cfg.json = args
+                .get("json")
+                .map(std::path::PathBuf::from)
+                .or_else(|| std::env::var_os("REPRO_BENCH_JSON").map(std::path::PathBuf::from));
+            let report = experiments::serve_sim::run(&boosters::exec::global_arc(), &cfg)?;
             report.table.print();
         }
         Some("fig6") => experiments::figs::fig6()?.print(),

@@ -1,6 +1,7 @@
 //! Metrics: BLEU-4 (Table 3), Wasserstein-1 distance (Fig 1), accuracy /
 //! loss tracking (Fig 3/4), the R² association check from §3, and the
-//! execution-runtime counters (operand-cache hits/misses).
+//! execution-service counters (operand-cache hits/misses, admission
+//! queue depth, deadline misses).
 
 pub mod bleu;
 pub mod stats;
@@ -12,9 +13,10 @@ pub use stats::{pearson_r, r_squared};
 pub use tracker::{EpochStats, RunHistory};
 pub use wasserstein::{wasserstein1, wasserstein1_quantized, QuantSweep};
 
-// The operand-cache counter snapshot is a metrics surface: experiment
-// drivers and serve-sim print it next to their accuracy/latency numbers.
-pub use crate::exec::CacheStats;
+// The execution-service counter snapshots are a metrics surface:
+// experiment drivers and serve-sim print them next to their
+// accuracy/latency numbers.
+pub use crate::exec::{CacheStats, ServiceStats};
 
 /// Snapshot of the **global** execution runtime's encoded-operand cache
 /// counters (hits, misses, evictions, residency). Counters are
@@ -22,4 +24,13 @@ pub use crate::exec::CacheStats;
 /// traffic to it.
 pub fn exec_cache_snapshot() -> CacheStats {
     crate::exec::global().cache_stats()
+}
+
+/// Snapshot of the **global** [`crate::exec::BfpService`] admission
+/// counters (submitted/completed/rejected, deadline misses, queue
+/// depth + high-water mark). Cumulative for the process; sample
+/// before/after a phase to attribute traffic to it. First use
+/// instantiates the service.
+pub fn exec_service_snapshot() -> ServiceStats {
+    crate::exec::global_service().stats()
 }

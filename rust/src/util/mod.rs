@@ -48,6 +48,43 @@ pub fn gemm_thread_budget() -> usize {
         })
 }
 
+/// Default operand-cache caps: entry count and approximate resident
+/// plane bytes.
+pub const DEFAULT_CACHE_ENTRIES: usize = 96;
+pub const DEFAULT_CACHE_BYTES: usize = 128 << 20;
+
+/// Operand-cache budget `(max_entries, max_bytes)` for the execution
+/// runtime: the single home of the `BOOSTERS_CACHE_ENTRIES` /
+/// `BOOSTERS_CACHE_MB` overrides (any positive integer; `_MB` is in
+/// MiB), hoisted here next to [`gemm_thread_budget`] so every runtime
+/// constructor resolves the environment the same way.
+pub fn cache_budget() -> (usize, usize) {
+    parse_cache_budget(
+        std::env::var("BOOSTERS_CACHE_ENTRIES").ok().as_deref(),
+        std::env::var("BOOSTERS_CACHE_MB").ok().as_deref(),
+    )
+}
+
+/// The compiled-in defaults, for constructors that must not consult the
+/// environment (private test runtimes stay reproducible regardless of
+/// the ambient shell).
+pub fn default_cache_budget() -> (usize, usize) {
+    (DEFAULT_CACHE_ENTRIES, DEFAULT_CACHE_BYTES)
+}
+
+/// Pure parsing core of [`cache_budget`]: malformed, zero, or missing
+/// values fall back to the defaults (unit-tested without touching the
+/// process environment, which would race parallel tests).
+pub fn parse_cache_budget(entries: Option<&str>, mb: Option<&str>) -> (usize, usize) {
+    fn positive(v: Option<&str>) -> Option<usize> {
+        v.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n >= 1)
+    }
+    (
+        positive(entries).unwrap_or(DEFAULT_CACHE_ENTRIES),
+        positive(mb).map(|mb| mb << 20).unwrap_or(DEFAULT_CACHE_BYTES),
+    )
+}
+
 /// Mean of a slice (0.0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -74,6 +111,31 @@ mod tests {
     fn thread_budget_is_positive() {
         // Whatever the environment says, the budget is a usable count.
         assert!(gemm_thread_budget() >= 1);
+    }
+
+    #[test]
+    fn cache_budget_parsing_and_fallback() {
+        // Unset -> defaults.
+        assert_eq!(
+            parse_cache_budget(None, None),
+            (DEFAULT_CACHE_ENTRIES, DEFAULT_CACHE_BYTES)
+        );
+        // Valid overrides (MB converts to bytes; whitespace tolerated).
+        assert_eq!(parse_cache_budget(Some("12"), Some(" 64 ")), (12, 64 << 20));
+        // Zero and garbage fall back per-variable, independently.
+        assert_eq!(
+            parse_cache_budget(Some("0"), Some("sixty-four")),
+            (DEFAULT_CACHE_ENTRIES, DEFAULT_CACHE_BYTES)
+        );
+        assert_eq!(
+            parse_cache_budget(Some("-3"), Some("8")),
+            (DEFAULT_CACHE_ENTRIES, 8 << 20)
+        );
+        assert_eq!(parse_cache_budget(Some("1"), None), (1, DEFAULT_CACHE_BYTES));
+        // The env-reading wrapper always yields usable caps.
+        let (entries, bytes) = cache_budget();
+        assert!(entries >= 1 && bytes >= 1);
+        assert_eq!(default_cache_budget(), (DEFAULT_CACHE_ENTRIES, DEFAULT_CACHE_BYTES));
     }
 
     #[test]

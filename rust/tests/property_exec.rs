@@ -6,9 +6,10 @@
 
 use boosters::analysis::quantize_params_packed_cached;
 use boosters::bfp::{hbfp_gemm_scalar, BlockFormat, Mat, Quantizer};
-use boosters::exec::{BatchGemm, ExecRuntime, GemmOp};
+use boosters::exec::{BatchGemm, ExecRuntime, OwnedGemmOp};
 use boosters::runtime::Tensor;
 use boosters::util::Rng;
+use std::sync::Arc;
 
 fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.normal_scaled(1.0)).collect()
@@ -16,7 +17,7 @@ fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
 
 /// The m in {3,4,6,8} x {16,64,576} grid with ragged K, 6 cases each:
 /// 72 heterogeneous ops (>= the 64 the acceptance gate requires).
-fn build_ops(rng: &mut Rng) -> Vec<(Mat, Mat, BlockFormat)> {
+fn build_ops(rng: &mut Rng) -> Vec<(Arc<Mat>, Arc<Mat>, BlockFormat)> {
     let mut out = Vec::new();
     for &m in &[3u32, 4, 6, 8] {
         for &b in &[16usize, 64, 576] {
@@ -26,8 +27,8 @@ fn build_ops(rng: &mut Rng) -> Vec<(Mat, Mat, BlockFormat)> {
                 let k = 1 + rng.below(2 * b + 37);
                 let r = 1 + rng.below(6);
                 let c = 1 + rng.below(7);
-                let x = Mat::new(r, k, randn(rng, r * k)).unwrap();
-                let w = Mat::new(k, c, randn(rng, k * c)).unwrap();
+                let x = Arc::new(Mat::new(r, k, randn(rng, r * k)).unwrap());
+                let w = Arc::new(Mat::new(k, c, randn(rng, k * c)).unwrap());
                 out.push((x, w, fmt));
             }
         }
@@ -35,10 +36,10 @@ fn build_ops(rng: &mut Rng) -> Vec<(Mat, Mat, BlockFormat)> {
     out
 }
 
-fn as_ops(triples: &[(Mat, Mat, BlockFormat)]) -> Vec<GemmOp<'_>> {
+fn as_ops(triples: &[(Arc<Mat>, Arc<Mat>, BlockFormat)]) -> Vec<OwnedGemmOp> {
     triples
         .iter()
-        .map(|(x, w, fmt)| GemmOp { x, w, fmt: *fmt })
+        .map(|(x, w, fmt)| OwnedGemmOp::new(Arc::clone(x), Arc::clone(w), *fmt).unwrap())
         .collect()
 }
 
@@ -98,11 +99,11 @@ fn prop_batch_gemm_invariant_to_submission_order() {
     // A deterministic shuffle with its inverse mapping.
     let mut perm: Vec<usize> = (0..triples.len()).collect();
     rng.shuffle(&mut perm);
-    let shuffled: Vec<GemmOp> = perm
+    let shuffled: Vec<OwnedGemmOp> = perm
         .iter()
         .map(|&i| {
             let (x, w, fmt) = &triples[i];
-            GemmOp { x, w, fmt: *fmt }
+            OwnedGemmOp::new(Arc::clone(x), Arc::clone(w), *fmt).unwrap()
         })
         .collect();
     let permuted = BatchGemm::new(&rt).run(&shuffled).unwrap();
@@ -121,15 +122,18 @@ fn prop_batch_gemm_invariant_to_submission_order() {
 fn prop_weight_cache_reuse_is_bit_pure() {
     let mut rng = Rng::new(0xCAFE);
     let fmt = BlockFormat::new(4, 64).unwrap();
-    let w = Mat::new(150, 12, randn(&mut rng, 150 * 12)).unwrap();
-    let xs: Vec<Mat> = (0..10)
+    let w = Arc::new(Mat::new(150, 12, randn(&mut rng, 150 * 12)).unwrap());
+    let xs: Vec<Arc<Mat>> = (0..10)
         .map(|_| {
             let m = 1 + rng.below(20);
-            Mat::new(m, 150, randn(&mut rng, m * 150)).unwrap()
+            Arc::new(Mat::new(m, 150, randn(&mut rng, m * 150)).unwrap())
         })
         .collect();
     let warm_rt = ExecRuntime::with_threads(2);
-    let ops: Vec<GemmOp> = xs.iter().map(|x| GemmOp { x, w: &w, fmt }).collect();
+    let ops: Vec<OwnedGemmOp> = xs
+        .iter()
+        .map(|x| OwnedGemmOp::new(Arc::clone(x), Arc::clone(&w), fmt).unwrap())
+        .collect();
     let first = BatchGemm::new(&warm_rt).run(&ops).unwrap();
     let second = BatchGemm::new(&warm_rt).run(&ops).unwrap();
     let stats = warm_rt.cache_stats();

@@ -1,0 +1,258 @@
+//! Property tests for the asynchronous execution service: admission
+//! order, deadlines, priorities, and backpressure may reorder
+//! *execution*, never *numerics* — every response must be bit-identical
+//! to the per-op scalar reference and to the synchronous facade, across
+//! thread counts and arrival orders; the bounded queue must return the
+//! typed `AdmissionError` instead of blocking; deadline misses must be
+//! observed and counted, never enforced by cancellation.
+
+use boosters::bfp::{hbfp_gemm_scalar, BlockFormat, Mat};
+use boosters::exec::{
+    AdmissionError, BatchGemm, BfpService, ExecRuntime, GemmRequest, OwnedGemmOp, Priority,
+    ServiceConfig, Ticket,
+};
+use boosters::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_scaled(1.0)).collect()
+}
+
+/// The m in {3,4,6,8} x {16,64} grid with ragged K, 3 cases each:
+/// 24 heterogeneous ops sharing a few weight operands.
+fn build_ops(rng: &mut Rng) -> Vec<OwnedGemmOp> {
+    let mut out = Vec::new();
+    for &m in &[3u32, 4, 6, 8] {
+        for &b in &[16usize, 64] {
+            let fmt = BlockFormat::new(m, b).unwrap();
+            for _ in 0..3 {
+                // Ragged K: rarely a block multiple, sometimes < b.
+                let k = 1 + rng.below(2 * b + 37);
+                let r = 1 + rng.below(6);
+                let c = 1 + rng.below(7);
+                let x = Arc::new(Mat::new(r, k, randn(rng, r * k)).unwrap());
+                let w = Arc::new(Mat::new(k, c, randn(rng, k * c)).unwrap());
+                out.push(OwnedGemmOp::new(x, w, fmt).unwrap());
+            }
+        }
+    }
+    out
+}
+
+fn assert_bits_eq(a: &Mat, b: &Mat, ctx: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{ctx}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: elem {i}: {x} vs {y}");
+    }
+}
+
+/// Acceptance gate: async responses are bit-identical to the per-op
+/// scalar reference and to the synchronous facade, across thread
+/// counts and with a mix of deadlines/priorities in flight.
+#[test]
+fn prop_async_bit_identical_to_sync_and_scalar() {
+    let mut rng = Rng::new(0xA51C);
+    let ops = build_ops(&mut rng);
+    let sync_rt = ExecRuntime::with_threads(1);
+    let sync = BatchGemm::new(&sync_rt).run(&ops).unwrap();
+    for threads in [1usize, 4] {
+        let svc = BfpService::with_threads(threads);
+        let tickets: Vec<Ticket> = ops
+            .iter()
+            .enumerate()
+            .map(|(i, op)| {
+                // Interleave QoS envelopes; none of this may touch bits.
+                let mut req = GemmRequest::new(op.clone());
+                if i % 2 == 0 {
+                    req = req.with_deadline(Duration::from_secs(60));
+                }
+                if i % 3 == 0 {
+                    req = req.with_priority(Priority::Interactive);
+                }
+                svc.submit_blocking(req).unwrap()
+            })
+            .collect();
+        for (i, (t, op)) in tickets.iter().zip(&ops).enumerate() {
+            let resp = t.wait().unwrap();
+            let want = hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap();
+            let ctx = format!(
+                "threads={threads} op {i} (m={} b={})",
+                op.fmt.mantissa_bits, op.fmt.block_size
+            );
+            assert_bits_eq(&resp.out, &want, &format!("{ctx} vs scalar"));
+            assert_bits_eq(&resp.out, &sync[i], &format!("{ctx} vs sync facade"));
+        }
+    }
+}
+
+/// Submitting the same ops in a different order yields the same bits
+/// per op — admission order is a scheduling detail, not a numeric one.
+#[test]
+fn prop_submission_order_independence() {
+    let mut rng = Rng::new(0x0D3A);
+    let ops = build_ops(&mut rng);
+    let forward_svc = BfpService::with_threads(3);
+    let forward: Vec<Mat> = ops
+        .iter()
+        .map(|op| {
+            forward_svc
+                .submit_blocking(GemmRequest::new(op.clone()))
+                .unwrap()
+        })
+        .collect::<Vec<_>>()
+        .iter()
+        .map(|t| t.wait().unwrap().out)
+        .collect();
+    let mut perm: Vec<usize> = (0..ops.len()).collect();
+    rng.shuffle(&mut perm);
+    let perm_svc = BfpService::with_threads(3);
+    // Submit everything in permuted order *before* waiting on anything,
+    // so the admission loop actually sees the permuted stream.
+    let tickets: Vec<(usize, Ticket)> = perm
+        .iter()
+        .map(|&orig| {
+            (
+                orig,
+                perm_svc
+                    .submit_blocking(GemmRequest::new(ops[orig].clone()))
+                    .unwrap(),
+            )
+        })
+        .collect();
+    for (orig, t) in tickets {
+        let resp = t.wait().unwrap();
+        assert_bits_eq(
+            &resp.out,
+            &forward[orig],
+            &format!("permuted submission of op {orig}"),
+        );
+    }
+}
+
+/// Deadline misses are observed (flag + counter) and never affect
+/// results; generous deadlines never count as missed.
+#[test]
+fn prop_deadline_miss_accounting() {
+    let mut rng = Rng::new(0xDEAD);
+    let fmt = BlockFormat::new(4, 16).unwrap();
+    let svc = BfpService::with_threads(2);
+    let mk = |rng: &mut Rng| {
+        OwnedGemmOp::new(
+            Arc::new(Mat::new(3, 32, randn(rng, 96)).unwrap()),
+            Arc::new(Mat::new(32, 4, randn(rng, 128)).unwrap()),
+            fmt,
+        )
+        .unwrap()
+    };
+    // Zero-duration deadlines are in the past by the time the scheduler
+    // fulfills them: guaranteed misses, deterministic accounting.
+    let doomed: Vec<Ticket> = (0..5)
+        .map(|_| {
+            svc.submit(GemmRequest::new(mk(&mut rng)).with_deadline(Duration::ZERO))
+                .unwrap()
+        })
+        .collect();
+    let relaxed = svc
+        .submit(GemmRequest::new(mk(&mut rng)).with_deadline(Duration::from_secs(3600)))
+        .unwrap();
+    let unconstrained = svc.submit(GemmRequest::new(mk(&mut rng))).unwrap();
+    for t in &doomed {
+        let resp = t.wait().unwrap();
+        assert!(resp.deadline_missed, "zero deadline must be missed");
+        assert!(resp.out.data.iter().all(|v| v.is_finite()));
+    }
+    assert!(!relaxed.wait().unwrap().deadline_missed);
+    assert!(!unconstrained.wait().unwrap().deadline_missed);
+    let stats = svc.stats();
+    assert_eq!(stats.deadline_missed, 5, "{stats:?}");
+    assert_eq!(stats.completed, 7, "{stats:?}");
+    assert_eq!(stats.miss_rate(), 5.0 / 7.0);
+}
+
+/// A full bounded queue returns `AdmissionError::QueueFull` from
+/// `submit` immediately instead of blocking forever; draining restores
+/// admission, and everything admitted still completes correctly.
+#[test]
+fn prop_bounded_queue_backpressure() {
+    let mut rng = Rng::new(0xB0B5);
+    let fmt = BlockFormat::new(4, 16).unwrap();
+    let capacity = 3usize;
+    let svc = BfpService::new(
+        Arc::new(ExecRuntime::with_threads(2)),
+        ServiceConfig {
+            queue_capacity: capacity,
+            ..ServiceConfig::default()
+        },
+    );
+    // Freeze the admission loop so the pipeline is deterministically
+    // "full" rather than racing the scheduler thread.
+    svc.pause();
+    let mk = |rng: &mut Rng| {
+        OwnedGemmOp::new(
+            Arc::new(Mat::new(2, 16, randn(rng, 32)).unwrap()),
+            Arc::new(Mat::new(16, 3, randn(rng, 48)).unwrap()),
+            fmt,
+        )
+        .unwrap()
+    };
+    let admitted: Vec<(OwnedGemmOp, Ticket)> = (0..capacity)
+        .map(|_| {
+            let op = mk(&mut rng);
+            let t = svc.submit(GemmRequest::new(op.clone())).unwrap();
+            (op, t)
+        })
+        .collect();
+    // The queue is now full: submit must fail fast with the typed
+    // error, not block.
+    let overflow_op = mk(&mut rng);
+    match svc.submit(GemmRequest::new(overflow_op.clone())) {
+        Err(AdmissionError::QueueFull { capacity: c }) => assert_eq!(c, capacity),
+        other => panic!("expected QueueFull, got {other:?}"),
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.rejected, 1, "{stats:?}");
+    assert_eq!(stats.queue_depth, capacity, "{stats:?}");
+    assert_eq!(stats.peak_queue_depth, capacity, "{stats:?}");
+    // Nothing was fulfilled while paused.
+    assert!(admitted.iter().all(|(_, t)| !t.poll()));
+    svc.resume();
+    for (i, (op, t)) in admitted.iter().enumerate() {
+        let resp = t.wait().unwrap();
+        let want = hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap();
+        assert_bits_eq(&resp.out, &want, &format!("admitted op {i} after resume"));
+    }
+    // Space freed: the previously rejected op now goes through.
+    let t = svc.submit(GemmRequest::new(overflow_op.clone())).unwrap();
+    let resp = t.wait().unwrap();
+    let want = hbfp_gemm_scalar(&overflow_op.x, &overflow_op.w, overflow_op.fmt).unwrap();
+    assert_bits_eq(&resp.out, &want, "resubmitted overflow op");
+}
+
+/// `wait_deadline` times out on in-flight work without consuming the
+/// ticket, and delivers the result on a later call.
+#[test]
+fn prop_wait_deadline_preserves_ticket() {
+    let mut rng = Rng::new(0x71C7);
+    let fmt = BlockFormat::new(6, 16).unwrap();
+    let svc = BfpService::with_threads(2);
+    svc.pause();
+    let op = OwnedGemmOp::new(
+        Arc::new(Mat::new(4, 48, randn(&mut rng, 192)).unwrap()),
+        Arc::new(Mat::new(48, 5, randn(&mut rng, 240)).unwrap()),
+        fmt,
+    )
+    .unwrap();
+    let ticket = svc.submit(GemmRequest::new(op.clone())).unwrap();
+    // Paused service: the bounded wait must expire, leaving the ticket
+    // usable.
+    assert!(ticket.wait_deadline(Duration::from_millis(20)).is_none());
+    assert!(!ticket.poll());
+    svc.resume();
+    let resp = ticket
+        .wait_deadline(Duration::from_secs(60))
+        .expect("must complete after resume")
+        .unwrap();
+    let want = hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap();
+    assert_bits_eq(&resp.out, &want, "wait_deadline result");
+}
