@@ -5,8 +5,8 @@
 //! — before/after numbers live in EXPERIMENTS.md.
 
 use boosters::bfp::{
-    bfp_dot_fixed_point, hbfp_gemm, hbfp_gemm_scalar, quantize_flat, quantize_packed_into,
-    BfpMatrix, BfpTensor, BlockFormat, Mat, Quantizer,
+    bfp_dot_fixed_point, gemm_packed_with, hbfp_gemm, hbfp_gemm_scalar, quantize_flat,
+    quantize_packed_into, registry, BfpMatrix, BfpTensor, BlockFormat, Mat, Quantizer,
 };
 use boosters::exec::{BatchGemm, OwnedGemmOp};
 use boosters::util::bench::BenchSuite;
@@ -93,6 +93,35 @@ fn main() {
             std::hint::black_box(xp.gemm(&wp).unwrap());
         },
     );
+
+    // --- kernel-backend comparison -------------------------------------
+    // The same pre-encoded 512^3 operands through every backend the
+    // registry registered on this host (auto band count): the per-
+    // kernel GEMM throughput series the uploaded BENCH_gemm.json
+    // reports. m=4 runs on nibble-packed planes, m=6 on i8 planes, so
+    // both nibble-direct and byte inner loops are covered.
+    for kernel in registry().all() {
+        suite.bench_items(
+            &format!("gemm 512^3 m=4 i4x2 kernel={} (MACs)", kernel.name()),
+            Some(macs),
+            || {
+                std::hint::black_box(gemm_packed_with(&xp, &wp, *kernel, None).unwrap());
+            },
+        );
+    }
+    let fmt6 = BlockFormat::new(6, 64).unwrap();
+    let q6 = Quantizer::nearest(6);
+    let xp6 = BfpMatrix::encode(&xm.data, dim, dim, fmt6, q6).unwrap();
+    let wp6 = BfpMatrix::encode_transposed(&wm, fmt6, q6).unwrap();
+    for kernel in registry().all() {
+        suite.bench_items(
+            &format!("gemm 512^3 m=6 i8 kernel={} (MACs)", kernel.name()),
+            Some(macs),
+            || {
+                std::hint::black_box(gemm_packed_with(&xp6, &wp6, *kernel, None).unwrap());
+            },
+        );
+    }
 
     // --- batched serving path: 64 heterogeneous ops ---------------------
     // A weight working set of 8 matrices reused across 64 requests with

@@ -4,7 +4,7 @@
 //! with [`super::quantize`] and substantiates the memory-footprint claims
 //! (bits/value) quoted in the README.
 
-use super::packed::PlaneDtype;
+use super::packed::PlaneLayout;
 use super::quantize::{floor_log2, Quantizer};
 use super::rounding::round_value;
 use super::{EXPONENT_MAX, EXPONENT_MIN};
@@ -55,14 +55,19 @@ impl BlockFormat {
         32.0 / self.bits_per_value()
     }
 
-    /// Host mantissa-plane element type for this format (`i8` up to
-    /// 8-bit mantissas, `i16` beyond) — the dtype
-    /// [`super::packed::BfpMatrix`] stores.
-    pub fn plane_dtype(&self) -> PlaneDtype {
-        if self.mantissa_bits <= 8 {
-            PlaneDtype::I8
+    /// Host mantissa-plane storage layout for this format — what
+    /// [`super::packed::BfpMatrix`] stores and what the GEMM kernel
+    /// registry dispatches on. Mantissas of at most 4 bits pack two
+    /// per byte (`I4Packed`) when the block size is even (odd blocks
+    /// would start mid-byte; they stay on the byte plane), wider
+    /// mantissas take one `i8` (`m <= 8`) or `i16` (`m <= 16`).
+    pub fn plane_layout(&self) -> PlaneLayout {
+        if self.mantissa_bits <= 4 && self.block_size % 2 == 0 {
+            PlaneLayout::I4Packed
+        } else if self.mantissa_bits <= 8 {
+            PlaneLayout::I8
         } else {
-            PlaneDtype::I16
+            PlaneLayout::I16
         }
     }
 

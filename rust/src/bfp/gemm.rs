@@ -1,246 +1,53 @@
-//! Cache-tiled, register-blocked, optionally multi-threaded fixed-point
-//! GEMM over packed BFP operands — the production datapath behind
+//! Packed-plane GEMM dispatch: banding, threading, and kernel-backend
+//! selection over encoded BFP operands — the production datapath behind
 //! [`super::matrix::hbfp_gemm`].
 //!
-//! # Kernel shape
+//! # Layering
 //!
-//! Output is computed in `TILE_J`-wide strips per activation row. For
-//! each block along the contraction axis, one activation block is
-//! loaded once and MAC'd against four weight blocks at a time (the
-//! register-blocked micro-kernel), accumulating in `i32` when both
-//! planes are 8-bit (the products fit 2^14, so i32 holds any practical
-//! block) and `i64` otherwise. Block sums are combined into the f64
-//! accumulator at tile edges via one exact power-of-two scale per block
-//! pair.
+//! Since PR 4 the micro-kernel layer lives in [`super::kernels`] as a
+//! registry of interchangeable backends (portable scalar, unrolled
+//! autovec, runtime-detected AVX2), every one bit-identical to the
+//! scalar reference by construction: backends differ only in their
+//! exact integer block dots under one shared cache-tiled band loop.
+//! This module is the layer **above** the kernels:
 //!
-//! # Thread partitioning rule
+//! * [`gemm_packed`] validates operand geometry, hoists the per-block
+//!   decode scale shifts ([`band_shifts`]), picks the kernel for the
+//!   operand pair via [`super::kernels::active_kernel`] (dispatch is
+//!   per [`super::packed::PlaneLayout`] pair — nibble-packed 4-bit
+//!   operands get a nibble-consuming inner loop, not an unpack pass),
+//!   and splits the output over whole activation rows into contiguous
+//!   bands;
+//! * bands run as work items on the persistent [`crate::exec`] worker
+//!   pool (sized by [`crate::util::gemm_thread_budget`]) — no per-call
+//!   thread spawn. Each output element is accumulated by exactly one
+//!   band job in ascending block order, so any band count, any pool
+//!   width, and any registered kernel produce results bit-identical to
+//!   the scalar [`super::matrix::hbfp_gemm_scalar`] reference — the
+//!   property suites pin this per backend.
 //!
-//! Work is split over **whole activation rows** into contiguous bands.
-//! Bands run as work items on the persistent [`crate::exec`] worker
-//! pool (sized by [`crate::util::gemm_thread_budget`]:
-//! `BOOSTERS_GEMM_THREADS` override, else `available_parallelism`) —
-//! no per-call thread spawn. Each output element is still accumulated
-//! by exactly one band job in ascending block order, so the parallel
-//! result is bit-identical to the single-threaded one — and both are
-//! bit-identical to the scalar [`super::matrix::hbfp_gemm_scalar`]
-//! reference, which the property tests enforce.
-//!
-//! The tiled micro-kernel itself sits behind the [`GemmKernel`] trait
-//! ([`ScalarTiledKernel`] is the portable implementation) so a
-//! SIMD-explicit kernel can slot in without touching the dispatch,
-//! banding, or scheduling layers. Above this module, batch-level
-//! consumers enter through the asynchronous
+//! Kernel selection is overridable with `BOOSTERS_KERNEL`
+//! (`auto`/`scalar`/`autovec`/`avx2`, see
+//! [`crate::util::kernel_override`]); unsupported requests fall back
+//! loudly, never panic, and can never change numerics. Above this
+//! module, batch-level consumers enter through the asynchronous
 //! [`crate::exec::BfpService`] front door (single-op helpers like
 //! [`super::matrix::hbfp_gemm`] ride it via service sessions); this
 //! file stays the band-level execution substrate underneath.
 
 use super::block::scale_shift;
+use super::kernels::scalar::{AccessDot, SliceDot};
+use super::kernels::{exp2_f64, BlockDot, NibblePlane};
 use super::matrix::Mat;
-use super::packed::{BfpMatrix, Mantissa, MantissaPlane};
+use super::packed::BfpMatrix;
 use crate::exec::pool::Job;
 use anyhow::{bail, Result};
 
-/// Output-strip width of the micro-kernel (f64 accumulators held in
-/// registers while one activation block streams the weight plane).
-const TILE_J: usize = 8;
+pub use super::kernels::{active_kernel, registry, BandTask, GemmKernel, ScalarTiledKernel};
 
 /// Below this many MACs, dispatch overhead dominates; stay serial.
 /// Shared with the batch scheduler's whole-batch heuristic.
 pub(crate) const PARALLEL_MIN_MACS: usize = 1 << 22;
-
-/// Largest block size whose i8 x i8 block MAC provably fits i32
-/// (|product| <= 2^14, so 2^16 terms stay under 2^30).
-const MAX_I32_BLOCK: usize = 1 << 16;
-
-/// Exact 2^shift in f64. Bit-construction covers the normal range;
-/// `powi` handles the subnormal tail identically to the scalar path.
-#[inline]
-pub(crate) fn exp2_f64(shift: i32) -> f64 {
-    if (-1022..=1023).contains(&shift) {
-        f64::from_bits(((shift + 1023) as u64) << 52)
-    } else {
-        (2.0f64).powi(shift)
-    }
-}
-
-/// Integer MAC over one block pair.
-#[inline]
-fn dot_block<A: Mantissa, B: Mantissa>(a: &[A], w: &[B]) -> i64 {
-    if A::NARROW && B::NARROW && a.len() <= MAX_I32_BLOCK {
-        let mut acc = 0i32;
-        for (&x, &y) in a.iter().zip(w) {
-            acc += x.widen() * y.widen();
-        }
-        acc as i64
-    } else {
-        let mut acc = 0i64;
-        for (&x, &y) in a.iter().zip(w) {
-            acc += x.widen() as i64 * y.widen() as i64;
-        }
-        acc
-    }
-}
-
-/// Register-blocked micro-kernel: one activation block against four
-/// weight blocks, four accumulators live at once.
-#[inline]
-fn dot_block4<A: Mantissa, B: Mantissa>(
-    a: &[A],
-    w0: &[B],
-    w1: &[B],
-    w2: &[B],
-    w3: &[B],
-) -> [i64; 4] {
-    let n = a.len();
-    let (w0, w1, w2, w3) = (&w0[..n], &w1[..n], &w2[..n], &w3[..n]);
-    if A::NARROW && B::NARROW && n <= MAX_I32_BLOCK {
-        let (mut c0, mut c1, mut c2, mut c3) = (0i32, 0i32, 0i32, 0i32);
-        for i in 0..n {
-            let x = a[i].widen();
-            c0 += x * w0[i].widen();
-            c1 += x * w1[i].widen();
-            c2 += x * w2[i].widen();
-            c3 += x * w3[i].widen();
-        }
-        [c0 as i64, c1 as i64, c2 as i64, c3 as i64]
-    } else {
-        let (mut c0, mut c1, mut c2, mut c3) = (0i64, 0i64, 0i64, 0i64);
-        for i in 0..n {
-            let x = a[i].widen() as i64;
-            c0 += x * w0[i].widen() as i64;
-            c1 += x * w1[i].widen() as i64;
-            c2 += x * w2[i].widen() as i64;
-            c3 += x * w3[i].widen() as i64;
-        }
-        [c0, c1, c2, c3]
-    }
-}
-
-/// One contiguous band of activation rows (`r0 .. r0 + band_rows`).
-#[allow(clippy::too_many_arguments)]
-fn gemm_band<A: Mantissa, B: Mantissa>(
-    xm: &[A],
-    wm: &[B],
-    xsh: &[i32],
-    wsh: &[i32],
-    r0: usize,
-    band_rows: usize,
-    n: usize,
-    kb: usize,
-    b: usize,
-    out: &mut [f32],
-) {
-    let stride = kb * b;
-    let mut acc = [0.0f64; TILE_J];
-    for i in 0..band_rows {
-        let gi = r0 + i;
-        let xrow = &xm[gi * stride..(gi + 1) * stride];
-        let xs = &xsh[gi * kb..(gi + 1) * kb];
-        let orow = &mut out[i * n..(i + 1) * n];
-        let mut j0 = 0;
-        while j0 < n {
-            let tj = TILE_J.min(n - j0);
-            acc[..tj].fill(0.0);
-            for k in 0..kb {
-                let a = &xrow[k * b..(k + 1) * b];
-                let sx = xs[k];
-                let mut jj = 0;
-                while jj + 4 <= tj {
-                    let j = j0 + jj;
-                    let o0 = j * stride + k * b;
-                    let (o1, o2, o3) = (o0 + stride, o0 + 2 * stride, o0 + 3 * stride);
-                    let macs = dot_block4(
-                        a,
-                        &wm[o0..o0 + b],
-                        &wm[o1..o1 + b],
-                        &wm[o2..o2 + b],
-                        &wm[o3..o3 + b],
-                    );
-                    for (q, &mac) in macs.iter().enumerate() {
-                        if mac != 0 {
-                            acc[jj + q] += mac as f64 * exp2_f64(sx + wsh[(j + q) * kb + k]);
-                        }
-                    }
-                    jj += 4;
-                }
-                while jj < tj {
-                    let j = j0 + jj;
-                    let mac = dot_block(a, &wm[j * stride + k * b..j * stride + (k + 1) * b]);
-                    if mac != 0 {
-                        acc[jj] += mac as f64 * exp2_f64(sx + wsh[j * kb + k]);
-                    }
-                    jj += 1;
-                }
-            }
-            for (jj, &v) in acc[..tj].iter().enumerate() {
-                orow[j0 + jj] = v as f32;
-            }
-            j0 += tj;
-        }
-    }
-}
-
-/// One contiguous band of a GEMM: activation rows `r0 .. r0 + rows` of
-/// `x` against every packed column of `w`, writing the band's slice of
-/// the output. `xsh`/`wsh` are the precomputed per-block scale shifts
-/// ([`band_shifts`]) of the full operands.
-pub struct BandTask<'a> {
-    pub x: &'a BfpMatrix,
-    pub w: &'a BfpMatrix,
-    pub xsh: &'a [i32],
-    pub wsh: &'a [i32],
-    pub r0: usize,
-    pub rows: usize,
-    pub out: &'a mut [f32],
-}
-
-/// A band-level GEMM micro-kernel. Implementations must be pure
-/// functions of the task (no scheduling decisions) and must accumulate
-/// each output element's blocks in ascending contraction order so that
-/// every kernel is bit-compatible with the scalar reference. A
-/// SIMD-explicit kernel slots in by implementing this trait.
-pub trait GemmKernel: Send + Sync {
-    fn name(&self) -> &'static str;
-    fn run_band(&self, task: BandTask<'_>);
-}
-
-/// The portable cache-tiled, register-blocked kernel (see module docs).
-pub struct ScalarTiledKernel;
-
-impl GemmKernel for ScalarTiledKernel {
-    fn name(&self) -> &'static str {
-        "scalar-tiled"
-    }
-
-    fn run_band(&self, t: BandTask<'_>) {
-        let n = t.w.rows;
-        let kb = t.x.blocks_per_row;
-        let b = t.x.fmt.block_size;
-        debug_assert_eq!(kb, t.w.blocks_per_row);
-        match (&t.x.mantissas, &t.w.mantissas) {
-            (MantissaPlane::I8(a), MantissaPlane::I8(w)) => {
-                gemm_band(a, w, t.xsh, t.wsh, t.r0, t.rows, n, kb, b, t.out)
-            }
-            (MantissaPlane::I8(a), MantissaPlane::I16(w)) => {
-                gemm_band(a, w, t.xsh, t.wsh, t.r0, t.rows, n, kb, b, t.out)
-            }
-            (MantissaPlane::I16(a), MantissaPlane::I8(w)) => {
-                gemm_band(a, w, t.xsh, t.wsh, t.r0, t.rows, n, kb, b, t.out)
-            }
-            (MantissaPlane::I16(a), MantissaPlane::I16(w)) => {
-                gemm_band(a, w, t.xsh, t.wsh, t.r0, t.rows, n, kb, b, t.out)
-            }
-        }
-    }
-}
-
-static SCALAR_KERNEL: ScalarTiledKernel = ScalarTiledKernel;
-
-/// The kernel the runtime currently dispatches to. One home, so a
-/// future SIMD kernel (or per-arch selection) swaps in here.
-pub fn active_kernel() -> &'static dyn GemmKernel {
-    &SCALAR_KERNEL
-}
 
 /// Per-block decode scale shifts of a packed operand — hoisted out of
 /// the band loop and shared between the single-op path and the batch
@@ -264,15 +71,44 @@ fn gemm_threads(rows: usize, cols: usize, k: usize) -> usize {
 /// `x (m x K)` times the matrix whose columns `rhs_t` packs
 /// (`rhs_t.rows = n` columns over `K`), producing `m x n`. Mantissa
 /// widths may differ between the operands (the bit-sliced
-/// mixed-precision case); block sizes must match.
+/// mixed-precision case — including nibble-packed against byte
+/// planes); block sizes must match. The kernel backend is chosen per
+/// operand-layout pair by the registry.
 pub fn gemm_packed(x: &BfpMatrix, rhs_t: &BfpMatrix) -> Result<Mat> {
-    gemm_packed_with(x, rhs_t, active_kernel(), None)
+    // `active_kernel` only returns backends that support the
+    // combination (mismatched block sizes error in the inner path).
+    let kernel = active_kernel(
+        x.mantissas.layout(),
+        rhs_t.mantissas.layout(),
+        x.fmt.block_size,
+    );
+    gemm_packed_inner(x, rhs_t, kernel, None)
 }
 
 /// [`gemm_packed`] with an explicit kernel and band-count override
 /// (`None` = auto: size heuristic + pool budget). Bands execute on the
-/// persistent [`crate::exec`] pool; any band count is bit-identical.
-pub(crate) fn gemm_packed_with(
+/// persistent [`crate::exec`] pool; any band count and any registered
+/// kernel is bit-identical. Public so tests and benches can pin every
+/// backend from [`super::kernels::registry`] individually. A kernel
+/// that does not support the operands' layout pair degrades down the
+/// registry's fallback chain (never panics, never changes bits) —
+/// same contract as [`crate::exec::BatchGemm::with_kernel`].
+pub fn gemm_packed_with(
+    x: &BfpMatrix,
+    rhs_t: &BfpMatrix,
+    kernel: &'static dyn GemmKernel,
+    threads: Option<usize>,
+) -> Result<Mat> {
+    let kernel = registry().select_from(
+        kernel,
+        x.mantissas.layout(),
+        rhs_t.mantissas.layout(),
+        x.fmt.block_size.max(rhs_t.fmt.block_size),
+    );
+    gemm_packed_inner(x, rhs_t, kernel, threads)
+}
+
+fn gemm_packed_inner(
     x: &BfpMatrix,
     rhs_t: &BfpMatrix,
     kernel: &dyn GemmKernel,
@@ -340,7 +176,7 @@ pub(crate) fn gemm_packed_with(
 /// operands: integer MAC per block pair, one exponent add per pair,
 /// f64 accumulation across blocks in ascending order — the packed
 /// replacement for the scalar `bfp_dot_blocks` loop, bit-identical
-/// to it.
+/// to it for every plane-layout pair (nibble-packed included).
 pub fn packed_dot(x: &BfpMatrix, y: &BfpMatrix) -> Result<f64> {
     if x.rows != y.rows || x.cols != y.cols {
         bail!(
@@ -360,34 +196,64 @@ pub fn packed_dot(x: &BfpMatrix, y: &BfpMatrix) -> Result<f64> {
     }
     let b = x.fmt.block_size;
     let (mx, my) = (x.fmt.mantissa_bits, y.fmt.mantissa_bits);
+    // Byte/i16 pairs keep the zipped-subslice inner loop (the shape
+    // LLVM autovectorizes); only nibble-involved pairs pay the
+    // index-generic access — same split as the scalar GEMM kernel.
+    use crate::bfp::packed::MantissaPlane as P;
+    // Monomorphized per plane pair (no dyn indirection on the dot hot
+    // path — blocks can be as small as a few MACs).
+    macro_rules! run {
+        ($d:expr) => {
+            dot_over(&$d, &x.exponents, &y.exponents, mx, my, b)
+        };
+    }
     Ok(match (&x.mantissas, &y.mantissas) {
-        (MantissaPlane::I8(a), MantissaPlane::I8(w)) => {
-            dot_typed(a, w, &x.exponents, &y.exponents, mx, my, b)
-        }
-        (MantissaPlane::I8(a), MantissaPlane::I16(w)) => {
-            dot_typed(a, w, &x.exponents, &y.exponents, mx, my, b)
-        }
-        (MantissaPlane::I16(a), MantissaPlane::I8(w)) => {
-            dot_typed(a, w, &x.exponents, &y.exponents, mx, my, b)
-        }
-        (MantissaPlane::I16(a), MantissaPlane::I16(w)) => {
-            dot_typed(a, w, &x.exponents, &y.exponents, mx, my, b)
-        }
+        (P::I8(a), P::I8(w)) => run!(SliceDot {
+            a: a.as_slice(),
+            w: w.as_slice(),
+        }),
+        (P::I8(a), P::I16(w)) => run!(SliceDot {
+            a: a.as_slice(),
+            w: w.as_slice(),
+        }),
+        (P::I16(a), P::I8(w)) => run!(SliceDot {
+            a: a.as_slice(),
+            w: w.as_slice(),
+        }),
+        (P::I16(a), P::I16(w)) => run!(SliceDot {
+            a: a.as_slice(),
+            w: w.as_slice(),
+        }),
+        (P::I4Packed(a), P::I4Packed(w)) => run!(AccessDot {
+            a: NibblePlane(a),
+            w: NibblePlane(w),
+        }),
+        (P::I4Packed(a), P::I8(w)) => run!(AccessDot {
+            a: NibblePlane(a),
+            w: w.as_slice(),
+        }),
+        (P::I4Packed(a), P::I16(w)) => run!(AccessDot {
+            a: NibblePlane(a),
+            w: w.as_slice(),
+        }),
+        (P::I8(a), P::I4Packed(w)) => run!(AccessDot {
+            a: a.as_slice(),
+            w: NibblePlane(w),
+        }),
+        (P::I16(a), P::I4Packed(w)) => run!(AccessDot {
+            a: a.as_slice(),
+            w: NibblePlane(w),
+        }),
     })
 }
 
-fn dot_typed<A: Mantissa, B: Mantissa>(
-    a: &[A],
-    w: &[B],
-    xe: &[i32],
-    ye: &[i32],
-    mx: u32,
-    my: u32,
-    b: usize,
-) -> f64 {
+/// Shared blockwise dot-accumulation loop of [`packed_dot`]: exact
+/// integer MAC per block pair, one exponent add per pair, f64
+/// accumulation in ascending block order.
+fn dot_over<D: BlockDot>(d: &D, xe: &[i32], ye: &[i32], mx: u32, my: u32, b: usize) -> f64 {
     let mut acc = 0.0f64;
     for (bi, (xe, ye)) in xe.iter().zip(ye).enumerate() {
-        let mac = dot_block(&a[bi * b..(bi + 1) * b], &w[bi * b..(bi + 1) * b]);
+        let mac = d.dot(bi * b, bi * b, b);
         if mac != 0 {
             acc += mac as f64 * exp2_f64(scale_shift(*xe, mx) + scale_shift(*ye, my));
         }
@@ -398,25 +264,12 @@ fn dot_typed<A: Mantissa, B: Mantissa>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bfp::{BlockFormat, Quantizer};
+    use crate::bfp::{BlockFormat, PlaneLayout, Quantizer};
     use crate::util::Rng;
 
     fn randn(n: usize, seed: u64) -> Vec<f32> {
         let mut r = Rng::new(seed);
         (0..n).map(|_| r.normal_scaled(1.0)).collect()
-    }
-
-    #[test]
-    fn exp2_matches_powi_across_the_exponent_budget() {
-        // Encoded exponents live in [-512, 511]; pair shifts span about
-        // [-1052, 1022], crossing into the subnormal range.
-        for shift in (-1060..=1030).step_by(7) {
-            assert_eq!(
-                exp2_f64(shift).to_bits(),
-                (2.0f64).powi(shift).to_bits(),
-                "shift {shift}"
-            );
-        }
     }
 
     #[test]
@@ -436,13 +289,16 @@ mod tests {
 
     #[test]
     fn mixed_width_operands_compose() {
-        // HBFP6 activations against HBFP12 weights: i8 x i16 planes.
-        let f6 = BlockFormat::new(6, 32).unwrap();
+        // HBFP4 activations against HBFP12 weights: nibble x i16
+        // planes — the widest layout gap the dispatch must bridge.
+        let f4 = BlockFormat::new(4, 32).unwrap();
         let f12 = BlockFormat::new(12, 32).unwrap();
         let x = Mat::new(3, 64, randn(192, 3)).unwrap();
         let w = Mat::new(64, 4, randn(256, 4)).unwrap();
-        let xp = BfpMatrix::encode(&x.data, 3, 64, f6, Quantizer::nearest(6)).unwrap();
+        let xp = BfpMatrix::encode(&x.data, 3, 64, f4, Quantizer::nearest(4)).unwrap();
         let wp = BfpMatrix::encode_transposed(&w, f12, Quantizer::nearest(12)).unwrap();
+        assert_eq!(xp.mantissas.layout(), PlaneLayout::I4Packed);
+        assert_eq!(wp.mantissas.layout(), PlaneLayout::I16);
         let got = gemm_packed(&xp, &wp).unwrap();
         let want = xp.to_mat().matmul(&wp.decode_transposed()).unwrap();
         for (g, w) in got.data.iter().zip(&want.data) {
@@ -451,7 +307,7 @@ mod tests {
     }
 
     #[test]
-    fn threaded_result_is_bit_identical_to_serial() {
+    fn threaded_result_is_bit_identical_to_serial_for_every_kernel() {
         // Drives the dispatcher with explicit band counts (no env-var
         // mutation, which would race other tests in this binary).
         let fmt = BlockFormat::new(4, 64).unwrap();
@@ -460,38 +316,45 @@ mod tests {
         let w = Mat::new(640, 96, randn(640 * 96, 6)).unwrap();
         let xp = BfpMatrix::encode(&x.data, 96, 640, fmt, q).unwrap();
         let wp = BfpMatrix::encode_transposed(&w, fmt, q).unwrap();
-        // hbfp4 lives on the narrow plane; the typed accessor replaces
-        // the old panic-on-mismatch destructure.
-        assert!(xp.mantissas.try_i8().is_ok());
-        assert!(wp.mantissas.try_i8().is_ok());
-        let kernel = active_kernel();
-        let serial = gemm_packed_with(&xp, &wp, kernel, Some(1)).unwrap();
-        let threaded = gemm_packed_with(&xp, &wp, kernel, Some(4)).unwrap();
-        // Uneven band split: 96 rows over 5 bands -> 20,20,20,20,16.
-        let uneven = gemm_packed_with(&xp, &wp, kernel, Some(5)).unwrap();
-        for ((s, t), u) in serial.data.iter().zip(&threaded.data).zip(&uneven.data) {
-            assert_eq!(s.to_bits(), t.to_bits());
-            assert_eq!(s.to_bits(), u.to_bits());
+        // hbfp4 with an even block lives on the nibble-packed plane.
+        assert!(xp.mantissas.try_i4().is_ok());
+        assert!(wp.mantissas.try_i4().is_ok());
+        let reference = gemm_packed_with(&xp, &wp, &ScalarTiledKernel, Some(1)).unwrap();
+        for kernel in registry().all() {
+            let serial = gemm_packed_with(&xp, &wp, *kernel, Some(1)).unwrap();
+            let threaded = gemm_packed_with(&xp, &wp, *kernel, Some(4)).unwrap();
+            // Uneven band split: 96 rows over 5 bands -> 20,20,20,20,16.
+            let uneven = gemm_packed_with(&xp, &wp, *kernel, Some(5)).unwrap();
+            for ((s, t), u) in serial.data.iter().zip(&threaded.data).zip(&uneven.data) {
+                assert_eq!(s.to_bits(), t.to_bits(), "kernel {}", kernel.name());
+                assert_eq!(s.to_bits(), u.to_bits(), "kernel {}", kernel.name());
+            }
+            for (s, r) in serial.data.iter().zip(&reference.data) {
+                assert_eq!(s.to_bits(), r.to_bits(), "kernel {}", kernel.name());
+            }
         }
-        // The public entry agrees with the explicit serial kernel.
+        // The public entry agrees with the explicit serial reference.
         let via_public = gemm_packed(&xp, &wp).unwrap();
-        for (s, p) in serial.data.iter().zip(&via_public.data) {
+        for (s, p) in reference.data.iter().zip(&via_public.data) {
             assert_eq!(s.to_bits(), p.to_bits());
         }
     }
 
     #[test]
     fn plane_accessor_error_path_is_typed() {
-        // The hot path reports dtype mismatches as typed errors instead
-        // of panicking (see `MantissaPlane::try_i8`/`try_i16`).
+        // The hot path reports layout mismatches as typed errors
+        // instead of panicking (see `MantissaPlane::try_i8`/`try_i16`).
         let f12 = BlockFormat::new(12, 16).unwrap();
         let wide = BfpMatrix::encode(&randn(32, 10), 2, 16, f12, Quantizer::nearest(12)).unwrap();
         assert!(wide.mantissas.try_i16().is_ok());
         let err = wide.mantissas.try_i8().unwrap_err();
-        assert_eq!(err.expected, crate::bfp::PlaneDtype::I8);
-        assert_eq!(err.found, crate::bfp::PlaneDtype::I16);
+        assert_eq!(err.expected, PlaneLayout::I8);
+        assert_eq!(err.found, PlaneLayout::I16);
         assert!(err.to_string().contains("i16"), "{err}");
-        assert!(active_kernel().name().contains("scalar"));
+        // Wide planes always dispatch to the scalar backend — the only
+        // kernel that supports them.
+        let k = active_kernel(PlaneLayout::I16, PlaneLayout::I16, 16);
+        assert!(k.name().contains("scalar"), "{}", k.name());
     }
 
     #[test]
@@ -505,5 +368,33 @@ mod tests {
         assert!(gemm_packed(&a, &b).is_err()); // block size mismatch
         assert!(gemm_packed(&a, &c).is_err()); // contraction mismatch
         assert!(packed_dot(&a, &c).is_err());
+    }
+
+    #[test]
+    fn packed_dot_agrees_across_layout_pairs() {
+        // Nibble x nibble, nibble x i8, and nibble x i16 dots all go
+        // through the same access-generic block dot; cross-check each
+        // against the dequantized f64 dot.
+        let n = 200usize;
+        let x = randn(n, 21);
+        let y = randn(n, 22);
+        for (mx, my) in [(4u32, 4u32), (4, 6), (6, 4), (3, 12)] {
+            let fx = BlockFormat::new(mx, 32).unwrap();
+            let fy = BlockFormat::new(my, 32).unwrap();
+            let xp = BfpMatrix::encode(&x, 1, n, fx, Quantizer::nearest(mx)).unwrap();
+            let yp = BfpMatrix::encode(&y, 1, n, fy, Quantizer::nearest(my)).unwrap();
+            let got = packed_dot(&xp, &yp).unwrap();
+            let want: f64 = xp
+                .to_mat()
+                .data
+                .iter()
+                .zip(&yp.to_mat().data)
+                .map(|(&a, &b)| a as f64 * b as f64)
+                .sum();
+            assert!(
+                (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                "mx={mx} my={my}: {got} vs {want}"
+            );
+        }
     }
 }

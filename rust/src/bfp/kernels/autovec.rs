@@ -1,0 +1,233 @@
+//! Unrolled, autovectorization-friendly backend for narrow mantissa
+//! planes (`i8` bytes and nibble-packed 4-bit pairs).
+//!
+//! The inner loops keep a fixed array of independent i32 lane
+//! accumulators over exact-size chunks, the shape LLVM reliably turns
+//! into SIMD on any target — no intrinsics, no feature detection.
+//! Integer addition is associative, so lane-reassociated sums equal
+//! the scalar kernel's sequential sums exactly; bit-identity is free.
+//!
+//! Nibble-packed operands are consumed **directly**: one byte yields
+//! two sign-extended 4-bit mantissas inside the loop body (values
+//! `2j`/`2j + 1` pair up across operands because both planes share the
+//! packing order), so the 4-bit formats run at byte-stream bandwidth.
+
+use super::{run_tiled_band, BandTask, BlockDot, GemmKernel, MAX_I32_BLOCK};
+use crate::bfp::packed::{nib_hi, nib_lo, MantissaPlane, PlaneLayout};
+
+/// Lane width of the unrolled accumulators. 8 i32 lanes map onto one
+/// AVX2 register or two NEON registers; narrower targets just unroll.
+const LANES: usize = 8;
+
+/// The unrolled narrow-plane kernel (see module docs).
+pub struct AutovecKernel;
+
+#[inline]
+fn dot_i8_unrolled(a: &[i8], w: &[i8]) -> i32 {
+    let mut lanes = [0i32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cw = w.chunks_exact(LANES);
+    for (xa, xw) in (&mut ca).zip(&mut cw) {
+        for l in 0..LANES {
+            lanes[l] += xa[l] as i32 * xw[l] as i32;
+        }
+    }
+    let mut acc: i32 = lanes.iter().sum();
+    for (x, y) in ca.remainder().iter().zip(cw.remainder()) {
+        acc += *x as i32 * *y as i32;
+    }
+    acc
+}
+
+/// Nibble x nibble over packed bytes: each byte pair contributes
+/// `lo*lo + hi*hi` (the packing order aligns values across operands).
+#[inline]
+fn dot_nib_nib(a: &[u8], w: &[u8]) -> i32 {
+    let mut lanes = [0i32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cw = w.chunks_exact(LANES);
+    for (xa, xw) in (&mut ca).zip(&mut cw) {
+        for l in 0..LANES {
+            lanes[l] += nib_lo(xa[l]) as i32 * nib_lo(xw[l]) as i32
+                + nib_hi(xa[l]) as i32 * nib_hi(xw[l]) as i32;
+        }
+    }
+    let mut acc: i32 = lanes.iter().sum();
+    for (x, y) in ca.remainder().iter().zip(cw.remainder()) {
+        acc += nib_lo(*x) as i32 * nib_lo(*y) as i32 + nib_hi(*x) as i32 * nib_hi(*y) as i32;
+    }
+    acc
+}
+
+/// Nibble x i8 (mixed mantissa widths, e.g. HBFP4 activations against
+/// HBFP6 weights): byte `j` of the packed side pairs with bytes
+/// `2j`/`2j + 1` of the byte plane.
+#[inline]
+fn dot_nib_i8(a: &[u8], w: &[i8]) -> i32 {
+    let mut acc0 = 0i32;
+    let mut acc1 = 0i32;
+    for (j, &byte) in a.iter().enumerate() {
+        acc0 += nib_lo(byte) as i32 * w[2 * j] as i32;
+        acc1 += nib_hi(byte) as i32 * w[2 * j + 1] as i32;
+    }
+    acc0 + acc1
+}
+
+/// Narrow block-dot dispatch by (sub)plane pair at absolute offsets.
+/// Offsets and lengths on the nibble side are always even and
+/// byte-aligned (even block sizes — see the layout contract).
+enum NarrowDot<'a> {
+    I8I8(&'a [i8], &'a [i8]),
+    NibNib(&'a [u8], &'a [u8]),
+    NibI8(&'a [u8], &'a [i8]),
+    I8Nib(&'a [i8], &'a [u8]),
+}
+
+impl BlockDot for NarrowDot<'_> {
+    #[inline]
+    fn dot(&self, a_off: usize, w_off: usize, len: usize) -> i64 {
+        match self {
+            NarrowDot::I8I8(a, w) => {
+                dot_i8_unrolled(&a[a_off..a_off + len], &w[w_off..w_off + len]) as i64
+            }
+            NarrowDot::NibNib(a, w) => {
+                dot_nib_nib(&a[a_off / 2..(a_off + len) / 2], &w[w_off / 2..(w_off + len) / 2])
+                    as i64
+            }
+            NarrowDot::NibI8(a, w) => {
+                dot_nib_i8(&a[a_off / 2..(a_off + len) / 2], &w[w_off..w_off + len]) as i64
+            }
+            NarrowDot::I8Nib(a, w) => {
+                dot_nib_i8(&w[w_off / 2..(w_off + len) / 2], &a[a_off..a_off + len]) as i64
+            }
+        }
+    }
+
+    /// Register-blocked form for the homogeneous pairs: the activation
+    /// block streams once against four weight blocks with four live
+    /// accumulators (the shape the shared band loop is built around).
+    /// Mixed nibble/byte pairs (rare cross-width ops) keep four
+    /// independent dots.
+    #[inline]
+    fn dot4(&self, a_off: usize, w_offs: [usize; 4], len: usize) -> [i64; 4] {
+        let [o0, o1, o2, o3] = w_offs;
+        match self {
+            NarrowDot::I8I8(a, w) => {
+                // Lane-unrolled x register-blocked: four i32 lanes per
+                // weight stream (LLVM folds each quad into one SIMD
+                // accumulator), activation chunk loaded once per step.
+                // Exact integer sums, so lane reassociation keeps
+                // bit-identity with the sequential reference.
+                const Q: usize = 4;
+                let a = &a[a_off..a_off + len];
+                let mut ca = a.chunks_exact(Q);
+                let mut cw = [
+                    w[o0..o0 + len].chunks_exact(Q),
+                    w[o1..o1 + len].chunks_exact(Q),
+                    w[o2..o2 + len].chunks_exact(Q),
+                    w[o3..o3 + len].chunks_exact(Q),
+                ];
+                let mut lanes = [[0i32; Q]; 4];
+                for xa in &mut ca {
+                    for (q, cwq) in cw.iter_mut().enumerate() {
+                        let xw = cwq.next().expect("weight blocks match block length");
+                        for l in 0..Q {
+                            lanes[q][l] += xa[l] as i32 * xw[l] as i32;
+                        }
+                    }
+                }
+                let mut out = [0i32; 4];
+                for (o, qlanes) in out.iter_mut().zip(&lanes) {
+                    *o = qlanes.iter().sum();
+                }
+                for (i, &x) in ca.remainder().iter().enumerate() {
+                    for (o, cwq) in out.iter_mut().zip(&cw) {
+                        *o += x as i32 * cwq.remainder()[i] as i32;
+                    }
+                }
+                let [c0, c1, c2, c3] = out;
+                [c0 as i64, c1 as i64, c2 as i64, c3 as i64]
+            }
+            NarrowDot::NibNib(a, w) => {
+                let ab = &a[a_off / 2..(a_off + len) / 2];
+                let w0 = &w[o0 / 2..(o0 + len) / 2];
+                let w1 = &w[o1 / 2..(o1 + len) / 2];
+                let w2 = &w[o2 / 2..(o2 + len) / 2];
+                let w3 = &w[o3 / 2..(o3 + len) / 2];
+                let (mut c0, mut c1, mut c2, mut c3) = (0i32, 0i32, 0i32, 0i32);
+                for i in 0..ab.len() {
+                    let (lo, hi) = (nib_lo(ab[i]) as i32, nib_hi(ab[i]) as i32);
+                    c0 += lo * nib_lo(w0[i]) as i32 + hi * nib_hi(w0[i]) as i32;
+                    c1 += lo * nib_lo(w1[i]) as i32 + hi * nib_hi(w1[i]) as i32;
+                    c2 += lo * nib_lo(w2[i]) as i32 + hi * nib_hi(w2[i]) as i32;
+                    c3 += lo * nib_lo(w3[i]) as i32 + hi * nib_hi(w3[i]) as i32;
+                }
+                [c0 as i64, c1 as i64, c2 as i64, c3 as i64]
+            }
+            _ => [
+                self.dot(a_off, o0, len),
+                self.dot(a_off, o1, len),
+                self.dot(a_off, o2, len),
+                self.dot(a_off, o3, len),
+            ],
+        }
+    }
+}
+
+impl GemmKernel for AutovecKernel {
+    fn name(&self) -> &'static str {
+        "autovec"
+    }
+
+    /// Narrow planes only, and only blocks whose MAC fits the i32 lane
+    /// accumulators — the registry keeps wide planes and oversized
+    /// blocks on the scalar kernel, so the reported kernel identity is
+    /// the backend that actually ran.
+    fn supports(&self, x: PlaneLayout, w: PlaneLayout, block: usize) -> bool {
+        block <= MAX_I32_BLOCK
+            && matches!(x, PlaneLayout::I4Packed | PlaneLayout::I8)
+            && matches!(w, PlaneLayout::I4Packed | PlaneLayout::I8)
+    }
+
+    fn run_band(&self, t: BandTask<'_>) {
+        if t.x.fmt.block_size > MAX_I32_BLOCK || t.w.fmt.block_size > MAX_I32_BLOCK {
+            // Unreachable via the registry (`supports` gates on block
+            // size); direct callers stay correct via the reference.
+            return super::ScalarTiledKernel.run_band(t);
+        }
+        let BandTask {
+            x,
+            w,
+            xsh,
+            wsh,
+            r0,
+            rows,
+            out,
+        } = t;
+        let n = w.rows;
+        let kb = x.blocks_per_row;
+        let b = x.fmt.block_size;
+        debug_assert_eq!(kb, w.blocks_per_row);
+        let d = match (&x.mantissas, &w.mantissas) {
+            (MantissaPlane::I8(a), MantissaPlane::I8(wm)) => NarrowDot::I8I8(a, wm),
+            (MantissaPlane::I4Packed(a), MantissaPlane::I4Packed(wm)) => NarrowDot::NibNib(a, wm),
+            (MantissaPlane::I4Packed(a), MantissaPlane::I8(wm)) => NarrowDot::NibI8(a, wm),
+            (MantissaPlane::I8(a), MantissaPlane::I4Packed(wm)) => NarrowDot::I8Nib(a, wm),
+            _ => {
+                // Unsupported pair dispatched here by mistake: stay
+                // correct anyway via the reference kernel.
+                debug_assert!(false, "autovec kernel dispatched a wide plane");
+                return super::ScalarTiledKernel.run_band(BandTask {
+                    x,
+                    w,
+                    xsh,
+                    wsh,
+                    r0,
+                    rows,
+                    out,
+                });
+            }
+        };
+        run_tiled_band(&d, xsh, wsh, r0, rows, n, kb, b, out)
+    }
+}

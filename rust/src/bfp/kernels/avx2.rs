@@ -1,0 +1,308 @@
+//! Explicit AVX2 backend (x86_64 only): widening integer MACs over
+//! narrow planes via `vpmovsxbw` + `vpmaddwd`.
+//!
+//! Registered by the kernel registry only when
+//! `is_x86_feature_detected!("avx2")` holds; `run_band` re-checks and
+//! falls back to the scalar kernel (loudly, in debug builds) if it is
+//! ever dispatched on a host without AVX2, so the unsafe
+//! `#[target_feature]` calls below are never reached undetected.
+//!
+//! # Exactness = bit-identity
+//!
+//! Every step is exact integer arithmetic: i8 (or sign-extended
+//! nibble) products fit i16 pairs fit i32 lanes — for blocks up to
+//! [`MAX_I32_BLOCK`] the per-lane accumulators provably cannot wrap
+//! (`2^12` iterations x `2^15` per `vpmaddwd` pair-sum < `2^27`).
+//! Integer addition is associative, so the lane-parallel sums equal
+//! the scalar kernel's sequential sums bit-for-bit once combined; the
+//! shared tiled band loop fixes the f64 combination order. Larger
+//! blocks (which need i64 accumulation) delegate to the scalar
+//! kernel.
+//!
+//! Nibble-packed operands are consumed directly from the byte stream:
+//! low nibbles sign-extend via `((b & 0xF) ^ 8) - 8` on 32 lanes at
+//! once, high nibbles via a 4-bit shift first — no unpack buffer.
+
+use super::{run_tiled_band, BandTask, BlockDot, GemmKernel, MAX_I32_BLOCK};
+use crate::bfp::packed::{nib_hi, nib_lo, MantissaPlane, PlaneLayout};
+use std::arch::x86_64::*;
+
+/// The runtime-detected AVX2 widening kernel (see module docs).
+pub struct Avx2Kernel;
+
+/// Horizontal sum of eight i32 lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi32(v: __m256i) -> i32 {
+    let lo = _mm256_castsi256_si128(v);
+    let hi = _mm256_extracti128_si256::<1>(v);
+    let s = _mm_add_epi32(lo, hi);
+    // [a,b,c,d] -> [c,d,a,b] -> pairwise -> [b',a',...] -> total in lane 0.
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b01_00_11_10>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b10_11_00_01>(s));
+    _mm_cvtsi128_si32(s)
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_i8_avx2(a: &[i8], w: &[i8]) -> i32 {
+    let n = a.len();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0;
+    while i + 16 <= n {
+        let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(i) as *const __m128i));
+        let vw = _mm256_cvtepi8_epi16(_mm_loadu_si128(w.as_ptr().add(i) as *const __m128i));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vw));
+        i += 16;
+    }
+    let mut sum = hsum_epi32(acc);
+    while i < n {
+        sum += a[i] as i32 * w[i] as i32;
+        i += 1;
+    }
+    sum
+}
+
+/// Widen 32 i8 lanes and multiply-accumulate against another 32 into
+/// the i32 accumulator.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn mac_i8x32(acc: __m256i, x: __m256i, y: __m256i) -> __m256i {
+    let x_lo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(x));
+    let y_lo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(y));
+    let x_hi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(x));
+    let y_hi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(y));
+    let acc = _mm256_add_epi32(acc, _mm256_madd_epi16(x_lo, y_lo));
+    _mm256_add_epi32(acc, _mm256_madd_epi16(x_hi, y_hi))
+}
+
+/// Nibble x nibble dot over packed byte streams (`nb` bytes = `2 * nb`
+/// values): lo/hi nibbles sign-extend to i8 lanes in-register, then
+/// widen-MAC like the i8 path.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_nib_avx2(a: &[u8], w: &[u8]) -> i32 {
+    let nb = a.len();
+    let lo_mask = _mm256_set1_epi8(0x0F);
+    let bias = _mm256_set1_epi8(0x08);
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0;
+    while i + 32 <= nb {
+        let ba = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+        let bw = _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i);
+        let (la, ha) = nib_lanes(ba, lo_mask, bias);
+        let (lw, hw) = nib_lanes(bw, lo_mask, bias);
+        // lo_a[j] pairs with lo_w[j] (value 2j), hi with hi (2j + 1).
+        acc = mac_i8x32(acc, la, lw);
+        acc = mac_i8x32(acc, ha, hw);
+        i += 32;
+    }
+    let mut sum = hsum_epi32(acc);
+    while i < nb {
+        sum += nib_lo(a[i]) as i32 * nib_lo(w[i]) as i32
+            + nib_hi(a[i]) as i32 * nib_hi(w[i]) as i32;
+        i += 1;
+    }
+    sum
+}
+
+/// Widen one 16-element i8 load to 16 i16 lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn load_i8x16(s: &[i8], i: usize) -> __m256i {
+    _mm256_cvtepi8_epi16(_mm_loadu_si128(s.as_ptr().add(i) as *const __m128i))
+}
+
+/// Register-blocked i8 dot: one activation stream against four weight
+/// streams, four accumulator vectors live.
+#[target_feature(enable = "avx2")]
+unsafe fn dot4_i8_avx2(a: &[i8], ws: [&[i8]; 4]) -> [i32; 4] {
+    let n = a.len();
+    let mut acc = [_mm256_setzero_si256(); 4];
+    let mut i = 0;
+    while i + 16 <= n {
+        let va = load_i8x16(a, i);
+        for (q, w) in ws.iter().enumerate() {
+            acc[q] = _mm256_add_epi32(acc[q], _mm256_madd_epi16(va, load_i8x16(w, i)));
+        }
+        i += 16;
+    }
+    let mut out = [0i32; 4];
+    for (o, acc) in out.iter_mut().zip(acc) {
+        *o = hsum_epi32(acc);
+    }
+    while i < n {
+        for (o, w) in out.iter_mut().zip(&ws) {
+            *o += a[i] as i32 * w[i] as i32;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Sign-extend the low/high nibbles of a byte vector to i8 lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn nib_lanes(b: __m256i, lo_mask: __m256i, bias: __m256i) -> (__m256i, __m256i) {
+    let lo = _mm256_sub_epi8(_mm256_xor_si256(_mm256_and_si256(b, lo_mask), bias), bias);
+    let hi = _mm256_sub_epi8(
+        _mm256_xor_si256(_mm256_and_si256(_mm256_srli_epi16::<4>(b), lo_mask), bias),
+        bias,
+    );
+    (lo, hi)
+}
+
+/// Register-blocked nibble dot: the activation nibbles extract once
+/// per step against four packed weight streams.
+#[target_feature(enable = "avx2")]
+unsafe fn dot4_nib_avx2(a: &[u8], ws: [&[u8]; 4]) -> [i32; 4] {
+    let nb = a.len();
+    let lo_mask = _mm256_set1_epi8(0x0F);
+    let bias = _mm256_set1_epi8(0x08);
+    let mut acc = [_mm256_setzero_si256(); 4];
+    let mut i = 0;
+    while i + 32 <= nb {
+        let ba = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+        let (la, ha) = nib_lanes(ba, lo_mask, bias);
+        for (q, w) in ws.iter().enumerate() {
+            let bw = _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i);
+            let (lw, hw) = nib_lanes(bw, lo_mask, bias);
+            acc[q] = mac_i8x32(acc[q], la, lw);
+            acc[q] = mac_i8x32(acc[q], ha, hw);
+        }
+        i += 32;
+    }
+    let mut out = [0i32; 4];
+    for (o, acc) in out.iter_mut().zip(acc) {
+        *o = hsum_epi32(acc);
+    }
+    while i < nb {
+        for (o, w) in out.iter_mut().zip(&ws) {
+            *o += nib_lo(a[i]) as i32 * nib_lo(w[i]) as i32
+                + nib_hi(a[i]) as i32 * nib_hi(w[i]) as i32;
+        }
+        i += 1;
+    }
+    out
+}
+
+enum Avx2Dot<'a> {
+    I8I8(&'a [i8], &'a [i8]),
+    NibNib(&'a [u8], &'a [u8]),
+}
+
+impl BlockDot for Avx2Dot<'_> {
+    #[inline]
+    fn dot(&self, a_off: usize, w_off: usize, len: usize) -> i64 {
+        // Safety: `Avx2Kernel::run_band` verified AVX2 support before
+        // building this dispatcher.
+        match self {
+            Avx2Dot::I8I8(a, w) => unsafe {
+                dot_i8_avx2(&a[a_off..a_off + len], &w[w_off..w_off + len]) as i64
+            },
+            Avx2Dot::NibNib(a, w) => unsafe {
+                dot_nib_avx2(&a[a_off / 2..(a_off + len) / 2], &w[w_off / 2..(w_off + len) / 2])
+                    as i64
+            },
+        }
+    }
+
+    /// Register-blocked form: the widened activation vector loads once
+    /// per step and MACs against four weight streams.
+    #[inline]
+    fn dot4(&self, a_off: usize, w_offs: [usize; 4], len: usize) -> [i64; 4] {
+        let [o0, o1, o2, o3] = w_offs;
+        // Safety: see `dot` — AVX2 support was verified at dispatch.
+        let out = match self {
+            Avx2Dot::I8I8(a, w) => unsafe {
+                dot4_i8_avx2(
+                    &a[a_off..a_off + len],
+                    [
+                        &w[o0..o0 + len],
+                        &w[o1..o1 + len],
+                        &w[o2..o2 + len],
+                        &w[o3..o3 + len],
+                    ],
+                )
+            },
+            Avx2Dot::NibNib(a, w) => unsafe {
+                dot4_nib_avx2(
+                    &a[a_off / 2..(a_off + len) / 2],
+                    [
+                        &w[o0 / 2..(o0 + len) / 2],
+                        &w[o1 / 2..(o1 + len) / 2],
+                        &w[o2 / 2..(o2 + len) / 2],
+                        &w[o3 / 2..(o3 + len) / 2],
+                    ],
+                )
+            },
+        };
+        [out[0] as i64, out[1] as i64, out[2] as i64, out[3] as i64]
+    }
+}
+
+impl GemmKernel for Avx2Kernel {
+    fn name(&self) -> &'static str {
+        "avx2-widening"
+    }
+
+    /// Support includes the runtime feature check (cheap — std caches
+    /// detection) and the i32-accumulator block bound, so a forced
+    /// `Avx2Kernel` on a host without AVX2 — or on oversized blocks —
+    /// degrades down the registry's fallback chain like any other
+    /// unsupported combination: the "never panics" contract of
+    /// [`crate::bfp::gemm::gemm_packed_with`] holds everywhere, and
+    /// the kernel name reported in stats is the backend that ran.
+    fn supports(&self, x: PlaneLayout, w: PlaneLayout, block: usize) -> bool {
+        block <= MAX_I32_BLOCK
+            && std::arch::is_x86_feature_detected!("avx2")
+            && matches!(
+                (x, w),
+                (PlaneLayout::I8, PlaneLayout::I8)
+                    | (PlaneLayout::I4Packed, PlaneLayout::I4Packed)
+            )
+    }
+
+    fn run_band(&self, t: BandTask<'_>) {
+        if !std::arch::is_x86_feature_detected!("avx2")
+            || t.x.fmt.block_size > MAX_I32_BLOCK
+            || t.w.fmt.block_size > MAX_I32_BLOCK
+        {
+            // Oversized blocks need i64 accumulation; a missing-AVX2
+            // dispatch can only be reached by calling the kernel
+            // directly (the registry and `supports` both gate on
+            // detection) — either way, stay correct via the reference.
+            return super::ScalarTiledKernel.run_band(t);
+        }
+        let BandTask {
+            x,
+            w,
+            xsh,
+            wsh,
+            r0,
+            rows,
+            out,
+        } = t;
+        let n = w.rows;
+        let kb = x.blocks_per_row;
+        let b = x.fmt.block_size;
+        debug_assert_eq!(kb, w.blocks_per_row);
+        let d = match (&x.mantissas, &w.mantissas) {
+            (MantissaPlane::I8(a), MantissaPlane::I8(wm)) => Avx2Dot::I8I8(a, wm),
+            (MantissaPlane::I4Packed(a), MantissaPlane::I4Packed(wm)) => Avx2Dot::NibNib(a, wm),
+            _ => {
+                debug_assert!(false, "AVX2 kernel dispatched an unsupported plane pair");
+                return super::ScalarTiledKernel.run_band(BandTask {
+                    x,
+                    w,
+                    xsh,
+                    wsh,
+                    r0,
+                    rows,
+                    out,
+                });
+            }
+        };
+        run_tiled_band(&d, xsh, wsh, r0, rows, n, kb, b, out)
+    }
+}

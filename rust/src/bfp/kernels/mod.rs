@@ -1,0 +1,458 @@
+//! GEMM kernel backends: the pluggable micro-kernel layer of the BFP
+//! stack.
+//!
+//! PR 1/2 put the band-level micro-kernel behind the [`GemmKernel`]
+//! trait with a single static implementation; this module turns that
+//! swap point into a real subsystem:
+//!
+//! * **Shared band loop** — [`run_tiled_band`] owns the cache-tiled,
+//!   register-blocked traversal (`TILE_J`-wide output strips, blocks
+//!   combined in ascending contraction order, one exact power-of-two
+//!   scale per block pair). Kernels differ *only* in their integer
+//!   block-dot inner loops ([`BlockDot`]), so every backend is
+//!   bit-identical by construction: integer MACs are exact, and the
+//!   f64 accumulation order is fixed by the shared loop.
+//! * **Backends** — [`ScalarTiledKernel`] (portable reference, runs
+//!   every plane-layout pair), [`AutovecKernel`] (unrolled,
+//!   autovectorization-friendly `i8`/nibble loops for narrow planes),
+//!   and on x86_64 [`Avx2Kernel`] (explicit AVX2 widening MACs,
+//!   registered only when `is_x86_feature_detected!("avx2")` holds).
+//! * **Registry** — [`registry`] resolves the `BOOSTERS_KERNEL`
+//!   override ([`crate::util::kernel_override`]) plus runtime feature
+//!   detection once per process. [`active_kernel`] dispatches per
+//!   operand pair: the preferred backend where it supports the
+//!   [`PlaneLayout`] pair, falling down the preference chain to the
+//!   scalar kernel otherwise. Requesting `avx2` on a host without it
+//!   warns loudly and falls back — never panics, never changes bits.
+//!
+//! Nibble-packed operands ([`PlaneLayout::I4Packed`]) are consumed
+//! directly: kernels sign-extend nibbles in the inner loop instead of
+//! unpacking to bytes first, so the 4-bit formats get the storage
+//! density *and* keep a dense inner loop.
+
+pub mod autovec;
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+pub mod scalar;
+
+pub use autovec::AutovecKernel;
+#[cfg(target_arch = "x86_64")]
+pub use avx2::Avx2Kernel;
+pub use scalar::ScalarTiledKernel;
+
+use super::packed::{nib_at, BfpMatrix, PlaneLayout};
+use crate::util::KernelChoice;
+use std::sync::OnceLock;
+
+/// Output-strip width of the tiled band loop (f64 accumulators held in
+/// registers while one activation block streams the weight plane).
+pub(crate) const TILE_J: usize = 8;
+
+/// Largest block size whose narrow (nibble or i8) block MAC provably
+/// fits an i32 accumulator (|product| <= 2^14, so 2^16 terms stay
+/// under 2^30).
+pub(crate) const MAX_I32_BLOCK: usize = 1 << 16;
+
+/// Exact 2^shift in f64. Bit-construction covers the normal range;
+/// `powi` handles the subnormal tail identically to the scalar path.
+#[inline]
+pub(crate) fn exp2_f64(shift: i32) -> f64 {
+    if (-1022..=1023).contains(&shift) {
+        f64::from_bits(((shift + 1023) as u64) << 52)
+    } else {
+        (2.0f64).powi(shift)
+    }
+}
+
+/// One contiguous band of a GEMM: activation rows `r0 .. r0 + rows` of
+/// `x` against every packed column of `w`, writing the band's slice of
+/// the output. `xsh`/`wsh` are the precomputed per-block scale shifts
+/// ([`super::gemm::band_shifts`]) of the full operands.
+pub struct BandTask<'a> {
+    pub x: &'a BfpMatrix,
+    pub w: &'a BfpMatrix,
+    pub xsh: &'a [i32],
+    pub wsh: &'a [i32],
+    pub r0: usize,
+    pub rows: usize,
+    pub out: &'a mut [f32],
+}
+
+/// A band-level GEMM micro-kernel. Implementations must be pure
+/// functions of the task (no scheduling decisions) and must accumulate
+/// each output element's blocks in ascending contraction order so that
+/// every kernel is bit-compatible with the scalar reference — which
+/// the shared [`run_tiled_band`] loop guarantees for kernels built on
+/// [`BlockDot`].
+pub trait GemmKernel: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Whether this backend has an inner loop for the given operand
+    /// plane-layout pair at the given block size (narrow backends
+    /// require blocks whose MAC fits their i32 accumulators, and the
+    /// AVX2 backend requires runtime feature support). The registry
+    /// only dispatches supported combinations — so the kernel name
+    /// reported in stats and bench metadata is the backend that
+    /// actually executed. The scalar kernel supports everything.
+    fn supports(&self, x: PlaneLayout, w: PlaneLayout, block: usize) -> bool;
+
+    fn run_band(&self, task: BandTask<'_>);
+}
+
+/// Read access to one mantissa plane by absolute value index — the
+/// abstraction that lets the portable kernel run any layout pair,
+/// nibble-packed included.
+pub(crate) trait PlaneAccess: Copy {
+    /// True when |values| < 2^7: block MACs fit i32 accumulators for
+    /// blocks up to [`MAX_I32_BLOCK`].
+    const NARROW: bool;
+    fn get(self, i: usize) -> i32;
+}
+
+impl PlaneAccess for &[i8] {
+    const NARROW: bool = true;
+
+    #[inline]
+    fn get(self, i: usize) -> i32 {
+        self[i] as i32
+    }
+}
+
+impl PlaneAccess for &[i16] {
+    const NARROW: bool = false;
+
+    #[inline]
+    fn get(self, i: usize) -> i32 {
+        self[i] as i32
+    }
+}
+
+/// Nibble-packed plane view: value `i` lives in byte `i / 2`, low
+/// nibble for even `i`, high for odd.
+#[derive(Clone, Copy)]
+pub(crate) struct NibblePlane<'a>(pub &'a [u8]);
+
+impl PlaneAccess for NibblePlane<'_> {
+    const NARROW: bool = true;
+
+    #[inline]
+    fn get(self, i: usize) -> i32 {
+        nib_at(self.0, i) as i32
+    }
+}
+
+/// Integer dot products over block pairs at absolute plane offsets —
+/// the only part of a kernel that differs between backends. `dot` must
+/// return the exact integer MAC of the block pair; exactness is what
+/// makes every backend bit-identical under [`run_tiled_band`].
+pub(crate) trait BlockDot {
+    fn dot(&self, a_off: usize, w_off: usize, len: usize) -> i64;
+
+    /// Register-blocked form: one activation block against four weight
+    /// blocks. The default just calls [`BlockDot::dot`] four times;
+    /// backends override it to keep four accumulators live.
+    #[inline]
+    fn dot4(&self, a_off: usize, w_offs: [usize; 4], len: usize) -> [i64; 4] {
+        [
+            self.dot(a_off, w_offs[0], len),
+            self.dot(a_off, w_offs[1], len),
+            self.dot(a_off, w_offs[2], len),
+            self.dot(a_off, w_offs[3], len),
+        ]
+    }
+}
+
+/// The shared cache-tiled band loop (see module docs): `TILE_J`-wide
+/// output strips, four weight blocks per inner step, blocks combined
+/// into the f64 accumulator in ascending contraction order with one
+/// exact power-of-two scale per block pair. All kernels run this exact
+/// traversal, so results depend only on each backend's (exact) integer
+/// block MACs — i.e. not on the backend at all.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_tiled_band<D: BlockDot>(
+    d: &D,
+    xsh: &[i32],
+    wsh: &[i32],
+    r0: usize,
+    band_rows: usize,
+    n: usize,
+    kb: usize,
+    b: usize,
+    out: &mut [f32],
+) {
+    let stride = kb * b;
+    let mut acc = [0.0f64; TILE_J];
+    for i in 0..band_rows {
+        let gi = r0 + i;
+        let xrow = gi * stride;
+        let xs = &xsh[gi * kb..(gi + 1) * kb];
+        let orow = &mut out[i * n..(i + 1) * n];
+        let mut j0 = 0;
+        while j0 < n {
+            let tj = TILE_J.min(n - j0);
+            acc[..tj].fill(0.0);
+            for k in 0..kb {
+                let a_off = xrow + k * b;
+                let sx = xs[k];
+                let mut jj = 0;
+                while jj + 4 <= tj {
+                    let j = j0 + jj;
+                    let o0 = j * stride + k * b;
+                    let (o1, o2, o3) = (o0 + stride, o0 + 2 * stride, o0 + 3 * stride);
+                    let macs = d.dot4(a_off, [o0, o1, o2, o3], b);
+                    for (q, &mac) in macs.iter().enumerate() {
+                        if mac != 0 {
+                            acc[jj + q] += mac as f64 * exp2_f64(sx + wsh[(j + q) * kb + k]);
+                        }
+                    }
+                    jj += 4;
+                }
+                while jj < tj {
+                    let j = j0 + jj;
+                    let mac = d.dot(a_off, j * stride + k * b, b);
+                    if mac != 0 {
+                        acc[jj] += mac as f64 * exp2_f64(sx + wsh[j * kb + k]);
+                    }
+                    jj += 1;
+                }
+            }
+            for (jj, &v) in acc[..tj].iter().enumerate() {
+                orow[j0 + jj] = v as f32;
+            }
+            j0 += tj;
+        }
+    }
+}
+
+// --- registry --------------------------------------------------------------
+
+static SCALAR: ScalarTiledKernel = ScalarTiledKernel;
+static AUTOVEC: AutovecKernel = AutovecKernel;
+#[cfg(target_arch = "x86_64")]
+static AVX2: Avx2Kernel = Avx2Kernel;
+
+/// The set of GEMM backends runnable on this host, plus the one the
+/// `BOOSTERS_KERNEL` override and runtime feature detection resolved
+/// to. Built once per process by [`registry`].
+pub struct KernelRegistry {
+    /// Runnable backends in preference order (most specialized first,
+    /// the scalar fallback always last).
+    kernels: Vec<&'static dyn GemmKernel>,
+    preferred: &'static dyn GemmKernel,
+    choice: KernelChoice,
+}
+
+impl KernelRegistry {
+    fn build(choice: KernelChoice) -> Self {
+        let avx2 = detect_avx2();
+        let mut kernels: Vec<&'static dyn GemmKernel> = Vec::with_capacity(3);
+        if let Some(k) = avx2 {
+            kernels.push(k);
+        }
+        kernels.push(&AUTOVEC);
+        kernels.push(&SCALAR);
+        let preferred: &'static dyn GemmKernel = match choice {
+            KernelChoice::Scalar => &SCALAR,
+            KernelChoice::Autovec => &AUTOVEC,
+            KernelChoice::Avx2 => avx2_or_loud_fallback(kernels[0]),
+            KernelChoice::Auto => kernels[0],
+        };
+        Self {
+            kernels,
+            preferred,
+            choice,
+        }
+    }
+
+    /// Every backend runnable on this host, preference order. Tests
+    /// and benches iterate this to pin bit-identity per backend.
+    pub fn all(&self) -> &[&'static dyn GemmKernel] {
+        &self.kernels
+    }
+
+    /// The backend the override + detection resolved to — the kernel
+    /// identity the exec stats and bench artifacts report.
+    pub fn preferred(&self) -> &'static dyn GemmKernel {
+        self.preferred
+    }
+
+    /// The parsed `BOOSTERS_KERNEL` choice this registry was built
+    /// from.
+    pub fn choice(&self) -> KernelChoice {
+        self.choice
+    }
+
+    /// Backend lookup by [`GemmKernel::name`].
+    pub fn by_name(&self, name: &str) -> Option<&'static dyn GemmKernel> {
+        self.kernels.iter().copied().find(|k| k.name() == name)
+    }
+
+    /// Resolve a programmatic choice (e.g.
+    /// [`crate::exec::ServiceConfig`]'s kernel field) to a runnable
+    /// backend; `Auto` resolves to the registry's preferred kernel,
+    /// and an unavailable `Avx2` falls back to it **loudly** (warned
+    /// once), matching the `BOOSTERS_KERNEL=avx2` env-path contract.
+    pub fn resolve(&self, choice: KernelChoice) -> &'static dyn GemmKernel {
+        match choice {
+            KernelChoice::Auto => self.preferred,
+            KernelChoice::Scalar => &SCALAR,
+            KernelChoice::Autovec => &AUTOVEC,
+            KernelChoice::Avx2 => avx2_or_loud_fallback(self.preferred),
+        }
+    }
+
+    /// Per-operand dispatch: the preferred backend where it supports
+    /// the layout pair at this block size, else the next backend down
+    /// the preference chain that does (the scalar kernel closes the
+    /// chain).
+    pub fn select(&self, x: PlaneLayout, w: PlaneLayout, block: usize) -> &'static dyn GemmKernel {
+        self.select_from(self.preferred, x, w, block)
+    }
+
+    /// [`KernelRegistry::select`] starting from an explicit backend —
+    /// how a forced kernel (tests, [`crate::exec::BatchGemm`]) degrades
+    /// on combinations it cannot run instead of panicking.
+    pub fn select_from(
+        &self,
+        first: &'static dyn GemmKernel,
+        x: PlaneLayout,
+        w: PlaneLayout,
+        block: usize,
+    ) -> &'static dyn GemmKernel {
+        if first.supports(x, w, block) {
+            return first;
+        }
+        // Backend names are unique, so this is identity without fat-
+        // pointer comparison.
+        let start = self
+            .kernels
+            .iter()
+            .position(|k| k.name() == first.name())
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        self.kernels[start..]
+            .iter()
+            .copied()
+            .find(|k| k.supports(x, w, block))
+            .unwrap_or(&SCALAR)
+    }
+}
+
+/// The single home of the loud AVX2 fallback: the detected backend,
+/// or `fallback` with a once-per-process stderr warning. Shared by the
+/// `BOOSTERS_KERNEL=avx2` env path ([`KernelRegistry::build`]) and the
+/// programmatic [`KernelRegistry::resolve`] path so the two can never
+/// diverge in policy or message.
+fn avx2_or_loud_fallback(fallback: &'static dyn GemmKernel) -> &'static dyn GemmKernel {
+    detect_avx2().unwrap_or_else(|| {
+        static WARNED: std::sync::Once = std::sync::Once::new();
+        WARNED.call_once(|| {
+            eprintln!(
+                "[boosters] avx2 kernel requested but AVX2 is not available on this host; \
+                 falling back to the {} kernel",
+                fallback.name()
+            );
+        });
+        fallback
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_avx2() -> Option<&'static dyn GemmKernel> {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Some(&AVX2)
+    } else {
+        None
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_avx2() -> Option<&'static dyn GemmKernel> {
+    None
+}
+
+static REGISTRY: OnceLock<KernelRegistry> = OnceLock::new();
+
+/// The process-wide kernel registry: `BOOSTERS_KERNEL` + feature
+/// detection resolved once, on first GEMM dispatch.
+pub fn registry() -> &'static KernelRegistry {
+    REGISTRY.get_or_init(|| KernelRegistry::build(crate::util::kernel_override()))
+}
+
+/// The kernel the runtime dispatches for one operand combination — the
+/// single swap point the whole GEMM stack (single-op path, batch
+/// scheduler, benches) routes through.
+pub fn active_kernel(x: PlaneLayout, w: PlaneLayout, block: usize) -> &'static dyn GemmKernel {
+    registry().select(x, w, block)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_always_has_a_scalar_fallback() {
+        let reg = registry();
+        assert!(!reg.all().is_empty());
+        assert_eq!(reg.all().last().unwrap().name(), "scalar-tiled");
+        // The scalar kernel runs everything — every layout pair at any
+        // block size, including blocks past the i32-accumulator bound.
+        let scalar = reg.by_name("scalar-tiled").unwrap();
+        for x in [PlaneLayout::I4Packed, PlaneLayout::I8, PlaneLayout::I16] {
+            for w in [PlaneLayout::I4Packed, PlaneLayout::I8, PlaneLayout::I16] {
+                for block in [64usize, MAX_I32_BLOCK * 2] {
+                    assert!(scalar.supports(x, w, block));
+                    // Whatever dispatch returns, it must support the
+                    // combination it will be reported as executing.
+                    assert!(reg.select(x, w, block).supports(x, w, block));
+                }
+            }
+        }
+        // Oversized blocks dispatch to the scalar kernel even where a
+        // narrow backend covers the layout pair, keeping the reported
+        // kernel identity truthful.
+        assert_eq!(
+            reg.select(PlaneLayout::I8, PlaneLayout::I8, MAX_I32_BLOCK * 2).name(),
+            "scalar-tiled"
+        );
+    }
+
+    #[test]
+    fn resolve_maps_choices_to_runnable_backends() {
+        let reg = registry();
+        assert_eq!(reg.resolve(KernelChoice::Scalar).name(), "scalar-tiled");
+        assert_eq!(reg.resolve(KernelChoice::Autovec).name(), "autovec");
+        // Auto resolves to the preferred backend; Avx2 resolves to a
+        // runnable backend on every host (itself or the fallback).
+        assert_eq!(reg.resolve(KernelChoice::Auto).name(), reg.preferred().name());
+        let avx2 = reg.resolve(KernelChoice::Avx2);
+        assert!(reg.by_name(avx2.name()).is_some());
+    }
+
+    #[test]
+    fn wide_pairs_fall_back_to_scalar_from_any_start() {
+        let reg = registry();
+        for k in reg.all() {
+            let picked = reg.select_from(*k, PlaneLayout::I16, PlaneLayout::I16, 64);
+            assert!(
+                picked.supports(PlaneLayout::I16, PlaneLayout::I16, 64),
+                "{} -> {}",
+                k.name(),
+                picked.name()
+            );
+        }
+    }
+
+    #[test]
+    fn exp2_matches_powi_across_the_exponent_budget() {
+        // Encoded exponents live in [-512, 511]; pair shifts span about
+        // [-1052, 1022], crossing into the subnormal range.
+        for shift in (-1060..=1030).step_by(7) {
+            assert_eq!(
+                exp2_f64(shift).to_bits(),
+                (2.0f64).powi(shift).to_bits(),
+                "shift {shift}"
+            );
+        }
+    }
+}

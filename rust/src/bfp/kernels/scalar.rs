@@ -1,0 +1,207 @@
+//! The portable reference backend: exact integer block dots under the
+//! shared tiled band loop. Runs **every** layout pair (nibble-packed,
+//! i8, i16, and all mixed-width combinations), which makes it the
+//! guaranteed tail of the registry's fallback chain and the kernel
+//! every other backend is property-tested against.
+//!
+//! Byte/i16 plane pairs keep the PR-1 zipped-subslice inner loops
+//! ([`SliceDot`] — the shape LLVM autovectorizes and the baseline the
+//! per-kernel bench series compares against); only nibble-involved
+//! pairs go through the index-generic [`AccessDot`].
+
+use super::{
+    run_tiled_band, BandTask, BlockDot, GemmKernel, NibblePlane, PlaneAccess, MAX_I32_BLOCK,
+};
+use crate::bfp::packed::{Mantissa, MantissaPlane, PlaneLayout};
+
+/// The portable cache-tiled, register-blocked kernel (see module docs).
+pub struct ScalarTiledKernel;
+
+/// Zipped-subslice block dot over two [`Mantissa`] planes — the
+/// original PR-1 inner loops, unchanged: sub-slice once per block,
+/// iterate zipped, accumulate in i32 when both sides are narrow and
+/// the block MAC provably fits, i64 otherwise. Shared with
+/// [`crate::bfp::gemm::packed_dot`], which dispatches its byte/i16
+/// pairs here for the same autovectorization reason.
+pub(crate) struct SliceDot<'a, A, B> {
+    pub(crate) a: &'a [A],
+    pub(crate) w: &'a [B],
+}
+
+impl<A: Mantissa, B: Mantissa> BlockDot for SliceDot<'_, A, B> {
+    #[inline]
+    fn dot(&self, a_off: usize, w_off: usize, len: usize) -> i64 {
+        let a = &self.a[a_off..a_off + len];
+        let w = &self.w[w_off..w_off + len];
+        if A::NARROW && B::NARROW && len <= MAX_I32_BLOCK {
+            let mut acc = 0i32;
+            for (&x, &y) in a.iter().zip(w) {
+                acc += x.widen() * y.widen();
+            }
+            acc as i64
+        } else {
+            let mut acc = 0i64;
+            for (&x, &y) in a.iter().zip(w) {
+                acc += x.widen() as i64 * y.widen() as i64;
+            }
+            acc
+        }
+    }
+
+    #[inline]
+    fn dot4(&self, a_off: usize, w_offs: [usize; 4], len: usize) -> [i64; 4] {
+        let a = &self.a[a_off..a_off + len];
+        let [o0, o1, o2, o3] = w_offs;
+        let w0 = &self.w[o0..o0 + len];
+        let w1 = &self.w[o1..o1 + len];
+        let w2 = &self.w[o2..o2 + len];
+        let w3 = &self.w[o3..o3 + len];
+        if A::NARROW && B::NARROW && len <= MAX_I32_BLOCK {
+            let (mut c0, mut c1, mut c2, mut c3) = (0i32, 0i32, 0i32, 0i32);
+            for i in 0..len {
+                let x = a[i].widen();
+                c0 += x * w0[i].widen();
+                c1 += x * w1[i].widen();
+                c2 += x * w2[i].widen();
+                c3 += x * w3[i].widen();
+            }
+            [c0 as i64, c1 as i64, c2 as i64, c3 as i64]
+        } else {
+            let (mut c0, mut c1, mut c2, mut c3) = (0i64, 0i64, 0i64, 0i64);
+            for i in 0..len {
+                let x = a[i].widen() as i64;
+                c0 += x * w0[i].widen() as i64;
+                c1 += x * w1[i].widen() as i64;
+                c2 += x * w2[i].widen() as i64;
+                c3 += x * w3[i].widen() as i64;
+            }
+            [c0, c1, c2, c3]
+        }
+    }
+}
+
+/// Layout-generic block dot: indexes both planes through
+/// [`PlaneAccess`], accumulating in i32 when both sides are narrow and
+/// the block MAC provably fits, i64 otherwise — the exact arithmetic
+/// of the original scalar kernel.
+pub(crate) struct AccessDot<A, B> {
+    pub(crate) a: A,
+    pub(crate) w: B,
+}
+
+impl<A: PlaneAccess, B: PlaneAccess> BlockDot for AccessDot<A, B> {
+    #[inline]
+    fn dot(&self, a_off: usize, w_off: usize, len: usize) -> i64 {
+        if A::NARROW && B::NARROW && len <= MAX_I32_BLOCK {
+            let mut acc = 0i32;
+            for i in 0..len {
+                acc += self.a.get(a_off + i) * self.w.get(w_off + i);
+            }
+            acc as i64
+        } else {
+            let mut acc = 0i64;
+            for i in 0..len {
+                acc += self.a.get(a_off + i) as i64 * self.w.get(w_off + i) as i64;
+            }
+            acc
+        }
+    }
+
+    #[inline]
+    fn dot4(&self, a_off: usize, w_offs: [usize; 4], len: usize) -> [i64; 4] {
+        let [o0, o1, o2, o3] = w_offs;
+        if A::NARROW && B::NARROW && len <= MAX_I32_BLOCK {
+            let (mut c0, mut c1, mut c2, mut c3) = (0i32, 0i32, 0i32, 0i32);
+            for i in 0..len {
+                let x = self.a.get(a_off + i);
+                c0 += x * self.w.get(o0 + i);
+                c1 += x * self.w.get(o1 + i);
+                c2 += x * self.w.get(o2 + i);
+                c3 += x * self.w.get(o3 + i);
+            }
+            [c0 as i64, c1 as i64, c2 as i64, c3 as i64]
+        } else {
+            let (mut c0, mut c1, mut c2, mut c3) = (0i64, 0i64, 0i64, 0i64);
+            for i in 0..len {
+                let x = self.a.get(a_off + i) as i64;
+                c0 += x * self.w.get(o0 + i) as i64;
+                c1 += x * self.w.get(o1 + i) as i64;
+                c2 += x * self.w.get(o2 + i) as i64;
+                c3 += x * self.w.get(o3 + i) as i64;
+            }
+            [c0, c1, c2, c3]
+        }
+    }
+}
+
+impl GemmKernel for ScalarTiledKernel {
+    fn name(&self) -> &'static str {
+        "scalar-tiled"
+    }
+
+    fn supports(&self, _x: PlaneLayout, _w: PlaneLayout, _block: usize) -> bool {
+        true
+    }
+
+    fn run_band(&self, t: BandTask<'_>) {
+        let BandTask {
+            x,
+            w,
+            xsh,
+            wsh,
+            r0,
+            rows,
+            out,
+        } = t;
+        let n = w.rows;
+        let kb = x.blocks_per_row;
+        let b = x.fmt.block_size;
+        debug_assert_eq!(kb, w.blocks_per_row);
+        macro_rules! run {
+            ($d:expr) => {
+                run_tiled_band(&$d, xsh, wsh, r0, rows, n, kb, b, out)
+            };
+        }
+        use MantissaPlane as P;
+        match (&x.mantissas, &w.mantissas) {
+            // Byte/i16 pairs: the original zipped-subslice loops.
+            (P::I8(a), P::I8(wm)) => run!(SliceDot {
+                a: a.as_slice(),
+                w: wm.as_slice()
+            }),
+            (P::I8(a), P::I16(wm)) => run!(SliceDot {
+                a: a.as_slice(),
+                w: wm.as_slice()
+            }),
+            (P::I16(a), P::I8(wm)) => run!(SliceDot {
+                a: a.as_slice(),
+                w: wm.as_slice()
+            }),
+            (P::I16(a), P::I16(wm)) => run!(SliceDot {
+                a: a.as_slice(),
+                w: wm.as_slice()
+            }),
+            // Nibble-involved pairs: index-generic access.
+            (P::I4Packed(a), P::I4Packed(wm)) => run!(AccessDot {
+                a: NibblePlane(a),
+                w: NibblePlane(wm)
+            }),
+            (P::I4Packed(a), P::I8(wm)) => run!(AccessDot {
+                a: NibblePlane(a),
+                w: wm.as_slice()
+            }),
+            (P::I4Packed(a), P::I16(wm)) => run!(AccessDot {
+                a: NibblePlane(a),
+                w: wm.as_slice()
+            }),
+            (P::I8(a), P::I4Packed(wm)) => run!(AccessDot {
+                a: a.as_slice(),
+                w: NibblePlane(wm)
+            }),
+            (P::I16(a), P::I4Packed(wm)) => run!(AccessDot {
+                a: a.as_slice(),
+                w: NibblePlane(wm)
+            }),
+        }
+    }
+}

@@ -16,8 +16,11 @@
 //! The hot path stores tensors as **structure-of-arrays planes** in
 //! [`packed::BfpMatrix`], not as per-block objects:
 //!
-//! * mantissa plane — contiguous `i8` (m <= 8) or `i16` (m <= 16)
-//!   integers chosen by [`block::BlockFormat::plane_dtype`]; rows are
+//! * mantissa plane — storage chosen by
+//!   [`block::BlockFormat::plane_layout`]: nibble-packed pairs of
+//!   4-bit two's-complement mantissas (m <= 4, even blocks — the
+//!   paper's 4-bit storage density realized on the host), else
+//!   contiguous `i8` (m <= 8) or `i16` (m <= 16) integers; rows are
 //!   padded to whole blocks, stride = `blocks_per_row * block_size`;
 //! * exponent plane — one `i32` per block, `blocks_per_row` per row;
 //! * scale rule — a mantissa decodes as `q * 2^scale_shift(e, m)` with
@@ -27,16 +30,21 @@
 //! [`gemm`] runs a cache-tiled, register-blocked, row-band-parallel
 //! fixed-point GEMM over those planes (thread partitioning is by whole
 //! output rows, so parallel results are bit-identical to serial). The
-//! micro-kernel sits behind the [`GemmKernel`] trait; bands execute as
-//! work items on the persistent [`crate::exec`] pool, and weight-side
-//! encodings are reused across calls through the exec operand cache.
-//! Encoding happens once per operand; the scalar [`block::BfpBlock`] /
-//! [`matrix::hbfp_gemm_scalar`] path is retained as the reference the
-//! property tests cross-check bit-for-bit.
+//! micro-kernel layer is the [`kernels`] registry: runtime-dispatched
+//! backends ([`ScalarTiledKernel`], [`kernels::AutovecKernel`], AVX2
+//! where detected) behind the [`GemmKernel`] trait, selected per
+//! operand [`PlaneLayout`] pair and overridable with `BOOSTERS_KERNEL`.
+//! Bands execute as work items on the persistent [`crate::exec`] pool,
+//! and weight-side encodings are reused across calls through the exec
+//! operand cache. Encoding happens once per operand; the scalar
+//! [`block::BfpBlock`] / [`matrix::hbfp_gemm_scalar`] path is retained
+//! as the reference the property tests cross-check bit-for-bit against
+//! every registered backend.
 
 pub mod block;
 pub mod dot;
 pub mod gemm;
+pub mod kernels;
 pub mod matrix;
 pub mod packed;
 pub mod quantize;
@@ -44,11 +52,15 @@ pub mod rounding;
 
 pub use block::{scale_shift, BfpBlock, BfpTensor, BlockFormat};
 pub use dot::{bfp_dot_blocks, bfp_dot_fixed_point, dequant_dot};
-pub use gemm::{active_kernel, gemm_packed, packed_dot, BandTask, GemmKernel, ScalarTiledKernel};
+pub use gemm::{gemm_packed, gemm_packed_with, packed_dot};
+pub use kernels::{
+    active_kernel, registry, AutovecKernel, BandTask, GemmKernel, KernelRegistry,
+    ScalarTiledKernel,
+};
 pub use matrix::{dequant_gemm, hbfp_gemm, hbfp_gemm_scalar, Mat};
 pub use packed::{
-    quantize_packed, quantize_packed_into, BfpMatrix, Mantissa, MantissaPlane, PlaneDtype,
-    PlaneDtypeError,
+    nib_hi, nib_lo, quantize_packed, quantize_packed_into, BfpMatrix, Mantissa, MantissaPlane,
+    PlaneLayoutError, PlaneLayout,
 };
 pub use quantize::{floor_log2, quantize_blocks_into, quantize_flat, quantize_tensor, Quantizer};
 pub use rounding::{uniform_u01, xorshift_hash, RoundMode};

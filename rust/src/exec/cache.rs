@@ -10,11 +10,14 @@
 //!
 //! Entries are keyed by [`CacheKey`]: a 128-bit content fingerprint of
 //! the raw f32 bits plus the logical shape, the `(mantissa_bits,
-//! block_size)` format, and the layout flag (row-encoded vs
-//! column/transposed-encoded). Two FNV-1a streams over independent
-//! bases make accidental collisions across a process lifetime
-//! negligible; shape is mixed in so a reshape of the same bytes cannot
-//! alias.
+//! block_size)` format, the **mantissa-plane storage layout**
+//! ([`PlaneLayout`] — nibble-packed vs byte vs i16 planes are distinct
+//! encodings of the same values, and a consumer must never be served
+//! one when it asked for another), and the orientation flag
+//! (row-encoded vs column/transposed-encoded). Two FNV-1a streams over
+//! independent bases make accidental collisions across a process
+//! lifetime negligible; shape is mixed in so a reshape of the same
+//! bytes cannot alias.
 //!
 //! **Only deterministic nearest-even encodings are cacheable.**
 //! Stochastic rounding depends on `(seed, site)` and must never be
@@ -29,7 +32,7 @@
 //! surface ([`crate::metrics::exec_cache_snapshot`]) and the serve-sim
 //! report.
 
-use crate::bfp::{BfpMatrix, BlockFormat, MantissaPlane};
+use crate::bfp::{BfpMatrix, BlockFormat, PlaneLayout};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -42,6 +45,12 @@ pub struct CacheKey {
     pub content: (u64, u64),
     pub m_bits: u32,
     pub block: usize,
+    /// Mantissa-plane storage layout the entry was encoded under. Today
+    /// this is a function of `(m_bits, block)`, but it is part of the
+    /// key on purpose: if the layout rule ever changes (or becomes
+    /// configurable), stale entries in a different layout must read as
+    /// misses, not be served to a kernel expecting other storage.
+    pub layout: PlaneLayout,
     /// True for weight-side (column/transposed) encodings.
     pub transposed: bool,
 }
@@ -58,6 +67,7 @@ impl CacheKey {
             content: content_fingerprint(data, rows, cols),
             m_bits: fmt.mantissa_bits,
             block: fmt.block_size,
+            layout: fmt.plane_layout(),
             transposed,
         }
     }
@@ -79,13 +89,11 @@ pub fn content_fingerprint(data: &[f32], rows: usize, cols: usize) -> (u64, u64)
 }
 
 /// Approximate resident bytes of one encoded matrix (mantissa plane +
-/// exponent plane), used for the byte cap.
+/// exponent plane), used for the byte cap. Nibble-packed planes charge
+/// half a byte per mantissa — the cache holds twice as many 4-bit
+/// weights under the same `BOOSTERS_CACHE_MB` budget.
 fn plane_bytes(m: &BfpMatrix) -> usize {
-    let elem = match &m.mantissas {
-        MantissaPlane::I8(_) => 1,
-        MantissaPlane::I16(_) => 2,
-    };
-    m.mantissas.len() * elem + m.exponents.len() * std::mem::size_of::<i32>()
+    m.mantissas.resident_bytes() + m.exponents.len() * std::mem::size_of::<i32>()
 }
 
 struct Entry {
@@ -244,6 +252,12 @@ impl OperandCache {
         }
     }
 
+    /// Configured caps `(max_entries, max_bytes)` — surfaced so bench
+    /// and serving artifacts can describe the cache they ran under.
+    pub fn caps(&self) -> (usize, usize) {
+        (self.max_entries, self.max_bytes)
+    }
+
     /// Drop every entry (counters are preserved).
     pub fn clear(&self) {
         let mut st = self.state.lock().unwrap();
@@ -277,6 +291,39 @@ mod tests {
         let k3 = CacheKey::for_matrix(&a, 2, 2, fmt(4, 16), true);
         assert_ne!(k1, k2);
         assert_ne!(k1, k3);
+        // The storage layout is part of the operand identity.
+        assert_eq!(k1.layout, PlaneLayout::I4Packed);
+        assert_eq!(k2.layout, PlaneLayout::I8);
+    }
+
+    #[test]
+    fn layout_mismatch_reads_as_a_miss() {
+        // An entry inserted under one PlaneLayout must never be served
+        // to a lookup expecting another, even if every other key field
+        // matches (the guard for future layout-rule changes).
+        let cache = OperandCache::new(8, 1 << 20);
+        let d: Vec<f32> = (0..32).map(|i| i as f32 * 0.5).collect();
+        let f = fmt(4, 16);
+        let key = CacheKey::for_matrix(&d, 1, 32, f, false);
+        cache.insert(key, Arc::new(encode(&d, f)));
+        assert!(cache.lookup(&key).is_some());
+        let stale = CacheKey {
+            layout: PlaneLayout::I8,
+            ..key
+        };
+        assert!(cache.lookup(&stale).is_none(), "layout must partition entries");
+    }
+
+    #[test]
+    fn nibble_packed_entries_charge_half_the_plane_bytes() {
+        let d: Vec<f32> = (0..256).map(|i| i as f32 * 0.25 - 32.0).collect();
+        let packed = encode(&d, fmt(4, 16));
+        let bytes8 = encode(&d, fmt(5, 16));
+        // Same element count; the m=4 plane resides in half the bytes
+        // (plus the identical exponent plane).
+        let exp_bytes = packed.exponents.len() * std::mem::size_of::<i32>();
+        assert_eq!(plane_bytes(&packed) - exp_bytes, 128);
+        assert_eq!(plane_bytes(&bytes8) - exp_bytes, 256);
     }
 
     #[test]

@@ -43,16 +43,32 @@
 //! # Cache keying
 //!
 //! The [`OperandCache`] is content-addressed: `(128-bit fingerprint of
-//! the raw f32 bits + shape, mantissa_bits, block_size, transposed)`
-//! — see [`cache::CacheKey`]. Only deterministic nearest-even
-//! encodings are cacheable (stochastic rounding depends on seed/site
-//! state); the `encode_*_cached` entry points enforce this by
-//! construction. The cache is LRU-bounded by entry count and by
-//! approximate resident bytes; the caps come from
+//! the raw f32 bits + shape, mantissa_bits, block_size, plane layout,
+//! transposed)` — see [`cache::CacheKey`]. The
+//! [`crate::bfp::PlaneLayout`] component means an entry encoded under
+//! one mantissa storage layout (nibble-packed 4-bit pairs vs i8 vs
+//! i16) is never served to a consumer keyed for another. Only
+//! deterministic nearest-even encodings are cacheable (stochastic
+//! rounding depends on seed/site state); the `encode_*_cached` entry
+//! points enforce this by construction. The cache is LRU-bounded by
+//! entry count and by approximate resident bytes (nibble-packed planes
+//! charge half a byte per mantissa); the caps come from
 //! [`crate::util::cache_budget`] (`BOOSTERS_CACHE_ENTRIES` /
 //! `BOOSTERS_CACHE_MB`, defaults 96 entries / 128 MiB), and its
 //! hit/miss/eviction counters are surfaced through
 //! [`crate::metrics::exec_cache_snapshot`].
+//!
+//! # Kernel backends
+//!
+//! The GEMM inner loops executed by the pool come from the
+//! [`crate::bfp::kernels`] registry (scalar / autovec / AVX2, selected
+//! per operand-layout pair, `BOOSTERS_KERNEL` override). [`BatchGemm`]
+//! resolves the kernel per op; [`service::BfpService`] reports the
+//! registry's preferred backend in
+//! [`crate::metrics::exec_service_snapshot`] so serving artifacts are
+//! attributable to the kernel that produced them. Kernel choice can
+//! never change results — every backend is bit-identical to the
+//! scalar reference, which the property suites pin per backend.
 //!
 //! # Determinism guarantees
 //!
@@ -86,7 +102,7 @@ pub use cache::{CacheKey, CacheStats, OperandCache};
 pub use pool::{Job, WorkerPool};
 pub use queue::{AdmissionError, GemmRequest, GemmResponse, Priority, Ticket};
 pub use scheduler::{BatchGemm, OwnedGemmOp};
-pub use service::{BfpService, ServiceConfig, ServiceSession, ServiceStats};
+pub use service::{adaptive_batch_macs, BfpService, ServiceConfig, ServiceSession, ServiceStats};
 
 use crate::bfp::{BfpMatrix, BlockFormat, Mat, Quantizer};
 use anyhow::Result;
@@ -225,9 +241,10 @@ mod tests {
         let cached = rt.encode_cached(&data, 1, data.len(), fmt).unwrap();
         let direct = BfpMatrix::encode(&data, 1, data.len(), fmt, Quantizer::nearest(4)).unwrap();
         assert_eq!(cached.exponents, direct.exponents);
+        // m=4 with an even block: nibble-packed planes, byte-compared.
         assert_eq!(
-            cached.mantissas.try_i8().unwrap(),
-            direct.mantissas.try_i8().unwrap()
+            cached.mantissas.try_i4().unwrap(),
+            direct.mantissas.try_i4().unwrap()
         );
         // Second call is a hit returning the same planes.
         let again = rt.encode_cached(&data, 1, data.len(), fmt).unwrap();

@@ -286,6 +286,7 @@ impl SubmitQueue {
         lock_or_poisoned(&self.state, "service queue").peak_depth
     }
 
+
     /// Stop the scheduler from forming batches (admission continues) —
     /// the drain-control / backpressure-test hook.
     pub(crate) fn set_paused(&self, paused: bool) {
@@ -355,11 +356,22 @@ impl SubmitQueue {
     }
 
     /// Block until work is available (or shutdown) and carve one
-    /// execution batch: EDF order, cut at `max_macs` cumulative MAC
-    /// volume (always at least one request) and `max_ops` requests.
-    /// Returns `None` only when the queue is shut down **and** fully
-    /// drained, so no admitted ticket is ever abandoned.
-    pub(crate) fn pop_batch(&self, max_macs: usize, max_ops: usize) -> Option<Vec<Pending>> {
+    /// execution batch: EDF order, cut at a cumulative MAC budget
+    /// (always at least one request) and `max_ops` requests. With
+    /// `adaptive` on, the budget is computed **after** waking, under
+    /// the same lock that forms the batch — from the depth and
+    /// deadline pressure of exactly the requests being cut — so a
+    /// burst arriving while the scheduler was parked on an empty queue
+    /// is batched under its own load, never a stale idle-time sample.
+    /// Returns the batch plus the effective budget applied (for the
+    /// stats surface); `None` only when the queue is shut down **and**
+    /// fully drained, so no admitted ticket is ever abandoned.
+    pub(crate) fn pop_batch(
+        &self,
+        base_macs: usize,
+        max_ops: usize,
+        adaptive: bool,
+    ) -> Option<(Vec<Pending>, usize)> {
         let mut st = lock_or_poisoned(&self.state, "service queue");
         loop {
             let runnable = !st.pending.is_empty() && (!st.paused || st.shutdown);
@@ -373,6 +385,26 @@ impl SubmitQueue {
         }
         let mut order: Vec<usize> = (0..st.pending.len()).collect();
         order.sort_by_key(|&i| st.pending[i].edf_key());
+        let max_macs = if adaptive {
+            // Deadline pressure keys on the **EDF head** — the request
+            // guaranteed to lead the batch being formed — so a cut
+            // batch always contains the due request it exists to help.
+            // A due request buried behind a higher priority class must
+            // not quarter service-wide throughput: no cut can ever
+            // bring it forward past EDF order.
+            let head_due = st.pending[order[0]]
+                .deadline_at
+                .map(|d| d <= Instant::now())
+                .unwrap_or(false);
+            super::service::adaptive_batch_macs(
+                base_macs,
+                st.pending.len(),
+                self.capacity,
+                head_due,
+            )
+        } else {
+            base_macs
+        };
         let mut rank = vec![usize::MAX; st.pending.len()];
         let mut budget = 0usize;
         let mut taken = 0usize;
@@ -399,7 +431,10 @@ impl SubmitQueue {
         st.pending = rest;
         drop(st);
         self.space_cv.notify_all();
-        Some(batch.into_iter().map(|p| p.expect("rank fully assigned")).collect())
+        Some((
+            batch.into_iter().map(|p| p.expect("rank fully assigned")).collect(),
+            max_macs,
+        ))
     }
 
     /// Begin shutdown: new admissions fail, the scheduler drains what
@@ -462,7 +497,8 @@ mod tests {
         )
         .unwrap();
         q.push(req(4).with_priority(Priority::Interactive)).unwrap();
-        let batch = q.pop_batch(usize::MAX, 16).unwrap();
+        let (batch, eff) = q.pop_batch(usize::MAX, 16, false).unwrap();
+        assert_eq!(eff, usize::MAX, "non-adaptive pop applies the base budget");
         let rows: Vec<usize> = batch.iter().map(|p| p.op.x.rows).collect();
         // Interactive first (EDF: 3 before 2, no-deadline 4 last), the
         // bulk request last despite holding the earliest deadline.
@@ -477,15 +513,33 @@ mod tests {
             q.push(req(m)).unwrap();
         }
         // Each op is 8 * 2 * 16 = 256 MACs; a 300-MAC budget takes one.
-        let b1 = q.pop_batch(300, 16).unwrap();
+        let (b1, eff1) = q.pop_batch(300, 16, false).unwrap();
+        assert_eq!(eff1, 300);
         assert_eq!(b1.len(), 1);
         // A budget smaller than any single op still takes one (progress
         // guarantee), never zero.
-        let b2 = q.pop_batch(1, 16).unwrap();
+        let (b2, _) = q.pop_batch(1, 16, false).unwrap();
         assert_eq!(b2.len(), 1);
-        let b3 = q.pop_batch(usize::MAX, 16).unwrap();
+        let (b3, _) = q.pop_batch(usize::MAX, 16, false).unwrap();
         assert_eq!(b3.len(), 1);
         assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn adaptive_pop_cuts_only_when_the_edf_head_is_due() {
+        let q = SubmitQueue::new(8);
+        let base = 1 << 20;
+        // No deadlines pending: the budget scales with depth, no cut.
+        q.push(req(1)).unwrap();
+        let (_, eff) = q.pop_batch(base, 16, true).unwrap();
+        assert!(eff >= base, "{eff}");
+        // An already-expired deadline at the EDF head cuts to base/4,
+        // and the cut batch leads with exactly that request.
+        q.push(req(2).with_deadline(Duration::ZERO)).unwrap();
+        q.push(req(3)).unwrap();
+        let (batch, eff) = q.pop_batch(base, 16, true).unwrap();
+        assert_eq!(eff, base / 4);
+        assert_eq!(batch[0].op.x.rows, 2, "due request leads the cut batch");
     }
 
     #[test]
@@ -495,9 +549,9 @@ mod tests {
         q.shutdown();
         assert!(matches!(q.push(req(2)), Err(AdmissionError::ShuttingDown)));
         // Already-admitted work still comes out...
-        assert_eq!(q.pop_batch(usize::MAX, 16).unwrap().len(), 1);
+        assert_eq!(q.pop_batch(usize::MAX, 16, false).unwrap().0.len(), 1);
         // ...then the queue reports done instead of blocking.
-        assert!(q.pop_batch(usize::MAX, 16).is_none());
+        assert!(q.pop_batch(usize::MAX, 16, false).is_none());
     }
 
     #[test]

@@ -37,7 +37,8 @@
 
 use super::pool::Job;
 use super::ExecRuntime;
-use crate::bfp::gemm::{active_kernel, band_shifts, BandTask, PARALLEL_MIN_MACS};
+use crate::bfp::gemm::{band_shifts, BandTask, PARALLEL_MIN_MACS};
+use crate::bfp::kernels::{self, GemmKernel};
 use crate::bfp::{BfpMatrix, BlockFormat, Mat, Quantizer};
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -91,6 +92,7 @@ pub struct BatchGemm<'rt> {
     rt: &'rt ExecRuntime,
     band_rows: Option<usize>,
     cache_weights: bool,
+    kernel: Option<&'static dyn GemmKernel>,
 }
 
 impl<'rt> BatchGemm<'rt> {
@@ -99,6 +101,7 @@ impl<'rt> BatchGemm<'rt> {
             rt,
             band_rows: None,
             cache_weights: true,
+            kernel: None,
         }
     }
 
@@ -114,6 +117,16 @@ impl<'rt> BatchGemm<'rt> {
     /// then encoded fresh, still in parallel).
     pub fn cache_weights(mut self, on: bool) -> Self {
         self.cache_weights = on;
+        self
+    }
+
+    /// Force a specific kernel backend instead of the registry's
+    /// per-operand-pair dispatch. Ops whose plane-layout pair the
+    /// forced backend cannot run degrade down the registry's fallback
+    /// chain (ending at the scalar kernel) — bit-identical either way.
+    /// This is how the property suites pin every registered backend.
+    pub fn with_kernel(mut self, kernel: &'static dyn GemmKernel) -> Self {
+        self.kernel = Some(kernel);
         self
     }
 
@@ -194,13 +207,21 @@ impl<'rt> BatchGemm<'rt> {
             .iter()
             .map(OwnedGemmOp::macs)
             .fold(0usize, usize::saturating_add);
-        let kernel = active_kernel();
         let mut jobs: Vec<Job> = Vec::new();
         for (((out, xp), wp), (xsh, wsh)) in outs.iter_mut().zip(&xs).zip(&ws).zip(&shifts) {
             let (m, n) = (xp.rows, wp.rows);
             if m == 0 || n == 0 {
                 continue;
             }
+            // Kernel dispatch is per op: a heterogeneous batch can mix
+            // nibble-packed, i8, and i16 operands, each running the
+            // best backend for its layout pair.
+            let (xl, wl) = (xp.mantissas.layout(), wp.mantissas.layout());
+            let block = xp.fmt.block_size;
+            let kernel = match self.kernel {
+                Some(k) => kernels::registry().select_from(k, xl, wl, block),
+                None => kernels::active_kernel(xl, wl, block),
+            };
             let macs = m.saturating_mul(n).saturating_mul(xp.cols);
             let band = self.band_for(m, macs, total_macs, threads);
             let wref: &BfpMatrix = wp;

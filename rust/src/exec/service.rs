@@ -52,7 +52,8 @@ use super::queue::{
 };
 use super::scheduler::{BatchGemm, OwnedGemmOp};
 use super::ExecRuntime;
-use crate::bfp::{BfpMatrix, BlockFormat, Mat};
+use crate::bfp::{kernels, BfpMatrix, BlockFormat, Mat};
+use crate::util::KernelChoice;
 use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
@@ -69,9 +70,22 @@ pub struct ServiceConfig {
     pub queue_capacity: usize,
     /// Max requests fused into one execution batch.
     pub max_batch_ops: usize,
-    /// Max cumulative MAC volume per batch (a single larger op still
-    /// runs alone — the budget cuts batches, it never starves ops).
+    /// **Base** cumulative MAC volume per batch (a single larger op
+    /// still runs alone — the budget cuts batches, it never starves
+    /// ops). With `adaptive_batch` on, the scheduler scales this with
+    /// observed queue depth and deadline pressure per batch — see
+    /// [`adaptive_batch_macs`]; the effective value is surfaced in
+    /// [`ServiceStats::effective_batch_macs`].
     pub max_batch_macs: usize,
+    /// Scale the MAC budget with observed load (default on). Off =
+    /// the static PR-3 behavior.
+    pub adaptive_batch: bool,
+    /// GEMM kernel backend for this service's batches: `Auto` (the
+    /// default) keeps the registry's per-operand-pair dispatch; a
+    /// named choice forces that backend where it supports the operand
+    /// layouts. Either way results are bit-identical — this is a
+    /// performance and test knob, never a numerics one.
+    pub kernel: KernelChoice,
 }
 
 impl Default for ServiceConfig {
@@ -80,8 +94,33 @@ impl Default for ServiceConfig {
             queue_capacity: 256,
             max_batch_ops: 64,
             max_batch_macs: 1 << 26,
+            adaptive_batch: true,
+            kernel: KernelChoice::Auto,
         }
     }
+}
+
+/// Effective per-batch MAC budget under observed load: monotonically
+/// non-decreasing in queue depth — a deeper backlog merges into
+/// larger (more throughput-efficient) batches, up to 4x the configured
+/// base at a full queue — and cut to a quarter of the base while the
+/// **EDF head** of the queue is already past its deadline, so that
+/// request starts executing in an interactive-sized batch instead of
+/// riding a bulk one (the caller keys `deadline_due` on the head of
+/// the batch being formed, never on requests the cut cannot help).
+pub fn adaptive_batch_macs(
+    base: usize,
+    queue_depth: usize,
+    queue_capacity: usize,
+    deadline_due: bool,
+) -> usize {
+    let base = base.max(1);
+    if deadline_due {
+        return (base / 4).max(1);
+    }
+    let cap = queue_capacity.max(1);
+    let fill = queue_depth.min(cap);
+    base.saturating_add(base.saturating_mul(3).saturating_mul(fill) / cap)
 }
 
 #[derive(Default)]
@@ -92,11 +131,14 @@ struct ServiceCounters {
     rejected: AtomicU64,
     deadline_missed: AtomicU64,
     batches: AtomicU64,
+    /// MAC budget the adaptive scheduler used for the most recent
+    /// batch (the base budget until the first batch forms).
+    effective_batch_macs: AtomicU64,
 }
 
 /// Counter snapshot of one service (see
 /// [`crate::metrics::exec_service_snapshot`] for the global one).
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ServiceStats {
     /// Requests admitted into the queue.
     pub submitted: u64,
@@ -114,6 +156,32 @@ pub struct ServiceStats {
     pub queue_depth: usize,
     /// High-water mark of the pending queue.
     pub peak_queue_depth: usize,
+    /// MAC budget the (adaptive) scheduler applied to the most recent
+    /// batch — equals `ServiceConfig::max_batch_macs` when adaptation
+    /// is off or the queue is idle.
+    pub effective_batch_macs: u64,
+    /// Kernel backend identity this service executes with (the forced
+    /// [`ServiceConfig::kernel`] choice, or the registry's preferred
+    /// backend under `Auto`; per-op dispatch may still fall back for
+    /// layout pairs the backend cannot run).
+    pub kernel: &'static str,
+}
+
+impl Default for ServiceStats {
+    fn default() -> Self {
+        Self {
+            submitted: 0,
+            completed: 0,
+            failed: 0,
+            rejected: 0,
+            deadline_missed: 0,
+            batches: 0,
+            queue_depth: 0,
+            peak_queue_depth: 0,
+            effective_batch_macs: 0,
+            kernel: "",
+        }
+    }
 }
 
 impl ServiceStats {
@@ -134,6 +202,7 @@ pub struct BfpService {
     rt: Arc<ExecRuntime>,
     queue: Arc<SubmitQueue>,
     counters: Arc<ServiceCounters>,
+    cfg: ServiceConfig,
     scheduler: Option<JoinHandle<()>>,
 }
 
@@ -145,6 +214,9 @@ impl BfpService {
     pub fn new(rt: Arc<ExecRuntime>, cfg: ServiceConfig) -> Self {
         let queue = Arc::new(SubmitQueue::new(cfg.queue_capacity));
         let counters = Arc::new(ServiceCounters::default());
+        counters
+            .effective_batch_macs
+            .store(cfg.max_batch_macs.max(1) as u64, Ordering::Relaxed);
         let scheduler = {
             let rt = Arc::clone(&rt);
             let queue = Arc::clone(&queue);
@@ -158,6 +230,7 @@ impl BfpService {
             rt,
             queue,
             counters,
+            cfg,
             scheduler: Some(scheduler),
         }
     }
@@ -234,6 +307,8 @@ impl BfpService {
             batches: self.counters.batches.load(Ordering::Relaxed),
             queue_depth: self.queue.depth(),
             peak_queue_depth: self.queue.peak_depth(),
+            effective_batch_macs: self.counters.effective_batch_macs.load(Ordering::Relaxed),
+            kernel: kernels::registry().resolve(self.cfg.kernel).name(),
         }
     }
 
@@ -268,17 +343,36 @@ impl Drop for BfpService {
     }
 }
 
+/// A batch executor honoring the service's kernel choice (`Auto`
+/// keeps the registry's per-operand-pair dispatch).
+fn batch_stage<'rt>(rt: &'rt ExecRuntime, cfg: &ServiceConfig) -> BatchGemm<'rt> {
+    match cfg.kernel {
+        KernelChoice::Auto => BatchGemm::new(rt),
+        choice => BatchGemm::new(rt).with_kernel(kernels::registry().resolve(choice)),
+    }
+}
+
 fn scheduler_loop(
     rt: &ExecRuntime,
     queue: &SubmitQueue,
     counters: &ServiceCounters,
     cfg: ServiceConfig,
 ) {
-    while let Some(batch) = queue.pop_batch(cfg.max_batch_macs, cfg.max_batch_ops) {
+    // The adaptive MAC budget is computed by `pop_batch` itself, under
+    // the lock that forms the batch — from the depth and deadline
+    // pressure of exactly the requests being cut (see
+    // [`adaptive_batch_macs`]). Adaptation is a throughput/latency
+    // heuristic, never a correctness input.
+    while let Some((batch, effective_macs)) =
+        queue.pop_batch(cfg.max_batch_macs, cfg.max_batch_ops, cfg.adaptive_batch)
+    {
+        counters
+            .effective_batch_macs
+            .store(effective_macs as u64, Ordering::Relaxed);
         counters.batches.fetch_add(1, Ordering::Relaxed);
         let started = Instant::now();
         let ops: Vec<OwnedGemmOp> = batch.iter().map(|p| p.op.clone()).collect();
-        match BatchGemm::new(rt).run(&ops) {
+        match batch_stage(rt, &cfg).run(&ops) {
             Ok(outs) => {
                 for (p, out) in batch.into_iter().zip(outs) {
                     fulfill(p, Ok(out), started, counters);
@@ -289,7 +383,7 @@ fn scheduler_loop(
                 // would succeed alone: retry each op by itself and give
                 // every ticket its own verdict.
                 for p in batch {
-                    let one = BatchGemm::new(rt)
+                    let one = batch_stage(rt, &cfg)
                         .run(std::slice::from_ref(&p.op))
                         .map(|mut outs| outs.remove(0));
                     fulfill(p, one, started, counters);
@@ -470,6 +564,126 @@ mod tests {
         for t in &tickets {
             assert!(t.poll(), "drop must fulfill every admitted ticket");
             assert!(t.wait().is_ok());
+        }
+    }
+
+    #[test]
+    fn adaptive_budget_is_monotone_in_depth_and_cut_under_deadline_pressure() {
+        let base = 1 << 20;
+        let cap = 64usize;
+        // Monotone non-decreasing in queue depth...
+        let mut last = 0usize;
+        for depth in 0..=cap {
+            let eff = adaptive_batch_macs(base, depth, cap, false);
+            assert!(eff >= last, "depth {depth}: {eff} < {last}");
+            last = eff;
+        }
+        // ...anchored at the base when idle, 4x at a full queue, and
+        // saturating (depth beyond capacity changes nothing).
+        assert_eq!(adaptive_batch_macs(base, 0, cap, false), base);
+        assert_eq!(adaptive_batch_macs(base, cap, cap, false), 4 * base);
+        assert_eq!(
+            adaptive_batch_macs(base, 10 * cap, cap, false),
+            adaptive_batch_macs(base, cap, cap, false)
+        );
+        // Deadline pressure cuts to a quarter of the base, regardless
+        // of depth — latency beats batching efficiency when a deadline
+        // is already burning.
+        for depth in [0usize, 1, cap] {
+            assert_eq!(adaptive_batch_macs(base, depth, cap, true), base / 4);
+        }
+        // Degenerate inputs stay usable (the progress guarantee).
+        assert_eq!(adaptive_batch_macs(0, 5, 0, false), 4);
+        assert_eq!(adaptive_batch_macs(1, 0, 8, true), 1);
+    }
+
+    #[test]
+    fn effective_budget_and_kernel_are_surfaced_in_stats() {
+        let base = 1 << 22;
+        let svc = BfpService::new(
+            Arc::new(ExecRuntime::with_threads(2)),
+            ServiceConfig {
+                max_batch_macs: base,
+                ..ServiceConfig::default()
+            },
+        );
+        // Before any batch forms, the snapshot reports the base budget
+        // and the registry-resolved kernel identity.
+        let s0 = svc.stats();
+        assert_eq!(s0.effective_batch_macs, base as u64);
+        assert!(
+            crate::bfp::registry().by_name(s0.kernel).is_some(),
+            "stats kernel {:?} must be a registered backend",
+            s0.kernel
+        );
+        // Run one request; the adaptive budget stays within its
+        // [base/4, 4*base] envelope and the result is still exact.
+        let mut rng = Rng::new(0xADA9);
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        let x = randmat(&mut rng, 3, 32);
+        let w = randmat(&mut rng, 32, 5);
+        let op = OwnedGemmOp::new(Arc::clone(&x), Arc::clone(&w), fmt).unwrap();
+        let resp = svc.submit(GemmRequest::new(op)).unwrap().wait().unwrap();
+        let want = hbfp_gemm_scalar(&x, &w, fmt).unwrap();
+        for (g, s) in resp.out.data.iter().zip(&want.data) {
+            assert_eq!(g.to_bits(), s.to_bits());
+        }
+        let s1 = svc.stats();
+        assert!(s1.batches >= 1);
+        assert!(
+            (base as u64 / 4..=4 * base as u64).contains(&s1.effective_batch_macs),
+            "{}",
+            s1.effective_batch_macs
+        );
+    }
+
+    #[test]
+    fn forced_kernel_choices_stay_bit_identical() {
+        let mut rng = Rng::new(0x5CA1);
+        let fmt4 = BlockFormat::new(4, 16).unwrap(); // nibble-packed planes
+        let fmt6 = BlockFormat::new(6, 16).unwrap(); // i8 planes
+        let ops: Vec<OwnedGemmOp> = [fmt4, fmt6]
+            .iter()
+            .flat_map(|&fmt| {
+                let mut v = Vec::new();
+                for _ in 0..3 {
+                    v.push(
+                        OwnedGemmOp::new(randmat(&mut rng, 4, 48), randmat(&mut rng, 48, 6), fmt)
+                            .unwrap(),
+                    );
+                }
+                v
+            })
+            .collect();
+        for choice in [
+            crate::util::KernelChoice::Scalar,
+            crate::util::KernelChoice::Autovec,
+            crate::util::KernelChoice::Avx2,
+        ] {
+            let svc = BfpService::new(
+                Arc::new(ExecRuntime::with_threads(2)),
+                ServiceConfig {
+                    kernel: choice,
+                    ..ServiceConfig::default()
+                },
+            );
+            assert!(!svc.stats().kernel.is_empty());
+            for (i, op) in ops.iter().enumerate() {
+                let resp = svc
+                    .submit_blocking(GemmRequest::new(op.clone()))
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+                let want = hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap();
+                for (g, s) in resp.out.data.iter().zip(&want.data) {
+                    assert_eq!(
+                        g.to_bits(),
+                        s.to_bits(),
+                        "kernel {:?} op {i}",
+                        choice
+                    );
+                }
+            }
         }
     }
 

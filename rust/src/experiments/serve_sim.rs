@@ -295,6 +295,10 @@ pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport
     }
     kv("weight working set", cfg.weights.to_string());
     kv("pool threads", rt.pool().threads().to_string());
+    kv(
+        "gemm kernel",
+        crate::bfp::kernels::registry().preferred().name().to_string(),
+    );
     kv("completed", completed.to_string());
     kv("rejected (queue full)", outcome.rejected.to_string());
     kv("total MACs (completed)", format!("{total_macs:.3e}"));
@@ -311,6 +315,10 @@ pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport
     if let Some(s) = &outcome.service {
         kv("queue depth (peak)", s.peak_queue_depth.to_string());
         kv("execution batches", s.batches.to_string());
+        kv(
+            "effective batch MACs (last)",
+            format!("{:.3e}", s.effective_batch_macs as f64),
+        );
     }
     kv(
         "cache hits (this run)",
@@ -326,9 +334,33 @@ pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport
         if cfg.verify { "yes (bit-exact sample)" } else { "no" }.to_string(),
     );
 
+    let reg = crate::bfp::kernels::registry();
+    let (cache_entries_cap, cache_bytes_cap) = rt.cache().caps();
     let json = Json::obj(vec![
         ("suite", Json::str("serve_sim")),
         ("mode", Json::str(cfg.mode.json_tag())),
+        // Self-describing run environment: which kernel backend,
+        // thread budget, and cache caps produced these numbers, so
+        // BENCH_serve.json trajectories compare like for like.
+        ("kernel", Json::str(reg.preferred().name())),
+        ("kernel_choice", Json::str(reg.choice().label())),
+        (
+            "thread_budget",
+            Json::Num(crate::util::gemm_thread_budget() as f64),
+        ),
+        ("cache_entries_cap", Json::Num(cache_entries_cap as f64)),
+        (
+            "cache_mb_cap",
+            Json::Num((cache_bytes_cap >> 20) as f64),
+        ),
+        (
+            "effective_batch_macs",
+            outcome
+                .service
+                .as_ref()
+                .map(|s| Json::Num(s.effective_batch_macs as f64))
+                .unwrap_or(Json::Null),
+        ),
         ("requests", Json::Num(cfg.requests as f64)),
         ("completed", Json::Num(completed as f64)),
         ("rejected", Json::Num(outcome.rejected as f64)),
@@ -591,6 +623,16 @@ mod tests {
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.req("suite").unwrap().as_str().unwrap(), "serve_sim");
         assert_eq!(back.req("requests").unwrap().as_usize().unwrap(), 6);
+        // The artifact is self-describing: kernel identity, thread
+        // budget, and cache caps ride along with the numbers.
+        let kernel = back.req("kernel").unwrap().as_str().unwrap().to_string();
+        assert!(
+            crate::bfp::kernels::registry().by_name(&kernel).is_some(),
+            "{kernel:?} must be a registered backend"
+        );
+        assert!(back.req("thread_budget").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(back.req("cache_entries_cap").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(back.req("cache_mb_cap").unwrap().as_f64().unwrap() >= 1.0);
         let _ = std::fs::remove_file(&path);
     }
 

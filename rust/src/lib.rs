@@ -19,16 +19,21 @@
 //!
 //!   Its production datapath is the **packed tensor engine**
 //!   ([`bfp::BfpMatrix`]): tensors live as two contiguous
-//!   structure-of-arrays planes — an `i8`/`i16` mantissa plane (dtype
-//!   chosen by [`bfp::BlockFormat::plane_dtype`], rows padded to whole
-//!   blocks, stride `blocks_per_row * block_size`) and one `i32` shared
-//!   exponent per block. Values decode as `q * 2^scale_shift(e, m)`
-//!   with `scale_shift(e, m) = e - m + 2` ([`bfp::scale_shift`]).
-//!   Operands are encoded once and multiplied by a cache-tiled,
-//!   register-blocked fixed-point GEMM ([`bfp::gemm`]) that parallelizes
-//!   over whole output-row bands — a partitioning rule that keeps
-//!   parallel results bit-identical to the serial and scalar reference
-//!   paths (property-tested), so every analysis, sweep, and
+//!   structure-of-arrays planes — a mantissa plane whose storage is
+//!   chosen by [`bfp::BlockFormat::plane_layout`] (nibble-packed 4-bit
+//!   pairs for the paper's m <= 4 formats, `i8`/`i16` otherwise; rows
+//!   padded to whole blocks, stride `blocks_per_row * block_size`) and
+//!   one `i32` shared exponent per block. Values decode as
+//!   `q * 2^scale_shift(e, m)` with `scale_shift(e, m) = e - m + 2`
+//!   ([`bfp::scale_shift`]). Operands are encoded once and multiplied
+//!   by a cache-tiled, register-blocked fixed-point GEMM
+//!   ([`bfp::gemm`]) whose micro-kernel comes from the
+//!   [`bfp::kernels`] registry — portable scalar, unrolled autovec,
+//!   and runtime-detected AVX2 backends, selected per operand layout
+//!   pair (override: `BOOSTERS_KERNEL`) — parallelized over whole
+//!   output-row bands. Every backend and any band partitioning is
+//!   bit-identical to the serial and scalar reference paths
+//!   (property-tested per backend), so every analysis, sweep, and
 //!   host-emulation consumer sees one set of numerics at
 //!   bandwidth-bound speed.
 //! * [`exec`] — the **execution service** those kernels run on. Its

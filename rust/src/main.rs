@@ -51,7 +51,9 @@ SUBCOMMANDS
                                          BENCH_serve.json artifact
 
 POLICIES: fp32 | hbfpN | hbfpN+layersM | booster[K] | cyclicMIN-MAX
-Artifacts dir: --artifacts PATH (default ./artifacts or $REPRO_ARTIFACTS)";
+Artifacts dir: --artifacts PATH (default ./artifacts or $REPRO_ARTIFACTS)
+Env knobs: BOOSTERS_KERNEL=auto|scalar|autovec|avx2 (GEMM backend),
+  BOOSTERS_GEMM_THREADS=N, BOOSTERS_CACHE_ENTRIES=N, BOOSTERS_CACHE_MB=N";
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;

@@ -101,6 +101,12 @@ pub struct BenchSuite {
     pub title: String,
     pub budget_ms: f64,
     pub results: Vec<BenchResult>,
+    /// Execution-environment descriptors embedded in the JSON artifact
+    /// (kernel backend, thread budget, cache caps, ...) so uploaded
+    /// `BENCH_*.json` trajectories are comparable across runs and
+    /// runners. Seeded by [`BenchSuite::new`]; extend with
+    /// [`BenchSuite::meta`].
+    pub meta: Vec<(String, Json)>,
 }
 
 impl BenchSuite {
@@ -111,10 +117,41 @@ impl BenchSuite {
             .and_then(|v| v.parse().ok())
             .unwrap_or(300.0);
         println!("### bench suite: {title}");
+        let reg = crate::bfp::kernels::registry();
+        let (cache_entries, cache_bytes) = crate::util::cache_budget();
+        let meta = vec![
+            ("kernel".to_string(), Json::str(reg.preferred().name())),
+            (
+                "kernel_choice".to_string(),
+                Json::str(reg.choice().label()),
+            ),
+            (
+                "thread_budget".to_string(),
+                Json::Num(crate::util::gemm_thread_budget() as f64),
+            ),
+            (
+                "cache_entries_cap".to_string(),
+                Json::Num(cache_entries as f64),
+            ),
+            (
+                "cache_mb_cap".to_string(),
+                Json::Num((cache_bytes >> 20) as f64),
+            ),
+        ];
         Self {
             title: title.to_string(),
             budget_ms,
             results: Vec::new(),
+            meta,
+        }
+    }
+
+    /// Attach (or override) one metadata field on the JSON artifact.
+    pub fn meta(&mut self, key: &str, value: Json) {
+        if let Some(slot) = self.meta.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = value;
+        } else {
+            self.meta.push((key.to_string(), value));
         }
     }
 
@@ -128,11 +165,17 @@ impl BenchSuite {
         self.results.push(r);
     }
 
-    /// Machine-readable form of the whole suite.
+    /// Machine-readable form of the whole suite (self-describing: the
+    /// `meta` object names the kernel backend, thread budget, and
+    /// cache caps the numbers were measured under).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("suite", Json::str(self.title.as_str())),
             ("budget_ms", Json::Num(self.budget_ms)),
+            (
+                "meta",
+                Json::Obj(self.meta.clone()),
+            ),
             (
                 "results",
                 Json::arr(self.results.iter().map(BenchResult::to_json)),
@@ -206,6 +249,21 @@ mod tests {
     }
 
     #[test]
+    fn suite_meta_is_self_describing() {
+        let suite = BenchSuite::new("meta test");
+        let j = suite.to_json();
+        let meta = j.req("meta").unwrap();
+        let kernel = meta.req("kernel").unwrap().as_str().unwrap().to_string();
+        assert!(
+            crate::bfp::registry().by_name(&kernel).is_some(),
+            "meta kernel {kernel:?} must be a registered backend"
+        );
+        assert!(meta.req("thread_budget").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(meta.req("cache_entries_cap").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(meta.req("cache_mb_cap").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
     fn json_roundtrips_the_suite() {
         let r = BenchResult {
             name: "gemm".into(),
@@ -215,13 +273,19 @@ mod tests {
             p95_ns: 2.0e6,
             items: Some(1024.0),
         };
-        let suite = BenchSuite {
+        let mut suite = BenchSuite {
             title: "t".into(),
             budget_ms: 20.0,
             results: vec![r],
+            meta: vec![("kernel".to_string(), Json::str("scalar-tiled"))],
         };
+        suite.meta("thread_budget", Json::Num(4.0));
+        suite.meta("kernel", Json::str("autovec")); // override, not append
         let back = Json::parse(&suite.to_json().render()).unwrap();
         assert_eq!(back.req("suite").unwrap().as_str().unwrap(), "t");
+        let meta = back.req("meta").unwrap();
+        assert_eq!(meta.req("kernel").unwrap().as_str().unwrap(), "autovec");
+        assert_eq!(meta.req("thread_budget").unwrap().as_usize().unwrap(), 4);
         let results = back.req("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), 1);
         assert_eq!(results[0].req("name").unwrap().as_str().unwrap(), "gemm");

@@ -48,6 +48,67 @@ pub fn gemm_thread_budget() -> usize {
         })
 }
 
+/// GEMM micro-kernel selection — the parsed form of the
+/// `BOOSTERS_KERNEL` override. `Auto` lets the kernel registry
+/// ([`crate::bfp::kernels`]) pick the best runtime-detected backend;
+/// the named variants force one (AVX2 falls back loudly when the host
+/// cannot run it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelChoice {
+    #[default]
+    Auto,
+    Scalar,
+    Autovec,
+    Avx2,
+}
+
+impl KernelChoice {
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Scalar => "scalar",
+            KernelChoice::Autovec => "autovec",
+            KernelChoice::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Pure parsing core of [`kernel_override`]: case-insensitive match on
+/// `{auto, scalar, autovec, avx2}`. Returns the parsed choice plus the
+/// rejected raw value (if any) so the env-reading wrapper can warn —
+/// unknown values must fall back to `Auto`, never panic.
+pub fn parse_kernel_choice(raw: Option<&str>) -> (KernelChoice, Option<String>) {
+    let Some(raw) = raw else {
+        return (KernelChoice::Auto, None);
+    };
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => (KernelChoice::Auto, None),
+        "scalar" => (KernelChoice::Scalar, None),
+        "autovec" => (KernelChoice::Autovec, None),
+        "avx2" => (KernelChoice::Avx2, None),
+        _ => (KernelChoice::Auto, Some(raw.to_string())),
+    }
+}
+
+/// GEMM kernel override: the single home of the `BOOSTERS_KERNEL`
+/// environment variable (`auto` / `scalar` / `autovec` / `avx2`),
+/// hoisted here next to [`gemm_thread_budget`] / [`cache_budget`] so
+/// every dispatch site resolves it identically. Unknown values warn
+/// (once) and fall back to `auto`.
+pub fn kernel_override() -> KernelChoice {
+    let (choice, rejected) = parse_kernel_choice(std::env::var("BOOSTERS_KERNEL").ok().as_deref());
+    if let Some(raw) = rejected {
+        static WARNED: std::sync::Once = std::sync::Once::new();
+        WARNED.call_once(|| {
+            eprintln!(
+                "[boosters] BOOSTERS_KERNEL={raw:?} is not one of auto/scalar/autovec/avx2; \
+                 falling back to auto"
+            );
+        });
+    }
+    choice
+}
+
 /// Default operand-cache caps: entry count and approximate resident
 /// plane bytes.
 pub const DEFAULT_CACHE_ENTRIES: usize = 96;
@@ -136,6 +197,28 @@ mod tests {
         let (entries, bytes) = cache_budget();
         assert!(entries >= 1 && bytes >= 1);
         assert_eq!(default_cache_budget(), (DEFAULT_CACHE_ENTRIES, DEFAULT_CACHE_BYTES));
+    }
+
+    #[test]
+    fn kernel_choice_parsing_and_fallback() {
+        // Unset / empty / auto -> Auto, nothing rejected.
+        assert_eq!(parse_kernel_choice(None), (KernelChoice::Auto, None));
+        assert_eq!(parse_kernel_choice(Some("")), (KernelChoice::Auto, None));
+        assert_eq!(parse_kernel_choice(Some("auto")), (KernelChoice::Auto, None));
+        // The three named backends, case-insensitive, whitespace
+        // tolerated.
+        assert_eq!(parse_kernel_choice(Some("scalar")), (KernelChoice::Scalar, None));
+        assert_eq!(parse_kernel_choice(Some(" AutoVec ")), (KernelChoice::Autovec, None));
+        assert_eq!(parse_kernel_choice(Some("AVX2")), (KernelChoice::Avx2, None));
+        // Unknown values fall back to Auto and surface the raw string
+        // for the warn path — no panic.
+        let (choice, rejected) = parse_kernel_choice(Some("sse9"));
+        assert_eq!(choice, KernelChoice::Auto);
+        assert_eq!(rejected.as_deref(), Some("sse9"));
+        // The env-reading wrapper always yields a usable choice.
+        let _ = kernel_override();
+        assert_eq!(KernelChoice::default(), KernelChoice::Auto);
+        assert_eq!(KernelChoice::Avx2.label(), "avx2");
     }
 
     #[test]

@@ -17,7 +17,10 @@
 //! `-- --nocapture`, so a green run with a missing file is easy to
 //! mistake for a real replay; keep the file in the tree.
 
-use boosters::bfp::{quantize_flat, quantize_packed, xorshift_hash, Quantizer, RoundMode};
+use boosters::bfp::{
+    quantize_flat, quantize_packed, xorshift_hash, BfpMatrix, BlockFormat, PlaneLayout, Quantizer,
+    RoundMode,
+};
 use boosters::runtime::artifacts_dir;
 use boosters::util::Json;
 
@@ -81,6 +84,52 @@ fn golden_quantize_bitexact() {
         }
     }
     assert!(checked > 10_000, "checked {checked} values");
+}
+
+#[test]
+fn golden_i4packed_plane_bitexact() {
+    // The nibble-packed mantissa plane is a *storage* change, never a
+    // numeric one: replay every deterministic (nearest-even) golden
+    // case that lands on the I4Packed layout (m <= 4, even block)
+    // through a direct plane encode and require the decode to match
+    // the jnp-oracle vectors bit-for-bit (modulo -0.0, which integer
+    // mantissas canonicalize) — while asserting the plane really is
+    // nibble-packed at half a byte per value.
+    let Some(doc) = load_golden() else {
+        skip();
+        return;
+    };
+    let cases = doc.req("cases").unwrap().as_arr().unwrap();
+    let mut checked = 0usize;
+    for c in cases {
+        let m = c.req("m_bits").unwrap().as_usize().unwrap() as u32;
+        let block = c.req("block").unwrap().as_usize().unwrap();
+        let rmode = c.req("rmode").unwrap().as_usize().unwrap();
+        if m > 4 || block % 2 != 0 || rmode != 0 {
+            continue;
+        }
+        let input = c.req("input").unwrap().as_f32_vec().unwrap();
+        let want = c.req("output").unwrap().as_f32_vec().unwrap();
+        let fmt = BlockFormat::new(m, block).unwrap();
+        assert_eq!(fmt.plane_layout(), PlaneLayout::I4Packed);
+        let enc =
+            BfpMatrix::encode(&input, 1, input.len(), fmt, Quantizer::nearest(m)).unwrap();
+        assert_eq!(enc.mantissas.layout(), PlaneLayout::I4Packed, "m={m} b={block}");
+        assert_eq!(
+            2 * enc.mantissas.resident_bytes(),
+            enc.mantissas.len(),
+            "two 4-bit mantissas per stored byte"
+        );
+        let mut got = Vec::new();
+        enc.decode_into(&mut got);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let same = (*g == 0.0 && *w == 0.0) || g.to_bits() == w.to_bits();
+            assert!(same, "i4packed: case m={m} b={block} elem {i}: {g} != {w}");
+        }
+        checked += 1;
+    }
+    assert!(checked >= 5, "expected the m<=4 even-block nearest cases, got {checked}");
 }
 
 #[test]

@@ -5,7 +5,7 @@
 //! pure memoization (hits change nothing but speed).
 
 use boosters::analysis::quantize_params_packed_cached;
-use boosters::bfp::{hbfp_gemm_scalar, BlockFormat, Mat, Quantizer};
+use boosters::bfp::{hbfp_gemm_scalar, registry, BlockFormat, Mat, PlaneLayout, Quantizer};
 use boosters::exec::{BatchGemm, ExecRuntime, OwnedGemmOp};
 use boosters::runtime::Tensor;
 use boosters::util::Rng;
@@ -64,6 +64,70 @@ fn prop_batch_gemm_bit_identical_to_scalar_reference() {
         let want = hbfp_gemm_scalar(x, w, *fmt).unwrap();
         assert_bits_eq(out, &want, &format!("op {i} (m={} b={})", fmt.mantissa_bits, fmt.block_size));
     }
+}
+
+/// Acceptance gate (PR 4): **every registered kernel backend** —
+/// scalar, autovec, and AVX2 where the host supports it — reproduces
+/// the scalar reference bit-for-bit on the full m x ragged-K grid
+/// (which mixes nibble-packed m <= 4 operands with i8 planes), under a
+/// serial pool and a multi-thread pool. (The CI kernel matrix
+/// additionally runs the whole suite under each `BOOSTERS_KERNEL`
+/// selection.)
+#[test]
+fn prop_every_registered_kernel_bit_identical_to_scalar() {
+    let mut rng = Rng::new(0x4EE1);
+    let triples = build_ops(&mut rng);
+    // The grid must actually exercise the nibble-packed layout.
+    assert!(
+        triples
+            .iter()
+            .any(|(_, _, fmt)| fmt.plane_layout() == PlaneLayout::I4Packed),
+        "grid lost its m <= 4 coverage"
+    );
+    let kernels = registry().all();
+    assert!(kernels.len() >= 2, "expected scalar + autovec at minimum");
+    for kernel in kernels {
+        for threads in [1usize, boosters::util::gemm_thread_budget().clamp(2, 16)] {
+            let rt = ExecRuntime::with_threads(threads);
+            let got = BatchGemm::new(&rt)
+                .with_kernel(*kernel)
+                .run(&as_ops(&triples))
+                .unwrap();
+            for (i, ((x, w, fmt), out)) in triples.iter().zip(&got).enumerate() {
+                let want = hbfp_gemm_scalar(x, w, *fmt).unwrap();
+                assert_bits_eq(
+                    out,
+                    &want,
+                    &format!(
+                        "kernel {} threads {threads} op {i} (m={} b={})",
+                        kernel.name(),
+                        fmt.mantissa_bits,
+                        fmt.block_size
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// m = 4 operands store nibble-packed through the whole exec path:
+/// the cached encode yields half-byte-per-mantissa planes and the
+/// operand-cache key carries the layout.
+#[test]
+fn prop_m4_cached_encodes_are_nibble_packed() {
+    let mut rng = Rng::new(0x4B17);
+    let rt = ExecRuntime::with_threads(2);
+    let data = randn(&mut rng, 4 * 320);
+    let fmt4 = BlockFormat::new(4, 64).unwrap();
+    let enc = rt.encode_cached(&data, 4, 320, fmt4).unwrap();
+    assert_eq!(enc.mantissas.layout(), PlaneLayout::I4Packed);
+    assert_eq!(2 * enc.mantissas.resident_bytes(), enc.mantissas.len());
+    // Same content under an i8-layout format is a distinct entry.
+    let fmt5 = BlockFormat::new(5, 64).unwrap();
+    let enc5 = rt.encode_cached(&data, 4, 320, fmt5).unwrap();
+    assert_eq!(enc5.mantissas.layout(), PlaneLayout::I8);
+    assert_eq!(rt.cache_stats().entries, 2);
+    assert_eq!(enc5.mantissas.resident_bytes(), 2 * enc.mantissas.resident_bytes());
 }
 
 /// BOOSTERS_GEMM_THREADS=1 vs the default budget, and a spread of

@@ -11,7 +11,7 @@ use boosters::exec::{
     AdmissionError, BatchGemm, BfpService, ExecRuntime, GemmRequest, OwnedGemmOp, Priority,
     ServiceConfig, Ticket,
 };
-use boosters::util::Rng;
+use boosters::util::{KernelChoice, Rng};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -82,6 +82,56 @@ fn prop_async_bit_identical_to_sync_and_scalar() {
             );
             assert_bits_eq(&resp.out, &want, &format!("{ctx} vs scalar"));
             assert_bits_eq(&resp.out, &sync[i], &format!("{ctx} vs sync facade"));
+        }
+    }
+}
+
+/// Acceptance gate (PR 4): the service stays bit-identical to the
+/// scalar reference under **every kernel-backend choice** — forced
+/// scalar, forced autovec, and forced AVX2 (which degrades to a
+/// runnable backend on hosts without it) — across serial and
+/// multi-thread pools, on the full grid (nibble-packed m <= 4 planes
+/// included). The adaptive batch budget is active throughout; like
+/// every scheduling knob it can never touch numerics.
+#[test]
+fn prop_service_bit_identical_under_every_kernel_choice() {
+    let mut rng = Rng::new(0x6B31);
+    let ops = build_ops(&mut rng);
+    for choice in [KernelChoice::Scalar, KernelChoice::Autovec, KernelChoice::Avx2] {
+        for threads in [1usize, 4] {
+            let svc = BfpService::new(
+                Arc::new(ExecRuntime::with_threads(threads)),
+                ServiceConfig {
+                    kernel: choice,
+                    ..ServiceConfig::default()
+                },
+            );
+            assert!(!svc.stats().kernel.is_empty());
+            let tickets: Vec<Ticket> = ops
+                .iter()
+                .map(|op| svc.submit_blocking(GemmRequest::new(op.clone())).unwrap())
+                .collect();
+            for (i, (t, op)) in tickets.iter().zip(&ops).enumerate() {
+                let resp = t.wait().unwrap();
+                let want = hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap();
+                assert_bits_eq(
+                    &resp.out,
+                    &want,
+                    &format!(
+                        "kernel {choice:?} threads {threads} op {i} (m={} b={})",
+                        op.fmt.mantissa_bits, op.fmt.block_size
+                    ),
+                );
+            }
+            // The effective adaptive budget stayed inside its
+            // [base/4, 4*base] envelope and was surfaced.
+            let stats = svc.stats();
+            let base = ServiceConfig::default().max_batch_macs as u64;
+            assert!(
+                (base / 4..=4 * base).contains(&stats.effective_batch_macs),
+                "{:?}",
+                stats
+            );
         }
     }
 }
