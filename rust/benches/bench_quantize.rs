@@ -65,6 +65,49 @@ fn main() {
         },
     );
 
+    // --- nibble-direct encode fast path ---------------------------------
+    // The unified block-writer core quantizes m=4 operands straight
+    // into packed nibble bytes (no i8 scratch round-trip). Same data,
+    // same shapes, m=4 (nibble-direct writer) vs m=6 (i8 writer): the
+    // series pair measures the fast path's win instead of asserting it.
+    // Multi-row shape -> the row-band pool split; the transposed pair
+    // covers the column-gather split.
+    let fmt6 = BlockFormat::new(6, 64).unwrap();
+    let q6 = Quantizer::nearest(6);
+    let mut enc4 = BfpMatrix::empty();
+    let mut enc6 = BfpMatrix::empty();
+    suite.bench_items(
+        "encode_into 1024x1024 m=4 b=64 nibble-direct (f32)",
+        Some(n),
+        || {
+            enc4.encode_into(&x, 1024, 1024, fmt, q4, 0).unwrap();
+            std::hint::black_box(enc4.storage_bits());
+        },
+    );
+    suite.bench_items(
+        "encode_into 1024x1024 m=6 b=64 i8 writer (f32)",
+        Some(n),
+        || {
+            enc6.encode_into(&x, 1024, 1024, fmt6, q6, 0).unwrap();
+            std::hint::black_box(enc6.storage_bits());
+        },
+    );
+    let wmat = Mat::new(1024, 256, x[..1024 * 256].to_vec()).unwrap();
+    suite.bench_items(
+        "encode_transposed 1024x256 m=4 b=64 nibble-direct (f32)",
+        Some((1024 * 256) as f64),
+        || {
+            std::hint::black_box(BfpMatrix::encode_transposed(&wmat, fmt, q4).unwrap());
+        },
+    );
+    suite.bench_items(
+        "encode_transposed 1024x256 m=6 b=64 i8 writer (f32)",
+        Some((1024 * 256) as f64),
+        || {
+            std::hint::black_box(BfpMatrix::encode_transposed(&wmat, fmt6, q6).unwrap());
+        },
+    );
+
     let a = randn(1 << 16, 2);
     let b = randn(1 << 16, 3);
     suite.bench_items("bfp_dot_fixed_point m=4 b=64 (64k)", Some(a.len() as f64), || {

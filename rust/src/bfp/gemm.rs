@@ -36,8 +36,7 @@
 //! file stays the band-level execution substrate underneath.
 
 use super::block::scale_shift;
-use super::kernels::scalar::{AccessDot, SliceDot};
-use super::kernels::{exp2_f64, BlockDot, NibblePlane};
+use super::kernels::{exp2_f64, with_plane_pair_dot, BlockDot};
 use super::matrix::Mat;
 use super::packed::BfpMatrix;
 use crate::exec::pool::Job;
@@ -196,55 +195,19 @@ pub fn packed_dot(x: &BfpMatrix, y: &BfpMatrix) -> Result<f64> {
     }
     let b = x.fmt.block_size;
     let (mx, my) = (x.fmt.mantissa_bits, y.fmt.mantissa_bits);
-    // Byte/i16 pairs keep the zipped-subslice inner loop (the shape
-    // LLVM autovectorizes); only nibble-involved pairs pay the
-    // index-generic access — same split as the scalar GEMM kernel.
-    use crate::bfp::packed::MantissaPlane as P;
-    // Monomorphized per plane pair (no dyn indirection on the dot hot
-    // path — blocks can be as small as a few MACs).
-    macro_rules! run {
-        ($d:expr) => {
-            dot_over(&$d, &x.exponents, &y.exponents, mx, my, b)
-        };
-    }
-    Ok(match (&x.mantissas, &y.mantissas) {
-        (P::I8(a), P::I8(w)) => run!(SliceDot {
-            a: a.as_slice(),
-            w: w.as_slice(),
-        }),
-        (P::I8(a), P::I16(w)) => run!(SliceDot {
-            a: a.as_slice(),
-            w: w.as_slice(),
-        }),
-        (P::I16(a), P::I8(w)) => run!(SliceDot {
-            a: a.as_slice(),
-            w: w.as_slice(),
-        }),
-        (P::I16(a), P::I16(w)) => run!(SliceDot {
-            a: a.as_slice(),
-            w: w.as_slice(),
-        }),
-        (P::I4Packed(a), P::I4Packed(w)) => run!(AccessDot {
-            a: NibblePlane(a),
-            w: NibblePlane(w),
-        }),
-        (P::I4Packed(a), P::I8(w)) => run!(AccessDot {
-            a: NibblePlane(a),
-            w: w.as_slice(),
-        }),
-        (P::I4Packed(a), P::I16(w)) => run!(AccessDot {
-            a: NibblePlane(a),
-            w: w.as_slice(),
-        }),
-        (P::I8(a), P::I4Packed(w)) => run!(AccessDot {
-            a: a.as_slice(),
-            w: NibblePlane(w),
-        }),
-        (P::I16(a), P::I4Packed(w)) => run!(AccessDot {
-            a: a.as_slice(),
-            w: NibblePlane(w),
-        }),
-    })
+    // Plane-view construction (byte/i16 pairs on the zipped-subslice
+    // loop, nibble-involved pairs on index-generic access) is
+    // single-homed in the kernels' shared macro; each arm is
+    // monomorphized — no dyn indirection on the dot hot path, where
+    // blocks can be as small as a few MACs.
+    Ok(with_plane_pair_dot!(&x.mantissas, &y.mantissas, |d| dot_over(
+        &d,
+        &x.exponents,
+        &y.exponents,
+        mx,
+        my,
+        b
+    )))
 }
 
 /// Shared blockwise dot-accumulation loop of [`packed_dot`]: exact

@@ -141,6 +141,90 @@ impl PlaneAccess for NibblePlane<'_> {
     }
 }
 
+/// Construct the right [`BlockDot`] view for an operand plane pair and
+/// run `$body` with it bound to `$d`: byte/i16 pairs get the
+/// zipped-subslice [`scalar::SliceDot`] (the shape LLVM
+/// autovectorizes), nibble-involved pairs the index-generic
+/// [`scalar::AccessDot`] over [`NibblePlane`] views. This is the
+/// single home of plane-view construction — the scalar band kernel
+/// and [`crate::bfp::gemm::packed_dot`] both expand it, so a new
+/// mantissa layout plugs into both in exactly one place.
+macro_rules! with_plane_pair_dot {
+    ($x:expr, $w:expr, |$d:ident| $body:expr) => {{
+        use $crate::bfp::kernels::scalar::{AccessDot, SliceDot};
+        use $crate::bfp::kernels::NibblePlane;
+        use $crate::bfp::packed::MantissaPlane as PlanePair;
+        match ($x, $w) {
+            // Byte/i16 pairs: the original zipped-subslice loops.
+            (PlanePair::I8(a), PlanePair::I8(w)) => {
+                let $d = SliceDot {
+                    a: a.as_slice(),
+                    w: w.as_slice(),
+                };
+                $body
+            }
+            (PlanePair::I8(a), PlanePair::I16(w)) => {
+                let $d = SliceDot {
+                    a: a.as_slice(),
+                    w: w.as_slice(),
+                };
+                $body
+            }
+            (PlanePair::I16(a), PlanePair::I8(w)) => {
+                let $d = SliceDot {
+                    a: a.as_slice(),
+                    w: w.as_slice(),
+                };
+                $body
+            }
+            (PlanePair::I16(a), PlanePair::I16(w)) => {
+                let $d = SliceDot {
+                    a: a.as_slice(),
+                    w: w.as_slice(),
+                };
+                $body
+            }
+            // Nibble-involved pairs: index-generic access.
+            (PlanePair::I4Packed(a), PlanePair::I4Packed(w)) => {
+                let $d = AccessDot {
+                    a: NibblePlane(a),
+                    w: NibblePlane(w),
+                };
+                $body
+            }
+            (PlanePair::I4Packed(a), PlanePair::I8(w)) => {
+                let $d = AccessDot {
+                    a: NibblePlane(a),
+                    w: w.as_slice(),
+                };
+                $body
+            }
+            (PlanePair::I4Packed(a), PlanePair::I16(w)) => {
+                let $d = AccessDot {
+                    a: NibblePlane(a),
+                    w: w.as_slice(),
+                };
+                $body
+            }
+            (PlanePair::I8(a), PlanePair::I4Packed(w)) => {
+                let $d = AccessDot {
+                    a: a.as_slice(),
+                    w: NibblePlane(w),
+                };
+                $body
+            }
+            (PlanePair::I16(a), PlanePair::I4Packed(w)) => {
+                let $d = AccessDot {
+                    a: a.as_slice(),
+                    w: NibblePlane(w),
+                };
+                $body
+            }
+        }
+    }};
+}
+pub(crate) use with_plane_pair_dot;
+
 /// Integer dot products over block pairs at absolute plane offsets —
 /// the only part of a kernel that differs between backends. `dot` must
 /// return the exact integer MAC of the block pair; exactness is what

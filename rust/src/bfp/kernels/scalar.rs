@@ -10,9 +10,10 @@
 //! pairs go through the index-generic [`AccessDot`].
 
 use super::{
-    run_tiled_band, BandTask, BlockDot, GemmKernel, NibblePlane, PlaneAccess, MAX_I32_BLOCK,
+    run_tiled_band, with_plane_pair_dot, BandTask, BlockDot, GemmKernel, PlaneAccess,
+    MAX_I32_BLOCK,
 };
-use crate::bfp::packed::{Mantissa, MantissaPlane, PlaneLayout};
+use crate::bfp::packed::{Mantissa, PlaneLayout};
 
 /// The portable cache-tiled, register-blocked kernel (see module docs).
 pub struct ScalarTiledKernel;
@@ -157,51 +158,10 @@ impl GemmKernel for ScalarTiledKernel {
         let kb = x.blocks_per_row;
         let b = x.fmt.block_size;
         debug_assert_eq!(kb, w.blocks_per_row);
-        macro_rules! run {
-            ($d:expr) => {
-                run_tiled_band(&$d, xsh, wsh, r0, rows, n, kb, b, out)
-            };
-        }
-        use MantissaPlane as P;
-        match (&x.mantissas, &w.mantissas) {
-            // Byte/i16 pairs: the original zipped-subslice loops.
-            (P::I8(a), P::I8(wm)) => run!(SliceDot {
-                a: a.as_slice(),
-                w: wm.as_slice()
-            }),
-            (P::I8(a), P::I16(wm)) => run!(SliceDot {
-                a: a.as_slice(),
-                w: wm.as_slice()
-            }),
-            (P::I16(a), P::I8(wm)) => run!(SliceDot {
-                a: a.as_slice(),
-                w: wm.as_slice()
-            }),
-            (P::I16(a), P::I16(wm)) => run!(SliceDot {
-                a: a.as_slice(),
-                w: wm.as_slice()
-            }),
-            // Nibble-involved pairs: index-generic access.
-            (P::I4Packed(a), P::I4Packed(wm)) => run!(AccessDot {
-                a: NibblePlane(a),
-                w: NibblePlane(wm)
-            }),
-            (P::I4Packed(a), P::I8(wm)) => run!(AccessDot {
-                a: NibblePlane(a),
-                w: wm.as_slice()
-            }),
-            (P::I4Packed(a), P::I16(wm)) => run!(AccessDot {
-                a: NibblePlane(a),
-                w: wm.as_slice()
-            }),
-            (P::I8(a), P::I4Packed(wm)) => run!(AccessDot {
-                a: a.as_slice(),
-                w: NibblePlane(wm)
-            }),
-            (P::I16(a), P::I4Packed(wm)) => run!(AccessDot {
-                a: a.as_slice(),
-                w: NibblePlane(wm)
-            }),
-        }
+        // Plane-view construction is single-homed in the shared macro;
+        // this kernel contributes only the traversal call.
+        with_plane_pair_dot!(&x.mantissas, &w.mantissas, |d| run_tiled_band(
+            &d, xsh, wsh, r0, rows, n, kb, b, out
+        ))
     }
 }

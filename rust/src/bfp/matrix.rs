@@ -109,15 +109,18 @@ fn encode_row(
 /// Fixed-point HBFP GEMM: y = Q(x) @ Q(w) with integer MACs per block
 /// pair, one exponent add per block pair, FP32 result store.
 ///
-/// Production path (PR 3): the call is a **session onto the global
-/// [`crate::exec::BfpService`]** — the op is submitted through the
-/// service's admission loop (blocking admission: this is a synchronous
-/// contract) and executed by its batched stage, where the activation
-/// packs fresh in parallel and the weight operand is pulled through the
+/// Production path (PR 3, pipelined in PR 5): the call is a **session
+/// onto the global [`crate::exec::BfpService`]** — the op is submitted
+/// through the service's admission loop (blocking admission: this is a
+/// synchronous contract), its operands may be **pre-encoded by the
+/// service's encode stage while an earlier batch's GEMM still runs**
+/// (activations on the pool, the weight operand through the
 /// encoded-operand cache, so repeated multiplies against the same
-/// weights — the serving/emulation pattern — encode them exactly once.
-/// Admission order and batch fusion never touch numerics: the result
-/// stays bit-identical to [`hbfp_gemm_scalar`] (property-tested).
+/// weights — the serving/emulation pattern — encode them exactly
+/// once), and it executes in the batched stage. Admission order,
+/// batch fusion, and the pre-encode race never touch numerics: the
+/// result stays bit-identical to [`hbfp_gemm_scalar`]
+/// (property-tested).
 pub fn hbfp_gemm(x: &Mat, w: &Mat, fmt: BlockFormat) -> Result<Mat> {
     if x.cols != w.rows {
         bail!("inner dims {} vs {}", x.cols, w.rows);

@@ -27,6 +27,30 @@
 //! [`super::block::BfpBlock`] survives as the reference implementation
 //! the property tests cross-check against.
 //!
+//! # The block-writer encode core
+//!
+//! All encoding flows through **one** generic core parameterized by a
+//! [`BlockWriter`] — the storage-layout half of an encode. The core
+//! owns, in exactly one copy each:
+//!
+//! * the per-block quantization loop ([`encode_block_into`]: max-magnitude
+//!   shared exponent, rounding-mode arms, clamping — mirrored operation
+//!   for operation from `quantize_block_into` / `BfpBlock::encode_with`
+//!   so all paths stay bit-compatible);
+//! * the row-band / block-range / transposed column pool-split
+//!   heuristics ([`encode_plane_dispatch`] and
+//!   [`encode_transposed_plane`]) — a split-policy change lands in one
+//!   place and applies to every layout.
+//!
+//! Writers only say where mantissas live: [`I8Writer`] / [`I16Writer`]
+//! store one integer per value, and [`I4DirectWriter`] quantizes
+//! **straight into nibble-packed bytes** (two 4-bit two's-complement
+//! values per byte) with no intermediate i8 scratch block — the 4-bit
+//! formats get the paper's storage density without paying a pack pass.
+//! Every writer is bit-identical to the scalar reference encode by
+//! construction: the quantization arithmetic is shared, only the final
+//! store differs.
+//!
 //! Numerics are identical to [`super::quantize::quantize_flat`] (and
 //! therefore to the python oracle pinned by the golden vectors), with
 //! one documented exception: an integer mantissa cannot carry the sign
@@ -154,16 +178,6 @@ pub(crate) fn nib_at(bytes: &[u8], i: usize) -> i8 {
         nib_lo(b)
     } else {
         nib_hi(b)
-    }
-}
-
-/// Pack `2 * dst.len()` 4-bit two's-complement values (carried in i8)
-/// into nibble pairs: even index -> low nibble, odd -> high.
-#[inline]
-pub(crate) fn pack_nibbles(src: &[i8], dst: &mut [u8]) {
-    debug_assert_eq!(src.len(), 2 * dst.len());
-    for (d, pair) in dst.iter_mut().zip(src.chunks_exact(2)) {
-        *d = ((pair[0] as u8) & 0x0F) | ((pair[1] as u8) << 4);
     }
 }
 
@@ -413,7 +427,7 @@ impl BfpMatrix {
         self.reshape(rows, cols, fmt);
         let threads = encode_threads(data.len(), pool);
         match &mut self.mantissas {
-            MantissaPlane::I4Packed(p) => encode_plane_dispatch_packed(
+            MantissaPlane::I4Packed(p) => encode_plane_dispatch::<I4DirectWriter>(
                 data,
                 rows,
                 cols,
@@ -425,7 +439,7 @@ impl BfpMatrix {
                 pool,
                 threads,
             ),
-            MantissaPlane::I8(p) => encode_plane_dispatch(
+            MantissaPlane::I8(p) => encode_plane_dispatch::<I8Writer>(
                 data,
                 rows,
                 cols,
@@ -437,7 +451,7 @@ impl BfpMatrix {
                 pool,
                 threads,
             ),
-            MantissaPlane::I16(p) => encode_plane_dispatch(
+            MantissaPlane::I16(p) => encode_plane_dispatch::<I16Writer>(
                 data,
                 rows,
                 cols,
@@ -497,7 +511,7 @@ impl BfpMatrix {
         let bpr = self.blocks_per_row;
         let threads = encode_threads(n * k, pool).min(n);
         match &mut self.mantissas {
-            MantissaPlane::I4Packed(p) => encode_transposed_plane_packed(
+            MantissaPlane::I4Packed(p) => encode_transposed_plane::<I4DirectWriter>(
                 w,
                 fmt,
                 q,
@@ -508,7 +522,7 @@ impl BfpMatrix {
                 pool,
                 threads,
             ),
-            MantissaPlane::I8(p) => encode_transposed_plane(
+            MantissaPlane::I8(p) => encode_transposed_plane::<I8Writer>(
                 w,
                 fmt,
                 q,
@@ -519,7 +533,7 @@ impl BfpMatrix {
                 pool,
                 threads,
             ),
-            MantissaPlane::I16(p) => encode_transposed_plane(
+            MantissaPlane::I16(p) => encode_transposed_plane::<I16Writer>(
                 w,
                 fmt,
                 q,
@@ -607,12 +621,68 @@ impl BfpMatrix {
     }
 }
 
+// --- the block-writer encode core (see module docs) -----------------------
+
+/// Streaming destination for one block's quantized mantissas. The
+/// quantization loop ([`encode_block_into`]) computes each mantissa as
+/// an `i32` already clamped to the format's two's-complement range;
+/// sinks only decide how it is stored. Values arrive in ascending
+/// index order, which is what lets the nibble sink pack pairs without
+/// read-modify-write hazards.
+trait BlockSink {
+    /// Store mantissa `m` for value `i` of the block.
+    fn put(&mut self, i: usize, m: i32);
+    /// Store zeros for all `len` values of the block (the subnormal
+    /// short-circuit).
+    fn zero(&mut self, len: usize);
+}
+
+/// One integer per value (i8 or i16 planes).
+struct SliceSink<'a, T: Mantissa>(&'a mut [T]);
+
+impl<T: Mantissa> BlockSink for SliceSink<'_, T> {
+    #[inline]
+    fn put(&mut self, i: usize, m: i32) {
+        self.0[i] = T::narrow(m);
+    }
+
+    #[inline]
+    fn zero(&mut self, len: usize) {
+        self.0[..len].fill(T::narrow(0));
+    }
+}
+
+/// Nibble-direct sink: value `2j` lands in the low nibble of byte `j`,
+/// value `2j + 1` in the high nibble — written as it is quantized, no
+/// i8 staging. The even-index store overwrites the whole byte (stale
+/// high nibbles cannot leak from a reused buffer); the odd-index store
+/// ORs the high nibble in.
+struct NibbleSink<'a>(&'a mut [u8]);
+
+impl BlockSink for NibbleSink<'_> {
+    #[inline]
+    fn put(&mut self, i: usize, m: i32) {
+        let byte = &mut self.0[i >> 1];
+        if i & 1 == 0 {
+            *byte = (m as u8) & 0x0F;
+        } else {
+            *byte |= (m as u8) << 4;
+        }
+    }
+
+    #[inline]
+    fn zero(&mut self, len: usize) {
+        self.0[..len / 2].fill(0);
+    }
+}
+
 /// Encode one block: max-magnitude shared exponent, `m`-bit mantissas
-/// (two's complement) via the selected rounding mode. Mirrors
-/// `quantize_block_into` / `BfpBlock::encode_with` operation for
-/// operation so all three paths are bit-compatible.
-fn encode_block<T: Mantissa>(v: &[f32], out: &mut [T], q: Quantizer, base_idx: u32) -> i32 {
-    debug_assert_eq!(v.len(), out.len());
+/// (two's complement) via the selected rounding mode, streamed into
+/// `sink`. Mirrors `quantize_block_into` / `BfpBlock::encode_with`
+/// operation for operation so every path is bit-compatible — this is
+/// the **single copy** of the quantization arithmetic behind all three
+/// [`BlockWriter`]s.
+fn encode_block_into<S: BlockSink>(v: &[f32], sink: &mut S, q: Quantizer, base_idx: u32) -> i32 {
     let mut maxabs = 0.0f32;
     for &x in v {
         let a = x.abs();
@@ -621,7 +691,7 @@ fn encode_block<T: Mantissa>(v: &[f32], out: &mut [T], q: Quantizer, base_idx: u
         }
     }
     if maxabs < exp2i(-126) {
-        out.fill(T::narrow(0));
+        sink.zero(v.len());
         return 0;
     }
     let e = floor_log2(maxabs);
@@ -639,40 +709,116 @@ fn encode_block<T: Mantissa>(v: &[f32], out: &mut [T], q: Quantizer, base_idx: u
     };
     match (q.mode, sinv) {
         (RoundMode::NearestEven, Some(si)) => {
-            for (&x, o) in v.iter().zip(out.iter_mut()) {
-                *o = T::narrow((x * si).round_ties_even().clamp(lo, hi) as i32);
+            for (i, &x) in v.iter().enumerate() {
+                sink.put(i, (x * si).round_ties_even().clamp(lo, hi) as i32);
             }
         }
         (RoundMode::Stochastic, Some(si)) => {
-            for (i, (&x, o)) in v.iter().zip(out.iter_mut()).enumerate() {
+            for (i, &x) in v.iter().enumerate() {
                 let u = uniform_u01(base_idx.wrapping_add(i as u32), q.seed);
-                *o = T::narrow((x * si + u).floor().clamp(lo, hi) as i32);
+                sink.put(i, (x * si + u).floor().clamp(lo, hi) as i32);
             }
         }
         (_, None) => {
             let s = exp2i(scale_shift(e, q.m_bits));
-            for (i, (&x, o)) in v.iter().zip(out.iter_mut()).enumerate() {
+            for (i, &x) in v.iter().enumerate() {
                 let r = round_value(x / s, q.mode, base_idx.wrapping_add(i as u32), q.seed);
-                *o = T::narrow(r.clamp(lo, hi) as i32);
+                sink.put(i, r.clamp(lo, hi) as i32);
             }
         }
     }
     e
 }
 
+/// The storage-layout half of an encode: how many plane elements back a
+/// run of logical values, and how one block's mantissas are stored.
+/// The generic encode core (serial loops, pool splits) is written once
+/// against this trait; see the module docs.
+trait BlockWriter: 'static {
+    /// Raw element of the mantissa plane this writer fills.
+    type Elem: Copy + Send + Sync + 'static;
+
+    /// Plane elements backing `values` logical values. `values` is
+    /// always a whole number of blocks, so the nibble writer (two
+    /// values per element) never sees an odd count.
+    fn elems(values: usize) -> usize;
+
+    /// Quantize one (already padded) block straight into its plane
+    /// destination; returns the block's shared exponent.
+    fn encode_block(v: &[f32], dst: &mut [Self::Elem], q: Quantizer, base_idx: u32) -> i32;
+}
+
+/// One i8 per mantissa (`4 < m <= 8`, or `m <= 4` with an odd block).
+struct I8Writer;
+
+impl BlockWriter for I8Writer {
+    type Elem = i8;
+
+    #[inline]
+    fn elems(values: usize) -> usize {
+        values
+    }
+
+    #[inline]
+    fn encode_block(v: &[f32], dst: &mut [i8], q: Quantizer, base_idx: u32) -> i32 {
+        debug_assert_eq!(v.len(), dst.len());
+        encode_block_into(v, &mut SliceSink(dst), q, base_idx)
+    }
+}
+
+/// One i16 per mantissa (`8 < m <= 16`).
+struct I16Writer;
+
+impl BlockWriter for I16Writer {
+    type Elem = i16;
+
+    #[inline]
+    fn elems(values: usize) -> usize {
+        values
+    }
+
+    #[inline]
+    fn encode_block(v: &[f32], dst: &mut [i16], q: Quantizer, base_idx: u32) -> i32 {
+        debug_assert_eq!(v.len(), dst.len());
+        encode_block_into(v, &mut SliceSink(dst), q, base_idx)
+    }
+}
+
+/// Nibble-direct writer for [`PlaneLayout::I4Packed`]: quantizes each
+/// value pair straight into one packed byte — no i8 scratch block, no
+/// second pass. Blocks always start byte-aligned (even block sizes
+/// only), so a block's destination is exactly `block_size / 2` bytes.
+struct I4DirectWriter;
+
+impl BlockWriter for I4DirectWriter {
+    type Elem = u8;
+
+    #[inline]
+    fn elems(values: usize) -> usize {
+        values / 2
+    }
+
+    #[inline]
+    fn encode_block(v: &[f32], dst: &mut [u8], q: Quantizer, base_idx: u32) -> i32 {
+        debug_assert_eq!(v.len(), 2 * dst.len());
+        encode_block_into(v, &mut NibbleSink(dst), q, base_idx)
+    }
+}
+
 /// Encode one already-padded row (`len == blocks * block_size`).
-fn encode_padded_row<T: Mantissa>(
+fn encode_padded_row<W: BlockWriter>(
     row: &[f32],
     fmt: BlockFormat,
     q: Quantizer,
     base: u32,
-    plane_row: &mut [T],
+    plane_row: &mut [W::Elem],
     exps_row: &mut [i32],
 ) {
     let b = fmt.block_size;
-    for (bi, (src, dst)) in row.chunks(b).zip(plane_row.chunks_mut(b)).enumerate() {
+    let eb = W::elems(b);
+    for (bi, (src, dst)) in row.chunks(b).zip(plane_row.chunks_mut(eb)).enumerate() {
         let idx = base.wrapping_add((bi * b) as u32);
-        exps_row[bi] = encode_block(src, dst, q, idx);
+        exps_row[bi] = W::encode_block(src, dst, q, idx);
     }
 }
 
@@ -681,60 +827,61 @@ fn encode_padded_row<T: Mantissa>(
 /// ragged-tail check and the stochastic stream), so any partition of a
 /// row's block range reproduces the serial encoding bit-for-bit.
 #[allow(clippy::too_many_arguments)]
-fn encode_blocks_range<T: Mantissa>(
+fn encode_blocks_range<W: BlockWriter>(
     row: &[f32],
     cols: usize,
     k0: usize,
     fmt: BlockFormat,
     q: Quantizer,
     base: u32,
-    plane_chunk: &mut [T],
+    plane_chunk: &mut [W::Elem],
     exps_chunk: &mut [i32],
     tail: &mut [f32],
 ) {
     let b = fmt.block_size;
+    let eb = W::elems(b);
     for (i, exp_slot) in exps_chunk.iter_mut().enumerate() {
         let bi = k0 + i;
         let idx = base.wrapping_add((bi * b) as u32);
         let lo = bi * b;
         let hi = ((bi + 1) * b).min(cols);
-        let dst = &mut plane_chunk[i * b..(i + 1) * b];
+        let dst = &mut plane_chunk[i * eb..(i + 1) * eb];
         *exp_slot = if hi - lo == b {
-            encode_block(&row[lo..hi], dst, q, idx)
+            W::encode_block(&row[lo..hi], dst, q, idx)
         } else {
             tail.fill(0.0);
             tail[..hi - lo].copy_from_slice(&row[lo..hi]);
-            encode_block(tail, dst, q, idx)
+            W::encode_block(tail, dst, q, idx)
         };
     }
 }
 
 #[allow(clippy::too_many_arguments)]
-fn encode_plane<T: Mantissa>(
+fn encode_plane<W: BlockWriter>(
     data: &[f32],
     rows: usize,
     cols: usize,
     fmt: BlockFormat,
     q: Quantizer,
     base: u32,
-    plane: &mut [T],
+    plane: &mut [W::Elem],
     exps: &mut [i32],
 ) {
     let b = fmt.block_size;
     let bpr = cols.div_ceil(b);
-    let stride = bpr * b;
+    let estride = W::elems(bpr * b);
     // One scratch block for the ragged tail, hoisted out of all loops.
     let mut tail = vec![0.0f32; b];
     for r in 0..rows {
         let row = &data[r * cols..(r + 1) * cols];
-        encode_blocks_range(
+        encode_blocks_range::<W>(
             row,
             cols,
             0,
             fmt,
             q,
             base,
-            &mut plane[r * stride..(r + 1) * stride],
+            &mut plane[r * estride..(r + 1) * estride],
             &mut exps[r * bpr..(r + 1) * bpr],
             &mut tail,
         );
@@ -754,16 +901,18 @@ fn encode_threads(elems: usize, pool: Option<&WorkerPool>) -> usize {
 
 /// Serial-or-parallel plane encode: multi-row tensors split into row
 /// bands, single-row tensors split along the block axis. Either split
-/// is bit-identical to the serial loop (per-block independence).
+/// is bit-identical to the serial loop (per-block independence). This
+/// is the **only copy** of the row-band / block-range split policy —
+/// every [`PlaneLayout`] runs it through its [`BlockWriter`].
 #[allow(clippy::too_many_arguments)]
-fn encode_plane_dispatch<T: Mantissa>(
+fn encode_plane_dispatch<W: BlockWriter>(
     data: &[f32],
     rows: usize,
     cols: usize,
     fmt: BlockFormat,
     q: Quantizer,
     base: u32,
-    plane: &mut [T],
+    plane: &mut [W::Elem],
     exps: &mut [i32],
     pool: Option<&WorkerPool>,
     threads: usize,
@@ -773,224 +922,20 @@ fn encode_plane_dispatch<T: Mantissa>(
     let pool = match pool {
         Some(p) if threads > 1 && (rows >= 2 || bpr >= 2) => p,
         _ => {
-            encode_plane(data, rows, cols, fmt, q, base, plane, exps);
+            encode_plane::<W>(data, rows, cols, fmt, q, base, plane, exps);
             return;
         }
     };
-    let stride = bpr * b;
+    let estride = W::elems(bpr * b);
     if rows >= 2 {
         let band = rows.div_ceil(threads.min(rows));
         let jobs: Vec<Job> = plane
-            .chunks_mut(band * stride)
+            .chunks_mut(band * estride)
             .zip(exps.chunks_mut(band * bpr))
             .zip(data.chunks(band * cols))
             .map(|((pchunk, echunk), dchunk)| {
                 Box::new(move || {
-                    encode_plane(dchunk, dchunk.len() / cols, cols, fmt, q, base, pchunk, echunk);
-                }) as Job
-            })
-            .collect();
-        pool.scope_run(jobs);
-    } else {
-        let kband = bpr.div_ceil(threads.min(bpr));
-        let jobs: Vec<Job> = plane
-            .chunks_mut(kband * b)
-            .zip(exps.chunks_mut(kband))
-            .enumerate()
-            .map(|(t, (pchunk, echunk))| {
-                let k0 = t * kband;
-                Box::new(move || {
-                    let mut tail = vec![0.0f32; b];
-                    encode_blocks_range(data, cols, k0, fmt, q, base, pchunk, echunk, &mut tail);
-                }) as Job
-            })
-            .collect();
-        pool.scope_run(jobs);
-    }
-}
-
-/// Parallel column-wise weight encode: each job gathers and encodes a
-/// contiguous range of columns into its own plane band.
-#[allow(clippy::too_many_arguments)]
-fn encode_transposed_plane<T: Mantissa>(
-    w: &Mat,
-    fmt: BlockFormat,
-    q: Quantizer,
-    plane: &mut [T],
-    exps: &mut [i32],
-    stride: usize,
-    bpr: usize,
-    pool: Option<&WorkerPool>,
-    threads: usize,
-) {
-    let n = w.cols;
-    let pool = match pool {
-        Some(p) if threads > 1 && n >= 2 => p,
-        _ => {
-            encode_transposed_cols(w, fmt, q, 0, plane, exps, stride, bpr);
-            return;
-        }
-    };
-    let jband = n.div_ceil(threads);
-    let jobs: Vec<Job> = plane
-        .chunks_mut(jband * stride)
-        .zip(exps.chunks_mut(jband * bpr))
-        .enumerate()
-        .map(|(t, (pchunk, echunk))| {
-            let j0 = t * jband;
-            Box::new(move || {
-                encode_transposed_cols(w, fmt, q, j0, pchunk, echunk, stride, bpr);
-            }) as Job
-        })
-        .collect();
-    pool.scope_run(jobs);
-}
-
-/// Gather-and-encode columns `j0 ..` of `w` into the given plane band.
-#[allow(clippy::too_many_arguments)]
-fn encode_transposed_cols<T: Mantissa>(
-    w: &Mat,
-    fmt: BlockFormat,
-    q: Quantizer,
-    j0: usize,
-    plane_chunk: &mut [T],
-    exps_chunk: &mut [i32],
-    stride: usize,
-    bpr: usize,
-) {
-    let (k, n) = (w.rows, w.cols);
-    let ncols = plane_chunk.len() / stride;
-    // Gather one padded column at a time; the zero tail is written once
-    // and never dirtied (only the first k entries are reused).
-    let mut col = vec![0.0f32; stride];
-    for jj in 0..ncols {
-        let j = j0 + jj;
-        for (i, c) in col[..k].iter_mut().enumerate() {
-            *c = w.data[i * n + j];
-        }
-        encode_padded_row(
-            &col,
-            fmt,
-            q,
-            0,
-            &mut plane_chunk[jj * stride..(jj + 1) * stride],
-            &mut exps_chunk[jj * bpr..(jj + 1) * bpr],
-        );
-    }
-}
-
-// --- nibble-packed (I4Packed) encode/decode ------------------------------
-//
-// Values are identical to the i8 path — every block is encoded through
-// the same `encode_block` into an i8 scratch and then packed two
-// mantissas per byte — so the nibble layout changes storage density,
-// never numerics. Blocks always start byte-aligned: the layout is only
-// selected for even block sizes, so block `k` of row `r` begins at
-// nibble `r * stride + k * b`, an even offset.
-
-/// Packed counterpart of [`encode_blocks_range`]: encode blocks
-/// `k0 ..` of one logical row into nibble pairs. `scratch` is
-/// block-size i8 scratch; `plane_chunk` holds `b / 2` bytes per block.
-#[allow(clippy::too_many_arguments)]
-fn encode_blocks_range_packed(
-    row: &[f32],
-    cols: usize,
-    k0: usize,
-    fmt: BlockFormat,
-    q: Quantizer,
-    base: u32,
-    plane_chunk: &mut [u8],
-    exps_chunk: &mut [i32],
-    tail: &mut [f32],
-    scratch: &mut [i8],
-) {
-    let b = fmt.block_size;
-    let hb = b / 2;
-    for (i, exp_slot) in exps_chunk.iter_mut().enumerate() {
-        let bi = k0 + i;
-        let idx = base.wrapping_add((bi * b) as u32);
-        let lo = bi * b;
-        let hi = ((bi + 1) * b).min(cols);
-        *exp_slot = if hi - lo == b {
-            encode_block(&row[lo..hi], scratch, q, idx)
-        } else {
-            tail.fill(0.0);
-            tail[..hi - lo].copy_from_slice(&row[lo..hi]);
-            encode_block(tail, scratch, q, idx)
-        };
-        pack_nibbles(scratch, &mut plane_chunk[i * hb..(i + 1) * hb]);
-    }
-}
-
-/// Packed counterpart of [`encode_plane`] (serial row loop).
-#[allow(clippy::too_many_arguments)]
-fn encode_plane_packed(
-    data: &[f32],
-    rows: usize,
-    cols: usize,
-    fmt: BlockFormat,
-    q: Quantizer,
-    base: u32,
-    plane: &mut [u8],
-    exps: &mut [i32],
-) {
-    let b = fmt.block_size;
-    let bpr = cols.div_ceil(b);
-    let byte_stride = bpr * b / 2;
-    let mut tail = vec![0.0f32; b];
-    let mut scratch = vec![0i8; b];
-    for r in 0..rows {
-        let row = &data[r * cols..(r + 1) * cols];
-        encode_blocks_range_packed(
-            row,
-            cols,
-            0,
-            fmt,
-            q,
-            base,
-            &mut plane[r * byte_stride..(r + 1) * byte_stride],
-            &mut exps[r * bpr..(r + 1) * bpr],
-            &mut tail,
-            &mut scratch,
-        );
-    }
-}
-
-/// Packed counterpart of [`encode_plane_dispatch`]: the same row-band /
-/// block-range splits, over byte strides. Bit-identical to the serial
-/// packed loop for the same per-block-independence reason.
-#[allow(clippy::too_many_arguments)]
-fn encode_plane_dispatch_packed(
-    data: &[f32],
-    rows: usize,
-    cols: usize,
-    fmt: BlockFormat,
-    q: Quantizer,
-    base: u32,
-    plane: &mut [u8],
-    exps: &mut [i32],
-    pool: Option<&WorkerPool>,
-    threads: usize,
-) {
-    let b = fmt.block_size;
-    let bpr = cols.div_ceil(b);
-    let pool = match pool {
-        Some(p) if threads > 1 && (rows >= 2 || bpr >= 2) => p,
-        _ => {
-            encode_plane_packed(data, rows, cols, fmt, q, base, plane, exps);
-            return;
-        }
-    };
-    let byte_stride = bpr * b / 2;
-    if rows >= 2 {
-        let band = rows.div_ceil(threads.min(rows));
-        let jobs: Vec<Job> = plane
-            .chunks_mut(band * byte_stride)
-            .zip(exps.chunks_mut(band * bpr))
-            .zip(data.chunks(band * cols))
-            .map(|((pchunk, echunk), dchunk)| {
-                Box::new(move || {
-                    encode_plane_packed(
+                    encode_plane::<W>(
                         dchunk,
                         dchunk.len() / cols,
                         cols,
@@ -1007,16 +952,23 @@ fn encode_plane_dispatch_packed(
     } else {
         let kband = bpr.div_ceil(threads.min(bpr));
         let jobs: Vec<Job> = plane
-            .chunks_mut(kband * b / 2)
+            .chunks_mut(W::elems(kband * b))
             .zip(exps.chunks_mut(kband))
             .enumerate()
             .map(|(t, (pchunk, echunk))| {
                 let k0 = t * kband;
                 Box::new(move || {
                     let mut tail = vec![0.0f32; b];
-                    let mut scratch = vec![0i8; b];
-                    encode_blocks_range_packed(
-                        data, cols, k0, fmt, q, base, pchunk, echunk, &mut tail, &mut scratch,
+                    encode_blocks_range::<W>(
+                        data,
+                        cols,
+                        k0,
+                        fmt,
+                        q,
+                        base,
+                        pchunk,
+                        echunk,
+                        &mut tail,
                     );
                 }) as Job
             })
@@ -1025,13 +977,16 @@ fn encode_plane_dispatch_packed(
     }
 }
 
-/// Packed counterpart of [`encode_transposed_plane`].
+/// Parallel column-wise weight encode: each job gathers and encodes a
+/// contiguous range of columns into its own plane band. The **only
+/// copy** of the transposed pool-split policy, layout-generic like
+/// [`encode_plane_dispatch`].
 #[allow(clippy::too_many_arguments)]
-fn encode_transposed_plane_packed(
+fn encode_transposed_plane<W: BlockWriter>(
     w: &Mat,
     fmt: BlockFormat,
     q: Quantizer,
-    plane: &mut [u8],
+    plane: &mut [W::Elem],
     exps: &mut [i32],
     stride: usize,
     bpr: usize,
@@ -1039,62 +994,70 @@ fn encode_transposed_plane_packed(
     threads: usize,
 ) {
     let n = w.cols;
-    let byte_stride = stride / 2;
     let pool = match pool {
         Some(p) if threads > 1 && n >= 2 => p,
         _ => {
-            encode_transposed_cols_packed(w, fmt, q, 0, plane, exps, stride, bpr);
+            encode_transposed_cols::<W>(w, fmt, q, 0, plane, exps, stride, bpr);
             return;
         }
     };
     let jband = n.div_ceil(threads);
+    let estride = W::elems(stride);
     let jobs: Vec<Job> = plane
-        .chunks_mut(jband * byte_stride)
+        .chunks_mut(jband * estride)
         .zip(exps.chunks_mut(jband * bpr))
         .enumerate()
         .map(|(t, (pchunk, echunk))| {
             let j0 = t * jband;
             Box::new(move || {
-                encode_transposed_cols_packed(w, fmt, q, j0, pchunk, echunk, stride, bpr);
+                encode_transposed_cols::<W>(w, fmt, q, j0, pchunk, echunk, stride, bpr);
             }) as Job
         })
         .collect();
     pool.scope_run(jobs);
 }
 
-/// Packed counterpart of [`encode_transposed_cols`]: gather one padded
-/// column, encode each block into i8 scratch, pack to nibbles.
+/// Gather-and-encode columns `j0 ..` of `w` into the given plane band.
 #[allow(clippy::too_many_arguments)]
-fn encode_transposed_cols_packed(
+fn encode_transposed_cols<W: BlockWriter>(
     w: &Mat,
     fmt: BlockFormat,
     q: Quantizer,
     j0: usize,
-    plane_chunk: &mut [u8],
+    plane_chunk: &mut [W::Elem],
     exps_chunk: &mut [i32],
     stride: usize,
     bpr: usize,
 ) {
     let (k, n) = (w.rows, w.cols);
-    let b = fmt.block_size;
-    let hb = b / 2;
-    let byte_stride = stride / 2;
-    let ncols = plane_chunk.len() / byte_stride;
+    let estride = W::elems(stride);
+    let ncols = plane_chunk.len() / estride;
+    // Gather one padded column at a time; the zero tail is written once
+    // and never dirtied (only the first k entries are reused).
     let mut col = vec![0.0f32; stride];
-    let mut scratch = vec![0i8; b];
     for jj in 0..ncols {
         let j = j0 + jj;
         for (i, c) in col[..k].iter_mut().enumerate() {
             *c = w.data[i * n + j];
         }
-        let prow = &mut plane_chunk[jj * byte_stride..(jj + 1) * byte_stride];
-        let erow = &mut exps_chunk[jj * bpr..(jj + 1) * bpr];
-        for (bi, (src, dst)) in col.chunks(b).zip(prow.chunks_mut(hb)).enumerate() {
-            erow[bi] = encode_block(src, &mut scratch, q, (bi * b) as u32);
-            pack_nibbles(&scratch, dst);
-        }
+        encode_padded_row::<W>(
+            &col,
+            fmt,
+            q,
+            0,
+            &mut plane_chunk[jj * estride..(jj + 1) * estride],
+            &mut exps_chunk[jj * bpr..(jj + 1) * bpr],
+        );
     }
 }
+
+// --- nibble-packed (I4Packed) decode --------------------------------------
+//
+// Encode flows through the block-writer core above (the nibble-direct
+// [`I4DirectWriter`]); decode keeps explicit packed loops because it
+// reads the plane, not writes it. Blocks always start byte-aligned:
+// the layout is only selected for even block sizes, so block `k` of
+// row `r` begins at nibble `r * stride + k * b`, an even offset.
 
 /// Packed counterpart of [`decode_plane`].
 fn decode_plane_packed(
@@ -1271,16 +1234,24 @@ mod tests {
 
     #[test]
     fn nibble_codec_round_trips_the_4bit_range() {
-        // All 256 nibble pairs: pack then sign-extend recovers both
-        // two's-complement values in [-8, 7].
-        let mut scratch = [0u8; 1];
-        for lo in -8i8..=7 {
-            for hi in -8i8..=7 {
-                pack_nibbles(&[lo, hi], &mut scratch);
-                assert_eq!(nib_lo(scratch[0]), lo, "lo {lo} hi {hi}");
-                assert_eq!(nib_hi(scratch[0]), hi, "lo {lo} hi {hi}");
+        // All 256 nibble pairs: the nibble-direct sink packs straight
+        // into the byte, and sign extension recovers both
+        // two's-complement values in [-8, 7] — even over a dirty
+        // buffer (the even-index store must clear stale high nibbles).
+        let mut scratch = [0xFFu8; 1];
+        for lo in -8i32..=7 {
+            for hi in -8i32..=7 {
+                let mut sink = NibbleSink(&mut scratch);
+                sink.put(0, lo);
+                sink.put(1, hi);
+                assert_eq!(nib_lo(scratch[0]) as i32, lo, "lo {lo} hi {hi}");
+                assert_eq!(nib_hi(scratch[0]) as i32, hi, "lo {lo} hi {hi}");
             }
         }
+        // The zero short-circuit clears the packed bytes too.
+        let mut dirty = [0xAAu8; 2];
+        NibbleSink(&mut dirty).zero(4);
+        assert_eq!(dirty, [0, 0]);
     }
 
     #[test]

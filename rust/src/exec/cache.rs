@@ -4,7 +4,11 @@
 //! against a stream of fresh activations, and the Trainer's host-BFP
 //! weight store re-grids parameter tensors every epoch even when a
 //! tensor did not change. Encoding is the expensive part of those paths
-//! (quantize + plane packing); the cache makes it pay-once.
+//! (quantize + plane packing); the cache makes it pay-once. Since PR 5
+//! the service's **pre-encode stage** is a first-class writer too: it
+//! pulls weight operands through this cache at admission time, so by
+//! the time a batch executes, repeated weights are already resident —
+//! hit/miss accounting is identical whichever stage did the pull.
 //!
 //! # Keying
 //!
@@ -30,13 +34,16 @@
 //! and approximate plane bytes). Hit/miss/eviction counters are atomic
 //! and cheap; [`OperandCache::stats`] snapshots them for the metrics
 //! surface ([`crate::metrics::exec_cache_snapshot`]) and the serve-sim
-//! report.
+//! report. Concurrent [`OperandCache::get_or_encode`] misses on the
+//! same key coalesce onto one in-flight encode (one miss, the rest
+//! hits), so the pre-encode and execution stages racing on a cold
+//! weight never pay for — or count — the same encode twice.
 
 use crate::bfp::{BfpMatrix, BlockFormat, PlaneLayout};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Identity of one encoded operand (see module docs for the contract).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -102,8 +109,26 @@ struct Entry {
     last_used: u64,
 }
 
+/// One coalesced encode in flight. The owner publishes its outcome
+/// here so waiters are **handed the encoded planes directly** — not
+/// re-looked-up in the map, because `insert` can legitimately decline
+/// to retain a value (larger than the byte cap, or instantly evicted)
+/// and waiters must still be served without re-encoding.
+struct Flight {
+    /// `Some(planes)` on success; `None` when the owning encode failed
+    /// or panicked (waiters then race to become the next owner).
+    outcome: OnceLock<Option<Arc<BfpMatrix>>>,
+}
+
 struct CacheState {
     entries: HashMap<CacheKey, Entry>,
+    /// Keys whose encode is currently running outside the lock.
+    /// [`OperandCache::get_or_encode`] coalesces concurrent misses on
+    /// the same key: one caller encodes (one miss), the rest wait on
+    /// `flight_cv` and consume the [`Flight`] handoff (hits) — so the
+    /// pipelined pre-encode stage and the execution stage can never
+    /// both pay for (or both count a miss for) the same weight.
+    in_flight: HashMap<CacheKey, Arc<Flight>>,
     tick: u64,
     bytes: usize,
 }
@@ -144,6 +169,9 @@ impl CacheStats {
 /// Bounded, thread-safe, content-addressed store of encoded operands.
 pub struct OperandCache {
     state: Mutex<CacheState>,
+    /// Wakes callers waiting for another thread's in-flight encode of
+    /// the same key (see `CacheState::in_flight`).
+    flight_cv: Condvar,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
@@ -151,14 +179,53 @@ pub struct OperandCache {
     max_bytes: usize,
 }
 
+/// Clears a key's in-flight reservation and wakes coalesced waiters
+/// when the owning encode finishes — on success, error, or panic (the
+/// drop runs on unwind too, so a panicking encode can never strand its
+/// waiters; publishing `None` makes them race to take over).
+struct FlightGuard<'a> {
+    cache: &'a OperandCache,
+    key: CacheKey,
+    flight: Arc<Flight>,
+}
+
+impl CacheState {
+    /// Deregister `flight` from the in-flight map — but only if it is
+    /// still the registered flight for `key` (a failed flight's waiters
+    /// may already have installed a successor). The single home of the
+    /// flight-lifecycle invariant, shared by the owner's guard and the
+    /// waiter takeover path.
+    fn deregister_flight(&mut self, key: &CacheKey, flight: &Arc<Flight>) {
+        if let Some(cur) = self.in_flight.get(key) {
+            if Arc::ptr_eq(cur, flight) {
+                self.in_flight.remove(key);
+            }
+        }
+    }
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        // No-op when the owner already published success; on error or
+        // panic this marks the flight failed so waiters take over.
+        let _ = self.flight.outcome.set(None);
+        if let Ok(mut st) = self.cache.state.lock() {
+            st.deregister_flight(&self.key, &self.flight);
+        }
+        self.cache.flight_cv.notify_all();
+    }
+}
+
 impl OperandCache {
     pub fn new(max_entries: usize, max_bytes: usize) -> Self {
         Self {
             state: Mutex::new(CacheState {
                 entries: HashMap::new(),
+                in_flight: HashMap::new(),
                 tick: 0,
                 bytes: 0,
             }),
+            flight_cv: Condvar::new(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
@@ -228,16 +295,70 @@ impl OperandCache {
     /// The cache's main entry point: return the cached encoding for
     /// `key`, or run `encode` (outside the lock), cache the result, and
     /// return it. Errors from `encode` propagate and cache nothing.
+    ///
+    /// Concurrent misses on the same key **coalesce**: exactly one
+    /// caller runs `encode` (counting the one miss) while the others
+    /// wait and are handed the encoded planes directly (counting hits)
+    /// — so two pipeline stages racing on a cold weight can never both
+    /// pay the encode or double-count the miss, even when the value is
+    /// too large for the cache to retain. If the owning encode fails,
+    /// one waiter takes over as the new encoder (with its own miss).
     pub fn get_or_encode(
         &self,
         key: CacheKey,
         encode: impl FnOnce() -> Result<BfpMatrix>,
     ) -> Result<Arc<BfpMatrix>> {
-        if let Some(v) = self.lookup(&key) {
-            return Ok(v);
-        }
+        let flight = loop {
+            let mut st = self.state.lock().unwrap();
+            st.tick += 1;
+            let tick = st.tick;
+            if let Some(e) = st.entries.get_mut(&key) {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Arc::clone(&e.value));
+            }
+            match st.in_flight.get(&key) {
+                None => {
+                    // This caller owns the encode for `key`.
+                    let flight = Arc::new(Flight {
+                        outcome: OnceLock::new(),
+                    });
+                    st.in_flight.insert(key, Arc::clone(&flight));
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    break flight;
+                }
+                Some(f) => {
+                    // Another thread is encoding this key right now:
+                    // wait for its outcome.
+                    let f = Arc::clone(f);
+                    while f.outcome.get().is_none() {
+                        st = self.flight_cv.wait(st).unwrap();
+                    }
+                    match f.outcome.get().expect("flight outcome published") {
+                        Some(v) => {
+                            self.hits.fetch_add(1, Ordering::Relaxed);
+                            return Ok(Arc::clone(v));
+                        }
+                        None => {
+                            // The owner failed. Deregister the dead
+                            // flight and retry as a candidate owner.
+                            st.deregister_flight(&key, &f);
+                        }
+                    }
+                }
+            }
+        };
+        let guard = FlightGuard {
+            cache: self,
+            key,
+            flight: Arc::clone(&flight),
+        };
         let value = Arc::new(encode()?);
         self.insert(key, Arc::clone(&value));
+        // Hand waiters the planes directly (the insert above may have
+        // declined to retain them), then deregister via the guard.
+        let _ = flight.outcome.set(Some(Arc::clone(&value)));
+        drop(guard);
         Ok(value)
     }
 
@@ -388,6 +509,106 @@ mod tests {
         assert_eq!(s.entries, 1);
         assert_eq!(s.evictions, 1);
         assert!(one.lookup(&key2).is_some());
+    }
+
+    #[test]
+    fn concurrent_get_or_encode_coalesces_in_flight_misses() {
+        use std::sync::atomic::AtomicUsize;
+        let cache = OperandCache::new(8, 1 << 20);
+        let d: Vec<f32> = (0..64).map(|i| i as f32 * 0.5).collect();
+        let f = fmt(4, 16);
+        let key = CacheKey::for_matrix(&d, 1, 64, f, false);
+        let encodes = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let got = cache
+                        .get_or_encode(key, || {
+                            encodes.fetch_add(1, Ordering::SeqCst);
+                            // Hold the in-flight window open so racing
+                            // callers actually overlap it.
+                            std::thread::sleep(std::time::Duration::from_millis(20));
+                            Ok(encode(&d, f))
+                        })
+                        .unwrap();
+                    assert_eq!(got.mantissas.len(), 64);
+                });
+            }
+        });
+        // Whoever won the race encoded; everyone else was served the
+        // same entry — one miss, one encode, three hits, regardless of
+        // interleaving.
+        assert_eq!(encodes.load(Ordering::SeqCst), 1, "in-flight misses must coalesce");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (3, 1, 1), "{s:?}");
+    }
+
+    #[test]
+    fn oversized_values_are_handed_off_without_convoy_or_reencode() {
+        use std::sync::atomic::AtomicUsize;
+        // A value larger than the byte cap is never retained by the
+        // map, so waiters must be served through the flight handoff —
+        // not by re-looking-up the map and re-encoding serially.
+        let d: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        let f = fmt(4, 16);
+        let too_small = plane_bytes(&encode(&d, f)) - 1;
+        let cache = OperandCache::new(8, too_small);
+        let key = CacheKey::for_matrix(&d, 1, 256, f, false);
+        let encodes = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    let v = cache
+                        .get_or_encode(key, || {
+                            encodes.fetch_add(1, Ordering::SeqCst);
+                            std::thread::sleep(std::time::Duration::from_millis(15));
+                            Ok(encode(&d, f))
+                        })
+                        .unwrap();
+                    assert_eq!(v.mantissas.len(), 256);
+                });
+            }
+        });
+        let s = cache.stats();
+        assert_eq!(s.entries, 0, "over-cap value must not be retained");
+        // Every caller was served, every actual encode cost exactly one
+        // miss, and overlapping callers shared the handoff as hits —
+        // true under any interleaving.
+        assert_eq!(s.misses as usize, encodes.load(Ordering::SeqCst), "{s:?}");
+        assert_eq!(s.hits + s.misses, 3, "{s:?}");
+    }
+
+    #[test]
+    fn failed_in_flight_encode_hands_over_to_a_waiter() {
+        use std::sync::atomic::AtomicUsize;
+        let cache = OperandCache::new(8, 1 << 20);
+        let d: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let f = fmt(4, 16);
+        let key = CacheKey::for_matrix(&d, 1, 32, f, false);
+        let attempts = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                s.spawn(|| {
+                    // First attempt fails; the waiter must be handed the
+                    // encoder role (its own miss) instead of hanging.
+                    let r = cache.get_or_encode(key, || {
+                        if attempts.fetch_add(1, Ordering::SeqCst) == 0 {
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                            anyhow::bail!("transient encode failure")
+                        }
+                        Ok(encode(&d, f))
+                    });
+                    // One thread sees the error, the other (or the same
+                    // thread on a non-overlapping schedule) succeeds.
+                    if let Ok(v) = r {
+                        assert_eq!(v.mantissas.len(), 32);
+                    }
+                });
+            }
+        });
+        // No waiter hung, and the cache ended consistent: at most one
+        // entry, failures cached nothing.
+        assert!(cache.stats().entries <= 1);
     }
 
     #[test]

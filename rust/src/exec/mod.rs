@@ -5,9 +5,11 @@
 //! to pay off at system level.
 //!
 //! PR 1 made the fixed-point datapath bandwidth-bound per call; PR 2
-//! made it saturable across calls with [`BatchGemm`]; PR 3 moves batch
-//! formation off the caller's critical path. The **front door of this
-//! module is [`service::BfpService`]**:
+//! made it saturable across calls with [`BatchGemm`]; PR 3 moved batch
+//! formation off the caller's critical path; PR 5 split the service
+//! into **pipelined stages** so operand encode overlaps GEMM
+//! execution. The **front door of this module is
+//! [`service::BfpService`]**:
 //!
 //! * [`BfpService::submit`](service::BfpService::submit) is
 //!   non-blocking — it admits an owned [`OwnedGemmOp`] wrapped in a
@@ -15,10 +17,20 @@
 //!   back a [`Ticket`]; a full bounded queue returns the typed
 //!   [`AdmissionError::QueueFull`] instead of blocking (backpressure is
 //!   the caller's signal, not a hidden wait);
-//! * a dedicated scheduler thread forms earliest-deadline-first,
-//!   MAC-budgeted batches and drives [`BatchGemm`] — now the internal
-//!   execution stage, its blocking `run` kept as a thin synchronous
-//!   facade for tests/benches;
+//! * a dedicated **pre-encode stage thread** claims admitted requests
+//!   and encodes their operands ahead of execution — activations on
+//!   the shared pool, weights through the operand cache — into each
+//!   op's shared encoded slot, while the previous batch's GEMM is
+//!   still running. Encoding is deterministic, so the pipeline is pure
+//!   overlap: pre-encoded and inline-encoded ops are bit-identical
+//!   (property-pinned), and [`ServiceStats`] reports the pre-encode
+//!   hit rate and cumulative encode-stage latency;
+//! * a dedicated **scheduler thread** forms earliest-deadline-first,
+//!   MAC-budgeted batches and drives [`BatchGemm`] — the internal
+//!   execution stage, which consumes pre-encoded slots and encodes
+//!   whatever the pipeline missed inline ([`EncodeReport`] is the
+//!   per-batch accounting); its blocking `run` stays a thin
+//!   synchronous facade for tests/benches;
 //! * synchronous consumers (`hbfp_gemm`, `dequant_gemm`, the Trainer's
 //!   host-BFP weight store) go through labeled
 //!   [`ServiceSession`](service::ServiceSession)s.
@@ -82,6 +94,10 @@
 //!   is indexed by absolute block position);
 //! * cached operands are byte-identical to freshly encoded ones
 //!   (deterministic nearest rounding, content-addressed identity);
+//! * pre-encoded operands (the pipeline's admission-time encode) are
+//!   byte-identical to inline-encoded ones — the encode race between
+//!   the pre-encode stage and the execution stage can only change
+//!   **who** encodes, never what;
 //! * admission order, priority classes, deadlines, and batch-budget
 //!   cuts reorder **execution**, never accumulation.
 //!
@@ -101,7 +117,7 @@ pub mod service;
 pub use cache::{CacheKey, CacheStats, OperandCache};
 pub use pool::{Job, WorkerPool};
 pub use queue::{AdmissionError, GemmRequest, GemmResponse, Priority, Ticket};
-pub use scheduler::{BatchGemm, OwnedGemmOp};
+pub use scheduler::{BatchGemm, EncodeReport, OwnedGemmOp};
 pub use service::{adaptive_batch_macs, BfpService, ServiceConfig, ServiceSession, ServiceStats};
 
 use crate::bfp::{BfpMatrix, BlockFormat, Mat, Quantizer};

@@ -32,6 +32,7 @@ use super::pool::{lock_or_poisoned, wait_or_poisoned, wait_timeout_or_poisoned};
 use super::scheduler::OwnedGemmOp;
 use crate::bfp::Mat;
 use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -222,7 +223,35 @@ pub(crate) struct Pending {
     pub(crate) deadline_at: Option<Instant>,
     pub(crate) priority: Priority,
     pub(crate) macs: usize,
+    /// The pre-encode stage has claimed this request (it clones the op
+    /// and encodes outside the lock). Claiming is advisory — a claimed
+    /// request can still be popped into a batch at any time; the
+    /// op's shared encoded slot arbitrates the race.
+    encode_claimed: bool,
+    /// True while the request sits in the queue; cleared by `pop_batch`
+    /// when it joins an execution batch. Shared with outstanding
+    /// [`EncodeClaim`]s so the pre-encode stage can skip requests whose
+    /// batch is already executing instead of duplicating the execution
+    /// stage's inline encode.
+    queued: Arc<AtomicBool>,
     seq: u64,
+}
+
+/// One request handed to the pre-encode stage: the op clone to encode
+/// plus the liveness flag that tells the encoder whether the request is
+/// still waiting in the queue (encoding a popped request could only
+/// duplicate work the execution stage is doing right now).
+pub(crate) struct EncodeClaim {
+    pub(crate) op: OwnedGemmOp,
+    queued: Arc<AtomicBool>,
+}
+
+impl EncodeClaim {
+    /// Whether the claimed request is still in the queue (its batch has
+    /// not started executing).
+    pub(crate) fn still_queued(&self) -> bool {
+        self.queued.load(Ordering::Acquire)
+    }
 }
 
 impl Pending {
@@ -316,11 +345,49 @@ impl SubmitQueue {
             deadline_at: deadline.map(|d| now + d),
             priority,
             macs,
+            encode_claimed: false,
+            queued: Arc::new(AtomicBool::new(true)),
             seq: st.seq,
         });
         st.peak_depth = st.peak_depth.max(st.pending.len());
-        self.work_cv.notify_one();
+        // Two consumers wait on work_cv (the batch scheduler and the
+        // pre-encode stage); wake both so neither can be starved by a
+        // wakeup landing on the other.
+        self.work_cv.notify_all();
         ticket
+    }
+
+    /// Block until admitted requests the pre-encode stage has not yet
+    /// claimed exist, mark up to `max` of them claimed, and return
+    /// clones of their ops (cheap: `Arc` operands sharing the encoded
+    /// slot). Runs through pauses — pre-encoding while batch formation
+    /// is paused is exactly the pipelining this stage exists for.
+    /// Returns `None` on shutdown: whatever is still unclaimed will be
+    /// encoded inline by the drain.
+    pub(crate) fn claim_encode_work(&self, max: usize) -> Option<Vec<EncodeClaim>> {
+        let mut st = lock_or_poisoned(&self.state, "service queue");
+        loop {
+            if st.shutdown {
+                return None;
+            }
+            let mut claims = Vec::new();
+            for p in st.pending.iter_mut() {
+                if !p.encode_claimed {
+                    p.encode_claimed = true;
+                    claims.push(EncodeClaim {
+                        op: p.op.clone(),
+                        queued: Arc::clone(&p.queued),
+                    });
+                    if claims.len() >= max.max(1) {
+                        break;
+                    }
+                }
+            }
+            if !claims.is_empty() {
+                return Some(claims);
+            }
+            st = wait_or_poisoned(&self.work_cv, st, "service queue");
+        }
     }
 
     /// Non-blocking admission (the `submit` contract).
@@ -425,7 +492,14 @@ impl SubmitQueue {
         for (i, p) in std::mem::take(&mut st.pending).into_iter().enumerate() {
             match rank[i] {
                 usize::MAX => rest.push(p),
-                r => batch[r] = Some(p),
+                r => {
+                    // Invalidate outstanding encode claims: this
+                    // request's batch is about to execute, so a late
+                    // pre-encode could only duplicate the execution
+                    // stage's inline encode.
+                    p.queued.store(false, Ordering::Release);
+                    batch[r] = Some(p);
+                }
             }
         }
         st.pending = rest;
@@ -540,6 +614,30 @@ mod tests {
         let (batch, eff) = q.pop_batch(base, 16, true).unwrap();
         assert_eq!(eff, base / 4);
         assert_eq!(batch[0].op.x.rows, 2, "due request leads the cut batch");
+    }
+
+    #[test]
+    fn claim_encode_work_marks_each_request_once() {
+        let q = SubmitQueue::new(8);
+        q.push(req(1)).unwrap();
+        q.push(req(2)).unwrap();
+        q.push(req(3)).unwrap();
+        let first = q.claim_encode_work(2).unwrap();
+        assert_eq!(first.len(), 2, "claim honors its batch cap");
+        assert!(first.iter().all(EncodeClaim::still_queued));
+        let second = q.claim_encode_work(8).unwrap();
+        assert_eq!(second.len(), 1, "already-claimed requests stay claimed");
+        // Everything is claimed: the next call would block, and
+        // shutdown must unblock it with None instead.
+        q.shutdown();
+        assert!(q.claim_encode_work(8).is_none());
+        // Claiming is advisory — claimed requests still pop into
+        // batches for execution...
+        assert_eq!(q.pop_batch(usize::MAX, 16, false).unwrap().0.len(), 3);
+        // ...and popping invalidates every outstanding claim, so the
+        // encode stage never duplicates an executing batch's work.
+        assert!(first.iter().all(|c| !c.still_queued()));
+        assert!(second.iter().all(|c| !c.still_queued()));
     }
 
     #[test]

@@ -16,7 +16,11 @@
 //! pool idle at every op boundary and re-encodes weight operands that
 //! repeat across requests. `BatchGemm` instead:
 //!
-//! 1. **encodes** all activation operands in parallel on the pool and
+//! 1. **consumes pre-encoded operands** where the service's
+//!    admission-time pipeline already filled an op's shared slot
+//!    ([`OwnedGemmOp`]'s encoded-operand slot — encode of the next
+//!    batch overlaps the GEMM of the current one), and otherwise
+//!    **encodes** activation operands in parallel on the pool and
 //!    pulls weight operands through the runtime's encoded-operand cache
 //!    ([`super::cache`]) so repeated weights are packed once;
 //! 2. **shards** every op into band-level work items (contiguous
@@ -41,7 +45,19 @@ use crate::bfp::gemm::{band_shifts, BandTask, PARALLEL_MIN_MACS};
 use crate::bfp::kernels::{self, GemmKernel};
 use crate::bfp::{BfpMatrix, BlockFormat, Mat, Quantizer};
 use anyhow::{bail, Context, Result};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+/// Pre-encoded operand planes of one op: the activation encoded
+/// row-wise and the weight encoded column-wise (through the operand
+/// cache). Filled at most once — by the service's admission-time
+/// encode stage when it wins the race, otherwise never (the execution
+/// stage encodes inline without publishing, so the sync facade's
+/// cache-counter semantics stay exactly as before).
+pub(crate) struct PreEncoded {
+    pub(crate) x: Arc<BfpMatrix>,
+    pub(crate) w: Arc<BfpMatrix>,
+}
 
 /// One GEMM: `x (m x K)` times `w (K x n)` with both operands quantized
 /// to `fmt` (nearest rounding — the deterministic forward-pass
@@ -53,11 +69,19 @@ use std::sync::Arc;
 /// [`super::service::BfpService`] needs. (The pre-service `GemmOp<'a>`
 /// borrowed its operands and could not leave the caller's stack; those
 /// `&'a` borrows are gone.)
+///
+/// Every clone of an op shares one **encoded-operand slot**: the
+/// service's pipeline pre-encodes into it at admission time, and the
+/// execution stage consumes it instead of re-encoding — the encode →
+/// execute handoff that lets encode of batch `n + 1` overlap the GEMM
+/// of batch `n`.
 #[derive(Clone)]
 pub struct OwnedGemmOp {
     pub x: Arc<Mat>,
     pub w: Arc<Mat>,
     pub fmt: BlockFormat,
+    /// Shared across clones; see the type docs.
+    pub(crate) encoded: Arc<OnceLock<PreEncoded>>,
 }
 
 impl OwnedGemmOp {
@@ -67,7 +91,12 @@ impl OwnedGemmOp {
         if x.cols != w.rows {
             bail!("inner dims {} vs {} do not contract", x.cols, w.rows);
         }
-        Ok(Self { x, w, fmt })
+        Ok(Self {
+            x,
+            w,
+            fmt,
+            encoded: Arc::new(OnceLock::new()),
+        })
     }
 
     /// Convenience for callers that hold plain `&Mat`s: copies both
@@ -85,6 +114,54 @@ impl OwnedGemmOp {
             .saturating_mul(self.w.cols)
             .saturating_mul(self.x.cols)
     }
+
+    /// Whether this op's encoded-operand slot has been filled by the
+    /// pre-encode stage. Observability for tests and metrics; the
+    /// execution stage reads the slot itself.
+    pub fn is_pre_encoded(&self) -> bool {
+        self.encoded.get().is_some()
+    }
+
+    /// Encode both operands into the shared slot: the activation on
+    /// `rt`'s pool, the weight through `rt`'s operand cache (nearest
+    /// rounding — the deterministic cacheable transform). No-op when
+    /// the slot is already filled. Pre-encode failures leave the slot
+    /// empty on purpose: the execution stage re-encodes inline and
+    /// routes the error to the op's ticket, so a malformed op fails
+    /// where its caller is listening.
+    pub(crate) fn pre_encode(&self, rt: &ExecRuntime) -> Result<()> {
+        if self.encoded.get().is_some() {
+            return Ok(());
+        }
+        let q = Quantizer::nearest(self.fmt.mantissa_bits);
+        let mut xq = BfpMatrix::empty();
+        xq.encode_into_on(rt.pool(), &self.x.data, self.x.rows, self.x.cols, self.fmt, q, 0)?;
+        let wq = rt.encode_transposed_cached(self.w.as_ref(), self.fmt)?;
+        // An op submitted more than once shares one slot across its
+        // clones, so a concurrent pre-encode may have won the race;
+        // either value is bit-identical (deterministic encode), so the
+        // loser's work is just dropped.
+        let _ = self.encoded.set(PreEncoded {
+            x: Arc::new(xq),
+            w: wq,
+        });
+        Ok(())
+    }
+}
+
+/// Encode-stage accounting of one [`BatchGemm::run_with_stats`] call —
+/// what the service aggregates into [`super::ServiceStats`] (pre-encode
+/// hit rate, encode-stage latency).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EncodeReport {
+    /// Ops whose operand slot was already filled when the batch reached
+    /// the execution stage (the admission-time pipeline won the race).
+    pub pre_encoded: usize,
+    /// Ops encoded inline by the execution stage.
+    pub inline_encoded: usize,
+    /// Wall time of the execution stage's encode phase, nanoseconds
+    /// (near zero for a fully pre-encoded batch — that is the point).
+    pub encode_ns: u64,
 }
 
 /// Batched GEMM executor over an [`ExecRuntime`] (see module docs).
@@ -138,6 +215,12 @@ impl<'rt> BatchGemm<'rt> {
     /// request-level consumers should migrate to `BfpService::submit`,
     /// which pipelines batches and adds deadlines and backpressure.
     pub fn run(&self, ops: &[OwnedGemmOp]) -> Result<Vec<Mat>> {
+        self.run_with_stats(ops).map(|(outs, _)| outs)
+    }
+
+    /// [`BatchGemm::run`] plus the batch's [`EncodeReport`] — how the
+    /// service attributes encode-stage latency and pre-encode hits.
+    pub fn run_with_stats(&self, ops: &[OwnedGemmOp]) -> Result<(Vec<Mat>, EncodeReport)> {
         for (i, op) in ops.iter().enumerate() {
             if op.x.cols != op.w.rows {
                 bail!(
@@ -148,23 +231,50 @@ impl<'rt> BatchGemm<'rt> {
             }
         }
 
-        // ---- encode stage: activations in parallel, weights cached ----
-        let mut xs: Vec<BfpMatrix> = (0..ops.len()).map(|_| BfpMatrix::empty()).collect();
+        // ---- encode stage -------------------------------------------
+        // Ops whose shared slot the admission-time pipeline already
+        // filled are consumed as-is; the rest encode inline exactly as
+        // before (activations in parallel on the pool, weights through
+        // the operand cache). Inline encodes are NOT published back to
+        // the slot: the sync facade must stay a pure function of its
+        // inputs (the cache-purity property tests count on it). A
+        // cache-bypassing executor (`cache_weights(false)`) ignores the
+        // slots entirely — pre-encoded weights came through the cache,
+        // which that configuration promises not to consume.
+        let encode_started = Instant::now();
+        let pre: Vec<Option<(Arc<BfpMatrix>, Arc<BfpMatrix>)>> = ops
+            .iter()
+            .map(|op| {
+                if !self.cache_weights {
+                    return None;
+                }
+                op.encoded
+                    .get()
+                    .map(|e| (Arc::clone(&e.x), Arc::clone(&e.w)))
+            })
+            .collect();
+        let pre_encoded = pre.iter().filter(|p| p.is_some()).count();
+        let inline_encoded = ops.len() - pre_encoded;
+        let mut xs: Vec<Option<BfpMatrix>> = pre
+            .iter()
+            .map(|p| if p.is_some() { None } else { Some(BfpMatrix::empty()) })
+            .collect();
         let mut xerrs: Vec<Option<anyhow::Error>> = (0..ops.len()).map(|_| None).collect();
         {
             let jobs: Vec<Job> = xs
                 .iter_mut()
                 .zip(xerrs.iter_mut())
                 .zip(ops)
-                .map(|((slot, err), op)| {
+                .filter_map(|((slot, err), op)| {
+                    let slot = slot.as_mut()?;
                     let q = Quantizer::nearest(op.fmt.mantissa_bits);
-                    Box::new(move || {
+                    Some(Box::new(move || {
                         if let Err(e) =
                             slot.encode_into_serial(&op.x.data, op.x.rows, op.x.cols, op.fmt, q, 0)
                         {
                             *err = Some(e);
                         }
-                    }) as Job
+                    }) as Job)
                 })
                 .collect();
             self.rt.pool().scope_run(jobs);
@@ -174,8 +284,29 @@ impl<'rt> BatchGemm<'rt> {
                 return Err(e.context(format!("encoding activations of op {i}")));
             }
         }
-        let mut ws: Vec<Arc<BfpMatrix>> = Vec::with_capacity(ops.len());
-        for (i, op) in ops.iter().enumerate() {
+        let mut xenc: Vec<Arc<BfpMatrix>> = Vec::with_capacity(ops.len());
+        let mut wenc: Vec<Arc<BfpMatrix>> = Vec::with_capacity(ops.len());
+        for (i, ((op, slot), inline_x)) in ops.iter().zip(pre).zip(xs).enumerate() {
+            if let Some((xq, wq)) = slot {
+                xenc.push(xq);
+                wenc.push(wq);
+                continue;
+            }
+            // A pre-encode may have landed after the batch-start
+            // snapshot; harvest it rather than re-encoding the weight
+            // (the inline activation work is already spent; bits are
+            // identical either way). The counters keep describing the
+            // snapshot — this is purely work avoidance. Only on the
+            // cached path: a cache-bypassing facade must not consume
+            // cache-produced planes.
+            if self.cache_weights {
+                if let Some(e) = op.encoded.get() {
+                    xenc.push(Arc::clone(&e.x));
+                    wenc.push(Arc::clone(&e.w));
+                    continue;
+                }
+            }
+            xenc.push(Arc::new(inline_x.expect("inline ops got an encode slot")));
             let enc = if self.cache_weights {
                 self.rt.encode_transposed_cached(op.w.as_ref(), op.fmt)
             } else {
@@ -189,13 +320,18 @@ impl<'rt> BatchGemm<'rt> {
                     )
                     .map(|_| Arc::new(fresh))
             };
-            ws.push(enc.with_context(|| format!("encoding weights of op {i}"))?);
+            wenc.push(enc.with_context(|| format!("encoding weights of op {i}"))?);
         }
+        let report = EncodeReport {
+            pre_encoded,
+            inline_encoded,
+            encode_ns: encode_started.elapsed().as_nanos() as u64,
+        };
 
-        // ---- shard + execute stage ----
-        let shifts: Vec<(Vec<i32>, Vec<i32>)> = xs
+        // ---- shard + execute stage ----------------------------------
+        let shifts: Vec<(Vec<i32>, Vec<i32>)> = xenc
             .iter()
-            .zip(&ws)
+            .zip(&wenc)
             .map(|(x, w)| (band_shifts(x), band_shifts(w)))
             .collect();
         let mut outs: Vec<Mat> = ops
@@ -208,7 +344,7 @@ impl<'rt> BatchGemm<'rt> {
             .map(OwnedGemmOp::macs)
             .fold(0usize, usize::saturating_add);
         let mut jobs: Vec<Job> = Vec::new();
-        for (((out, xp), wp), (xsh, wsh)) in outs.iter_mut().zip(&xs).zip(&ws).zip(&shifts) {
+        for (((out, xp), wp), (xsh, wsh)) in outs.iter_mut().zip(&xenc).zip(&wenc).zip(&shifts) {
             let (m, n) = (xp.rows, wp.rows);
             if m == 0 || n == 0 {
                 continue;
@@ -224,13 +360,14 @@ impl<'rt> BatchGemm<'rt> {
             };
             let macs = m.saturating_mul(n).saturating_mul(xp.cols);
             let band = self.band_for(m, macs, total_macs, threads);
+            let xref: &BfpMatrix = xp;
             let wref: &BfpMatrix = wp;
             for (t, chunk) in out.data.chunks_mut(band * n).enumerate() {
                 let r0 = t * band;
                 let (xsh, wsh) = (xsh.as_slice(), wsh.as_slice());
                 jobs.push(Box::new(move || {
                     kernel.run_band(BandTask {
-                        x: xp,
+                        x: xref,
                         w: wref,
                         xsh,
                         wsh,
@@ -242,7 +379,7 @@ impl<'rt> BatchGemm<'rt> {
             }
         }
         self.rt.pool().scope_run(jobs);
-        Ok(outs)
+        Ok((outs, report))
     }
 
     /// Shard height for one op: the explicit override, or a height that
@@ -313,8 +450,14 @@ mod tests {
                     x: Arc::clone(&a),
                     w: w_ok,
                     fmt,
+                    encoded: Default::default(),
                 },
-                OwnedGemmOp { x: a, w: w_bad, fmt },
+                OwnedGemmOp {
+                    x: a,
+                    w: w_bad,
+                    fmt,
+                    encoded: Default::default(),
+                },
             ])
             .unwrap_err();
         assert!(err.to_string().contains("op 1"), "{err}");
@@ -368,6 +511,49 @@ mod tests {
                     assert_eq!(g.to_bits(), b.to_bits(), "band {band} cached {cached}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn pre_encoded_ops_skip_inline_encode_and_keep_bits() {
+        // Fill the shared slot the way the service's pipeline does,
+        // then run the batch: the report must attribute the op to the
+        // pre-encode path and the result must stay bit-identical to a
+        // fresh (inline-encoded) op and to the scalar reference.
+        let rt = ExecRuntime::with_threads(2);
+        let mut rng = Rng::new(0x93E);
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        let x = randmat(&mut rng, 7, 96);
+        let w = randmat(&mut rng, 96, 9);
+        let pre_op = OwnedGemmOp::new(Arc::clone(&x), Arc::clone(&w), fmt).unwrap();
+        assert!(!pre_op.is_pre_encoded());
+        pre_op.pre_encode(&rt).unwrap();
+        assert!(pre_op.is_pre_encoded());
+        // Idempotent: a second call leaves the filled slot alone.
+        pre_op.pre_encode(&rt).unwrap();
+        let (pre_out, pre_report) = BatchGemm::new(&rt)
+            .run_with_stats(std::slice::from_ref(&pre_op))
+            .unwrap();
+        assert_eq!((pre_report.pre_encoded, pre_report.inline_encoded), (1, 0));
+        let inline_op = OwnedGemmOp::new(Arc::clone(&x), Arc::clone(&w), fmt).unwrap();
+        let (inline_out, inline_report) = BatchGemm::new(&rt)
+            .run_with_stats(std::slice::from_ref(&inline_op))
+            .unwrap();
+        assert_eq!(
+            (inline_report.pre_encoded, inline_report.inline_encoded),
+            (0, 1)
+        );
+        // The sync facade never publishes inline encodes to the slot.
+        assert!(!inline_op.is_pre_encoded());
+        let want = crate::bfp::hbfp_gemm_scalar(&x, &w, fmt).unwrap();
+        for ((p, i), s) in pre_out[0]
+            .data
+            .iter()
+            .zip(&inline_out[0].data)
+            .zip(&want.data)
+        {
+            assert_eq!(p.to_bits(), i.to_bits());
+            assert_eq!(p.to_bits(), s.to_bits());
         }
     }
 

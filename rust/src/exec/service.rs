@@ -14,7 +14,10 @@
 //!
 //! ```text
 //! submit(GemmRequest) ─▶ SubmitQueue (bounded, QoS-aware) ─▶ scheduler thread
-//!        │                                                      │ EDF + MAC-budget batch
+//!        │                     │                                │ EDF + MAC-budget batch
+//!        │                     ▼ claim                          │
+//!        │              encode thread ── pre-encodes ──▶ op's encoded slot
+//!        │              (pool + operand cache)                  │ consumed by
 //!      Ticket ◀──────────── fulfill ◀── BatchGemm (execution stage, worker pool)
 //! ```
 //!
@@ -22,6 +25,15 @@
 //!   stamps the QoS envelope ([`Priority`], optional deadline), and
 //!   either admits the request or returns a typed [`AdmissionError`]
 //!   (`QueueFull` is the backpressure signal — no hidden waiting).
+//! * A dedicated **encode thread** (the pipeline's pre-encode stage)
+//!   claims admitted requests and encodes their operands ahead of
+//!   execution — activations on the shared pool, weights through the
+//!   operand cache — into each op's shared encoded slot, **while the
+//!   previous batch's GEMM is still executing**. The execution stage
+//!   consumes filled slots and encodes the rest inline; either way the
+//!   bits are identical (encoding is deterministic), so the pipeline
+//!   is pure overlap. [`ServiceStats`] reports the pre-encode hit rate
+//!   and cumulative encode-stage latency.
 //! * A dedicated **scheduler thread** drains the queue, forming
 //!   earliest-deadline-first batches within a MAC budget
 //!   ([`ServiceConfig`]), and drives the [`super::BatchGemm`] execution
@@ -50,7 +62,7 @@
 use super::queue::{
     AdmissionError, GemmRequest, GemmResponse, Pending, Priority, SubmitQueue, Ticket,
 };
-use super::scheduler::{BatchGemm, OwnedGemmOp};
+use super::scheduler::{BatchGemm, EncodeReport, OwnedGemmOp};
 use super::ExecRuntime;
 use crate::bfp::{kernels, BfpMatrix, BlockFormat, Mat};
 use crate::util::KernelChoice;
@@ -134,6 +146,25 @@ struct ServiceCounters {
     /// MAC budget the adaptive scheduler used for the most recent
     /// batch (the base budget until the first batch forms).
     effective_batch_macs: AtomicU64,
+    /// Ops that reached execution with their operand slot already
+    /// filled by the pre-encode stage.
+    pre_encoded: AtomicU64,
+    /// Ops the execution stage had to encode inline.
+    inline_encoded: AtomicU64,
+    /// Cumulative encode-stage wall time, nanoseconds: the pre-encode
+    /// thread's encoding work plus the execution stage's inline encode
+    /// phase.
+    encode_ns: AtomicU64,
+}
+
+impl ServiceCounters {
+    fn record_encode(&self, report: &EncodeReport) {
+        self.pre_encoded
+            .fetch_add(report.pre_encoded as u64, Ordering::Relaxed);
+        self.inline_encoded
+            .fetch_add(report.inline_encoded as u64, Ordering::Relaxed);
+        self.encode_ns.fetch_add(report.encode_ns, Ordering::Relaxed);
+    }
 }
 
 /// Counter snapshot of one service (see
@@ -160,6 +191,15 @@ pub struct ServiceStats {
     /// batch — equals `ServiceConfig::max_batch_macs` when adaptation
     /// is off or the queue is idle.
     pub effective_batch_macs: u64,
+    /// Executed ops whose operands the pipeline pre-encoded ahead of
+    /// their batch (admission-time encode overlapped a running GEMM).
+    pub pre_encoded: u64,
+    /// Executed ops the execution stage encoded inline (the pipeline
+    /// lost the race or the op arrived straight at execution).
+    pub inline_encoded: u64,
+    /// Cumulative encode-stage wall time in microseconds (pre-encode
+    /// thread + inline encode inside the execution stage).
+    pub encode_us: u64,
     /// Kernel backend identity this service executes with (the forced
     /// [`ServiceConfig::kernel`] choice, or the registry's preferred
     /// backend under `Auto`; per-op dispatch may still fall back for
@@ -179,6 +219,9 @@ impl Default for ServiceStats {
             queue_depth: 0,
             peak_queue_depth: 0,
             effective_batch_macs: 0,
+            pre_encoded: 0,
+            inline_encoded: 0,
+            encode_us: 0,
             kernel: "",
         }
     }
@@ -195,6 +238,17 @@ impl ServiceStats {
             self.deadline_missed as f64 / done as f64
         }
     }
+
+    /// Share of executed ops whose operands were pre-encoded by the
+    /// pipeline (0.0 before anything executed).
+    pub fn pre_encode_hit_rate(&self) -> f64 {
+        let total = self.pre_encoded + self.inline_encoded;
+        if total == 0 {
+            0.0
+        } else {
+            self.pre_encoded as f64 / total as f64
+        }
+    }
 }
 
 /// The asynchronous BFP execution service (see module docs).
@@ -204,13 +258,14 @@ pub struct BfpService {
     counters: Arc<ServiceCounters>,
     cfg: ServiceConfig,
     scheduler: Option<JoinHandle<()>>,
+    encoder: Option<JoinHandle<()>>,
 }
 
 impl BfpService {
-    /// Spawn a service (and its scheduler thread) over `rt`. The
-    /// runtime is shared: the service's batches, direct `BatchGemm`
-    /// users, and encode-only consumers all see one pool and one
-    /// operand cache.
+    /// Spawn a service (its scheduler thread and its pre-encode stage
+    /// thread) over `rt`. The runtime is shared: the service's batches,
+    /// direct `BatchGemm` users, and encode-only consumers all see one
+    /// pool and one operand cache.
     pub fn new(rt: Arc<ExecRuntime>, cfg: ServiceConfig) -> Self {
         let queue = Arc::new(SubmitQueue::new(cfg.queue_capacity));
         let counters = Arc::new(ServiceCounters::default());
@@ -226,12 +281,22 @@ impl BfpService {
                 .spawn(move || scheduler_loop(&rt, &queue, &counters, cfg))
                 .expect("spawn service scheduler thread")
         };
+        let encoder = {
+            let rt = Arc::clone(&rt);
+            let queue = Arc::clone(&queue);
+            let counters = Arc::clone(&counters);
+            std::thread::Builder::new()
+                .name("bfp-service-encode".into())
+                .spawn(move || encoder_loop(&rt, &queue, &counters))
+                .expect("spawn service encode-stage thread")
+        };
         Self {
             rt,
             queue,
             counters,
             cfg,
             scheduler: Some(scheduler),
+            encoder: Some(encoder),
         }
     }
 
@@ -308,6 +373,9 @@ impl BfpService {
             queue_depth: self.queue.depth(),
             peak_queue_depth: self.queue.peak_depth(),
             effective_batch_macs: self.counters.effective_batch_macs.load(Ordering::Relaxed),
+            pre_encoded: self.counters.pre_encoded.load(Ordering::Relaxed),
+            inline_encoded: self.counters.inline_encoded.load(Ordering::Relaxed),
+            encode_us: self.counters.encode_ns.load(Ordering::Relaxed) / 1_000,
             kernel: kernels::registry().resolve(self.cfg.kernel).name(),
         }
     }
@@ -334,10 +402,16 @@ impl BfpService {
 impl Drop for BfpService {
     /// Graceful drain: admission closes, everything already admitted is
     /// executed and fulfilled (a pause is overridden — no ticket is
-    /// ever abandoned), then the scheduler thread is joined.
+    /// ever abandoned), then the scheduler and encode-stage threads are
+    /// joined. The encode thread exits on shutdown without draining:
+    /// anything it had not pre-encoded is encoded inline by the
+    /// scheduler's drain.
     fn drop(&mut self) {
         self.queue.shutdown();
         if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.encoder.take() {
             let _ = h.join();
         }
     }
@@ -349,6 +423,38 @@ fn batch_stage<'rt>(rt: &'rt ExecRuntime, cfg: &ServiceConfig) -> BatchGemm<'rt>
     match cfg.kernel {
         KernelChoice::Auto => BatchGemm::new(rt),
         choice => BatchGemm::new(rt).with_kernel(kernels::registry().resolve(choice)),
+    }
+}
+
+/// Requests the pre-encode stage claims per wakeup — enough to stay
+/// ahead of one execution batch without hoarding the queue under a
+/// burst.
+const ENCODE_CLAIM_MAX: usize = 64;
+
+/// The pipeline's pre-encode stage: claim admitted requests and fill
+/// their ops' shared encoded slots (activations on the pool, weights
+/// through the operand cache) while the scheduler thread is busy
+/// executing the previous batch. Claims whose request has already been
+/// popped into a batch are skipped — encoding them would only
+/// duplicate the execution stage's inline encode and steal pool time
+/// from the running GEMM. Encode failures are swallowed on purpose —
+/// the execution stage re-encodes inline and routes the error to the
+/// right ticket.
+fn encoder_loop(rt: &ExecRuntime, queue: &SubmitQueue, counters: &ServiceCounters) {
+    while let Some(claims) = queue.claim_encode_work(ENCODE_CLAIM_MAX) {
+        for claim in &claims {
+            // Skip claims that can do no useful work, and keep their
+            // bookkeeping out of encode_ns — the reported encode-stage
+            // latency is time spent encoding, not iterating claims.
+            if !claim.still_queued() || claim.op.is_pre_encoded() {
+                continue;
+            }
+            let started = Instant::now();
+            let _ = claim.op.pre_encode(rt);
+            counters
+                .encode_ns
+                .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
     }
 }
 
@@ -372,8 +478,9 @@ fn scheduler_loop(
         counters.batches.fetch_add(1, Ordering::Relaxed);
         let started = Instant::now();
         let ops: Vec<OwnedGemmOp> = batch.iter().map(|p| p.op.clone()).collect();
-        match batch_stage(rt, &cfg).run(&ops) {
-            Ok(outs) => {
+        match batch_stage(rt, &cfg).run_with_stats(&ops) {
+            Ok((outs, report)) => {
+                counters.record_encode(&report);
                 for (p, out) in batch.into_iter().zip(outs) {
                     fulfill(p, Ok(out), started, counters);
                 }
@@ -384,8 +491,11 @@ fn scheduler_loop(
                 // every ticket its own verdict.
                 for p in batch {
                     let one = batch_stage(rt, &cfg)
-                        .run(std::slice::from_ref(&p.op))
-                        .map(|mut outs| outs.remove(0));
+                        .run_with_stats(std::slice::from_ref(&p.op))
+                        .map(|(mut outs, report)| {
+                            counters.record_encode(&report);
+                            outs.remove(0)
+                        });
                     fulfill(p, one, started, counters);
                 }
             }
@@ -516,6 +626,7 @@ mod tests {
             x: randmat(&mut rng, 2, 8),
             w: randmat(&mut rng, 9, 3),
             fmt,
+            encoded: Default::default(),
         };
         match svc.submit(GemmRequest::new(op)) {
             Err(AdmissionError::InvalidShape { reason }) => {
@@ -685,6 +796,55 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pre_encode_pipeline_fills_slots_while_paused_and_is_counted() {
+        // Pause stops batch formation but NOT the pre-encode stage:
+        // the encode thread keeps claiming and filling slots, which is
+        // the deterministic way to observe the pipeline. After resume,
+        // every op must execute from its pre-encoded slot.
+        let svc = BfpService::with_threads(2);
+        svc.pause();
+        let mut rng = Rng::new(0x93E2);
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        let ops: Vec<OwnedGemmOp> = (0..6)
+            .map(|_| {
+                OwnedGemmOp::new(
+                    randmat(&mut rng, 32, 96),
+                    randmat(&mut rng, 96, 16),
+                    fmt,
+                )
+                .unwrap()
+            })
+            .collect();
+        let tickets: Vec<Ticket> = ops
+            .iter()
+            .map(|op| svc.submit(GemmRequest::new(op.clone())).unwrap())
+            .collect();
+        // The submitted clones share each op's encoded slot, so the
+        // pipeline's progress is observable right here.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while !ops.iter().all(OwnedGemmOp::is_pre_encoded) {
+            assert!(
+                Instant::now() < deadline,
+                "pre-encode stage never filled all slots"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        svc.resume();
+        for (t, op) in tickets.iter().zip(&ops) {
+            let resp = t.wait().unwrap();
+            let want = hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap();
+            for (g, s) in resp.out.data.iter().zip(&want.data) {
+                assert_eq!(g.to_bits(), s.to_bits());
+            }
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.pre_encoded, 6, "{stats:?}");
+        assert_eq!(stats.inline_encoded, 0, "{stats:?}");
+        assert_eq!(stats.pre_encode_hit_rate(), 1.0);
+        assert!(stats.encode_us > 0, "{stats:?}");
     }
 
     #[test]

@@ -319,6 +319,19 @@ pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport
             "effective batch MACs (last)",
             format!("{:.3e}", s.effective_batch_macs as f64),
         );
+        kv(
+            "pre-encoded ops (pipeline)",
+            format!(
+                "{} ({:.0}% hit rate)",
+                s.pre_encoded,
+                100.0 * s.pre_encode_hit_rate()
+            ),
+        );
+        kv("inline-encoded ops", s.inline_encoded.to_string());
+        kv(
+            "encode stage (ms total)",
+            format!("{:.3}", s.encode_us as f64 / 1e3),
+        );
     }
     kv(
         "cache hits (this run)",
@@ -336,6 +349,21 @@ pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport
 
     let reg = crate::bfp::kernels::registry();
     let (cache_entries_cap, cache_bytes_cap) = rt.cache().caps();
+    // The env-resolved budget, independent of which runtime ran the
+    // sim: with `BOOSTERS_CACHE_MB`/`_ENTRIES` unset these are the
+    // compiled-in defaults, so the artifact always records the caps a
+    // reproducer would actually get instead of omitting them.
+    let (budget_entries, budget_bytes) = crate::util::cache_budget();
+    // Service-stat fields are Null in sync mode (no admission loop, no
+    // pre-encode stage) — one projection helper instead of a copy of
+    // the map/unwrap dance per field.
+    let svc_num = |f: fn(&ServiceStats) -> f64| {
+        outcome
+            .service
+            .as_ref()
+            .map(|s| Json::Num(f(s)))
+            .unwrap_or(Json::Null)
+    };
     let json = Json::obj(vec![
         ("suite", Json::str("serve_sim")),
         ("mode", Json::str(cfg.mode.json_tag())),
@@ -353,14 +381,20 @@ pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport
             "cache_mb_cap",
             Json::Num((cache_bytes_cap >> 20) as f64),
         ),
+        ("cache_budget_entries", Json::Num(budget_entries as f64)),
+        (
+            "cache_budget_mb",
+            Json::Num((budget_bytes >> 20) as f64),
+        ),
         (
             "effective_batch_macs",
-            outcome
-                .service
-                .as_ref()
-                .map(|s| Json::Num(s.effective_batch_macs as f64))
-                .unwrap_or(Json::Null),
+            svc_num(|s| s.effective_batch_macs as f64),
         ),
+        // Encode-pipeline counters (async mode only).
+        ("pre_encoded_ops", svc_num(|s| s.pre_encoded as f64)),
+        ("inline_encoded_ops", svc_num(|s| s.inline_encoded as f64)),
+        ("pre_encode_hit_rate", svc_num(ServiceStats::pre_encode_hit_rate)),
+        ("encode_stage_ms", svc_num(|s| s.encode_us as f64 / 1e3)),
         ("requests", Json::Num(cfg.requests as f64)),
         ("completed", Json::Num(completed as f64)),
         ("rejected", Json::Num(outcome.rejected as f64)),
@@ -605,6 +639,15 @@ mod tests {
         let j = report.to_json();
         assert_eq!(j.req("mode").unwrap().as_str().unwrap(), "async");
         assert!(j.req("throughput_rps").unwrap().as_f64().unwrap() > 0.0);
+        // Every completed op was either pre-encoded by the pipeline or
+        // encoded inline at execution — the two counters partition the
+        // completed stream exactly.
+        let pre = j.req("pre_encoded_ops").unwrap().as_f64().unwrap();
+        let inline = j.req("inline_encoded_ops").unwrap().as_f64().unwrap();
+        assert_eq!(pre as usize + inline as usize, report.completed);
+        assert!(j.req("encode_stage_ms").unwrap().as_f64().unwrap() >= 0.0);
+        let rate = j.req("pre_encode_hit_rate").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&rate));
     }
 
     #[test]
@@ -633,6 +676,11 @@ mod tests {
         assert!(back.req("thread_budget").unwrap().as_f64().unwrap() >= 1.0);
         assert!(back.req("cache_entries_cap").unwrap().as_f64().unwrap() >= 1.0);
         assert!(back.req("cache_mb_cap").unwrap().as_f64().unwrap() >= 1.0);
+        // The env-resolved budget rides along even when the variables
+        // are unset (it then records the compiled-in defaults), so the
+        // artifact pins the caps a reproducer would get.
+        assert!(back.req("cache_budget_entries").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(back.req("cache_budget_mb").unwrap().as_f64().unwrap() >= 1.0);
         let _ = std::fs::remove_file(&path);
     }
 

@@ -28,11 +28,14 @@ pub fn exec_cache_snapshot() -> CacheStats {
 
 /// Snapshot of the **global** [`crate::exec::BfpService`] admission
 /// counters (submitted/completed/rejected, deadline misses, queue
-/// depth + high-water mark), plus the effective adaptive batch-MAC
-/// budget of the most recent batch and the GEMM kernel backend
-/// identity the service executes with. Cumulative for the process;
-/// sample before/after a phase to attribute traffic to it. First use
-/// instantiates the service.
+/// depth + high-water mark), the effective adaptive batch-MAC budget
+/// of the most recent batch, the GEMM kernel backend identity the
+/// service executes with, and the encode-pipeline counters (ops
+/// pre-encoded at admission time vs encoded inline at execution, plus
+/// cumulative encode-stage latency — see
+/// [`crate::exec::ServiceStats::pre_encode_hit_rate`]). Cumulative for
+/// the process; sample before/after a phase to attribute traffic to
+/// it. First use instantiates the service.
 pub fn exec_service_snapshot() -> ServiceStats {
     crate::exec::global_service().stats()
 }

@@ -1,0 +1,162 @@
+//! Encode-parity property grid for the unified block-writer encode
+//! core: every mantissa-plane layout (nibble-packed `I4Packed`, `I8`,
+//! `I16`) must encode bit-identically to the scalar reference
+//! quantizer, under serial and threaded pools, on ragged-K shapes,
+//! through both the row-wise and the transposed (weight-side) paths.
+//! The pool splits (row-band, block-range, transposed column bands)
+//! exist in exactly one generic copy since PR 5 — this suite is the
+//! gate that the unification changed no bits.
+
+use boosters::bfp::{quantize_flat, BfpMatrix, BlockFormat, Mat, PlaneLayout, Quantizer};
+use boosters::exec::ExecRuntime;
+use boosters::util::Rng;
+
+fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_scaled(1.0)).collect()
+}
+
+/// f32 equality that identifies +/-0 but is bitwise otherwise (packed
+/// round-trips canonicalize -0.0 — the documented exception).
+fn same(a: f32, b: f32) -> bool {
+    (a == 0.0 && b == 0.0) || a.to_bits() == b.to_bits()
+}
+
+/// One format per layout, all with ragged-friendly block sizes:
+/// `(mantissa_bits, block_size, expected layout)`.
+const LAYOUT_GRID: &[(u32, usize, PlaneLayout)] = &[
+    (3, 16, PlaneLayout::I4Packed),
+    (4, 64, PlaneLayout::I4Packed),
+    (6, 64, PlaneLayout::I8),
+    (4, 49, PlaneLayout::I8), // odd block: m <= 4 stays on the byte plane
+    (8, 16, PlaneLayout::I8),
+    (12, 64, PlaneLayout::I16),
+];
+
+/// Every layout x {multi-row ragged, single-row} x {nearest,
+/// stochastic}: the unified encode decodes exactly what the scalar
+/// reference quantizer emits, row by row (rows restart the stream).
+#[test]
+fn prop_unified_encode_matches_scalar_quantizer_grid() {
+    let mut rng = Rng::new(0xE4C0);
+    for &(m, b, layout) in LAYOUT_GRID {
+        let fmt = BlockFormat::new(m, b).unwrap();
+        for &(rows, cols) in &[(5usize, 2 * b + 37), (1usize, 3 * b + 11), (3, b - 1)] {
+            let data = randn(&mut rng, rows * cols);
+            for q in [Quantizer::nearest(m), Quantizer::stochastic(m, 17)] {
+                let enc = BfpMatrix::encode(&data, rows, cols, fmt, q).unwrap();
+                assert_eq!(enc.mantissas.layout(), layout, "m={m} b={b}");
+                let mut got = Vec::new();
+                enc.decode_into(&mut got);
+                for r in 0..rows {
+                    let want = quantize_flat(&data[r * cols..(r + 1) * cols], b, q, 0);
+                    for (i, (g, w)) in got[r * cols..(r + 1) * cols].iter().zip(&want).enumerate()
+                    {
+                        assert!(
+                            same(*g, *w),
+                            "m={m} b={b} rows={rows} row {r} elem {i}: {g} vs {w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Serial pool vs multi-thread pool produce byte-identical planes for
+/// every layout, above the parallel-encode threshold (so the row-band
+/// split actually engages on the threaded runtime). Compared at the
+/// plane level, not just decoded values.
+#[test]
+fn prop_threaded_encode_planes_bit_identical_to_serial() {
+    let mut rng = Rng::new(0xE4C1);
+    // 128 x 640 = 80k elements: past PARALLEL_MIN_ENCODE (64k).
+    let (rows, cols) = (128usize, 640usize);
+    let data = randn(&mut rng, rows * cols);
+    let serial = ExecRuntime::with_threads(1);
+    let threaded = ExecRuntime::with_threads(4);
+    for &(m, b, layout) in LAYOUT_GRID {
+        let fmt = BlockFormat::new(m, b).unwrap();
+        let a = serial.encode_cached(&data, rows, cols, fmt).unwrap();
+        let c = threaded.encode_cached(&data, rows, cols, fmt).unwrap();
+        assert_eq!(a.exponents, c.exponents, "m={m} b={b}");
+        match layout {
+            PlaneLayout::I4Packed => {
+                assert_eq!(a.mantissas.try_i4().unwrap(), c.mantissas.try_i4().unwrap())
+            }
+            PlaneLayout::I8 => {
+                assert_eq!(a.mantissas.try_i8().unwrap(), c.mantissas.try_i8().unwrap())
+            }
+            PlaneLayout::I16 => {
+                assert_eq!(a.mantissas.try_i16().unwrap(), c.mantissas.try_i16().unwrap())
+            }
+        }
+    }
+}
+
+/// The transposed (weight-side) encode equals the row encode of the
+/// explicit transpose for every layout — on a small serial shape and
+/// on a wide shape that engages the transposed column-band pool split.
+#[test]
+fn prop_transposed_encode_parity_across_layouts() {
+    let mut rng = Rng::new(0xE4C2);
+    for &(m, b, layout) in LAYOUT_GRID {
+        let fmt = BlockFormat::new(m, b).unwrap();
+        let q = Quantizer::nearest(m);
+        // (k, n): small serial case, then wide-enough-to-split case.
+        for &(k, n) in &[(2 * b + 5, 3usize), (257usize, 300usize)] {
+            let w = Mat::new(k, n, randn(&mut rng, k * n)).unwrap();
+            let a = BfpMatrix::encode_transposed(&w, fmt, q).unwrap();
+            let wt = w.transpose();
+            let bmat = BfpMatrix::encode(&wt.data, wt.rows, wt.cols, fmt, q).unwrap();
+            assert_eq!(a.exponents, bmat.exponents, "m={m} b={b} k={k} n={n}");
+            match layout {
+                PlaneLayout::I4Packed => assert_eq!(
+                    a.mantissas.try_i4().unwrap(),
+                    bmat.mantissas.try_i4().unwrap(),
+                    "m={m} b={b} k={k} n={n}"
+                ),
+                PlaneLayout::I8 => assert_eq!(
+                    a.mantissas.try_i8().unwrap(),
+                    bmat.mantissas.try_i8().unwrap(),
+                    "m={m} b={b} k={k} n={n}"
+                ),
+                PlaneLayout::I16 => assert_eq!(
+                    a.mantissas.try_i16().unwrap(),
+                    bmat.mantissas.try_i16().unwrap(),
+                    "m={m} b={b} k={k} n={n}"
+                ),
+            }
+        }
+    }
+}
+
+/// The nibble-direct writer packs exactly the mantissas the byte-plane
+/// path would produce: an m=4 even-block encode and an m=4 odd-block
+/// encode (forced onto the i8 plane) of the same values agree value
+/// for value wherever their blockings coincide — and the packed plane
+/// holds half the bytes.
+#[test]
+fn prop_nibble_direct_writer_matches_byte_writer_values() {
+    let mut rng = Rng::new(0xE4C3);
+    let cols = 4096usize;
+    let data = randn(&mut rng, cols);
+    let q = Quantizer::nearest(4);
+    // The even block size selects the nibble-direct writer; the scalar
+    // quantizer is the value-level reference for what each stored
+    // nibble must decode to.
+    let fmt = BlockFormat::new(4, 16).unwrap();
+    let enc = BfpMatrix::encode(&data, 1, cols, fmt, q).unwrap();
+    assert_eq!(enc.mantissas.layout(), PlaneLayout::I4Packed);
+    assert_eq!(2 * enc.mantissas.resident_bytes(), enc.mantissas.len());
+    let want = quantize_flat(&data, 16, q, 0);
+    let mut got = Vec::new();
+    enc.decode_into(&mut got);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(same(*g, *w), "elem {i}: {g} vs {w}");
+    }
+    // Every stored mantissa sits in the 4-bit two's-complement range.
+    for i in 0..cols {
+        let v = enc.mantissas.value(i);
+        assert!((-8..=7).contains(&v), "elem {i}: {v} out of 4-bit range");
+    }
+}

@@ -130,6 +130,29 @@ fn prop_m4_cached_encodes_are_nibble_packed() {
     assert_eq!(enc5.mantissas.resident_bytes(), 2 * enc.mantissas.resident_bytes());
 }
 
+/// The execution stage's encode report partitions a facade batch
+/// exactly: no service pipeline ran, so every op is inline-encoded,
+/// results match the scalar reference, and the sync facade never
+/// publishes encodes into the ops' shared slots (cache purity).
+#[test]
+fn prop_facade_batches_report_inline_encode_only() {
+    let mut rng = Rng::new(0x1A7E);
+    let triples = build_ops(&mut rng);
+    let rt = ExecRuntime::with_threads(2);
+    let ops = as_ops(&triples);
+    let (outs, report) = BatchGemm::new(&rt).run_with_stats(&ops).unwrap();
+    assert_eq!(report.pre_encoded, 0, "{report:?}");
+    assert_eq!(report.inline_encoded, ops.len(), "{report:?}");
+    for (i, ((x, w, fmt), out)) in triples.iter().zip(&outs).enumerate() {
+        let want = hbfp_gemm_scalar(x, w, *fmt).unwrap();
+        assert_bits_eq(out, &want, &format!("op {i}"));
+    }
+    assert!(
+        ops.iter().all(|op| !op.is_pre_encoded()),
+        "the sync facade must not publish encoded slots"
+    );
+}
+
 /// BOOSTERS_GEMM_THREADS=1 vs the default budget, and a spread of
 /// forced shard heights, all produce the same bits. (The CI workflow
 /// additionally runs the whole suite under both env settings.)

@@ -136,6 +136,73 @@ fn prop_service_bit_identical_under_every_kernel_choice() {
     }
 }
 
+/// Acceptance gate (PR 5): the pipeline's admission-time pre-encode is
+/// invisible to numerics. Ops forced through the pre-encode stage
+/// (pause batch formation, wait until the encode thread fills every
+/// op's shared slot, resume) return bits identical to the synchronous
+/// facade (inline encode, fresh ops) and to the scalar reference —
+/// across thread counts and under every kernel-backend choice — and
+/// the service counters attribute every op to the pre-encode path.
+#[test]
+fn prop_pre_encoded_bit_identical_to_inline_and_scalar() {
+    const SEED: u64 = 0x93E3;
+    // Inline-encoded comparator: the sync facade on ops whose slots
+    // nothing ever fills.
+    let inline_ops = build_ops(&mut Rng::new(SEED));
+    let inline_rt = ExecRuntime::with_threads(1);
+    let inline = BatchGemm::new(&inline_rt).run(&inline_ops).unwrap();
+    for choice in [KernelChoice::Scalar, KernelChoice::Autovec, KernelChoice::Avx2] {
+        for threads in [1usize, 4] {
+            // Fresh ops (same deterministic values, EMPTY slots) per
+            // grid cell, so every cell's pre-encode stage really runs
+            // under its own pool width and kernel choice instead of
+            // consuming slots a previous cell filled.
+            let ops = build_ops(&mut Rng::new(SEED));
+            let svc = BfpService::new(
+                Arc::new(ExecRuntime::with_threads(threads)),
+                ServiceConfig {
+                    kernel: choice,
+                    ..ServiceConfig::default()
+                },
+            );
+            // Freeze batch formation; the pre-encode stage keeps
+            // running, so every submitted op's slot fills while no
+            // batch can execute — a deterministic all-pre-encoded run.
+            svc.pause();
+            let tickets: Vec<Ticket> = ops
+                .iter()
+                .map(|op| svc.submit(GemmRequest::new(op.clone())).unwrap())
+                .collect();
+            let deadline = std::time::Instant::now() + Duration::from_secs(60);
+            while !ops.iter().all(OwnedGemmOp::is_pre_encoded) {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "pre-encode stage never filled all slots ({choice:?}, {threads} threads)"
+                );
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            svc.resume();
+            for (i, (t, op)) in tickets.iter().zip(&ops).enumerate() {
+                let resp = t.wait().unwrap();
+                let want = hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap();
+                let ctx = format!(
+                    "kernel {choice:?} threads {threads} op {i} (m={} b={})",
+                    op.fmt.mantissa_bits, op.fmt.block_size
+                );
+                assert_bits_eq(&resp.out, &want, &format!("{ctx} vs scalar"));
+                assert_bits_eq(&resp.out, &inline[i], &format!("{ctx} vs inline encode"));
+            }
+            let stats = svc.stats();
+            assert_eq!(stats.pre_encoded, ops.len() as u64, "{stats:?}");
+            assert_eq!(stats.inline_encoded, 0, "{stats:?}");
+            assert_eq!(stats.pre_encode_hit_rate(), 1.0);
+        }
+    }
+    // The sync facade itself never publishes slots: the comparator ops
+    // went through BatchGemm::run and must all still be slot-free.
+    assert!(inline_ops.iter().all(|op| !op.is_pre_encoded()));
+}
+
 /// Submitting the same ops in a different order yields the same bits
 /// per op — admission order is a scheduling detail, not a numeric one.
 #[test]
