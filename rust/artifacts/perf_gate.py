@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Perf gate: fail CI when a bench-of-record regresses vs the promoted
+artifact.
+
+Usage:
+    python3 rust/artifacts/perf_gate.py <fresh BENCH_gemm.json> <promoted BENCH_gemm.json>
+
+Compares ``mean_ns`` of every bench of record present in both files and
+exits non-zero if any fresh mean is more than ``THRESHOLD`` times the
+promoted mean. While the promoted artifact is still the
+pending-toolchain placeholder the gate skips with a notice instead of
+passing vacuously -- promoting a measured run (artifacts/promote.sh)
+arms it.
+
+The 15% threshold is deliberately loose: CI runners are heterogeneous
+and the bench budget is trimmed (REPRO_BENCH_BUDGET_MS), so the gate is
+a tripwire for order-of-magnitude mistakes (a dispatch change that
+routes large GEMMs to the scalar kernel, an encode path that stopped
+being nibble-direct), not a microbenchmark referee.
+"""
+
+import json
+import sys
+
+THRESHOLD = 1.15
+
+# Fallback list for promoted artifacts that predate the
+# ``benches_of_record`` key; kept in sync with the placeholder in
+# artifacts/BENCH_gemm.json.
+BENCHES_OF_RECORD = [
+    "hbfp_gemm SCALAR 512^3 m=4 b=64 (MACs)",
+    "hbfp_gemm PACKED 512^3 m=4 b=64 (MACs)",
+    "BfpMatrix::gemm PACKED pre-encoded 512^3 (MACs)",
+    "encode_into 1024x1024 m=4 b=64 nibble-direct (f32)",
+    "encode_into 1024x1024 m=6 b=64 i8 writer (f32)",
+    "encode_transposed 1024x256 m=4 b=64 nibble-direct (f32)",
+    "encode_transposed 1024x256 m=6 b=64 i8 writer (f32)",
+    "BatchGemm 64 heterogeneous ops (MACs)",
+    "sequential BatchGemm 1-op batches, same 64 ops (MACs)",
+    "sequential hbfp_gemm via service, same 64 ops (MACs)",
+]
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    fresh = json.load(open(argv[1]))
+    promoted = json.load(open(argv[2]))
+
+    if promoted.get("status") == "pending-toolchain-run":
+        print(
+            "::notice::perf gate skipped: promoted BENCH_gemm.json is still the "
+            "pending-toolchain placeholder; promote a green run "
+            "(artifacts/promote.sh) to arm the gate"
+        )
+        return 0
+
+    record = promoted.get("benches_of_record") or BENCHES_OF_RECORD
+    fresh_by = {r["name"]: r for r in fresh.get("results", [])}
+    prom_by = {r["name"]: r for r in promoted.get("results", [])}
+
+    checked = 0
+    failures = []
+    for name in record:
+        f, p = fresh_by.get(name), prom_by.get(name)
+        if f is None or p is None:
+            where = "fresh" if f is None else "promoted"
+            print(
+                f"::warning::perf gate: bench of record {name!r} missing from "
+                f"the {where} artifact; skipped"
+            )
+            continue
+        ratio = f["mean_ns"] / p["mean_ns"]
+        checked += 1
+        verdict = "REGRESSION" if ratio > THRESHOLD else "ok"
+        print(
+            f"{verdict:10} {name}: {p['mean_ns']:.0f} -> {f['mean_ns']:.0f} ns "
+            f"({ratio:.2f}x)"
+        )
+        if ratio > THRESHOLD:
+            failures.append((name, ratio))
+
+    if checked == 0:
+        print(
+            "perf gate: no benches of record overlapped between the fresh and "
+            "promoted artifacts -- bench names drifted; update "
+            "benches_of_record when renaming a series",
+            file=sys.stderr,
+        )
+        return 1
+    if failures:
+        for name, ratio in failures:
+            print(
+                f"::error::perf regression: {name} is {ratio:.2f}x the promoted "
+                f"mean (threshold {THRESHOLD:.2f}x)"
+            )
+        return 1
+    print(f"perf gate passed: {checked} benches of record within {THRESHOLD:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

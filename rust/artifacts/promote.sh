@@ -3,28 +3,32 @@
 # pending-toolchain placeholders (open ROADMAP item).
 #
 # Usage:
-#   artifacts/promote.sh <BENCH_gemm.json> <BENCH_serve.json>
+#   artifacts/promote.sh <BENCH_gemm.json> <BENCH_serve.json> [autotune.json]
 #
-# Download both artifacts from a green CI run (`BENCH_gemm` and
-# `BENCH_serve` of the `rust` job), then run this from `rust/`. The
-# script validates that each file is a real measured run (not a
-# placeholder, required keys present, pre-encode counters live) before
-# copying it over the checked-in placeholder.
+# Download the artifacts from a green CI run (`BENCH_gemm`,
+# `BENCH_serve`, and optionally `autotune` of the `rust` job), then run
+# this from `rust/`. The script validates that each file is a real
+# measured run (not a placeholder, required keys present, pre-encode
+# counters live, executed-kernel accounting consistent) before copying
+# it over the checked-in placeholder. The autotune table additionally
+# has its `boosters-autotune-v1` schema checked entry-by-entry so a
+# malformed table can never be promoted into the registry's load path.
 set -eu
 
-if [ "$#" -ne 2 ]; then
-    echo "usage: $0 <BENCH_gemm.json> <BENCH_serve.json>" >&2
+if [ "$#" -lt 2 ] || [ "$#" -gt 3 ]; then
+    echo "usage: $0 <BENCH_gemm.json> <BENCH_serve.json> [autotune.json]" >&2
     exit 2
 fi
 
 here="$(dirname "$0")"
 
-python3 - "$1" "$2" <<'EOF'
+python3 - "$@" <<'EOF'
 import json
 import sys
 
 gemm = json.load(open(sys.argv[1]))
 serve = json.load(open(sys.argv[2]))
+tune = json.load(open(sys.argv[3])) if len(sys.argv) > 3 else None
 
 def fail(msg):
     sys.exit(f"refusing to promote: {msg}")
@@ -47,11 +51,45 @@ if serve.get("mode") != "async":
     fail("BENCH_serve must come from the --async smoke (mode != async)")
 if not serve["pre_encoded_ops"]:
     fail("BENCH_serve reports zero pre-encoded ops — pipeline not live")
+kops = serve.get("kernel_ops")
+if not isinstance(kops, list) or not kops:
+    fail("BENCH_serve has no kernel_ops series (old serve-sim binary?)")
+if sum(e.get("ops", 0) for e in kops) != serve.get("completed"):
+    fail("BENCH_serve kernel_ops do not sum to completed ops")
 
-print("both artifacts are measured runs with live pipeline counters")
+if tune is not None:
+    if tune.get("status") == "pending-toolchain-run":
+        fail("autotune table is still a placeholder, not a measured run")
+    if tune.get("schema") != "boosters-autotune-v1":
+        fail(f"autotune schema {tune.get('schema')!r} != 'boosters-autotune-v1'")
+    entries = tune.get("entries")
+    if not isinstance(entries, list) or not entries:
+        fail("autotune table has no entries — run bench --autotune first")
+    layouts = {"i4x2", "i8", "i16"}
+    blocks = {"b16", "b64", "bwide"}
+    mnks = {"small", "medium", "large"}
+    for i, e in enumerate(entries):
+        for key in ("x", "w", "block_bucket", "mnk_bucket", "kernel"):
+            if key not in e:
+                fail(f"autotune entry {i} is missing {key!r}")
+        if e["x"] not in layouts or e["w"] not in layouts:
+            fail(f"autotune entry {i} has unknown layout {e['x']!r}/{e['w']!r}")
+        if e["block_bucket"] not in blocks:
+            fail(f"autotune entry {i} has unknown block bucket {e['block_bucket']!r}")
+        if e["mnk_bucket"] not in mnks:
+            fail(f"autotune entry {i} has unknown mnk bucket {e['mnk_bucket']!r}")
+        if not isinstance(e["kernel"], str) or not e["kernel"]:
+            fail(f"autotune entry {i} has an empty kernel name")
+
+print("all artifacts are measured runs with live pipeline counters")
 EOF
 
 cp "$1" "$here/BENCH_gemm.json"
 cp "$2" "$here/BENCH_serve.json"
-echo "promoted: $here/BENCH_gemm.json and $here/BENCH_serve.json"
+promoted="$here/BENCH_gemm.json and $here/BENCH_serve.json"
+if [ "$#" -eq 3 ]; then
+    cp "$3" "$here/autotune.json"
+    promoted="$promoted and $here/autotune.json"
+fi
+echo "promoted: $promoted"
 echo "commit them to close the ROADMAP artifact-promotion item"

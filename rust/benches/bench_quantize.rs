@@ -3,14 +3,24 @@
 //! the packed-vs-scalar GEMM comparison that gates the tensor-engine
 //! refactor (>= 4x on a 512^3 HBFP4 GEMM). This is the §Perf L3 surface
 //! — before/after numbers live in EXPERIMENTS.md.
+//!
+//! `-- --autotune [PATH]` runs the **autotune pass** instead of the
+//! suite: every registered kernel backend is timed on one
+//! representative GEMM per (plane-layout pair, block bucket, M×N×K
+//! bucket), and the fastest backend per bucket is written as the
+//! `boosters-autotune-v1` table (default `artifacts/autotune.json`)
+//! that the kernel registry's shape-aware dispatch loads at startup.
 
+use boosters::bfp::kernels::TableBuilder;
 use boosters::bfp::{
     bfp_dot_fixed_point, gemm_packed_with, hbfp_gemm, hbfp_gemm_scalar, quantize_flat,
-    quantize_packed_into, registry, BfpMatrix, BfpTensor, BlockFormat, Mat, Quantizer,
+    quantize_packed_into, registry, AutotuneTable, BfpMatrix, BfpTensor, BlockFormat, Mat,
+    Quantizer,
 };
 use boosters::exec::{BatchGemm, OwnedGemmOp};
-use boosters::util::bench::BenchSuite;
+use boosters::util::bench::{bench_fn, BenchSuite};
 use boosters::util::Rng;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 fn randn(n: usize, seed: u64) -> Vec<f32> {
@@ -18,7 +28,93 @@ fn randn(n: usize, seed: u64) -> Vec<f32> {
     (0..n).map(|_| r.normal_scaled(1.0)).collect()
 }
 
+/// `--autotune [PATH]` / `--autotune=PATH` from argv (scanned manually:
+/// cargo prepends its own flags to harness-false bench binaries). The
+/// path defaults to the registry's primary probe location.
+fn autotune_sink() -> Option<PathBuf> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--autotune" {
+            return Some(
+                args.next()
+                    .filter(|p| !p.starts_with("--"))
+                    .map(PathBuf::from)
+                    .unwrap_or_else(|| PathBuf::from("artifacts/autotune.json")),
+            );
+        }
+        if let Some(rest) = a.strip_prefix("--autotune=") {
+            return Some(PathBuf::from(rest));
+        }
+    }
+    None
+}
+
+/// Time every registered backend on one representative shape per
+/// dispatch bucket and persist the fastest-per-bucket table. Bucket
+/// coverage: blocks 16 (`b16`) and 64 (`b64`) x shapes 48^3 (`small`),
+/// 96^3 (`medium`), 320^3 (`large`); `bwide` blocks always run scalar
+/// (i32-overflow gate), so tuning them buys nothing.
+fn run_autotune(path: &std::path::Path) {
+    let budget_ms = std::env::var("REPRO_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(120.0);
+    println!("### autotune pass: registered kernels per (layout pair, block, shape) bucket");
+    let shapes = [(48usize, 48usize, 48usize), (96, 96, 96), (320, 320, 320)];
+    let fmts = [
+        BlockFormat::new(4, 64).unwrap(),
+        BlockFormat::new(6, 64).unwrap(),
+        BlockFormat::new(4, 16).unwrap(),
+    ];
+    let mut builder = TableBuilder::new();
+    for fmt in fmts {
+        let q = Quantizer::nearest(fmt.mantissa_bits);
+        let layout = fmt.plane_layout();
+        for (m, n, k) in shapes {
+            let xp = BfpMatrix::encode(&randn(m * k, 11), m, k, fmt, q).unwrap();
+            let wm = Mat::new(k, n, randn(k * n, 13)).unwrap();
+            let wp = BfpMatrix::encode_transposed(&wm, fmt, q).unwrap();
+            for kernel in registry().all() {
+                if !kernel.supports(layout, layout, fmt.block_size) {
+                    continue;
+                }
+                let r = bench_fn(
+                    &format!(
+                        "{m}x{n}x{k} m={} b={} kernel={}",
+                        fmt.mantissa_bits,
+                        fmt.block_size,
+                        kernel.name()
+                    ),
+                    budget_ms,
+                    Some((m * n * k) as f64),
+                    || {
+                        std::hint::black_box(gemm_packed_with(&xp, &wp, *kernel, None).unwrap());
+                    },
+                );
+                println!("{}", r.report());
+                builder.record(layout, layout, fmt.block_size, (m, n, k), kernel.name(), r.mean_ns);
+            }
+        }
+    }
+    let mut text = builder.to_json().render();
+    text.push('\n');
+    // Round-trip through the loader before writing: an artifact the
+    // registry cannot parse must fail the pass, not poison startup.
+    let table = AutotuneTable::parse(&text).expect("autotune artifact must parse");
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).expect("create autotune artifact dir");
+        }
+    }
+    std::fs::write(path, &text).expect("write autotune artifact");
+    println!("### autotune: wrote {} bucket entries to {}", table.len(), path.display());
+}
+
 fn main() {
+    if let Some(path) = autotune_sink() {
+        run_autotune(&path);
+        return;
+    }
     let mut suite = BenchSuite::new("bfp quantizer + packed tensor engine hot path");
     let x = randn(1 << 20, 1); // 1M elements ≈ a large conv layer
     let n = x.len() as f64;

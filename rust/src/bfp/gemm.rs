@@ -13,11 +13,12 @@
 //!
 //! * [`gemm_packed`] validates operand geometry, hoists the per-block
 //!   decode scale shifts ([`band_shifts`]), picks the kernel for the
-//!   operand pair via [`super::kernels::active_kernel`] (dispatch is
-//!   per [`super::packed::PlaneLayout`] pair — nibble-packed 4-bit
-//!   operands get a nibble-consuming inner loop, not an unpack pass),
-//!   and splits the output over whole activation rows into contiguous
-//!   bands;
+//!   operand pair and problem shape via
+//!   [`super::kernels::active_kernel`] (dispatch is per
+//!   [`super::packed::PlaneLayout`] pair plus an M×N×K bucket when an
+//!   autotune table is loaded — nibble-packed 4-bit operands get a
+//!   nibble-consuming inner loop, not an unpack pass), and splits the
+//!   output over whole activation rows into contiguous bands;
 //! * bands run as work items on the persistent [`crate::exec`] worker
 //!   pool (sized by [`crate::util::gemm_thread_budget`]) — no per-call
 //!   thread spawn. Each output element is accumulated by exactly one
@@ -27,8 +28,10 @@
 //!   property suites pin this per backend.
 //!
 //! Kernel selection is overridable with `BOOSTERS_KERNEL`
-//! (`auto`/`scalar`/`autovec`/`avx2`, see
-//! [`crate::util::kernel_override`]); unsupported requests fall back
+//! (`auto`/`scalar`/`autovec`/`avx2`/`avx512`/`neon`, see
+//! [`crate::util::kernel_override`]) and, under `auto`, steered by the
+//! host's autotune table (`BOOSTERS_AUTOTUNE`, see
+//! [`super::kernels::autotune`]); unsupported requests fall back
 //! loudly, never panic, and can never change numerics. Above this
 //! module, batch-level consumers enter through the asynchronous
 //! [`crate::exec::BfpService`] front door (single-op helpers like
@@ -42,7 +45,9 @@ use super::packed::BfpMatrix;
 use crate::exec::pool::Job;
 use anyhow::{bail, Result};
 
-pub use super::kernels::{active_kernel, registry, BandTask, GemmKernel, ScalarTiledKernel};
+pub use super::kernels::{
+    active_kernel, registry, BandTask, GemmKernel, GemmShape, ScalarTiledKernel,
+};
 
 /// Below this many MACs, dispatch overhead dominates; stay serial.
 /// Shared with the batch scheduler's whole-batch heuristic.
@@ -80,6 +85,7 @@ pub fn gemm_packed(x: &BfpMatrix, rhs_t: &BfpMatrix) -> Result<Mat> {
         x.mantissas.layout(),
         rhs_t.mantissas.layout(),
         x.fmt.block_size,
+        GemmShape::new(x.rows, rhs_t.rows, x.cols),
     );
     gemm_packed_inner(x, rhs_t, kernel, None)
 }
@@ -316,7 +322,7 @@ mod tests {
         assert!(err.to_string().contains("i16"), "{err}");
         // Wide planes always dispatch to the scalar backend — the only
         // kernel that supports them.
-        let k = active_kernel(PlaneLayout::I16, PlaneLayout::I16, 16);
+        let k = active_kernel(PlaneLayout::I16, PlaneLayout::I16, 16, GemmShape::new(2, 2, 16));
         assert!(k.name().contains("scalar"), "{}", k.name());
     }
 

@@ -1,0 +1,436 @@
+//! Shape-aware kernel autotune table — the middle dispatch tier.
+//!
+//! The registry picks a backend per GEMM in three tiers (see the
+//! [`super`] module docs): a forced `BOOSTERS_KERNEL` override, then
+//! this table, then the static preference order. The table maps a
+//! coarse problem key — operand plane-layout pair, block-size bucket,
+//! and an M×N×K volume bucket — to the backend name that measured
+//! fastest on this host. It is produced by the
+//! `bench_quantize --autotune` pass and persisted as a JSON artifact
+//! under `rust/artifacts/`.
+//!
+//! # JSON schema (`boosters-autotune-v1`)
+//!
+//! ```json
+//! {
+//!   "schema": "boosters-autotune-v1",
+//!   "entries": [
+//!     {
+//!       "x": "i4x2", "w": "i4x2",
+//!       "block_bucket": "b64", "mnk_bucket": "small",
+//!       "kernel": "avx2-widening",
+//!       "block": 64, "shape": [48, 48, 48], "mean_ns": 20480.0
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! Required per entry: `x` / `w` (plane-layout labels `i4x2`, `i8`,
+//! `i16`), `block_bucket` (one of [`BLOCK_BUCKETS`]), `mnk_bucket`
+//! (one of [`MNK_BUCKETS`]), and `kernel` (a registry backend name).
+//! `block`, `shape`, and `mean_ns` are provenance, ignored by the
+//! loader. A table whose `kernel` is not registered (or does not
+//! support the pair) on the loading host simply falls through to the
+//! static tier at lookup time — tables are portable hints, not
+//! commands. Missing/corrupt files fall back to static dispatch with
+//! one warning; an absent default artifact is silent.
+
+use std::collections::HashMap;
+
+use crate::bfp::packed::PlaneLayout;
+use crate::util::Json;
+
+/// M×N×K volume buckets (by total MAC count `m*n*k`): `small`
+/// < 2^18, `medium` < 2^24, `large` otherwise. Coarse on purpose —
+/// the table stays a handful of entries and a lookup never misses
+/// merely because a shape was not benchmarked exactly.
+pub const MNK_BUCKETS: [&str; 3] = ["small", "medium", "large"];
+
+/// Block-size buckets: `b16` (<= 16), `b64` (17..=128), `bwide`
+/// (> 128). Wide blocks overflow i32 accumulators in the narrow SIMD
+/// backends and always run scalar, so finer resolution buys nothing.
+pub const BLOCK_BUCKETS: [&str; 3] = ["b16", "b64", "bwide"];
+
+/// Index into [`MNK_BUCKETS`] for a GEMM of `m x k` by `k x n`.
+pub fn mnk_bucket_index(m: usize, n: usize, k: usize) -> usize {
+    let macs = (m as u64).saturating_mul(n as u64).saturating_mul(k as u64);
+    if macs < 1 << 18 {
+        0
+    } else if macs < 1 << 24 {
+        1
+    } else {
+        2
+    }
+}
+
+/// Index into [`BLOCK_BUCKETS`] for an HBFP block size.
+pub fn block_bucket_index(block: usize) -> usize {
+    if block <= 16 {
+        0
+    } else if block <= 128 {
+        1
+    } else {
+        2
+    }
+}
+
+/// The output-shape half of a dispatch key: `m x k` activations
+/// against `k x n` (pre-transposed) weights. Carried alongside the
+/// operand layouts so [`super::active_kernel`] can bucket the problem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmShape {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, n: usize, k: usize) -> Self {
+        Self { m, n, k }
+    }
+    pub fn mnk_bucket(self) -> usize {
+        mnk_bucket_index(self.m, self.n, self.k)
+    }
+}
+
+type Key = (PlaneLayout, PlaneLayout, usize, usize);
+
+fn layout_from_label(label: &str) -> Result<PlaneLayout, String> {
+    match label {
+        "i4x2" => Ok(PlaneLayout::I4Packed),
+        "i8" => Ok(PlaneLayout::I8),
+        "i16" => Ok(PlaneLayout::I16),
+        other => Err(format!("unknown plane-layout label {other:?}")),
+    }
+}
+
+fn bucket_from_label(label: &str, names: &[&'static str]) -> Result<usize, String> {
+    names
+        .iter()
+        .position(|&n| n == label)
+        .ok_or_else(|| format!("unknown bucket label {label:?} (expected one of {names:?})"))
+}
+
+/// A parsed autotune table: dispatch key -> preferred backend name.
+#[derive(Debug, Clone, Default)]
+pub struct AutotuneTable {
+    entries: HashMap<Key, String>,
+}
+
+impl AutotuneTable {
+    /// Parse the `boosters-autotune-v1` JSON text. Any structural
+    /// problem is an error — the caller decides whether that warrants
+    /// a warning (explicit `BOOSTERS_AUTOTUNE` path) or silence.
+    pub fn parse(text: &str) -> Result<AutotuneTable, String> {
+        let root = Json::parse(text).map_err(|e| format!("not valid JSON: {e}"))?;
+        let schema = root
+            .req("schema")
+            .and_then(|s| s.as_str().map(str::to_string))
+            .map_err(|e| e.to_string())?;
+        if schema != "boosters-autotune-v1" {
+            return Err(format!("unsupported autotune schema {schema:?}"));
+        }
+        let raw = root
+            .req("entries")
+            .and_then(|e| e.as_arr().map(<[Json]>::to_vec))
+            .map_err(|e| e.to_string())?;
+        let mut entries = HashMap::new();
+        for (i, e) in raw.iter().enumerate() {
+            let field = |key: &str| -> Result<String, String> {
+                e.req(key)
+                    .and_then(|v| v.as_str().map(str::to_string))
+                    .map_err(|err| format!("entry {i}: {err}"))
+            };
+            let x = layout_from_label(&field("x")?).map_err(|err| format!("entry {i}: {err}"))?;
+            let w = layout_from_label(&field("w")?).map_err(|err| format!("entry {i}: {err}"))?;
+            let bb = bucket_from_label(&field("block_bucket")?, &BLOCK_BUCKETS)
+                .map_err(|err| format!("entry {i}: {err}"))?;
+            let mb = bucket_from_label(&field("mnk_bucket")?, &MNK_BUCKETS)
+                .map_err(|err| format!("entry {i}: {err}"))?;
+            entries.insert((x, w, bb, mb), field("kernel")?);
+        }
+        Ok(AutotuneTable { entries })
+    }
+
+    /// Backend name tuned for this dispatch key, if any.
+    pub fn lookup(
+        &self,
+        x: PlaneLayout,
+        w: PlaneLayout,
+        block: usize,
+        shape: GemmShape,
+    ) -> Option<&str> {
+        self.entries
+            .get(&(x, w, block_bucket_index(block), shape.mnk_bucket()))
+            .map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Load the table the registry should consult, resolving
+/// `BOOSTERS_AUTOTUNE` first and the default artifact paths second.
+/// Every failure mode degrades to static dispatch; only an explicitly
+/// named or present-but-corrupt file warns (once).
+pub(crate) fn load() -> Option<AutotuneTable> {
+    fn read_parse(path: &std::path::Path) -> Result<AutotuneTable, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        AutotuneTable::parse(&text)
+    }
+    fn warn_once(path: &std::path::Path, err: &str) {
+        static WARNED: std::sync::Once = std::sync::Once::new();
+        WARNED.call_once(|| {
+            eprintln!(
+                "[boosters] autotune table {}: {err}; falling back to static kernel dispatch",
+                path.display()
+            );
+        });
+    }
+    if let Some(path) = crate::util::autotune_path() {
+        return match read_parse(&path) {
+            Ok(t) => Some(t),
+            Err(err) => {
+                warn_once(&path, &err);
+                None
+            }
+        };
+    }
+    // Probe relative to both plausible working directories: cargo runs
+    // test/bench binaries from the package root (`rust/`), the repro
+    // binary usually runs from the repo root.
+    for cand in ["artifacts/autotune.json", "rust/artifacts/autotune.json"] {
+        let path = std::path::Path::new(cand);
+        if path.is_file() {
+            return match read_parse(path) {
+                Ok(t) => Some(t),
+                Err(err) => {
+                    warn_once(path, &err);
+                    None
+                }
+            };
+        }
+    }
+    None
+}
+
+/// Builder used by the `bench_quantize --autotune` pass: feed it one
+/// timing per (key, kernel) and it keeps the fastest backend per key.
+#[derive(Debug, Default)]
+pub struct TableBuilder {
+    best: HashMap<Key, Best>,
+}
+
+#[derive(Debug)]
+struct Best {
+    kernel: String,
+    mean_ns: f64,
+    block: usize,
+    shape: (usize, usize, usize),
+}
+
+impl TableBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(
+        &mut self,
+        x: PlaneLayout,
+        w: PlaneLayout,
+        block: usize,
+        shape: (usize, usize, usize),
+        kernel: &str,
+        mean_ns: f64,
+    ) {
+        let key = (x, w, block_bucket_index(block), mnk_bucket_index(shape.0, shape.1, shape.2));
+        let cand = Best { kernel: kernel.to_string(), mean_ns, block, shape };
+        match self.best.get(&key) {
+            Some(cur) if cur.mean_ns <= mean_ns => {}
+            _ => {
+                self.best.insert(key, cand);
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.best.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.best.is_empty()
+    }
+
+    /// Render the `boosters-autotune-v1` document (entries in a
+    /// deterministic key order so the artifact diffs cleanly).
+    pub fn to_json(&self) -> Json {
+        let mut keys: Vec<&Key> = self.best.keys().collect();
+        keys.sort_by_key(|(x, w, bb, mb)| (x.label(), w.label(), *bb, *mb));
+        let entries = keys.into_iter().map(|key| {
+            let (x, w, bb, mb) = key;
+            let b = &self.best[key];
+            Json::obj(vec![
+                ("x", Json::str(x.label())),
+                ("w", Json::str(w.label())),
+                ("block_bucket", Json::str(BLOCK_BUCKETS[*bb])),
+                ("mnk_bucket", Json::str(MNK_BUCKETS[*mb])),
+                ("kernel", Json::str(b.kernel.as_str())),
+                ("block", Json::num(b.block as f64)),
+                (
+                    "shape",
+                    Json::arr([
+                        Json::num(b.shape.0 as f64),
+                        Json::num(b.shape.1 as f64),
+                        Json::num(b.shape.2 as f64),
+                    ]),
+                ),
+                ("mean_ns", Json::num(b.mean_ns)),
+            ])
+        });
+        Json::obj(vec![
+            ("schema", Json::str("boosters-autotune-v1")),
+            ("entries", Json::arr(entries)),
+        ])
+    }
+}
+
+/// Per-(backend, M×N×K bucket) counts of executed GEMM ops — the
+/// "which kernel actually ran" accounting surfaced through
+/// `ServiceStats` and the serve-sim `--json` artifact. Fixed-size so
+/// it stays `Copy` alongside the other stats structs; slots are
+/// assigned to backend names on first use.
+pub const MAX_BACKENDS: usize = 6;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct KernelOpCounts {
+    names: [Option<&'static str>; MAX_BACKENDS],
+    counts: [[u64; 3]; MAX_BACKENDS],
+}
+
+impl KernelOpCounts {
+    pub fn record(&mut self, kernel: &'static str, mnk_bucket: usize) {
+        let b = mnk_bucket.min(MNK_BUCKETS.len() - 1);
+        for i in 0..MAX_BACKENDS {
+            match self.names[i] {
+                Some(n) if n == kernel => {
+                    self.counts[i][b] += 1;
+                    return;
+                }
+                None => {
+                    self.names[i] = Some(kernel);
+                    self.counts[i][b] += 1;
+                    return;
+                }
+                _ => {}
+            }
+        }
+        // More distinct backends than slots cannot happen with the
+        // compiled-in set; if it ever does, keep the op counted.
+        self.counts[MAX_BACKENDS - 1][b] += 1;
+    }
+
+    pub fn merge(&mut self, other: &KernelOpCounts) {
+        for (kernel, bucket, n) in other.entries() {
+            let b = MNK_BUCKETS.iter().position(|&l| l == bucket).unwrap_or(0);
+            for _ in 0..n {
+                self.record(kernel, b);
+            }
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().flatten().sum()
+    }
+
+    /// Non-zero `(backend name, bucket label, ops)` triples.
+    pub fn entries(&self) -> Vec<(&'static str, &'static str, u64)> {
+        let mut out = Vec::new();
+        for (i, name) in self.names.iter().enumerate() {
+            let Some(name) = name else { continue };
+            for (b, &n) in self.counts[i].iter().enumerate() {
+                if n > 0 {
+                    out.push((*name, MNK_BUCKETS[b], n));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_partition_the_problem_space() {
+        assert_eq!(mnk_bucket_index(48, 48, 48), 0);
+        assert_eq!(mnk_bucket_index(96, 96, 96), 1);
+        assert_eq!(mnk_bucket_index(512, 512, 512), 2);
+        assert_eq!(block_bucket_index(16), 0);
+        assert_eq!(block_bucket_index(64), 1);
+        assert_eq!(block_bucket_index(576), 2);
+        assert_eq!(MNK_BUCKETS.len(), 3);
+        assert_eq!(BLOCK_BUCKETS.len(), 3);
+    }
+
+    #[test]
+    fn builder_keeps_the_fastest_backend_and_round_trips() {
+        let mut b = TableBuilder::new();
+        let (x, w) = (PlaneLayout::I4Packed, PlaneLayout::I4Packed);
+        b.record(x, w, 64, (48, 48, 48), "scalar-tiled", 900.0);
+        b.record(x, w, 64, (48, 48, 48), "autovec", 300.0);
+        b.record(x, w, 64, (48, 48, 48), "avx2-widening", 500.0);
+        b.record(PlaneLayout::I8, PlaneLayout::I8, 16, (512, 512, 512), "autovec", 1.0);
+        assert_eq!(b.len(), 2);
+        let text = b.to_json().render();
+        let table = AutotuneTable::parse(&text).expect("round-trip");
+        assert_eq!(table.len(), 2);
+        // Fastest wins; lookup is by bucket, so a different small shape
+        // with the same block bucket still hits.
+        assert_eq!(table.lookup(x, w, 64, GemmShape::new(32, 40, 56)), Some("autovec"));
+        assert_eq!(
+            table.lookup(PlaneLayout::I8, PlaneLayout::I8, 16, GemmShape::new(512, 512, 512)),
+            Some("autovec")
+        );
+        // Misses: unknown bucket combination.
+        assert_eq!(table.lookup(x, w, 576, GemmShape::new(48, 48, 48)), None);
+    }
+
+    #[test]
+    fn corrupt_tables_are_typed_errors() {
+        assert!(AutotuneTable::parse("{ nope").is_err());
+        assert!(AutotuneTable::parse("{\"schema\": \"v0\", \"entries\": []}").is_err());
+        let bad_layout = r#"{"schema": "boosters-autotune-v1", "entries": [
+            {"x": "i5", "w": "i8", "block_bucket": "b64", "mnk_bucket": "small",
+             "kernel": "scalar-tiled"}]}"#;
+        assert!(AutotuneTable::parse(bad_layout).is_err());
+        let bad_bucket = r#"{"schema": "boosters-autotune-v1", "entries": [
+            {"x": "i8", "w": "i8", "block_bucket": "b65", "mnk_bucket": "small",
+             "kernel": "scalar-tiled"}]}"#;
+        assert!(AutotuneTable::parse(bad_bucket).is_err());
+        // An empty-entries placeholder parses fine and matches nothing.
+        let empty = r#"{"schema": "boosters-autotune-v1",
+            "status": "pending-toolchain-run", "entries": []}"#;
+        let t = AutotuneTable::parse(empty).expect("placeholder parses");
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn op_counts_accumulate_per_backend_and_bucket() {
+        let mut c = KernelOpCounts::default();
+        c.record("scalar-tiled", 0);
+        c.record("scalar-tiled", 0);
+        c.record("autovec", 2);
+        assert_eq!(c.total(), 3);
+        let mut d = KernelOpCounts::default();
+        d.record("autovec", 2);
+        d.merge(&c);
+        assert_eq!(d.total(), 4);
+        let entries = d.entries();
+        assert!(entries.contains(&("scalar-tiled", "small", 2)));
+        assert!(entries.contains(&("autovec", "large", 2)));
+    }
+}

@@ -1,0 +1,358 @@
+//! Explicit AVX-512 backend (x86_64 only): 512-bit widening integer
+//! MACs over narrow planes, using VNNI's fused `vpdpwssd` where the
+//! host has it and `vpmaddwd`+`vpaddd` otherwise.
+//!
+//! Registered by the kernel registry only when
+//! `is_x86_feature_detected!("avx512f")` and `("avx512bw")` hold;
+//! `run_band` re-checks and falls back to the scalar kernel (loudly,
+//! in debug builds) if it is ever dispatched on a host without them,
+//! so the unsafe `#[target_feature]` calls below are never reached
+//! undetected. The VNNI path is a second runtime gate inside the
+//! kernel: `avx512vnni` swaps the two-instruction widen-MAC for the
+//! fused `_mm512_dpwssd_epi32` — both compute the identical exact
+//! integer sum, so the gate never changes results, only throughput.
+//!
+//! # Exactness = bit-identity
+//!
+//! Identical argument to the AVX2 backend, with wider vectors: i8 (or
+//! sign-extended nibble) values widen to i16 lanes; `vpmaddwd` /
+//! `vpdpwssd` pair-products fit i32 lanes, and for blocks up to
+//! [`MAX_I32_BLOCK`] the per-lane accumulators provably cannot wrap
+//! (`2^11` steps x `2^15` per pair-sum < `2^27`). Integer addition is
+//! associative, so lane-parallel sums equal the scalar kernel's
+//! sequential sums bit-for-bit once combined; the shared tiled band
+//! loop fixes the f64 combination order. Oversized blocks (which need
+//! i64 accumulation) delegate to the scalar kernel.
+//!
+//! Nibble-packed operands are consumed directly from the byte stream:
+//! 32 packed bytes (64 values) per step, sign-extended in 256-bit
+//! registers via `((b & 0xF) ^ 8) - 8` and widened to two 512-bit
+//! i16 vectors — no unpack buffer.
+
+use super::{run_tiled_band, BandTask, BlockDot, GemmKernel, MAX_I32_BLOCK};
+use crate::bfp::packed::{nib_hi, nib_lo, MantissaPlane, PlaneLayout};
+use std::arch::x86_64::*;
+
+/// The runtime-detected AVX-512/VNNI kernel (see module docs).
+pub struct Avx512Kernel;
+
+/// Both 512-bit base features the kernel needs: `avx512f` for the
+/// vector arithmetic, `avx512bw` for byte/word widening.
+pub(crate) fn avx512_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx512f")
+        && std::arch::is_x86_feature_detected!("avx512bw")
+}
+
+/// Horizontal sum of sixteen i32 lanes.
+#[inline]
+#[target_feature(enable = "avx512f")]
+unsafe fn hsum_epi32_512(v: __m512i) -> i32 {
+    let s = _mm256_add_epi32(_mm512_castsi512_si256(v), _mm512_extracti64x4_epi64::<1>(v));
+    let s = _mm_add_epi32(_mm256_castsi256_si128(s), _mm256_extracti128_si256::<1>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b01_00_11_10>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b10_11_00_01>(s));
+    _mm_cvtsi128_si32(s)
+}
+
+/// Widen one 32-element i8 load to 32 i16 lanes.
+#[inline]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn load_i8x32(s: &[i8], i: usize) -> __m512i {
+    _mm512_cvtepi8_epi16(_mm256_loadu_si256(s.as_ptr().add(i) as *const __m256i))
+}
+
+/// Sign-extend the low/high nibbles of 32 packed bytes and widen each
+/// set to 32 i16 lanes.
+#[inline]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn nib_lanes_512(b: __m256i, lo_mask: __m256i, bias: __m256i) -> (__m512i, __m512i) {
+    let lo = _mm256_sub_epi8(_mm256_xor_si256(_mm256_and_si256(b, lo_mask), bias), bias);
+    let hi = _mm256_sub_epi8(
+        _mm256_xor_si256(_mm256_and_si256(_mm256_srli_epi16::<4>(b), lo_mask), bias),
+        bias,
+    );
+    (_mm512_cvtepi8_epi16(lo), _mm512_cvtepi8_epi16(hi))
+}
+
+/// Two-instruction widen-MAC: pair-products into i32 lanes, then add.
+#[inline]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn mac_madd(acc: __m512i, x: __m512i, y: __m512i) -> __m512i {
+    _mm512_add_epi32(acc, _mm512_madd_epi16(x, y))
+}
+
+/// VNNI fused widen-MAC — same exact i32 result as [`mac_madd`].
+#[inline]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+unsafe fn mac_vnni(acc: __m512i, x: __m512i, y: __m512i) -> __m512i {
+    _mm512_dpwssd_epi32(acc, x, y)
+}
+
+/// Generate the four inner-dot entry points for one MAC flavor. The
+/// madd and VNNI instantiations are bit-identical by construction;
+/// only the instruction sequence differs.
+macro_rules! define_avx512_dots {
+    ($feat:literal, $mac:ident, $dot_i8:ident, $dot4_i8:ident, $dot_nib:ident,
+     $dot4_nib:ident) => {
+        #[target_feature(enable = $feat)]
+        unsafe fn $dot_i8(a: &[i8], w: &[i8]) -> i32 {
+            let n = a.len();
+            let mut acc = _mm512_setzero_si512();
+            let mut i = 0;
+            while i + 32 <= n {
+                acc = $mac(acc, load_i8x32(a, i), load_i8x32(w, i));
+                i += 32;
+            }
+            let mut sum = hsum_epi32_512(acc);
+            while i < n {
+                sum += a[i] as i32 * w[i] as i32;
+                i += 1;
+            }
+            sum
+        }
+
+        /// Register-blocked form: one activation stream against four
+        /// weight streams, four accumulator vectors live.
+        #[target_feature(enable = $feat)]
+        unsafe fn $dot4_i8(a: &[i8], ws: [&[i8]; 4]) -> [i32; 4] {
+            let n = a.len();
+            let mut acc = [_mm512_setzero_si512(); 4];
+            let mut i = 0;
+            while i + 32 <= n {
+                let va = load_i8x32(a, i);
+                for (q, w) in ws.iter().enumerate() {
+                    acc[q] = $mac(acc[q], va, load_i8x32(w, i));
+                }
+                i += 32;
+            }
+            let mut out = [0i32; 4];
+            for (o, acc) in out.iter_mut().zip(acc) {
+                *o = hsum_epi32_512(acc);
+            }
+            while i < n {
+                for (o, w) in out.iter_mut().zip(&ws) {
+                    *o += a[i] as i32 * w[i] as i32;
+                }
+                i += 1;
+            }
+            out
+        }
+
+        /// Nibble x nibble dot over packed byte streams (`nb` bytes =
+        /// `2 * nb` values): lo nibbles pair with lo (value `2j`), hi
+        /// with hi (`2j + 1`).
+        #[target_feature(enable = $feat)]
+        unsafe fn $dot_nib(a: &[u8], w: &[u8]) -> i32 {
+            let nb = a.len();
+            let lo_mask = _mm256_set1_epi8(0x0F);
+            let bias = _mm256_set1_epi8(0x08);
+            let mut acc = _mm512_setzero_si512();
+            let mut i = 0;
+            while i + 32 <= nb {
+                let ba = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+                let bw = _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i);
+                let (la, ha) = nib_lanes_512(ba, lo_mask, bias);
+                let (lw, hw) = nib_lanes_512(bw, lo_mask, bias);
+                acc = $mac(acc, la, lw);
+                acc = $mac(acc, ha, hw);
+                i += 32;
+            }
+            let mut sum = hsum_epi32_512(acc);
+            while i < nb {
+                sum += nib_lo(a[i]) as i32 * nib_lo(w[i]) as i32
+                    + nib_hi(a[i]) as i32 * nib_hi(w[i]) as i32;
+                i += 1;
+            }
+            sum
+        }
+
+        /// Register-blocked nibble dot: activation nibbles extract once
+        /// per step against four packed weight streams.
+        #[target_feature(enable = $feat)]
+        unsafe fn $dot4_nib(a: &[u8], ws: [&[u8]; 4]) -> [i32; 4] {
+            let nb = a.len();
+            let lo_mask = _mm256_set1_epi8(0x0F);
+            let bias = _mm256_set1_epi8(0x08);
+            let mut acc = [_mm512_setzero_si512(); 4];
+            let mut i = 0;
+            while i + 32 <= nb {
+                let ba = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+                let (la, ha) = nib_lanes_512(ba, lo_mask, bias);
+                for (q, w) in ws.iter().enumerate() {
+                    let bw = _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i);
+                    let (lw, hw) = nib_lanes_512(bw, lo_mask, bias);
+                    acc[q] = $mac(acc[q], la, lw);
+                    acc[q] = $mac(acc[q], ha, hw);
+                }
+                i += 32;
+            }
+            let mut out = [0i32; 4];
+            for (o, acc) in out.iter_mut().zip(acc) {
+                *o = hsum_epi32_512(acc);
+            }
+            while i < nb {
+                for (o, w) in out.iter_mut().zip(&ws) {
+                    *o += nib_lo(a[i]) as i32 * nib_lo(w[i]) as i32
+                        + nib_hi(a[i]) as i32 * nib_hi(w[i]) as i32;
+                }
+                i += 1;
+            }
+            out
+        }
+    };
+}
+
+define_avx512_dots!(
+    "avx512f,avx512bw",
+    mac_madd,
+    dot_i8_madd,
+    dot4_i8_madd,
+    dot_nib_madd,
+    dot4_nib_madd
+);
+define_avx512_dots!(
+    "avx512f,avx512bw,avx512vnni",
+    mac_vnni,
+    dot_i8_vnni,
+    dot4_i8_vnni,
+    dot_nib_vnni,
+    dot4_nib_vnni
+);
+
+/// Plane-pair dispatcher; the `vnni` flag is sampled once per band.
+enum Avx512Dot<'a> {
+    I8I8(&'a [i8], &'a [i8], bool),
+    NibNib(&'a [u8], &'a [u8], bool),
+}
+
+impl BlockDot for Avx512Dot<'_> {
+    #[inline]
+    fn dot(&self, a_off: usize, w_off: usize, len: usize) -> i64 {
+        // Safety: `Avx512Kernel::run_band` verified avx512f/bw support
+        // (and the VNNI flag) before building this dispatcher.
+        match self {
+            Avx512Dot::I8I8(a, w, vnni) => unsafe {
+                let (a, w) = (&a[a_off..a_off + len], &w[w_off..w_off + len]);
+                if *vnni {
+                    dot_i8_vnni(a, w) as i64
+                } else {
+                    dot_i8_madd(a, w) as i64
+                }
+            },
+            Avx512Dot::NibNib(a, w, vnni) => unsafe {
+                let (a, w) = (&a[a_off / 2..(a_off + len) / 2], &w[w_off / 2..(w_off + len) / 2]);
+                if *vnni {
+                    dot_nib_vnni(a, w) as i64
+                } else {
+                    dot_nib_madd(a, w) as i64
+                }
+            },
+        }
+    }
+
+    /// Register-blocked form: the widened activation vector loads once
+    /// per step and MACs against four weight streams.
+    #[inline]
+    fn dot4(&self, a_off: usize, w_offs: [usize; 4], len: usize) -> [i64; 4] {
+        let [o0, o1, o2, o3] = w_offs;
+        // Safety: see `dot` — features were verified at dispatch.
+        let out = match self {
+            Avx512Dot::I8I8(a, w, vnni) => unsafe {
+                let a = &a[a_off..a_off + len];
+                let ws = [
+                    &w[o0..o0 + len],
+                    &w[o1..o1 + len],
+                    &w[o2..o2 + len],
+                    &w[o3..o3 + len],
+                ];
+                if *vnni {
+                    dot4_i8_vnni(a, ws)
+                } else {
+                    dot4_i8_madd(a, ws)
+                }
+            },
+            Avx512Dot::NibNib(a, w, vnni) => unsafe {
+                let a = &a[a_off / 2..(a_off + len) / 2];
+                let ws = [
+                    &w[o0 / 2..(o0 + len) / 2],
+                    &w[o1 / 2..(o1 + len) / 2],
+                    &w[o2 / 2..(o2 + len) / 2],
+                    &w[o3 / 2..(o3 + len) / 2],
+                ];
+                if *vnni {
+                    dot4_nib_vnni(a, ws)
+                } else {
+                    dot4_nib_madd(a, ws)
+                }
+            },
+        };
+        [out[0] as i64, out[1] as i64, out[2] as i64, out[3] as i64]
+    }
+}
+
+impl GemmKernel for Avx512Kernel {
+    fn name(&self) -> &'static str {
+        "avx512-vnni"
+    }
+
+    /// Support includes the runtime feature check (cheap — std caches
+    /// detection) and the i32-accumulator block bound, so a forced
+    /// `Avx512Kernel` on a host without AVX-512 — or on oversized
+    /// blocks — degrades down the registry's fallback chain like any
+    /// other unsupported combination.
+    fn supports(&self, x: PlaneLayout, w: PlaneLayout, block: usize) -> bool {
+        block <= MAX_I32_BLOCK
+            && avx512_available()
+            && matches!(
+                (x, w),
+                (PlaneLayout::I8, PlaneLayout::I8)
+                    | (PlaneLayout::I4Packed, PlaneLayout::I4Packed)
+            )
+    }
+
+    fn run_band(&self, t: BandTask<'_>) {
+        if !avx512_available()
+            || t.x.fmt.block_size > MAX_I32_BLOCK
+            || t.w.fmt.block_size > MAX_I32_BLOCK
+        {
+            // Oversized blocks need i64 accumulation; a missing-feature
+            // dispatch can only be reached by calling the kernel
+            // directly (the registry and `supports` both gate on
+            // detection) — either way, stay correct via the reference.
+            return super::ScalarTiledKernel.run_band(t);
+        }
+        let BandTask {
+            x,
+            w,
+            xsh,
+            wsh,
+            r0,
+            rows,
+            out,
+        } = t;
+        let n = w.rows;
+        let kb = x.blocks_per_row;
+        let b = x.fmt.block_size;
+        debug_assert_eq!(kb, w.blocks_per_row);
+        let vnni = std::arch::is_x86_feature_detected!("avx512vnni");
+        let d = match (&x.mantissas, &w.mantissas) {
+            (MantissaPlane::I8(a), MantissaPlane::I8(wm)) => Avx512Dot::I8I8(a, wm, vnni),
+            (MantissaPlane::I4Packed(a), MantissaPlane::I4Packed(wm)) => {
+                Avx512Dot::NibNib(a, wm, vnni)
+            }
+            _ => {
+                debug_assert!(false, "AVX-512 kernel dispatched an unsupported plane pair");
+                return super::ScalarTiledKernel.run_band(BandTask {
+                    x,
+                    w,
+                    xsh,
+                    wsh,
+                    r0,
+                    rows,
+                    out,
+                });
+            }
+        };
+        run_tiled_band(&d, xsh, wsh, r0, rows, n, kb, b, out)
+    }
+}

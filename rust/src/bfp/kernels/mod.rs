@@ -1,10 +1,6 @@
 //! GEMM kernel backends: the pluggable micro-kernel layer of the BFP
 //! stack.
 //!
-//! PR 1/2 put the band-level micro-kernel behind the [`GemmKernel`]
-//! trait with a single static implementation; this module turns that
-//! swap point into a real subsystem:
-//!
 //! * **Shared band loop** — [`run_tiled_band`] owns the cache-tiled,
 //!   register-blocked traversal (`TILE_J`-wide output strips, blocks
 //!   combined in ascending contraction order, one exact power-of-two
@@ -15,29 +11,61 @@
 //! * **Backends** — [`ScalarTiledKernel`] (portable reference, runs
 //!   every plane-layout pair), [`AutovecKernel`] (unrolled,
 //!   autovectorization-friendly `i8`/nibble loops for narrow planes),
-//!   and on x86_64 [`Avx2Kernel`] (explicit AVX2 widening MACs,
-//!   registered only when `is_x86_feature_detected!("avx2")` holds).
-//! * **Registry** — [`registry`] resolves the `BOOSTERS_KERNEL`
-//!   override ([`crate::util::kernel_override`]) plus runtime feature
-//!   detection once per process. [`active_kernel`] dispatches per
-//!   operand pair: the preferred backend where it supports the
-//!   [`PlaneLayout`] pair, falling down the preference chain to the
-//!   scalar kernel otherwise. Requesting `avx2` on a host without it
-//!   warns loudly and falls back — never panics, never changes bits.
+//!   on x86_64 [`Avx2Kernel`] (explicit AVX2 widening MACs) and
+//!   [`Avx512Kernel`] (512-bit VNNI `vpdpwssd` where available, with
+//!   an exact `vpmaddwd` twin), and on aarch64 [`NeonKernel`]
+//!   (`smull`/`sdot` lanes). SIMD backends register only when runtime
+//!   feature detection passes.
+//!
+//! # Dispatch: three tiers
+//!
+//! [`active_kernel`]`(x, w, block, shape)` resolves every GEMM's
+//! backend through the process-wide [`registry`], in strict priority
+//! order:
+//!
+//! 1. **Env override** — `BOOSTERS_KERNEL` (parsed once by
+//!    [`crate::util::kernel_override`]) forces one backend for the
+//!    whole process. A forced backend that the host cannot run warns
+//!    once and falls back; a forced backend that cannot run one
+//!    specific operand combination degrades down the preference chain
+//!    for that dispatch only. The override outranks the autotune
+//!    table: an operator pinning a kernel always wins.
+//! 2. **Autotune table** — under `auto`, the registry consults the
+//!    host-tuned table loaded once at init ([`autotune`] module docs
+//!    for the JSON schema and the `BOOSTERS_AUTOTUNE` path override;
+//!    produced by `bench_quantize --autotune`). The key is coarse —
+//!    (layout pair, block bucket, M×N×K bucket) — and a hit is
+//!    honored only if the named backend is registered and supports
+//!    the combination. Missing or corrupt tables warn (once) and
+//!    drop to tier 3; an absent default artifact is silent.
+//! 3. **Static default** — the preference chain (most specialized
+//!    first, scalar always last): the first registered backend that
+//!    supports the [`PlaneLayout`] pair at this block size. Never
+//!    panics, never changes bits.
 //!
 //! Nibble-packed operands ([`PlaneLayout::I4Packed`]) are consumed
 //! directly: kernels sign-extend nibbles in the inner loop instead of
 //! unpacking to bytes first, so the 4-bit formats get the storage
 //! density *and* keep a dense inner loop.
 
+pub mod autotune;
 pub mod autovec;
 #[cfg(target_arch = "x86_64")]
 pub mod avx2;
+#[cfg(target_arch = "x86_64")]
+pub mod avx512;
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
 pub mod scalar;
 
+pub use autotune::{AutotuneTable, GemmShape, KernelOpCounts, TableBuilder};
 pub use autovec::AutovecKernel;
 #[cfg(target_arch = "x86_64")]
 pub use avx2::Avx2Kernel;
+#[cfg(target_arch = "x86_64")]
+pub use avx512::Avx512Kernel;
+#[cfg(target_arch = "aarch64")]
+pub use neon::NeonKernel;
 pub use scalar::ScalarTiledKernel;
 
 use super::packed::{nib_at, BfpMatrix, PlaneLayout};
@@ -314,37 +342,65 @@ static SCALAR: ScalarTiledKernel = ScalarTiledKernel;
 static AUTOVEC: AutovecKernel = AutovecKernel;
 #[cfg(target_arch = "x86_64")]
 static AVX2: Avx2Kernel = Avx2Kernel;
+#[cfg(target_arch = "x86_64")]
+static AVX512: Avx512Kernel = Avx512Kernel;
+#[cfg(target_arch = "aarch64")]
+static NEON: NeonKernel = NeonKernel;
 
-/// The set of GEMM backends runnable on this host, plus the one the
+static WARNED_AVX2: std::sync::Once = std::sync::Once::new();
+static WARNED_AVX512: std::sync::Once = std::sync::Once::new();
+static WARNED_NEON: std::sync::Once = std::sync::Once::new();
+
+/// The set of GEMM backends runnable on this host, the one the
 /// `BOOSTERS_KERNEL` override and runtime feature detection resolved
-/// to. Built once per process by [`registry`].
+/// to, and the host's autotune table (if any). Built once per process
+/// by [`registry`].
 pub struct KernelRegistry {
     /// Runnable backends in preference order (most specialized first,
     /// the scalar fallback always last).
     kernels: Vec<&'static dyn GemmKernel>,
     preferred: &'static dyn GemmKernel,
     choice: KernelChoice,
+    table: Option<AutotuneTable>,
 }
 
 impl KernelRegistry {
     fn build(choice: KernelChoice) -> Self {
-        let avx2 = detect_avx2();
-        let mut kernels: Vec<&'static dyn GemmKernel> = Vec::with_capacity(3);
-        if let Some(k) = avx2 {
+        Self::build_with(choice, autotune::load())
+    }
+
+    /// Construction from explicit parts — the test seam that lets a
+    /// hand-written table (or its absence) drive dispatch without
+    /// touching the process environment or filesystem.
+    fn build_with(choice: KernelChoice, table: Option<AutotuneTable>) -> Self {
+        let mut kernels: Vec<&'static dyn GemmKernel> = Vec::with_capacity(4);
+        if let Some(k) = detect_avx512() {
+            kernels.push(k);
+        }
+        if let Some(k) = detect_avx2() {
+            kernels.push(k);
+        }
+        if let Some(k) = detect_neon() {
             kernels.push(k);
         }
         kernels.push(&AUTOVEC);
         kernels.push(&SCALAR);
+        let auto = kernels[0];
         let preferred: &'static dyn GemmKernel = match choice {
             KernelChoice::Scalar => &SCALAR,
             KernelChoice::Autovec => &AUTOVEC,
-            KernelChoice::Avx2 => avx2_or_loud_fallback(kernels[0]),
-            KernelChoice::Auto => kernels[0],
+            KernelChoice::Avx2 => forced_or_loud_fallback(detect_avx2(), "avx2", &WARNED_AVX2, auto),
+            KernelChoice::Avx512 => {
+                forced_or_loud_fallback(detect_avx512(), "avx512", &WARNED_AVX512, auto)
+            }
+            KernelChoice::Neon => forced_or_loud_fallback(detect_neon(), "neon", &WARNED_NEON, auto),
+            KernelChoice::Auto => auto,
         };
         Self {
             kernels,
             preferred,
             choice,
+            table,
         }
     }
 
@@ -371,26 +427,65 @@ impl KernelRegistry {
         self.kernels.iter().copied().find(|k| k.name() == name)
     }
 
+    /// The autotune table dispatch consults under `auto`, if one
+    /// loaded.
+    pub fn autotune(&self) -> Option<&AutotuneTable> {
+        self.table.as_ref()
+    }
+
     /// Resolve a programmatic choice (e.g.
     /// [`crate::exec::ServiceConfig`]'s kernel field) to a runnable
     /// backend; `Auto` resolves to the registry's preferred kernel,
-    /// and an unavailable `Avx2` falls back to it **loudly** (warned
-    /// once), matching the `BOOSTERS_KERNEL=avx2` env-path contract.
+    /// and an unavailable SIMD choice falls back to it **loudly**
+    /// (warned once), matching the `BOOSTERS_KERNEL` env-path
+    /// contract.
     pub fn resolve(&self, choice: KernelChoice) -> &'static dyn GemmKernel {
         match choice {
             KernelChoice::Auto => self.preferred,
             KernelChoice::Scalar => &SCALAR,
             KernelChoice::Autovec => &AUTOVEC,
-            KernelChoice::Avx2 => avx2_or_loud_fallback(self.preferred),
+            KernelChoice::Avx2 => {
+                forced_or_loud_fallback(detect_avx2(), "avx2", &WARNED_AVX2, self.preferred)
+            }
+            KernelChoice::Avx512 => {
+                forced_or_loud_fallback(detect_avx512(), "avx512", &WARNED_AVX512, self.preferred)
+            }
+            KernelChoice::Neon => {
+                forced_or_loud_fallback(detect_neon(), "neon", &WARNED_NEON, self.preferred)
+            }
         }
     }
 
     /// Per-operand dispatch: the preferred backend where it supports
     /// the layout pair at this block size, else the next backend down
     /// the preference chain that does (the scalar kernel closes the
-    /// chain).
+    /// chain). This is the shape-blind tier-3 path; shape-aware
+    /// callers go through [`KernelRegistry::select_shaped`].
     pub fn select(&self, x: PlaneLayout, w: PlaneLayout, block: usize) -> &'static dyn GemmKernel {
         self.select_from(self.preferred, x, w, block)
+    }
+
+    /// Shape-aware dispatch (module docs, tiers 1-3): a forced
+    /// `BOOSTERS_KERNEL` choice outranks the autotune table; under
+    /// `auto`, a table hit whose backend is registered and supports
+    /// the combination wins; everything else falls to the static
+    /// preference chain.
+    pub fn select_shaped(
+        &self,
+        x: PlaneLayout,
+        w: PlaneLayout,
+        block: usize,
+        shape: GemmShape,
+    ) -> &'static dyn GemmKernel {
+        if self.choice == KernelChoice::Auto {
+            let hit = self.table.as_ref().and_then(|t| t.lookup(x, w, block, shape));
+            if let Some(k) = hit.and_then(|name| self.by_name(name)) {
+                if k.supports(x, w, block) {
+                    return k;
+                }
+            }
+        }
+        self.select(x, w, block)
     }
 
     /// [`KernelRegistry::select`] starting from an explicit backend —
@@ -422,17 +517,21 @@ impl KernelRegistry {
     }
 }
 
-/// The single home of the loud AVX2 fallback: the detected backend,
-/// or `fallback` with a once-per-process stderr warning. Shared by the
-/// `BOOSTERS_KERNEL=avx2` env path ([`KernelRegistry::build`]) and the
-/// programmatic [`KernelRegistry::resolve`] path so the two can never
-/// diverge in policy or message.
-fn avx2_or_loud_fallback(fallback: &'static dyn GemmKernel) -> &'static dyn GemmKernel {
-    detect_avx2().unwrap_or_else(|| {
-        static WARNED: std::sync::Once = std::sync::Once::new();
-        WARNED.call_once(|| {
+/// The single home of the loud forced-SIMD fallback: the detected
+/// backend, or `fallback` with a once-per-process stderr warning (one
+/// `Once` per requested backend, shared between the `BOOSTERS_KERNEL`
+/// env path and the programmatic [`KernelRegistry::resolve`] path so
+/// the two can never diverge in policy or message).
+fn forced_or_loud_fallback(
+    detected: Option<&'static dyn GemmKernel>,
+    requested: &str,
+    warned: &'static std::sync::Once,
+    fallback: &'static dyn GemmKernel,
+) -> &'static dyn GemmKernel {
+    detected.unwrap_or_else(|| {
+        warned.call_once(|| {
             eprintln!(
-                "[boosters] avx2 kernel requested but AVX2 is not available on this host; \
+                "[boosters] {requested} kernel requested but not available on this host; \
                  falling back to the {} kernel",
                 fallback.name()
             );
@@ -455,6 +554,34 @@ fn detect_avx2() -> Option<&'static dyn GemmKernel> {
     None
 }
 
+#[cfg(target_arch = "x86_64")]
+fn detect_avx512() -> Option<&'static dyn GemmKernel> {
+    if avx512::avx512_available() {
+        Some(&AVX512)
+    } else {
+        None
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_avx512() -> Option<&'static dyn GemmKernel> {
+    None
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_neon() -> Option<&'static dyn GemmKernel> {
+    if neon::neon_available() {
+        Some(&NEON)
+    } else {
+        None
+    }
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn detect_neon() -> Option<&'static dyn GemmKernel> {
+    None
+}
+
 static REGISTRY: OnceLock<KernelRegistry> = OnceLock::new();
 
 /// The process-wide kernel registry: `BOOSTERS_KERNEL` + feature
@@ -463,11 +590,17 @@ pub fn registry() -> &'static KernelRegistry {
     REGISTRY.get_or_init(|| KernelRegistry::build(crate::util::kernel_override()))
 }
 
-/// The kernel the runtime dispatches for one operand combination — the
-/// single swap point the whole GEMM stack (single-op path, batch
-/// scheduler, benches) routes through.
-pub fn active_kernel(x: PlaneLayout, w: PlaneLayout, block: usize) -> &'static dyn GemmKernel {
-    registry().select(x, w, block)
+/// The kernel the runtime dispatches for one operand combination at
+/// one problem shape — the single swap point the whole GEMM stack
+/// (single-op path, batch scheduler, benches) routes through. See the
+/// module docs for the three dispatch tiers.
+pub fn active_kernel(
+    x: PlaneLayout,
+    w: PlaneLayout,
+    block: usize,
+    shape: GemmShape,
+) -> &'static dyn GemmKernel {
+    registry().select_shaped(x, w, block, shape)
 }
 
 #[cfg(test)]
@@ -509,8 +642,83 @@ mod tests {
         // Auto resolves to the preferred backend; Avx2 resolves to a
         // runnable backend on every host (itself or the fallback).
         assert_eq!(reg.resolve(KernelChoice::Auto).name(), reg.preferred().name());
-        let avx2 = reg.resolve(KernelChoice::Avx2);
-        assert!(reg.by_name(avx2.name()).is_some());
+        // Every SIMD choice resolves to a runnable backend on every
+        // host (itself where detected, the loud fallback otherwise).
+        for choice in [KernelChoice::Avx2, KernelChoice::Avx512, KernelChoice::Neon] {
+            let k = reg.resolve(choice);
+            assert!(reg.by_name(k.name()).is_some(), "{choice:?} -> {}", k.name());
+        }
+    }
+
+    fn small_table(kernel: &str, bucket: &str) -> AutotuneTable {
+        let text = format!(
+            r#"{{"schema": "boosters-autotune-v1", "entries": [
+                {{"x": "i8", "w": "i8", "block_bucket": "b16",
+                  "mnk_bucket": {bucket:?}, "kernel": {kernel:?}}}]}}"#
+        );
+        AutotuneTable::parse(&text).expect("hand-written table parses")
+    }
+
+    #[test]
+    fn autotune_table_forces_the_pick_per_bucket() {
+        // A hand-written table that pins small-shape i8 GEMMs to the
+        // scalar backend must win under `auto` dispatch...
+        let reg = KernelRegistry::build_with(
+            KernelChoice::Auto,
+            Some(small_table("scalar-tiled", "small")),
+        );
+        let small = GemmShape::new(8, 8, 32);
+        let large = GemmShape::new(512, 512, 512);
+        let (i8p, b) = (PlaneLayout::I8, 16usize);
+        assert_eq!(reg.select_shaped(i8p, i8p, b, small).name(), "scalar-tiled");
+        // ...while unmapped buckets fall through to the static tier.
+        assert_eq!(reg.select_shaped(i8p, i8p, b, large).name(), reg.select(i8p, i8p, b).name());
+        // A different mapped bucket picks its own backend.
+        let reg =
+            KernelRegistry::build_with(KernelChoice::Auto, Some(small_table("autovec", "large")));
+        assert_eq!(reg.select_shaped(i8p, i8p, b, large).name(), "autovec");
+        assert_eq!(reg.select_shaped(i8p, i8p, b, small).name(), reg.select(i8p, i8p, b).name());
+    }
+
+    #[test]
+    fn env_override_outranks_the_autotune_table() {
+        // A forced choice ignores the table entirely (tier 1 beats
+        // tier 2): the table says autovec, the override says scalar.
+        let reg = KernelRegistry::build_with(
+            KernelChoice::Scalar,
+            Some(small_table("autovec", "small")),
+        );
+        let small = GemmShape::new(8, 8, 32);
+        assert_eq!(
+            reg.select_shaped(PlaneLayout::I8, PlaneLayout::I8, 16, small).name(),
+            "scalar-tiled"
+        );
+    }
+
+    #[test]
+    fn bogus_or_absent_tables_fall_back_to_static_dispatch() {
+        // A table naming an unregistered backend is a hint we cannot
+        // honor — dispatch degrades to the static tier, never panics.
+        let reg =
+            KernelRegistry::build_with(KernelChoice::Auto, Some(small_table("gpu-magic", "small")));
+        let small = GemmShape::new(8, 8, 32);
+        let (i8p, b) = (PlaneLayout::I8, 16usize);
+        assert_eq!(reg.select_shaped(i8p, i8p, b, small).name(), reg.select(i8p, i8p, b).name());
+        // No table at all: select_shaped is exactly select.
+        let reg = KernelRegistry::build_with(KernelChoice::Auto, None);
+        assert!(reg.autotune().is_none());
+        for x in [PlaneLayout::I4Packed, PlaneLayout::I8, PlaneLayout::I16] {
+            for block in [16usize, 64, MAX_I32_BLOCK * 2] {
+                assert_eq!(
+                    reg.select_shaped(x, x, block, small).name(),
+                    reg.select(x, x, block).name()
+                );
+            }
+        }
+        // A selected backend always supports what it is reported to
+        // have executed, shape-aware or not.
+        let picked = registry().select_shaped(i8p, i8p, 16, GemmShape::new(3, 5, 7));
+        assert!(picked.supports(i8p, i8p, 16));
     }
 
     #[test]

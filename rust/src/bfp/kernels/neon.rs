@@ -1,0 +1,334 @@
+//! Explicit NEON backend (aarch64 only): widening integer MACs over
+//! narrow planes via `smull`/`sadalp` lanes, upgraded to the fused
+//! `sdot` (`vdotq_s32`) where the host reports the `dotprod` feature.
+//!
+//! Registered by the kernel registry only on aarch64 hosts (NEON is
+//! architecturally baseline there, but we keep the runtime check for
+//! symmetry with the x86 backends); `run_band` re-checks and falls
+//! back to the scalar kernel (loudly, in debug builds) if it is ever
+//! dispatched without support. The `dotprod` path is a second runtime
+//! gate inside the kernel — both MAC flavors compute the identical
+//! exact integer sum, so the gate never changes results, only
+//! throughput.
+//!
+//! # Exactness = bit-identity
+//!
+//! Same argument as the x86 SIMD backends: i8 (or sign-extended
+//! nibble) products fit i16 (`smull`), pairwise-accumulate into i32
+//! lanes (`sadalp`), and for blocks up to [`MAX_I32_BLOCK`] the
+//! per-lane accumulators provably cannot wrap (`2^12` steps x `2^16`
+//! per step < `2^29`); `sdot` accumulates 4-element i8 dot products
+//! into i32 lanes with the same bound. Integer addition is
+//! associative, so lane-parallel sums equal the scalar kernel's
+//! sequential sums bit-for-bit once combined; the shared tiled band
+//! loop fixes the f64 combination order. Oversized blocks (which need
+//! i64 accumulation) delegate to the scalar kernel.
+//!
+//! Nibble-packed operands are consumed directly from the byte stream:
+//! 16 packed bytes (32 values) per step, sign-extended in-register via
+//! `((b & 0xF) ^ 8) - 8` — no unpack buffer.
+
+use super::{run_tiled_band, BandTask, BlockDot, GemmKernel, MAX_I32_BLOCK};
+use crate::bfp::packed::{nib_hi, nib_lo, MantissaPlane, PlaneLayout};
+use std::arch::aarch64::*;
+
+/// The runtime-detected NEON kernel (see module docs).
+pub struct NeonKernel;
+
+pub(crate) fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+/// Sign-extend the low/high nibbles of 16 packed bytes to i8 lanes.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn nib_lanes_neon(b: uint8x16_t) -> (int8x16_t, int8x16_t) {
+    let lo_mask = vdupq_n_u8(0x0F);
+    let bias_u = vdupq_n_u8(0x08);
+    let bias_s = vdupq_n_s8(0x08);
+    let lo = vsubq_s8(
+        vreinterpretq_s8_u8(veorq_u8(vandq_u8(b, lo_mask), bias_u)),
+        bias_s,
+    );
+    let hi = vsubq_s8(
+        vreinterpretq_s8_u8(veorq_u8(vshrq_n_u8::<4>(b), bias_u)),
+        bias_s,
+    );
+    (lo, hi)
+}
+
+/// Widening MAC via `smull` + `sadalp`: 16 i8 products to two i16
+/// vectors, pairwise-accumulated into the i32 lanes.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn mac_smull(acc: int32x4_t, x: int8x16_t, y: int8x16_t) -> int32x4_t {
+    let lo = vmull_s8(vget_low_s8(x), vget_low_s8(y));
+    let hi = vmull_s8(vget_high_s8(x), vget_high_s8(y));
+    vpadalq_s16(vpadalq_s16(acc, lo), hi)
+}
+
+/// Fused `sdot` MAC — same exact i32 result as [`mac_smull`].
+#[inline]
+#[target_feature(enable = "neon,dotprod")]
+unsafe fn mac_sdot(acc: int32x4_t, x: int8x16_t, y: int8x16_t) -> int32x4_t {
+    vdotq_s32(acc, x, y)
+}
+
+/// Generate the four inner-dot entry points for one MAC flavor. The
+/// smull and sdot instantiations are bit-identical by construction;
+/// only the instruction sequence differs.
+macro_rules! define_neon_dots {
+    ($feat:literal, $mac:ident, $dot_i8:ident, $dot4_i8:ident, $dot_nib:ident,
+     $dot4_nib:ident) => {
+        #[target_feature(enable = $feat)]
+        unsafe fn $dot_i8(a: &[i8], w: &[i8]) -> i32 {
+            let n = a.len();
+            let mut acc = vdupq_n_s32(0);
+            let mut i = 0;
+            while i + 16 <= n {
+                acc = $mac(acc, vld1q_s8(a.as_ptr().add(i)), vld1q_s8(w.as_ptr().add(i)));
+                i += 16;
+            }
+            let mut sum = vaddvq_s32(acc);
+            while i < n {
+                sum += a[i] as i32 * w[i] as i32;
+                i += 1;
+            }
+            sum
+        }
+
+        /// Register-blocked form: one activation stream against four
+        /// weight streams, four accumulator vectors live.
+        #[target_feature(enable = $feat)]
+        unsafe fn $dot4_i8(a: &[i8], ws: [&[i8]; 4]) -> [i32; 4] {
+            let n = a.len();
+            let mut acc = [vdupq_n_s32(0); 4];
+            let mut i = 0;
+            while i + 16 <= n {
+                let va = vld1q_s8(a.as_ptr().add(i));
+                for (q, w) in ws.iter().enumerate() {
+                    acc[q] = $mac(acc[q], va, vld1q_s8(w.as_ptr().add(i)));
+                }
+                i += 16;
+            }
+            let mut out = [0i32; 4];
+            for (o, acc) in out.iter_mut().zip(acc) {
+                *o = vaddvq_s32(acc);
+            }
+            while i < n {
+                for (o, w) in out.iter_mut().zip(&ws) {
+                    *o += a[i] as i32 * w[i] as i32;
+                }
+                i += 1;
+            }
+            out
+        }
+
+        /// Nibble x nibble dot over packed byte streams (`nb` bytes =
+        /// `2 * nb` values): lo nibbles pair with lo (value `2j`), hi
+        /// with hi (`2j + 1`).
+        #[target_feature(enable = $feat)]
+        unsafe fn $dot_nib(a: &[u8], w: &[u8]) -> i32 {
+            let nb = a.len();
+            let mut acc = vdupq_n_s32(0);
+            let mut i = 0;
+            while i + 16 <= nb {
+                let (la, ha) = nib_lanes_neon(vld1q_u8(a.as_ptr().add(i)));
+                let (lw, hw) = nib_lanes_neon(vld1q_u8(w.as_ptr().add(i)));
+                acc = $mac(acc, la, lw);
+                acc = $mac(acc, ha, hw);
+                i += 16;
+            }
+            let mut sum = vaddvq_s32(acc);
+            while i < nb {
+                sum += nib_lo(a[i]) as i32 * nib_lo(w[i]) as i32
+                    + nib_hi(a[i]) as i32 * nib_hi(w[i]) as i32;
+                i += 1;
+            }
+            sum
+        }
+
+        /// Register-blocked nibble dot: activation nibbles extract once
+        /// per step against four packed weight streams.
+        #[target_feature(enable = $feat)]
+        unsafe fn $dot4_nib(a: &[u8], ws: [&[u8]; 4]) -> [i32; 4] {
+            let nb = a.len();
+            let mut acc = [vdupq_n_s32(0); 4];
+            let mut i = 0;
+            while i + 16 <= nb {
+                let (la, ha) = nib_lanes_neon(vld1q_u8(a.as_ptr().add(i)));
+                for (q, w) in ws.iter().enumerate() {
+                    let (lw, hw) = nib_lanes_neon(vld1q_u8(w.as_ptr().add(i)));
+                    acc[q] = $mac(acc[q], la, lw);
+                    acc[q] = $mac(acc[q], ha, hw);
+                }
+                i += 16;
+            }
+            let mut out = [0i32; 4];
+            for (o, acc) in out.iter_mut().zip(acc) {
+                *o = vaddvq_s32(acc);
+            }
+            while i < nb {
+                for (o, w) in out.iter_mut().zip(&ws) {
+                    *o += nib_lo(a[i]) as i32 * nib_lo(w[i]) as i32
+                        + nib_hi(a[i]) as i32 * nib_hi(w[i]) as i32;
+                }
+                i += 1;
+            }
+            out
+        }
+    };
+}
+
+define_neon_dots!(
+    "neon",
+    mac_smull,
+    dot_i8_smull,
+    dot4_i8_smull,
+    dot_nib_smull,
+    dot4_nib_smull
+);
+define_neon_dots!(
+    "neon,dotprod",
+    mac_sdot,
+    dot_i8_sdot,
+    dot4_i8_sdot,
+    dot_nib_sdot,
+    dot4_nib_sdot
+);
+
+/// Plane-pair dispatcher; the `dotprod` flag is sampled once per band.
+enum NeonDot<'a> {
+    I8I8(&'a [i8], &'a [i8], bool),
+    NibNib(&'a [u8], &'a [u8], bool),
+}
+
+impl BlockDot for NeonDot<'_> {
+    #[inline]
+    fn dot(&self, a_off: usize, w_off: usize, len: usize) -> i64 {
+        // Safety: `NeonKernel::run_band` verified NEON support (and the
+        // dotprod flag) before building this dispatcher.
+        match self {
+            NeonDot::I8I8(a, w, sdot) => unsafe {
+                let (a, w) = (&a[a_off..a_off + len], &w[w_off..w_off + len]);
+                if *sdot {
+                    dot_i8_sdot(a, w) as i64
+                } else {
+                    dot_i8_smull(a, w) as i64
+                }
+            },
+            NeonDot::NibNib(a, w, sdot) => unsafe {
+                let (a, w) = (&a[a_off / 2..(a_off + len) / 2], &w[w_off / 2..(w_off + len) / 2]);
+                if *sdot {
+                    dot_nib_sdot(a, w) as i64
+                } else {
+                    dot_nib_smull(a, w) as i64
+                }
+            },
+        }
+    }
+
+    /// Register-blocked form: the activation vector loads (or its
+    /// nibbles extract) once per step and MACs against four weight
+    /// streams.
+    #[inline]
+    fn dot4(&self, a_off: usize, w_offs: [usize; 4], len: usize) -> [i64; 4] {
+        let [o0, o1, o2, o3] = w_offs;
+        // Safety: see `dot` — features were verified at dispatch.
+        let out = match self {
+            NeonDot::I8I8(a, w, sdot) => unsafe {
+                let a = &a[a_off..a_off + len];
+                let ws = [
+                    &w[o0..o0 + len],
+                    &w[o1..o1 + len],
+                    &w[o2..o2 + len],
+                    &w[o3..o3 + len],
+                ];
+                if *sdot {
+                    dot4_i8_sdot(a, ws)
+                } else {
+                    dot4_i8_smull(a, ws)
+                }
+            },
+            NeonDot::NibNib(a, w, sdot) => unsafe {
+                let a = &a[a_off / 2..(a_off + len) / 2];
+                let ws = [
+                    &w[o0 / 2..(o0 + len) / 2],
+                    &w[o1 / 2..(o1 + len) / 2],
+                    &w[o2 / 2..(o2 + len) / 2],
+                    &w[o3 / 2..(o3 + len) / 2],
+                ];
+                if *sdot {
+                    dot4_nib_sdot(a, ws)
+                } else {
+                    dot4_nib_smull(a, ws)
+                }
+            },
+        };
+        [out[0] as i64, out[1] as i64, out[2] as i64, out[3] as i64]
+    }
+}
+
+impl GemmKernel for NeonKernel {
+    fn name(&self) -> &'static str {
+        "neon-sdot"
+    }
+
+    /// Support includes the runtime feature check and the
+    /// i32-accumulator block bound, so a forced `NeonKernel` on an
+    /// unsupported combination degrades down the registry's fallback
+    /// chain like any other backend.
+    fn supports(&self, x: PlaneLayout, w: PlaneLayout, block: usize) -> bool {
+        block <= MAX_I32_BLOCK
+            && neon_available()
+            && matches!(
+                (x, w),
+                (PlaneLayout::I8, PlaneLayout::I8)
+                    | (PlaneLayout::I4Packed, PlaneLayout::I4Packed)
+            )
+    }
+
+    fn run_band(&self, t: BandTask<'_>) {
+        if !neon_available()
+            || t.x.fmt.block_size > MAX_I32_BLOCK
+            || t.w.fmt.block_size > MAX_I32_BLOCK
+        {
+            // Oversized blocks need i64 accumulation; stay correct via
+            // the reference kernel in every unsupported case.
+            return super::ScalarTiledKernel.run_band(t);
+        }
+        let BandTask {
+            x,
+            w,
+            xsh,
+            wsh,
+            r0,
+            rows,
+            out,
+        } = t;
+        let n = w.rows;
+        let kb = x.blocks_per_row;
+        let b = x.fmt.block_size;
+        debug_assert_eq!(kb, w.blocks_per_row);
+        let sdot = std::arch::is_aarch64_feature_detected!("dotprod");
+        let d = match (&x.mantissas, &w.mantissas) {
+            (MantissaPlane::I8(a), MantissaPlane::I8(wm)) => NeonDot::I8I8(a, wm, sdot),
+            (MantissaPlane::I4Packed(a), MantissaPlane::I4Packed(wm)) => {
+                NeonDot::NibNib(a, wm, sdot)
+            }
+            _ => {
+                debug_assert!(false, "NEON kernel dispatched an unsupported plane pair");
+                return super::ScalarTiledKernel.run_band(BandTask {
+                    x,
+                    w,
+                    xsh,
+                    wsh,
+                    r0,
+                    rows,
+                    out,
+                });
+            }
+        };
+        run_tiled_band(&d, xsh, wsh, r0, rows, n, kb, b, out)
+    }
+}

@@ -31,9 +31,11 @@
 //! fixed-point GEMM over those planes (thread partitioning is by whole
 //! output rows, so parallel results are bit-identical to serial). The
 //! micro-kernel layer is the [`kernels`] registry: runtime-dispatched
-//! backends ([`ScalarTiledKernel`], [`kernels::AutovecKernel`], AVX2
-//! where detected) behind the [`GemmKernel`] trait, selected per
-//! operand [`PlaneLayout`] pair and overridable with `BOOSTERS_KERNEL`.
+//! backends ([`ScalarTiledKernel`], [`kernels::AutovecKernel`], AVX2 /
+//! AVX-512-VNNI / NEON where detected) behind the [`GemmKernel`]
+//! trait, selected per operand [`PlaneLayout`] pair and problem-shape
+//! bucket (autotune table, `BOOSTERS_AUTOTUNE`) and overridable with
+//! `BOOSTERS_KERNEL`.
 //! Bands execute as work items on the persistent [`crate::exec`] pool,
 //! and weight-side encodings are reused across calls through the exec
 //! operand cache. Encoding happens once per operand; the scalar
@@ -54,8 +56,8 @@ pub use block::{scale_shift, BfpBlock, BfpTensor, BlockFormat};
 pub use dot::{bfp_dot_blocks, bfp_dot_fixed_point, dequant_dot};
 pub use gemm::{gemm_packed, gemm_packed_with, packed_dot};
 pub use kernels::{
-    active_kernel, registry, AutovecKernel, BandTask, GemmKernel, KernelRegistry,
-    ScalarTiledKernel,
+    active_kernel, registry, AutotuneTable, AutovecKernel, BandTask, GemmKernel, GemmShape,
+    KernelOpCounts, KernelRegistry, ScalarTiledKernel,
 };
 pub use matrix::{dequant_gemm, hbfp_gemm, hbfp_gemm_scalar, Mat};
 pub use packed::{

@@ -9,7 +9,12 @@
 //! **earliest-deadline-first within priority class** (no-deadline
 //! requests sort after every deadline in their class, FIFO among
 //! themselves), cut off at a MAC budget so one giant batch cannot
-//! monopolize the pool while a deadline burns.
+//! monopolize the pool while a deadline burns. The service's
+//! pre-encode stage drains the same queue through
+//! [`SubmitQueue::claim_encode_work`] — claims come out in the same
+//! EDF order, bounded by the `BOOSTERS_PREENCODE_MB` byte budget
+//! (charged per claim, released per pop; the encoder stalls, never
+//! drops, when over budget).
 //!
 //! # Backpressure contract
 //!
@@ -234,6 +239,10 @@ pub(crate) struct Pending {
     /// batch is already executing instead of duplicating the execution
     /// stage's inline encode.
     queued: Arc<AtomicBool>,
+    /// Bytes charged against the pre-encode memory budget when the
+    /// encoder claimed this request (0 when never claimed). Released
+    /// when the request pops into a batch.
+    pre_encode_charged: u64,
     seq: u64,
 }
 
@@ -269,6 +278,11 @@ impl Pending {
 struct QueueState {
     pending: Vec<Pending>,
     seq: u64,
+    /// Sum of `pre_encode_charged` over queued requests: the resident
+    /// set of the pre-encode memory budget. Charged at claim time from
+    /// the deterministic plane-size estimate, released when the request
+    /// pops into a batch (whether or not the encode finished).
+    pre_encode_bytes: u64,
     shutdown: bool,
     /// Guarded by the state mutex (not an atomic): the scheduler checks
     /// it under the same lock it waits on, so a `resume` can never slip
@@ -293,6 +307,7 @@ impl SubmitQueue {
             state: Mutex::new(QueueState {
                 pending: Vec::new(),
                 seq: 0,
+                pre_encode_bytes: 0,
                 shutdown: false,
                 paused: false,
                 peak_depth: 0,
@@ -315,6 +330,12 @@ impl SubmitQueue {
         lock_or_poisoned(&self.state, "service queue").peak_depth
     }
 
+    /// Bytes of pre-encoded activation planes charged against the
+    /// `BOOSTERS_PREENCODE_MB` budget for requests still in the queue
+    /// (the stats surface's `pre_encode_resident_bytes`).
+    pub(crate) fn pre_encode_bytes(&self) -> u64 {
+        lock_or_poisoned(&self.state, "service queue").pre_encode_bytes
+    }
 
     /// Stop the scheduler from forming batches (admission continues) —
     /// the drain-control / backpressure-test hook.
@@ -347,6 +368,7 @@ impl SubmitQueue {
             macs,
             encode_claimed: false,
             queued: Arc::new(AtomicBool::new(true)),
+            pre_encode_charged: 0,
             seq: st.seq,
         });
         st.peak_depth = st.peak_depth.max(st.pending.len());
@@ -358,30 +380,59 @@ impl SubmitQueue {
     }
 
     /// Block until admitted requests the pre-encode stage has not yet
-    /// claimed exist, mark up to `max` of them claimed, and return
-    /// clones of their ops (cheap: `Arc` operands sharing the encoded
-    /// slot). Runs through pauses — pre-encoding while batch formation
-    /// is paused is exactly the pipelining this stage exists for.
-    /// Returns `None` on shutdown: whatever is still unclaimed will be
-    /// encoded inline by the drain.
-    pub(crate) fn claim_encode_work(&self, max: usize) -> Option<Vec<EncodeClaim>> {
+    /// claimed exist, mark up to `max` of them claimed **in EDF order**
+    /// (the same comparator [`SubmitQueue::pop_batch`] uses, so the
+    /// encoder warms exactly the requests the scheduler will pop
+    /// first), and return clones of their ops (cheap: `Arc` operands
+    /// sharing the encoded slot).
+    ///
+    /// Claims are bounded by `budget_bytes` of estimated pre-encoded
+    /// activation bytes: each claim charges its op's deterministic
+    /// plane-size estimate against the queue's resident total, and the
+    /// charge is released when the request pops into a batch. Over
+    /// budget the encoder **stalls** (waits for pops to release bytes)
+    /// — it never drops work; an unclaimed request is simply encoded
+    /// inline by the execution stage. One oversized op still claims
+    /// when nothing is resident (the progress guarantee mirroring the
+    /// MAC budget), so a budget below any single op degrades to
+    /// one-at-a-time pre-encoding instead of deadlock.
+    ///
+    /// Runs through pauses — pre-encoding while batch formation is
+    /// paused is exactly the pipelining this stage exists for. Returns
+    /// `None` on shutdown: whatever is still unclaimed will be encoded
+    /// inline by the drain.
+    pub(crate) fn claim_encode_work(
+        &self,
+        max: usize,
+        budget_bytes: u64,
+    ) -> Option<Vec<EncodeClaim>> {
         let mut st = lock_or_poisoned(&self.state, "service queue");
         loop {
             if st.shutdown {
                 return None;
             }
+            let mut order: Vec<usize> = (0..st.pending.len())
+                .filter(|&i| !st.pending[i].encode_claimed)
+                .collect();
+            order.sort_by_key(|&i| st.pending[i].edf_key());
             let mut claims = Vec::new();
-            for p in st.pending.iter_mut() {
-                if !p.encode_claimed {
-                    p.encode_claimed = true;
-                    claims.push(EncodeClaim {
-                        op: p.op.clone(),
-                        queued: Arc::clone(&p.queued),
-                    });
-                    if claims.len() >= max.max(1) {
-                        break;
-                    }
+            for &i in &order {
+                if claims.len() >= max.max(1) {
+                    break;
                 }
+                let est = st.pending[i].op.pre_encode_estimate_bytes();
+                let over = st.pre_encode_bytes.saturating_add(est) > budget_bytes;
+                if over && !(st.pre_encode_bytes == 0 && claims.is_empty()) {
+                    break;
+                }
+                let p = &mut st.pending[i];
+                p.encode_claimed = true;
+                p.pre_encode_charged = est;
+                claims.push(EncodeClaim {
+                    op: p.op.clone(),
+                    queued: Arc::clone(&p.queued),
+                });
+                st.pre_encode_bytes = st.pre_encode_bytes.saturating_add(est);
             }
             if !claims.is_empty() {
                 return Some(claims);
@@ -489,6 +540,7 @@ impl SubmitQueue {
         }
         let mut batch: Vec<Option<Pending>> = (0..taken).map(|_| None).collect();
         let mut rest = Vec::with_capacity(st.pending.len() - taken);
+        let mut released = 0u64;
         for (i, p) in std::mem::take(&mut st.pending).into_iter().enumerate() {
             match rank[i] {
                 usize::MAX => rest.push(p),
@@ -498,13 +550,20 @@ impl SubmitQueue {
                     // pre-encode could only duplicate the execution
                     // stage's inline encode.
                     p.queued.store(false, Ordering::Release);
+                    released = released.saturating_add(p.pre_encode_charged);
                     batch[r] = Some(p);
                 }
             }
         }
         st.pending = rest;
+        st.pre_encode_bytes = st.pre_encode_bytes.saturating_sub(released);
         drop(st);
         self.space_cv.notify_all();
+        if released > 0 {
+            // A budget-stalled pre-encode stage waits on work_cv; the
+            // bytes this pop released are its wakeup.
+            self.work_cv.notify_all();
+        }
         Some((
             batch.into_iter().map(|p| p.expect("rank fully assigned")).collect(),
             max_macs,
@@ -622,15 +681,15 @@ mod tests {
         q.push(req(1)).unwrap();
         q.push(req(2)).unwrap();
         q.push(req(3)).unwrap();
-        let first = q.claim_encode_work(2).unwrap();
+        let first = q.claim_encode_work(2, u64::MAX).unwrap();
         assert_eq!(first.len(), 2, "claim honors its batch cap");
         assert!(first.iter().all(EncodeClaim::still_queued));
-        let second = q.claim_encode_work(8).unwrap();
+        let second = q.claim_encode_work(8, u64::MAX).unwrap();
         assert_eq!(second.len(), 1, "already-claimed requests stay claimed");
         // Everything is claimed: the next call would block, and
         // shutdown must unblock it with None instead.
         q.shutdown();
-        assert!(q.claim_encode_work(8).is_none());
+        assert!(q.claim_encode_work(8, u64::MAX).is_none());
         // Claiming is advisory — claimed requests still pop into
         // batches for execution...
         assert_eq!(q.pop_batch(usize::MAX, 16, false).unwrap().0.len(), 3);
@@ -638,6 +697,64 @@ mod tests {
         // encode stage never duplicates an executing batch's work.
         assert!(first.iter().all(|c| !c.still_queued()));
         assert!(second.iter().all(|c| !c.still_queued()));
+    }
+
+    #[test]
+    fn claim_encode_work_hands_out_edf_order() {
+        let q = SubmitQueue::new(8);
+        // Admission order 1, 2, 3 — EDF order 3, 2, 1 (interactive
+        // deadlines before the bulk request).
+        q.push(req(1).with_priority(Priority::Bulk)).unwrap();
+        q.push(
+            req(2)
+                .with_priority(Priority::Interactive)
+                .with_deadline(Duration::from_millis(500)),
+        )
+        .unwrap();
+        q.push(
+            req(3)
+                .with_priority(Priority::Interactive)
+                .with_deadline(Duration::from_millis(100)),
+        )
+        .unwrap();
+        let claims = q.claim_encode_work(8, u64::MAX).unwrap();
+        let rows: Vec<usize> = claims.iter().map(|c| c.op.x.rows).collect();
+        // Same comparator as pop_batch: the encoder warms exactly the
+        // requests the scheduler will pop first, not admission order.
+        assert_eq!(rows, vec![3, 2, 1]);
+        // A capped claim also takes the EDF head of what remains.
+        let q2 = SubmitQueue::new(8);
+        q2.push(req(4).with_priority(Priority::Bulk)).unwrap();
+        q2.push(req(5).with_deadline(Duration::from_millis(1)).with_priority(Priority::Bulk))
+            .unwrap();
+        let head = q2.claim_encode_work(1, u64::MAX).unwrap();
+        assert_eq!(head[0].op.x.rows, 5, "capped claim takes the EDF head");
+    }
+
+    #[test]
+    fn pre_encode_budget_stalls_claims_and_pops_release_bytes() {
+        let q = SubmitQueue::new(8);
+        q.push(req(1)).unwrap();
+        q.push(req(2)).unwrap();
+        let est = op(1, 16, 2).pre_encode_estimate_bytes();
+        assert!(est > 0, "estimate must charge something");
+        // A budget of exactly one op's bytes claims one of the two
+        // requests (the second would overflow the budget).
+        let c1 = q.claim_encode_work(8, est).unwrap();
+        assert_eq!(c1.len(), 1, "budget cuts the claim batch");
+        assert_eq!(q.pre_encode_bytes(), est);
+        // Popping the charged request releases its bytes — stalls end
+        // via pops, never via drops.
+        let (b, _) = q.pop_batch(usize::MAX, 1, false).unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(q.pre_encode_bytes(), 0);
+        // req(2) alone over-runs the budget (twice the rows), but with
+        // nothing resident the progress guarantee still claims it.
+        let c2 = q.claim_encode_work(8, est).unwrap();
+        assert_eq!(c2.len(), 1, "one oversized op claims when idle");
+        assert_eq!(q.pre_encode_bytes(), 2 * est);
+        let _ = q.pop_batch(usize::MAX, 16, false).unwrap();
+        assert_eq!(q.pre_encode_bytes(), 0, "drain releases every charge");
     }
 
     #[test]

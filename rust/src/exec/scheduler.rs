@@ -42,8 +42,8 @@
 use super::pool::Job;
 use super::ExecRuntime;
 use crate::bfp::gemm::{band_shifts, BandTask, PARALLEL_MIN_MACS};
-use crate::bfp::kernels::{self, GemmKernel};
-use crate::bfp::{BfpMatrix, BlockFormat, Mat, Quantizer};
+use crate::bfp::kernels::{self, GemmKernel, GemmShape, KernelOpCounts};
+use crate::bfp::{BfpMatrix, BlockFormat, Mat, PlaneLayout, Quantizer};
 use anyhow::{bail, Context, Result};
 use std::sync::{Arc, OnceLock};
 use std::time::Instant;
@@ -122,6 +122,26 @@ impl OwnedGemmOp {
         self.encoded.get().is_some()
     }
 
+    /// Deterministic estimate of this op's pre-encoded **activation**
+    /// plane bytes — what an encode claim charges against the service's
+    /// `BOOSTERS_PREENCODE_MB` budget. Counts the mantissa plane (rows
+    /// padded to whole blocks, stored per the format's plane layout)
+    /// plus the per-block `i32` exponent plane. Weight planes are
+    /// excluded on purpose: they live in the operand cache under its
+    /// own `BOOSTERS_CACHE_MB` budget, shared across requests.
+    pub fn pre_encode_estimate_bytes(&self) -> u64 {
+        let rows = self.x.rows as u64;
+        let blocks_per_row = (self.x.cols as u64).div_ceil(self.fmt.block_size.max(1) as u64);
+        let blocks = rows.saturating_mul(blocks_per_row);
+        let values = blocks.saturating_mul(self.fmt.block_size as u64);
+        let mantissa_bytes = match self.fmt.plane_layout() {
+            PlaneLayout::I4Packed => values / 2,
+            PlaneLayout::I8 => values,
+            PlaneLayout::I16 => values.saturating_mul(2),
+        };
+        mantissa_bytes.saturating_add(blocks.saturating_mul(4))
+    }
+
     /// Encode both operands into the shared slot: the activation on
     /// `rt`'s pool, the weight through `rt`'s operand cache (nearest
     /// rounding — the deterministic cacheable transform). No-op when
@@ -162,6 +182,10 @@ pub struct EncodeReport {
     /// Wall time of the execution stage's encode phase, nanoseconds
     /// (near zero for a fully pre-encoded batch — that is the point).
     pub encode_ns: u64,
+    /// Which backend the execution stage actually dispatched, per op
+    /// and M×N×K bucket — the ground truth behind the configured
+    /// `KernelChoice` (a forced backend can still degrade per op).
+    pub kernel_ops: KernelOpCounts,
 }
 
 /// Batched GEMM executor over an [`ExecRuntime`] (see module docs).
@@ -322,10 +346,11 @@ impl<'rt> BatchGemm<'rt> {
             };
             wenc.push(enc.with_context(|| format!("encoding weights of op {i}"))?);
         }
-        let report = EncodeReport {
+        let mut report = EncodeReport {
             pre_encoded,
             inline_encoded,
             encode_ns: encode_started.elapsed().as_nanos() as u64,
+            kernel_ops: KernelOpCounts::default(),
         };
 
         // ---- shard + execute stage ----------------------------------
@@ -354,10 +379,14 @@ impl<'rt> BatchGemm<'rt> {
             // best backend for its layout pair.
             let (xl, wl) = (xp.mantissas.layout(), wp.mantissas.layout());
             let block = xp.fmt.block_size;
+            let shape = GemmShape::new(m, n, xp.cols);
             let kernel = match self.kernel {
                 Some(k) => kernels::registry().select_from(k, xl, wl, block),
-                None => kernels::active_kernel(xl, wl, block),
+                None => kernels::active_kernel(xl, wl, block, shape),
             };
+            // Record the backend that actually dispatches, not the
+            // configured choice — a forced backend can degrade per op.
+            report.kernel_ops.record(kernel.name(), shape.mnk_bucket());
             let macs = m.saturating_mul(n).saturating_mul(xp.cols);
             let band = self.band_for(m, macs, total_macs, threads);
             let xref: &BfpMatrix = xp;
@@ -555,6 +584,26 @@ mod tests {
             assert_eq!(p.to_bits(), i.to_bits());
             assert_eq!(p.to_bits(), s.to_bits());
         }
+    }
+
+    #[test]
+    fn pre_encode_estimate_counts_activation_planes() {
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        let op = OwnedGemmOp::new(Arc::new(Mat::zeros(3, 20)), Arc::new(Mat::zeros(20, 5)), fmt)
+            .unwrap();
+        // 3 rows x ceil(20/16) = 2 blocks each: 6 blocks of 16
+        // nibble-packed values (8 bytes) + 6 i32 exponents.
+        assert_eq!(op.pre_encode_estimate_bytes(), 6 * 8 + 6 * 4);
+        // Wider mantissas charge their wider planes: i8 and i16.
+        let fmt8 = BlockFormat::new(6, 16).unwrap();
+        let op8 = OwnedGemmOp::new(Arc::new(Mat::zeros(3, 20)), Arc::new(Mat::zeros(20, 5)), fmt8)
+            .unwrap();
+        assert_eq!(op8.pre_encode_estimate_bytes(), 6 * 16 + 6 * 4);
+        let fmt16 = BlockFormat::new(12, 16).unwrap();
+        let op16 =
+            OwnedGemmOp::new(Arc::new(Mat::zeros(3, 20)), Arc::new(Mat::zeros(20, 5)), fmt16)
+                .unwrap();
+        assert_eq!(op16.pre_encode_estimate_bytes(), 6 * 32 + 6 * 4);
     }
 
     #[test]

@@ -59,16 +59,17 @@
 //! blocking admission (those APIs were blocking contracts already) and
 //! exposes the runtime's operand cache for encode-only paths.
 
+use super::pool::lock_or_poisoned;
 use super::queue::{
     AdmissionError, GemmRequest, GemmResponse, Pending, Priority, SubmitQueue, Ticket,
 };
 use super::scheduler::{BatchGemm, EncodeReport, OwnedGemmOp};
 use super::ExecRuntime;
-use crate::bfp::{kernels, BfpMatrix, BlockFormat, Mat};
+use crate::bfp::{kernels, BfpMatrix, BlockFormat, KernelOpCounts, Mat};
 use crate::util::KernelChoice;
 use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -98,6 +99,13 @@ pub struct ServiceConfig {
     /// layouts. Either way results are bit-identical — this is a
     /// performance and test knob, never a numerics one.
     pub kernel: KernelChoice,
+    /// Byte budget for pre-encoded activation planes resident in the
+    /// queue (claimed by the pre-encode stage, not yet popped into a
+    /// batch). Over budget the encoder **stalls** until pops release
+    /// bytes — it never drops work; unclaimed requests simply encode
+    /// inline at execution. Defaults to the `BOOSTERS_PREENCODE_MB`
+    /// environment knob (256 MiB when unset).
+    pub pre_encode_cap_bytes: u64,
 }
 
 impl Default for ServiceConfig {
@@ -108,6 +116,7 @@ impl Default for ServiceConfig {
             max_batch_macs: 1 << 26,
             adaptive_batch: true,
             kernel: KernelChoice::Auto,
+            pre_encode_cap_bytes: crate::util::preencode_budget(),
         }
     }
 }
@@ -155,6 +164,11 @@ struct ServiceCounters {
     /// thread's encoding work plus the execution stage's inline encode
     /// phase.
     encode_ns: AtomicU64,
+    /// Which backend the execution stage actually dispatched per op,
+    /// by M×N×K bucket (ground truth next to the configured
+    /// `KernelChoice`). A mutex, not atomics: updated once per batch,
+    /// read once per stats snapshot.
+    kernel_ops: Mutex<KernelOpCounts>,
 }
 
 impl ServiceCounters {
@@ -164,6 +178,8 @@ impl ServiceCounters {
         self.inline_encoded
             .fetch_add(report.inline_encoded as u64, Ordering::Relaxed);
         self.encode_ns.fetch_add(report.encode_ns, Ordering::Relaxed);
+        lock_or_poisoned(&self.kernel_ops, "service kernel-op counts")
+            .merge(&report.kernel_ops);
     }
 }
 
@@ -205,6 +221,14 @@ pub struct ServiceStats {
     /// backend under `Auto`; per-op dispatch may still fall back for
     /// layout pairs the backend cannot run).
     pub kernel: &'static str,
+    /// Which backend **actually executed** each op, per M×N×K bucket —
+    /// the ground truth behind `kernel` (forced choices degrade per op,
+    /// and `Auto` dispatches per layout pair and shape bucket).
+    pub kernel_ops: KernelOpCounts,
+    /// Pre-encoded activation bytes currently charged against the
+    /// `BOOSTERS_PREENCODE_MB` budget (claimed by the pre-encode stage
+    /// and still waiting in the queue).
+    pub pre_encode_resident_bytes: u64,
 }
 
 impl Default for ServiceStats {
@@ -223,6 +247,8 @@ impl Default for ServiceStats {
             inline_encoded: 0,
             encode_us: 0,
             kernel: "",
+            kernel_ops: KernelOpCounts::default(),
+            pre_encode_resident_bytes: 0,
         }
     }
 }
@@ -287,7 +313,7 @@ impl BfpService {
             let counters = Arc::clone(&counters);
             std::thread::Builder::new()
                 .name("bfp-service-encode".into())
-                .spawn(move || encoder_loop(&rt, &queue, &counters))
+                .spawn(move || encoder_loop(&rt, &queue, &counters, cfg.pre_encode_cap_bytes))
                 .expect("spawn service encode-stage thread")
         };
         Self {
@@ -377,6 +403,8 @@ impl BfpService {
             inline_encoded: self.counters.inline_encoded.load(Ordering::Relaxed),
             encode_us: self.counters.encode_ns.load(Ordering::Relaxed) / 1_000,
             kernel: kernels::registry().resolve(self.cfg.kernel).name(),
+            kernel_ops: *lock_or_poisoned(&self.counters.kernel_ops, "service kernel-op counts"),
+            pre_encode_resident_bytes: self.queue.pre_encode_bytes(),
         }
     }
 
@@ -439,9 +467,17 @@ const ENCODE_CLAIM_MAX: usize = 64;
 /// duplicate the execution stage's inline encode and steal pool time
 /// from the running GEMM. Encode failures are swallowed on purpose —
 /// the execution stage re-encodes inline and routes the error to the
-/// right ticket.
-fn encoder_loop(rt: &ExecRuntime, queue: &SubmitQueue, counters: &ServiceCounters) {
-    while let Some(claims) = queue.claim_encode_work(ENCODE_CLAIM_MAX) {
+/// right ticket. Claims arrive in EDF order and are bounded by
+/// `cap_bytes` of resident pre-encoded activation bytes (the
+/// `BOOSTERS_PREENCODE_MB` budget): over budget this loop stalls
+/// inside `claim_encode_work` until pops release bytes.
+fn encoder_loop(
+    rt: &ExecRuntime,
+    queue: &SubmitQueue,
+    counters: &ServiceCounters,
+    cap_bytes: u64,
+) {
+    while let Some(claims) = queue.claim_encode_work(ENCODE_CLAIM_MAX, cap_bytes) {
         for claim in &claims {
             // Skip claims that can do no useful work, and keep their
             // bookkeeping out of encode_ns — the reported encode-stage
@@ -770,6 +806,8 @@ mod tests {
             crate::util::KernelChoice::Scalar,
             crate::util::KernelChoice::Autovec,
             crate::util::KernelChoice::Avx2,
+            crate::util::KernelChoice::Avx512,
+            crate::util::KernelChoice::Neon,
         ] {
             let svc = BfpService::new(
                 Arc::new(ExecRuntime::with_threads(2)),
@@ -796,6 +834,48 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn kernel_op_counts_and_preencode_residency_are_surfaced() {
+        // A 1-byte pre-encode budget exercises the stalling path (the
+        // progress guarantee claims at most one op at a time); results
+        // and counts must come out exactly as with an ample budget.
+        let svc = BfpService::new(
+            Arc::new(ExecRuntime::with_threads(2)),
+            ServiceConfig {
+                pre_encode_cap_bytes: 1,
+                ..ServiceConfig::default()
+            },
+        );
+        let mut rng = Rng::new(0xC0DE);
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        for _ in 0..3 {
+            let x = randmat(&mut rng, 3, 32);
+            let w = randmat(&mut rng, 32, 5);
+            let op = OwnedGemmOp::new(Arc::clone(&x), Arc::clone(&w), fmt).unwrap();
+            let resp = svc
+                .submit_blocking(GemmRequest::new(op))
+                .unwrap()
+                .wait()
+                .unwrap();
+            let want = hbfp_gemm_scalar(&x, &w, fmt).unwrap();
+            for (g, s) in resp.out.data.iter().zip(&want.data) {
+                assert_eq!(g.to_bits(), s.to_bits());
+            }
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.completed, 3);
+        // Every executed op is attributed to a registered backend.
+        assert_eq!(stats.kernel_ops.total(), 3, "{:?}", stats.kernel_ops);
+        for (name, _, _) in stats.kernel_ops.entries() {
+            assert!(
+                crate::bfp::registry().by_name(name).is_some(),
+                "executed-kernel name {name:?} must be registered"
+            );
+        }
+        // A drained queue holds no resident pre-encode bytes.
+        assert_eq!(stats.pre_encode_resident_bytes, 0, "{stats:?}");
     }
 
     #[test]

@@ -27,7 +27,7 @@
 //! the metrics are additionally written as a `BENCH_serve.json`-style
 //! artifact for the bench trajectory.
 
-use crate::bfp::{hbfp_gemm_scalar, BlockFormat, Mat};
+use crate::bfp::{hbfp_gemm_scalar, BlockFormat, KernelOpCounts, Mat};
 use crate::exec::{
     AdmissionError, BatchGemm, BfpService, CacheStats, ExecRuntime, GemmRequest, OwnedGemmOp,
     Priority, ServiceConfig, ServiceStats,
@@ -168,6 +168,10 @@ struct DriveOutcome {
     rejected: u64,
     misses: u64,
     service: Option<ServiceStats>,
+    /// Which backend **actually executed** each op, per M×N×K bucket —
+    /// recorded at dispatch, not inferred from the configured choice
+    /// (a forced backend can still degrade per op).
+    kernel_ops: KernelOpCounts,
 }
 
 /// Run the simulation on `rt` (normally [`crate::exec::global_arc`]).
@@ -299,6 +303,20 @@ pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport
         "gemm kernel",
         crate::bfp::kernels::registry().preferred().name().to_string(),
     );
+    let executed: Vec<String> = outcome
+        .kernel_ops
+        .entries()
+        .into_iter()
+        .map(|(k, b, n)| format!("{k}/{b}: {n}"))
+        .collect();
+    kv(
+        "kernel ops (executed)",
+        if executed.is_empty() {
+            "none".to_string()
+        } else {
+            executed.join(", ")
+        },
+    );
     kv("completed", completed.to_string());
     kv("rejected (queue full)", outcome.rejected.to_string());
     kv("total MACs (completed)", format!("{total_macs:.3e}"));
@@ -372,6 +390,20 @@ pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport
         // BENCH_serve.json trajectories compare like for like.
         ("kernel", Json::str(reg.preferred().name())),
         ("kernel_choice", Json::str(reg.choice().label())),
+        // Ground truth next to the configured identity above: which
+        // backend each op actually dispatched to, per M×N×K bucket.
+        (
+            "kernel_ops",
+            Json::arr(outcome.kernel_ops.entries().into_iter().map(
+                |(kernel, bucket, ops)| {
+                    Json::obj(vec![
+                        ("kernel", Json::str(kernel)),
+                        ("bucket", Json::str(bucket)),
+                        ("ops", Json::num(ops as f64)),
+                    ])
+                },
+            )),
+        ),
         (
             "thread_budget",
             Json::Num(crate::util::gemm_thread_budget() as f64),
@@ -479,6 +511,7 @@ fn drive_sync(
 ) -> Result<DriveOutcome> {
     let mut lat_ms: Vec<f64> = Vec::with_capacity(cfg.requests);
     let mut results: Vec<Option<Mat>> = Vec::with_capacity(cfg.requests);
+    let mut kernel_ops = KernelOpCounts::default();
     let sw_all = Stopwatch::start();
     for chunk in requests.chunks(cfg.batch.max(1)) {
         let ops: Vec<OwnedGemmOp> = chunk
@@ -492,8 +525,9 @@ fn drive_sync(
             })
             .collect::<Result<_>>()?;
         let sw = Stopwatch::start();
-        let outs = BatchGemm::new(rt).run(&ops)?;
+        let (outs, report) = BatchGemm::new(rt).run_with_stats(&ops)?;
         let ms = sw.ms();
+        kernel_ops.merge(&report.kernel_ops);
         for _ in chunk {
             lat_ms.push(ms);
         }
@@ -506,6 +540,7 @@ fn drive_sync(
         rejected: 0,
         misses: 0,
         service: None,
+        kernel_ops,
     })
 }
 
@@ -584,6 +619,7 @@ fn drive_async(
         rejected,
         misses,
         service: Some(stats),
+        kernel_ops: stats.kernel_ops,
     })
 }
 
@@ -619,6 +655,20 @@ mod tests {
             report.to_json().req("mode").unwrap().as_str().unwrap(),
             "sync"
         );
+        // The artifact records which kernel actually executed each op;
+        // the per-bucket counts must cover the full completed stream
+        // and name only registered backends.
+        let entries = report.to_json().req("kernel_ops").unwrap().as_arr().unwrap().to_vec();
+        let mut total = 0usize;
+        for e in &entries {
+            let kernel = e.req("kernel").unwrap().as_str().unwrap().to_string();
+            assert!(
+                crate::bfp::kernels::registry().by_name(&kernel).is_some(),
+                "{kernel:?} must be a registered backend"
+            );
+            total += e.req("ops").unwrap().as_usize().unwrap();
+        }
+        assert_eq!(total, 24, "executed-kernel counts cover every op");
     }
 
     #[test]
@@ -648,6 +698,18 @@ mod tests {
         assert!(j.req("encode_stage_ms").unwrap().as_f64().unwrap() >= 0.0);
         let rate = j.req("pre_encode_hit_rate").unwrap().as_f64().unwrap();
         assert!((0.0..=1.0).contains(&rate));
+        // Executed-kernel accounting covers the completed stream in
+        // async mode too (shed requests never execute, so they never
+        // count).
+        let total: usize = j
+            .req("kernel_ops")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.req("ops").unwrap().as_usize().unwrap())
+            .sum();
+        assert_eq!(total, report.completed);
     }
 
     #[test]

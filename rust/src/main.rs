@@ -52,7 +52,9 @@ SUBCOMMANDS
 
 POLICIES: fp32 | hbfpN | hbfpN+layersM | booster[K] | cyclicMIN-MAX
 Artifacts dir: --artifacts PATH (default ./artifacts or $REPRO_ARTIFACTS)
-Env knobs: BOOSTERS_KERNEL=auto|scalar|autovec|avx2 (GEMM backend),
+Env knobs: BOOSTERS_KERNEL=auto|scalar|autovec|avx2|avx512|neon (GEMM backend),
+  BOOSTERS_AUTOTUNE=PATH (shape-dispatch table, see bench --autotune),
+  BOOSTERS_PREENCODE_MB=N (resident pre-encoded activation-plane cap),
   BOOSTERS_GEMM_THREADS=N, BOOSTERS_CACHE_ENTRIES=N, BOOSTERS_CACHE_MB=N";
 
 fn main() -> Result<()> {

@@ -30,9 +30,11 @@ pub fn exec_cache_snapshot() -> CacheStats {
 /// counters (submitted/completed/rejected, deadline misses, queue
 /// depth + high-water mark), the effective adaptive batch-MAC budget
 /// of the most recent batch, the GEMM kernel backend identity the
-/// service executes with, and the encode-pipeline counters (ops
-/// pre-encoded at admission time vs encoded inline at execution, plus
-/// cumulative encode-stage latency — see
+/// service executes with (plus per-backend/per-bucket counts of which
+/// kernel **actually** ran each op), and the encode-pipeline counters
+/// (ops pre-encoded at admission time vs encoded inline at execution,
+/// resident pre-encoded bytes under the `BOOSTERS_PREENCODE_MB`
+/// budget, plus cumulative encode-stage latency — see
 /// [`crate::exec::ServiceStats::pre_encode_hit_rate`]). Cumulative for
 /// the process; sample before/after a phase to attribute traffic to
 /// it. First use instantiates the service.

@@ -137,6 +137,13 @@ impl BenchSuite {
                 "cache_mb_cap".to_string(),
                 Json::Num((cache_bytes >> 20) as f64),
             ),
+            // How many shape-dispatch entries the registry loaded from
+            // the autotune artifact (0 = static dispatch only) — so a
+            // BENCH trajectory records whether numbers ran tuned.
+            (
+                "autotune_entries".to_string(),
+                Json::Num(reg.autotune().map(|t| t.len()).unwrap_or(0) as f64),
+            ),
         ];
         Self {
             title: title.to_string(),
@@ -261,6 +268,7 @@ mod tests {
         assert!(meta.req("thread_budget").unwrap().as_f64().unwrap() >= 1.0);
         assert!(meta.req("cache_entries_cap").unwrap().as_f64().unwrap() >= 1.0);
         assert!(meta.req("cache_mb_cap").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(meta.req("autotune_entries").unwrap().as_f64().unwrap() >= 0.0);
     }
 
     #[test]

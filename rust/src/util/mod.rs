@@ -60,6 +60,8 @@ pub enum KernelChoice {
     Scalar,
     Autovec,
     Avx2,
+    Avx512,
+    Neon,
 }
 
 impl KernelChoice {
@@ -69,14 +71,17 @@ impl KernelChoice {
             KernelChoice::Scalar => "scalar",
             KernelChoice::Autovec => "autovec",
             KernelChoice::Avx2 => "avx2",
+            KernelChoice::Avx512 => "avx512",
+            KernelChoice::Neon => "neon",
         }
     }
 }
 
 /// Pure parsing core of [`kernel_override`]: case-insensitive match on
-/// `{auto, scalar, autovec, avx2}`. Returns the parsed choice plus the
-/// rejected raw value (if any) so the env-reading wrapper can warn —
-/// unknown values must fall back to `Auto`, never panic.
+/// `{auto, scalar, autovec, avx2, avx512, neon}`. Returns the parsed
+/// choice plus the rejected raw value (if any) so the env-reading
+/// wrapper can warn — unknown values must fall back to `Auto`, never
+/// panic.
 pub fn parse_kernel_choice(raw: Option<&str>) -> (KernelChoice, Option<String>) {
     let Some(raw) = raw else {
         return (KernelChoice::Auto, None);
@@ -86,27 +91,66 @@ pub fn parse_kernel_choice(raw: Option<&str>) -> (KernelChoice, Option<String>) 
         "scalar" => (KernelChoice::Scalar, None),
         "autovec" => (KernelChoice::Autovec, None),
         "avx2" => (KernelChoice::Avx2, None),
+        "avx512" => (KernelChoice::Avx512, None),
+        "neon" => (KernelChoice::Neon, None),
         _ => (KernelChoice::Auto, Some(raw.to_string())),
     }
 }
 
 /// GEMM kernel override: the single home of the `BOOSTERS_KERNEL`
-/// environment variable (`auto` / `scalar` / `autovec` / `avx2`),
-/// hoisted here next to [`gemm_thread_budget`] / [`cache_budget`] so
-/// every dispatch site resolves it identically. Unknown values warn
-/// (once) and fall back to `auto`.
+/// environment variable (`auto` / `scalar` / `autovec` / `avx2` /
+/// `avx512` / `neon`), hoisted here next to [`gemm_thread_budget`] /
+/// [`cache_budget`] so every dispatch site resolves it identically.
+/// Unknown values warn (once) and fall back to `auto`.
 pub fn kernel_override() -> KernelChoice {
     let (choice, rejected) = parse_kernel_choice(std::env::var("BOOSTERS_KERNEL").ok().as_deref());
     if let Some(raw) = rejected {
         static WARNED: std::sync::Once = std::sync::Once::new();
         WARNED.call_once(|| {
             eprintln!(
-                "[boosters] BOOSTERS_KERNEL={raw:?} is not one of auto/scalar/autovec/avx2; \
-                 falling back to auto"
+                "[boosters] BOOSTERS_KERNEL={raw:?} is not one of \
+                 auto/scalar/autovec/avx2/avx512/neon; falling back to auto"
             );
         });
     }
     choice
+}
+
+/// Autotune-table path override: the single home of the
+/// `BOOSTERS_AUTOTUNE` environment variable. `Some(path)` when set and
+/// non-empty; the kernel registry then treats a missing or corrupt file
+/// at that path as a (warn-once) fall back to static dispatch. When
+/// unset, the registry probes the default artifact locations instead
+/// (`artifacts/autotune.json` relative to the package root, or
+/// `rust/artifacts/autotune.json` relative to the repo root).
+pub fn autotune_path() -> Option<std::path::PathBuf> {
+    std::env::var("BOOSTERS_AUTOTUNE")
+        .ok()
+        .map(|v| v.trim().to_string())
+        .filter(|v| !v.is_empty())
+        .map(std::path::PathBuf::from)
+}
+
+/// Default cap on resident pre-encoded activation planes queued ahead
+/// of execution (bytes): 256 MiB.
+pub const DEFAULT_PREENCODE_BYTES: u64 = 256 << 20;
+
+/// Pre-encode memory budget (bytes) for the async exec service: the
+/// single home of the `BOOSTERS_PREENCODE_MB` override (any positive
+/// integer, in MiB). The background encoder stalls — never drops work —
+/// while the resident bytes of pre-encoded-but-still-queued activation
+/// planes sit at or above this cap.
+pub fn preencode_budget() -> u64 {
+    parse_preencode_budget(std::env::var("BOOSTERS_PREENCODE_MB").ok().as_deref())
+}
+
+/// Pure parsing core of [`preencode_budget`]: malformed, zero, or
+/// missing values fall back to [`DEFAULT_PREENCODE_BYTES`].
+pub fn parse_preencode_budget(mb: Option<&str>) -> u64 {
+    mb.and_then(|s| s.trim().parse::<u64>().ok())
+        .filter(|&n| n >= 1)
+        .map(|mb| mb << 20)
+        .unwrap_or(DEFAULT_PREENCODE_BYTES)
 }
 
 /// Default operand-cache caps: entry count and approximate resident
@@ -205,11 +249,12 @@ mod tests {
         assert_eq!(parse_kernel_choice(None), (KernelChoice::Auto, None));
         assert_eq!(parse_kernel_choice(Some("")), (KernelChoice::Auto, None));
         assert_eq!(parse_kernel_choice(Some("auto")), (KernelChoice::Auto, None));
-        // The three named backends, case-insensitive, whitespace
-        // tolerated.
+        // The named backends, case-insensitive, whitespace tolerated.
         assert_eq!(parse_kernel_choice(Some("scalar")), (KernelChoice::Scalar, None));
         assert_eq!(parse_kernel_choice(Some(" AutoVec ")), (KernelChoice::Autovec, None));
         assert_eq!(parse_kernel_choice(Some("AVX2")), (KernelChoice::Avx2, None));
+        assert_eq!(parse_kernel_choice(Some("avx512")), (KernelChoice::Avx512, None));
+        assert_eq!(parse_kernel_choice(Some(" NEON ")), (KernelChoice::Neon, None));
         // Unknown values fall back to Auto and surface the raw string
         // for the warn path — no panic.
         let (choice, rejected) = parse_kernel_choice(Some("sse9"));
@@ -219,6 +264,22 @@ mod tests {
         let _ = kernel_override();
         assert_eq!(KernelChoice::default(), KernelChoice::Auto);
         assert_eq!(KernelChoice::Avx2.label(), "avx2");
+        assert_eq!(KernelChoice::Avx512.label(), "avx512");
+        assert_eq!(KernelChoice::Neon.label(), "neon");
+    }
+
+    #[test]
+    fn preencode_budget_parsing_and_fallback() {
+        // Unset -> default cap.
+        assert_eq!(parse_preencode_budget(None), DEFAULT_PREENCODE_BYTES);
+        // Valid override (MiB converts to bytes; whitespace tolerated).
+        assert_eq!(parse_preencode_budget(Some(" 8 ")), 8 << 20);
+        // Zero and garbage fall back — the cap is never 0 (which would
+        // permanently stall the encoder).
+        assert_eq!(parse_preencode_budget(Some("0")), DEFAULT_PREENCODE_BYTES);
+        assert_eq!(parse_preencode_budget(Some("lots")), DEFAULT_PREENCODE_BYTES);
+        // The env-reading wrapper always yields a usable cap.
+        assert!(preencode_budget() >= 1);
     }
 
     #[test]

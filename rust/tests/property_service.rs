@@ -86,10 +86,11 @@ fn prop_async_bit_identical_to_sync_and_scalar() {
     }
 }
 
-/// Acceptance gate (PR 4): the service stays bit-identical to the
-/// scalar reference under **every kernel-backend choice** — forced
-/// scalar, forced autovec, and forced AVX2 (which degrades to a
-/// runnable backend on hosts without it) — across serial and
+/// Acceptance gate (PR 4, extended PR 6): the service stays
+/// bit-identical to the scalar reference under **every kernel-backend
+/// choice** — forced scalar, forced autovec, and forced AVX2 /
+/// AVX-512-VNNI / NEON (each of which degrades loudly to a runnable
+/// backend on hosts without the feature) — across serial and
 /// multi-thread pools, on the full grid (nibble-packed m <= 4 planes
 /// included). The adaptive batch budget is active throughout; like
 /// every scheduling knob it can never touch numerics.
@@ -97,7 +98,13 @@ fn prop_async_bit_identical_to_sync_and_scalar() {
 fn prop_service_bit_identical_under_every_kernel_choice() {
     let mut rng = Rng::new(0x6B31);
     let ops = build_ops(&mut rng);
-    for choice in [KernelChoice::Scalar, KernelChoice::Autovec, KernelChoice::Avx2] {
+    for choice in [
+        KernelChoice::Scalar,
+        KernelChoice::Autovec,
+        KernelChoice::Avx2,
+        KernelChoice::Avx512,
+        KernelChoice::Neon,
+    ] {
         for threads in [1usize, 4] {
             let svc = BfpService::new(
                 Arc::new(ExecRuntime::with_threads(threads)),
@@ -151,7 +158,13 @@ fn prop_pre_encoded_bit_identical_to_inline_and_scalar() {
     let inline_ops = build_ops(&mut Rng::new(SEED));
     let inline_rt = ExecRuntime::with_threads(1);
     let inline = BatchGemm::new(&inline_rt).run(&inline_ops).unwrap();
-    for choice in [KernelChoice::Scalar, KernelChoice::Autovec, KernelChoice::Avx2] {
+    for choice in [
+        KernelChoice::Scalar,
+        KernelChoice::Autovec,
+        KernelChoice::Avx2,
+        KernelChoice::Avx512,
+        KernelChoice::Neon,
+    ] {
         for threads in [1usize, 4] {
             // Fresh ops (same deterministic values, EMPTY slots) per
             // grid cell, so every cell's pre-encode stage really runs
