@@ -38,6 +38,7 @@ BENCHES_OF_RECORD = [
     "BatchGemm 64 heterogeneous ops (MACs)",
     "sequential BatchGemm 1-op batches, same 64 ops (MACs)",
     "sequential hbfp_gemm via service, same 64 ops (MACs)",
+    "BfpService async pipeline 64 ops decode-overlap (MACs)",
 ]
 
 

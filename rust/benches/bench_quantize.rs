@@ -17,7 +17,7 @@ use boosters::bfp::{
     quantize_packed_into, registry, AutotuneTable, BfpMatrix, BfpTensor, BlockFormat, Mat,
     Quantizer,
 };
-use boosters::exec::{BatchGemm, OwnedGemmOp};
+use boosters::exec::{BatchGemm, GemmRequest, OwnedGemmOp};
 use boosters::util::bench::{bench_fn, BenchSuite};
 use boosters::util::Rng;
 use std::path::PathBuf;
@@ -324,6 +324,37 @@ fn main() {
                 std::hint::black_box(hbfp_gemm(x, &bweights[*wi], batch_fmt).unwrap());
             }
         },
+    );
+    // Three-stage pipeline: submit all 64 ops up front, then drain the
+    // tickets. The decode stage of batch N runs while batch N+1 encodes
+    // and executes, and every output/accumulator buffer cycles through
+    // the arena — this series is the decode-overlap bench of record.
+    let svc = boosters::exec::global_service();
+    suite.bench_items(
+        "BfpService async pipeline 64 ops decode-overlap (MACs)",
+        Some(batch_macs),
+        || {
+            let tickets: Vec<_> = bxs
+                .iter()
+                .map(|(wi, x)| {
+                    let op = OwnedGemmOp::new(Arc::clone(x), Arc::clone(&bweights[*wi]), batch_fmt)
+                        .unwrap();
+                    svc.submit_blocking(GemmRequest::new(op)).unwrap()
+                })
+                .collect();
+            for t in &tickets {
+                std::hint::black_box(t.wait().unwrap());
+            }
+        },
+    );
+    let ss = svc.stats();
+    println!(
+        "### service pipeline after decode-overlap bench: decode_ops={} overlapped={} ({:.0}%) arena hit rate {:.0}% recycled {} KiB",
+        ss.decode_ops,
+        ss.decoded_overlapped,
+        100.0 * ss.decode_overlap_rate(),
+        100.0 * ss.arena_hit_rate(),
+        ss.arena_recycled_bytes / 1024
     );
     println!("### exec cache after batch benches: {}", rt.cache_stats().summary());
 

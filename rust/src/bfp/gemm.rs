@@ -57,10 +57,20 @@ pub(crate) const PARALLEL_MIN_MACS: usize = 1 << 22;
 /// the band loop and shared between the single-op path and the batch
 /// scheduler.
 pub(crate) fn band_shifts(m: &BfpMatrix) -> Vec<i32> {
-    m.exponents
-        .iter()
-        .map(|&e| scale_shift(e, m.fmt.mantissa_bits))
-        .collect()
+    let mut out = Vec::with_capacity(m.exponents.len());
+    band_shifts_into(m, &mut out);
+    out
+}
+
+/// [`band_shifts`] into a caller-provided vector — the pipeline's
+/// decode stage fills arena-recycled shift planes without reallocating.
+/// Same mapping, same order; the vector is cleared first.
+pub(crate) fn band_shifts_into(m: &BfpMatrix, out: &mut Vec<i32>) {
+    out.clear();
+    out.reserve(m.exponents.len());
+    for &e in &m.exponents {
+        out.push(scale_shift(e, m.fmt.mantissa_bits));
+    }
 }
 
 /// Band count for an `rows x cols` output with `k` MACs per element.

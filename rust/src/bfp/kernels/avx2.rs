@@ -23,7 +23,10 @@
 //! low nibbles sign-extend via `((b & 0xF) ^ 8) - 8` on 32 lanes at
 //! once, high nibbles via a 4-bit shift first — no unpack buffer.
 
-use super::{run_tiled_band, BandTask, BlockDot, GemmKernel, MAX_I32_BLOCK};
+use super::{
+    run_band_macs_generic, run_tiled_band, run_tiled_band_macs, BandTask, BlockDot, GemmKernel,
+    MacBandTask, MAX_I32_BLOCK,
+};
 use crate::bfp::packed::{nib_hi, nib_lo, MantissaPlane, PlaneLayout};
 use std::arch::x86_64::*;
 
@@ -304,5 +307,30 @@ impl GemmKernel for Avx2Kernel {
             }
         };
         run_tiled_band(&d, xsh, wsh, r0, rows, n, kb, b, out)
+    }
+
+    fn run_band_macs(&self, t: MacBandTask<'_>) {
+        if !std::arch::is_x86_feature_detected!("avx2")
+            || t.x.fmt.block_size > MAX_I32_BLOCK
+            || t.w.fmt.block_size > MAX_I32_BLOCK
+        {
+            // Same re-check as `run_band`: direct callers stay correct
+            // via the portable generic loop.
+            return run_band_macs_generic(t);
+        }
+        let MacBandTask { x, w, r0, rows, macs } = t;
+        let n = w.rows;
+        let kb = x.blocks_per_row;
+        let b = x.fmt.block_size;
+        debug_assert_eq!(kb, w.blocks_per_row);
+        let d = match (&x.mantissas, &w.mantissas) {
+            (MantissaPlane::I8(a), MantissaPlane::I8(wm)) => Avx2Dot::I8I8(a, wm),
+            (MantissaPlane::I4Packed(a), MantissaPlane::I4Packed(wm)) => Avx2Dot::NibNib(a, wm),
+            _ => {
+                debug_assert!(false, "AVX2 MAC pass dispatched an unsupported plane pair");
+                return run_band_macs_generic(MacBandTask { x, w, r0, rows, macs });
+            }
+        };
+        run_tiled_band_macs(&d, r0, rows, n, kb, b, macs)
     }
 }

@@ -29,7 +29,10 @@
 //! registers via `((b & 0xF) ^ 8) - 8` and widened to two 512-bit
 //! i16 vectors — no unpack buffer.
 
-use super::{run_tiled_band, BandTask, BlockDot, GemmKernel, MAX_I32_BLOCK};
+use super::{
+    run_band_macs_generic, run_tiled_band, run_tiled_band_macs, BandTask, BlockDot, GemmKernel,
+    MacBandTask, MAX_I32_BLOCK,
+};
 use crate::bfp::packed::{nib_hi, nib_lo, MantissaPlane, PlaneLayout};
 use std::arch::x86_64::*;
 
@@ -354,5 +357,33 @@ impl GemmKernel for Avx512Kernel {
             }
         };
         run_tiled_band(&d, xsh, wsh, r0, rows, n, kb, b, out)
+    }
+
+    fn run_band_macs(&self, t: MacBandTask<'_>) {
+        if !avx512_available()
+            || t.x.fmt.block_size > MAX_I32_BLOCK
+            || t.w.fmt.block_size > MAX_I32_BLOCK
+        {
+            // Same re-check as `run_band`: direct callers stay correct
+            // via the portable generic loop.
+            return run_band_macs_generic(t);
+        }
+        let MacBandTask { x, w, r0, rows, macs } = t;
+        let n = w.rows;
+        let kb = x.blocks_per_row;
+        let b = x.fmt.block_size;
+        debug_assert_eq!(kb, w.blocks_per_row);
+        let vnni = std::arch::is_x86_feature_detected!("avx512vnni");
+        let d = match (&x.mantissas, &w.mantissas) {
+            (MantissaPlane::I8(a), MantissaPlane::I8(wm)) => Avx512Dot::I8I8(a, wm, vnni),
+            (MantissaPlane::I4Packed(a), MantissaPlane::I4Packed(wm)) => {
+                Avx512Dot::NibNib(a, wm, vnni)
+            }
+            _ => {
+                debug_assert!(false, "AVX-512 MAC pass dispatched an unsupported plane pair");
+                return run_band_macs_generic(MacBandTask { x, w, r0, rows, macs });
+            }
+        };
+        run_tiled_band_macs(&d, r0, rows, n, kb, b, macs)
     }
 }

@@ -106,6 +106,24 @@ pub struct BandTask<'a> {
     pub out: &'a mut [f32],
 }
 
+/// One contiguous band of the **integer MAC pass** — the first half of
+/// the split (MAC → decode) execution pipeline. The kernel fills
+/// `macs` with the exact per-(row, column, k-block) block MACs of
+/// activation rows `r0 .. r0 + rows`, laid out band-locally as
+/// `macs[(i * n + j) * kb + k]` (`i` relative to `r0`, `n = w.rows`,
+/// `kb = x.blocks_per_row`). No scale shifts are applied here — the
+/// decode stage ([`decode_mac_band`]) replays the f64 accumulation
+/// later, possibly on another thread while the next batch's MACs run.
+/// Only valid for operand pairs where [`mac_split_supported`] holds
+/// (narrow planes, block MAC provably fits `i32`).
+pub struct MacBandTask<'a> {
+    pub x: &'a BfpMatrix,
+    pub w: &'a BfpMatrix,
+    pub r0: usize,
+    pub rows: usize,
+    pub macs: &'a mut [i32],
+}
+
 /// A band-level GEMM micro-kernel. Implementations must be pure
 /// functions of the task (no scheduling decisions) and must accumulate
 /// each output element's blocks in ascending contraction order so that
@@ -125,6 +143,18 @@ pub trait GemmKernel: Send + Sync {
     fn supports(&self, x: PlaneLayout, w: PlaneLayout, block: usize) -> bool;
 
     fn run_band(&self, task: BandTask<'_>);
+
+    /// The integer-MAC half of the split pipeline: same traversal as
+    /// [`GemmKernel::run_band`], but block MACs are **stored** instead
+    /// of scaled-and-accumulated, so the f32 decode can run as its own
+    /// pipeline stage. Callers must check [`mac_split_supported`]
+    /// first. The default runs the portable generic loop; SIMD
+    /// backends override it with their own block-dot inner loops —
+    /// either way the stored MACs are the exact integers, so the
+    /// decode stage reproduces the fused path bit-for-bit.
+    fn run_band_macs(&self, task: MacBandTask<'_>) {
+        run_band_macs_generic(task);
+    }
 }
 
 /// Read access to one mantissa plane by absolute value index — the
@@ -334,6 +364,115 @@ pub(crate) fn run_tiled_band<D: BlockDot>(
             j0 += tj;
         }
     }
+}
+
+/// Whether the (MAC, decode) split is valid for an operand pair: both
+/// planes narrow (i4/i8 mantissas) so every block MAC provably fits an
+/// `i32`, and the block small enough that the worst-case sum does too.
+/// Wide (i16) pairs keep the fused [`run_tiled_band`] path — the
+/// decode stage then only publishes their already-decoded outputs.
+pub(crate) fn mac_split_supported(x: PlaneLayout, w: PlaneLayout, block: usize) -> bool {
+    fn narrow(l: PlaneLayout) -> bool {
+        matches!(l, PlaneLayout::I4Packed | PlaneLayout::I8)
+    }
+    narrow(x) && narrow(w) && block <= MAX_I32_BLOCK
+}
+
+/// Shared MAC-pass loop: the exact traversal of [`run_tiled_band`],
+/// but each block MAC is stored into `macs[(i * n + j) * kb + k]`
+/// instead of being scaled and accumulated. Because the fused loop's
+/// f64 accumulator for an output element only ever sees that element's
+/// own block MACs in ascending `k` order, replaying the stored MACs in
+/// ascending `k` (see [`decode_mac_band`]) reproduces the fused result
+/// bit-for-bit. The `i32` store is exact: callers gate on
+/// [`mac_split_supported`], which bounds every MAC well below `2^31`.
+pub(crate) fn run_tiled_band_macs<D: BlockDot>(
+    d: &D,
+    r0: usize,
+    band_rows: usize,
+    n: usize,
+    kb: usize,
+    b: usize,
+    macs: &mut [i32],
+) {
+    let stride = kb * b;
+    for i in 0..band_rows {
+        let xrow = (r0 + i) * stride;
+        let mrow = &mut macs[i * n * kb..(i + 1) * n * kb];
+        let mut j0 = 0;
+        while j0 < n {
+            let tj = TILE_J.min(n - j0);
+            for k in 0..kb {
+                let a_off = xrow + k * b;
+                let mut jj = 0;
+                while jj + 4 <= tj {
+                    let j = j0 + jj;
+                    let o0 = j * stride + k * b;
+                    let (o1, o2, o3) = (o0 + stride, o0 + 2 * stride, o0 + 3 * stride);
+                    let quad = d.dot4(a_off, [o0, o1, o2, o3], b);
+                    for (q, &mac) in quad.iter().enumerate() {
+                        mrow[(j + q) * kb + k] = mac as i32;
+                    }
+                    jj += 4;
+                }
+                while jj < tj {
+                    let j = j0 + jj;
+                    mrow[j * kb + k] = d.dot(a_off, j * stride + k * b, b) as i32;
+                    jj += 1;
+                }
+            }
+            j0 += tj;
+        }
+    }
+}
+
+/// Decode stage: scale-shift + f64-accumulate a band of stored MACs
+/// into f32 outputs. Per output element this performs exactly the adds
+/// the fused loop would have — same operands, same ascending `k`
+/// order, same `if mac != 0` skip — so the result is bit-identical to
+/// [`run_tiled_band`] regardless of how either pass was band-sharded
+/// (elements never share an accumulator). `macs` and `out` are
+/// band-local (rows `r0 .. r0 + rows`); the shift vectors are global.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn decode_mac_band(
+    macs: &[i32],
+    xsh: &[i32],
+    wsh: &[i32],
+    r0: usize,
+    rows: usize,
+    n: usize,
+    kb: usize,
+    out: &mut [f32],
+) {
+    for i in 0..rows {
+        let xs = &xsh[(r0 + i) * kb..(r0 + i + 1) * kb];
+        let mrow = &macs[i * n * kb..(i + 1) * n * kb];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let mj = &mrow[j * kb..(j + 1) * kb];
+            let wj = &wsh[j * kb..(j + 1) * kb];
+            let mut acc = 0.0f64;
+            for k in 0..kb {
+                let mac = mj[k];
+                if mac != 0 {
+                    acc += mac as f64 * exp2_f64(xs[k] + wj[k]);
+                }
+            }
+            *o = acc as f32;
+        }
+    }
+}
+
+/// Portable MAC pass used by [`GemmKernel::run_band_macs`]'s default
+/// implementation and as the fallback when a SIMD backend's feature or
+/// layout re-check fails at the band level.
+pub(crate) fn run_band_macs_generic(t: MacBandTask<'_>) {
+    let n = t.w.rows;
+    let kb = t.x.blocks_per_row;
+    let b = t.x.fmt.block_size;
+    with_plane_pair_dot!(&t.x.mantissas, &t.w.mantissas, |d| run_tiled_band_macs(
+        &d, t.r0, t.rows, n, kb, b, t.macs
+    ));
 }
 
 // --- registry --------------------------------------------------------------

@@ -1,0 +1,361 @@
+//! Size-classed buffer recycling arena — the allocation-reuse half of
+//! the three-stage pipeline.
+//!
+//! Every batch the service executes needs transient storage with a
+//! short, predictable lifetime: the output `Mat` data of each op, the
+//! i32 MAC accumulator planes of the split decode path, and the
+//! per-operand scale-shift scratch derived from the exponent planes.
+//! Allocating these fresh per batch puts the allocator on the hot path
+//! at exactly the batch cadence; the arena instead keeps returned
+//! buffers on power-of-two size-classed free lists and hands them back
+//! on the next checkout of a compatible size.
+//!
+//! # Contract
+//!
+//! * **Purity** — a checked-out buffer is always zeroed (`clear` +
+//!   `resize(len, 0)`) before it is returned, so a recycled buffer can
+//!   never leak a prior batch's contents, whatever the previous user
+//!   wrote. Property tests pin this.
+//! * **Byte-capped residency** — `BOOSTERS_ARENA_MB` (default
+//!   [`crate::util::DEFAULT_ARENA_BYTES`]) caps the sum of free-list
+//!   and checked-out bytes. A checkout that would exceed the cap first
+//!   **stalls** (bounded waits for in-flight buffers to return), then
+//!   evicts free buffers, and finally allocates anyway — the cap
+//!   degrades to back-pressure plus eviction, never to corruption or
+//!   deadlock. A returned buffer that would push residency over the
+//!   cap is simply dropped.
+//! * **Checkout/return** — the execution stages check buffers out per
+//!   batch; output buffers ride inside `Mat`s to the caller's
+//!   [`crate::exec::Ticket`], which returns them on result take
+//!   (accounting release — ownership leaves the arena) or recycles
+//!   them on drop-without-take. MAC and scratch planes return at the
+//!   end of the decode stage.
+//!
+//! Counters (hits, misses, recycled bytes, resident bytes) surface in
+//! [`crate::exec::ServiceStats`] and `exec_service_snapshot()`.
+
+use super::pool::{lock_or_poisoned, wait_timeout_or_poisoned};
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// One bounded wait while a checkout stalls on the residency cap.
+const STALL_WAIT: Duration = Duration::from_millis(20);
+
+/// Maximum stall rounds before a checkout proceeds regardless — keeps
+/// the cap a throttle, not a deadlock (the waited-for buffers may be
+/// held by the very pipeline stage that is asking).
+const STALL_ROUNDS: usize = 5;
+
+/// Point-in-time arena counters (monotonic except `resident_bytes`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Checkouts served from a free list.
+    pub hits: u64,
+    /// Checkouts that had to allocate fresh storage.
+    pub misses: u64,
+    /// Total bytes of reused (not freshly allocated) checkouts.
+    pub recycled_bytes: u64,
+    /// Free-list plus checked-out bytes right now.
+    pub resident_bytes: u64,
+    /// The configured residency cap.
+    pub cap_bytes: u64,
+}
+
+impl ArenaStats {
+    /// Fraction of checkouts served from the free lists (0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Free lists keyed by the largest power of two <= the buffer's actual
+/// capacity, so every buffer filed under class `C` can serve any
+/// request of class <= `C` without reallocating.
+struct ArenaState {
+    f32_free: BTreeMap<usize, Vec<Vec<f32>>>,
+    i32_free: BTreeMap<usize, Vec<Vec<i32>>>,
+    free_bytes: u64,
+    outstanding_bytes: u64,
+    hits: u64,
+    misses: u64,
+    recycled_bytes: u64,
+}
+
+/// The size-classed recycling arena (see module docs).
+pub struct BufferArena {
+    state: Mutex<ArenaState>,
+    /// Signalled on every return/release so stalled checkouts re-check.
+    space_cv: Condvar,
+    cap_bytes: u64,
+}
+
+/// Request class: smallest power of two >= `len` (min 1) — the
+/// capacity a fresh allocation asks for.
+fn size_class(len: usize) -> usize {
+    len.max(1).next_power_of_two()
+}
+
+/// Filing class: largest power of two <= `cap`. Filed under the floor
+/// (not `next_power_of_two`) because the allocator may hand back more
+/// capacity than requested; flooring keeps the invariant that every
+/// buffer in class `C` has capacity >= `C`.
+fn floor_class(cap: usize) -> usize {
+    debug_assert!(cap > 0);
+    1usize << (usize::BITS - 1 - cap.leading_zeros())
+}
+
+/// Pop a buffer from the smallest class >= `class` (best fit).
+fn pop_at_least<T>(map: &mut BTreeMap<usize, Vec<Vec<T>>>, class: usize) -> Option<Vec<T>> {
+    let key = map.range(class..).next().map(|(k, _)| *k)?;
+    let bucket = map.get_mut(&key).expect("class bucket exists");
+    let buf = bucket.pop();
+    if bucket.is_empty() {
+        map.remove(&key);
+    }
+    buf
+}
+
+/// Drop one free buffer, largest class first (either element type).
+/// Returns the bytes reclaimed, or `None` when the free lists are
+/// empty.
+fn evict_one(st: &mut ArenaState) -> Option<u64> {
+    let f_max = st.f32_free.keys().next_back().copied().unwrap_or(0);
+    let i_max = st.i32_free.keys().next_back().copied().unwrap_or(0);
+    if f_max == 0 && i_max == 0 {
+        return None;
+    }
+    let bytes = if f_max >= i_max {
+        let buf = pop_at_least(&mut st.f32_free, f_max)?;
+        (buf.capacity() * std::mem::size_of::<f32>()) as u64
+    } else {
+        let buf = pop_at_least(&mut st.i32_free, i_max)?;
+        (buf.capacity() * std::mem::size_of::<i32>()) as u64
+    };
+    st.free_bytes = st.free_bytes.saturating_sub(bytes);
+    Some(bytes)
+}
+
+impl BufferArena {
+    /// An arena whose free + checked-out bytes are capped at
+    /// `cap_bytes` (the `BOOSTERS_ARENA_MB` budget for the runtime's
+    /// instance; tests pass explicit caps).
+    pub fn new(cap_bytes: u64) -> Self {
+        Self {
+            state: Mutex::new(ArenaState {
+                f32_free: BTreeMap::new(),
+                i32_free: BTreeMap::new(),
+                free_bytes: 0,
+                outstanding_bytes: 0,
+                hits: 0,
+                misses: 0,
+                recycled_bytes: 0,
+            }),
+            space_cv: Condvar::new(),
+            cap_bytes,
+        }
+    }
+
+    /// The configured residency cap in bytes.
+    pub fn cap_bytes(&self) -> u64 {
+        self.cap_bytes
+    }
+
+    /// Point-in-time counters.
+    pub fn stats(&self) -> ArenaStats {
+        let st = lock_or_poisoned(&self.state, "buffer arena");
+        ArenaStats {
+            hits: st.hits,
+            misses: st.misses,
+            recycled_bytes: st.recycled_bytes,
+            resident_bytes: st.free_bytes + st.outstanding_bytes,
+            cap_bytes: self.cap_bytes,
+        }
+    }
+
+    /// Account a checked-out buffer as having left the arena for good
+    /// (the caller took ownership of the result, e.g. on ticket take).
+    pub fn release(&self, bytes: u64) {
+        let mut st = lock_or_poisoned(&self.state, "buffer arena");
+        st.outstanding_bytes = st.outstanding_bytes.saturating_sub(bytes);
+        drop(st);
+        self.space_cv.notify_all();
+    }
+}
+
+/// The typed checkout/return pair — one instantiation per element
+/// type, sharing the class/accounting logic above. Both paths zero the
+/// buffer on checkout (the purity contract) and account residency by
+/// the buffer's **actual** capacity, so take/put bookkeeping always
+/// cancels exactly.
+macro_rules! arena_typed {
+    ($take:ident, $put:ident, $field:ident, $ty:ty, $zero:expr) => {
+        impl BufferArena {
+            /// Check out a zeroed buffer of `len` elements.
+            pub fn $take(&self, len: usize) -> Vec<$ty> {
+                let class = size_class(len);
+                let need = (class * std::mem::size_of::<$ty>()) as u64;
+                let mut st = lock_or_poisoned(&self.state, "buffer arena");
+                let mut stalls = 0;
+                loop {
+                    if let Some(mut buf) = pop_at_least(&mut st.$field, class) {
+                        let bytes = (buf.capacity() * std::mem::size_of::<$ty>()) as u64;
+                        st.free_bytes = st.free_bytes.saturating_sub(bytes);
+                        st.outstanding_bytes += bytes;
+                        st.hits += 1;
+                        st.recycled_bytes += bytes;
+                        drop(st);
+                        buf.clear();
+                        buf.resize(len, $zero);
+                        return buf;
+                    }
+                    let over = st.free_bytes + st.outstanding_bytes + need > self.cap_bytes;
+                    if over && st.outstanding_bytes > 0 && stalls < STALL_ROUNDS {
+                        // Residency cap back-pressure: wait (bounded)
+                        // for in-flight buffers to come back, then
+                        // retry the free lists.
+                        stalls += 1;
+                        st = wait_timeout_or_poisoned(
+                            &self.space_cv,
+                            st,
+                            STALL_WAIT,
+                            "buffer arena",
+                        );
+                        continue;
+                    }
+                    if over {
+                        while st.free_bytes + st.outstanding_bytes + need > self.cap_bytes
+                            && evict_one(&mut st).is_some()
+                        {}
+                    }
+                    st.misses += 1;
+                    let mut buf: Vec<$ty> = Vec::with_capacity(class);
+                    buf.resize(len, $zero);
+                    st.outstanding_bytes +=
+                        (buf.capacity() * std::mem::size_of::<$ty>()) as u64;
+                    return buf;
+                }
+            }
+
+            /// Return a checked-out buffer for reuse. Dropped instead
+            /// of filed when keeping it would exceed the residency cap.
+            pub fn $put(&self, buf: Vec<$ty>) {
+                let cap = buf.capacity();
+                if cap == 0 {
+                    return;
+                }
+                let bytes = (cap * std::mem::size_of::<$ty>()) as u64;
+                let mut st = lock_or_poisoned(&self.state, "buffer arena");
+                st.outstanding_bytes = st.outstanding_bytes.saturating_sub(bytes);
+                if st.free_bytes + st.outstanding_bytes + bytes <= self.cap_bytes {
+                    st.free_bytes += bytes;
+                    st.$field.entry(floor_class(cap)).or_default().push(buf);
+                }
+                drop(st);
+                self.space_cv.notify_all();
+            }
+        }
+    };
+}
+
+arena_typed!(take_f32, put_f32, f32_free, f32, 0.0f32);
+arena_typed!(take_i32, put_i32, i32_free, i32, 0i32);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycled_buffers_are_zeroed_and_reuse_storage() {
+        let arena = BufferArena::new(1 << 20);
+        let mut buf = arena.take_f32(100);
+        assert_eq!(buf.len(), 100);
+        assert!(buf.iter().all(|&v| v == 0.0));
+        // Poison it the way a prior batch would.
+        for v in buf.iter_mut() {
+            *v = f32::NAN;
+        }
+        let cap = buf.capacity();
+        arena.put_f32(buf);
+        // Smaller request of the same class reuses the storage, zeroed.
+        let again = arena.take_f32(64);
+        assert_eq!(again.capacity(), cap, "free-list storage was reused");
+        assert_eq!(again.len(), 64);
+        assert!(again.iter().all(|&v| v == 0.0), "recycled buffer leaked contents");
+        let s = arena.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!(s.recycled_bytes >= (64 * 4) as u64);
+        assert!(s.hit_rate() > 0.49 && s.hit_rate() < 0.51);
+    }
+
+    #[test]
+    fn i32_planes_recycle_independently_of_f32() {
+        let arena = BufferArena::new(1 << 20);
+        let mut m = arena.take_i32(257);
+        m.iter_mut().for_each(|v| *v = -7);
+        arena.put_i32(m);
+        // An f32 request never steals i32 storage.
+        let f = arena.take_f32(257);
+        assert!(f.iter().all(|&v| v == 0.0));
+        assert_eq!(arena.stats().misses, 2);
+        let m2 = arena.take_i32(300);
+        // 300 classes to 512, same as 257: hit, zeroed.
+        assert!(m2.iter().all(|&v| v == 0));
+        assert_eq!(arena.stats().hits, 1);
+    }
+
+    #[test]
+    fn residency_cap_drops_returns_and_never_blocks_progress() {
+        // Cap of one byte: nothing may be retained, everything still
+        // works (bounded stall, then allocate).
+        let arena = BufferArena::new(1);
+        let a = arena.take_f32(16);
+        assert_eq!(a.len(), 16);
+        // Second checkout while the first is outstanding: over cap with
+        // outstanding > 0 — stalls (bounded), then proceeds correctly.
+        let b = arena.take_f32(16);
+        assert_eq!(b.len(), 16);
+        assert!(b.iter().all(|&v| v == 0.0));
+        arena.put_f32(a);
+        arena.put_f32(b);
+        let s = arena.stats();
+        // Nothing retained: both returns were dropped.
+        assert_eq!(s.resident_bytes, 0);
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.misses, 2);
+    }
+
+    #[test]
+    fn release_accounts_buffers_that_leave_the_arena() {
+        let arena = BufferArena::new(1 << 20);
+        let buf = arena.take_f32(128);
+        let bytes = (buf.capacity() * 4) as u64;
+        assert_eq!(arena.stats().resident_bytes, bytes);
+        // The caller keeps the buffer (ticket take): accounting-only
+        // release returns residency to zero.
+        arena.release(bytes);
+        assert_eq!(arena.stats().resident_bytes, 0);
+        drop(buf);
+    }
+
+    #[test]
+    fn over_cap_checkout_evicts_free_buffers_first() {
+        // Cap fits exactly one 1024-element f32 buffer.
+        let arena = BufferArena::new(4096);
+        let a = arena.take_f32(1024);
+        arena.put_f32(a);
+        assert_eq!(arena.stats().resident_bytes, 4096);
+        // An i32 request of the same byte size cannot reuse the f32
+        // buffer; it evicts it to stay under the cap.
+        let b = arena.take_i32(1024);
+        assert_eq!(b.len(), 1024);
+        let s = arena.stats();
+        assert_eq!(s.resident_bytes, 4096, "evicted the free f32 buffer, kept the i32");
+        assert_eq!(s.misses, 2);
+    }
+}

@@ -7,9 +7,11 @@
 //! PR 1 made the fixed-point datapath bandwidth-bound per call; PR 2
 //! made it saturable across calls with [`BatchGemm`]; PR 3 moved batch
 //! formation off the caller's critical path; PR 5 split the service
-//! into **pipelined stages** so operand encode overlaps GEMM
-//! execution. The **front door of this module is
-//! [`service::BfpService`]**:
+//! into pipelined encode/execute stages; PR 7 completed the
+//! **three-stage pipeline** — encode, integer-MAC GEMM, and f32
+//! decode/writeback each run on their own stage, with a size-classed
+//! [`arena::BufferArena`] recycling the buffers that flow between
+//! them. The **front door of this module is [`service::BfpService`]**:
 //!
 //! * [`BfpService::submit`](service::BfpService::submit) is
 //!   non-blocking — it admits an owned [`OwnedGemmOp`] wrapped in a
@@ -17,23 +19,47 @@
 //!   back a [`Ticket`]; a full bounded queue returns the typed
 //!   [`AdmissionError::QueueFull`] instead of blocking (backpressure is
 //!   the caller's signal, not a hidden wait);
-//! * a dedicated **pre-encode stage thread** claims admitted requests
-//!   and encodes their operands ahead of execution — activations on
-//!   the shared pool, weights through the operand cache — into each
-//!   op's shared encoded slot, while the previous batch's GEMM is
-//!   still running. Encoding is deterministic, so the pipeline is pure
-//!   overlap: pre-encoded and inline-encoded ops are bit-identical
-//!   (property-pinned), and [`ServiceStats`] reports the pre-encode
-//!   hit rate and cumulative encode-stage latency;
-//! * a dedicated **scheduler thread** forms earliest-deadline-first,
-//!   MAC-budgeted batches and drives [`BatchGemm`] — the internal
-//!   execution stage, which consumes pre-encoded slots and encodes
-//!   whatever the pipeline missed inline ([`EncodeReport`] is the
-//!   per-batch accounting); its blocking `run` stays a thin
-//!   synchronous facade for tests/benches;
+//! * **stage 1 — pre-encode**: a dedicated thread claims admitted
+//!   requests and encodes their operands ahead of execution —
+//!   activations on the shared pool, weights through the operand cache
+//!   — into each op's shared encoded slot, while the previous batch's
+//!   GEMM is still running. Encoding is deterministic, so the pipeline
+//!   is pure overlap: pre-encoded and inline-encoded ops are
+//!   bit-identical (property-pinned), and [`ServiceStats`] reports the
+//!   pre-encode hit rate and cumulative encode-stage latency;
+//! * **stage 2 — MAC/GEMM**: a dedicated scheduler thread forms
+//!   earliest-deadline-first, MAC-budgeted batches and drives the
+//!   split execution path
+//!   ([`BatchGemm::run_split_with_stats`](scheduler::BatchGemm::run_split_with_stats)):
+//!   narrow-mantissa ops stop after storing raw `i32` block MACs into
+//!   arena-backed planes; wide ops run the fused kernel. The blocking
+//!   [`BatchGemm::run`] stays a thin synchronous facade for
+//!   tests/benches — it never touches the arena or the decode stage;
+//! * **stage 3 — decode/writeback**: a dedicated decode thread turns
+//!   staged MACs into f32 outputs (band-sharded on the same pool,
+//!   bit-identical by construction — it replays the exact per-element
+//!   `f64` scale-shift sum the fused kernels run), publishes each
+//!   [`Ticket`]'s result, and returns staging buffers to the arena.
+//!   Because fulfillment happens here, the scheduler is already
+//!   forming and executing batch `n + 1` while batch `n` decodes —
+//!   [`ServiceStats::decoded_overlapped`] counts exactly those ops;
+//! * the [`arena::BufferArena`] (byte-capped by `BOOSTERS_ARENA_MB`,
+//!   default 512 MiB) recycles output `Mat`s, `i32` MAC/shift planes,
+//!   and encode scratch across batches: checked out per batch,
+//!   returned on ticket take or drop. Over-cap checkouts briefly stall
+//!   for returns, then evict free buffers and proceed — the cap
+//!   degrades to backpressure, never to corruption. Hit/miss/recycled
+//!   counters surface in [`ServiceStats`] and
+//!   [`crate::metrics::exec_service_snapshot`];
 //! * synchronous consumers (`hbfp_gemm`, `dequant_gemm`, the Trainer's
 //!   host-BFP weight store) go through labeled
 //!   [`ServiceSession`](service::ServiceSession)s.
+//!
+//! Pause/drain semantics cover all three stages: `set_paused` gates
+//! batch formation while admission and pre-encode keep running, and
+//! service drop drains admitted work through MAC **and** decode before
+//! joining any stage thread — every admitted ticket is always
+//! fulfilled.
 //!
 //! # Pool lifecycle
 //!
@@ -108,12 +134,14 @@
 //! [`crate::bfp::hbfp_gemm_scalar`]. `tests/property_exec.rs` and
 //! `tests/property_service.rs` pin all of these.
 
+pub mod arena;
 pub mod cache;
 pub mod pool;
 pub mod queue;
 pub mod scheduler;
 pub mod service;
 
+pub use arena::{ArenaStats, BufferArena};
 pub use cache::{CacheKey, CacheStats, OperandCache};
 pub use pool::{Job, WorkerPool};
 pub use queue::{AdmissionError, GemmRequest, GemmResponse, Priority, Ticket};
@@ -124,18 +152,38 @@ use crate::bfp::{BfpMatrix, BlockFormat, Mat, Quantizer};
 use anyhow::Result;
 use std::sync::{Arc, OnceLock};
 
-/// One worker pool + one operand cache: the unit every execution-path
-/// consumer shares. See the module docs for lifecycle and guarantees.
+/// One worker pool + one operand cache + one buffer arena: the unit
+/// every execution-path consumer shares. See the module docs for
+/// lifecycle and guarantees.
 pub struct ExecRuntime {
     pool: WorkerPool,
     cache: OperandCache,
+    arena: Arc<BufferArena>,
 }
 
 impl ExecRuntime {
     pub fn new(threads: usize, cache_entries: usize, cache_bytes: usize) -> Self {
+        Self::new_with_caps(
+            threads,
+            cache_entries,
+            cache_bytes,
+            crate::util::DEFAULT_ARENA_BYTES,
+        )
+    }
+
+    /// [`ExecRuntime::new`] with an explicit arena residency cap in
+    /// bytes — tests use tiny caps to exercise the arena's
+    /// stall/evict/degrade path.
+    pub fn new_with_caps(
+        threads: usize,
+        cache_entries: usize,
+        cache_bytes: usize,
+        arena_bytes: u64,
+    ) -> Self {
         Self {
             pool: WorkerPool::with_threads(threads),
             cache: OperandCache::new(cache_entries, cache_bytes),
+            arena: Arc::new(BufferArena::new(arena_bytes)),
         }
     }
 
@@ -151,6 +199,17 @@ impl ExecRuntime {
 
     pub fn cache(&self) -> &OperandCache {
         &self.cache
+    }
+
+    /// The size-classed recycling arena behind the pipeline's output
+    /// and staging buffers (`BOOSTERS_ARENA_MB` for the global
+    /// runtime's cap).
+    pub fn arena(&self) -> &Arc<BufferArena> {
+        &self.arena
+    }
+
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena.stats()
     }
 
     pub fn cache_stats(&self) -> CacheStats {
@@ -208,10 +267,11 @@ static GLOBAL: OnceLock<Arc<ExecRuntime>> = OnceLock::new();
 fn global_cell() -> &'static Arc<ExecRuntime> {
     GLOBAL.get_or_init(|| {
         let (entries, bytes) = crate::util::cache_budget();
-        Arc::new(ExecRuntime::new(
+        Arc::new(ExecRuntime::new_with_caps(
             crate::util::gemm_thread_budget().min(16),
             entries,
             bytes,
+            crate::util::arena_budget(),
         ))
     })
 }

@@ -125,16 +125,29 @@ pub struct GemmResponse {
     pub total_ms: f64,
     /// The request finished after its absolute deadline.
     pub deadline_missed: bool,
+    /// Wall time the executing batch spent in its encode stage
+    /// (batch-attributed: every request in a batch reports the batch's
+    /// stage times, which is what the latency breakdown aggregates).
+    pub encode_ms: f64,
+    /// Wall time of the batch's integer-GEMM (MAC) stage.
+    pub gemm_ms: f64,
+    /// Wall time of the batch's decode/writeback stage.
+    pub decode_ms: f64,
 }
 
 #[derive(Debug)]
 struct TicketState {
     outcome: Option<Result<GemmResponse>>,
     taken: bool,
+    /// Set by the decode stage when the response's output buffer is
+    /// arena-backed: the arena plus the buffer's charged bytes. Cleared
+    /// on take (accounting release — the caller owns the buffer now)
+    /// or consumed on drop-without-take (the buffer itself recycles).
+    arena: Option<(Arc<super::arena::BufferArena>, u64)>,
 }
 
-/// Shared completion slot between a [`Ticket`] and the scheduler
-/// thread.
+/// Shared completion slot between a [`Ticket`] and the decode stage
+/// (or, on batch-error retries, the scheduler thread).
 #[derive(Debug)]
 pub(crate) struct TicketInner {
     state: Mutex<TicketState>,
@@ -147,18 +160,54 @@ impl TicketInner {
             state: Mutex::new(TicketState {
                 outcome: None,
                 taken: false,
+                arena: None,
             }),
             cv: Condvar::new(),
         })
     }
 
     /// Publish the outcome and wake every waiter. Called exactly once
-    /// per request by the scheduler thread.
+    /// per request by the pipeline stage that finished it.
     pub(crate) fn fulfill(&self, outcome: Result<GemmResponse>) {
+        self.fulfill_recycling(outcome, None);
+    }
+
+    /// [`TicketInner::fulfill`] for arena-backed outputs: `arena`
+    /// carries the arena handle and the output buffer's charged bytes,
+    /// so the take/drop paths can release or recycle it.
+    pub(crate) fn fulfill_recycling(
+        &self,
+        outcome: Result<GemmResponse>,
+        arena: Option<(Arc<super::arena::BufferArena>, u64)>,
+    ) {
         let mut st = lock_or_poisoned(&self.state, "service ticket");
         debug_assert!(st.outcome.is_none() && !st.taken, "ticket fulfilled twice");
         st.outcome = Some(outcome);
+        st.arena = arena;
         self.cv.notify_all();
+    }
+}
+
+impl Drop for TicketInner {
+    fn drop(&mut self) {
+        // Last handle gone: a fulfilled-but-never-taken arena-backed
+        // output recycles instead of hitting the allocator — this is
+        // the "returned on drop" half of the ticket/arena contract.
+        let Ok(st) = self.state.get_mut() else {
+            return;
+        };
+        if st.taken {
+            return;
+        }
+        if let Some((arena, bytes)) = st.arena.take() {
+            match st.outcome.take() {
+                Some(Ok(resp)) => arena.put_f32(resp.out.data),
+                // An arena charge without a live output (cannot happen
+                // today — errors fulfill without an arena) still must
+                // not leak residency accounting.
+                _ => arena.release(bytes),
+            }
+        }
     }
 }
 
@@ -188,6 +237,14 @@ impl Ticket {
         loop {
             if let Some(outcome) = st.outcome.take() {
                 st.taken = true;
+                // The caller owns an arena-backed output from here on:
+                // drop its residency charge (accounting only — the
+                // buffer itself left the arena for good).
+                let arena = st.arena.take();
+                drop(st);
+                if let Some((arena, bytes)) = arena {
+                    arena.release(bytes);
+                }
                 return outcome;
             }
             if st.taken {
@@ -206,6 +263,11 @@ impl Ticket {
         loop {
             if let Some(outcome) = st.outcome.take() {
                 st.taken = true;
+                let arena = st.arena.take();
+                drop(st);
+                if let Some((arena, bytes)) = arena {
+                    arena.release(bytes);
+                }
                 return Some(outcome);
             }
             if st.taken {
@@ -780,6 +842,9 @@ mod tests {
             queue_ms: 0.1,
             total_ms: 0.2,
             deadline_missed: false,
+            encode_ms: 0.0,
+            gemm_ms: 0.0,
+            decode_ms: 0.0,
         }));
         assert!(t.poll());
         let resp = t.wait().unwrap();
@@ -789,5 +854,62 @@ mod tests {
         assert!(t.poll());
         assert!(t.wait().is_err());
         assert!(t.wait_deadline(Duration::from_millis(1)).unwrap().is_err());
+    }
+
+    fn arena_backed_response(arena: &Arc<super::super::arena::BufferArena>) -> (GemmResponse, u64) {
+        let mut out = Mat::zeros(4, 4);
+        out.data = arena.take_f32(16);
+        let bytes = (out.data.capacity() * std::mem::size_of::<f32>()) as u64;
+        (
+            GemmResponse {
+                out,
+                queue_ms: 0.0,
+                total_ms: 0.0,
+                deadline_missed: false,
+                encode_ms: 0.0,
+                gemm_ms: 0.0,
+                decode_ms: 0.0,
+            },
+            bytes,
+        )
+    }
+
+    #[test]
+    fn taken_tickets_release_arena_accounting() {
+        let arena = Arc::new(super::super::arena::BufferArena::new(1 << 20));
+        let inner = TicketInner::new();
+        let t = Ticket::from_inner(Arc::clone(&inner));
+        let (resp, bytes) = arena_backed_response(&arena);
+        assert_eq!(arena.stats().resident_bytes, bytes);
+        inner.fulfill_recycling(Ok(resp), Some((Arc::clone(&arena), bytes)));
+        let resp = t.wait().unwrap();
+        // The buffer now belongs to the caller: residency is released
+        // without the storage ever returning to the free list.
+        assert_eq!(arena.stats().resident_bytes, 0);
+        drop(resp);
+        drop(t);
+        drop(inner);
+        assert_eq!(arena.stats().hits, 0);
+        assert_eq!(arena.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn dropped_unconsumed_tickets_recycle_arena_outputs() {
+        let arena = Arc::new(super::super::arena::BufferArena::new(1 << 20));
+        let inner = TicketInner::new();
+        let t = Ticket::from_inner(Arc::clone(&inner));
+        let (resp, bytes) = arena_backed_response(&arena);
+        inner.fulfill_recycling(Ok(resp), Some((Arc::clone(&arena), bytes)));
+        // Abandon the result without taking it: the output buffer must
+        // return to the arena free list, not leak to the allocator.
+        drop(t);
+        drop(inner);
+        let st = arena.stats();
+        assert_eq!(st.resident_bytes, bytes);
+        assert_eq!(st.hits, 0);
+        // Recycled checkout is a hit and comes back zeroed.
+        let again = arena.take_f32(16);
+        assert!(again.iter().all(|&v| v == 0.0));
+        assert_eq!(arena.stats().hits, 1);
     }
 }

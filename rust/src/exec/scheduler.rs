@@ -38,15 +38,30 @@
 //! invariant `tests/property_exec.rs` and `tests/property_service.rs`
 //! pin. The service may *reorder execution* across batches; it can
 //! never reorder accumulation within an op.
+//!
+//! The same invariant carries through the **MAC/decode split**
+//! ([`BatchGemm::run_split_with_stats`] + [`decode_staged`]): the MAC
+//! stage stores each block dot product as the exact `i32` the fused
+//! kernels feed their accumulator, and the decode stage replays the
+//! identical per-element `f64` scale-shift sum in the identical
+//! ascending-`k` order. No output element ever shares an accumulator,
+//! so the two stages can be band-sharded independently (the decode of
+//! batch `n` overlaps the GEMM of batch `n + 1` in the service) without
+//! perturbing a single bit.
 
 use super::pool::Job;
 use super::ExecRuntime;
-use crate::bfp::gemm::{band_shifts, BandTask, PARALLEL_MIN_MACS};
-use crate::bfp::kernels::{self, GemmKernel, GemmShape, KernelOpCounts};
+use crate::bfp::gemm::{band_shifts, band_shifts_into, BandTask, PARALLEL_MIN_MACS};
+use crate::bfp::kernels::{self, GemmKernel, GemmShape, KernelOpCounts, MacBandTask};
 use crate::bfp::{BfpMatrix, BlockFormat, Mat, PlaneLayout, Quantizer};
 use anyhow::{bail, Context, Result};
 use std::sync::{Arc, OnceLock};
 use std::time::Instant;
+
+/// Below this batch MAC volume a decode runs serially on the calling
+/// (decode-stage) thread — sharding tiny decodes costs more in job
+/// setup than it saves.
+const DECODE_PARALLEL_MIN: usize = 1 << 20;
 
 /// Pre-encoded operand planes of one op: the activation encoded
 /// row-wise and the weight encoded column-wise (through the operand
@@ -242,9 +257,14 @@ impl<'rt> BatchGemm<'rt> {
         self.run_with_stats(ops).map(|(outs, _)| outs)
     }
 
-    /// [`BatchGemm::run`] plus the batch's [`EncodeReport`] — how the
-    /// service attributes encode-stage latency and pre-encode hits.
-    pub fn run_with_stats(&self, ops: &[OwnedGemmOp]) -> Result<(Vec<Mat>, EncodeReport)> {
+    /// Shared **encode stage** of both the fused and the split
+    /// execution paths: returns the encoded operand pair per op plus an
+    /// [`EncodeReport`] with `encode_ns` stamped and `kernel_ops` still
+    /// empty (the execute stage records dispatch as it selects).
+    fn encode_batch(
+        &self,
+        ops: &[OwnedGemmOp],
+    ) -> Result<(Vec<Arc<BfpMatrix>>, Vec<Arc<BfpMatrix>>, EncodeReport)> {
         for (i, op) in ops.iter().enumerate() {
             if op.x.cols != op.w.rows {
                 bail!(
@@ -346,12 +366,19 @@ impl<'rt> BatchGemm<'rt> {
             };
             wenc.push(enc.with_context(|| format!("encoding weights of op {i}"))?);
         }
-        let mut report = EncodeReport {
+        let report = EncodeReport {
             pre_encoded,
             inline_encoded,
             encode_ns: encode_started.elapsed().as_nanos() as u64,
             kernel_ops: KernelOpCounts::default(),
         };
+        Ok((xenc, wenc, report))
+    }
+
+    /// [`BatchGemm::run`] plus the batch's [`EncodeReport`] — how the
+    /// service attributes encode-stage latency and pre-encode hits.
+    pub fn run_with_stats(&self, ops: &[OwnedGemmOp]) -> Result<(Vec<Mat>, EncodeReport)> {
+        let (xenc, wenc, mut report) = self.encode_batch(ops)?;
 
         // ---- shard + execute stage ----------------------------------
         let shifts: Vec<(Vec<i32>, Vec<i32>)> = xenc
@@ -411,6 +438,139 @@ impl<'rt> BatchGemm<'rt> {
         Ok((outs, report))
     }
 
+    /// The **split** execution path behind the service's three-stage
+    /// pipeline: encode + integer MAC stage only. Ops whose operand
+    /// layouts support `i32` MAC storage
+    /// ([`kernels::mac_split_supported`]) stop after storing raw block
+    /// MACs into an arena-backed plane; the f32 scale-shift decode is
+    /// deferred to [`decode_staged`], which a separate pipeline stage
+    /// runs while the scheduler forms and executes the next batch.
+    /// Unsupported (wide-mantissa) ops run the fused kernel here and
+    /// pass through decode — the split is a scheduling change only,
+    /// never a numerics change.
+    ///
+    /// Every arena checkout happens after the last fallible step, so an
+    /// `Err` return can never strand outstanding arena bytes.
+    pub(crate) fn run_split_with_stats(&self, ops: &[OwnedGemmOp]) -> Result<StagedBatch> {
+        let (xenc, wenc, mut report) = self.encode_batch(ops)?;
+
+        let arena = self.rt.arena();
+        let threads = self.rt.pool().threads();
+        let total_macs: usize = ops
+            .iter()
+            .map(OwnedGemmOp::macs)
+            .fold(0usize, usize::saturating_add);
+
+        // Per-op execution plan alongside the staged buffer. Fused ops
+        // keep their shift planes here (dropped after the GEMM stage);
+        // split ops carry theirs inside `StagedOut::Macs` because the
+        // decode stage needs them later.
+        struct Plan {
+            kernel: &'static dyn GemmKernel,
+            band: usize,
+            fused_shifts: Option<(Vec<i32>, Vec<i32>)>,
+        }
+
+        let mut staged: Vec<StagedOut> = Vec::with_capacity(ops.len());
+        let mut plans: Vec<Option<Plan>> = Vec::with_capacity(ops.len());
+        for ((op, xp), wp) in ops.iter().zip(&xenc).zip(&wenc) {
+            let (m, n) = (xp.rows, wp.rows);
+            if m == 0 || n == 0 {
+                staged.push(StagedOut::Fused(Mat::zeros(op.x.rows, op.w.cols)));
+                plans.push(None);
+                continue;
+            }
+            let (xl, wl) = (xp.mantissas.layout(), wp.mantissas.layout());
+            let block = xp.fmt.block_size;
+            let shape = GemmShape::new(m, n, xp.cols);
+            let kernel = match self.kernel {
+                Some(k) => kernels::registry().select_from(k, xl, wl, block),
+                None => kernels::active_kernel(xl, wl, block, shape),
+            };
+            report.kernel_ops.record(kernel.name(), shape.mnk_bucket());
+            let macs = m.saturating_mul(n).saturating_mul(xp.cols);
+            let band = self.band_for(m, macs, total_macs, threads);
+            let kb = xp.blocks_per_row;
+            if kernels::mac_split_supported(xl, wl, block) && kb > 0 {
+                let mut xsh = arena.take_i32(m * kb);
+                band_shifts_into(xp, &mut xsh);
+                let mut wsh = arena.take_i32(n * kb);
+                band_shifts_into(wp, &mut wsh);
+                staged.push(StagedOut::Macs {
+                    macs: arena.take_i32(m * n * kb),
+                    xsh,
+                    wsh,
+                    m,
+                    n,
+                    kb,
+                });
+                plans.push(Some(Plan {
+                    kernel,
+                    band,
+                    fused_shifts: None,
+                }));
+            } else {
+                staged.push(StagedOut::Fused(Mat {
+                    rows: m,
+                    cols: n,
+                    data: arena.take_f32(m * n),
+                }));
+                plans.push(Some(Plan {
+                    kernel,
+                    band,
+                    fused_shifts: Some((band_shifts(xp), band_shifts(wp))),
+                }));
+            }
+        }
+
+        let mut jobs: Vec<Job> = Vec::new();
+        for ((st, plan), (xp, wp)) in staged.iter_mut().zip(&plans).zip(xenc.iter().zip(&wenc)) {
+            let Some(plan) = plan else { continue };
+            let kernel = plan.kernel;
+            let band = plan.band;
+            let xref: &BfpMatrix = xp;
+            let wref: &BfpMatrix = wp;
+            match st {
+                StagedOut::Macs { macs, n, kb, .. } => {
+                    let (n, kb) = (*n, *kb);
+                    for (t, chunk) in macs.chunks_mut(band * n * kb).enumerate() {
+                        let r0 = t * band;
+                        jobs.push(Box::new(move || {
+                            kernel.run_band_macs(MacBandTask {
+                                x: xref,
+                                w: wref,
+                                r0,
+                                rows: chunk.len() / (n * kb),
+                                macs: chunk,
+                            });
+                        }) as Job);
+                    }
+                }
+                StagedOut::Fused(out) => {
+                    let (xsh, wsh) = plan.fused_shifts.as_ref().expect("fused ops carry shifts");
+                    let n = wref.rows;
+                    for (t, chunk) in out.data.chunks_mut(band * n).enumerate() {
+                        let r0 = t * band;
+                        let (xsh, wsh) = (xsh.as_slice(), wsh.as_slice());
+                        jobs.push(Box::new(move || {
+                            kernel.run_band(BandTask {
+                                x: xref,
+                                w: wref,
+                                xsh,
+                                wsh,
+                                r0,
+                                rows: chunk.len() / n,
+                                out: chunk,
+                            });
+                        }) as Job);
+                    }
+                }
+            }
+        }
+        self.rt.pool().scope_run(jobs);
+        Ok(StagedBatch { staged, report })
+    }
+
     /// Shard height for one op: the explicit override, or a height that
     /// gives the op a number of bands proportional to its share of the
     /// batch MAC volume (targeting ~3 bands per pool thread overall).
@@ -425,6 +585,83 @@ impl<'rt> BatchGemm<'rt> {
         let share = (macs as f64 / total_macs as f64 * (3 * threads) as f64).round() as usize;
         let bands = share.clamp(1, m.max(1));
         m.div_ceil(bands).max(1)
+    }
+}
+
+/// One op's output as it leaves the MAC stage of
+/// [`BatchGemm::run_split_with_stats`], waiting for the decode stage.
+pub(crate) enum StagedOut {
+    /// Already a finished f32 output (wide-mantissa ops the split does
+    /// not cover, and degenerate empty shapes). Arena-backed except for
+    /// the empty case.
+    Fused(Mat),
+    /// Raw `i32` block MACs plus the shift planes needed to decode
+    /// them. All three buffers are arena checkouts; `decode_staged`
+    /// returns them. Layout: `macs[(i * n + j) * kb + k]` for output
+    /// row `i`, column `j`, block `k`.
+    Macs {
+        macs: Vec<i32>,
+        xsh: Vec<i32>,
+        wsh: Vec<i32>,
+        m: usize,
+        n: usize,
+        kb: usize,
+    },
+}
+
+/// Everything [`BatchGemm::run_split_with_stats`] hands the decode
+/// stage: one [`StagedOut`] per op, submission-ordered, plus the
+/// batch's encode report.
+pub(crate) struct StagedBatch {
+    pub(crate) staged: Vec<StagedOut>,
+    pub(crate) report: EncodeReport,
+}
+
+/// The **decode stage** of the split path: turn one [`StagedOut`] into
+/// its final f32 output. `Fused` passes through; `Macs` replays the
+/// exact per-element scale-shift accumulation the fused kernels run
+/// (same `f64` accumulator, same ascending-`k` order — bit-identical by
+/// construction), band-sharded on the pool when the volume warrants it.
+/// The MAC and shift planes return to the arena here; the f32 output is
+/// an arena checkout the caller attaches to the ticket.
+pub(crate) fn decode_staged(rt: &ExecRuntime, staged: StagedOut) -> Mat {
+    match staged {
+        StagedOut::Fused(out) => out,
+        StagedOut::Macs { macs, xsh, wsh, m, n, kb } => {
+            let arena = rt.arena();
+            let mut data = arena.take_f32(m * n);
+            let threads = rt.pool().threads();
+            let work = m.saturating_mul(n).saturating_mul(kb);
+            if threads <= 1 || work < DECODE_PARALLEL_MIN {
+                kernels::decode_mac_band(&macs[..m * n * kb], &xsh, &wsh, 0, m, n, kb, &mut data);
+            } else {
+                // Same banding idea as the GEMM stage: ~3 bands per
+                // pool thread, each decoding a contiguous row range.
+                let band = m.div_ceil(3 * threads).max(1);
+                let jobs: Vec<Job> = data
+                    .chunks_mut(band * n)
+                    .enumerate()
+                    .map(|(t, chunk)| {
+                        let r0 = t * band;
+                        let rows = chunk.len() / n;
+                        let macs = &macs[r0 * n * kb..(r0 + rows) * n * kb];
+                        let (xsh, wsh) = (xsh.as_slice(), wsh.as_slice());
+                        Box::new(move || {
+                            kernels::decode_mac_band(macs, xsh, wsh, r0, rows, n, kb, chunk);
+                        }) as Job
+                    })
+                    .collect();
+                rt.pool().scope_run(jobs);
+            }
+            arena.put_i32(macs);
+            arena.put_i32(xsh);
+            arena.put_i32(wsh);
+            Mat {
+                rows: m,
+                cols: n,
+                data,
+            }
+        }
     }
 }
 
@@ -604,6 +841,56 @@ mod tests {
             OwnedGemmOp::new(Arc::new(Mat::zeros(3, 20)), Arc::new(Mat::zeros(20, 5)), fmt16)
                 .unwrap();
         assert_eq!(op16.pre_encode_estimate_bytes(), 6 * 32 + 6 * 4);
+    }
+
+    #[test]
+    fn split_path_matches_fused_and_recycles_staging() {
+        let rt = ExecRuntime::with_threads(3);
+        let mut rng = Rng::new(0x5137);
+        // Narrow formats take the MAC/decode split; the 12-bit op's
+        // i16 planes keep the fused kernel inside the split path.
+        let cases = [
+            (4u32, 16usize, 6usize, 70, 5),
+            (6, 64, 9, 130, 4),
+            (12, 16, 3, 33, 6),
+        ];
+        let ops: Vec<OwnedGemmOp> = cases
+            .iter()
+            .map(|&(mb, b, r, k, c)| {
+                let fmt = BlockFormat::new(mb, b).unwrap();
+                OwnedGemmOp::new(randmat(&mut rng, r, k), randmat(&mut rng, k, c), fmt).unwrap()
+            })
+            .collect();
+        let bg = BatchGemm::new(&rt);
+        let batch = bg.run_split_with_stats(&ops).unwrap();
+        assert!(matches!(batch.staged[0], StagedOut::Macs { .. }));
+        assert!(matches!(batch.staged[1], StagedOut::Macs { .. }));
+        assert!(matches!(batch.staged[2], StagedOut::Fused(_)));
+        assert_eq!(batch.report.kernel_ops.total(), ops.len() as u64);
+        let mut outs: Vec<Mat> = Vec::new();
+        for s in batch.staged {
+            outs.push(decode_staged(&rt, s));
+        }
+        for (i, (op, got)) in ops.iter().zip(&outs).enumerate() {
+            let want = hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap();
+            assert_eq!((got.rows, got.cols), (want.rows, want.cols), "op {i}");
+            for (g, s) in got.data.iter().zip(&want.data) {
+                assert_eq!(g.to_bits(), s.to_bits(), "op {i}");
+            }
+        }
+        // Return the outputs the way a ticket drop would, then rerun:
+        // the second split run must recycle the staging planes.
+        for o in outs {
+            rt.arena().put_f32(o.data);
+        }
+        let before = rt.arena().stats();
+        assert!(before.resident_bytes > 0, "{before:?}");
+        let batch = bg.run_split_with_stats(&ops).unwrap();
+        let after = rt.arena().stats();
+        assert!(after.hits > before.hits, "{after:?}");
+        for s in batch.staged {
+            rt.arena().put_f32(decode_staged(&rt, s).data);
+        }
     }
 
     #[test]

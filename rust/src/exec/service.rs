@@ -15,10 +15,14 @@
 //! ```text
 //! submit(GemmRequest) ─▶ SubmitQueue (bounded, QoS-aware) ─▶ scheduler thread
 //!        │                     │                                │ EDF + MAC-budget batch
-//!        │                     ▼ claim                          │
+//!        │                     ▼ claim                          │ run_split_with_stats
 //!        │              encode thread ── pre-encodes ──▶ op's encoded slot
-//!        │              (pool + operand cache)                  │ consumed by
-//!      Ticket ◀──────────── fulfill ◀── BatchGemm (execution stage, worker pool)
+//!        │              (pool + operand cache)                  │ staged i32 MACs
+//!        │                                                      ▼
+//!        │                                               decode thread
+//!        │                                     (scale-shift decode, worker pool,
+//!        │                                      staging buffers → BufferArena)
+//!      Ticket ◀──────────────── fulfill ◀──────────────────────┘
 //! ```
 //!
 //! * [`BfpService::submit`] is **non-blocking**: it validates the op,
@@ -36,11 +40,25 @@
 //!   and cumulative encode-stage latency.
 //! * A dedicated **scheduler thread** drains the queue, forming
 //!   earliest-deadline-first batches within a MAC budget
-//!   ([`ServiceConfig`]), and drives the [`super::BatchGemm`] execution
-//!   stage on the shared worker pool.
+//!   ([`ServiceConfig`]), and drives the split execution path
+//!   ([`BatchGemm::run_split_with_stats`]) on the shared worker pool:
+//!   the batch stops after the integer-MAC stage, its raw `i32` MACs
+//!   staged in arena-recycled planes.
+//! * A dedicated **decode thread** (the pipeline's third stage) turns
+//!   staged MACs into f32 outputs — band-sharded on the same pool,
+//!   replaying the exact accumulation the fused kernels run, so the
+//!   hand-off is bit-identical — and **fulfills every ticket**. Because
+//!   fulfillment left the scheduler thread, the scheduler is free to
+//!   form and execute batch `n + 1` while batch `n` is still decoding;
+//!   [`ServiceStats::decoded_overlapped`] counts ops whose decode
+//!   actually overlapped a later batch's execution. Output buffers and
+//!   MAC/shift staging planes come from the runtime's
+//!   [`super::arena::BufferArena`] and recycle across batches (returned
+//!   on ticket take or drop).
 //! * Callers hold a [`Ticket`] (`poll` / `wait` / `wait_deadline`) and
 //!   receive a [`GemmResponse`] carrying the result plus observed
-//!   queue/total latency and the deadline-miss flag.
+//!   queue/total latency, per-stage (encode/GEMM/decode) batch wall
+//!   times, and the deadline-miss flag.
 //!
 //! # Determinism
 //!
@@ -59,17 +77,19 @@
 //! blocking admission (those APIs were blocking contracts already) and
 //! exposes the runtime's operand cache for encode-only paths.
 
-use super::pool::lock_or_poisoned;
+use super::arena::BufferArena;
+use super::pool::{lock_or_poisoned, wait_or_poisoned};
 use super::queue::{
     AdmissionError, GemmRequest, GemmResponse, Pending, Priority, SubmitQueue, Ticket,
 };
-use super::scheduler::{BatchGemm, EncodeReport, OwnedGemmOp};
+use super::scheduler::{decode_staged, BatchGemm, EncodeReport, OwnedGemmOp, StagedOut};
 use super::ExecRuntime;
 use crate::bfp::{kernels, BfpMatrix, BlockFormat, KernelOpCounts, Mat};
 use crate::util::KernelChoice;
 use anyhow::{Context, Result};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -164,6 +184,23 @@ struct ServiceCounters {
     /// thread's encoding work plus the execution stage's inline encode
     /// phase.
     encode_ns: AtomicU64,
+    /// Ops whose outputs the decode stage published (everything that
+    /// went through the split path — fused-in-split ops included, since
+    /// their tickets are still fulfilled by the decode thread).
+    decode_ops: AtomicU64,
+    /// Decode-stage ops whose decode demonstrably overlapped a later
+    /// batch's execution (the scheduler had already started another
+    /// batch by the time the decode finished) — the pipeline's
+    /// overlapped-decode evidence.
+    decoded_overlapped: AtomicU64,
+    /// Cumulative decode-stage wall time, nanoseconds.
+    decode_ns: AtomicU64,
+    /// Batches the scheduler thread has **started** executing —
+    /// compared against a hand-off snapshot by the decode thread to
+    /// detect overlap. Distinct from `batches` only in role; kept
+    /// separate so the overlap probe never races stats readers'
+    /// expectations about `batches`.
+    exec_batches_started: AtomicU64,
     /// Which backend the execution stage actually dispatched per op,
     /// by M×N×K bucket (ground truth next to the configured
     /// `KernelChoice`). A mutex, not atomics: updated once per batch,
@@ -229,6 +266,23 @@ pub struct ServiceStats {
     /// `BOOSTERS_PREENCODE_MB` budget (claimed by the pre-encode stage
     /// and still waiting in the queue).
     pub pre_encode_resident_bytes: u64,
+    /// Ops fulfilled by the decode stage (the split pipeline's third
+    /// stage).
+    pub decode_ops: u64,
+    /// Decode-stage ops whose decode overlapped a later batch's
+    /// execution — nonzero means the three-stage pipeline actually
+    /// pipelined.
+    pub decoded_overlapped: u64,
+    /// Cumulative decode-stage wall time in microseconds.
+    pub decode_us: u64,
+    /// Buffer-arena checkouts served from the free list.
+    pub arena_hits: u64,
+    /// Buffer-arena checkouts that had to allocate.
+    pub arena_misses: u64,
+    /// Cumulative bytes served from recycled arena buffers.
+    pub arena_recycled_bytes: u64,
+    /// Arena bytes resident right now (free lists + checked out).
+    pub arena_resident_bytes: u64,
 }
 
 impl Default for ServiceStats {
@@ -249,6 +303,13 @@ impl Default for ServiceStats {
             kernel: "",
             kernel_ops: KernelOpCounts::default(),
             pre_encode_resident_bytes: 0,
+            decode_ops: 0,
+            decoded_overlapped: 0,
+            decode_us: 0,
+            arena_hits: 0,
+            arena_misses: 0,
+            arena_recycled_bytes: 0,
+            arena_resident_bytes: 0,
         }
     }
 }
@@ -275,25 +336,119 @@ impl ServiceStats {
             self.pre_encoded as f64 / total as f64
         }
     }
+
+    /// Share of buffer-arena checkouts served from the free list (0.0
+    /// before the arena sees traffic).
+    pub fn arena_hit_rate(&self) -> f64 {
+        let total = self.arena_hits + self.arena_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.arena_hits as f64 / total as f64
+        }
+    }
+
+    /// Share of decode-stage ops whose decode overlapped a later
+    /// batch's execution (0.0 before anything decoded).
+    pub fn decode_overlap_rate(&self) -> f64 {
+        if self.decode_ops == 0 {
+            0.0
+        } else {
+            self.decoded_overlapped as f64 / self.decode_ops as f64
+        }
+    }
+}
+
+/// Hand-off channel between the scheduler (MAC) stage and the decode
+/// stage: executed batches waiting for their f32 decode, FIFO (batches
+/// were already formed EDF-first; reordering decodes would only add
+/// latency jitter). Closed by the scheduler thread when it exits, after
+/// which `pop` drains the backlog and then returns `None` — the drain
+/// path every admitted ticket's fulfillment rides on during drop.
+struct DecodeQueue {
+    state: Mutex<DecodeQueueState>,
+    cv: Condvar,
+}
+
+struct DecodeQueueState {
+    batches: VecDeque<DecodeBatch>,
+    closed: bool,
+}
+
+/// One executed batch in flight between the MAC and decode stages.
+struct DecodeBatch {
+    /// Submission-ordered pairs of the request and its staged output.
+    items: Vec<(Pending, StagedOut)>,
+    /// When the batch started executing (queue_ms anchor).
+    started: Instant,
+    /// The batch's encode-stage wall time, milliseconds.
+    encode_ms: f64,
+    /// The batch's MAC/GEMM-stage wall time, milliseconds.
+    gemm_ms: f64,
+    /// `exec_batches_started` snapshot at hand-off: if the counter has
+    /// moved by the time this batch finishes decoding, the decode
+    /// overlapped a later batch's execution.
+    handoff_batches: u64,
+}
+
+impl DecodeQueue {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(DecodeQueueState {
+                batches: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, batch: DecodeBatch) {
+        let mut st = lock_or_poisoned(&self.state, "decode queue");
+        st.batches.push_back(batch);
+        self.cv.notify_one();
+    }
+
+    /// Idempotent: wakes the decode thread to drain and exit.
+    fn close(&self) {
+        let mut st = lock_or_poisoned(&self.state, "decode queue");
+        st.closed = true;
+        self.cv.notify_all();
+    }
+
+    fn pop(&self) -> Option<DecodeBatch> {
+        let mut st = lock_or_poisoned(&self.state, "decode queue");
+        loop {
+            if let Some(b) = st.batches.pop_front() {
+                return Some(b);
+            }
+            if st.closed {
+                return None;
+            }
+            st = wait_or_poisoned(&self.cv, st, "decode queue");
+        }
+    }
 }
 
 /// The asynchronous BFP execution service (see module docs).
 pub struct BfpService {
     rt: Arc<ExecRuntime>,
     queue: Arc<SubmitQueue>,
+    decode_q: Arc<DecodeQueue>,
     counters: Arc<ServiceCounters>,
     cfg: ServiceConfig,
     scheduler: Option<JoinHandle<()>>,
+    decoder: Option<JoinHandle<()>>,
     encoder: Option<JoinHandle<()>>,
 }
 
 impl BfpService {
-    /// Spawn a service (its scheduler thread and its pre-encode stage
-    /// thread) over `rt`. The runtime is shared: the service's batches,
-    /// direct `BatchGemm` users, and encode-only consumers all see one
-    /// pool and one operand cache.
+    /// Spawn a service (its scheduler, decode-stage, and pre-encode
+    /// stage threads) over `rt`. The runtime is shared: the service's
+    /// batches, direct `BatchGemm` users, and encode-only consumers all
+    /// see one pool, one operand cache, and one buffer arena.
     pub fn new(rt: Arc<ExecRuntime>, cfg: ServiceConfig) -> Self {
         let queue = Arc::new(SubmitQueue::new(cfg.queue_capacity));
+        let decode_q = Arc::new(DecodeQueue::new());
         let counters = Arc::new(ServiceCounters::default());
         counters
             .effective_batch_macs
@@ -301,11 +456,21 @@ impl BfpService {
         let scheduler = {
             let rt = Arc::clone(&rt);
             let queue = Arc::clone(&queue);
+            let decode_q = Arc::clone(&decode_q);
             let counters = Arc::clone(&counters);
             std::thread::Builder::new()
                 .name("bfp-service-sched".into())
-                .spawn(move || scheduler_loop(&rt, &queue, &counters, cfg))
+                .spawn(move || scheduler_loop(&rt, &queue, &decode_q, &counters, cfg))
                 .expect("spawn service scheduler thread")
+        };
+        let decoder = {
+            let rt = Arc::clone(&rt);
+            let decode_q = Arc::clone(&decode_q);
+            let counters = Arc::clone(&counters);
+            std::thread::Builder::new()
+                .name("bfp-service-decode".into())
+                .spawn(move || decoder_loop(&rt, &decode_q, &counters))
+                .expect("spawn service decode-stage thread")
         };
         let encoder = {
             let rt = Arc::clone(&rt);
@@ -319,9 +484,11 @@ impl BfpService {
         Self {
             rt,
             queue,
+            decode_q,
             counters,
             cfg,
             scheduler: Some(scheduler),
+            decoder: Some(decoder),
             encoder: Some(encoder),
         }
     }
@@ -389,6 +556,7 @@ impl BfpService {
 
     /// Counter snapshot (cumulative for this service's lifetime).
     pub fn stats(&self) -> ServiceStats {
+        let arena = self.rt.arena().stats();
         ServiceStats {
             submitted: self.counters.submitted.load(Ordering::Relaxed),
             completed: self.counters.completed.load(Ordering::Relaxed),
@@ -405,6 +573,13 @@ impl BfpService {
             kernel: kernels::registry().resolve(self.cfg.kernel).name(),
             kernel_ops: *lock_or_poisoned(&self.counters.kernel_ops, "service kernel-op counts"),
             pre_encode_resident_bytes: self.queue.pre_encode_bytes(),
+            decode_ops: self.counters.decode_ops.load(Ordering::Relaxed),
+            decoded_overlapped: self.counters.decoded_overlapped.load(Ordering::Relaxed),
+            decode_us: self.counters.decode_ns.load(Ordering::Relaxed) / 1_000,
+            arena_hits: arena.hits,
+            arena_misses: arena.misses,
+            arena_recycled_bytes: arena.recycled_bytes,
+            arena_resident_bytes: arena.resident_bytes,
         }
     }
 
@@ -428,15 +603,24 @@ impl BfpService {
 }
 
 impl Drop for BfpService {
-    /// Graceful drain: admission closes, everything already admitted is
-    /// executed and fulfilled (a pause is overridden — no ticket is
-    /// ever abandoned), then the scheduler and encode-stage threads are
-    /// joined. The encode thread exits on shutdown without draining:
-    /// anything it had not pre-encoded is encoded inline by the
-    /// scheduler's drain.
+    /// Graceful three-stage drain: admission closes; the scheduler
+    /// executes everything already admitted (a pause is overridden) and
+    /// hands the staged batches to the decode queue before closing it;
+    /// the decode thread drains that backlog, fulfilling every ticket —
+    /// no ticket is ever abandoned. Join order matters: scheduler first
+    /// (it is the decode queue's producer and closer), then decoder,
+    /// then the encode thread. The encode thread exits on shutdown
+    /// without draining: anything it had not pre-encoded was encoded
+    /// inline by the scheduler's drain.
     fn drop(&mut self) {
         self.queue.shutdown();
         if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+        // Normally a no-op (the scheduler closed it on exit); insurance
+        // against a panicked scheduler leaving the decoder blocked.
+        self.decode_q.close();
+        if let Some(h) = self.decoder.take() {
             let _ = h.join();
         }
         if let Some(h) = self.encoder.take() {
@@ -497,6 +681,7 @@ fn encoder_loop(
 fn scheduler_loop(
     rt: &ExecRuntime,
     queue: &SubmitQueue,
+    decode_q: &DecodeQueue,
     counters: &ServiceCounters,
     cfg: ServiceConfig,
 ) {
@@ -512,19 +697,28 @@ fn scheduler_loop(
             .effective_batch_macs
             .store(effective_macs as u64, Ordering::Relaxed);
         counters.batches.fetch_add(1, Ordering::Relaxed);
+        counters.exec_batches_started.fetch_add(1, Ordering::Relaxed);
         let started = Instant::now();
         let ops: Vec<OwnedGemmOp> = batch.iter().map(|p| p.op.clone()).collect();
-        match batch_stage(rt, &cfg).run_with_stats(&ops) {
-            Ok((outs, report)) => {
-                counters.record_encode(&report);
-                for (p, out) in batch.into_iter().zip(outs) {
-                    fulfill(p, Ok(out), started, counters);
-                }
+        match batch_stage(rt, &cfg).run_split_with_stats(&ops) {
+            Ok(staged) => {
+                counters.record_encode(&staged.report);
+                let encode_ms = staged.report.encode_ns as f64 / 1e6;
+                let exec_ms = started.elapsed().as_secs_f64() * 1e3;
+                decode_q.push(DecodeBatch {
+                    items: batch.into_iter().zip(staged.staged).collect(),
+                    started,
+                    encode_ms,
+                    gemm_ms: (exec_ms - encode_ms).max(0.0),
+                    handoff_batches: counters.exec_batches_started.load(Ordering::Relaxed),
+                });
             }
             Err(_) => {
                 // A batch-level failure must not poison neighbors that
-                // would succeed alone: retry each op by itself and give
-                // every ticket its own verdict.
+                // would succeed alone: retry each op by itself —
+                // synchronously, on the fused path — and give every
+                // ticket its own verdict right here (nothing was
+                // staged, so there is nothing for the decode stage).
                 for p in batch {
                     let one = batch_stage(rt, &cfg)
                         .run_with_stats(std::slice::from_ref(&p.op))
@@ -532,14 +726,79 @@ fn scheduler_loop(
                             counters.record_encode(&report);
                             outs.remove(0)
                         });
-                    fulfill(p, one, started, counters);
+                    fulfill(p, one, started, counters, StageTimes::default(), None);
                 }
             }
         }
     }
+    // Producer done: let the decode thread drain its backlog and exit.
+    decode_q.close();
 }
 
-fn fulfill(p: Pending, result: Result<Mat>, started: Instant, counters: &ServiceCounters) {
+/// The pipeline's third stage: decode staged MAC planes into f32
+/// outputs and publish every ticket. Runs until the scheduler closes
+/// the hand-off queue and the backlog drains.
+fn decoder_loop(rt: &ExecRuntime, decode_q: &DecodeQueue, counters: &ServiceCounters) {
+    while let Some(db) = decode_q.pop() {
+        let decode_started = Instant::now();
+        let done: Vec<(Pending, Mat)> = db
+            .items
+            .into_iter()
+            .map(|(p, staged)| {
+                let out = decode_staged(rt, staged);
+                (p, out)
+            })
+            .collect();
+        let decode_ms = decode_started.elapsed().as_secs_f64() * 1e3;
+        let n_ops = done.len() as u64;
+        counters.decode_ops.fetch_add(n_ops, Ordering::Relaxed);
+        counters
+            .decode_ns
+            .fetch_add(decode_started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        // If the scheduler started another batch since this one was
+        // handed off, this decode ran concurrently with that execution
+        // — the overlap the three-stage split exists to create.
+        if counters.exec_batches_started.load(Ordering::Relaxed) > db.handoff_batches {
+            counters.decoded_overlapped.fetch_add(n_ops, Ordering::Relaxed);
+        }
+        let times = StageTimes {
+            encode_ms: db.encode_ms,
+            gemm_ms: db.gemm_ms,
+            decode_ms,
+        };
+        let arena = rt.arena();
+        for (p, out) in done {
+            let bytes = (out.data.capacity() * std::mem::size_of::<f32>()) as u64;
+            fulfill(
+                p,
+                Ok(out),
+                db.started,
+                counters,
+                times,
+                Some((Arc::clone(arena), bytes)),
+            );
+        }
+    }
+}
+
+/// Per-request stage-time attribution carried into the
+/// [`GemmResponse`]: the executing batch's encode/GEMM/decode wall
+/// times (every request in a batch reports its batch's stage times).
+#[derive(Debug, Clone, Copy, Default)]
+struct StageTimes {
+    encode_ms: f64,
+    gemm_ms: f64,
+    decode_ms: f64,
+}
+
+fn fulfill(
+    p: Pending,
+    result: Result<Mat>,
+    started: Instant,
+    counters: &ServiceCounters,
+    times: StageTimes,
+    arena: Option<(Arc<BufferArena>, u64)>,
+) {
     let now = Instant::now();
     let missed = p.deadline_at.map(|d| now > d).unwrap_or(false);
     if missed {
@@ -551,12 +810,19 @@ fn fulfill(p: Pending, result: Result<Mat>, started: Instant, counters: &Service
     };
     let queue_ms = started.saturating_duration_since(p.submitted_at).as_secs_f64() * 1e3;
     let total_ms = now.saturating_duration_since(p.submitted_at).as_secs_f64() * 1e3;
-    p.ticket.fulfill(result.map(|out| GemmResponse {
-        out,
-        queue_ms,
-        total_ms,
-        deadline_missed: missed,
-    }));
+    let arena = if result.is_ok() { arena } else { None };
+    p.ticket.fulfill_recycling(
+        result.map(|out| GemmResponse {
+            out,
+            queue_ms,
+            total_ms,
+            deadline_missed: missed,
+            encode_ms: times.encode_ms,
+            gemm_ms: times.gemm_ms,
+            decode_ms: times.decode_ms,
+        }),
+        arena,
+    );
 }
 
 /// A labeled synchronous handle onto a [`BfpService`] — the migration
@@ -925,6 +1191,66 @@ mod tests {
         assert_eq!(stats.inline_encoded, 0, "{stats:?}");
         assert_eq!(stats.pre_encode_hit_rate(), 1.0);
         assert!(stats.encode_us > 0, "{stats:?}");
+    }
+
+    #[test]
+    fn decode_stage_counters_and_stage_times_are_surfaced() {
+        let svc = BfpService::with_threads(2);
+        let mut rng = Rng::new(0xDEC0);
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        for _ in 0..5 {
+            let x = randmat(&mut rng, 6, 64);
+            let w = randmat(&mut rng, 64, 7);
+            let op = OwnedGemmOp::new(Arc::clone(&x), Arc::clone(&w), fmt).unwrap();
+            let resp = svc
+                .submit_blocking(GemmRequest::new(op))
+                .unwrap()
+                .wait()
+                .unwrap();
+            let want = hbfp_gemm_scalar(&x, &w, fmt).unwrap();
+            for (g, s) in resp.out.data.iter().zip(&want.data) {
+                assert_eq!(g.to_bits(), s.to_bits());
+            }
+            assert!(resp.encode_ms >= 0.0 && resp.gemm_ms >= 0.0 && resp.decode_ms >= 0.0);
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.completed, 5);
+        // Every op went through the decode stage (4-bit planes take the
+        // MAC/decode split).
+        assert_eq!(stats.decode_ops, 5, "{stats:?}");
+        assert!(stats.decoded_overlapped <= stats.decode_ops);
+        // Sequential same-shape ops recycle the previous op's staging
+        // planes: from the second op on, checkouts hit the free list.
+        assert!(stats.arena_hits > 0, "{stats:?}");
+        assert!(stats.arena_recycled_bytes > 0, "{stats:?}");
+        let rate = stats.arena_hit_rate();
+        assert!((0.0..=1.0).contains(&rate), "{rate}");
+        assert!((0.0..=1.0).contains(&stats.decode_overlap_rate()));
+    }
+
+    #[test]
+    fn tiny_arena_cap_degrades_without_corruption() {
+        // A 1-byte arena cap forces the stall/evict/degrade path on
+        // every checkout; results must stay bit-identical and every
+        // ticket fulfilled. (Kept to few/small ops — each over-cap
+        // checkout stalls briefly before degrading.)
+        let svc = BfpService::new(
+            Arc::new(ExecRuntime::new_with_caps(2, 16, 1 << 20, 1)),
+            ServiceConfig::default(),
+        );
+        let mut rng = Rng::new(0xCA9);
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        let x = randmat(&mut rng, 3, 32);
+        let w = randmat(&mut rng, 32, 4);
+        let op = OwnedGemmOp::new(Arc::clone(&x), Arc::clone(&w), fmt).unwrap();
+        let resp = svc.submit(GemmRequest::new(op)).unwrap().wait().unwrap();
+        let want = hbfp_gemm_scalar(&x, &w, fmt).unwrap();
+        for (g, s) in resp.out.data.iter().zip(&want.data) {
+            assert_eq!(g.to_bits(), s.to_bits());
+        }
+        let stats = svc.stats();
+        assert_eq!((stats.completed, stats.failed), (1, 0));
+        assert_eq!(stats.decode_ops, 1, "{stats:?}");
     }
 
     #[test]

@@ -158,6 +158,29 @@ struct Request {
     x: Arc<Mat>,
 }
 
+/// Per-request stage-latency samples (async mode only — the sync
+/// facade has no admission queue and no stage attribution). Stage
+/// times are batch-attributed: every request reports the wall time of
+/// the batch that carried it through each pipeline stage.
+#[derive(Default)]
+struct StageSamples {
+    queue_ms: Vec<f64>,
+    encode_ms: Vec<f64>,
+    gemm_ms: Vec<f64>,
+    decode_ms: Vec<f64>,
+}
+
+/// p50/p95/p99 of one stage's samples.
+fn stage_pcts(samples: &[f64]) -> (f64, f64, f64) {
+    let mut v = samples.to_vec();
+    v.sort_by(f64::total_cmp);
+    (
+        percentile(&v, 0.50),
+        percentile(&v, 0.95),
+        percentile(&v, 0.99),
+    )
+}
+
 /// Outcome of driving the request stream in either mode.
 struct DriveOutcome {
     /// Per-request latency (ms) for every completed request.
@@ -168,6 +191,8 @@ struct DriveOutcome {
     rejected: u64,
     misses: u64,
     service: Option<ServiceStats>,
+    /// Per-stage latency samples (async mode; `None` in sync mode).
+    stages: Option<StageSamples>,
     /// Which backend **actually executed** each op, per M×N×K bucket —
     /// recorded at dispatch, not inferred from the configured choice
     /// (a forced backend can still degrade per op).
@@ -350,6 +375,54 @@ pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport
             "encode stage (ms total)",
             format!("{:.3}", s.encode_us as f64 / 1e3),
         );
+        kv(
+            "decode stage ops",
+            format!(
+                "{} ({} overlapped a later batch)",
+                s.decode_ops, s.decoded_overlapped
+            ),
+        );
+        kv(
+            "decode stage (ms total)",
+            format!("{:.3}", s.decode_us as f64 / 1e3),
+        );
+        kv(
+            "arena checkouts",
+            format!(
+                "{} hits / {} misses ({:.0}% hit rate)",
+                s.arena_hits,
+                s.arena_misses,
+                100.0 * s.arena_hit_rate()
+            ),
+        );
+        kv(
+            "arena recycled / resident (KiB)",
+            format!(
+                "{} / {}",
+                s.arena_recycled_bytes >> 10,
+                s.arena_resident_bytes >> 10
+            ),
+        );
+    }
+    if let Some(st) = &outcome.stages {
+        // Per-percentile latency breakdown: where a request's time went
+        // (queue wait vs each pipeline stage). Stage times are
+        // batch-attributed, so the columns need not sum to the total
+        // latency percentile — they answer "which stage dominates at
+        // this percentile", not "what did request X pay".
+        let rows = [
+            ("queue wait", &st.queue_ms),
+            ("encode stage", &st.encode_ms),
+            ("gemm stage", &st.gemm_ms),
+            ("decode stage", &st.decode_ms),
+        ];
+        for (name, samples) in rows {
+            let (q50, q95, q99) = stage_pcts(samples);
+            kv(
+                &format!("breakdown {name} p50/p95/p99 (ms)"),
+                format!("{q50:.3} / {q95:.3} / {q99:.3}"),
+            );
+        }
     }
     kv(
         "cache hits (this run)",
@@ -382,6 +455,29 @@ pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport
             .map(|s| Json::Num(f(s)))
             .unwrap_or(Json::Null)
     };
+    // Per-percentile stage breakdown (Null in sync mode, like the
+    // service counters): one object per stage with its latency
+    // percentiles over completed requests.
+    let breakdown = outcome
+        .stages
+        .as_ref()
+        .map(|st| {
+            let stage = |samples: &[f64]| {
+                let (p50, p95, p99) = stage_pcts(samples);
+                Json::obj(vec![
+                    ("p50_ms", Json::Num(p50)),
+                    ("p95_ms", Json::Num(p95)),
+                    ("p99_ms", Json::Num(p99)),
+                ])
+            };
+            Json::obj(vec![
+                ("queue", stage(&st.queue_ms)),
+                ("encode", stage(&st.encode_ms)),
+                ("gemm", stage(&st.gemm_ms)),
+                ("decode", stage(&st.decode_ms)),
+            ])
+        })
+        .unwrap_or(Json::Null);
     let json = Json::obj(vec![
         ("suite", Json::str("serve_sim")),
         ("mode", Json::str(cfg.mode.json_tag())),
@@ -427,6 +523,22 @@ pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport
         ("inline_encoded_ops", svc_num(|s| s.inline_encoded as f64)),
         ("pre_encode_hit_rate", svc_num(ServiceStats::pre_encode_hit_rate)),
         ("encode_stage_ms", svc_num(|s| s.encode_us as f64 / 1e3)),
+        // Decode-stage and buffer-arena counters (async mode only).
+        ("decode_ops", svc_num(|s| s.decode_ops as f64)),
+        ("decoded_overlapped", svc_num(|s| s.decoded_overlapped as f64)),
+        ("decode_stage_ms", svc_num(|s| s.decode_us as f64 / 1e3)),
+        ("arena_hits", svc_num(|s| s.arena_hits as f64)),
+        ("arena_misses", svc_num(|s| s.arena_misses as f64)),
+        (
+            "arena_recycled_bytes",
+            svc_num(|s| s.arena_recycled_bytes as f64),
+        ),
+        (
+            "arena_resident_bytes",
+            svc_num(|s| s.arena_resident_bytes as f64),
+        ),
+        ("arena_hit_rate", svc_num(ServiceStats::arena_hit_rate)),
+        ("breakdown", breakdown),
         ("requests", Json::Num(cfg.requests as f64)),
         ("completed", Json::Num(completed as f64)),
         ("rejected", Json::Num(outcome.rejected as f64)),
@@ -540,6 +652,7 @@ fn drive_sync(
         rejected: 0,
         misses: 0,
         service: None,
+        stages: None,
         kernel_ops,
     })
 }
@@ -599,11 +712,16 @@ fn drive_async(
     let mut lat_ms: Vec<f64> = Vec::with_capacity(tickets.len());
     let mut results: Vec<Option<Mat>> = (0..requests.len()).map(|_| None).collect();
     let mut misses = 0u64;
+    let mut stages = StageSamples::default();
     for (i, ticket) in tickets {
         let resp = ticket
             .wait()
             .with_context(|| format!("request {i} failed in the service"))?;
         lat_ms.push(resp.total_ms);
+        stages.queue_ms.push(resp.queue_ms);
+        stages.encode_ms.push(resp.encode_ms);
+        stages.gemm_ms.push(resp.gemm_ms);
+        stages.decode_ms.push(resp.decode_ms);
         if resp.deadline_missed {
             misses += 1;
         }
@@ -619,6 +737,7 @@ fn drive_async(
         rejected,
         misses,
         service: Some(stats),
+        stages: Some(stages),
         kernel_ops: stats.kernel_ops,
     })
 }
@@ -655,6 +774,16 @@ mod tests {
             report.to_json().req("mode").unwrap().as_str().unwrap(),
             "sync"
         );
+        // Sync mode has no pipeline stages: the service counters and
+        // the stage breakdown project to Null, not zeros.
+        assert!(matches!(
+            report.to_json().req("decode_ops").unwrap(),
+            Json::Null
+        ));
+        assert!(matches!(
+            report.to_json().req("breakdown").unwrap(),
+            Json::Null
+        ));
         // The artifact records which kernel actually executed each op;
         // the per-bucket counts must cover the full completed stream
         // and name only registered backends.
@@ -710,6 +839,28 @@ mod tests {
             .map(|e| e.req("ops").unwrap().as_usize().unwrap())
             .sum();
         assert_eq!(total, report.completed);
+        // The decode stage fulfilled every completed request, and the
+        // buffer-arena counters are live.
+        let decode_ops = j.req("decode_ops").unwrap().as_usize().unwrap();
+        assert_eq!(decode_ops, report.completed);
+        let overlapped = j.req("decoded_overlapped").unwrap().as_usize().unwrap();
+        assert!(overlapped <= decode_ops);
+        assert!(j.req("decode_stage_ms").unwrap().as_f64().unwrap() >= 0.0);
+        let hits = j.req("arena_hits").unwrap().as_f64().unwrap();
+        let arena_misses = j.req("arena_misses").unwrap().as_f64().unwrap();
+        assert!(hits + arena_misses > 0.0, "arena saw no traffic");
+        let arate = j.req("arena_hit_rate").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&arate));
+        // The per-stage latency breakdown rides along with ordered
+        // percentiles per stage.
+        let bd = j.req("breakdown").unwrap();
+        for stage in ["queue", "encode", "gemm", "decode"] {
+            let s = bd.req(stage).unwrap();
+            let p50 = s.req("p50_ms").unwrap().as_f64().unwrap();
+            let p95 = s.req("p95_ms").unwrap().as_f64().unwrap();
+            let p99 = s.req("p99_ms").unwrap().as_f64().unwrap();
+            assert!(p50 >= 0.0 && p95 >= p50 && p99 >= p95, "{stage}");
+        }
     }
 
     #[test]

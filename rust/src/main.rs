@@ -46,7 +46,10 @@ SUBCOMMANDS
             [--verify] [--async]         execution service; --async uses
             [--rps R] [--deadline-ms D]  open-loop BfpService admission
             [--json PATH]                (Poisson arrivals, deadlines,
-                                         miss rate, queue depth); --json
+                                         miss rate, queue depth) and adds
+                                         per-stage latency-breakdown rows
+                                         (queue wait / encode / gemm /
+                                         decode at p50/p95/p99); --json
                                          (or $REPRO_BENCH_JSON) writes a
                                          BENCH_serve.json artifact
 
@@ -55,9 +58,26 @@ Artifacts dir: --artifacts PATH (default ./artifacts or $REPRO_ARTIFACTS)
 Env knobs: BOOSTERS_KERNEL=auto|scalar|autovec|avx2|avx512|neon (GEMM backend),
   BOOSTERS_AUTOTUNE=PATH (shape-dispatch table, see bench --autotune),
   BOOSTERS_PREENCODE_MB=N (resident pre-encoded activation-plane cap),
-  BOOSTERS_GEMM_THREADS=N, BOOSTERS_CACHE_ENTRIES=N, BOOSTERS_CACHE_MB=N";
+  BOOSTERS_ARENA_MB=N (recycled output/accumulator buffer-arena cap),
+  BOOSTERS_GEMM_THREADS=N, BOOSTERS_CACHE_ENTRIES=N, BOOSTERS_CACHE_MB=N
+All BOOSTERS_* settings are validated at startup; every malformed value
+is reported (to stderr, exit code 2) in one pass.";
 
 fn main() -> Result<()> {
+    // Validate every BOOSTERS_* knob up front and report *all* bad
+    // settings at once — a typo'd cap should not surface as a silent
+    // fallback to the default deep inside the execution runtime.
+    let env_issues = boosters::util::validate_env();
+    if !env_issues.is_empty() {
+        for issue in &env_issues {
+            eprintln!("error: {issue}");
+        }
+        eprintln!(
+            "{} invalid BOOSTERS_* environment setting(s); see `repro help` for accepted values",
+            env_issues.len()
+        );
+        std::process::exit(2);
+    }
     let args = Args::from_env()?;
     let artifacts = args
         .get("artifacts")

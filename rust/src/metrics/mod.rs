@@ -16,7 +16,16 @@ pub use wasserstein::{wasserstein1, wasserstein1_quantized, QuantSweep};
 // The execution-service counter snapshots are a metrics surface:
 // experiment drivers and serve-sim print them next to their
 // accuracy/latency numbers.
-pub use crate::exec::{CacheStats, ServiceStats};
+pub use crate::exec::{ArenaStats, CacheStats, ServiceStats};
+
+/// Snapshot of the **global** execution runtime's buffer-arena counters
+/// (checkout hits/misses, cumulative recycled bytes, resident bytes vs
+/// the `BOOSTERS_ARENA_MB` cap). Cumulative for the process; sample
+/// before/after a phase to attribute traffic to it. The same numbers
+/// ride along in [`exec_service_snapshot`] for the service's runtime.
+pub fn exec_arena_snapshot() -> ArenaStats {
+    crate::exec::global().arena_stats()
+}
 
 /// Snapshot of the **global** execution runtime's encoded-operand cache
 /// counters (hits, misses, evictions, residency). Counters are
@@ -35,9 +44,12 @@ pub fn exec_cache_snapshot() -> CacheStats {
 /// (ops pre-encoded at admission time vs encoded inline at execution,
 /// resident pre-encoded bytes under the `BOOSTERS_PREENCODE_MB`
 /// budget, plus cumulative encode-stage latency — see
-/// [`crate::exec::ServiceStats::pre_encode_hit_rate`]). Cumulative for
-/// the process; sample before/after a phase to attribute traffic to
-/// it. First use instantiates the service.
+/// [`crate::exec::ServiceStats::pre_encode_hit_rate`]), the
+/// decode-stage counters (ops decoded, ops whose decode overlapped a
+/// later batch's execution, cumulative decode latency), and the
+/// buffer-arena counters (hits/misses, recycled and resident bytes).
+/// Cumulative for the process; sample before/after a phase to
+/// attribute traffic to it. First use instantiates the service.
 pub fn exec_service_snapshot() -> ServiceStats {
     crate::exec::global_service().stats()
 }

@@ -190,6 +190,109 @@ pub fn parse_cache_budget(entries: Option<&str>, mb: Option<&str>) -> (usize, us
     )
 }
 
+/// Default cap on buffer-arena residency (free-list plus checked-out
+/// bytes): 512 MiB.
+pub const DEFAULT_ARENA_BYTES: u64 = 512 << 20;
+
+/// Buffer-arena residency budget (bytes) for the execution runtime:
+/// the single home of the `BOOSTERS_ARENA_MB` override (any positive
+/// integer, in MiB). Checkouts that would exceed the cap stall
+/// (bounded) and evict free buffers before allocating; returns beyond
+/// the cap are dropped instead of retained.
+pub fn arena_budget() -> u64 {
+    parse_arena_budget(std::env::var("BOOSTERS_ARENA_MB").ok().as_deref())
+}
+
+/// Pure parsing core of [`arena_budget`]: malformed, zero, or missing
+/// values fall back to [`DEFAULT_ARENA_BYTES`].
+pub fn parse_arena_budget(mb: Option<&str>) -> u64 {
+    mb.and_then(|s| s.trim().parse::<u64>().ok())
+        .filter(|&n| n >= 1)
+        .map(|mb| mb << 20)
+        .unwrap_or(DEFAULT_ARENA_BYTES)
+}
+
+/// One misconfigured `BOOSTERS_*` environment variable, as found by
+/// [`validate_env_vars`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EnvIssue {
+    /// The variable name (e.g. `BOOSTERS_GEMM_THREADS`).
+    pub var: &'static str,
+    /// The raw value that failed validation.
+    pub value: String,
+    /// What is wrong with it and what would be accepted.
+    pub problem: String,
+}
+
+impl std::fmt::Display for EnvIssue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}={:?}: {}", self.var, self.value, self.problem)
+    }
+}
+
+/// Startup validation pass over every `BOOSTERS_*` knob. Unlike the
+/// per-variable accessors above — which warn once and fall back so a
+/// long-running process never dies mid-stream on a bad setting — this
+/// pass collects **every** bad setting at once, so an operator fixes
+/// one failed launch instead of discovering misconfigurations one
+/// warn-and-fallback at a time. The accessors stay authoritative for
+/// fallback semantics; this is a front door, not a second parser home
+/// (it delegates to the same pure cores).
+///
+/// The injected `get` closure stands in for `std::env::var` so the
+/// pass is unit-testable without touching the process environment.
+pub fn validate_env_vars(get: impl Fn(&str) -> Option<String>) -> Vec<EnvIssue> {
+    let mut issues = Vec::new();
+    let mut positive_int = |var: &'static str, what: &str| {
+        if let Some(v) = get(var) {
+            if v.trim().parse::<u64>().ok().filter(|&n| n >= 1).is_none() {
+                issues.push(EnvIssue {
+                    var,
+                    value: v,
+                    problem: format!("expected a positive integer ({what})"),
+                });
+            }
+        }
+    };
+    positive_int("BOOSTERS_GEMM_THREADS", "worker thread count");
+    positive_int("BOOSTERS_CACHE_ENTRIES", "operand-cache entry cap");
+    positive_int("BOOSTERS_CACHE_MB", "operand-cache byte cap, MiB");
+    positive_int("BOOSTERS_PREENCODE_MB", "pre-encode residency cap, MiB");
+    positive_int("BOOSTERS_ARENA_MB", "buffer-arena residency cap, MiB");
+    if let Some(v) = get("BOOSTERS_KERNEL") {
+        let (_, rejected) = parse_kernel_choice(Some(&v));
+        if rejected.is_some() {
+            issues.push(EnvIssue {
+                var: "BOOSTERS_KERNEL",
+                value: v,
+                problem: "expected one of auto/scalar/autovec/avx2/avx512/neon".to_string(),
+            });
+        }
+    }
+    if let Some(v) = get("BOOSTERS_AUTOTUNE") {
+        let trimmed = v.trim();
+        // Empty means "unset" to the accessor; only a named path that
+        // does not resolve to a readable file is a misconfiguration.
+        // (Whether the table parses is the kernel registry's concern —
+        // host-independent validation stops at the filesystem.)
+        if !trimmed.is_empty() && !std::path::Path::new(trimmed).is_file() {
+            issues.push(EnvIssue {
+                var: "BOOSTERS_AUTOTUNE",
+                value: v,
+                problem: "path does not exist or is not a file".to_string(),
+            });
+        }
+    }
+    issues
+}
+
+/// [`validate_env_vars`] over the real process environment — called
+/// once at CLI startup, which reports every issue and exits instead of
+/// limping along on fallbacks the operator did not ask for.
+pub fn validate_env() -> Vec<EnvIssue> {
+    validate_env_vars(|var| std::env::var(var).ok())
+}
+
 /// Mean of a slice (0.0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -280,6 +383,67 @@ mod tests {
         assert_eq!(parse_preencode_budget(Some("lots")), DEFAULT_PREENCODE_BYTES);
         // The env-reading wrapper always yields a usable cap.
         assert!(preencode_budget() >= 1);
+    }
+
+    #[test]
+    fn arena_budget_parsing_and_fallback() {
+        // Unset -> default cap.
+        assert_eq!(parse_arena_budget(None), DEFAULT_ARENA_BYTES);
+        // Valid override (MiB converts to bytes; whitespace tolerated).
+        assert_eq!(parse_arena_budget(Some(" 16 ")), 16 << 20);
+        // Zero and garbage fall back — a 0 cap would be all-stall.
+        assert_eq!(parse_arena_budget(Some("0")), DEFAULT_ARENA_BYTES);
+        assert_eq!(parse_arena_budget(Some("big")), DEFAULT_ARENA_BYTES);
+        // The env-reading wrapper always yields a usable cap.
+        assert!(arena_budget() >= 1);
+    }
+
+    #[test]
+    fn env_validation_reports_every_bad_setting_at_once() {
+        use std::collections::HashMap;
+        // A clean environment (or one with only valid settings) passes.
+        assert!(validate_env_vars(|_| None).is_empty());
+        let ok: HashMap<&str, &str> = [
+            ("BOOSTERS_GEMM_THREADS", "4"),
+            ("BOOSTERS_CACHE_ENTRIES", "32"),
+            ("BOOSTERS_CACHE_MB", " 64 "),
+            ("BOOSTERS_PREENCODE_MB", "128"),
+            ("BOOSTERS_ARENA_MB", "256"),
+            ("BOOSTERS_KERNEL", " AutoVec "),
+        ]
+        .into_iter()
+        .collect();
+        assert!(validate_env_vars(|v| ok.get(v).map(|s| s.to_string())).is_empty());
+        // Every bad setting is reported in one pass, not one at a time.
+        let bad: HashMap<&str, &str> = [
+            ("BOOSTERS_GEMM_THREADS", "0"),
+            ("BOOSTERS_CACHE_ENTRIES", "many"),
+            ("BOOSTERS_CACHE_MB", "-1"),
+            ("BOOSTERS_PREENCODE_MB", ""),
+            ("BOOSTERS_ARENA_MB", "0x10"),
+            ("BOOSTERS_KERNEL", "sse9"),
+            ("BOOSTERS_AUTOTUNE", "/no/such/table.json"),
+        ]
+        .into_iter()
+        .collect();
+        let issues = validate_env_vars(|v| bad.get(v).map(|s| s.to_string()));
+        assert_eq!(issues.len(), 7, "{issues:?}");
+        for issue in &issues {
+            // Display output names the variable and the rejected value
+            // so the operator can fix all of them from one failure.
+            let line = issue.to_string();
+            assert!(line.starts_with(issue.var), "{line}");
+            assert!(!issue.problem.is_empty());
+        }
+        // KERNEL's unknown-name detection goes through the same parser
+        // as the warn-once accessor — the two can never disagree.
+        let kernel_issue = issues.iter().find(|i| i.var == "BOOSTERS_KERNEL").unwrap();
+        assert!(kernel_issue.problem.contains("avx512"));
+        // An empty BOOSTERS_AUTOTUNE means "unset" — not an issue.
+        let empty: HashMap<&str, &str> = [("BOOSTERS_AUTOTUNE", "  ")].into_iter().collect();
+        assert!(validate_env_vars(|v| empty.get(v).map(|s| s.to_string())).is_empty());
+        // The process-environment wrapper runs without panicking.
+        let _ = validate_env();
     }
 
     #[test]

@@ -1,0 +1,216 @@
+//! Property tests for the three-stage pipeline (PR 7): the decode/
+//! writeback split and the buffer-recycling arena may reorder *work*,
+//! never *numerics*. Every response that went through the staged
+//! MAC-accumulate + deferred decode path must be bit-identical to the
+//! per-op scalar reference — across kernel backends, pool widths, and
+//! plane layouts (including wide i16 planes that run fused inside the
+//! split) — and a recycled arena buffer must never leak a prior
+//! batch's contents, even when the residency cap degrades checkouts to
+//! stall-then-evict.
+
+use boosters::bfp::{hbfp_gemm_scalar, BlockFormat, Mat};
+use boosters::exec::{BfpService, ExecRuntime, GemmRequest, OwnedGemmOp, ServiceConfig, Ticket};
+use boosters::util::{KernelChoice, Rng};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_scaled(1.0)).collect()
+}
+
+/// Narrow formats that take the MAC-split decode path, plus wide
+/// formats (i16 mantissa planes, and one over the i32-overflow block
+/// gate) that must run fused *inside* the split pipeline: both halves
+/// of `StagedOut` are exercised in every run.
+fn build_ops(rng: &mut Rng) -> Vec<OwnedGemmOp> {
+    let mut out = Vec::new();
+    for &(m, b) in &[
+        (3u32, 16usize),
+        (4, 16),
+        (4, 64),
+        (6, 64),
+        (8, 16),
+        // Wide mantissas -> i16 planes -> fused-in-split.
+        (12, 576),
+        (16, 64),
+    ] {
+        let fmt = BlockFormat::new(m, b).unwrap();
+        for _ in 0..3 {
+            let k = 1 + rng.below(2 * b.min(128) + 37);
+            let r = 1 + rng.below(6);
+            let c = 1 + rng.below(7);
+            let x = Arc::new(Mat::new(r, k, randn(rng, r * k)).unwrap());
+            let w = Arc::new(Mat::new(k, c, randn(rng, k * c)).unwrap());
+            out.push(OwnedGemmOp::new(x, w, fmt).unwrap());
+        }
+    }
+    out
+}
+
+fn assert_bits_eq(a: &Mat, b: &Mat, ctx: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{ctx}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: elem {i}: {x} vs {y}");
+    }
+}
+
+/// Acceptance gate (PR 7): the staged decode path — MAC accumulation
+/// on the pool, decode/writeback on the dedicated stage thread — is
+/// bit-identical to the per-op scalar reference under every
+/// kernel-backend choice and pool width, and the decode-stage counters
+/// attribute every completed op.
+#[test]
+fn prop_decode_split_bit_identical_across_kernels_and_threads() {
+    let mut rng = Rng::new(0x1DE0);
+    let ops = build_ops(&mut rng);
+    for choice in [
+        KernelChoice::Scalar,
+        KernelChoice::Autovec,
+        KernelChoice::Avx2,
+        KernelChoice::Avx512,
+        KernelChoice::Neon,
+    ] {
+        for threads in [1usize, 4] {
+            let svc = BfpService::new(
+                Arc::new(ExecRuntime::with_threads(threads)),
+                ServiceConfig {
+                    kernel: choice,
+                    ..ServiceConfig::default()
+                },
+            );
+            let tickets: Vec<Ticket> = ops
+                .iter()
+                .map(|op| svc.submit_blocking(GemmRequest::new(op.clone())).unwrap())
+                .collect();
+            for (i, (t, op)) in tickets.iter().zip(&ops).enumerate() {
+                let resp = t.wait().unwrap();
+                let want = hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap();
+                assert_bits_eq(
+                    &resp.out,
+                    &want,
+                    &format!(
+                        "kernel {choice:?} threads {threads} op {i} (m={} b={})",
+                        op.fmt.mantissa_bits, op.fmt.block_size
+                    ),
+                );
+                // Stage attribution rides on every response.
+                assert!(resp.encode_ms >= 0.0 && resp.gemm_ms >= 0.0 && resp.decode_ms >= 0.0);
+            }
+            let stats = svc.stats();
+            assert_eq!(stats.decode_ops, ops.len() as u64, "{stats:?}");
+            assert!(stats.decoded_overlapped <= stats.decode_ops, "{stats:?}");
+            assert!((0.0..=1.0).contains(&stats.decode_overlap_rate()), "{stats:?}");
+            assert!((0.0..=1.0).contains(&stats.arena_hit_rate()), "{stats:?}");
+        }
+    }
+}
+
+/// Purity: free lists deliberately poisoned with NaN f32 and junk i32
+/// buffers large enough to serve every checkout class the batch asks
+/// for must not perturb a single output bit — a recycled buffer never
+/// leaks prior contents.
+#[test]
+fn prop_arena_purity_poisoned_freelists_never_leak() {
+    let mut rng = Rng::new(0x9015);
+    let ops = build_ops(&mut rng);
+    let rt = Arc::new(ExecRuntime::with_threads(2));
+    // Poison the way a hostile prior batch would: every element of
+    // every class that the outputs / MAC planes / shift scratch will
+    // reuse.
+    for _ in 0..8 {
+        let mut f = rt.arena().take_f32(1 << 12);
+        f.iter_mut().for_each(|v| *v = f32::NAN);
+        rt.arena().put_f32(f);
+        let mut i = rt.arena().take_i32(1 << 14);
+        i.iter_mut().for_each(|v| *v = i32::MIN);
+        rt.arena().put_i32(i);
+    }
+    let before = rt.arena().stats();
+    let svc = BfpService::new(Arc::clone(&rt), ServiceConfig::default());
+    let tickets: Vec<Ticket> = ops
+        .iter()
+        .map(|op| svc.submit_blocking(GemmRequest::new(op.clone())).unwrap())
+        .collect();
+    for (i, (t, op)) in tickets.iter().zip(&ops).enumerate() {
+        let resp = t.wait().unwrap();
+        let want = hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap();
+        assert_bits_eq(&resp.out, &want, &format!("poisoned-arena op {i}"));
+        assert!(resp.out.data.iter().all(|v| !v.is_nan()));
+    }
+    let after = rt.arena().stats();
+    assert!(
+        after.hits > before.hits,
+        "poisoned free-list buffers were never recycled: {after:?}"
+    );
+}
+
+/// A pathological 1-byte residency cap degrades checkouts to
+/// stall-then-evict-then-allocate — throughput suffers, numerics and
+/// liveness never do.
+#[test]
+fn prop_tiny_arena_cap_stalls_never_corrupts() {
+    let mut rng = Rng::new(0x7149);
+    let mut ops = build_ops(&mut rng);
+    // Every checkout under a 1-byte cap pays bounded stall rounds while
+    // other buffers are outstanding; a handful of ops keeps the test
+    // fast while still cycling both StagedOut halves through the cap
+    // (the grid's tail is the wide fused-in-split formats).
+    let wide: Vec<OwnedGemmOp> = ops.split_off(ops.len() - 4);
+    ops.truncate(4);
+    ops.extend(wide);
+    let rt = Arc::new(ExecRuntime::new_with_caps(2, 64, 16 << 20, 1));
+    let svc = BfpService::new(Arc::clone(&rt), ServiceConfig::default());
+    let tickets: Vec<Ticket> = ops
+        .iter()
+        .map(|op| svc.submit_blocking(GemmRequest::new(op.clone())).unwrap())
+        .collect();
+    for (i, (t, op)) in tickets.iter().zip(&ops).enumerate() {
+        let resp = t.wait().unwrap();
+        let want = hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap();
+        assert_bits_eq(&resp.out, &want, &format!("capped-arena op {i}"));
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.completed, ops.len() as u64, "{stats:?}");
+    assert_eq!(stats.decode_ops, ops.len() as u64, "{stats:?}");
+    // Every ticket was taken and a 1-byte cap retains nothing, so the
+    // arena must account zero residency once the pipeline drains.
+    assert_eq!(stats.arena_resident_bytes, 0, "{stats:?}");
+}
+
+/// Tickets dropped without `wait` recycle their arena-backed outputs
+/// (the drop half of the ticket/arena contract): a second identical
+/// round must see free-list hits, and its results stay bit-exact.
+#[test]
+fn prop_dropped_tickets_recycle_outputs() {
+    const SEED: u64 = 0xD20F;
+    let ops = build_ops(&mut Rng::new(SEED));
+    let svc = BfpService::with_threads(2);
+    let tickets: Vec<Ticket> = ops
+        .iter()
+        .map(|op| svc.submit_blocking(GemmRequest::new(op.clone())).unwrap())
+        .collect();
+    // Let every op complete, then abandon all results unconsumed.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !tickets.iter().all(Ticket::poll) {
+        assert!(Instant::now() < deadline, "pipeline never drained");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    drop(tickets);
+    let mid = svc.stats();
+    assert_eq!(mid.completed, ops.len() as u64, "{mid:?}");
+    // Round two: identical shapes, so every output class the decode
+    // stage checks out was just recycled by the dropped tickets.
+    let ops2 = build_ops(&mut Rng::new(SEED));
+    let tickets2: Vec<Ticket> = ops2
+        .iter()
+        .map(|op| svc.submit_blocking(GemmRequest::new(op.clone())).unwrap())
+        .collect();
+    for (i, (t, op)) in tickets2.iter().zip(&ops2).enumerate() {
+        let resp = t.wait().unwrap();
+        let want = hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap();
+        assert_bits_eq(&resp.out, &want, &format!("post-recycle op {i}"));
+    }
+    let after = svc.stats();
+    assert!(after.arena_hits > mid.arena_hits, "{after:?}");
+    assert!(after.arena_recycled_bytes > 0, "{after:?}");
+}
