@@ -4,6 +4,7 @@ artifact.
 
 Usage:
     python3 rust/artifacts/perf_gate.py <fresh BENCH_gemm.json> <promoted BENCH_gemm.json>
+    python3 rust/artifacts/perf_gate.py --fabric <fresh BENCH_fabric.json> <promoted BENCH_fabric.json>
 
 Compares ``mean_ns`` of every bench of record present in both files and
 exits non-zero if any fresh mean is more than ``THRESHOLD`` times the
@@ -42,7 +43,85 @@ BENCHES_OF_RECORD = [
 ]
 
 
+# Fabric serving is wall-clock noisy (process spawn, loopback TCP, a
+# deliberate runner kill mid-run), so its regression threshold is looser
+# than the microbench one: a 2x p95 or halved throughput is a real
+# routing/dedup mistake, not scheduler jitter.
+FABRIC_THRESHOLD = 2.0
+
+
+def fabric_gate(fresh_path, promoted_path):
+    """``--fabric`` mode: BENCH_fabric.json of record.
+
+    Always checks the fresh artifact's structural invariants (they are
+    deterministic outcomes of the protocol, not timings); compares
+    p95_ms / throughput_rps against the promoted artifact only once one
+    has been promoted.
+    """
+    fresh = json.load(open(fresh_path))
+
+    # Structural invariants: these hold on any healthy run, regardless
+    # of machine speed, and are the acceptance criteria of the fabric.
+    assert fresh.get("suite") == "serve_fabric", fresh.get("suite")
+    assert fresh["completed"] + fresh["failed"] == fresh["accepted"], (
+        fresh["completed"],
+        fresh["failed"],
+        fresh["accepted"],
+    )
+    assert fresh["failed"] == 0, f"fabric lost {fresh['failed']} accepted op(s)"
+    assert fresh["verified"], "fabric run was not bit-verified vs scalar"
+    # Digest dedup must be live: repeated weights resolve without
+    # re-sending plane bytes, and transfers are bounded by
+    # |weights| x |runners|, never by the op count.
+    assert fresh["dedup_hits"] > 0, "operand dedup never hit"
+    assert 0.0 <= fresh["dedup_hit_rate"] <= 1.0, fresh["dedup_hit_rate"]
+    assert fresh["plane_bytes_sent"] > 0, "no operand planes ever moved"
+    if fresh.get("killed_runner"):
+        assert fresh["alive_runners_end"] < fresh["runners"], (
+            fresh["alive_runners_end"],
+            fresh["runners"],
+        )
+        assert fresh["failovers"] > 0, (
+            "a runner was killed but no in-flight op failed over"
+        )
+    print(
+        f"fabric invariants ok: {fresh['completed']}/{fresh['accepted']} completed, "
+        f"{fresh['failovers']} failovers, dedup {fresh['dedup_hits']} hits "
+        f"({100 * fresh['dedup_hit_rate']:.0f}%), "
+        f"{fresh['plane_bytes_sent']} B sent / {fresh['plane_bytes_deduped']} B deduped"
+    )
+
+    promoted = json.load(open(promoted_path))
+    if promoted.get("status") == "pending-toolchain-run":
+        print(
+            "::notice::fabric perf gate skipped: promoted BENCH_fabric.json is "
+            "still the pending-toolchain placeholder; promote a green run "
+            "(artifacts/promote.sh) to arm it"
+        )
+        return 0
+
+    failures = []
+    p95_ratio = fresh["p95_ms"] / max(promoted["p95_ms"], 1e-9)
+    rps_ratio = promoted["throughput_rps"] / max(fresh["throughput_rps"], 1e-9)
+    for label, ratio in (("p95_ms", p95_ratio), ("throughput_rps", rps_ratio)):
+        verdict = "REGRESSION" if ratio > FABRIC_THRESHOLD else "ok"
+        print(f"{verdict:10} fabric {label}: {ratio:.2f}x vs promoted")
+        if ratio > FABRIC_THRESHOLD:
+            failures.append(label)
+    if failures:
+        for label in failures:
+            print(
+                f"::error::fabric perf regression on {label} "
+                f"(threshold {FABRIC_THRESHOLD:.1f}x)"
+            )
+        return 1
+    print("fabric perf gate passed")
+    return 0
+
+
 def main(argv):
+    if len(argv) == 4 and argv[1] == "--fabric":
+        return fabric_gate(argv[2], argv[3])
     if len(argv) != 3:
         print(__doc__.strip(), file=sys.stderr)
         return 2

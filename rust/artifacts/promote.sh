@@ -3,32 +3,34 @@
 # pending-toolchain placeholders (open ROADMAP item).
 #
 # Usage:
-#   artifacts/promote.sh <BENCH_gemm.json> <BENCH_serve.json> [autotune.json]
+#   artifacts/promote.sh <BENCH_gemm.json> <BENCH_serve.json> [autotune.json] [BENCH_fabric.json]
 #
 # Download the artifacts from a green CI run (`BENCH_gemm`,
-# `BENCH_serve`, and optionally `autotune` of the `rust` job), then run
-# this from `rust/`. The script validates that each file is a real
-# measured run (not a placeholder, required keys present, pre-encode
-# counters live, executed-kernel accounting consistent) before copying
-# it over the checked-in placeholder. The autotune table additionally
-# has its `boosters-autotune-v1` schema checked entry-by-entry so a
-# malformed table can never be promoted into the registry's load path.
+# `BENCH_serve`, and optionally `autotune` / `BENCH_fabric` of the
+# `rust` job), then run this from `rust/`. The script validates that
+# each file is a real measured run (not a placeholder, required keys
+# present, pre-encode counters live, executed-kernel accounting
+# consistent) before copying it over the checked-in placeholder. The
+# two optional files are classified by content, so their order does not
+# matter. The autotune table additionally has its
+# `boosters-autotune-v1` schema checked entry-by-entry so a malformed
+# table can never be promoted into the registry's load path; the fabric
+# artifact must be a bit-verified run with live dedup counters.
 set -eu
 
-if [ "$#" -lt 2 ] || [ "$#" -gt 3 ]; then
-    echo "usage: $0 <BENCH_gemm.json> <BENCH_serve.json> [autotune.json]" >&2
+if [ "$#" -lt 2 ] || [ "$#" -gt 4 ]; then
+    echo "usage: $0 <BENCH_gemm.json> <BENCH_serve.json> [autotune.json] [BENCH_fabric.json]" >&2
     exit 2
 fi
 
 here="$(dirname "$0")"
 
-python3 - "$@" <<'EOF'
+python3 - "$1" "$2" <<'EOF'
 import json
 import sys
 
 gemm = json.load(open(sys.argv[1]))
 serve = json.load(open(sys.argv[2]))
-tune = json.load(open(sys.argv[3])) if len(sys.argv) > 3 else None
 
 def fail(msg):
     sys.exit(f"refusing to promote: {msg}")
@@ -57,12 +59,31 @@ if not isinstance(kops, list) or not kops:
 if sum(e.get("ops", 0) for e in kops) != serve.get("completed"):
     fail("BENCH_serve kernel_ops do not sum to completed ops")
 
-if tune is not None:
-    if tune.get("status") == "pending-toolchain-run":
-        fail("autotune table is still a placeholder, not a measured run")
-    if tune.get("schema") != "boosters-autotune-v1":
-        fail(f"autotune schema {tune.get('schema')!r} != 'boosters-autotune-v1'")
-    entries = tune.get("entries")
+print("BENCH_gemm and BENCH_serve are measured runs with live pipeline counters")
+EOF
+
+cp "$1" "$here/BENCH_gemm.json"
+cp "$2" "$here/BENCH_serve.json"
+promoted="$here/BENCH_gemm.json and $here/BENCH_serve.json"
+shift 2
+
+for extra in "$@"; do
+    # Classify by content (validation lives with the classification):
+    # an autotune table vs a fabric serving artifact.
+    kind=$(python3 - "$extra" <<'EOF'
+import json
+import sys
+
+doc = json.load(open(sys.argv[1]))
+
+def fail(msg):
+    sys.exit(f"refusing to promote: {msg}")
+
+if doc.get("status") == "pending-toolchain-run":
+    fail(f"{sys.argv[1]} is still a placeholder, not a measured run")
+
+if doc.get("schema") == "boosters-autotune-v1":
+    entries = doc.get("entries")
     if not isinstance(entries, list) or not entries:
         fail("autotune table has no entries — run bench --autotune first")
     layouts = {"i4x2", "i8", "i16"}
@@ -80,16 +101,32 @@ if tune is not None:
             fail(f"autotune entry {i} has unknown mnk bucket {e['mnk_bucket']!r}")
         if not isinstance(e["kernel"], str) or not e["kernel"]:
             fail(f"autotune entry {i} has an empty kernel name")
-
-print("all artifacts are measured runs with live pipeline counters")
+    print("autotune")
+elif doc.get("suite") == "serve_fabric":
+    if not doc.get("verified"):
+        fail("BENCH_fabric run was not bit-verified vs the scalar reference")
+    if doc.get("failed"):
+        fail(f"BENCH_fabric run lost {doc['failed']} accepted op(s)")
+    if not doc.get("dedup_hits"):
+        fail("BENCH_fabric reports zero dedup hits — digest dedup not live")
+    if doc.get("killed_runner") and not doc.get("failovers"):
+        fail("BENCH_fabric killed a runner but recorded no failovers")
+    print("fabric")
+else:
+    fail(f"{sys.argv[1]} is neither an autotune table nor a fabric artifact")
 EOF
+) || exit 1
+    case "$kind" in
+        autotune)
+            cp "$extra" "$here/autotune.json"
+            promoted="$promoted and $here/autotune.json"
+            ;;
+        fabric)
+            cp "$extra" "$here/BENCH_fabric.json"
+            promoted="$promoted and $here/BENCH_fabric.json"
+            ;;
+    esac
+done
 
-cp "$1" "$here/BENCH_gemm.json"
-cp "$2" "$here/BENCH_serve.json"
-promoted="$here/BENCH_gemm.json and $here/BENCH_serve.json"
-if [ "$#" -eq 3 ]; then
-    cp "$3" "$here/autotune.json"
-    promoted="$promoted and $here/autotune.json"
-fi
 echo "promoted: $promoted"
 echo "commit them to close the ROADMAP artifact-promotion item"

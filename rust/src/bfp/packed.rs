@@ -182,7 +182,7 @@ pub(crate) fn nib_at(bytes: &[u8], i: usize) -> i8 {
 }
 
 /// The contiguous mantissa plane, monomorphized by storage layout.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum MantissaPlane {
     /// Nibble-packed 4-bit mantissas: `len / 2` bytes hold `len`
     /// values (see [`PlaneLayout::I4Packed`] for the nibble order).
@@ -296,7 +296,7 @@ impl MantissaPlane {
 
 /// A whole matrix encoded as packed BFP planes (see module docs for the
 /// layout contract). Encode once, GEMM many times.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BfpMatrix {
     pub fmt: BlockFormat,
     /// Logical row count.

@@ -21,7 +21,10 @@
 //! (row-encoded vs column/transposed-encoded). Two FNV-1a streams over
 //! independent bases make accidental collisions across a process
 //! lifetime negligible; shape is mixed in so a reshape of the same
-//! bytes cannot alias.
+//! bytes cannot alias. The fingerprint itself is single-homed in
+//! [`crate::util::digest`] — the fabric wire protocol ships the same
+//! [`Digest`] for cross-node transfer dedup, so cache and wire agree
+//! byte-for-byte by construction (stability test pins known values).
 //!
 //! **Only deterministic nearest-even encodings are cacheable.**
 //! Stochastic rounding depends on `(seed, site)` and must never be
@@ -40,6 +43,7 @@
 //! weight never pay for — or count — the same encode twice.
 
 use crate::bfp::{BfpMatrix, BlockFormat, PlaneLayout};
+use crate::util::digest::{content_fingerprint, Digest};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -48,8 +52,11 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 /// Identity of one encoded operand (see module docs for the contract).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CacheKey {
-    /// 128-bit content fingerprint over raw f32 bits + shape.
-    pub content: (u64, u64),
+    /// 128-bit content fingerprint over raw f32 bits + shape — the
+    /// same [`Digest`] the fabric wire protocol ships for transfer
+    /// dedup (single-homed in [`crate::util::digest`] so the two can
+    /// never disagree).
+    pub content: Digest,
     pub m_bits: u32,
     pub block: usize,
     /// Mantissa-plane storage layout the entry was encoded under. Today
@@ -78,21 +85,6 @@ impl CacheKey {
             transposed,
         }
     }
-}
-
-/// Two independent FNV-1a streams over the f32 bit patterns, with the
-/// shape folded into the bases. Deterministic across runs and
-/// platforms.
-pub fn content_fingerprint(data: &[f32], rows: usize, cols: usize) -> (u64, u64) {
-    const PRIME: u64 = 0x0000_0100_0000_01b3;
-    let mut h1: u64 = 0xcbf2_9ce4_8422_2325 ^ (rows as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
-    let mut h2: u64 = 0x6c62_272e_07bb_0142 ^ (cols as u64).wrapping_mul(0xc2b2_ae3d_27d4_eb4f);
-    for &x in data {
-        let b = x.to_bits() as u64;
-        h1 = (h1 ^ b).wrapping_mul(PRIME);
-        h2 = (h2 ^ b.rotate_left(17)).wrapping_mul(PRIME);
-    }
-    (h1, h2)
 }
 
 /// Approximate resident bytes of one encoded matrix (mantissa plane +

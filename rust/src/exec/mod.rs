@@ -133,6 +133,29 @@
 //! bit-identical to the scalar reference
 //! [`crate::bfp::hbfp_gemm_scalar`]. `tests/property_exec.rs` and
 //! `tests/property_service.rs` pin all of these.
+//!
+//! # Cross-node execution
+//!
+//! [`crate::fabric`] stretches this module's submit/ticket surface
+//! across processes: `repro fabric-runner` hosts a [`BfpService`]
+//! behind a TCP socket (speaking the versioned frame protocol of
+//! [`crate::fabric::wire`]), and [`crate::fabric::FabricRouter`]
+//! re-offers `submit → Ticket` over N runners, sharding by deadline
+//! slack × per-runner outstanding-MAC budget. The pieces the fabric
+//! reuses from here are load-bearing contracts, not conveniences:
+//!
+//! * [`AdmissionError`] is the backpressure type **on the wire** — a
+//!   runner's queue-full/shutting-down/invalid-shape rejection arrives
+//!   at the remote caller as the same typed error a local `submit`
+//!   returns (`queue::AdmissionError::wire_code`/`from_wire`);
+//! * the operand cache's 128-bit content fingerprint
+//!   ([`crate::util::digest`], the first component of
+//!   [`cache::CacheKey`]) doubles as the transfer-dedup identity:
+//!   weights cross the wire as **encoded** planes at most once per
+//!   distinct digest per runner;
+//! * the determinism guarantees above are what make router failover
+//!   correct — a re-placed op re-executes on a different runner and
+//!   fulfills its ticket with a bit-identical result.
 
 pub mod arena;
 pub mod cache;

@@ -88,7 +88,7 @@ impl GemmRequest {
 /// Typed admission failure. `submit` hands these back instead of
 /// blocking or panicking; callers decide whether to shed, retry, or
 /// fall back to the blocking facade.
-#[derive(Debug)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum AdmissionError {
     /// The bounded queue is at capacity — backpressure, try later.
     QueueFull { capacity: usize },
@@ -97,6 +97,52 @@ pub enum AdmissionError {
     /// The op can never execute (shape mismatch); submitting again will
     /// not help.
     InvalidShape { reason: String },
+}
+
+impl AdmissionError {
+    /// Stable wire code of this variant — the fabric protocol ships
+    /// typed backpressure as `(code, detail)` so a remote submitter
+    /// gets the same enum a local one does. Codes are frozen (the wire
+    /// is a cross-process contract); new variants append, never renumber.
+    pub fn wire_code(&self) -> u8 {
+        match self {
+            AdmissionError::QueueFull { .. } => 1,
+            AdmissionError::ShuttingDown => 2,
+            AdmissionError::InvalidShape { .. } => 3,
+        }
+    }
+
+    /// Variant-specific detail string paired with [`wire_code`] on the
+    /// wire (`capacity` rendered as decimal; the `InvalidShape` reason
+    /// verbatim).
+    ///
+    /// [`wire_code`]: AdmissionError::wire_code
+    pub fn wire_detail(&self) -> String {
+        match self {
+            AdmissionError::QueueFull { capacity } => capacity.to_string(),
+            AdmissionError::ShuttingDown => String::new(),
+            AdmissionError::InvalidShape { reason } => reason.clone(),
+        }
+    }
+
+    /// Inverse of [`wire_code`] / [`wire_detail`]: `None` for an
+    /// unknown code (a newer peer's variant — the caller surfaces it as
+    /// an opaque remote error rather than guessing).
+    ///
+    /// [`wire_code`]: AdmissionError::wire_code
+    /// [`wire_detail`]: AdmissionError::wire_detail
+    pub fn from_wire(code: u8, detail: &str) -> Option<Self> {
+        match code {
+            1 => Some(AdmissionError::QueueFull {
+                capacity: detail.trim().parse().unwrap_or(0),
+            }),
+            2 => Some(AdmissionError::ShuttingDown),
+            3 => Some(AdmissionError::InvalidShape {
+                reason: detail.to_string(),
+            }),
+            _ => None,
+        }
+    }
 }
 
 impl std::fmt::Display for AdmissionError {
@@ -817,6 +863,31 @@ mod tests {
         assert_eq!(q.pre_encode_bytes(), 2 * est);
         let _ = q.pop_batch(usize::MAX, 16, false).unwrap();
         assert_eq!(q.pre_encode_bytes(), 0, "drain releases every charge");
+    }
+
+    #[test]
+    fn admission_error_wire_mapping_roundtrips() {
+        let variants = [
+            AdmissionError::QueueFull { capacity: 128 },
+            AdmissionError::ShuttingDown,
+            AdmissionError::InvalidShape {
+                reason: "inner dims 8 vs 9 do not contract".into(),
+            },
+        ];
+        for e in variants {
+            let back = AdmissionError::from_wire(e.wire_code(), &e.wire_detail()).unwrap();
+            assert_eq!(back, e);
+        }
+        // Codes are frozen: renumbering would desynchronize mixed-version
+        // fleets silently, so pin them.
+        assert_eq!(AdmissionError::QueueFull { capacity: 0 }.wire_code(), 1);
+        assert_eq!(AdmissionError::ShuttingDown.wire_code(), 2);
+        assert_eq!(
+            AdmissionError::InvalidShape { reason: String::new() }.wire_code(),
+            3
+        );
+        // Unknown codes surface as None, never a guessed variant.
+        assert!(AdmissionError::from_wire(99, "x").is_none());
     }
 
     #[test]

@@ -182,6 +182,17 @@ impl OwnedGemmOp {
         });
         Ok(())
     }
+
+    /// Fill the shared slot with **externally produced** encoded planes
+    /// — how a fabric runner installs operands that arrived over the
+    /// wire (or from its digest-addressed operand store) so the
+    /// execution stage consumes them without ever touching the op's raw
+    /// f32 data. Same race semantics as [`OwnedGemmOp::pre_encode`]:
+    /// first writer wins, losers' planes are dropped (deterministic
+    /// encode makes every candidate bit-identical).
+    pub(crate) fn install_encoded(&self, x: Arc<BfpMatrix>, w: Arc<BfpMatrix>) {
+        let _ = self.encoded.set(PreEncoded { x, w });
+    }
 }
 
 /// Encode-stage accounting of one [`BatchGemm::run_with_stats`] call —

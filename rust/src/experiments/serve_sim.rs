@@ -32,10 +32,13 @@ use crate::exec::{
     AdmissionError, BatchGemm, BfpService, CacheStats, ExecRuntime, GemmRequest, OwnedGemmOp,
     Priority, ServiceConfig, ServiceStats,
 };
+use crate::fabric::{fetch_metrics, FabricRouter, FabricStats, RouterConfig};
 use crate::report::Table;
 use crate::util::{Json, Rng, Stopwatch};
 use anyhow::{ensure, Context, Result};
+use std::io::BufRead;
 use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -199,10 +202,13 @@ struct DriveOutcome {
     kernel_ops: KernelOpCounts,
 }
 
-/// Run the simulation on `rt` (normally [`crate::exec::global_arc`]).
-pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport> {
-    ensure!(cfg.requests > 0, "need at least one request");
-    ensure!(cfg.weights > 0, "need at least one weight matrix");
+/// Deterministic weight working set + request stream shared by every
+/// drive mode (sync facade, async service, fabric fleet): same seed,
+/// same workload, comparable numbers.
+#[allow(clippy::type_complexity)]
+fn build_workload(
+    cfg: &ServeSimConfig,
+) -> Result<(Vec<(Arc<Mat>, BlockFormat)>, Vec<Request>, Rng)> {
     // (K, n) shapes and formats of the weight working set — mixed block
     // sizes and mantissa widths, all on the paper's parameter grid.
     let shapes = [
@@ -237,6 +243,46 @@ pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport
             x: Arc::new(Mat::new(m, k, data)?),
         });
     }
+    Ok((weights, requests, rng))
+}
+
+/// Bit-identity spot check against the scalar reference: first, middle,
+/// and last request of the stream (shed requests are skipped; at least
+/// one sample must have completed).
+fn verify_sample(
+    requests: &[Request],
+    weights: &[(Arc<Mat>, BlockFormat)],
+    results: &[Option<Mat>],
+) -> Result<()> {
+    let n = requests.len();
+    let mut verified = 0usize;
+    for &idx in &[0, n / 2, n - 1] {
+        let Some(got) = &results[idx] else {
+            continue; // shed by admission control; nothing to check
+        };
+        let r = &requests[idx];
+        let want = hbfp_gemm_scalar(&r.x, &weights[r.wi].0, weights[r.wi].1)?;
+        ensure!(
+            got.data.len() == want.data.len(),
+            "request {idx}: shape drift vs scalar reference"
+        );
+        for (g, w) in got.data.iter().zip(&want.data) {
+            ensure!(
+                g.to_bits() == w.to_bits(),
+                "request {idx}: response diverged from hbfp_gemm_scalar"
+            );
+        }
+        verified += 1;
+    }
+    ensure!(verified > 0, "verification sample was entirely shed");
+    Ok(())
+}
+
+/// Run the simulation on `rt` (normally [`crate::exec::global_arc`]).
+pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport> {
+    ensure!(cfg.requests > 0, "need at least one request");
+    ensure!(cfg.weights > 0, "need at least one weight matrix");
+    let (weights, requests, mut rng) = build_workload(cfg)?;
 
     let cache_before = rt.cache_stats();
     let outcome = match cfg.mode {
@@ -245,26 +291,7 @@ pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport
     };
 
     if cfg.verify {
-        let mut verified = 0usize;
-        for &idx in &[0, cfg.requests / 2, cfg.requests - 1] {
-            let Some(got) = &outcome.results[idx] else {
-                continue; // shed by admission control; nothing to check
-            };
-            let r = &requests[idx];
-            let want = hbfp_gemm_scalar(&r.x, &weights[r.wi].0, weights[r.wi].1)?;
-            ensure!(
-                got.data.len() == want.data.len(),
-                "request {idx}: shape drift vs scalar reference"
-            );
-            for (g, w) in got.data.iter().zip(&want.data) {
-                ensure!(
-                    g.to_bits() == w.to_bits(),
-                    "request {idx}: response diverged from hbfp_gemm_scalar"
-                );
-            }
-            verified += 1;
-        }
-        ensure!(verified > 0, "verification sample was entirely shed");
+        verify_sample(&requests, &weights, &outcome.results)?;
     }
 
     let total_macs: f64 = requests
@@ -739,6 +766,408 @@ fn drive_async(
         service: Some(stats),
         stages: Some(stages),
         kernel_ops: stats.kernel_ops,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Fabric drive mode (`repro serve-sim --fabric N`)
+// ---------------------------------------------------------------------------
+
+/// One spawned local `repro fabric-runner` child.
+struct RunnerProc {
+    child: Child,
+    addr: String,
+}
+
+/// Spawn `repro fabric-runner --listen 127.0.0.1:0` as a child process
+/// and parse the announced ephemeral address off its first stdout line.
+fn spawn_runner() -> Result<RunnerProc> {
+    let exe = std::env::current_exe().context("resolving the repro binary path")?;
+    let mut child = Command::new(&exe)
+        .args(["fabric-runner", "--listen", "127.0.0.1:0"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .with_context(|| format!("spawning fabric runner via {}", exe.display()))?;
+    let stdout = child.stdout.take().context("runner stdout was not piped")?;
+    let mut line = String::new();
+    let read = std::io::BufReader::new(stdout).read_line(&mut line);
+    let addr = line
+        .trim()
+        .strip_prefix("fabric-runner listening on ")
+        .map(str::to_string)
+        .filter(|a| !a.is_empty());
+    match (read, addr) {
+        (Ok(_), Some(addr)) => Ok(RunnerProc { child, addr }),
+        _ => {
+            let _ = child.kill();
+            let _ = child.wait();
+            anyhow::bail!("fabric runner did not announce a listen address (got {line:?})")
+        }
+    }
+}
+
+/// Raw numbers out of one fabric drive.
+struct FabricOutcome {
+    lat_ms: Vec<f64>,
+    results: Vec<Option<Mat>>,
+    wall_s: f64,
+    rejected: u64,
+    failed: u64,
+    misses: u64,
+    stats: FabricStats,
+    killed: bool,
+    /// Lines of Prometheus text scraped from one surviving runner's
+    /// socket (0 when the scrape failed — reported, not fatal).
+    metrics_lines: usize,
+}
+
+/// Result summary of a fabric run (printable table + JSON artifact).
+pub struct FabricSimReport {
+    pub table: Table,
+    pub completed: usize,
+    pub rejected: u64,
+    pub failed: u64,
+    pub failovers: u64,
+    pub dedup_hits: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    json: Json,
+}
+
+impl FabricSimReport {
+    /// Machine-readable form (what the `--json` sink writes).
+    pub fn to_json(&self) -> &Json {
+        &self.json
+    }
+}
+
+/// `repro serve-sim --fabric N`: drive the standard request stream
+/// through a [`FabricRouter`] over a fleet of runner processes.
+///
+/// With `connect` empty the fleet is `runners` local children spawned
+/// from the current binary, and (when there are at least two) one of
+/// them is **killed 60% through submission** to exercise failover under
+/// load. With `connect` non-empty (the `BOOSTERS_FABRIC_CONNECT` path)
+/// the run attaches to an existing external fleet instead — nothing is
+/// spawned and nothing is killed.
+pub fn run_fabric(
+    rt: &Arc<ExecRuntime>,
+    cfg: &ServeSimConfig,
+    runners: usize,
+    connect: &[String],
+) -> Result<FabricSimReport> {
+    ensure!(cfg.requests > 0, "need at least one request");
+    ensure!(cfg.weights > 0, "need at least one weight matrix");
+    ensure!(
+        runners >= 1 || !connect.is_empty(),
+        "need at least one fabric runner"
+    );
+    let (weights, requests, _rng) = build_workload(cfg)?;
+
+    let mut procs: Vec<RunnerProc> = Vec::new();
+    let addrs: Vec<String> = if connect.is_empty() {
+        for _ in 0..runners {
+            match spawn_runner() {
+                Ok(p) => procs.push(p),
+                Err(e) => {
+                    for p in &mut procs {
+                        let _ = p.child.kill();
+                        let _ = p.child.wait();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        procs.iter().map(|p| p.addr.clone()).collect()
+    } else {
+        connect.to_vec()
+    };
+    let spawned = !procs.is_empty();
+
+    // Children are reaped on every exit path; the drive itself never
+    // early-returns past this point without coming back through here.
+    let outcome = drive_fabric(rt, cfg, &requests, &weights, &addrs, &mut procs);
+    for p in &mut procs {
+        let _ = p.child.kill();
+        let _ = p.child.wait();
+    }
+    let outcome = outcome?;
+
+    if cfg.verify {
+        verify_sample(&requests, &weights, &outcome.results)?;
+    }
+
+    let stats = &outcome.stats;
+    let completed = outcome.lat_ms.len();
+    let accepted = completed as u64 + outcome.failed;
+    let alive_end = stats.runners.iter().filter(|r| r.alive).count();
+    let mut sorted = outcome.lat_ms.clone();
+    sorted.sort_by(f64::total_cmp);
+    let (p50, p95, p99) = (
+        percentile(&sorted, 0.50),
+        percentile(&sorted, 0.95),
+        percentile(&sorted, 0.99),
+    );
+    let wall_s = outcome.wall_s.max(1e-9);
+    let rps = completed as f64 / wall_s;
+    let miss_rate = if completed == 0 {
+        0.0
+    } else {
+        outcome.misses as f64 / completed as f64
+    };
+
+    let mut table = Table::new(
+        "serve-sim --fabric — BFP GEMM serving over the multi-node fabric",
+        &["metric", "value"],
+    );
+    let mut kv = |k: &str, v: String| {
+        table.row(vec![k.to_string(), v]);
+    };
+    kv(
+        "fleet",
+        if spawned {
+            format!("{} spawned local runner process(es)", addrs.len())
+        } else {
+            format!("{} external runner(s)", addrs.len())
+        },
+    );
+    kv("requests", cfg.requests.to_string());
+    kv("weight working set", cfg.weights.to_string());
+    kv("completed", completed.to_string());
+    kv("rejected (backpressure)", outcome.rejected.to_string());
+    kv("failed", outcome.failed.to_string());
+    kv(
+        "runner killed mid-run",
+        if outcome.killed { "yes" } else { "no" }.to_string(),
+    );
+    kv(
+        "runners alive at end",
+        format!("{alive_end}/{}", addrs.len()),
+    );
+    kv("failovers (ops re-placed)", stats.failovers.to_string());
+    kv("retries (incl. re-negotiation)", stats.retries.to_string());
+    kv("digest probes", stats.probes.to_string());
+    kv(
+        "operand dedup",
+        format!(
+            "{} hits / {} misses ({:.0}% hit rate)",
+            stats.dedup_hits,
+            stats.dedup_misses,
+            100.0 * stats.dedup_hit_rate()
+        ),
+    );
+    kv(
+        "plane bytes on wire / deduped",
+        format!(
+            "{} / {}",
+            stats.plane_bytes_sent, stats.plane_bytes_deduped
+        ),
+    );
+    for r in &stats.runners {
+        kv(
+            &format!("runner {}", r.addr),
+            format!(
+                "{} · queue {} (peak {}) · {} done · {} dedup hits · {} plane B",
+                if r.alive { "alive" } else { "dead" },
+                r.inflight,
+                r.peak_inflight,
+                r.completed,
+                r.dedup_hits,
+                r.plane_bytes_sent
+            ),
+        );
+    }
+    kv("wall time (s)", format!("{wall_s:.3}"));
+    kv("achieved throughput (req/s)", format!("{rps:.1}"));
+    kv("cross-node latency p50 (ms)", format!("{p50:.3}"));
+    kv("cross-node latency p95 (ms)", format!("{p95:.3}"));
+    kv("cross-node latency p99 (ms)", format!("{p99:.3}"));
+    kv("deadline-miss rate", format!("{miss_rate:.3}"));
+    kv(
+        "runner metrics scrape",
+        if outcome.metrics_lines > 0 {
+            format!("{} lines of Prometheus text", outcome.metrics_lines)
+        } else {
+            "unavailable".to_string()
+        },
+    );
+    kv(
+        "verified vs scalar",
+        if cfg.verify { "yes (bit-exact sample)" } else { "no" }.to_string(),
+    );
+
+    let json = Json::obj(vec![
+        ("suite", Json::str("serve_fabric")),
+        ("runners", Json::Num(addrs.len() as f64)),
+        ("spawned", Json::Bool(spawned)),
+        ("requests", Json::Num(cfg.requests as f64)),
+        ("accepted", Json::Num(accepted as f64)),
+        ("completed", Json::Num(completed as f64)),
+        ("rejected", Json::Num(outcome.rejected as f64)),
+        ("failed", Json::Num(outcome.failed as f64)),
+        ("killed_runner", Json::Bool(outcome.killed)),
+        ("alive_runners_end", Json::Num(alive_end as f64)),
+        ("failovers", Json::Num(stats.failovers as f64)),
+        ("retries", Json::Num(stats.retries as f64)),
+        ("rejected_remote", Json::Num(stats.rejected_remote as f64)),
+        ("probes", Json::Num(stats.probes as f64)),
+        ("dedup_hits", Json::Num(stats.dedup_hits as f64)),
+        ("dedup_misses", Json::Num(stats.dedup_misses as f64)),
+        ("dedup_hit_rate", Json::Num(stats.dedup_hit_rate())),
+        ("plane_bytes_sent", Json::Num(stats.plane_bytes_sent as f64)),
+        (
+            "plane_bytes_deduped",
+            Json::Num(stats.plane_bytes_deduped as f64),
+        ),
+        ("wall_s", Json::Num(wall_s)),
+        ("throughput_rps", Json::Num(rps)),
+        ("p50_ms", Json::Num(p50)),
+        ("p95_ms", Json::Num(p95)),
+        ("p99_ms", Json::Num(p99)),
+        ("deadline_miss_rate", Json::Num(miss_rate)),
+        (
+            "runner_metrics_lines",
+            Json::Num(outcome.metrics_lines as f64),
+        ),
+        (
+            "per_runner",
+            Json::arr(stats.runners.iter().map(|r| {
+                Json::obj(vec![
+                    ("addr", Json::str(&r.addr)),
+                    ("alive", Json::Bool(r.alive)),
+                    ("inflight", Json::Num(r.inflight as f64)),
+                    ("peak_inflight", Json::Num(r.peak_inflight as f64)),
+                    ("completed", Json::Num(r.completed as f64)),
+                    ("dedup_hits", Json::Num(r.dedup_hits as f64)),
+                    ("plane_bytes_sent", Json::Num(r.plane_bytes_sent as f64)),
+                ])
+            })),
+        ),
+        ("verified", Json::Bool(cfg.verify)),
+    ]);
+    if let Some(path) = &cfg.json {
+        let mut text = json.render();
+        text.push('\n');
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, text).with_context(|| format!("writing {}", path.display()))?;
+        println!("wrote fabric JSON artifact to {}", path.display());
+    }
+
+    Ok(FabricSimReport {
+        table,
+        completed,
+        rejected: outcome.rejected,
+        failed: outcome.failed,
+        failovers: stats.failovers,
+        dedup_hits: stats.dedup_hits,
+        p50_ms: p50,
+        p95_ms: p95,
+        p99_ms: p99,
+        json,
+    })
+}
+
+/// Submit the stream through the router, killing one spawned runner 60%
+/// of the way through when the fleet can survive it.
+fn drive_fabric(
+    rt: &Arc<ExecRuntime>,
+    cfg: &ServeSimConfig,
+    requests: &[Request],
+    weights: &[(Arc<Mat>, BlockFormat)],
+    addrs: &[String],
+    procs: &mut [RunnerProc],
+) -> Result<FabricOutcome> {
+    let router = FabricRouter::connect(addrs, RouterConfig::default(), Arc::clone(rt))
+        .context("connecting the fabric router")?;
+    let deadline = cfg
+        .deadline_ms
+        .map(|ms| Duration::from_secs_f64((ms / 1e3).max(0.0)));
+    // Only kill a runner we spawned, and only when survivors remain.
+    let kill_at = if procs.len() >= 2 {
+        (requests.len() * 3) / 5
+    } else {
+        usize::MAX
+    };
+    let mut killed = false;
+    let mut tickets: Vec<(usize, crate::exec::Ticket)> = Vec::with_capacity(requests.len());
+    let mut rejected = 0u64;
+    let sw_all = Stopwatch::start();
+    for (i, r) in requests.iter().enumerate() {
+        if i == kill_at {
+            // SIGKILL, not a polite shutdown: the router must notice the
+            // dropped connection and re-place the accepted in-flight ops
+            // on the survivors without any client-visible failure.
+            let victim = procs.last_mut().expect("kill_at implies procs");
+            victim.child.kill().context("killing a fabric runner")?;
+            let _ = victim.child.wait();
+            killed = true;
+        }
+        // Alternate QoS classes so both sharding paths run: deadline
+        // ops route by slack × outstanding MACs, bulk ops round-robin.
+        let (prio, dl) = if i % 2 == 0 {
+            (Priority::Interactive, deadline)
+        } else {
+            (Priority::Bulk, None)
+        };
+        let (w, fmt) = (&weights[r.wi].0, weights[r.wi].1);
+        match router.submit(Arc::clone(&r.x), Arc::clone(w), fmt, dl, prio) {
+            Ok(t) => tickets.push((i, t)),
+            Err(AdmissionError::QueueFull { .. }) => rejected += 1,
+            Err(e) => return Err(anyhow::Error::new(e).context("fabric submission")),
+        }
+    }
+
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(tickets.len());
+    let mut results: Vec<Option<Mat>> = (0..requests.len()).map(|_| None).collect();
+    let mut misses = 0u64;
+    let mut failed = 0u64;
+    for (i, ticket) in tickets {
+        match ticket.wait() {
+            Ok(resp) => {
+                lat_ms.push(resp.total_ms);
+                if resp.deadline_missed {
+                    misses += 1;
+                }
+                results[i] = Some(resp.out);
+            }
+            Err(e) => {
+                // Accepted ops only fail when no runner survives — keep
+                // the run alive so the report shows the loss.
+                eprintln!("[serve-sim] fabric request {i} failed: {e:#}");
+                failed += 1;
+            }
+        }
+    }
+    let wall_s = sw_all.secs();
+    // Scrape one survivor's metrics socket end-to-end — the same text
+    // `repro metrics --connect` prints.
+    let metrics_lines = router
+        .stats()
+        .runners
+        .iter()
+        .find(|r| r.alive)
+        .and_then(|r| fetch_metrics(&r.addr).ok())
+        .map(|t| t.lines().count())
+        .unwrap_or(0);
+    let stats = router.stats();
+    drop(router);
+    Ok(FabricOutcome {
+        lat_ms,
+        results,
+        wall_s,
+        rejected,
+        failed,
+        misses,
+        stats,
+        killed,
+        metrics_lines,
     })
 }
 

@@ -1,0 +1,68 @@
+//! Multi-node execution fabric: remote BFP runners, digest-dedup
+//! operand transfer, and a deadline-sharding router.
+//!
+//! The [`crate::exec`] service executes HBFP GEMMs behind a
+//! submit/ticket surface on one machine. This module stretches that
+//! surface across processes: a [`runner`] hosts a
+//! [`crate::exec::BfpService`] behind a TCP socket, and a [`router`]
+//! offers the same submit/ticket API over N such runners. Everything
+//! rides the determinism contract — a GEMM is a pure function of
+//! `(x, w, fmt)`, bit-identical to `hbfp_gemm_scalar` wherever it runs
+//! — which is what makes transparent failover *correct* rather than
+//! merely optimistic.
+//!
+//! # Frame layout
+//!
+//! One TCP connection carries a sequence of length-prefixed frames
+//! (see [`wire`] for the authoritative byte-level spec):
+//!
+//! ```text
+//! "BFAB" | version u16 | kind u8 | flags u8 | payload_len u32 | payload
+//! ```
+//!
+//! All integers little-endian; f32 values travel as `to_bits()` words,
+//! preserving bit-identity end to end. Frames are the atomic write
+//! unit; readers reject truncated, oversized, or trailing-garbage
+//! payloads and drop the connection rather than resynchronize.
+//!
+//! # Digest negotiation (operand dedup)
+//!
+//! Weight operands are referenced by the 128-bit content digest of
+//! [`crate::util::digest`] — the *same* fingerprint the exec-layer
+//! operand cache keys on, single-homed so cache and wire agree
+//! byte-for-byte. The transfer protocol is digest-first:
+//!
+//! 1. the router checks its per-runner known-key set (no traffic);
+//! 2. on a miss it sends a [`wire::ProbeFrame`] and the runner answers
+//!    from its operand store;
+//! 3. only a negative answer moves plane bytes — one
+//!    [`wire::PutOperandFrame`] carrying the **encoded** mantissa +
+//!    exponent planes (a 4-bit weight crosses the wire at ~4.5
+//!    bits/value, the paper's density argument applied to the network);
+//! 4. a submission that still references an unknown digest (runner
+//!    restart) bounces with `REJECT_NEED_OPERAND` and the router
+//!    re-negotiates — the store needs no session state to recover.
+//!
+//! Each distinct weight plane therefore crosses the wire **at most
+//! once per runner** in steady state; [`FabricStats`] carries both the
+//! hit counters and the bytes-sent / bytes-deduped pair that prove it.
+//!
+//! # Failover contract
+//!
+//! The router holds every in-flight op's inputs until its result
+//! lands. A dropped connection (EOF, send failure, probe timeout)
+//! marks the runner dead, drains its in-flight map exactly once, and
+//! re-places each orphan on the survivors — re-running the operand
+//! negotiation there. Callers observe nothing but latency: the ticket
+//! fulfills with a bit-identical result. Ops are never executed
+//! speculatively on two runners, so "at most once per runner, exactly
+//! once overall" holds for every op whose router survives. Only when
+//! no runner remains does a ticket fail, with a typed error.
+
+pub mod router;
+pub mod runner;
+pub mod wire;
+
+pub use router::{fetch_metrics, FabricRouter, FabricStats, RouterConfig, RunnerView};
+pub use runner::{serve, serve_on, RunnerHandle};
+pub use wire::{Frame, OperandKey};

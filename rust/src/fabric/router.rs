@@ -1,0 +1,860 @@
+//! Client-side router of the fabric: the submit/ticket surface over N
+//! runner connections.
+//!
+//! # Sharding policy
+//!
+//! Placement keys on **deadline slack × per-runner outstanding-MAC
+//! budget**. Every runner connection tracks the MACs it has accepted
+//! but not yet completed; a runner whose backlog would exceed the
+//! configured [`RouterConfig::mac_budget`] is not a candidate.
+//! Within the candidates:
+//!
+//! * a request carrying a deadline (its slack is finite) packs onto the
+//!   runner with the **smallest outstanding backlog** — backlog is the
+//!   queueing delay it will eat out of that slack;
+//! * slack-free bulk traffic **round-robins**, spreading work instead
+//!   of convoying behind the same emptiest node.
+//!
+//! When no runner is under budget, a fresh submission gets
+//! [`AdmissionError::QueueFull`] — the same typed backpressure a local
+//! caller sees, with `capacity` carrying the runner count. Failover
+//! resubmissions bypass the budget: an accepted op is never dropped for
+//! being unlucky about when its runner died.
+//!
+//! # Dedup negotiation
+//!
+//! Weight operands travel by content digest. Per runner the router
+//! keeps the set of keys it believes the runner holds; on a miss it
+//! probes ("do you hold `digest`?") and ships the encoded planes only
+//! on a negative answer. Counters record both sides of the bargain:
+//! bytes actually sent and bytes a naive router would have re-sent
+//! ([`FabricStats::plane_bytes_deduped`]).
+//!
+//! # Failover contract
+//!
+//! Ops are pure functions of `(x, w, fmt)`, so the router keeps each
+//! in-flight op's inputs until its result lands. When a connection
+//! drops, every op in flight on it is resubmitted to the surviving
+//! runners — re-negotiating operands there — and its caller's
+//! [`Ticket`] fulfills from wherever the op finally ran, bit-identical
+//! by the determinism contract. Only when no runner survives does a
+//! ticket fail.
+//!
+//! # Threading
+//!
+//! Three kinds of thread touch a connection: submitters (any caller
+//! thread), one **reader** per connection, and one **repair** thread
+//! per router. Only submitters and the repair thread ever *place* ops
+//! — placement can block on a probe round-trip, and a reader blocking
+//! on a reply only it could deliver would deadlock. Readers therefore
+//! never place: they hand orphaned ops (dead connection, remote
+//! reject) to the repair thread through a channel and go back to
+//! reading.
+
+use super::wire::{
+    plane_wire_bytes, Frame, OperandKey, ProbeFrame, PutOperandFrame, SubmitFrame,
+    REJECT_EXEC_FAILED, REJECT_NEED_OPERAND,
+};
+use crate::bfp::{BfpMatrix, BlockFormat, Mat};
+use crate::exec::queue::TicketInner;
+use crate::exec::{AdmissionError, ExecRuntime, GemmResponse, Priority, Ticket};
+use crate::util::digest::content_fingerprint;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::io::BufReader;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long a submitter waits for a probe answer before declaring the
+/// connection dead (a runner answers probes from memory; seconds of
+/// silence means the node, not the store, is the problem).
+const PROBE_TIMEOUT: Duration = Duration::from_secs(10);
+
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Outstanding-MAC budget per runner; the admission half of the
+    /// sharding policy (see module docs).
+    pub mac_budget: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            mac_budget: crate::util::fabric_mac_budget(),
+        }
+    }
+}
+
+/// One request as the router must remember it to be able to run it
+/// again somewhere else.
+struct InflightOp {
+    x: Arc<Mat>,
+    w: Arc<Mat>,
+    fmt: BlockFormat,
+    deadline_at: Option<Instant>,
+    priority: Priority,
+    ticket: Arc<TicketInner>,
+    macs: u64,
+    submitted_at: Instant,
+    attempts: u32,
+}
+
+/// Work for the repair thread: place (or re-place) one op. `backpressure`
+/// carries the typed error to surface if placement finds no capacity —
+/// `None` means the op must land somewhere or fail outright.
+struct RepairJob {
+    op: InflightOp,
+    must_place: bool,
+    backpressure: Option<AdmissionError>,
+}
+
+#[derive(Default)]
+struct RouterCounters {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    rejected_remote: AtomicU64,
+    retries: AtomicU64,
+    failovers: AtomicU64,
+    probes: AtomicU64,
+    dedup_hits: AtomicU64,
+    dedup_misses: AtomicU64,
+    plane_bytes_sent: AtomicU64,
+    plane_bytes_deduped: AtomicU64,
+}
+
+/// One runner connection and everything the router knows about it.
+struct RunnerConn {
+    index: usize,
+    addr: String,
+    writer: Mutex<TcpStream>,
+    alive: AtomicBool,
+    outstanding_macs: AtomicU64,
+    completed: AtomicU64,
+    peak_inflight: AtomicU64,
+    dedup_hits: AtomicU64,
+    plane_bytes_sent: AtomicU64,
+    inflight: Mutex<HashMap<u64, InflightOp>>,
+    /// Keys this router believes the runner holds (optimistic — a
+    /// `REJECT_NEED_OPERAND` invalidates the set and re-negotiates).
+    known: Mutex<HashSet<OperandKey>>,
+    /// Serializes operand negotiation per runner so concurrent
+    /// submitters cannot double-ship the same planes.
+    negotiate: Mutex<()>,
+    probe_replies: Mutex<HashMap<OperandKey, bool>>,
+    probe_cv: Condvar,
+}
+
+impl RunnerConn {
+    fn send(&self, frame: &Frame) -> Result<()> {
+        let mut w = self.writer.lock().unwrap_or_else(|p| p.into_inner());
+        frame.write_to(&mut *w)
+    }
+}
+
+struct RouterShared {
+    runners: Vec<Arc<RunnerConn>>,
+    rt: Arc<ExecRuntime>,
+    next_id: AtomicU64,
+    rr: AtomicU64,
+    mac_budget: u64,
+    counters: RouterCounters,
+}
+
+/// Live per-runner view for the stats surface.
+#[derive(Debug, Clone)]
+pub struct RunnerView {
+    pub addr: String,
+    pub alive: bool,
+    /// Ops accepted by this router and not yet completed there — the
+    /// router-observed queue depth of the runner.
+    pub inflight: usize,
+    pub peak_inflight: u64,
+    pub outstanding_macs: u64,
+    pub completed: u64,
+    pub dedup_hits: u64,
+    pub plane_bytes_sent: u64,
+}
+
+/// Snapshot of the router's counters (see module docs for what each
+/// side of the dedup pair means).
+#[derive(Debug, Clone)]
+pub struct FabricStats {
+    pub runners: Vec<RunnerView>,
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected_remote: u64,
+    pub retries: u64,
+    pub failovers: u64,
+    pub probes: u64,
+    pub dedup_hits: u64,
+    pub dedup_misses: u64,
+    pub plane_bytes_sent: u64,
+    pub plane_bytes_deduped: u64,
+}
+
+impl FabricStats {
+    /// Fraction of weight-operand references that moved no plane bytes.
+    pub fn dedup_hit_rate(&self) -> f64 {
+        let total = self.dedup_hits + self.dedup_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.dedup_hits as f64 / total as f64
+        }
+    }
+
+    /// Counter pairs for the metrics exposition.
+    pub fn metric_pairs(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("fabric_router_submitted_total", self.submitted),
+            ("fabric_router_completed_total", self.completed),
+            ("fabric_router_failed_total", self.failed),
+            ("fabric_router_rejected_remote_total", self.rejected_remote),
+            ("fabric_router_retries_total", self.retries),
+            ("fabric_router_failovers_total", self.failovers),
+            ("fabric_router_probes_total", self.probes),
+            ("fabric_router_dedup_hits_total", self.dedup_hits),
+            ("fabric_router_dedup_misses_total", self.dedup_misses),
+            ("fabric_router_plane_bytes_sent_total", self.plane_bytes_sent),
+            (
+                "fabric_router_plane_bytes_deduped_total",
+                self.plane_bytes_deduped,
+            ),
+        ]
+    }
+}
+
+/// The client-side entry point: connect once, submit many.
+pub struct FabricRouter {
+    shared: Arc<RouterShared>,
+    readers: Vec<JoinHandle<()>>,
+    repair_tx: Option<mpsc::Sender<RepairJob>>,
+    repair: Option<JoinHandle<()>>,
+}
+
+impl FabricRouter {
+    /// Connect to every runner address. All connections must succeed —
+    /// a fleet that starts degraded is a misconfiguration, not a
+    /// failover case. Weights are encoded locally on `rt` (its operand
+    /// cache makes each distinct weight a single encode per process).
+    pub fn connect(addrs: &[String], cfg: RouterConfig, rt: Arc<ExecRuntime>) -> Result<Self> {
+        if addrs.is_empty() {
+            bail!("fabric router needs at least one runner address");
+        }
+        let mut runners = Vec::with_capacity(addrs.len());
+        for (index, addr) in addrs.iter().enumerate() {
+            let stream = TcpStream::connect(addr)
+                .with_context(|| format!("connecting to fabric runner {addr}"))?;
+            let _ = stream.set_nodelay(true);
+            runners.push(Arc::new(RunnerConn {
+                index,
+                addr: addr.clone(),
+                writer: Mutex::new(stream),
+                alive: AtomicBool::new(true),
+                outstanding_macs: AtomicU64::new(0),
+                completed: AtomicU64::new(0),
+                peak_inflight: AtomicU64::new(0),
+                dedup_hits: AtomicU64::new(0),
+                plane_bytes_sent: AtomicU64::new(0),
+                inflight: Mutex::new(HashMap::new()),
+                known: Mutex::new(HashSet::new()),
+                negotiate: Mutex::new(()),
+                probe_replies: Mutex::new(HashMap::new()),
+                probe_cv: Condvar::new(),
+            }));
+        }
+        let shared = Arc::new(RouterShared {
+            runners,
+            rt,
+            next_id: AtomicU64::new(1),
+            rr: AtomicU64::new(0),
+            mac_budget: cfg.mac_budget.max(1),
+            counters: RouterCounters::default(),
+        });
+        let (repair_tx, repair_rx) = mpsc::channel::<RepairJob>();
+        let repair = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("fabric-repair".into())
+                .spawn(move || repair_loop(shared, repair_rx))
+                .context("spawning fabric repair thread")?
+        };
+        let mut readers = Vec::new();
+        for conn in &shared.runners {
+            let shared2 = Arc::clone(&shared);
+            let conn2 = Arc::clone(conn);
+            let tx = repair_tx.clone();
+            readers.push(
+                std::thread::Builder::new()
+                    .name(format!("fabric-rx-{}", conn.index))
+                    .spawn(move || reader_loop(shared2, conn2, tx))
+                    .context("spawning fabric reader thread")?,
+            );
+        }
+        Ok(Self {
+            shared,
+            readers,
+            repair_tx: Some(repair_tx),
+            repair: Some(repair),
+        })
+    }
+
+    /// Submit one GEMM to the fabric. Same contract as
+    /// [`crate::exec::BfpService::submit`]: non-blocking admission with
+    /// typed [`AdmissionError`] backpressure, and a [`Ticket`] whose
+    /// result is bit-identical to the local scalar reference.
+    pub fn submit(
+        &self,
+        x: Arc<Mat>,
+        w: Arc<Mat>,
+        fmt: BlockFormat,
+        deadline: Option<Duration>,
+        priority: Priority,
+    ) -> Result<Ticket, AdmissionError> {
+        if x.cols != w.rows {
+            return Err(AdmissionError::InvalidShape {
+                reason: format!("inner dims {} vs {} do not contract", x.cols, w.rows),
+            });
+        }
+        let macs = (x.rows as u64) * (x.cols as u64) * (w.cols as u64);
+        let ticket = TicketInner::new();
+        let now = Instant::now();
+        let op = InflightOp {
+            x,
+            w,
+            fmt,
+            deadline_at: deadline.map(|d| now + d),
+            priority,
+            ticket: Arc::clone(&ticket),
+            macs,
+            submitted_at: now,
+            attempts: 0,
+        };
+        // Fresh submissions respect the budget (backpressure); only
+        // failover resubmissions may overrun it.
+        if let Err((_op, adm)) = route(&self.shared, op, false) {
+            return Err(adm);
+        }
+        self.shared.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(Ticket::from_inner(ticket))
+    }
+
+    pub fn stats(&self) -> FabricStats {
+        let c = &self.shared.counters;
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        FabricStats {
+            runners: self
+                .shared
+                .runners
+                .iter()
+                .map(|r| RunnerView {
+                    addr: r.addr.clone(),
+                    alive: r.alive.load(Ordering::SeqCst),
+                    inflight: r.inflight.lock().unwrap_or_else(|p| p.into_inner()).len(),
+                    peak_inflight: g(&r.peak_inflight),
+                    outstanding_macs: g(&r.outstanding_macs),
+                    completed: g(&r.completed),
+                    dedup_hits: g(&r.dedup_hits),
+                    plane_bytes_sent: g(&r.plane_bytes_sent),
+                })
+                .collect(),
+            submitted: g(&c.submitted),
+            completed: g(&c.completed),
+            failed: g(&c.failed),
+            rejected_remote: g(&c.rejected_remote),
+            retries: g(&c.retries),
+            failovers: g(&c.failovers),
+            probes: g(&c.probes),
+            dedup_hits: g(&c.dedup_hits),
+            dedup_misses: g(&c.dedup_misses),
+            plane_bytes_sent: g(&c.plane_bytes_sent),
+            plane_bytes_deduped: g(&c.plane_bytes_deduped),
+        }
+    }
+
+    /// Number of runners still connected.
+    pub fn alive_runners(&self) -> usize {
+        self.shared
+            .runners
+            .iter()
+            .filter(|r| r.alive.load(Ordering::SeqCst))
+            .count()
+    }
+}
+
+impl Drop for FabricRouter {
+    fn drop(&mut self) {
+        for conn in &self.shared.runners {
+            conn.alive.store(false, Ordering::SeqCst);
+            conn.probe_cv.notify_all();
+            let w = conn.writer.lock().unwrap_or_else(|p| p.into_inner());
+            let _ = w.shutdown(Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        // Readers are gone; dropping the last sender ends the repair
+        // loop once it has drained what they enqueued.
+        self.repair_tx = None;
+        if let Some(h) = self.repair.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn repair_loop(shared: Arc<RouterShared>, rx: mpsc::Receiver<RepairJob>) {
+    while let Ok(job) = rx.recv() {
+        if let Err((op, adm)) = route(&shared, job.op, job.must_place) {
+            // No capacity anywhere: surface the typed backpressure the
+            // runner originally sent (or the local QueueFull).
+            let adm = job.backpressure.unwrap_or(adm);
+            fail_op_with(&shared, op, anyhow!(adm));
+        }
+    }
+}
+
+/// Pick a runner for `macs` of work (see module docs for the policy).
+fn pick_runner(
+    shared: &RouterShared,
+    macs: u64,
+    deadline_at: Option<Instant>,
+    must_place: bool,
+) -> Option<Arc<RunnerConn>> {
+    let alive: Vec<&Arc<RunnerConn>> = shared
+        .runners
+        .iter()
+        .filter(|r| r.alive.load(Ordering::SeqCst))
+        .collect();
+    if alive.is_empty() {
+        return None;
+    }
+    let under_budget: Vec<&Arc<RunnerConn>> = alive
+        .iter()
+        .copied()
+        .filter(|r| {
+            r.outstanding_macs
+                .load(Ordering::Relaxed)
+                .saturating_add(macs)
+                <= shared.mac_budget
+        })
+        .collect();
+    if under_budget.is_empty() {
+        if !must_place {
+            return None;
+        }
+        // Failover placement: least backlog wins, budget or not.
+        return alive
+            .into_iter()
+            .min_by_key(|r| r.outstanding_macs.load(Ordering::Relaxed))
+            .cloned();
+    }
+    let chosen = if deadline_at.is_some() {
+        // Finite slack: backlog is queueing delay — pack the emptiest.
+        under_budget
+            .iter()
+            .min_by_key(|r| r.outstanding_macs.load(Ordering::Relaxed))
+            .copied()
+    } else {
+        // Slack-free bulk: spread round-robin across the candidates.
+        let n = shared.rr.fetch_add(1, Ordering::Relaxed) as usize;
+        under_budget.get(n % under_budget.len()).copied()
+    };
+    chosen.map(Arc::clone)
+}
+
+/// Make sure `conn` holds the encoded planes for `key` before any
+/// submission references it: known-set hit, probe hit, or plane
+/// transfer — in that order of preference (and cost).
+fn ensure_operand(
+    shared: &RouterShared,
+    conn: &RunnerConn,
+    key: OperandKey,
+    planes: &Arc<BfpMatrix>,
+) -> Result<()> {
+    let bytes = plane_wire_bytes(planes);
+    let _serialize = conn.negotiate.lock().unwrap_or_else(|p| p.into_inner());
+    if conn
+        .known
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .contains(&key)
+    {
+        shared.counters.dedup_hits.fetch_add(1, Ordering::Relaxed);
+        shared
+            .counters
+            .plane_bytes_deduped
+            .fetch_add(bytes, Ordering::Relaxed);
+        conn.dedup_hits.fetch_add(1, Ordering::Relaxed);
+        return Ok(());
+    }
+    shared.counters.probes.fetch_add(1, Ordering::Relaxed);
+    conn.send(&Frame::Probe(ProbeFrame { key }))?;
+    let present = wait_probe_reply(conn, key)?;
+    if present {
+        shared.counters.dedup_hits.fetch_add(1, Ordering::Relaxed);
+        shared
+            .counters
+            .plane_bytes_deduped
+            .fetch_add(bytes, Ordering::Relaxed);
+        conn.dedup_hits.fetch_add(1, Ordering::Relaxed);
+    } else {
+        conn.send(&Frame::PutOperand(PutOperandFrame {
+            key,
+            transposed: true,
+            planes: (**planes).clone(),
+        }))?;
+        shared.counters.dedup_misses.fetch_add(1, Ordering::Relaxed);
+        shared
+            .counters
+            .plane_bytes_sent
+            .fetch_add(bytes, Ordering::Relaxed);
+        conn.plane_bytes_sent.fetch_add(bytes, Ordering::Relaxed);
+    }
+    conn.known
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .insert(key);
+    Ok(())
+}
+
+fn wait_probe_reply(conn: &RunnerConn, key: OperandKey) -> Result<bool> {
+    let deadline = Instant::now() + PROBE_TIMEOUT;
+    let mut replies = conn.probe_replies.lock().unwrap_or_else(|p| p.into_inner());
+    loop {
+        if let Some(present) = replies.remove(&key) {
+            return Ok(present);
+        }
+        if !conn.alive.load(Ordering::SeqCst) {
+            bail!("runner {} died during operand negotiation", conn.addr);
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            bail!("probe to runner {} timed out", conn.addr);
+        }
+        let (guard, _) = conn
+            .probe_cv
+            .wait_timeout(replies, deadline - now)
+            .unwrap_or_else(|p| p.into_inner());
+        replies = guard;
+    }
+}
+
+/// Place one op on some runner: encode its weight locally (cached),
+/// negotiate the operand, record it in flight, ship the submit frame.
+/// A connection failure at any step fails that runner over (draining
+/// and re-placing its whole backlog — we are never on a reader thread
+/// here, so placing inline is safe) and retries on the survivors.
+///
+/// `Err` returns the op **unplaced** with the backpressure to surface —
+/// only possible when `must_place` is false; with `must_place` the op
+/// is always consumed (placed, or its ticket failed).
+#[allow(clippy::result_large_err)]
+fn route(
+    shared: &Arc<RouterShared>,
+    mut op: InflightOp,
+    must_place: bool,
+) -> Result<(), (InflightOp, AdmissionError)> {
+    op.attempts += 1;
+    if op.attempts as usize > shared.runners.len().saturating_mul(2).max(2) {
+        let attempts = op.attempts;
+        fail_op_with(
+            shared,
+            op,
+            anyhow!(
+                "op gave up after {attempts} placement attempts across {} runners",
+                shared.runners.len()
+            ),
+        );
+        return Ok(());
+    }
+    let Some(conn) = pick_runner(shared, op.macs, op.deadline_at, must_place) else {
+        if must_place {
+            // Accepted op, no survivors: its ticket fails — there is
+            // nowhere left that could compute it.
+            fail_op_with(shared, op, anyhow!("no fabric runner survives"));
+            return Ok(());
+        }
+        return Err((
+            op,
+            AdmissionError::QueueFull {
+                capacity: shared.runners.len(),
+            },
+        ));
+    };
+    let planes = match shared.rt.encode_transposed_cached(op.w.as_ref(), op.fmt) {
+        Ok(p) => p,
+        Err(e) => {
+            // Local encode failure is deterministic — no runner could
+            // do better with the same operand.
+            fail_op_with(shared, op, e.context("local weight encode"));
+            return Ok(());
+        }
+    };
+    let key = OperandKey::new(
+        content_fingerprint(&op.w.data, op.w.rows, op.w.cols),
+        op.fmt,
+    );
+    if let Err(e) = ensure_operand(shared, &conn, key, &planes) {
+        eprintln!(
+            "fabric: operand negotiation with {} failed ({e:#}); failing over",
+            conn.addr
+        );
+        fail_runner_inline(shared, &conn);
+        return route(shared, op, must_place);
+    }
+    let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    let frame = Frame::Submit(SubmitFrame {
+        id,
+        priority: op.priority,
+        deadline_ms: op
+            .deadline_at
+            .map(|d| d.saturating_duration_since(Instant::now()).as_millis() as u64),
+        fmt: op.fmt,
+        x_rows: op.x.rows as u32,
+        x_cols: op.x.cols as u32,
+        x_data: op.x.data.clone(),
+        w_rows: op.w.rows as u32,
+        w_cols: op.w.cols as u32,
+        w_digest: key.digest,
+    });
+    let macs = op.macs;
+    {
+        // Record before sending: a result can race back before the
+        // submit call returns.
+        let mut inflight = conn.inflight.lock().unwrap_or_else(|p| p.into_inner());
+        inflight.insert(id, op);
+        let depth = inflight.len() as u64;
+        conn.peak_inflight.fetch_max(depth, Ordering::Relaxed);
+    }
+    conn.outstanding_macs.fetch_add(macs, Ordering::Relaxed);
+    let send_failed = conn.send(&frame).is_err();
+    if send_failed || !conn.alive.load(Ordering::SeqCst) {
+        // Either the send broke the news, or the runner died while we
+        // were inserting (in which case the drain may already have
+        // taken our op — `take_inflight` returning None means someone
+        // else is re-placing it).
+        if let Some(op) = take_inflight(&conn, id) {
+            eprintln!("fabric: submit to {} failed; failing over", conn.addr);
+            fail_runner_inline(shared, &conn);
+            return route(shared, op, must_place);
+        }
+        fail_runner_inline(shared, &conn);
+    }
+    Ok(())
+}
+
+fn fail_op_with(shared: &Arc<RouterShared>, op: InflightOp, err: anyhow::Error) {
+    shared.counters.failed.fetch_add(1, Ordering::Relaxed);
+    op.ticket.fulfill(Err(err));
+}
+
+/// Mark a runner dead and drain its in-flight ops. Idempotent and
+/// atomic per op: the map drain hands each orphan to exactly one
+/// caller.
+fn mark_dead(conn: &RunnerConn) -> Vec<InflightOp> {
+    if conn.alive.swap(false, Ordering::SeqCst) {
+        let w = conn.writer.lock().unwrap_or_else(|p| p.into_inner());
+        let _ = w.shutdown(Shutdown::Both);
+    }
+    // Wake any submitter parked on a probe answer that will never come.
+    conn.probe_cv.notify_all();
+    let orphans: Vec<InflightOp> = {
+        let mut inflight = conn.inflight.lock().unwrap_or_else(|p| p.into_inner());
+        inflight.drain().map(|(_, op)| op).collect()
+    };
+    // The backlog accounting dies with the runner.
+    conn.outstanding_macs.store(0, Ordering::Relaxed);
+    orphans
+}
+
+/// Fail a runner over from a placement context (submitter or repair
+/// thread): its backlog is re-placed inline.
+fn fail_runner_inline(shared: &Arc<RouterShared>, conn: &Arc<RunnerConn>) {
+    for op in mark_dead(conn) {
+        shared.counters.failovers.fetch_add(1, Ordering::Relaxed);
+        let _ = route(shared, op, true);
+    }
+}
+
+fn reader_loop(shared: Arc<RouterShared>, conn: Arc<RunnerConn>, repair: mpsc::Sender<RepairJob>) {
+    let reader = match conn
+        .writer
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .try_clone()
+    {
+        Ok(s) => s,
+        Err(_) => {
+            fail_runner_via(&shared, &conn, &repair);
+            return;
+        }
+    };
+    let mut reader = BufReader::new(reader);
+    loop {
+        match Frame::read_from(&mut reader) {
+            Ok(Some(Frame::Result(res))) => {
+                let Some(op) = take_inflight(&conn, res.id) else {
+                    continue;
+                };
+                conn.completed.fetch_add(1, Ordering::Relaxed);
+                shared.counters.completed.fetch_add(1, Ordering::Relaxed);
+                let total_ms = op.submitted_at.elapsed().as_secs_f64() * 1e3;
+                let missed_here = op.deadline_at.map(|d| Instant::now() > d).unwrap_or(false);
+                let out = match Mat::new(res.rows as usize, res.cols as usize, res.data) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        fail_op_with(&shared, op, anyhow!("malformed result matrix: {e:#}"));
+                        continue;
+                    }
+                };
+                op.ticket.fulfill(Ok(GemmResponse {
+                    out,
+                    queue_ms: res.queue_ms,
+                    // The client-observed latency includes the wire.
+                    total_ms,
+                    deadline_missed: res.deadline_missed || missed_here,
+                    encode_ms: res.encode_ms,
+                    gemm_ms: res.gemm_ms,
+                    decode_ms: res.decode_ms,
+                }));
+            }
+            Ok(Some(Frame::Reject(rej))) => {
+                let Some(op) = take_inflight(&conn, rej.id) else {
+                    continue;
+                };
+                shared
+                    .counters
+                    .rejected_remote
+                    .fetch_add(1, Ordering::Relaxed);
+                handle_reject(&shared, &conn, &repair, op, rej.code, &rej.detail);
+            }
+            Ok(Some(Frame::ProbeReply(p))) => {
+                conn.probe_replies
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .insert(p.key, p.present);
+                conn.probe_cv.notify_all();
+            }
+            // Metrics pulls go through fetch_metrics' own connection;
+            // stray text on this one is harmless.
+            Ok(Some(Frame::MetricsText(_))) => {}
+            Ok(Some(_)) | Ok(None) | Err(_) => break,
+        }
+    }
+    fail_runner_via(&shared, &conn, &repair);
+}
+
+/// Fail a runner over from its own reader thread: orphans go to the
+/// repair thread (a reader must never block on placement — see the
+/// module's threading section).
+fn fail_runner_via(
+    shared: &Arc<RouterShared>,
+    conn: &Arc<RunnerConn>,
+    repair: &mpsc::Sender<RepairJob>,
+) {
+    for op in mark_dead(conn) {
+        shared.counters.failovers.fetch_add(1, Ordering::Relaxed);
+        if let Err(mpsc::SendError(job)) = repair.send(RepairJob {
+            op,
+            must_place: true,
+            backpressure: None,
+        }) {
+            // Router torn down: nothing can place this op anymore.
+            fail_op_with(shared, job.op, anyhow!("fabric router shut down"));
+        }
+    }
+}
+
+fn take_inflight(conn: &RunnerConn, id: u64) -> Option<InflightOp> {
+    let op = conn
+        .inflight
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .remove(&id)?;
+    let mut macs = conn.outstanding_macs.load(Ordering::Relaxed);
+    loop {
+        let next = macs.saturating_sub(op.macs);
+        match conn.outstanding_macs.compare_exchange_weak(
+            macs,
+            next,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => break,
+            Err(cur) => macs = cur,
+        }
+    }
+    Some(op)
+}
+
+fn handle_reject(
+    shared: &Arc<RouterShared>,
+    conn: &Arc<RunnerConn>,
+    repair: &mpsc::Sender<RepairJob>,
+    op: InflightOp,
+    code: u8,
+    detail: &str,
+) {
+    let enqueue = |op: InflightOp, must_place: bool, backpressure: Option<AdmissionError>| {
+        shared.counters.retries.fetch_add(1, Ordering::Relaxed);
+        if let Err(mpsc::SendError(job)) = repair.send(RepairJob {
+            op,
+            must_place,
+            backpressure,
+        }) {
+            fail_op_with(shared, job.op, anyhow!("fabric router shut down"));
+        }
+    };
+    match code {
+        REJECT_NEED_OPERAND => {
+            // Our optimistic known-set was wrong (runner restarted or a
+            // probe raced): forget it and re-place the op, which
+            // re-negotiates from scratch.
+            conn.known.lock().unwrap_or_else(|p| p.into_inner()).clear();
+            enqueue(op, true, None);
+        }
+        REJECT_EXEC_FAILED => {
+            // Deterministic ops fail deterministically — retrying
+            // elsewhere would compute the same error, slower.
+            fail_op_with(shared, op, anyhow!("runner execution failed: {detail}"));
+        }
+        code => match AdmissionError::from_wire(code, detail) {
+            Some(AdmissionError::InvalidShape { reason }) => {
+                fail_op_with(shared, op, anyhow!(AdmissionError::InvalidShape { reason }));
+            }
+            Some(adm) => {
+                // QueueFull / ShuttingDown: transient, runner-local —
+                // try the rest of the fleet; if everyone is saturated,
+                // the caller sees the runner's own typed backpressure.
+                enqueue(op, false, Some(adm));
+            }
+            None => {
+                fail_op_with(
+                    shared,
+                    op,
+                    anyhow!("runner rejected op with unknown code {code}: {detail}"),
+                );
+            }
+        },
+    }
+}
+
+/// One-shot metrics pull from a runner socket (`repro metrics
+/// --connect ADDR`): its own connection, one request frame, one text
+/// frame back.
+pub fn fetch_metrics(addr: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to fabric runner {addr}"))?;
+    Frame::MetricsRequest.write_to(&mut stream)?;
+    let mut reader = BufReader::new(stream);
+    match Frame::read_from(&mut reader)? {
+        Some(Frame::MetricsText(text)) => Ok(text),
+        Some(other) => bail!("runner answered metrics request with {other:?}"),
+        None => bail!("runner closed the connection before answering"),
+    }
+}

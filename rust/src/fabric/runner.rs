@@ -1,0 +1,473 @@
+//! The remote execution half of the fabric: a TCP server that hosts one
+//! [`BfpService`] and speaks the [`super::wire`] protocol.
+//!
+//! A runner is deliberately thin — it owns no policy. Per connection it
+//! runs two threads:
+//!
+//! * a **reader** that dispatches frames: digest probes against the
+//!   operand store, operand installs, and submissions (which it admits
+//!   into the local service exactly as an in-process caller would, so
+//!   queue bounds, EDF batching, and deadline accounting all apply
+//!   unchanged);
+//! * a **completion streamer** that watches the submissions' tickets
+//!   and writes [`ResultFrame`]s back as they fulfill — out of
+//!   submission order when the service reorders (EDF does), which is
+//!   why every frame carries its correlation id.
+//!
+//! # The operand store
+//!
+//! Weight planes arriving in [`PutOperandFrame`]s land in a
+//! digest-keyed store of **encoded** matrices shared by every
+//! connection. The store is deliberately non-evicting: the fabric's
+//! dedup contract is "each distinct weight crosses the wire at most
+//! once per runner", and an eviction would silently turn that into
+//! "...per eviction epoch". Serving fleets pin their weight set; a
+//! store cap is future work recorded in the roadmap.
+//!
+//! A submission referencing a digest the runner does not hold is
+//! rejected with [`REJECT_NEED_OPERAND`] and the digest hex as detail —
+//! the router re-sends the planes and resubmits, so a restarted runner
+//! self-heals without any session state.
+//!
+//! # Execution path
+//!
+//! The runner never sees raw weight f32s. It encodes the activation on
+//! the service pool (the same `encode_into_on` call admission-time
+//! pre-encode uses), pairs it with the stored encoded weight via
+//! [`OwnedGemmOp::install_encoded`], and submits. The execution stage
+//! consumes the filled slot, so results are bit-identical to a local
+//! caller encoding from f32 — the property the loopback integration
+//! test pins against `hbfp_gemm_scalar`.
+
+use super::wire::{
+    plane_wire_bytes, Frame, OperandKey, ProbeReplyFrame, RejectFrame, ResultFrame, SubmitFrame,
+    REJECT_EXEC_FAILED, REJECT_NEED_OPERAND,
+};
+use crate::bfp::{BfpMatrix, Mat, Quantizer};
+use crate::exec::{BfpService, ExecRuntime, GemmRequest, ServiceConfig, Ticket};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Monotonic counters of one runner process, all frame-level (the
+/// service's own stats cover the execution side). Snapshot via
+/// [`RunnerShared::counters_snapshot`]; rendered into the metrics
+/// exposition and asserted by the integration tests.
+#[derive(Default)]
+pub struct RunnerCounters {
+    /// Submissions received (whether admitted or rejected).
+    pub ops: AtomicU64,
+    /// Results streamed back.
+    pub results: AtomicU64,
+    /// Reject frames written (admission + need-operand + exec failures).
+    pub rejects: AtomicU64,
+    /// Digest probes answered.
+    pub probes: AtomicU64,
+    /// Probes answered "present" — a dedup hit another connection (or
+    /// an earlier session on this connection) paid for.
+    pub probe_hits: AtomicU64,
+    /// Operand planes installed into the store.
+    pub operands_stored: AtomicU64,
+    /// Resident bytes of stored operand planes.
+    pub operand_bytes_stored: AtomicU64,
+    /// Submissions bounced for a missing operand.
+    pub need_operand: AtomicU64,
+}
+
+impl RunnerCounters {
+    fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        vec![
+            ("fabric_runner_ops_total", g(&self.ops)),
+            ("fabric_runner_results_total", g(&self.results)),
+            ("fabric_runner_rejects_total", g(&self.rejects)),
+            ("fabric_runner_probes_total", g(&self.probes)),
+            ("fabric_runner_probe_hits_total", g(&self.probe_hits)),
+            ("fabric_runner_operands_stored", g(&self.operands_stored)),
+            (
+                "fabric_runner_operand_bytes_stored",
+                g(&self.operand_bytes_stored),
+            ),
+            ("fabric_runner_need_operand_total", g(&self.need_operand)),
+        ]
+    }
+}
+
+/// State shared by every connection of one runner.
+pub struct RunnerShared {
+    service: BfpService,
+    store: Mutex<HashMap<OperandKey, Arc<BfpMatrix>>>,
+    counters: RunnerCounters,
+    stop: AtomicBool,
+    conns: Mutex<Vec<TcpStream>>,
+}
+
+impl RunnerShared {
+    /// Frame-level counters as `(metric name, value)` pairs.
+    pub fn counters_snapshot(&self) -> Vec<(&'static str, u64)> {
+        self.counters.snapshot()
+    }
+
+    fn metrics_text(&self) -> String {
+        crate::metrics::render_text(
+            &self.service.stats(),
+            &self.service.runtime().cache_stats(),
+            &self.service.runtime().arena_stats(),
+            &self.counters.snapshot(),
+        )
+    }
+}
+
+/// Handle to an in-process runner (the loopback-test and serve-sim
+/// embedding). Dropping the handle does **not** stop the runner; call
+/// [`RunnerHandle::kill`] — the failover tests need a runner that dies
+/// abruptly, mid-conversation, which is exactly what `kill` does.
+pub struct RunnerHandle {
+    addr: SocketAddr,
+    shared: Arc<RunnerShared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl RunnerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn shared(&self) -> &Arc<RunnerShared> {
+        &self.shared
+    }
+
+    /// Stop serving **abruptly**: every live connection is shut down at
+    /// the socket level (peers observe EOF mid-stream, as they would on
+    /// a crashed node) and the accept loop exits. In-flight service
+    /// work finishes and is discarded — results are pure, so the
+    /// router's resubmission to a surviving runner is bit-identical.
+    pub fn kill(mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        for s in self.shared.conns.lock().unwrap_or_else(|p| p.into_inner()).iter() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let workers = std::mem::take(
+            &mut *self.workers.lock().unwrap_or_else(|p| p.into_inner()),
+        );
+        for h in workers {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until the accept loop exits (the binary-mode tail: a
+    /// standalone runner serves until the process is killed).
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Serve the fabric protocol on an already-bound listener, executing on
+/// `rt` through a dedicated [`BfpService`]. Returns immediately; the
+/// accept loop and per-connection threads run in the background.
+pub fn serve_on(listener: TcpListener, rt: Arc<ExecRuntime>) -> Result<RunnerHandle> {
+    let addr = listener.local_addr().context("runner listener address")?;
+    let shared = Arc::new(RunnerShared {
+        service: BfpService::new(rt, ServiceConfig::default()),
+        store: Mutex::new(HashMap::new()),
+        counters: RunnerCounters::default(),
+        stop: AtomicBool::new(false),
+        conns: Mutex::new(Vec::new()),
+    });
+    let workers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+    let accept = {
+        let shared = Arc::clone(&shared);
+        let workers = Arc::clone(&workers);
+        std::thread::Builder::new()
+            .name("fabric-accept".into())
+            .spawn(move || loop {
+                let conn = match listener.accept() {
+                    Ok((s, _)) => s,
+                    Err(_) => break,
+                };
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let _ = conn.set_nodelay(true);
+                if let Ok(clone) = conn.try_clone() {
+                    shared
+                        .conns
+                        .lock()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .push(clone);
+                }
+                let shared2 = Arc::clone(&shared);
+                if let Ok(h) = std::thread::Builder::new()
+                    .name("fabric-conn".into())
+                    .spawn(move || handle_conn(shared2, conn))
+                {
+                    workers.lock().unwrap_or_else(|p| p.into_inner()).push(h);
+                }
+            })
+            .context("spawning fabric accept thread")?
+    };
+    Ok(RunnerHandle {
+        addr,
+        shared,
+        accept: Some(accept),
+        workers,
+    })
+}
+
+/// Binary mode (`repro fabric-runner --listen ADDR`): bind, announce
+/// the bound address on stdout (the line serve-sim's parent process
+/// parses — keep its shape stable), and serve on the global runtime
+/// until killed.
+pub fn serve(listen: &str) -> Result<()> {
+    let listener =
+        TcpListener::bind(listen).with_context(|| format!("binding fabric runner to {listen}"))?;
+    let addr = listener.local_addr()?;
+    println!("fabric-runner listening on {addr}");
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    serve_on(listener, crate::exec::global_arc())?.wait();
+    Ok(())
+}
+
+fn write_frame(writer: &Mutex<TcpStream>, frame: &Frame) -> Result<()> {
+    let mut w = writer.lock().unwrap_or_else(|p| p.into_inner());
+    frame.write_to(&mut *w)
+}
+
+fn handle_conn(shared: Arc<RunnerShared>, stream: TcpStream) {
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let (tx, rx) = mpsc::channel::<(u64, Ticket)>();
+    let streamer = {
+        let shared = Arc::clone(&shared);
+        let writer = Arc::clone(&writer);
+        std::thread::Builder::new()
+            .name("fabric-stream".into())
+            .spawn(move || stream_completions(shared, writer, rx))
+    };
+    loop {
+        match Frame::read_from(&mut reader) {
+            Ok(Some(frame)) => {
+                if dispatch(&shared, &writer, &tx, frame).is_err() {
+                    break;
+                }
+            }
+            Ok(None) => break,
+            Err(e) => {
+                // Corrupt traffic: drop the connection — the framing
+                // cannot be resynchronized mid-stream.
+                eprintln!("fabric-runner: closing connection: {e:#}");
+                break;
+            }
+        }
+    }
+    drop(tx);
+    if let Ok(h) = streamer {
+        let _ = h.join();
+    }
+}
+
+fn dispatch(
+    shared: &Arc<RunnerShared>,
+    writer: &Arc<Mutex<TcpStream>>,
+    tx: &mpsc::Sender<(u64, Ticket)>,
+    frame: Frame,
+) -> Result<()> {
+    match frame {
+        Frame::Probe(p) => {
+            shared.counters.probes.fetch_add(1, Ordering::Relaxed);
+            let present = shared
+                .store
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .contains_key(&p.key);
+            if present {
+                shared.counters.probe_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            write_frame(
+                writer,
+                &Frame::ProbeReply(ProbeReplyFrame {
+                    key: p.key,
+                    present,
+                }),
+            )
+        }
+        Frame::PutOperand(put) => {
+            let bytes = plane_wire_bytes(&put.planes);
+            let mut store = shared.store.lock().unwrap_or_else(|e| e.into_inner());
+            // Duplicate installs are idempotent (two clients can race
+            // the same probe-miss); only the first charges the store.
+            if store.insert(put.key, Arc::new(put.planes)).is_none() {
+                shared.counters.operands_stored.fetch_add(1, Ordering::Relaxed);
+                shared
+                    .counters
+                    .operand_bytes_stored
+                    .fetch_add(bytes, Ordering::Relaxed);
+            }
+            Ok(())
+        }
+        Frame::Submit(s) => {
+            shared.counters.ops.fetch_add(1, Ordering::Relaxed);
+            match admit(shared, &s) {
+                Ok(ticket) => {
+                    // A closed channel means the streamer died with the
+                    // connection; surface it to drop the conn.
+                    tx.send((s.id, ticket))
+                        .map_err(|_| anyhow::anyhow!("completion streamer gone"))
+                }
+                Err(reject) => {
+                    shared.counters.rejects.fetch_add(1, Ordering::Relaxed);
+                    write_frame(writer, &Frame::Reject(reject))
+                }
+            }
+        }
+        Frame::MetricsRequest => write_frame(writer, &Frame::MetricsText(shared.metrics_text())),
+        // A runner only ever *produces* these; receiving one is a
+        // protocol violation worth dropping the connection over.
+        Frame::Result(_) | Frame::Reject(_) | Frame::ProbeReply(_) | Frame::MetricsText(_) => {
+            anyhow::bail!("unexpected client-bound frame on a runner socket")
+        }
+    }
+}
+
+/// Turn one submission into an admitted service request, or the exact
+/// reject frame to send instead.
+fn admit(shared: &Arc<RunnerShared>, s: &SubmitFrame) -> Result<Ticket, RejectFrame> {
+    let key = OperandKey::new(s.w_digest, s.fmt);
+    let Some(w_planes) = shared
+        .store
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .get(&key)
+        .cloned()
+    else {
+        shared.counters.need_operand.fetch_add(1, Ordering::Relaxed);
+        return Err(RejectFrame {
+            id: s.id,
+            code: REJECT_NEED_OPERAND,
+            detail: s.w_digest.to_hex(),
+        });
+    };
+    let invalid = |reason: String| RejectFrame {
+        id: s.id,
+        code: crate::exec::AdmissionError::InvalidShape {
+            reason: reason.clone(),
+        }
+        .wire_code(),
+        detail: reason,
+    };
+    let x = Mat::new(s.x_rows as usize, s.x_cols as usize, s.x_data.clone())
+        .map_err(|e| invalid(format!("{e:#}")))?;
+    // The weight participates only through its encoded planes; the op
+    // still needs an f32-shaped handle for shape checks and MAC
+    // accounting, so give it an all-zero stand-in of the right shape.
+    let w = Mat::zeros(s.w_rows as usize, s.w_cols as usize);
+    let op = crate::exec::OwnedGemmOp::new(Arc::new(x), Arc::new(w), s.fmt)
+        .map_err(|e| invalid(format!("{e:#}")))?;
+    let mut xq = BfpMatrix::empty();
+    xq.encode_into_on(
+        shared.service.runtime().pool(),
+        &op.x.data,
+        op.x.rows,
+        op.x.cols,
+        s.fmt,
+        Quantizer::nearest(s.fmt.mantissa_bits),
+        0,
+    )
+    .map_err(|e| RejectFrame {
+        id: s.id,
+        code: REJECT_EXEC_FAILED,
+        detail: format!("activation encode: {e:#}"),
+    })?;
+    op.install_encoded(Arc::new(xq), w_planes);
+    let mut req = GemmRequest::new(op).with_priority(s.priority);
+    if let Some(ms) = s.deadline_ms {
+        req = req.with_deadline(Duration::from_millis(ms));
+    }
+    shared.service.submit(req).map_err(|e| RejectFrame {
+        id: s.id,
+        code: e.wire_code(),
+        detail: e.wire_detail(),
+    })
+}
+
+/// Watch submitted tickets and stream each outcome back the moment it
+/// fulfills. The service reorders (EDF within priority), so readiness
+/// is scanned across all pending tickets rather than head-only.
+fn stream_completions(
+    shared: Arc<RunnerShared>,
+    writer: Arc<Mutex<TcpStream>>,
+    rx: mpsc::Receiver<(u64, Ticket)>,
+) {
+    let mut pending: Vec<(u64, Ticket)> = Vec::new();
+    loop {
+        if pending.is_empty() {
+            match rx.recv() {
+                Ok(item) => pending.push(item),
+                Err(_) => return,
+            }
+        }
+        while let Ok(item) = rx.try_recv() {
+            pending.push(item);
+        }
+        let done = if let Some(pos) = pending.iter().position(|(_, t)| t.poll()) {
+            let (id, t) = pending.remove(pos);
+            Some((id, t.wait()))
+        } else {
+            // Nothing ready: park briefly on the oldest ticket. The
+            // timeout bounds how stale the try_recv drain above can get.
+            pending[0]
+                .1
+                .wait_deadline(Duration::from_millis(2))
+                .map(|outcome| (pending.remove(0).0, outcome))
+        };
+        let Some((id, outcome)) = done else { continue };
+        let frame = match outcome {
+            Ok(resp) => {
+                shared.counters.results.fetch_add(1, Ordering::Relaxed);
+                Frame::Result(ResultFrame {
+                    id,
+                    rows: resp.out.rows as u32,
+                    cols: resp.out.cols as u32,
+                    data: resp.out.data,
+                    queue_ms: resp.queue_ms,
+                    total_ms: resp.total_ms,
+                    deadline_missed: resp.deadline_missed,
+                    encode_ms: resp.encode_ms,
+                    gemm_ms: resp.gemm_ms,
+                    decode_ms: resp.decode_ms,
+                })
+            }
+            Err(e) => {
+                shared.counters.rejects.fetch_add(1, Ordering::Relaxed);
+                Frame::Reject(RejectFrame {
+                    id,
+                    code: REJECT_EXEC_FAILED,
+                    detail: format!("{e:#}"),
+                })
+            }
+        };
+        if write_frame(&writer, &frame).is_err() {
+            // Connection gone: the remaining tickets' results recycle
+            // through their Drop impls; nothing to stream them to.
+            return;
+        }
+    }
+}

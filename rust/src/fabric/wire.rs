@@ -1,0 +1,857 @@
+//! Versioned wire format of the execution fabric.
+//!
+//! Every message is one length-prefixed **frame**:
+//!
+//! ```text
+//! magic   "BFAB"            4 bytes
+//! version u16 LE            (currently 1)
+//! kind    u8                (see [`Frame`])
+//! flags   u8                (reserved, must be 0)
+//! len     u32 LE            payload length in bytes
+//! payload len bytes
+//! ```
+//!
+//! Everything inside a payload is **little-endian** and
+//! value-defined: f32s travel as `to_bits()` words, so a result decoded
+//! on any host is bit-identical to the runner's buffer — the same
+//! bit-identity contract the kernels keep. Payloads are bounded by
+//! [`MAX_PAYLOAD`]; a reader rejects oversized, truncated, or
+//! trailing-garbage payloads with a typed error instead of reading
+//! junk.
+//!
+//! Weight operands never travel as raw f32. They are referenced by
+//! [`OperandKey`] — the shared 128-bit content [`Digest`] plus the
+//! block format — and their bytes move (at most once per runner) as
+//! **encoded BFP planes** in a [`PutOperandFrame`]: one mantissa plane
+//! in the format's storage layout (nibble-packed 4-bit, i8, or i16)
+//! plus the per-block `i32` exponent plane. That is the paper's density
+//! argument applied to the network: a 4-bit weight plane crosses the
+//! wire at ~4.5 bits/value instead of 32.
+
+use crate::bfp::{BfpMatrix, BlockFormat, MantissaPlane, PlaneLayout};
+use crate::exec::queue::Priority;
+use crate::util::digest::Digest;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Frame preamble: magic bytes every frame starts with.
+pub const MAGIC: [u8; 4] = *b"BFAB";
+/// Protocol version. Bump on any incompatible payload change; a reader
+/// rejects frames from another version loudly (mixed fleets must fail
+/// fast, not misdecode).
+pub const VERSION: u16 = 1;
+/// Upper bound on one frame's payload. Large enough for any serve-sim
+/// operand, small enough that a corrupt length prefix cannot OOM the
+/// peer.
+pub const MAX_PAYLOAD: usize = 256 << 20;
+
+/// Reject codes 1–3 map [`crate::exec::AdmissionError`] via its
+/// `wire_code`; these two extend the space with fabric-level outcomes.
+/// The runner does not hold the referenced weight operand; the detail
+/// is the digest hex. The router re-sends the planes and resubmits.
+pub const REJECT_NEED_OPERAND: u8 = 4;
+/// Execution failed on the runner; the detail is the error chain.
+pub const REJECT_EXEC_FAILED: u8 = 5;
+
+/// Identity of one encoded weight operand in a runner's store: content
+/// digest + block format (the layout is a function of the format, and
+/// fabric weights are always column/transposed-encoded).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OperandKey {
+    pub digest: Digest,
+    pub m_bits: u32,
+    pub block: u32,
+}
+
+impl OperandKey {
+    pub fn new(digest: Digest, fmt: BlockFormat) -> Self {
+        Self {
+            digest,
+            m_bits: fmt.mantissa_bits,
+            block: fmt.block_size as u32,
+        }
+    }
+}
+
+/// One GEMM submission: op metadata, the activation inline as raw f32
+/// (fresh per request — no dedup value), the weight by reference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitFrame {
+    /// Router-assigned correlation id, echoed on the result/reject.
+    pub id: u64,
+    pub priority: Priority,
+    /// Deadline budget remaining at transmission, milliseconds.
+    pub deadline_ms: Option<u64>,
+    pub fmt: BlockFormat,
+    pub x_rows: u32,
+    pub x_cols: u32,
+    /// Row-major activation values (bit-exact via `to_bits`).
+    pub x_data: Vec<f32>,
+    pub w_rows: u32,
+    pub w_cols: u32,
+    /// Content digest of the weight operand; the runner resolves it in
+    /// its operand store (or rejects with [`REJECT_NEED_OPERAND`]).
+    pub w_digest: Digest,
+}
+
+/// One completed GEMM streaming back: the output plus the runner-side
+/// per-stage latency breakdown.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultFrame {
+    pub id: u64,
+    pub rows: u32,
+    pub cols: u32,
+    pub data: Vec<f32>,
+    pub queue_ms: f64,
+    pub total_ms: f64,
+    pub deadline_missed: bool,
+    pub encode_ms: f64,
+    pub gemm_ms: f64,
+    pub decode_ms: f64,
+}
+
+/// Typed failure for one submission: admission backpressure
+/// (codes 1–3, see [`crate::exec::AdmissionError::from_wire`]),
+/// [`REJECT_NEED_OPERAND`], or [`REJECT_EXEC_FAILED`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RejectFrame {
+    pub id: u64,
+    pub code: u8,
+    pub detail: String,
+}
+
+/// Encoded weight planes for one operand — sent only after the runner
+/// reported a miss for the key (the dedup contract).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PutOperandFrame {
+    pub key: OperandKey,
+    /// Column/transposed-encoded (always true today; carried so the
+    /// orientation is explicit on the wire).
+    pub transposed: bool,
+    pub planes: BfpMatrix,
+}
+
+/// "Do you hold this operand?" — the digest-first half of the dedup
+/// negotiation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProbeFrame {
+    pub key: OperandKey,
+}
+
+/// Answer to a [`ProbeFrame`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProbeReplyFrame {
+    pub key: OperandKey,
+    pub present: bool,
+}
+
+/// Every message the fabric speaks. See the module docs for the frame
+/// envelope; kinds are frozen (append, never renumber).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Submit(SubmitFrame),
+    Result(ResultFrame),
+    Reject(RejectFrame),
+    PutOperand(PutOperandFrame),
+    Probe(ProbeFrame),
+    ProbeReply(ProbeReplyFrame),
+    /// Ask the peer for a metrics snapshot.
+    MetricsRequest,
+    /// Prometheus-style text exposition (see [`crate::metrics::render_text`]).
+    MetricsText(String),
+}
+
+impl Frame {
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::Submit(_) => 1,
+            Frame::Result(_) => 2,
+            Frame::Reject(_) => 3,
+            Frame::PutOperand(_) => 4,
+            Frame::Probe(_) => 5,
+            Frame::ProbeReply(_) => 6,
+            Frame::MetricsRequest => 7,
+            Frame::MetricsText(_) => 8,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Payload primitives
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct PayloadWriter {
+    buf: Vec<u8>,
+}
+
+impl PayloadWriter {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    fn digest(&mut self, d: Digest) {
+        self.buf.extend_from_slice(&d.to_le_bytes());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.u32(b.len() as u32);
+        self.buf.extend_from_slice(b);
+    }
+    fn string(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+    }
+    fn f32s(&mut self, xs: &[f32]) {
+        self.u32(xs.len() as u32);
+        self.buf.reserve(xs.len() * 4);
+        for x in xs {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+    fn i32s(&mut self, xs: &[i32]) {
+        self.u32(xs.len() as u32);
+        self.buf.reserve(xs.len() * 4);
+        for x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn i16s(&mut self, xs: &[i16]) {
+        self.u32(xs.len() as u32);
+        self.buf.reserve(xs.len() * 2);
+        for x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+struct PayloadReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PayloadReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                anyhow!(
+                    "truncated payload: need {n} bytes at offset {}, have {}",
+                    self.pos,
+                    self.buf.len() - self.pos
+                )
+            })?;
+        let slice = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(slice)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn digest(&mut self) -> Result<Digest> {
+        Ok(Digest::from_le_bytes(
+            self.take(Digest::WIRE_BYTES)?.try_into().unwrap(),
+        ))
+    }
+    fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+    fn string(&mut self) -> Result<String> {
+        let b = self.bytes()?;
+        String::from_utf8(b.to_vec()).context("payload string is not UTF-8")
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow!("f32 run overflows"))?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+    fn i32s(&mut self) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| anyhow!("i32 run overflows"))?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+    fn i16s(&mut self) -> Result<Vec<i16>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(2).ok_or_else(|| anyhow!("i16 run overflows"))?)?;
+        Ok(raw
+            .chunks_exact(2)
+            .map(|c| i16::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// The decode contract: every payload byte must be consumed.
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "payload has {} trailing bytes after a complete frame",
+                self.buf.len() - self.pos
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Field encodings
+// ---------------------------------------------------------------------
+
+fn put_key(w: &mut PayloadWriter, key: &OperandKey) {
+    w.digest(key.digest);
+    w.u32(key.m_bits);
+    w.u32(key.block);
+}
+
+fn take_key(r: &mut PayloadReader) -> Result<OperandKey> {
+    Ok(OperandKey {
+        digest: r.digest()?,
+        m_bits: r.u32()?,
+        block: r.u32()?,
+    })
+}
+
+fn priority_byte(p: Priority) -> u8 {
+    match p {
+        Priority::Interactive => 0,
+        Priority::Bulk => 1,
+    }
+}
+
+fn priority_from(b: u8) -> Result<Priority> {
+    match b {
+        0 => Ok(Priority::Interactive),
+        1 => Ok(Priority::Bulk),
+        other => bail!("unknown priority byte {other}"),
+    }
+}
+
+fn layout_byte(l: PlaneLayout) -> u8 {
+    match l {
+        PlaneLayout::I4Packed => 1,
+        PlaneLayout::I8 => 2,
+        PlaneLayout::I16 => 3,
+    }
+}
+
+fn put_bfp(w: &mut PayloadWriter, m: &BfpMatrix) {
+    w.u32(m.fmt.mantissa_bits);
+    w.u32(m.fmt.block_size as u32);
+    w.u32(m.rows as u32);
+    w.u32(m.cols as u32);
+    w.u32(m.blocks_per_row as u32);
+    w.u8(layout_byte(m.mantissas.layout()));
+    match &m.mantissas {
+        MantissaPlane::I4Packed(v) => w.bytes(v),
+        MantissaPlane::I8(v) => {
+            // i8 planes ship as their two's-complement bytes.
+            w.u32(v.len() as u32);
+            w.buf.extend(v.iter().map(|&b| b as u8));
+        }
+        MantissaPlane::I16(v) => w.i16s(v),
+    }
+    w.i32s(&m.exponents);
+}
+
+/// Decode and **validate** one encoded matrix: the format must be
+/// constructible, the layout must be the one that format produces, and
+/// every plane length must be consistent with the shape — a corrupt
+/// frame is rejected here, never handed to a kernel.
+fn take_bfp(r: &mut PayloadReader) -> Result<BfpMatrix> {
+    let m_bits = r.u32()?;
+    let block = r.u32()? as usize;
+    let fmt = BlockFormat::new(m_bits, block).context("wire matrix block format")?;
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    let blocks_per_row = r.u32()? as usize;
+    if blocks_per_row != cols.div_ceil(block) {
+        bail!(
+            "wire matrix blocks_per_row {blocks_per_row} inconsistent with {cols} cols of block {block}"
+        );
+    }
+    let layout = r.u8()?;
+    let expect = fmt.plane_layout();
+    if layout != layout_byte(expect) {
+        bail!(
+            "wire matrix layout byte {layout} does not match format layout {}",
+            expect.label()
+        );
+    }
+    let logical = rows
+        .checked_mul(blocks_per_row)
+        .and_then(|b| b.checked_mul(block))
+        .ok_or_else(|| anyhow!("wire matrix plane size overflows"))?;
+    let mantissas = match expect {
+        PlaneLayout::I4Packed => {
+            let v = r.bytes()?.to_vec();
+            if v.len() * 2 != logical {
+                bail!("i4 plane holds {} values, shape needs {logical}", v.len() * 2);
+            }
+            MantissaPlane::I4Packed(v)
+        }
+        PlaneLayout::I8 => {
+            let v: Vec<i8> = r.bytes()?.iter().map(|&b| b as i8).collect();
+            if v.len() != logical {
+                bail!("i8 plane holds {} values, shape needs {logical}", v.len());
+            }
+            MantissaPlane::I8(v)
+        }
+        PlaneLayout::I16 => {
+            let v = r.i16s()?;
+            if v.len() != logical {
+                bail!("i16 plane holds {} values, shape needs {logical}", v.len());
+            }
+            MantissaPlane::I16(v)
+        }
+    };
+    let exponents = r.i32s()?;
+    if exponents.len() != rows * blocks_per_row {
+        bail!(
+            "exponent plane holds {} blocks, shape needs {}",
+            exponents.len(),
+            rows * blocks_per_row
+        );
+    }
+    Ok(BfpMatrix {
+        fmt,
+        rows,
+        cols,
+        blocks_per_row,
+        mantissas,
+        exponents,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Frame encode / decode
+// ---------------------------------------------------------------------
+
+impl Frame {
+    /// Serialize the whole frame (envelope + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = PayloadWriter::default();
+        match self {
+            Frame::Submit(s) => {
+                w.u64(s.id);
+                w.u8(priority_byte(s.priority));
+                w.u64(s.deadline_ms.unwrap_or(u64::MAX));
+                w.u32(s.fmt.mantissa_bits);
+                w.u32(s.fmt.block_size as u32);
+                w.u32(s.x_rows);
+                w.u32(s.x_cols);
+                w.f32s(&s.x_data);
+                w.u32(s.w_rows);
+                w.u32(s.w_cols);
+                w.digest(s.w_digest);
+            }
+            Frame::Result(res) => {
+                w.u64(res.id);
+                w.u32(res.rows);
+                w.u32(res.cols);
+                w.f32s(&res.data);
+                w.f64(res.queue_ms);
+                w.f64(res.total_ms);
+                w.u8(res.deadline_missed as u8);
+                w.f64(res.encode_ms);
+                w.f64(res.gemm_ms);
+                w.f64(res.decode_ms);
+            }
+            Frame::Reject(rej) => {
+                w.u64(rej.id);
+                w.u8(rej.code);
+                w.string(&rej.detail);
+            }
+            Frame::PutOperand(put) => {
+                put_key(&mut w, &put.key);
+                w.u8(put.transposed as u8);
+                put_bfp(&mut w, &put.planes);
+            }
+            Frame::Probe(p) => put_key(&mut w, &p.key),
+            Frame::ProbeReply(p) => {
+                put_key(&mut w, &p.key);
+                w.u8(p.present as u8);
+            }
+            Frame::MetricsRequest => {}
+            Frame::MetricsText(text) => w.string(text),
+        }
+        let payload = w.buf;
+        let mut out = Vec::with_capacity(12 + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(self.kind());
+        out.push(0); // reserved flags
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    fn decode(kind: u8, payload: &[u8]) -> Result<Frame> {
+        let mut r = PayloadReader::new(payload);
+        let frame = match kind {
+            1 => {
+                let id = r.u64()?;
+                let priority = priority_from(r.u8()?)?;
+                let deadline_raw = r.u64()?;
+                let fmt = BlockFormat::new(r.u32()?, r.u32()? as usize)
+                    .context("submit frame block format")?;
+                let x_rows = r.u32()?;
+                let x_cols = r.u32()?;
+                let x_data = r.f32s()?;
+                if (x_rows as u64) * (x_cols as u64) != x_data.len() as u64 {
+                    bail!(
+                        "submit activation {}x{} != {} values",
+                        x_rows,
+                        x_cols,
+                        x_data.len()
+                    );
+                }
+                Frame::Submit(SubmitFrame {
+                    id,
+                    priority,
+                    deadline_ms: (deadline_raw != u64::MAX).then_some(deadline_raw),
+                    fmt,
+                    x_rows,
+                    x_cols,
+                    x_data,
+                    w_rows: r.u32()?,
+                    w_cols: r.u32()?,
+                    w_digest: r.digest()?,
+                })
+            }
+            2 => {
+                let id = r.u64()?;
+                let rows = r.u32()?;
+                let cols = r.u32()?;
+                let data = r.f32s()?;
+                if (rows as u64) * (cols as u64) != data.len() as u64 {
+                    bail!("result {}x{} != {} values", rows, cols, data.len());
+                }
+                Frame::Result(ResultFrame {
+                    id,
+                    rows,
+                    cols,
+                    data,
+                    queue_ms: r.f64()?,
+                    total_ms: r.f64()?,
+                    deadline_missed: r.u8()? != 0,
+                    encode_ms: r.f64()?,
+                    gemm_ms: r.f64()?,
+                    decode_ms: r.f64()?,
+                })
+            }
+            3 => Frame::Reject(RejectFrame {
+                id: r.u64()?,
+                code: r.u8()?,
+                detail: r.string()?,
+            }),
+            4 => {
+                let key = take_key(&mut r)?;
+                let transposed = r.u8()? != 0;
+                let planes = take_bfp(&mut r)?;
+                if planes.fmt.mantissa_bits != key.m_bits
+                    || planes.fmt.block_size != key.block as usize
+                {
+                    bail!("operand planes' format disagrees with their key");
+                }
+                Frame::PutOperand(PutOperandFrame {
+                    key,
+                    transposed,
+                    planes,
+                })
+            }
+            5 => Frame::Probe(ProbeFrame {
+                key: take_key(&mut r)?,
+            }),
+            6 => Frame::ProbeReply(ProbeReplyFrame {
+                key: take_key(&mut r)?,
+                present: r.u8()? != 0,
+            }),
+            7 => Frame::MetricsRequest,
+            8 => Frame::MetricsText(r.string()?),
+            other => bail!("unknown frame kind {other}"),
+        };
+        r.finish()?;
+        Ok(frame)
+    }
+
+    /// Write one frame to `w` (single `write_all` — frames are the
+    /// atomic unit interleaving writers must respect).
+    pub fn write_to(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(&self.encode()).context("writing fabric frame")?;
+        w.flush().context("flushing fabric frame")
+    }
+
+    /// Read one frame from `r`. `Ok(None)` on clean EOF **at a frame
+    /// boundary** (the peer closed between frames); anything else —
+    /// mid-frame EOF, bad magic, wrong version, unknown kind, oversized
+    /// or malformed payload — is an error.
+    pub fn read_from(r: &mut impl Read) -> Result<Option<Frame>> {
+        let mut header = [0u8; 12];
+        // Distinguish clean EOF (no bytes at all) from truncation.
+        let mut got = 0usize;
+        while got < header.len() {
+            match r.read(&mut header[got..]) {
+                Ok(0) if got == 0 => return Ok(None),
+                Ok(0) => bail!("connection closed mid-frame ({got}/12 header bytes)"),
+                Ok(n) => got += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("reading fabric frame header"),
+            }
+        }
+        if header[..4] != MAGIC {
+            bail!("bad frame magic {:02x?}", &header[..4]);
+        }
+        let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+        if version != VERSION {
+            bail!("fabric protocol version {version} (this peer speaks {VERSION})");
+        }
+        let kind = header[6];
+        if header[7] != 0 {
+            bail!("nonzero reserved flags byte {:#x}", header[7]);
+        }
+        let len = u32::from_le_bytes(header[8..12].try_into().unwrap()) as usize;
+        if len > MAX_PAYLOAD {
+            bail!("frame payload of {len} bytes exceeds the {MAX_PAYLOAD}-byte cap");
+        }
+        let mut payload = vec![0u8; len];
+        r.read_exact(&mut payload).context("reading fabric frame payload")?;
+        Frame::decode(kind, &payload).map(Some)
+    }
+}
+
+/// Resident bytes of one encoded operand's planes as the wire and the
+/// dedup counters account them: mantissa plane bytes + `i32` exponent
+/// plane bytes (the same arithmetic as the operand cache's byte cap).
+pub fn plane_wire_bytes(m: &BfpMatrix) -> u64 {
+    (m.mantissas.resident_bytes() + m.exponents.len() * std::mem::size_of::<i32>()) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::{Mat, Quantizer};
+    use crate::util::digest::content_fingerprint;
+
+    fn encode_w(data: &[f32], rows: usize, cols: usize, fmt: BlockFormat) -> BfpMatrix {
+        let w = Mat::new(rows, cols, data.to_vec()).unwrap();
+        BfpMatrix::encode_transposed(&w, fmt, Quantizer::nearest(fmt.mantissa_bits)).unwrap()
+    }
+
+    fn roundtrip(f: Frame) -> Frame {
+        let bytes = f.encode();
+        let mut cur = std::io::Cursor::new(bytes);
+        let back = Frame::read_from(&mut cur).unwrap().unwrap();
+        // The reader consumed the whole stream: a second read is clean EOF.
+        assert!(Frame::read_from(&mut cur).unwrap().is_none());
+        back
+    }
+
+    #[test]
+    fn submit_result_reject_roundtrip() {
+        let submit = Frame::Submit(SubmitFrame {
+            id: 42,
+            priority: Priority::Interactive,
+            deadline_ms: Some(25),
+            fmt: BlockFormat::new(4, 16).unwrap(),
+            x_rows: 2,
+            x_cols: 3,
+            x_data: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE, 7.25, -0.125],
+            w_rows: 3,
+            w_cols: 4,
+            w_digest: content_fingerprint(&[1.0, 2.0], 1, 2),
+        });
+        assert_eq!(roundtrip(submit.clone()), submit);
+        // No deadline survives as None, not 0.
+        let nodeadline = Frame::Submit(SubmitFrame {
+            deadline_ms: None,
+            priority: Priority::Bulk,
+            ..match submit {
+                Frame::Submit(s) => s,
+                _ => unreachable!(),
+            }
+        });
+        assert_eq!(roundtrip(nodeadline.clone()), nodeadline);
+        let result = Frame::Result(ResultFrame {
+            id: 42,
+            rows: 2,
+            cols: 2,
+            data: vec![1.5, -0.25, 1e-30, 3.0],
+            queue_ms: 0.25,
+            total_ms: 1.75,
+            deadline_missed: true,
+            encode_ms: 0.1,
+            gemm_ms: 0.9,
+            decode_ms: 0.2,
+        });
+        assert_eq!(roundtrip(result.clone()), result);
+        let reject = Frame::Reject(RejectFrame {
+            id: 7,
+            code: REJECT_NEED_OPERAND,
+            detail: "deadbeef".into(),
+        });
+        assert_eq!(roundtrip(reject.clone()), reject);
+        assert_eq!(roundtrip(Frame::MetricsRequest), Frame::MetricsRequest);
+        let text = Frame::MetricsText("boosters_up 1\n".into());
+        assert_eq!(roundtrip(text.clone()), text);
+    }
+
+    #[test]
+    fn operand_frames_roundtrip_every_layout_on_ragged_shapes() {
+        // One format per mantissa-plane layout, shapes that do not
+        // divide the block size (ragged tails exercise the padding).
+        let cases = [
+            (4u32, 16usize, 5usize, 7usize),  // I4Packed
+            (6, 16, 9, 3),                    // I8
+            (12, 16, 3, 5),                   // I16
+            (4, 64, 130, 2),                  // ragged across two blocks
+        ];
+        for (m_bits, block, k, n) in cases {
+            let fmt = BlockFormat::new(m_bits, block).unwrap();
+            let data: Vec<f32> = (0..k * n).map(|i| (i as f32) * 0.37 - 3.0).collect();
+            let planes = encode_w(&data, k, n, fmt);
+            let key = OperandKey::new(content_fingerprint(&data, k, n), fmt);
+            let put = Frame::PutOperand(PutOperandFrame {
+                key,
+                transposed: true,
+                planes: planes.clone(),
+            });
+            match roundtrip(put) {
+                Frame::PutOperand(back) => {
+                    assert_eq!(back.key, key);
+                    assert!(back.transposed);
+                    assert_eq!(back.planes, planes, "m={m_bits} b={block} {k}x{n}");
+                }
+                other => panic!("wrong frame {other:?}"),
+            }
+            let probe = Frame::Probe(ProbeFrame { key });
+            assert_eq!(roundtrip(probe.clone()), probe);
+            let reply = Frame::ProbeReply(ProbeReplyFrame { key, present: true });
+            assert_eq!(roundtrip(reply.clone()), reply);
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected() {
+        let good = Frame::Probe(ProbeFrame {
+            key: OperandKey::new(
+                content_fingerprint(&[1.0], 1, 1),
+                BlockFormat::new(4, 16).unwrap(),
+            ),
+        })
+        .encode();
+
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(Frame::read_from(&mut &bad[..]).is_err());
+
+        // Wrong version.
+        let mut bad = good.clone();
+        bad[4] = 99;
+        let err = Frame::read_from(&mut &bad[..]).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+
+        // Unknown kind.
+        let mut bad = good.clone();
+        bad[6] = 200;
+        assert!(Frame::read_from(&mut &bad[..]).is_err());
+
+        // Nonzero reserved flags.
+        let mut bad = good.clone();
+        bad[7] = 1;
+        assert!(Frame::read_from(&mut &bad[..]).is_err());
+
+        // Truncated payload: mid-frame EOF, not a clean None.
+        let bad = &good[..good.len() - 3];
+        assert!(Frame::read_from(&mut &bad[..]).is_err());
+
+        // Truncated header.
+        let bad = &good[..7];
+        assert!(Frame::read_from(&mut &bad[..]).is_err());
+
+        // Trailing garbage inside the declared payload length.
+        let mut bad = good.clone();
+        bad.push(0xAB);
+        let len = u32::from_le_bytes(bad[8..12].try_into().unwrap()) + 1;
+        bad[8..12].copy_from_slice(&len.to_le_bytes());
+        let err = Frame::read_from(&mut &bad[..]).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+
+        // A length prefix past the payload cap is rejected before any
+        // allocation.
+        let mut bad = good.clone();
+        bad[8..12].copy_from_slice(&(MAX_PAYLOAD as u32 + 1).to_le_bytes());
+        let err = Frame::read_from(&mut &bad[..]).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_operand_planes_are_rejected() {
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        let data: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let planes = encode_w(&data, 16, 2, fmt);
+        let key = OperandKey::new(content_fingerprint(&data, 16, 2), fmt);
+        let good = Frame::PutOperand(PutOperandFrame {
+            key,
+            transposed: true,
+            planes,
+        })
+        .encode();
+        // Flip the layout byte inside the matrix encoding: header(12) +
+        // key(24) + transposed(1) + fmt(8) + rows/cols/bpr(12) = offset
+        // 57 holds the layout byte.
+        let mut bad = good.clone();
+        assert_eq!(bad[57], 1, "layout byte moved; update the offset");
+        bad[57] = 2;
+        let err = Frame::read_from(&mut &bad[..]).unwrap_err();
+        assert!(err.to_string().contains("layout"), "{err}");
+        // A format the encoder can never produce (mantissa bits out of
+        // range) is rejected by BlockFormat validation.
+        let mut bad = good.clone();
+        bad[37] = 99; // m_bits LSB inside the matrix's BlockFormat
+        assert!(Frame::read_from(&mut &bad[..]).is_err());
+    }
+
+    #[test]
+    fn admission_error_codes_compose_with_reject_frames() {
+        use crate::exec::AdmissionError;
+        let e = AdmissionError::QueueFull { capacity: 256 };
+        let rej = RejectFrame {
+            id: 1,
+            code: e.wire_code(),
+            detail: e.wire_detail(),
+        };
+        let back = AdmissionError::from_wire(rej.code, &rej.detail).unwrap();
+        assert_eq!(back, e);
+        // Fabric-level codes live above the admission range.
+        assert!(AdmissionError::from_wire(REJECT_NEED_OPERAND, "").is_none());
+        assert!(AdmissionError::from_wire(REJECT_EXEC_FAILED, "").is_none());
+    }
+}

@@ -58,6 +58,17 @@
 //!   (Appendix F): FP32 / BFloat16 / HBFP dot-product units, converters,
 //!   stochastic-rounding XORshift circuits; regenerates Fig 6 and the
 //!   area-gain columns of Table 1 exactly.
+//! * [`fabric`] — the **multi-node execution fabric** over [`exec`]:
+//!   `repro fabric-runner` hosts a [`exec::BfpService`] behind a TCP
+//!   socket speaking a versioned length-prefixed frame protocol
+//!   ([`fabric::wire`]), and [`fabric::FabricRouter`] re-offers the
+//!   submit/ticket surface over N runners — sharding by deadline slack
+//!   × per-runner outstanding-MAC budget, shipping weight operands as
+//!   encoded BFP planes deduplicated by the shared 128-bit content
+//!   digest ([`util::digest`], at most one transfer per distinct
+//!   weight per runner), and failing in-flight ops over to surviving
+//!   runners bit-identically (ops are pure). `repro serve-sim
+//!   --fabric N` drives a local fleet and emits `BENCH_fabric.json`.
 //! * [`data`] — synthetic dataset substrates standing in for CIFAR and
 //!   IWSLT (DESIGN.md §3 documents the substitutions).
 //! * [`metrics`] — accuracy/loss tracking, BLEU-4, Wasserstein-1, R².
@@ -74,6 +85,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exec;
 pub mod experiments;
+pub mod fabric;
 pub mod hw_model;
 pub mod metrics;
 pub mod report;

@@ -45,13 +45,27 @@ SUBCOMMANDS
             [--batch B] [--weights W]    GEMM request stream through the
             [--verify] [--async]         execution service; --async uses
             [--rps R] [--deadline-ms D]  open-loop BfpService admission
-            [--json PATH]                (Poisson arrivals, deadlines,
+            [--json PATH] [--fabric N]   (Poisson arrivals, deadlines,
                                          miss rate, queue depth) and adds
                                          per-stage latency-breakdown rows
                                          (queue wait / encode / gemm /
                                          decode at p50/p95/p99); --json
                                          (or $REPRO_BENCH_JSON) writes a
-                                         BENCH_serve.json artifact
+                                         BENCH_serve.json artifact;
+                                         --fabric N drives the stream
+                                         through a router over N local
+                                         runner processes (killing one
+                                         mid-run to prove failover) and
+                                         writes BENCH_fabric.json instead
+  fabric-runner [--listen HOST:PORT]     host the execution service on a
+                                         TCP socket for fabric routers
+                                         (default $BOOSTERS_FABRIC_LISTEN
+                                         or 127.0.0.1:0; the bound
+                                         address is printed on stdout)
+  metrics [--connect HOST:PORT]          Prometheus text exposition of
+                                         the exec counters — local
+                                         process by default, a remote
+                                         runner's with --connect
 
 POLICIES: fp32 | hbfpN | hbfpN+layersM | booster[K] | cyclicMIN-MAX
 Artifacts dir: --artifacts PATH (default ./artifacts or $REPRO_ARTIFACTS)
@@ -59,7 +73,12 @@ Env knobs: BOOSTERS_KERNEL=auto|scalar|autovec|avx2|avx512|neon (GEMM backend),
   BOOSTERS_AUTOTUNE=PATH (shape-dispatch table, see bench --autotune),
   BOOSTERS_PREENCODE_MB=N (resident pre-encoded activation-plane cap),
   BOOSTERS_ARENA_MB=N (recycled output/accumulator buffer-arena cap),
-  BOOSTERS_GEMM_THREADS=N, BOOSTERS_CACHE_ENTRIES=N, BOOSTERS_CACHE_MB=N
+  BOOSTERS_GEMM_THREADS=N, BOOSTERS_CACHE_ENTRIES=N, BOOSTERS_CACHE_MB=N,
+  BOOSTERS_FABRIC_RUNNERS=N (serve-sim --fabric fleet size),
+  BOOSTERS_FABRIC_MAC_BUDGET=N (per-runner outstanding-MAC admission cap),
+  BOOSTERS_FABRIC_LISTEN=HOST:PORT (fabric-runner default bind),
+  BOOSTERS_FABRIC_CONNECT=H:P,H:P (attach to an existing fleet instead
+  of spawning one)
 All BOOSTERS_* settings are validated at startup; every malformed value
 is reported (to stderr, exit code 2) in one pass.";
 
@@ -217,8 +236,42 @@ fn main() -> Result<()> {
                 .get("json")
                 .map(std::path::PathBuf::from)
                 .or_else(|| std::env::var_os("REPRO_BENCH_JSON").map(std::path::PathBuf::from));
-            let report = experiments::serve_sim::run(&boosters::exec::global_arc(), &cfg)?;
-            report.table.print();
+            if args.has_flag("fabric") || args.get("fabric").is_some() {
+                let runners = args
+                    .get_parse::<usize>("fabric")?
+                    .unwrap_or_else(boosters::util::fabric_runners);
+                let connect = boosters::util::fabric_connect();
+                let report = experiments::serve_sim::run_fabric(
+                    &boosters::exec::global_arc(),
+                    &cfg,
+                    runners,
+                    &connect,
+                )?;
+                report.table.print();
+            } else {
+                let report = experiments::serve_sim::run(&boosters::exec::global_arc(), &cfg)?;
+                report.table.print();
+            }
+        }
+        Some("fabric-runner") => {
+            let listen = args
+                .get("listen")
+                .map(str::to_string)
+                .or_else(boosters::util::fabric_listen)
+                .unwrap_or_else(|| "127.0.0.1:0".to_string());
+            boosters::fabric::serve(&listen)?;
+        }
+        Some("metrics") => {
+            let text = match args.get("connect") {
+                Some(addr) => boosters::fabric::fetch_metrics(addr)?,
+                None => boosters::metrics::render_text(
+                    &boosters::metrics::exec_service_snapshot(),
+                    &boosters::metrics::exec_cache_snapshot(),
+                    &boosters::metrics::exec_arena_snapshot(),
+                    &[],
+                ),
+            };
+            print!("{text}");
         }
         Some("fig6") => experiments::figs::fig6()?.print(),
         Some("density") => experiments::figs::density()?.print(),

@@ -1,0 +1,254 @@
+//! Prometheus-style text exposition of the execution counters.
+//!
+//! One function, one format: [`render_text`] turns the three exec-layer
+//! snapshots ([`ServiceStats`], [`CacheStats`], [`ArenaStats`]) plus any
+//! caller-supplied counter pairs (the fabric's runner/router counters)
+//! into the Prometheus text format, `# TYPE` line per metric, every
+//! value an integer. Served by fabric runners on their socket
+//! (`MetricsRequest` → `MetricsText`), dumped locally by
+//! `repro metrics`, and scrapable as-is if a user points an agent at
+//! either.
+//!
+//! The exact output shape is a **pinned contract**
+//! (`format_is_pinned` below): dashboards and the CI assertions parse
+//! it line-by-line, so changing a name or the ordering is a breaking
+//! change to make deliberately, with the test, not by accident.
+
+use crate::exec::{ArenaStats, CacheStats, ServiceStats};
+use std::fmt::Write as _;
+
+/// Every metric name carries this prefix; the paper-repro repo is the
+/// "boosters" namespace everywhere else (env knobs, artifacts).
+const PREFIX: &str = "boosters_";
+
+fn push(out: &mut String, name: &str, kind: &str, value: u64) {
+    let _ = writeln!(out, "# TYPE {PREFIX}{name} {kind}");
+    let _ = writeln!(out, "{PREFIX}{name} {value}");
+}
+
+/// Render the standard exec-layer counters plus `extra` pairs (already
+/// fully named, e.g. `fabric_runner_ops_total`) as Prometheus text.
+/// Counters are cumulative for the process; gauges are instantaneous.
+pub fn render_text(
+    service: &ServiceStats,
+    cache: &CacheStats,
+    arena: &ArenaStats,
+    extra: &[(&str, u64)],
+) -> String {
+    let mut out = String::new();
+    // Kernel identity travels as a label on a constant gauge — the
+    // Prometheus idiom for build/config info.
+    let _ = writeln!(out, "# TYPE {PREFIX}exec_kernel_info gauge");
+    let _ = writeln!(out, "{PREFIX}exec_kernel_info{{kernel=\"{}\"}} 1", service.kernel);
+    push(&mut out, "exec_submitted_total", "counter", service.submitted);
+    push(&mut out, "exec_completed_total", "counter", service.completed);
+    push(&mut out, "exec_failed_total", "counter", service.failed);
+    push(&mut out, "exec_rejected_total", "counter", service.rejected);
+    push(
+        &mut out,
+        "exec_deadline_missed_total",
+        "counter",
+        service.deadline_missed,
+    );
+    push(&mut out, "exec_batches_total", "counter", service.batches);
+    push(&mut out, "exec_queue_depth", "gauge", service.queue_depth as u64);
+    push(
+        &mut out,
+        "exec_queue_depth_peak",
+        "gauge",
+        service.peak_queue_depth as u64,
+    );
+    push(
+        &mut out,
+        "exec_effective_batch_macs",
+        "gauge",
+        service.effective_batch_macs,
+    );
+    push(&mut out, "exec_pre_encoded_total", "counter", service.pre_encoded);
+    push(
+        &mut out,
+        "exec_inline_encoded_total",
+        "counter",
+        service.inline_encoded,
+    );
+    push(&mut out, "exec_encode_us_total", "counter", service.encode_us);
+    push(
+        &mut out,
+        "exec_pre_encode_resident_bytes",
+        "gauge",
+        service.pre_encode_resident_bytes,
+    );
+    push(&mut out, "exec_decode_ops_total", "counter", service.decode_ops);
+    push(
+        &mut out,
+        "exec_decode_overlapped_total",
+        "counter",
+        service.decoded_overlapped,
+    );
+    push(&mut out, "exec_decode_us_total", "counter", service.decode_us);
+    push(&mut out, "cache_hits_total", "counter", cache.hits);
+    push(&mut out, "cache_misses_total", "counter", cache.misses);
+    push(&mut out, "cache_evictions_total", "counter", cache.evictions);
+    push(&mut out, "cache_entries", "gauge", cache.entries as u64);
+    push(&mut out, "cache_bytes", "gauge", cache.bytes as u64);
+    push(&mut out, "arena_hits_total", "counter", arena.hits);
+    push(&mut out, "arena_misses_total", "counter", arena.misses);
+    push(
+        &mut out,
+        "arena_recycled_bytes_total",
+        "counter",
+        arena.recycled_bytes,
+    );
+    push(&mut out, "arena_resident_bytes", "gauge", arena.resident_bytes);
+    push(&mut out, "arena_cap_bytes", "gauge", arena.cap_bytes);
+    for (name, value) in extra {
+        // Caller-supplied counters are monotonic by convention (every
+        // fabric counter is); anything instantaneous belongs in the
+        // fixed section above where its type is explicit.
+        push(&mut out, name, "counter", *value);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfp::kernels::KernelOpCounts;
+
+    fn fixed_service() -> ServiceStats {
+        ServiceStats {
+            submitted: 10,
+            completed: 8,
+            failed: 1,
+            rejected: 1,
+            deadline_missed: 2,
+            batches: 4,
+            queue_depth: 3,
+            peak_queue_depth: 5,
+            effective_batch_macs: 1 << 20,
+            pre_encoded: 6,
+            inline_encoded: 2,
+            encode_us: 1234,
+            kernel: "scalar",
+            kernel_ops: KernelOpCounts::default(),
+            pre_encode_resident_bytes: 4096,
+            decode_ops: 8,
+            decoded_overlapped: 5,
+            decode_us: 321,
+            arena_hits: 7,
+            arena_misses: 1,
+            arena_recycled_bytes: 2048,
+            arena_resident_bytes: 1024,
+        }
+    }
+
+    #[test]
+    fn format_is_pinned() {
+        let cache = CacheStats {
+            hits: 9,
+            misses: 3,
+            evictions: 1,
+            entries: 2,
+            bytes: 512,
+        };
+        let arena = ArenaStats {
+            hits: 7,
+            misses: 1,
+            recycled_bytes: 2048,
+            resident_bytes: 1024,
+            cap_bytes: 1 << 20,
+        };
+        let text = render_text(
+            &fixed_service(),
+            &cache,
+            &arena,
+            &[("fabric_runner_ops_total", 42)],
+        );
+        let expected = "\
+# TYPE boosters_exec_kernel_info gauge
+boosters_exec_kernel_info{kernel=\"scalar\"} 1
+# TYPE boosters_exec_submitted_total counter
+boosters_exec_submitted_total 10
+# TYPE boosters_exec_completed_total counter
+boosters_exec_completed_total 8
+# TYPE boosters_exec_failed_total counter
+boosters_exec_failed_total 1
+# TYPE boosters_exec_rejected_total counter
+boosters_exec_rejected_total 1
+# TYPE boosters_exec_deadline_missed_total counter
+boosters_exec_deadline_missed_total 2
+# TYPE boosters_exec_batches_total counter
+boosters_exec_batches_total 4
+# TYPE boosters_exec_queue_depth gauge
+boosters_exec_queue_depth 3
+# TYPE boosters_exec_queue_depth_peak gauge
+boosters_exec_queue_depth_peak 5
+# TYPE boosters_exec_effective_batch_macs gauge
+boosters_exec_effective_batch_macs 1048576
+# TYPE boosters_exec_pre_encoded_total counter
+boosters_exec_pre_encoded_total 6
+# TYPE boosters_exec_inline_encoded_total counter
+boosters_exec_inline_encoded_total 2
+# TYPE boosters_exec_encode_us_total counter
+boosters_exec_encode_us_total 1234
+# TYPE boosters_exec_pre_encode_resident_bytes gauge
+boosters_exec_pre_encode_resident_bytes 4096
+# TYPE boosters_exec_decode_ops_total counter
+boosters_exec_decode_ops_total 8
+# TYPE boosters_exec_decode_overlapped_total counter
+boosters_exec_decode_overlapped_total 5
+# TYPE boosters_exec_decode_us_total counter
+boosters_exec_decode_us_total 321
+# TYPE boosters_cache_hits_total counter
+boosters_cache_hits_total 9
+# TYPE boosters_cache_misses_total counter
+boosters_cache_misses_total 3
+# TYPE boosters_cache_evictions_total counter
+boosters_cache_evictions_total 1
+# TYPE boosters_cache_entries gauge
+boosters_cache_entries 2
+# TYPE boosters_cache_bytes gauge
+boosters_cache_bytes 512
+# TYPE boosters_arena_hits_total counter
+boosters_arena_hits_total 7
+# TYPE boosters_arena_misses_total counter
+boosters_arena_misses_total 1
+# TYPE boosters_arena_recycled_bytes_total counter
+boosters_arena_recycled_bytes_total 2048
+# TYPE boosters_arena_resident_bytes gauge
+boosters_arena_resident_bytes 1024
+# TYPE boosters_arena_cap_bytes gauge
+boosters_arena_cap_bytes 1048576
+# TYPE boosters_fabric_runner_ops_total counter
+boosters_fabric_runner_ops_total 42
+";
+        assert_eq!(text, expected);
+    }
+
+    #[test]
+    fn extra_counters_append_in_caller_order() {
+        let cache = CacheStats {
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            entries: 0,
+            bytes: 0,
+        };
+        let arena = ArenaStats {
+            hits: 0,
+            misses: 0,
+            recycled_bytes: 0,
+            resident_bytes: 0,
+            cap_bytes: 0,
+        };
+        let text = render_text(
+            &fixed_service(),
+            &cache,
+            &arena,
+            &[("b_second", 2), ("a_first", 1)],
+        );
+        let b = text.find("boosters_b_second 2").expect("b_second rendered");
+        let a = text.find("boosters_a_first 1").expect("a_first rendered");
+        assert!(b < a, "extras must keep caller order, not sort");
+    }
+}

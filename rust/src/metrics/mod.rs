@@ -4,11 +4,13 @@
 //! queue depth, deadline misses).
 
 pub mod bleu;
+pub mod export;
 pub mod stats;
 pub mod tracker;
 pub mod wasserstein;
 
 pub use bleu::{corpus_bleu, sentence_ngrams, BleuScore};
+pub use export::render_text;
 pub use stats::{pearson_r, r_squared};
 pub use tracker::{EpochStats, RunHistory};
 pub use wasserstein::{wasserstein1, wasserstein1_quantized, QuantSweep};

@@ -1,0 +1,136 @@
+//! Single home of the 128-bit content digest shared by the operand
+//! cache and the fabric wire protocol.
+//!
+//! The digest started life inside `exec/cache.rs` as the content half
+//! of [`crate::exec::CacheKey`]. The multi-node fabric turns it into a
+//! **cross-process contract**: a router ships `(digest, shape, format)`
+//! first and plane bytes only when the remote runner reports a miss, so
+//! the router-side hash and the runner-side hash must agree
+//! byte-for-byte forever. Hoisting the function here (and pinning known
+//! values in `stability_pins_known_digests`) makes any drift a test
+//! failure instead of a silent cross-node cache-poisoning bug.
+//!
+//! # Construction
+//!
+//! Two independent FNV-1a streams over the little-endian f32 bit
+//! patterns, with the logical shape folded into the bases — so a
+//! reshape of the same bytes cannot alias, and 128 bits of independent
+//! state make accidental collisions across a process (or fleet)
+//! lifetime negligible. The hash is deterministic across runs,
+//! platforms, and endiannesses (`f32::to_bits` is value-, not
+//! memory-order-, defined).
+
+/// 128-bit content digest: `(h1, h2)` of the two FNV-1a streams.
+///
+/// The wire encoding is fixed: `h1` then `h2`, each little-endian —
+/// see [`Digest::to_le_bytes`] / [`Digest::from_le_bytes`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Digest(pub u64, pub u64);
+
+impl Digest {
+    /// Serialized size on the wire (two little-endian u64s).
+    pub const WIRE_BYTES: usize = 16;
+
+    /// Fixed wire encoding: `h1` little-endian, then `h2`.
+    pub fn to_le_bytes(self) -> [u8; Self::WIRE_BYTES] {
+        let mut out = [0u8; Self::WIRE_BYTES];
+        out[..8].copy_from_slice(&self.0.to_le_bytes());
+        out[8..].copy_from_slice(&self.1.to_le_bytes());
+        out
+    }
+
+    /// Inverse of [`Digest::to_le_bytes`].
+    pub fn from_le_bytes(b: [u8; Self::WIRE_BYTES]) -> Self {
+        let mut h1 = [0u8; 8];
+        let mut h2 = [0u8; 8];
+        h1.copy_from_slice(&b[..8]);
+        h2.copy_from_slice(&b[8..]);
+        Self(u64::from_le_bytes(h1), u64::from_le_bytes(h2))
+    }
+
+    /// 32-hex-char rendering (`h1` then `h2`), for logs and metrics.
+    pub fn to_hex(self) -> String {
+        format!("{:016x}{:016x}", self.0, self.1)
+    }
+}
+
+impl std::fmt::Display for Digest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}{:016x}", self.0, self.1)
+    }
+}
+
+/// Two independent FNV-1a streams over the f32 bit patterns, with the
+/// shape folded into the bases. Deterministic across runs and
+/// platforms. **Frozen**: the operand cache keys by it in-process and
+/// the fabric negotiates transfer dedup with it across processes, so
+/// any change to this function invalidates every remote operand store
+/// — `stability_pins_known_digests` below pins the exact values.
+pub fn content_fingerprint(data: &[f32], rows: usize, cols: usize) -> Digest {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h1: u64 = 0xcbf2_9ce4_8422_2325 ^ (rows as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    let mut h2: u64 = 0x6c62_272e_07bb_0142 ^ (cols as u64).wrapping_mul(0xc2b2_ae3d_27d4_eb4f);
+    for &x in data {
+        let b = x.to_bits() as u64;
+        h1 = (h1 ^ b).wrapping_mul(PRIME);
+        h2 = (h2 ^ b.rotate_left(17)).wrapping_mul(PRIME);
+    }
+    Digest(h1, h2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stability_pins_known_digests() {
+        // Cross-process contract: these exact values are what every
+        // router and runner in a fleet computes for these inputs. If
+        // this test fails, the hash changed — which silently partitions
+        // mixed-version fleets and must be a deliberate, versioned
+        // wire-format bump, never an incidental edit.
+        assert_eq!(
+            content_fingerprint(&[1.0, 2.0, 3.0, 4.0], 2, 2),
+            Digest(0xfaaf_f61d_c4cc_177f, 0x22e7_c675_41bd_d39c)
+        );
+        // Empty input: the bases themselves (shape multiplier is 0).
+        assert_eq!(
+            content_fingerprint(&[], 0, 0),
+            Digest(0xcbf2_9ce4_8422_2325, 0x6c62_272e_07bb_0142)
+        );
+        // A single zero still advances both streams.
+        assert_eq!(
+            content_fingerprint(&[0.0], 1, 1),
+            Digest(0x27a3_eeb2_3259_be90, 0x7c42_f880_1e2a_b417)
+        );
+        // Sign and fraction bits feed through f32::to_bits.
+        assert_eq!(
+            content_fingerprint(&[-1.5, 0.25], 1, 2),
+            Digest(0xb54b_18fd_813e_ceb0, 0xbc1b_410d_f024_a63c)
+        );
+    }
+
+    #[test]
+    fn digest_separates_content_and_shape() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [1.0f32, 2.0, 3.0, 5.0];
+        assert_eq!(content_fingerprint(&a, 2, 2), content_fingerprint(&a, 2, 2));
+        assert_ne!(content_fingerprint(&a, 2, 2), content_fingerprint(&b, 2, 2));
+        // Shape is part of the identity: a reshape must not alias.
+        assert_ne!(content_fingerprint(&a, 2, 2), content_fingerprint(&a, 1, 4));
+        assert_ne!(content_fingerprint(&a, 2, 2), content_fingerprint(&a, 4, 1));
+    }
+
+    #[test]
+    fn wire_bytes_roundtrip_and_hex() {
+        let d = content_fingerprint(&[1.0, 2.0, 3.0, 4.0], 2, 2);
+        assert_eq!(Digest::from_le_bytes(d.to_le_bytes()), d);
+        let bytes = d.to_le_bytes();
+        assert_eq!(bytes.len(), Digest::WIRE_BYTES);
+        // Little-endian, h1 first: the first byte is h1's low byte.
+        assert_eq!(bytes[0], (d.0 & 0xff) as u8);
+        assert_eq!(bytes[8], (d.1 & 0xff) as u8);
+        assert_eq!(d.to_hex(), "faaff61dc4cc177f22e7c67541bdd39c");
+        assert_eq!(format!("{d}"), d.to_hex());
+    }
+}

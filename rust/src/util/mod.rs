@@ -2,10 +2,12 @@
 
 pub mod bench;
 pub mod cli;
+pub mod digest;
 pub mod json;
 pub mod rng;
 
 pub use cli::Args;
+pub use digest::{content_fingerprint, Digest};
 pub use json::Json;
 pub use rng::Rng;
 
@@ -212,6 +214,90 @@ pub fn parse_arena_budget(mb: Option<&str>) -> u64 {
         .unwrap_or(DEFAULT_ARENA_BYTES)
 }
 
+/// Default local runner-process count for `repro serve-sim --fabric`.
+pub const DEFAULT_FABRIC_RUNNERS: usize = 2;
+
+/// Default per-runner outstanding-MAC budget for the fabric router's
+/// sharding policy: 2^28 MACs (~a few serve-sim batches) in flight per
+/// runner before admission pushes back.
+pub const DEFAULT_FABRIC_MAC_BUDGET: u64 = 1 << 28;
+
+/// Fabric fleet size: the single home of the `BOOSTERS_FABRIC_RUNNERS`
+/// override (any positive integer) — how many local runner processes
+/// `repro serve-sim --fabric` spawns when the `--fabric N` flag does
+/// not say otherwise.
+pub fn fabric_runners() -> usize {
+    parse_fabric_runners(std::env::var("BOOSTERS_FABRIC_RUNNERS").ok().as_deref())
+}
+
+/// Pure parsing core of [`fabric_runners`]: malformed, zero, or missing
+/// values fall back to [`DEFAULT_FABRIC_RUNNERS`].
+pub fn parse_fabric_runners(raw: Option<&str>) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(DEFAULT_FABRIC_RUNNERS)
+}
+
+/// Per-runner outstanding-MAC budget for the fabric router: the single
+/// home of the `BOOSTERS_FABRIC_MAC_BUDGET` override (any positive
+/// integer, raw MACs).
+pub fn fabric_mac_budget() -> u64 {
+    parse_fabric_mac_budget(std::env::var("BOOSTERS_FABRIC_MAC_BUDGET").ok().as_deref())
+}
+
+/// Pure parsing core of [`fabric_mac_budget`]: malformed, zero, or
+/// missing values fall back to [`DEFAULT_FABRIC_MAC_BUDGET`].
+pub fn parse_fabric_mac_budget(raw: Option<&str>) -> u64 {
+    raw.and_then(|s| s.trim().parse::<u64>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(DEFAULT_FABRIC_MAC_BUDGET)
+}
+
+/// Listen address for `repro fabric-runner` when `--listen` is not
+/// given: the single home of the `BOOSTERS_FABRIC_LISTEN` override.
+/// `Some(addr)` when set and non-empty.
+pub fn fabric_listen() -> Option<String> {
+    std::env::var("BOOSTERS_FABRIC_LISTEN")
+        .ok()
+        .map(|v| v.trim().to_string())
+        .filter(|v| !v.is_empty())
+}
+
+/// Runner addresses for a fabric client when none are given on the
+/// command line: the single home of the `BOOSTERS_FABRIC_CONNECT`
+/// override (comma-separated `host:port` list).
+pub fn fabric_connect() -> Vec<String> {
+    parse_fabric_connect(std::env::var("BOOSTERS_FABRIC_CONNECT").ok().as_deref())
+}
+
+/// Pure parsing core of [`fabric_connect`]: split on commas, trim,
+/// drop empties. (Whether each entry is a *valid* address is
+/// [`validate_env_vars`]'s concern; connection errors stay typed at
+/// connect time either way.)
+pub fn parse_fabric_connect(raw: Option<&str>) -> Vec<String> {
+    raw.map(|s| {
+        s.split(',')
+            .map(str::trim)
+            .filter(|e| !e.is_empty())
+            .map(str::to_string)
+            .collect()
+    })
+    .unwrap_or_default()
+}
+
+/// Shape check for one `host:port` endpoint: a literal socket address,
+/// or any non-empty host followed by a valid port. No DNS resolution —
+/// startup validation must not block on the network.
+fn endpoint_shape_ok(addr: &str) -> bool {
+    if addr.parse::<std::net::SocketAddr>().is_ok() {
+        return true;
+    }
+    match addr.rsplit_once(':') {
+        Some((host, port)) => !host.is_empty() && port.parse::<u16>().is_ok(),
+        None => false,
+    }
+}
+
 /// One misconfigured `BOOSTERS_*` environment variable, as found by
 /// [`validate_env_vars`].
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -259,6 +345,36 @@ pub fn validate_env_vars(get: impl Fn(&str) -> Option<String>) -> Vec<EnvIssue> 
     positive_int("BOOSTERS_CACHE_MB", "operand-cache byte cap, MiB");
     positive_int("BOOSTERS_PREENCODE_MB", "pre-encode residency cap, MiB");
     positive_int("BOOSTERS_ARENA_MB", "buffer-arena residency cap, MiB");
+    positive_int("BOOSTERS_FABRIC_RUNNERS", "fabric runner-process count");
+    positive_int("BOOSTERS_FABRIC_MAC_BUDGET", "per-runner outstanding-MAC budget");
+    if let Some(v) = get("BOOSTERS_FABRIC_LISTEN") {
+        let trimmed = v.trim();
+        if !trimmed.is_empty() && !endpoint_shape_ok(trimmed) {
+            issues.push(EnvIssue {
+                var: "BOOSTERS_FABRIC_LISTEN",
+                value: v,
+                problem: "expected a host:port listen address".to_string(),
+            });
+        }
+    }
+    if let Some(v) = get("BOOSTERS_FABRIC_CONNECT") {
+        let entries = parse_fabric_connect(Some(&v));
+        if entries.is_empty() {
+            if !v.trim().is_empty() {
+                issues.push(EnvIssue {
+                    var: "BOOSTERS_FABRIC_CONNECT",
+                    value: v.clone(),
+                    problem: "expected a comma-separated host:port list".to_string(),
+                });
+            }
+        } else if let Some(bad) = entries.iter().find(|e| !endpoint_shape_ok(e)) {
+            issues.push(EnvIssue {
+                var: "BOOSTERS_FABRIC_CONNECT",
+                value: v.clone(),
+                problem: format!("entry {bad:?} is not a host:port address"),
+            });
+        }
+    }
     if let Some(v) = get("BOOSTERS_KERNEL") {
         let (_, rejected) = parse_kernel_choice(Some(&v));
         if rejected.is_some() {
@@ -399,6 +515,39 @@ mod tests {
     }
 
     #[test]
+    fn fabric_knob_parsing_and_fallback() {
+        // Unset -> defaults; zero and garbage fall back, never 0.
+        assert_eq!(parse_fabric_runners(None), DEFAULT_FABRIC_RUNNERS);
+        assert_eq!(parse_fabric_runners(Some(" 4 ")), 4);
+        assert_eq!(parse_fabric_runners(Some("0")), DEFAULT_FABRIC_RUNNERS);
+        assert_eq!(parse_fabric_runners(Some("fleet")), DEFAULT_FABRIC_RUNNERS);
+        assert_eq!(parse_fabric_mac_budget(None), DEFAULT_FABRIC_MAC_BUDGET);
+        assert_eq!(parse_fabric_mac_budget(Some(" 1024 ")), 1024);
+        assert_eq!(parse_fabric_mac_budget(Some("0")), DEFAULT_FABRIC_MAC_BUDGET);
+        assert_eq!(parse_fabric_mac_budget(Some("lots")), DEFAULT_FABRIC_MAC_BUDGET);
+        // Connect lists split on commas, trim, and drop empties.
+        assert!(parse_fabric_connect(None).is_empty());
+        assert_eq!(
+            parse_fabric_connect(Some(" 127.0.0.1:7001 , 127.0.0.1:7002 ,")),
+            vec!["127.0.0.1:7001".to_string(), "127.0.0.1:7002".to_string()]
+        );
+        assert!(parse_fabric_connect(Some("  ,, ")).is_empty());
+        // Endpoint shape: literal socket addrs and host:port both pass;
+        // missing or non-numeric ports fail. No DNS at validation time.
+        assert!(endpoint_shape_ok("127.0.0.1:7000"));
+        assert!(endpoint_shape_ok("[::1]:7000"));
+        assert!(endpoint_shape_ok("localhost:7000"));
+        assert!(!endpoint_shape_ok("nowhere"));
+        assert!(!endpoint_shape_ok(":7000"));
+        assert!(!endpoint_shape_ok("host:port"));
+        // The env-reading wrappers always yield usable values.
+        assert!(fabric_runners() >= 1);
+        assert!(fabric_mac_budget() >= 1);
+        let _ = fabric_listen();
+        let _ = fabric_connect();
+    }
+
+    #[test]
     fn env_validation_reports_every_bad_setting_at_once() {
         use std::collections::HashMap;
         // A clean environment (or one with only valid settings) passes.
@@ -410,6 +559,10 @@ mod tests {
             ("BOOSTERS_PREENCODE_MB", "128"),
             ("BOOSTERS_ARENA_MB", "256"),
             ("BOOSTERS_KERNEL", " AutoVec "),
+            ("BOOSTERS_FABRIC_RUNNERS", "3"),
+            ("BOOSTERS_FABRIC_MAC_BUDGET", "1048576"),
+            ("BOOSTERS_FABRIC_LISTEN", "127.0.0.1:7000"),
+            ("BOOSTERS_FABRIC_CONNECT", "127.0.0.1:7001, localhost:7002"),
         ]
         .into_iter()
         .collect();
@@ -423,11 +576,15 @@ mod tests {
             ("BOOSTERS_ARENA_MB", "0x10"),
             ("BOOSTERS_KERNEL", "sse9"),
             ("BOOSTERS_AUTOTUNE", "/no/such/table.json"),
+            ("BOOSTERS_FABRIC_RUNNERS", "zero"),
+            ("BOOSTERS_FABRIC_MAC_BUDGET", "0"),
+            ("BOOSTERS_FABRIC_LISTEN", "nowhere"),
+            ("BOOSTERS_FABRIC_CONNECT", "127.0.0.1:7001,bogus"),
         ]
         .into_iter()
         .collect();
         let issues = validate_env_vars(|v| bad.get(v).map(|s| s.to_string()));
-        assert_eq!(issues.len(), 7, "{issues:?}");
+        assert_eq!(issues.len(), 11, "{issues:?}");
         for issue in &issues {
             // Display output names the variable and the rejected value
             // so the operator can fix all of them from one failure.

@@ -1,0 +1,250 @@
+//! Loopback integration tests for the multi-node execution fabric:
+//! a [`FabricRouter`] over two in-process runners (each hosting its own
+//! [`ExecRuntime`] behind a real TCP socket) must
+//!
+//! * return responses **bit-identical** to [`hbfp_gemm_scalar`] — the
+//!   same invariant every local execution path pins, now across a wire;
+//! * move each distinct weight operand's plane bytes **at most once per
+//!   runner** (the digest-dedup negotiation), visible in the router's
+//!   hit counters;
+//! * survive a runner kill mid-flight: every accepted op still
+//!   fulfills, re-placed on the survivor, with the failover counted.
+
+use boosters::bfp::{hbfp_gemm_scalar, BlockFormat, Mat};
+use boosters::exec::{ExecRuntime, Priority, Ticket};
+use boosters::fabric::{fetch_metrics, serve_on, FabricRouter, RouterConfig, RunnerHandle};
+use boosters::util::Rng;
+use std::net::TcpListener;
+use std::sync::Arc;
+
+fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_scaled(1.0)).collect()
+}
+
+/// Spawn `n` loopback runners, each with its own two-thread runtime.
+fn spawn_fleet(n: usize) -> (Vec<RunnerHandle>, Vec<String>) {
+    let mut handles = Vec::with_capacity(n);
+    let mut addrs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let handle = serve_on(listener, Arc::new(ExecRuntime::with_threads(2))).unwrap();
+        addrs.push(handle.addr().to_string());
+        handles.push(handle);
+    }
+    (handles, addrs)
+}
+
+/// A mixed-shape op stream over a small working set of repeated
+/// weights — the dedup protocol's bread and butter.
+fn build_stream(
+    rng: &mut Rng,
+    distinct_weights: usize,
+    ops: usize,
+    k: usize,
+    c: usize,
+) -> (Vec<(Arc<Mat>, BlockFormat)>, Vec<(usize, Arc<Mat>)>) {
+    let fmts = [
+        BlockFormat::new(4, 64).unwrap(),
+        BlockFormat::new(6, 16).unwrap(),
+    ];
+    let weights: Vec<(Arc<Mat>, BlockFormat)> = (0..distinct_weights)
+        .map(|i| {
+            let w = Arc::new(Mat::new(k, c, randn(rng, k * c)).unwrap());
+            (w, fmts[i % fmts.len()])
+        })
+        .collect();
+    let stream = (0..ops)
+        .map(|_| {
+            let wi = rng.below(distinct_weights);
+            let m = 1 + rng.below(24);
+            (wi, Arc::new(Mat::new(m, k, randn(rng, m * k)).unwrap()))
+        })
+        .collect();
+    (weights, stream)
+}
+
+fn submit_all(
+    router: &FabricRouter,
+    weights: &[(Arc<Mat>, BlockFormat)],
+    stream: &[(usize, Arc<Mat>)],
+) -> Vec<Ticket> {
+    stream
+        .iter()
+        .enumerate()
+        .map(|(i, (wi, x))| {
+            let (w, fmt) = &weights[*wi];
+            // Alternate QoS classes so both sharding paths execute.
+            let prio = if i % 2 == 0 {
+                Priority::Interactive
+            } else {
+                Priority::Bulk
+            };
+            router
+                .submit(Arc::clone(x), Arc::clone(w), *fmt, None, prio)
+                .expect("loopback fleet under MAC budget must admit")
+        })
+        .collect()
+}
+
+fn assert_bit_identical(
+    weights: &[(Arc<Mat>, BlockFormat)],
+    stream: &[(usize, Arc<Mat>)],
+    tickets: Vec<Ticket>,
+) {
+    for (i, ((wi, x), ticket)) in stream.iter().zip(tickets).enumerate() {
+        let resp = ticket
+            .wait()
+            .unwrap_or_else(|e| panic!("op {i} lost by the fabric: {e:#}"));
+        let (w, fmt) = &weights[*wi];
+        let want = hbfp_gemm_scalar(x, w, *fmt).unwrap();
+        assert_eq!(resp.out.rows, want.rows, "op {i} row drift");
+        assert_eq!(resp.out.cols, want.cols, "op {i} col drift");
+        for (j, (g, r)) in resp.out.data.iter().zip(&want.data).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                r.to_bits(),
+                "op {i} elem {j}: fabric result diverged from hbfp_gemm_scalar"
+            );
+        }
+    }
+}
+
+#[test]
+fn two_runner_fleet_is_bit_identical_and_dedups_weights() {
+    let (handles, addrs) = spawn_fleet(2);
+    let router = FabricRouter::connect(
+        &addrs,
+        RouterConfig::default(),
+        Arc::new(ExecRuntime::with_threads(1)),
+    )
+    .unwrap();
+
+    let mut rng = Rng::new(7);
+    let (weights, stream) = build_stream(&mut rng, 3, 36, 96, 40);
+    let tickets = submit_all(&router, &weights, &stream);
+    assert_bit_identical(&weights, &stream, tickets);
+
+    let stats = router.stats();
+    assert_eq!(stats.completed, 36, "{stats:?}");
+    assert_eq!(stats.failed, 0, "{stats:?}");
+    // 36 ops over 3 distinct weights: the overwhelming majority of
+    // weight references must resolve without moving plane bytes…
+    assert!(stats.dedup_hits > 0, "{stats:?}");
+    // …and each distinct weight's planes cross the wire at most once
+    // per runner — the misses (= PutOperand transfers) are bounded by
+    // |weights| × |runners|, never by the op count.
+    assert!(
+        stats.dedup_misses <= (weights.len() * addrs.len()) as u64,
+        "{stats:?}"
+    );
+    assert_eq!(
+        stats.dedup_hits + stats.dedup_misses,
+        36,
+        "every op references exactly one weight: {stats:?}"
+    );
+    assert!(stats.plane_bytes_sent > 0, "{stats:?}");
+    assert!(
+        stats.plane_bytes_deduped >= stats.plane_bytes_sent,
+        "repeated references must out-dedup the initial transfers: {stats:?}"
+    );
+    // The probe protocol ran (first reference per runner), then the
+    // known-key set short-circuited it (no probe per repeated op).
+    assert!(stats.probes >= 1 && stats.probes <= stats.dedup_misses + 2, "{stats:?}");
+
+    // Both runners saw work (bulk ops round-robin across the fleet).
+    for r in &stats.runners {
+        assert!(r.alive, "{stats:?}");
+        assert!(r.completed > 0, "both runners must share the load: {stats:?}");
+    }
+
+    // The runner's Prometheus endpoint serves the pinned exposition
+    // format with the fabric counters appended.
+    let text = fetch_metrics(&addrs[0]).unwrap();
+    assert!(text.contains("# TYPE boosters_exec_submitted_total counter"));
+    assert!(text.contains("boosters_fabric_runner_ops_total"));
+    assert!(text.contains("boosters_fabric_runner_operands_stored"));
+
+    drop(router);
+    for h in handles {
+        h.kill();
+    }
+}
+
+#[test]
+fn router_fails_over_killed_runner_without_losing_ops() {
+    let (mut handles, addrs) = spawn_fleet(2);
+    let router = FabricRouter::connect(
+        &addrs,
+        RouterConfig::default(),
+        Arc::new(ExecRuntime::with_threads(1)),
+    )
+    .unwrap();
+
+    // Big enough ops that a kill right after submission is guaranteed
+    // to catch some of them in flight on the victim.
+    let mut rng = Rng::new(11);
+    let (weights, stream) = build_stream(&mut rng, 2, 32, 256, 96);
+    let tickets = submit_all(&router, &weights, &stream);
+
+    // SIGKILL-equivalent: drop the victim's sockets out from under the
+    // router. Accepted ops must re-place on the survivor.
+    handles.pop().unwrap().kill();
+
+    assert_bit_identical(&weights, &stream, tickets);
+    let stats = router.stats();
+    assert_eq!(stats.completed, 32, "no accepted op may be lost: {stats:?}");
+    assert_eq!(stats.failed, 0, "{stats:?}");
+    assert!(
+        stats.failovers >= 1,
+        "ops in flight on the victim must have re-placed: {stats:?}"
+    );
+    assert_eq!(router.alive_runners(), 1, "{stats:?}");
+    let dead = stats.runners.iter().filter(|r| !r.alive).count();
+    assert_eq!(dead, 1, "{stats:?}");
+
+    // The fleet keeps serving after the failover.
+    let x = Arc::new(Mat::new(3, 256, randn(&mut rng, 3 * 256)).unwrap());
+    let (w, fmt) = &weights[0];
+    let t = router
+        .submit(Arc::clone(&x), Arc::clone(w), *fmt, None, Priority::Interactive)
+        .unwrap();
+    let resp = t.wait().unwrap();
+    let want = hbfp_gemm_scalar(&x, w, *fmt).unwrap();
+    assert!(resp
+        .out
+        .data
+        .iter()
+        .zip(&want.data)
+        .all(|(g, r)| g.to_bits() == r.to_bits()));
+
+    drop(router);
+    for h in handles {
+        h.kill();
+    }
+}
+
+#[test]
+fn submit_rejects_non_contracting_shapes_locally() {
+    let (handles, addrs) = spawn_fleet(1);
+    let router = FabricRouter::connect(
+        &addrs,
+        RouterConfig::default(),
+        Arc::new(ExecRuntime::with_threads(1)),
+    )
+    .unwrap();
+    let mut rng = Rng::new(3);
+    let x = Arc::new(Mat::new(2, 17, randn(&mut rng, 34)).unwrap());
+    let w = Arc::new(Mat::new(16, 4, randn(&mut rng, 64)).unwrap());
+    let fmt = BlockFormat::new(4, 16).unwrap();
+    let err = router
+        .submit(x, w, fmt, None, Priority::Bulk)
+        .expect_err("17 vs 16 cannot contract");
+    assert!(matches!(
+        err,
+        boosters::exec::AdmissionError::InvalidShape { .. }
+    ));
+    drop(router);
+    for h in handles {
+        h.kill();
+    }
+}
