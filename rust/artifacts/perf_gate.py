@@ -5,6 +5,7 @@ artifact.
 Usage:
     python3 rust/artifacts/perf_gate.py <fresh BENCH_gemm.json> <promoted BENCH_gemm.json>
     python3 rust/artifacts/perf_gate.py --fabric <fresh BENCH_fabric.json> <promoted BENCH_fabric.json>
+    python3 rust/artifacts/perf_gate.py --registry <fresh BENCH_registry.json> <promoted BENCH_registry.json>
 
 Compares ``mean_ns`` of every bench of record present in both files and
 exits non-zero if any fresh mean is more than ``THRESHOLD`` times the
@@ -119,9 +120,104 @@ def fabric_gate(fresh_path, promoted_path):
     return 0
 
 
+# Warm-start load is mmap + cache publish, so it is less noisy than the
+# fabric run, but CI filesystems vary (page-cache state, overlay fs);
+# 2x on the load time is an algorithmic mistake (a decode or re-encode
+# snuck back into the load path), not jitter.
+REGISTRY_THRESHOLD = 2.0
+
+
+def registry_gate(fresh_path, promoted_path):
+    """``--registry`` mode: BENCH_registry.json of record.
+
+    The structural invariants ARE the PR's acceptance bar and hold on
+    any healthy run: cross-epoch dedup live, warm start bit-verified
+    with zero weight encodes. Timings compare against the promoted
+    artifact only once one has been promoted.
+    """
+    fresh = json.load(open(fresh_path))
+
+    assert fresh.get("suite") == "serve_registry", fresh.get("suite")
+    assert fresh["verified"], "registry warm start was not bit-verified"
+    assert fresh["epochs"] >= 2, f"need >= 2 epochs to observe dedup, got {fresh['epochs']}"
+    assert fresh["layers_pushed"] == fresh["epochs"] * fresh["layers_per_epoch"], (
+        fresh["layers_pushed"],
+        fresh["epochs"],
+        fresh["layers_per_epoch"],
+    )
+    # Cross-epoch dedup must be live: unchanged layers reuse blobs, so
+    # strictly fewer blobs exist than layers were pushed.
+    assert fresh["blobs_written"] + fresh["blobs_deduped"] == fresh["layers_pushed"], (
+        fresh["blobs_written"],
+        fresh["blobs_deduped"],
+        fresh["layers_pushed"],
+    )
+    assert fresh["blobs_deduped"] > 0 and fresh["dedup_ratio"] > 0.0, (
+        "cross-epoch dedup never reused a blob"
+    )
+    assert fresh["blob_count"] == fresh["blobs_written"], (
+        fresh["blob_count"],
+        fresh["blobs_written"],
+    )
+    assert fresh["bytes_written"] > 0 and fresh["blob_bytes"] > 0
+    # The tentpole's zero-encode contract: the warm path installed every
+    # final-epoch layer and the hot path never fell back to the encoder.
+    assert fresh["warm_installed"] == fresh["layers_per_epoch"], (
+        fresh["warm_installed"],
+        fresh["layers_per_epoch"],
+    )
+    assert fresh["weight_encodes_warm"] == 0, (
+        f"warm start performed {fresh['weight_encodes_warm']} weight encode(s)"
+    )
+    assert fresh["warm_cache_hits"] >= fresh["warm_installed"], (
+        fresh["warm_cache_hits"],
+        fresh["warm_installed"],
+    )
+    assert fresh["encode_ops_avoided"] == fresh["warm_installed"]
+    assert fresh["warm_plane_bytes"] > 0
+    assert 0 <= fresh["mapped_loads"] <= fresh["warm_installed"]
+    assert fresh["warm_load_ms"] >= 0.0 and fresh["cold_encode_ms"] >= 0.0
+    assert fresh["completed"] == fresh["requests"], (
+        fresh["completed"],
+        fresh["requests"],
+    )
+    print(
+        f"registry invariants ok: {fresh['layers_pushed']} layers pushed over "
+        f"{fresh['epochs']} epochs -> {fresh['blob_count']} blobs "
+        f"(dedup {100 * fresh['dedup_ratio']:.0f}%), warm start installed "
+        f"{fresh['warm_installed']} planes in {fresh['warm_load_ms']:.2f} ms "
+        f"({fresh['mapped_loads']} mmap-served) with 0 weight encodes vs "
+        f"{fresh['cold_encode_ms']:.2f} ms cold encode"
+    )
+
+    promoted = json.load(open(promoted_path))
+    if promoted.get("status") == "pending-toolchain-run":
+        print(
+            "::notice::registry perf gate skipped: promoted BENCH_registry.json "
+            "is still the pending-toolchain placeholder; promote a green run "
+            "(artifacts/promote.sh) to arm it"
+        )
+        return 0
+
+    ratio = fresh["warm_load_ms"] / max(promoted["warm_load_ms"], 1e-9)
+    verdict = "REGRESSION" if ratio > REGISTRY_THRESHOLD else "ok"
+    print(f"{verdict:10} registry warm_load_ms: {ratio:.2f}x vs promoted")
+    if ratio > REGISTRY_THRESHOLD:
+        print(
+            f"::error::registry warm-start load regressed {ratio:.2f}x vs the "
+            f"promoted artifact (threshold {REGISTRY_THRESHOLD:.1f}x) -- did a "
+            f"decode or re-encode sneak into the zero-copy load path?"
+        )
+        return 1
+    print("registry perf gate passed")
+    return 0
+
+
 def main(argv):
     if len(argv) == 4 and argv[1] == "--fabric":
         return fabric_gate(argv[2], argv[3])
+    if len(argv) == 4 and argv[1] == "--registry":
+        return registry_gate(argv[2], argv[3])
     if len(argv) != 3:
         print(__doc__.strip(), file=sys.stderr)
         return 2

@@ -3,23 +3,25 @@
 # pending-toolchain placeholders (open ROADMAP item).
 #
 # Usage:
-#   artifacts/promote.sh <BENCH_gemm.json> <BENCH_serve.json> [autotune.json] [BENCH_fabric.json]
+#   artifacts/promote.sh <BENCH_gemm.json> <BENCH_serve.json> [autotune.json] [BENCH_fabric.json] [BENCH_registry.json]
 #
 # Download the artifacts from a green CI run (`BENCH_gemm`,
-# `BENCH_serve`, and optionally `autotune` / `BENCH_fabric` of the
-# `rust` job), then run this from `rust/`. The script validates that
-# each file is a real measured run (not a placeholder, required keys
-# present, pre-encode counters live, executed-kernel accounting
-# consistent) before copying it over the checked-in placeholder. The
-# two optional files are classified by content, so their order does not
-# matter. The autotune table additionally has its
-# `boosters-autotune-v1` schema checked entry-by-entry so a malformed
-# table can never be promoted into the registry's load path; the fabric
-# artifact must be a bit-verified run with live dedup counters.
+# `BENCH_serve`, and optionally `autotune` / `BENCH_fabric` /
+# `BENCH_registry` of the `rust` job), then run this from `rust/`. The
+# script validates that each file is a real measured run (not a
+# placeholder, required keys present, pre-encode counters live,
+# executed-kernel accounting consistent) before copying it over the
+# checked-in placeholder. The optional files are classified by content,
+# so their order does not matter. The autotune table additionally has
+# its `boosters-autotune-v1` schema checked entry-by-entry so a
+# malformed table can never be promoted into the registry's load path;
+# the fabric artifact must be a bit-verified run with live dedup
+# counters; the registry artifact must be a bit-verified warm start
+# with zero weight encodes and live cross-epoch dedup.
 set -eu
 
-if [ "$#" -lt 2 ] || [ "$#" -gt 4 ]; then
-    echo "usage: $0 <BENCH_gemm.json> <BENCH_serve.json> [autotune.json] [BENCH_fabric.json]" >&2
+if [ "$#" -lt 2 ] || [ "$#" -gt 5 ]; then
+    echo "usage: $0 <BENCH_gemm.json> <BENCH_serve.json> [autotune.json] [BENCH_fabric.json] [BENCH_registry.json]" >&2
     exit 2
 fi
 
@@ -112,8 +114,22 @@ elif doc.get("suite") == "serve_fabric":
     if doc.get("killed_runner") and not doc.get("failovers"):
         fail("BENCH_fabric killed a runner but recorded no failovers")
     print("fabric")
+elif doc.get("suite") == "serve_registry":
+    if not doc.get("verified"):
+        fail("BENCH_registry run was not bit-verified vs a fresh encode")
+    if doc.get("weight_encodes_warm", 1):
+        fail(
+            "BENCH_registry warm start performed "
+            f"{doc.get('weight_encodes_warm')} weight encode(s) — "
+            "the zero-encode contract is the point of promotion"
+        )
+    if not doc.get("blobs_deduped") or not doc.get("dedup_ratio"):
+        fail("BENCH_registry reports no cross-epoch dedup — store not live")
+    if doc.get("warm_load_ms", -1) < 0:
+        fail("BENCH_registry has no warm_load_ms timing")
+    print("registry")
 else:
-    fail(f"{sys.argv[1]} is neither an autotune table nor a fabric artifact")
+    fail(f"{sys.argv[1]} is not an autotune table, fabric, or registry artifact")
 EOF
 ) || exit 1
     case "$kind" in
@@ -124,6 +140,10 @@ EOF
         fabric)
             cp "$extra" "$here/BENCH_fabric.json"
             promoted="$promoted and $here/BENCH_fabric.json"
+            ;;
+        registry)
+            cp "$extra" "$here/BENCH_registry.json"
+            promoted="$promoted and $here/BENCH_registry.json"
             ;;
     esac
 done

@@ -1,7 +1,14 @@
 //! Checkpoints: named f32 tensors in a simple self-describing binary
 //! container (JSON header + raw little-endian payload). Used for the
 //! Fig 1 / Fig 2 analyses, which quantize *trained* weights offline.
+//!
+//! For serving, this f32 container is the **interchange** format only:
+//! [`crate::registry`] subsumes it as the ingest path
+//! (`Registry::import_checkpoint` / `repro registry push`), storing
+//! each tensor as a digest-addressed blob of already-encoded planes so
+//! warm starts never re-read or re-encode the f32 payload.
 
+use crate::bfp::Mat;
 use crate::runtime::Tensor;
 use crate::util::Json;
 use anyhow::{anyhow, Context, Result};
@@ -38,6 +45,28 @@ impl Checkpoint {
             .iter()
             .position(|n| n == name)
             .map(|i| &self.tensors[i])
+    }
+
+    /// View every tensor as a 2-D weight matrix for encoding: rank >= 2
+    /// tensors keep their leading dimension as rows (a `k x n` weight
+    /// stays `k x n`), vectors and scalars become one row. This is the
+    /// bridge the registry's import path walks.
+    pub fn layer_mats(&self) -> Result<Vec<(String, Mat)>> {
+        self.names
+            .iter()
+            .zip(&self.tensors)
+            .map(|(name, t)| {
+                let data = t
+                    .as_f32()
+                    .context("checkpoints store f32 tensors only")?
+                    .to_vec();
+                let rows = if t.shape().len() >= 2 { t.shape()[0] } else { 1 };
+                let cols = if rows == 0 { 0 } else { data.len() / rows };
+                let mat = Mat::new(rows, cols, data)
+                    .with_context(|| format!("tensor {name:?} is not rectangular"))?;
+                Ok((name.clone(), mat))
+            })
+            .collect()
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -156,6 +185,23 @@ mod tests {
         assert_eq!(back.get("b").unwrap().shape(), &[4]);
         assert!(back.get("zzz").is_none());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn layer_mats_bridges_shapes_for_encoding() {
+        let ck = Checkpoint::new(
+            vec!["w".into(), "b".into()],
+            vec![
+                Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap(),
+                Tensor::from_f32(&[4], vec![9., 8., 7., 6.]).unwrap(),
+            ],
+        );
+        let mats = ck.layer_mats().unwrap();
+        assert_eq!(mats[0].0, "w");
+        assert_eq!((mats[0].1.rows, mats[0].1.cols), (2, 3));
+        assert_eq!(mats[0].1.data, vec![1., 2., 3., 4., 5., 6.]);
+        // Vectors become a single row.
+        assert_eq!((mats[1].1.rows, mats[1].1.cols), (1, 4));
     }
 
     #[test]

@@ -167,6 +167,7 @@ pub struct OperandCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    preloads: AtomicU64,
     max_entries: usize,
     max_bytes: usize,
 }
@@ -221,6 +222,7 @@ impl OperandCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            preloads: AtomicU64::new(0),
             max_entries: max_entries.max(1),
             max_bytes: max_bytes.max(1),
         }
@@ -352,6 +354,26 @@ impl OperandCache {
         let _ = flight.outcome.set(Some(Arc::clone(&value)));
         drop(guard);
         Ok(value)
+    }
+
+    /// Publish an **already-encoded** value (a registry warm start)
+    /// without charging the hit/miss accounting — preloads are not
+    /// workload traffic, and the warm-start speedup claim rests on the
+    /// subsequent lookups being real hits. Returns whether the value
+    /// fit under the byte cap (an over-budget plane is not retained,
+    /// exactly as [`Self::insert`] declines it). Only deterministic
+    /// nearest-even encodings may be preloaded — the same cacheability
+    /// contract as every other writer (see module docs).
+    pub fn preload(&self, key: CacheKey, value: Arc<BfpMatrix>) -> bool {
+        let fits = plane_bytes(&value) <= self.max_bytes;
+        self.preloads.fetch_add(1, Ordering::Relaxed);
+        self.insert(key, value);
+        fits
+    }
+
+    /// Total values published through [`Self::preload`].
+    pub fn preloads(&self) -> u64 {
+        self.preloads.load(Ordering::Relaxed)
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -613,6 +635,29 @@ mod tests {
         assert_eq!(cache.stats().entries, 0);
         // The failed attempt counted as a miss, not a hit.
         assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn preload_publishes_without_charging_traffic_counters() {
+        let cache = OperandCache::new(8, 1 << 20);
+        let d: Vec<f32> = (0..64).map(|i| i as f32 * 0.5).collect();
+        let f = fmt(4, 16);
+        let key = CacheKey::for_matrix(&d, 1, 64, f, false);
+        assert!(cache.preload(key, Arc::new(encode(&d, f))));
+        assert_eq!(cache.preloads(), 1);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 0, 1));
+        // A warmed key is a pure hit: the encode closure must not run.
+        let got = cache
+            .get_or_encode(key, || panic!("warm start must not encode"))
+            .unwrap();
+        assert_eq!(got.mantissas.len(), 64);
+        assert_eq!(cache.stats().hits, 1);
+        // An over-budget preload reports not-retained and stores nothing.
+        let tiny = OperandCache::new(8, 4);
+        assert!(!tiny.preload(key, Arc::new(encode(&d, f))));
+        assert_eq!(tiny.stats().entries, 0);
+        assert_eq!(tiny.preloads(), 1);
     }
 
     #[test]

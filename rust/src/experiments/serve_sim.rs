@@ -26,18 +26,30 @@
 //! With a JSON sink configured (`--json PATH` or `REPRO_BENCH_JSON`),
 //! the metrics are additionally written as a `BENCH_serve.json`-style
 //! artifact for the bench trajectory.
+//!
+//! A third drive mode, `--registry DIR` ([`run_registry`]), benchmarks
+//! the content-addressed encoded-weight registry: it pushes several
+//! synthetic "epochs" of the weight working set (perturbing a subset of
+//! layers per epoch, so cross-epoch dedup is observable), then times a
+//! **cold** start (fresh encode of every weight) against a **warm**
+//! start (mmap-loading the final manifest's already-encoded planes into
+//! a fresh operand cache). The warm path must perform **zero** weight
+//! encodes and load planes **bit-identical** to a fresh encode — both
+//! are hard assertions, and both land in `BENCH_registry.json`.
 
-use crate::bfp::{hbfp_gemm_scalar, BlockFormat, KernelOpCounts, Mat};
+use crate::bfp::{hbfp_gemm_scalar, BfpMatrix, BlockFormat, KernelOpCounts, Mat, Quantizer};
 use crate::exec::{
     AdmissionError, BatchGemm, BfpService, CacheStats, ExecRuntime, GemmRequest, OwnedGemmOp,
     Priority, ServiceConfig, ServiceStats,
 };
 use crate::fabric::{fetch_metrics, FabricRouter, FabricStats, RouterConfig};
+use crate::registry::{PushLayer, Registry};
 use crate::report::Table;
 use crate::util::{Json, Rng, Stopwatch};
 use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
 use std::io::BufRead;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
 use std::time::Duration;
@@ -1171,6 +1183,246 @@ fn drive_fabric(
     })
 }
 
+// ---------------------------------------------------------------------------
+// Registry drive mode (`repro serve-sim --registry DIR`)
+// ---------------------------------------------------------------------------
+
+/// Result summary of a registry cold-vs-warm run (printable table +
+/// `BENCH_registry.json` artifact).
+pub struct RegistrySimReport {
+    pub table: Table,
+    /// Blobs actually written across all pushed epochs.
+    pub blobs_written: usize,
+    /// Layer pushes satisfied by an existing blob (cross-epoch dedup).
+    pub blobs_deduped: usize,
+    /// `blobs_deduped / layers_pushed` — > 0 whenever epochs share
+    /// unchanged layers.
+    pub dedup_ratio: f64,
+    /// Operand-cache encode misses during the warm start — the
+    /// headline zero (asserted, then reported).
+    pub weight_encodes_warm: u64,
+    /// Requests completed by the warm-started runtime.
+    pub completed: usize,
+    json: Json,
+}
+
+impl RegistrySimReport {
+    /// Machine-readable form (what the `--json` sink writes).
+    pub fn to_json(&self) -> &Json {
+        &self.json
+    }
+}
+
+/// `repro serve-sim --registry DIR [--epochs N]`: push N synthetic
+/// epochs of the standard weight working set into a registry at `dir`
+/// (perturbing layer `i` in epoch `e > 0` when `i % 3 == e % 3`, so
+/// most layers dedup against the previous epoch), then benchmark a
+/// cold start (fresh serial encode of every final-epoch weight)
+/// against a warm start (mmap-load the final manifest into a fresh
+/// runtime's operand cache) and drive the standard request stream
+/// through the warm runtime.
+///
+/// Hard assertions, not just reported numbers: the warm start performs
+/// **zero** weight encodes (every weight's cache key is manifest-
+/// covered) and every registry-loaded plane is **bit-identical** to a
+/// fresh encode of the same f32 source.
+pub fn run_registry(
+    rt: &Arc<ExecRuntime>,
+    cfg: &ServeSimConfig,
+    dir: &Path,
+    epochs: usize,
+) -> Result<RegistrySimReport> {
+    ensure!(cfg.requests > 0, "need at least one request");
+    ensure!(cfg.weights > 0, "need at least one weight matrix");
+    ensure!(epochs >= 1, "need at least one epoch to push");
+    let (weights, requests, mut rng) = build_workload(cfg)?;
+    let reg = Registry::open(dir)?;
+
+    // Push the epoch sequence. `current` evolves like a training run:
+    // each epoch re-randomizes a subset of layers and leaves the rest
+    // untouched — the untouched ones must dedup by construction.
+    let mut current = weights;
+    let (mut layers_pushed, mut blobs_written, mut blobs_deduped) = (0usize, 0usize, 0usize);
+    let (mut bytes_written, mut bytes_deduped) = (0u64, 0u64);
+    let sw_push = Stopwatch::start();
+    for e in 0..epochs {
+        if e > 0 {
+            for (i, (w, _)) in current.iter_mut().enumerate() {
+                if i % 3 == e % 3 {
+                    let (k, n) = (w.rows, w.cols);
+                    *w = Arc::new(Mat::new(k, n, randn(&mut rng, k * n))?);
+                }
+            }
+        }
+        let names: Vec<String> = (0..current.len()).map(|i| format!("layer{i:02}")).collect();
+        let layers: Vec<PushLayer<'_>> = current
+            .iter()
+            .zip(&names)
+            .map(|((w, fmt), name)| PushLayer {
+                name,
+                weight: w,
+                fmt: *fmt,
+            })
+            .collect();
+        let mut meta = BTreeMap::new();
+        meta.insert("epoch".to_string(), e.to_string());
+        let (_, stats) = reg.push(&format!("epoch{e}"), &layers, &meta)?;
+        layers_pushed += stats.layers;
+        blobs_written += stats.blobs_written;
+        blobs_deduped += stats.blobs_deduped;
+        bytes_written += stats.bytes_written;
+        bytes_deduped += stats.bytes_deduped;
+    }
+    let push_ms = sw_push.ms();
+    let dedup_ratio = if layers_pushed == 0 {
+        0.0
+    } else {
+        blobs_deduped as f64 / layers_pushed as f64
+    };
+    let (blob_count, blob_bytes) = reg.blob_stats()?;
+
+    // Cold start: what a registry-less process pays — a fresh encode of
+    // every final-epoch weight (the same serial path `push` used, so
+    // the bit-identity check below compares like against like).
+    let sw_cold = Stopwatch::start();
+    let fresh: Vec<BfpMatrix> = current
+        .iter()
+        .map(|(w, fmt)| {
+            BfpMatrix::encode_transposed(w, *fmt, Quantizer::nearest(fmt.mantissa_bits))
+        })
+        .collect::<Result<_>>()?;
+    let cold_ms = sw_cold.ms();
+
+    // Warm start: a fresh runtime (empty operand cache) fed straight
+    // from the registry — never from f32, never through the encoder.
+    let warm_rt = Arc::new(ExecRuntime::with_threads(rt.pool().threads()));
+    let last = format!("epoch{}", epochs - 1);
+    let sw_warm = Stopwatch::start();
+    let warm = Registry::open(dir)?.warm_cache(&last, warm_rt.cache())?;
+    let warm_ms = sw_warm.ms();
+
+    // Touch every weight through the cached-encode front door and pin
+    // the two contract halves: all hits (zero encodes), and planes
+    // bit-identical to the fresh encodes (BfpMatrix derives Eq).
+    for ((w, fmt), want) in current.iter().zip(&fresh) {
+        let got = warm_rt.encode_transposed_cached(w, *fmt)?;
+        ensure!(
+            *got == *want,
+            "registry-loaded planes for a {}x{} weight diverged from a fresh encode",
+            w.rows,
+            w.cols
+        );
+    }
+    let warm_cache = warm_rt.cache_stats();
+    let weight_encodes_warm = warm_cache.misses;
+    ensure!(
+        weight_encodes_warm == 0,
+        "warm start performed {weight_encodes_warm} weight encode(s); \
+         the manifest should cover the whole working set"
+    );
+    let warm_speedup = if warm_ms > 0.0 { cold_ms / warm_ms } else { 0.0 };
+
+    // Drive the standard stream through the warm runtime — end-to-end
+    // proof that registry-fed planes serve real traffic.
+    let outcome = drive_sync(&warm_rt, cfg, &requests, &current)?;
+    if cfg.verify {
+        verify_sample(&requests, &current, &outcome.results)?;
+    }
+    let completed = outcome.lat_ms.len();
+
+    let mut table = Table::new(
+        "serve-sim --registry — encoded-weight registry cold vs warm start",
+        &["metric", "value"],
+    );
+    let mut kv = |k: &str, v: String| {
+        table.row(vec![k.to_string(), v]);
+    };
+    kv("registry", dir.display().to_string());
+    kv("epochs pushed", epochs.to_string());
+    kv("layers per epoch", current.len().to_string());
+    kv(
+        "blobs written / deduped",
+        format!("{blobs_written} / {blobs_deduped} ({:.0}% dedup)", 100.0 * dedup_ratio),
+    );
+    kv(
+        "blob bytes written / deduped",
+        format!("{bytes_written} / {bytes_deduped}"),
+    );
+    kv("resident blobs (count / bytes)", format!("{blob_count} / {blob_bytes}"));
+    kv("push wall (ms)", format!("{push_ms:.3}"));
+    kv("cold start: fresh encodes (ms)", format!("{cold_ms:.3}"));
+    kv(
+        "warm start: registry load (ms)",
+        format!("{warm_ms:.3} ({} planes, {} mmap-served)", warm.installed, warm.mapped_loads),
+    );
+    kv("warm speedup (cold/warm)", format!("{warm_speedup:.2}x"));
+    kv("warm plane bytes installed", warm.plane_bytes.to_string());
+    kv(
+        "weight encodes during warm start",
+        format!("{weight_encodes_warm} (asserted zero)"),
+    );
+    kv(
+        "warm cache hits (working-set touch)",
+        warm_cache.hits.to_string(),
+    );
+    kv("requests driven warm", format!("{completed}/{}", cfg.requests));
+    kv(
+        "verified vs scalar",
+        if cfg.verify { "yes (bit-exact sample)" } else { "no" }.to_string(),
+    );
+    kv("bit-identity vs fresh encode", "yes (all layers)".to_string());
+
+    let json = Json::obj(vec![
+        ("suite", Json::str("serve_registry")),
+        ("registry_dir", Json::str(dir.display().to_string())),
+        ("epochs", Json::Num(epochs as f64)),
+        ("layers_per_epoch", Json::Num(current.len() as f64)),
+        ("layers_pushed", Json::Num(layers_pushed as f64)),
+        ("blobs_written", Json::Num(blobs_written as f64)),
+        ("blobs_deduped", Json::Num(blobs_deduped as f64)),
+        ("dedup_ratio", Json::Num(dedup_ratio)),
+        ("bytes_written", Json::Num(bytes_written as f64)),
+        ("bytes_deduped", Json::Num(bytes_deduped as f64)),
+        ("blob_count", Json::Num(blob_count as f64)),
+        ("blob_bytes", Json::Num(blob_bytes as f64)),
+        ("push_ms", Json::Num(push_ms)),
+        ("cold_encode_ms", Json::Num(cold_ms)),
+        ("warm_load_ms", Json::Num(warm_ms)),
+        ("warm_speedup", Json::Num(warm_speedup)),
+        ("warm_installed", Json::Num(warm.installed as f64)),
+        ("warm_plane_bytes", Json::Num(warm.plane_bytes as f64)),
+        ("mapped_loads", Json::Num(warm.mapped_loads as f64)),
+        ("weight_encodes_warm", Json::Num(weight_encodes_warm as f64)),
+        ("warm_cache_hits", Json::Num(warm_cache.hits as f64)),
+        ("encode_ops_avoided", Json::Num(current.len() as f64)),
+        ("requests", Json::Num(cfg.requests as f64)),
+        ("completed", Json::Num(completed as f64)),
+        ("verified", Json::Bool(true)),
+    ]);
+    if let Some(path) = &cfg.json {
+        let mut text = json.render();
+        text.push('\n');
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        std::fs::write(path, text).with_context(|| format!("writing {}", path.display()))?;
+        println!("wrote registry JSON artifact to {}", path.display());
+    }
+
+    Ok(RegistrySimReport {
+        table,
+        blobs_written,
+        blobs_deduped,
+        dedup_ratio,
+        weight_encodes_warm,
+        completed,
+        json,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1324,6 +1576,43 @@ mod tests {
         assert!(back.req("cache_budget_entries").unwrap().as_f64().unwrap() >= 1.0);
         assert!(back.req("cache_budget_mb").unwrap().as_f64().unwrap() >= 1.0);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn registry_mode_dedups_and_warm_starts_with_zero_encodes() {
+        let rt = Arc::new(ExecRuntime::with_threads(1));
+        let mut cfg = ServeSimConfig::quick();
+        cfg.requests = 12;
+        cfg.weights = 4;
+        let dir = std::env::temp_dir().join(format!(
+            "boosters-serve-registry-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let json_path = dir.join("BENCH_registry.json");
+        cfg.json = Some(json_path.clone());
+        let report = run_registry(&rt, &cfg, &dir.join("reg"), 3).unwrap();
+        // Epochs 1 and 2 each perturb one of the four layers, so three
+        // layers dedup against the previous epoch both times.
+        assert_eq!(report.blobs_written, 4 + 1 + 1);
+        assert_eq!(report.blobs_deduped, 3 + 3);
+        assert!(report.dedup_ratio > 0.0);
+        // The headline contract: warm start encodes nothing.
+        assert_eq!(report.weight_encodes_warm, 0);
+        assert_eq!(report.completed, 12);
+        let back = Json::parse(&std::fs::read_to_string(&json_path).unwrap()).unwrap();
+        assert_eq!(
+            back.req("suite").unwrap().as_str().unwrap(),
+            "serve_registry"
+        );
+        assert_eq!(
+            back.req("weight_encodes_warm").unwrap().as_usize().unwrap(),
+            0
+        );
+        assert!(back.req("dedup_ratio").unwrap().as_f64().unwrap() > 0.0);
+        assert!(back.req("verified").unwrap().as_bool().unwrap());
+        assert!(back.req("warm_load_ms").unwrap().as_f64().unwrap() >= 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -44,8 +44,22 @@
 //!    re-negotiates — the store needs no session state to recover.
 //!
 //! Each distinct weight plane therefore crosses the wire **at most
-//! once per runner** in steady state; [`FabricStats`] carries both the
-//! hit counters and the bytes-sent / bytes-deduped pair that prove it.
+//! once per runner residency** in steady state; [`FabricStats`] carries
+//! both the hit counters and the bytes-sent / bytes-deduped pair that
+//! prove it. The runner-side store is LRU-bounded by resident plane
+//! bytes (`BOOSTERS_FABRIC_STORE_MB`, default 256 MiB); an eviction
+//! simply re-triggers step 4, and the forced re-transfer is counted in
+//! its own runner counter (`fabric_runner_operands_retransferred`)
+//! rather than diluting the dedup numbers.
+//!
+//! # Registry warm start
+//!
+//! `repro fabric-runner --registry DIR` preloads the operand store from
+//! a local [`crate::registry::Registry`] before accepting connections:
+//! manifest-covered weights arrive as mmap-loaded, already-encoded
+//! planes under the same content-digest key the router probes for, so
+//! a fresh fleet answers step 2 positively and steps 3–4 never run —
+//! zero plane bytes on the wire, zero weight encodes on the runner.
 //!
 //! # Failover contract
 //!
@@ -58,11 +72,16 @@
 //! speculatively on two runners, so "at most once per runner, exactly
 //! once overall" holds for every op whose router survives. Only when
 //! no runner remains does a ticket fail, with a typed error.
+//!
+//! Death is not permanent: the router's reconnect thread redials dead
+//! addresses with bounded exponential backoff, and a restarted runner
+//! rejoins the fleet — its known-key set reset, its store re-probed
+//! digest-by-digest ([`FabricStats::reconnects`] counts the rejoins).
 
 pub mod router;
 pub mod runner;
 pub mod wire;
 
 pub use router::{fetch_metrics, FabricRouter, FabricStats, RouterConfig, RunnerView};
-pub use runner::{serve, serve_on, RunnerHandle};
+pub use runner::{serve, serve_on, serve_on_capped, warm_start_store, RunnerHandle, RunnerShared};
 pub use wire::{Frame, OperandKey};

@@ -40,16 +40,32 @@
 //! by the determinism contract. Only when no runner survives does a
 //! ticket fail.
 //!
+//! # Reconnect
+//!
+//! A dead runner is not forgotten: a **reconnect** thread retries each
+//! dead address with bounded exponential backoff (50 ms doubling to a
+//! 2 s cap) until the router drops. A successful reconnect wipes the
+//! connection's optimistic known-key set (the restarted process holds
+//! nothing we negotiated with its predecessor), installs the fresh
+//! socket, spawns a new reader, and **re-probes** every digest this
+//! router ever negotiated anywhere — so a runner warm-started from a
+//! registry (`--registry DIR`) is rediscovered digest-by-digest before
+//! traffic lands on it, with probe-positives counted as dedup hits.
+//! [`FabricStats::reconnects`] counts successful rejoins; a runner
+//! that stays down just keeps its connection marked dead, exactly as
+//! before.
+//!
 //! # Threading
 //!
-//! Three kinds of thread touch a connection: submitters (any caller
-//! thread), one **reader** per connection, and one **repair** thread
-//! per router. Only submitters and the repair thread ever *place* ops
-//! — placement can block on a probe round-trip, and a reader blocking
-//! on a reply only it could deliver would deadlock. Readers therefore
-//! never place: they hand orphaned ops (dead connection, remote
-//! reject) to the repair thread through a channel and go back to
-//! reading.
+//! Four kinds of thread touch a connection: submitters (any caller
+//! thread), one **reader** per connection, one **repair** thread per
+//! router, and one **reconnect** thread per router. Only submitters
+//! and the repair thread ever *place* ops — placement can block on a
+//! probe round-trip, and a reader blocking on a reply only it could
+//! deliver would deadlock. Readers therefore never place: they hand
+//! orphaned ops (dead connection, remote reject) to the repair thread
+//! through a channel and go back to reading. The reconnect thread only
+//! revives connections; it never places.
 
 use super::wire::{
     plane_wire_bytes, Frame, OperandKey, ProbeFrame, PutOperandFrame, SubmitFrame,
@@ -72,6 +88,16 @@ use std::time::{Duration, Instant};
 /// connection dead (a runner answers probes from memory; seconds of
 /// silence means the node, not the store, is the problem).
 const PROBE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// First retry delay after a runner connection dies; doubles per
+/// failed attempt up to [`RECONNECT_CAP`].
+const RECONNECT_BASE: Duration = Duration::from_millis(50);
+/// Ceiling of the reconnect backoff — a runner that stays down costs
+/// one refused `connect` every two seconds, nothing more.
+const RECONNECT_CAP: Duration = Duration::from_secs(2);
+/// Poll cadence of the reconnect thread's scan over dead connections
+/// (also bounds how long `Drop` waits for the thread to notice).
+const RECONNECT_TICK: Duration = Duration::from_millis(25);
 
 #[derive(Debug, Clone)]
 pub struct RouterConfig {
@@ -120,6 +146,7 @@ struct RouterCounters {
     retries: AtomicU64,
     failovers: AtomicU64,
     probes: AtomicU64,
+    reconnects: AtomicU64,
     dedup_hits: AtomicU64,
     dedup_misses: AtomicU64,
     plane_bytes_sent: AtomicU64,
@@ -162,6 +189,17 @@ struct RouterShared {
     rr: AtomicU64,
     mac_budget: u64,
     counters: RouterCounters,
+    /// Every operand key this router ever negotiated with *any* runner,
+    /// with its wire size — the re-probe list a reconnected runner is
+    /// walked through (see the module's reconnect section).
+    ever_sent: Mutex<HashMap<OperandKey, u64>>,
+    /// Reader handles, appendable: reconnects spawn fresh readers after
+    /// `connect` returns, so the list lives behind a lock on the shared
+    /// state rather than on the router value.
+    readers: Mutex<Vec<JoinHandle<()>>>,
+    /// Router teardown flag — tells the reconnect thread that dead
+    /// connections are now *supposed* to stay dead.
+    shutting_down: AtomicBool,
 }
 
 /// Live per-runner view for the stats surface.
@@ -191,6 +229,8 @@ pub struct FabricStats {
     pub retries: u64,
     pub failovers: u64,
     pub probes: u64,
+    /// Successful rejoins of previously-dead runner connections.
+    pub reconnects: u64,
     pub dedup_hits: u64,
     pub dedup_misses: u64,
     pub plane_bytes_sent: u64,
@@ -218,6 +258,7 @@ impl FabricStats {
             ("fabric_router_retries_total", self.retries),
             ("fabric_router_failovers_total", self.failovers),
             ("fabric_router_probes_total", self.probes),
+            ("fabric_router_reconnects_total", self.reconnects),
             ("fabric_router_dedup_hits_total", self.dedup_hits),
             ("fabric_router_dedup_misses_total", self.dedup_misses),
             ("fabric_router_plane_bytes_sent_total", self.plane_bytes_sent),
@@ -232,9 +273,9 @@ impl FabricStats {
 /// The client-side entry point: connect once, submit many.
 pub struct FabricRouter {
     shared: Arc<RouterShared>,
-    readers: Vec<JoinHandle<()>>,
     repair_tx: Option<mpsc::Sender<RepairJob>>,
     repair: Option<JoinHandle<()>>,
+    reconnect: Option<JoinHandle<()>>,
 }
 
 impl FabricRouter {
@@ -275,6 +316,9 @@ impl FabricRouter {
             rr: AtomicU64::new(0),
             mac_budget: cfg.mac_budget.max(1),
             counters: RouterCounters::default(),
+            ever_sent: Mutex::new(HashMap::new()),
+            readers: Mutex::new(Vec::new()),
+            shutting_down: AtomicBool::new(false),
         });
         let (repair_tx, repair_rx) = mpsc::channel::<RepairJob>();
         let repair = {
@@ -284,23 +328,33 @@ impl FabricRouter {
                 .spawn(move || repair_loop(shared, repair_rx))
                 .context("spawning fabric repair thread")?
         };
-        let mut readers = Vec::new();
         for conn in &shared.runners {
             let shared2 = Arc::clone(&shared);
             let conn2 = Arc::clone(conn);
             let tx = repair_tx.clone();
-            readers.push(
-                std::thread::Builder::new()
-                    .name(format!("fabric-rx-{}", conn.index))
-                    .spawn(move || reader_loop(shared2, conn2, tx))
-                    .context("spawning fabric reader thread")?,
-            );
+            let handle = std::thread::Builder::new()
+                .name(format!("fabric-rx-{}", conn.index))
+                .spawn(move || reader_loop(shared2, conn2, tx))
+                .context("spawning fabric reader thread")?;
+            shared
+                .readers
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .push(handle);
         }
+        let reconnect = {
+            let shared = Arc::clone(&shared);
+            let tx = repair_tx.clone();
+            std::thread::Builder::new()
+                .name("fabric-reconnect".into())
+                .spawn(move || reconnect_loop(shared, tx))
+                .context("spawning fabric reconnect thread")?
+        };
         Ok(Self {
             shared,
-            readers,
             repair_tx: Some(repair_tx),
             repair: Some(repair),
+            reconnect: Some(reconnect),
         })
     }
 
@@ -370,6 +424,7 @@ impl FabricRouter {
             retries: g(&c.retries),
             failovers: g(&c.failovers),
             probes: g(&c.probes),
+            reconnects: g(&c.reconnects),
             dedup_hits: g(&c.dedup_hits),
             dedup_misses: g(&c.dedup_misses),
             plane_bytes_sent: g(&c.plane_bytes_sent),
@@ -389,13 +444,28 @@ impl FabricRouter {
 
 impl Drop for FabricRouter {
     fn drop(&mut self) {
+        // Reconnect must see the flag before the connections die, and
+        // must be joined before the readers are drained (its last act
+        // may be pushing a fresh reader handle into the list).
+        self.shared.shutting_down.store(true, Ordering::SeqCst);
         for conn in &self.shared.runners {
             conn.alive.store(false, Ordering::SeqCst);
             conn.probe_cv.notify_all();
             let w = conn.writer.lock().unwrap_or_else(|p| p.into_inner());
             let _ = w.shutdown(Shutdown::Both);
         }
-        for h in self.readers.drain(..) {
+        if let Some(h) = self.reconnect.take() {
+            let _ = h.join();
+        }
+        let readers: Vec<JoinHandle<()>> = {
+            let mut guard = self
+                .shared
+                .readers
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            guard.drain(..).collect()
+        };
+        for h in readers {
             let _ = h.join();
         }
         // Readers are gone; dropping the last sender ends the repair
@@ -477,6 +547,14 @@ fn ensure_operand(
     planes: &Arc<BfpMatrix>,
 ) -> Result<()> {
     let bytes = plane_wire_bytes(planes);
+    // Remember every key we ever negotiate (with its wire size): a
+    // runner that dies and rejoins is walked through this list so its
+    // surviving or registry-warmed store is rediscovered up front.
+    shared
+        .ever_sent
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .insert(key, bytes);
     let _serialize = conn.negotiate.lock().unwrap_or_else(|p| p.into_inner());
     if conn
         .known
@@ -768,6 +846,131 @@ fn fail_runner_via(
             fail_op_with(shared, job.op, anyhow!("fabric router shut down"));
         }
     }
+}
+
+/// Background scan over dead connections with per-connection bounded
+/// exponential backoff. A connection that comes back is revived by
+/// [`try_reconnect`]; one that stays down just keeps its next-attempt
+/// timestamp pushed out (50 ms doubling to the 2 s cap).
+fn reconnect_loop(shared: Arc<RouterShared>, repair: mpsc::Sender<RepairJob>) {
+    let n = shared.runners.len();
+    let mut backoff: Vec<Duration> = vec![RECONNECT_BASE; n];
+    let mut next_try: Vec<Option<Instant>> = vec![None; n];
+    while !shared.shutting_down.load(Ordering::SeqCst) {
+        for (i, conn) in shared.runners.iter().enumerate() {
+            if conn.alive.load(Ordering::SeqCst) {
+                backoff[i] = RECONNECT_BASE;
+                next_try[i] = None;
+                continue;
+            }
+            let now = Instant::now();
+            match next_try[i] {
+                // Just observed dead: first attempt fires immediately.
+                None => next_try[i] = Some(now),
+                Some(t) if now >= t => {
+                    if try_reconnect(&shared, conn, &repair) {
+                        shared.counters.reconnects.fetch_add(1, Ordering::Relaxed);
+                        backoff[i] = RECONNECT_BASE;
+                        next_try[i] = None;
+                    } else {
+                        backoff[i] = (backoff[i] * 2).min(RECONNECT_CAP);
+                        next_try[i] = Some(Instant::now() + backoff[i]);
+                    }
+                }
+                Some(_) => {}
+            }
+        }
+        std::thread::sleep(RECONNECT_TICK);
+    }
+}
+
+/// One reconnect attempt: dial the runner's address, and on success
+/// wipe the stale negotiation state, install the fresh socket, mark the
+/// connection alive, spawn a new reader, and re-probe every digest this
+/// router ever negotiated (probe-positives count as dedup hits — the
+/// bytes a naive router would have re-shipped).
+fn try_reconnect(
+    shared: &Arc<RouterShared>,
+    conn: &Arc<RunnerConn>,
+    repair: &mpsc::Sender<RepairJob>,
+) -> bool {
+    let Ok(stream) = TcpStream::connect(&conn.addr) else {
+        return false;
+    };
+    let _ = stream.set_nodelay(true);
+    // The restarted process holds nothing its predecessor negotiated:
+    // forget the optimistic known-set and any stale probe answers
+    // before a submitter can consult them.
+    conn.known.lock().unwrap_or_else(|p| p.into_inner()).clear();
+    conn.probe_replies
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .clear();
+    *conn.writer.lock().unwrap_or_else(|p| p.into_inner()) = stream;
+    conn.alive.store(true, Ordering::SeqCst);
+    let reader = {
+        let shared2 = Arc::clone(shared);
+        let conn2 = Arc::clone(conn);
+        let tx = repair.clone();
+        std::thread::Builder::new()
+            .name(format!("fabric-rx-{}", conn.index))
+            .spawn(move || reader_loop(shared2, conn2, tx))
+    };
+    match reader {
+        Ok(h) => shared
+            .readers
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(h),
+        Err(_) => {
+            // No reader means no results: the connection is useless.
+            // A submitter may have raced an op onto it in the moment it
+            // was alive — hand any such orphan to the repair thread.
+            fail_runner_via(shared, conn, repair);
+            return false;
+        }
+    }
+    eprintln!("fabric: reconnected to runner {}", conn.addr);
+    let keys: Vec<(OperandKey, u64)> = {
+        let ever = shared.ever_sent.lock().unwrap_or_else(|p| p.into_inner());
+        ever.iter().map(|(k, b)| (*k, *b)).collect()
+    };
+    for (key, bytes) in keys {
+        if reprobe(shared, conn, key, bytes).is_err() {
+            // The fresh connection died mid-probe; the reader (or the
+            // failed send) already marked it dead — back to backoff.
+            return false;
+        }
+    }
+    true
+}
+
+/// Ask a rejoined runner whether it still (or already — registry warm
+/// start) holds `key`. A positive answer seeds the known-set and counts
+/// as a dedup hit of `bytes`; a negative answer leaves the key to the
+/// normal lazy negotiation on next use.
+fn reprobe(
+    shared: &Arc<RouterShared>,
+    conn: &Arc<RunnerConn>,
+    key: OperandKey,
+    bytes: u64,
+) -> Result<()> {
+    let _serialize = conn.negotiate.lock().unwrap_or_else(|p| p.into_inner());
+    shared.counters.probes.fetch_add(1, Ordering::Relaxed);
+    conn.send(&Frame::Probe(ProbeFrame { key }))?;
+    if wait_probe_reply(conn, key)? {
+        shared.counters.dedup_hits.fetch_add(1, Ordering::Relaxed);
+        shared
+            .counters
+            .plane_bytes_deduped
+            .fetch_add(bytes, Ordering::Relaxed);
+        conn.dedup_hits.fetch_add(1, Ordering::Relaxed);
+        conn.known
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .insert(key);
+    }
+    Ok(())
 }
 
 fn take_inflight(conn: &RunnerConn, id: u64) -> Option<InflightOp> {

@@ -18,16 +18,32 @@
 //!
 //! Weight planes arriving in [`PutOperandFrame`]s land in a
 //! digest-keyed store of **encoded** matrices shared by every
-//! connection. The store is deliberately non-evicting: the fabric's
-//! dedup contract is "each distinct weight crosses the wire at most
-//! once per runner", and an eviction would silently turn that into
-//! "...per eviction epoch". Serving fleets pin their weight set; a
-//! store cap is future work recorded in the roadmap.
+//! connection. The store is LRU-bounded by resident plane bytes
+//! (`BOOSTERS_FABRIC_STORE_MB`, default 256 MiB): past the cap the
+//! least-recently-used planes are dropped, and a later submission
+//! referencing an evicted digest simply re-triggers the
+//! [`REJECT_NEED_OPERAND`] re-negotiation below. Evictions and the
+//! resulting **re-transfers are counted separately**
+//! (`fabric_runner_operands_evicted`,
+//! `fabric_runner_operands_retransferred`) so the dedup contract stays
+//! exact and monotone: "each distinct weight crosses the wire at most
+//! once per runner *residency*", with every extra crossing visible in
+//! its own counter rather than silently eroding the dedup numbers.
 //!
 //! A submission referencing a digest the runner does not hold is
 //! rejected with [`REJECT_NEED_OPERAND`] and the digest hex as detail —
 //! the router re-sends the planes and resubmits, so a restarted runner
 //! self-heals without any session state.
+//!
+//! # Registry warm start
+//!
+//! `repro fabric-runner --registry DIR` preloads the store from a
+//! [`crate::registry`] before serving: every manifest-covered weight is
+//! mmap-loaded as already-encoded planes and installed under the same
+//! [`OperandKey`] the router derives from the shared content digest, so
+//! the probe/put negotiation of a fresh fleet becomes a near-no-op —
+//! probes hit, nothing crosses the wire, and the runner performs zero
+//! weight encodes.
 //!
 //! # Execution path
 //!
@@ -46,7 +62,7 @@ use super::wire::{
 use crate::bfp::{BfpMatrix, Mat, Quantizer};
 use crate::exec::{BfpService, ExecRuntime, GemmRequest, ServiceConfig, Ticket};
 use anyhow::{Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::BufReader;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -78,6 +94,17 @@ pub struct RunnerCounters {
     pub operand_bytes_stored: AtomicU64,
     /// Submissions bounced for a missing operand.
     pub need_operand: AtomicU64,
+    /// Planes LRU-evicted past the store's byte cap.
+    pub operands_evicted: AtomicU64,
+    /// Resident bytes released by those evictions.
+    pub operand_bytes_evicted: AtomicU64,
+    /// Installs of a digest this runner had stored before (an
+    /// eviction-forced re-transfer) — kept separate so the first-copy
+    /// dedup accounting stays exact and monotone.
+    pub operands_retransferred: AtomicU64,
+    /// Planes installed from a local registry at warm start (no wire
+    /// transfer, no encode).
+    pub operands_preloaded: AtomicU64,
 }
 
 impl RunnerCounters {
@@ -95,14 +122,57 @@ impl RunnerCounters {
                 g(&self.operand_bytes_stored),
             ),
             ("fabric_runner_need_operand_total", g(&self.need_operand)),
+            ("fabric_runner_operands_evicted", g(&self.operands_evicted)),
+            (
+                "fabric_runner_operand_bytes_evicted",
+                g(&self.operand_bytes_evicted),
+            ),
+            (
+                "fabric_runner_operands_retransferred",
+                g(&self.operands_retransferred),
+            ),
+            (
+                "fabric_runner_operands_preloaded",
+                g(&self.operands_preloaded),
+            ),
         ]
+    }
+}
+
+struct StoreEntry {
+    planes: Arc<BfpMatrix>,
+    bytes: u64,
+    last_used: u64,
+}
+
+/// The digest-keyed operand store: LRU-bounded by resident plane bytes
+/// (see module docs). `ever` remembers every key this runner has held,
+/// so an install after eviction is attributed as a re-transfer rather
+/// than diluting the first-copy dedup accounting.
+struct OperandStore {
+    entries: HashMap<OperandKey, StoreEntry>,
+    ever: HashSet<OperandKey>,
+    bytes: u64,
+    tick: u64,
+}
+
+impl OperandStore {
+    fn new() -> Self {
+        Self {
+            entries: HashMap::new(),
+            ever: HashSet::new(),
+            bytes: 0,
+            tick: 0,
+        }
     }
 }
 
 /// State shared by every connection of one runner.
 pub struct RunnerShared {
     service: BfpService,
-    store: Mutex<HashMap<OperandKey, Arc<BfpMatrix>>>,
+    store: Mutex<OperandStore>,
+    /// Resident-byte cap on the operand store (`BOOSTERS_FABRIC_STORE_MB`).
+    store_budget: u64,
     counters: RunnerCounters,
     stop: AtomicBool,
     conns: Mutex<Vec<TcpStream>>,
@@ -121,6 +191,79 @@ impl RunnerShared {
             &self.service.runtime().arena_stats(),
             &self.counters.snapshot(),
         )
+    }
+
+    /// Install encoded planes under `key`, evicting LRU entries past
+    /// the byte cap. Duplicate installs of a resident key are
+    /// idempotent (two clients can race the same probe-miss); only the
+    /// first charges the store counters. `preloaded` marks a registry
+    /// warm-start install (no wire transfer happened).
+    fn store_install(&self, key: OperandKey, planes: Arc<BfpMatrix>, preloaded: bool) {
+        let bytes = plane_wire_bytes(&planes);
+        let mut store = self.store.lock().unwrap_or_else(|e| e.into_inner());
+        store.tick += 1;
+        let tick = store.tick;
+        if store.entries.contains_key(&key) {
+            return;
+        }
+        let seen_before = !store.ever.insert(key);
+        store.entries.insert(
+            key,
+            StoreEntry {
+                planes,
+                bytes,
+                last_used: tick,
+            },
+        );
+        store.bytes += bytes;
+        if preloaded {
+            self.counters.operands_preloaded.fetch_add(1, Ordering::Relaxed);
+        } else if seen_before {
+            self.counters
+                .operands_retransferred
+                .fetch_add(1, Ordering::Relaxed);
+        }
+        self.counters.operands_stored.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .operand_bytes_stored
+            .fetch_add(bytes, Ordering::Relaxed);
+        // Evict past the cap — but never the key just installed when it
+        // is the sole resident (an oversized-but-needed operand must
+        // still serve; the next install will displace it).
+        while store.bytes > self.store_budget && store.entries.len() > 1 {
+            let victim = store
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k);
+            let Some(victim) = victim else { break };
+            if let Some(e) = store.entries.remove(&victim) {
+                store.bytes -= e.bytes;
+                self.counters.operands_evicted.fetch_add(1, Ordering::Relaxed);
+                self.counters
+                    .operand_bytes_evicted
+                    .fetch_add(e.bytes, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Fetch `key`'s planes for a submission, refreshing the LRU stamp.
+    fn store_get(&self, key: &OperandKey) -> Option<Arc<BfpMatrix>> {
+        let mut store = self.store.lock().unwrap_or_else(|e| e.into_inner());
+        store.tick += 1;
+        let tick = store.tick;
+        store.entries.get_mut(key).map(|e| {
+            e.last_used = tick;
+            Arc::clone(&e.planes)
+        })
+    }
+
+    fn store_contains(&self, key: &OperandKey) -> bool {
+        self.store
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .entries
+            .contains_key(key)
     }
 }
 
@@ -178,12 +321,24 @@ impl RunnerHandle {
 
 /// Serve the fabric protocol on an already-bound listener, executing on
 /// `rt` through a dedicated [`BfpService`]. Returns immediately; the
-/// accept loop and per-connection threads run in the background.
+/// accept loop and per-connection threads run in the background. The
+/// operand-store cap comes from the environment
+/// (`BOOSTERS_FABRIC_STORE_MB`); tests pin it via [`serve_on_capped`].
 pub fn serve_on(listener: TcpListener, rt: Arc<ExecRuntime>) -> Result<RunnerHandle> {
+    serve_on_capped(listener, rt, crate::util::fabric_store_budget())
+}
+
+/// [`serve_on`] with an explicit operand-store byte cap.
+pub fn serve_on_capped(
+    listener: TcpListener,
+    rt: Arc<ExecRuntime>,
+    store_budget: u64,
+) -> Result<RunnerHandle> {
     let addr = listener.local_addr().context("runner listener address")?;
     let shared = Arc::new(RunnerShared {
         service: BfpService::new(rt, ServiceConfig::default()),
-        store: Mutex::new(HashMap::new()),
+        store: Mutex::new(OperandStore::new()),
+        store_budget: store_budget.max(1),
         counters: RunnerCounters::default(),
         stop: AtomicBool::new(false),
         conns: Mutex::new(Vec::new()),
@@ -228,18 +383,45 @@ pub fn serve_on(listener: TcpListener, rt: Arc<ExecRuntime>) -> Result<RunnerHan
     })
 }
 
-/// Binary mode (`repro fabric-runner --listen ADDR`): bind, announce
-/// the bound address on stdout (the line serve-sim's parent process
-/// parses — keep its shape stable), and serve on the global runtime
-/// until killed.
-pub fn serve(listen: &str) -> Result<()> {
+/// Preload a runner's operand store from every manifest of a local
+/// [`crate::registry::Registry`]: planes are mmap-loaded already
+/// encoded and installed under the [`OperandKey`] the router derives
+/// from the shared content digest — no wire transfer, no encode.
+/// Returns the number of planes installed.
+pub fn warm_start_store(shared: &RunnerShared, dir: &std::path::Path) -> Result<usize> {
+    let reg = crate::registry::Registry::open(dir)?;
+    let mut installed = 0usize;
+    for name in reg.manifest_names()? {
+        for (entry, planes) in reg.pull(&name)? {
+            let key = OperandKey::new(entry.digest, entry.fmt);
+            if !shared.store_contains(&key) {
+                shared.store_install(key, planes, true);
+                installed += 1;
+            }
+        }
+    }
+    Ok(installed)
+}
+
+/// Binary mode (`repro fabric-runner --listen ADDR [--registry DIR]`):
+/// bind, optionally warm-start the operand store from a local registry,
+/// announce the bound address on stdout (the line serve-sim's parent
+/// process parses — keep its shape stable), and serve on the global
+/// runtime until killed.
+pub fn serve(listen: &str, registry: Option<&std::path::Path>) -> Result<()> {
     let listener =
         TcpListener::bind(listen).with_context(|| format!("binding fabric runner to {listen}"))?;
     let addr = listener.local_addr()?;
+    let handle = serve_on(listener, crate::exec::global_arc())?;
+    if let Some(dir) = registry {
+        let installed = warm_start_store(handle.shared(), dir)
+            .with_context(|| format!("warm-starting from registry {}", dir.display()))?;
+        eprintln!("fabric-runner warm-started {installed} operand(s) from {}", dir.display());
+    }
     println!("fabric-runner listening on {addr}");
     use std::io::Write as _;
     let _ = std::io::stdout().flush();
-    serve_on(listener, crate::exec::global_arc())?.wait();
+    handle.wait();
     Ok(())
 }
 
@@ -293,11 +475,7 @@ fn dispatch(
     match frame {
         Frame::Probe(p) => {
             shared.counters.probes.fetch_add(1, Ordering::Relaxed);
-            let present = shared
-                .store
-                .lock()
-                .unwrap_or_else(|e| e.into_inner())
-                .contains_key(&p.key);
+            let present = shared.store_contains(&p.key);
             if present {
                 shared.counters.probe_hits.fetch_add(1, Ordering::Relaxed);
             }
@@ -310,17 +488,7 @@ fn dispatch(
             )
         }
         Frame::PutOperand(put) => {
-            let bytes = plane_wire_bytes(&put.planes);
-            let mut store = shared.store.lock().unwrap_or_else(|e| e.into_inner());
-            // Duplicate installs are idempotent (two clients can race
-            // the same probe-miss); only the first charges the store.
-            if store.insert(put.key, Arc::new(put.planes)).is_none() {
-                shared.counters.operands_stored.fetch_add(1, Ordering::Relaxed);
-                shared
-                    .counters
-                    .operand_bytes_stored
-                    .fetch_add(bytes, Ordering::Relaxed);
-            }
+            shared.store_install(put.key, Arc::new(put.planes), false);
             Ok(())
         }
         Frame::Submit(s) => {
@@ -351,13 +519,7 @@ fn dispatch(
 /// reject frame to send instead.
 fn admit(shared: &Arc<RunnerShared>, s: &SubmitFrame) -> Result<Ticket, RejectFrame> {
     let key = OperandKey::new(s.w_digest, s.fmt);
-    let Some(w_planes) = shared
-        .store
-        .lock()
-        .unwrap_or_else(|e| e.into_inner())
-        .get(&key)
-        .cloned()
-    else {
+    let Some(w_planes) = shared.store_get(&key) else {
         shared.counters.need_operand.fetch_add(1, Ordering::Relaxed);
         return Err(RejectFrame {
             id: s.id,

@@ -69,6 +69,17 @@
 //!   weight per runner), and failing in-flight ops over to surviving
 //!   runners bit-identically (ops are pure). `repro serve-sim
 //!   --fabric N` drives a local fleet and emits `BENCH_fabric.json`.
+//! * [`registry`] — the **content-addressed encoded-weight registry**:
+//!   checkpoints as digest-addressed blobs of already-encoded
+//!   [`bfp::BfpMatrix`] planes under a versioned JSON manifest, keyed
+//!   by the same [`util::digest`] fingerprint the operand cache and
+//!   the fabric speak. `repro registry push` dedups blobs by
+//!   construction (the mixed-mantissa schedule leaves most layers'
+//!   planes unchanged between epochs); warm starts mmap plane bytes
+//!   straight into the operand cache / fabric operand store with zero
+//!   encode operations and zero f32 touches. `repro serve-sim
+//!   --registry DIR` benchmarks cold vs warm start
+//!   (`BENCH_registry.json`).
 //! * [`data`] — synthetic dataset substrates standing in for CIFAR and
 //!   IWSLT (DESIGN.md §3 documents the substitutions).
 //! * [`metrics`] — accuracy/loss tracking, BLEU-4, Wasserstein-1, R².
@@ -88,6 +99,7 @@ pub mod experiments;
 pub mod fabric;
 pub mod hw_model;
 pub mod metrics;
+pub mod registry;
 pub mod report;
 pub mod runtime;
 pub mod util;

@@ -46,8 +46,8 @@ SUBCOMMANDS
             [--verify] [--async]         execution service; --async uses
             [--rps R] [--deadline-ms D]  open-loop BfpService admission
             [--json PATH] [--fabric N]   (Poisson arrivals, deadlines,
-                                         miss rate, queue depth) and adds
-                                         per-stage latency-breakdown rows
+            [--registry DIR]             miss rate, queue depth) and adds
+            [--epochs N]                 per-stage latency-breakdown rows
                                          (queue wait / encode / gemm /
                                          decode at p50/p95/p99); --json
                                          (or $REPRO_BENCH_JSON) writes a
@@ -56,12 +56,33 @@ SUBCOMMANDS
                                          through a router over N local
                                          runner processes (killing one
                                          mid-run to prove failover) and
-                                         writes BENCH_fabric.json instead
+                                         writes BENCH_fabric.json instead;
+                                         --registry DIR pushes --epochs
+                                         synthetic epochs into an
+                                         encoded-weight registry, then
+                                         benchmarks cold (fresh encode)
+                                         vs warm (mmap-load, zero-encode)
+                                         start and writes
+                                         BENCH_registry.json
+  registry push  --dir DIR [--name N]    content-addressed encoded-weight
+            [--checkpoint PATH.ck]       registry: push encodes layers
+            [--mantissa M] [--block B]   (from a checkpoint, or a synthetic
+            [--weights W] [--seed S]     working set) into digest-keyed
+  registry pull  --dir DIR [--name N]    blobs under a JSON manifest —
+  registry ls    --dir DIR               identical blobs dedup by
+  registry gc    --dir DIR               construction; pull loads + bit-
+                                         verifies; ls lists manifests;
+                                         gc removes unreachable blobs
   fabric-runner [--listen HOST:PORT]     host the execution service on a
-                                         TCP socket for fabric routers
+                [--registry DIR]         TCP socket for fabric routers
                                          (default $BOOSTERS_FABRIC_LISTEN
                                          or 127.0.0.1:0; the bound
-                                         address is printed on stdout)
+                                         address is printed on stdout);
+                                         --registry warm-starts the
+                                         operand store from a local
+                                         registry (zero encodes, zero
+                                         wire transfers for covered
+                                         weights)
   metrics [--connect HOST:PORT]          Prometheus text exposition of
                                          the exec counters — local
                                          process by default, a remote
@@ -76,6 +97,7 @@ Env knobs: BOOSTERS_KERNEL=auto|scalar|autovec|avx2|avx512|neon (GEMM backend),
   BOOSTERS_GEMM_THREADS=N, BOOSTERS_CACHE_ENTRIES=N, BOOSTERS_CACHE_MB=N,
   BOOSTERS_FABRIC_RUNNERS=N (serve-sim --fabric fleet size),
   BOOSTERS_FABRIC_MAC_BUDGET=N (per-runner outstanding-MAC admission cap),
+  BOOSTERS_FABRIC_STORE_MB=N (runner operand-store LRU cap, MiB),
   BOOSTERS_FABRIC_LISTEN=HOST:PORT (fabric-runner default bind),
   BOOSTERS_FABRIC_CONNECT=H:P,H:P (attach to an existing fleet instead
   of spawning one)
@@ -236,7 +258,16 @@ fn main() -> Result<()> {
                 .get("json")
                 .map(std::path::PathBuf::from)
                 .or_else(|| std::env::var_os("REPRO_BENCH_JSON").map(std::path::PathBuf::from));
-            if args.has_flag("fabric") || args.get("fabric").is_some() {
+            if let Some(dir) = args.get("registry") {
+                let epochs = args.get_parse_or::<usize>("epochs", 3)?;
+                let report = experiments::serve_sim::run_registry(
+                    &boosters::exec::global_arc(),
+                    &cfg,
+                    std::path::Path::new(dir),
+                    epochs,
+                )?;
+                report.table.print();
+            } else if args.has_flag("fabric") || args.get("fabric").is_some() {
                 let runners = args
                     .get_parse::<usize>("fabric")?
                     .unwrap_or_else(boosters::util::fabric_runners);
@@ -259,8 +290,10 @@ fn main() -> Result<()> {
                 .map(str::to_string)
                 .or_else(boosters::util::fabric_listen)
                 .unwrap_or_else(|| "127.0.0.1:0".to_string());
-            boosters::fabric::serve(&listen)?;
+            let registry = args.get("registry").map(std::path::PathBuf::from);
+            boosters::fabric::serve(&listen, registry.as_deref())?;
         }
+        Some("registry") => registry_cli(&args)?,
         Some("metrics") => {
             let text = match args.get("connect") {
                 Some(addr) => boosters::fabric::fetch_metrics(addr)?,
@@ -276,6 +309,110 @@ fn main() -> Result<()> {
         Some("fig6") => experiments::figs::fig6()?.print(),
         Some("density") => experiments::figs::density()?.print(),
         Some(other) => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
+    }
+    Ok(())
+}
+
+/// `repro registry {push,pull,ls,gc}` — operate a content-addressed
+/// encoded-weight registry on disk. Pure host-side; no engine needed.
+fn registry_cli(args: &Args) -> Result<()> {
+    use boosters::bfp::{BlockFormat, Mat};
+    use boosters::registry::{PushLayer, Registry};
+
+    let dir = args.get_or("dir", "results/registry");
+    let reg = Registry::open(std::path::Path::new(&dir))?;
+    match args.verb.as_deref() {
+        Some("push") => {
+            let name = args.get_or("name", "latest");
+            let m = args.get_parse_or::<u32>("mantissa", 4)?;
+            let b = args.get_parse_or::<usize>("block", 64)?;
+            let fmt = BlockFormat::new(m, b)?;
+            let (manifest, stats) = if let Some(ck) = args.get("checkpoint") {
+                let ck = boosters::checkpoint::Checkpoint::load(std::path::Path::new(ck))?;
+                reg.import_checkpoint(&ck, &name, |_| fmt)?
+            } else {
+                // No checkpoint: push a deterministic synthetic working
+                // set (the serve-sim shapes) — enough to exercise dedup
+                // and warm starts without a trained model on hand.
+                let weights = args.get_parse_or::<usize>("weights", 6)?;
+                let seed = args.get_parse_or::<u64>("seed", 42)?;
+                let shapes = [(64usize, 48usize), (128, 96), (192, 64), (256, 128)];
+                let mut rng = boosters::util::Rng::new(seed);
+                let mats: Vec<(String, Mat)> = (0..weights.max(1))
+                    .map(|i| {
+                        let (k, n) = shapes[i % shapes.len()];
+                        let data = (0..k * n).map(|_| rng.normal_scaled(1.0)).collect();
+                        Mat::new(k, n, data).map(|m| (format!("layer{i:02}"), m))
+                    })
+                    .collect::<Result<_>>()?;
+                let layers: Vec<PushLayer<'_>> = mats
+                    .iter()
+                    .map(|(name, w)| PushLayer {
+                        name,
+                        weight: w,
+                        fmt,
+                    })
+                    .collect();
+                reg.push(&name, &layers, &Default::default())?
+            };
+            println!(
+                "pushed manifest {:?}: {} layer(s), {} blob(s) written ({} B), \
+                 {} deduped ({} B avoided)",
+                manifest.name,
+                stats.layers,
+                stats.blobs_written,
+                stats.bytes_written,
+                stats.blobs_deduped,
+                stats.bytes_deduped
+            );
+        }
+        Some("pull") => {
+            let name = args.get_or("name", "latest");
+            let layers = reg.pull(&name)?;
+            println!("manifest {name:?}: {} layer(s)", layers.len());
+            for (entry, planes) in &layers {
+                // `pull` validated header, checksum, and digest on load.
+                let label = entry.layout.label();
+                println!(
+                    "  {:16} {} m{}b{} {} {}x{} (encoded {}x{})",
+                    entry.name,
+                    entry.digest.to_hex(),
+                    entry.fmt.mantissa_bits,
+                    entry.fmt.block_size,
+                    label,
+                    entry.rows,
+                    entry.cols,
+                    planes.rows,
+                    planes.cols
+                );
+            }
+        }
+        Some("ls") => {
+            let names = reg.manifest_names()?;
+            let (blobs, bytes) = reg.blob_stats()?;
+            println!(
+                "{} manifest(s), {} blob(s), {} blob byte(s) at {}",
+                names.len(),
+                blobs,
+                bytes,
+                reg.root().display()
+            );
+            for name in names {
+                let m = reg.manifest(&name)?;
+                let total: u64 = m.layers.iter().map(|l| l.blob_bytes).sum();
+                println!("  {:24} {} layer(s), {} blob B", m.name, m.layers.len(), total);
+            }
+        }
+        Some("gc") => {
+            let s = reg.gc()?;
+            println!(
+                "gc: kept {} blob(s), removed {} ({} B reclaimed)",
+                s.blobs_kept, s.blobs_removed, s.bytes_removed
+            );
+        }
+        other => bail!(
+            "registry needs a verb: push | pull | ls | gc (got {other:?})\n\n{USAGE}"
+        ),
     }
     Ok(())
 }

@@ -1,0 +1,249 @@
+//! Read-only file mapping for the registry's zero-copy blob loads —
+//! **libc-free**: on Linux x86_64/aarch64 the `mmap`/`munmap` syscalls
+//! are issued directly via inline assembly (the image links no libc
+//! crate), so blob payloads are served straight out of the page cache
+//! with no userspace read copy. Everywhere else — and for files whose
+//! reported length is zero, which is how `/proc`-style virtual files
+//! present themselves and why they cannot be mapped — the shim falls
+//! back to one pre-sized buffered read into an owned buffer. Either
+//! way the caller sees a `&[u8]` over the whole file.
+
+use std::fs::File;
+use std::io::{self, Read};
+use std::ops::Deref;
+use std::path::Path;
+
+#[cfg(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+mod sys {
+    //! The two raw syscalls the shim needs. Register conventions:
+    //! x86_64 passes the number in `rax` and args in
+    //! `rdi/rsi/rdx/r10/r8/r9` (the kernel clobbers `rcx`/`r11`);
+    //! aarch64 passes the number in `x8` and args in `x0..x5`. Both
+    //! return in the first register, with errors as `-errno` in
+    //! `[-4095, -1]`.
+
+    const PROT_READ: usize = 1;
+    const MAP_PRIVATE: usize = 2;
+
+    fn ok(ret: isize) -> Option<*const u8> {
+        if (-4095..0).contains(&ret) {
+            None
+        } else {
+            Some(ret as *const u8)
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    pub unsafe fn mmap_readonly(fd: i32, len: usize) -> Option<*const u8> {
+        let ret: isize;
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") 9isize => ret, // __NR_mmap
+            in("rdi") 0usize,
+            in("rsi") len,
+            in("rdx") PROT_READ,
+            in("r10") MAP_PRIVATE,
+            in("r8") fd as isize,
+            in("r9") 0usize,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+        ok(ret)
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    pub unsafe fn munmap(ptr: *const u8, len: usize) {
+        let _ret: isize;
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") 11isize => _ret, // __NR_munmap
+            in("rdi") ptr,
+            in("rsi") len,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    pub unsafe fn mmap_readonly(fd: i32, len: usize) -> Option<*const u8> {
+        let ret: isize;
+        core::arch::asm!(
+            "svc 0",
+            in("x8") 222usize, // __NR_mmap
+            inlateout("x0") 0usize => ret,
+            in("x1") len,
+            in("x2") PROT_READ,
+            in("x3") MAP_PRIVATE,
+            in("x4") fd as isize,
+            in("x5") 0usize,
+            options(nostack)
+        );
+        ok(ret)
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    pub unsafe fn munmap(ptr: *const u8, len: usize) {
+        let _ret: isize;
+        core::arch::asm!(
+            "svc 0",
+            in("x8") 215usize, // __NR_munmap
+            inlateout("x0") ptr => _ret,
+            in("x1") len,
+            options(nostack)
+        );
+    }
+}
+
+enum Backing {
+    /// A live read-only mapping; unmapped on drop.
+    #[cfg(all(
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))]
+    Mapped { ptr: *const u8, len: usize },
+    /// The buffered-read fallback (non-Linux targets, zero-length
+    /// virtual files, or a refused mapping).
+    Owned(Vec<u8>),
+}
+
+/// The whole contents of one file, mapped when the platform allows it
+/// and owned otherwise. Dereferences to `&[u8]` either way.
+pub struct MappedFile {
+    backing: Backing,
+}
+
+// SAFETY: the mapping is private and read-only; the raw pointer is
+// owned by this struct for its whole lifetime and only ever read
+// through the `Deref` slice, so moving or sharing the handle across
+// threads cannot race anything.
+unsafe impl Send for MappedFile {}
+unsafe impl Sync for MappedFile {}
+
+impl MappedFile {
+    /// True when the bytes are served by a live mapping (no userspace
+    /// read copy was made) — surfaced so load stats can attribute the
+    /// zero-copy path.
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(all(
+                target_os = "linux",
+                any(target_arch = "x86_64", target_arch = "aarch64")
+            ))]
+            Backing::Mapped { .. } => true,
+            Backing::Owned(_) => false,
+        }
+    }
+}
+
+impl Deref for MappedFile {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(all(
+                target_os = "linux",
+                any(target_arch = "x86_64", target_arch = "aarch64")
+            ))]
+            // SAFETY: `ptr` is a live PROT_READ mapping of exactly
+            // `len` bytes, valid until `munmap` in Drop.
+            Backing::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Backing::Owned(v) => v,
+        }
+    }
+}
+
+impl Drop for MappedFile {
+    fn drop(&mut self) {
+        #[cfg(all(
+            target_os = "linux",
+            any(target_arch = "x86_64", target_arch = "aarch64")
+        ))]
+        if let Backing::Mapped { ptr, len } = self.backing {
+            // SAFETY: exactly the region mmap_readonly returned.
+            unsafe { sys::munmap(ptr, len) };
+        }
+    }
+}
+
+/// Map `path` read-only, falling back to a single pre-sized read when
+/// mapping is unavailable or refused (see module docs).
+pub fn map_readonly(path: &Path) -> io::Result<MappedFile> {
+    let mut file = File::open(path)?;
+    let meta_len = file.metadata()?.len();
+    #[cfg(all(
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))]
+    {
+        use std::os::unix::io::AsRawFd;
+        if meta_len > 0 && meta_len <= usize::MAX as u64 {
+            let len = meta_len as usize;
+            // SAFETY: fd is open for reading; a failed map returns
+            // None and drops through to the read fallback.
+            if let Some(ptr) = unsafe { sys::mmap_readonly(file.as_raw_fd(), len) } {
+                return Ok(MappedFile {
+                    backing: Backing::Mapped { ptr, len },
+                });
+            }
+        }
+    }
+    let mut buf = Vec::with_capacity(meta_len.min(isize::MAX as u64) as usize);
+    file.read_to_end(&mut buf)?;
+    Ok(MappedFile {
+        backing: Backing::Owned(buf),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        std::env::temp_dir().join(format!(
+            "boosters-mmap-{}-{}-{tag}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ))
+    }
+
+    #[test]
+    fn mapped_bytes_match_a_plain_read() {
+        let path = temp_path("roundtrip");
+        let payload: Vec<u8> = (0..100_000u32).map(|i| (i * 31 + 7) as u8).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let mapped = map_readonly(&path).unwrap();
+        assert_eq!(&*mapped, &payload[..]);
+        // On Linux CI this exercises the real syscall mapping; the
+        // fallback path still satisfies the byte-equality contract.
+        #[cfg(all(
+            target_os = "linux",
+            any(target_arch = "x86_64", target_arch = "aarch64")
+        ))]
+        assert!(mapped.is_mapped(), "nonempty regular file should map");
+        drop(mapped);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_file_takes_the_read_fallback() {
+        let path = temp_path("empty");
+        std::fs::write(&path, b"").unwrap();
+        let mapped = map_readonly(&path).unwrap();
+        assert!(!mapped.is_mapped());
+        assert!(mapped.is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_a_plain_io_error() {
+        let err = map_readonly(&temp_path("missing")).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::NotFound);
+    }
+}

@@ -1,0 +1,1092 @@
+//! Content-addressed registry for **encoded** weights: a digest-blob
+//! store that makes checkpoints shareable by identity and makes warm
+//! starts skip the encoder entirely.
+//!
+//! The paper's mixed-mantissa schedule (4-bit body, 6-bit first/last
+//! layers and last epoch) leaves most layers' encoded planes unchanged
+//! between consecutive checkpoints at a given width. The registry
+//! exploits that: every blob is keyed by the 128-bit
+//! [`crate::util::digest::Digest`] of the **original f32 tensor** —
+//! the same fingerprint the [`crate::exec::OperandCache`] and the
+//! fabric operand store use — so `push` stores only blobs whose
+//! digest+format is unseen, and a warm start republishes stored planes
+//! under the exact [`CacheKey`]/`OperandKey` the hot path will ask for.
+//!
+//! # On-disk layout
+//!
+//! ```text
+//! <root>/
+//!   blobs/<digest-hex>-m<mbits>b<block>.bfpb   one encoded BfpMatrix
+//!   manifests/<name>.json                      one named checkpoint
+//! ```
+//!
+//! The digest identifies *content*; the `-m<mbits>b<block>` suffix
+//! distinguishes encodings of the same tensor under different
+//! [`BlockFormat`]s (the mixed-mantissa schedule stores a layer at
+//! 4-bit and 6-bit side by side).
+//!
+//! # Blob format (`.bfpb`, version 1)
+//!
+//! A fixed 72-byte self-describing header, then the raw planes:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic "BFPR"
+//!      4     2  version (u16 LE) = 1
+//!      6     1  plane-layout byte: 1 = i4x2, 2 = i8, 3 = i16
+//!                 (same mapping the fabric wire protocol uses)
+//!      7     1  flags: bit 0 = transposed encode
+//!      8     4  mantissa bits (u32 LE)
+//!     12     4  block size (u32 LE)
+//!     16     8  encoded rows (u64 LE)
+//!     24     8  encoded cols (u64 LE)
+//!     32     8  mantissa-plane bytes (u64 LE)
+//!     40     8  shared-exponent count (u64 LE)
+//!     48     8  FNV-1a 64 over the payload (u64 LE)
+//!     56    16  f32-content digest (Digest::to_le_bytes)
+//!     72     -  payload: mantissa plane bytes, then exponents (i32 LE)
+//! ```
+//!
+//! The payload is the [`BfpMatrix`] storage verbatim — loading slices
+//! the plane bytes straight out of a read-only file mapping (see
+//! [`mmap`]) with no decode, re-quantization, or f32 round-trip, which
+//! is what makes the bit-identity contract structural: a loaded plane
+//! is byte-identical to a fresh [`BfpMatrix::encode_transposed`] of
+//! the same f32 tensor under the same format, and tests assert it via
+//! `PartialEq` on the whole matrix.
+//!
+//! # Manifest format (`boosters-registry-v1`)
+//!
+//! ```json
+//! {"schema": "boosters-registry-v1", "name": "epoch3",
+//!  "layers": [{"name": "fc1", "digest": "<32 hex>", "m_bits": 4,
+//!              "block": 64, "layout": "i4x2", "rows": 128, "cols": 96,
+//!              "transposed": true, "blob_bytes": 6192}],
+//!  "meta": {"note": "..."}}
+//! ```
+//!
+//! `rows`/`cols` are the **f32 source** shape (what the scheduler sees);
+//! the blob header carries the encoded shape, and the loader
+//! cross-checks the two (a transposed encode of a `k x n` weight is an
+//! `n x k` matrix of planes).
+//!
+//! Failure handling is typed ([`RegistryError`]): corrupt blobs and
+//! truncated manifests are rejected with the offending path and a
+//! detail string, never a panic or a silently wrong matrix. Writes go
+//! through a temp file + rename so a crashed push can never leave a
+//! half-written blob under a live digest; `gc` drops unreachable blobs
+//! and stale temp files but never a manifest-reachable blob.
+
+pub mod mmap;
+
+use crate::bfp::{BfpMatrix, BlockFormat, Mat, MantissaPlane, PlaneLayout, Quantizer};
+use crate::checkpoint::Checkpoint;
+use crate::exec::{CacheKey, OperandCache};
+use crate::util::digest::{content_fingerprint, Digest};
+use crate::util::Json;
+use std::collections::{BTreeMap, HashSet};
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const BLOB_MAGIC: &[u8; 4] = b"BFPR";
+const BLOB_VERSION: u16 = 1;
+const HEADER_LEN: usize = 72;
+const FLAG_TRANSPOSED: u8 = 1;
+const MANIFEST_SCHEMA: &str = "boosters-registry-v1";
+
+/// Registry failures, typed so callers (and tests) can tell a corrupt
+/// artifact from a missing one from plain I/O.
+#[derive(Debug)]
+pub enum RegistryError {
+    /// Filesystem-level failure on `path`.
+    Io {
+        path: PathBuf,
+        source: std::io::Error,
+    },
+    /// A blob exists but fails structural validation (bad magic,
+    /// checksum mismatch, shape/plane-length inconsistency, ...).
+    CorruptBlob { path: PathBuf, detail: String },
+    /// A manifest is unreadable, truncated, or schema-invalid.
+    BadManifest { path: PathBuf, detail: String },
+    /// A manifest references a blob the store does not hold.
+    MissingBlob {
+        digest: Digest,
+        m_bits: u32,
+        block: usize,
+    },
+    /// Encoding a pushed layer failed (bad shape / format).
+    Encode { layer: String, detail: String },
+}
+
+impl fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Io { path, source } => write!(f, "registry io on {}: {source}", path.display()),
+            Self::CorruptBlob { path, detail } => {
+                write!(f, "corrupt blob {}: {detail}", path.display())
+            }
+            Self::BadManifest { path, detail } => {
+                write!(f, "bad manifest {}: {detail}", path.display())
+            }
+            Self::MissingBlob {
+                digest,
+                m_bits,
+                block,
+            } => write!(
+                f,
+                "missing blob {} (m={m_bits} b={block})",
+                digest.to_hex()
+            ),
+            Self::Encode { layer, detail } => write!(f, "encoding layer {layer:?}: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+pub type Result<T> = std::result::Result<T, RegistryError>;
+
+fn io_err(path: &Path, source: std::io::Error) -> RegistryError {
+    RegistryError::Io {
+        path: path.to_path_buf(),
+        source,
+    }
+}
+
+/// Plane-layout wire byte — the same mapping the fabric's
+/// `wire::layout_byte` uses (kept in lockstep by
+/// `tests/property_registry.rs`); a blob written here is probed and
+/// transferred by the fabric under the same identity.
+fn layout_byte(layout: PlaneLayout) -> u8 {
+    match layout {
+        PlaneLayout::I4Packed => 1,
+        PlaneLayout::I8 => 2,
+        PlaneLayout::I16 => 3,
+    }
+}
+
+fn layout_from_byte(b: u8) -> Option<PlaneLayout> {
+    match b {
+        1 => Some(PlaneLayout::I4Packed),
+        2 => Some(PlaneLayout::I8),
+        3 => Some(PlaneLayout::I16),
+        _ => None,
+    }
+}
+
+fn layout_from_label(label: &str) -> Option<PlaneLayout> {
+    [PlaneLayout::I4Packed, PlaneLayout::I8, PlaneLayout::I16]
+        .into_iter()
+        .find(|l| l.label() == label)
+}
+
+fn digest_from_hex(hex: &str) -> Option<Digest> {
+    if hex.len() != 32 {
+        return None;
+    }
+    let hi = u64::from_str_radix(&hex[..16], 16).ok()?;
+    let lo = u64::from_str_radix(&hex[16..], 16).ok()?;
+    Some(Digest(hi, lo))
+}
+
+/// FNV-1a 64 payload checksum (same constants as the content
+/// fingerprint's mixing prime; independent of it in coverage — this
+/// one is over the *encoded* bytes and catches at-rest corruption).
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Manifest names become file names; keep them to one path component.
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && !name.starts_with('.')
+        && !name.contains(['/', '\\'])
+        && !name.contains("..")
+}
+
+/// One layer of a pushed checkpoint: name, f32 weight, target format.
+pub struct PushLayer<'a> {
+    pub name: &'a str,
+    pub weight: &'a Mat,
+    pub fmt: BlockFormat,
+}
+
+/// One manifest row: everything needed to address the blob and to
+/// rebuild the exact cache/operand key the hot path will look up.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerEntry {
+    pub name: String,
+    /// Fingerprint of the f32 source tensor — the blob key, and the
+    /// `content` field of the operand-cache key.
+    pub digest: Digest,
+    pub fmt: BlockFormat,
+    pub layout: PlaneLayout,
+    /// f32 source shape (`k x n` as the scheduler sees the weight).
+    pub rows: usize,
+    pub cols: usize,
+    pub transposed: bool,
+    pub blob_bytes: u64,
+}
+
+impl LayerEntry {
+    /// The exact [`OperandCache`] key `encode_transposed_cached` would
+    /// compute for this weight — warm starts install under it.
+    pub fn cache_key(&self) -> CacheKey {
+        CacheKey {
+            content: self.digest,
+            m_bits: self.fmt.mantissa_bits,
+            block: self.fmt.block_size,
+            layout: self.layout,
+            transposed: self.transposed,
+        }
+    }
+}
+
+/// A named checkpoint: ordered layers plus free-form metadata.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub layers: Vec<LayerEntry>,
+    pub meta: BTreeMap<String, String>,
+}
+
+/// Outcome of a [`Registry::push`]: dedup is observable, not inferred.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PushStats {
+    pub layers: usize,
+    pub blobs_written: usize,
+    pub blobs_deduped: usize,
+    pub bytes_written: u64,
+    pub bytes_deduped: u64,
+}
+
+impl PushStats {
+    /// Fraction of pushed layers satisfied by an existing blob.
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.layers == 0 {
+            0.0
+        } else {
+            self.blobs_deduped as f64 / self.layers as f64
+        }
+    }
+}
+
+/// Outcome of a [`Registry::gc`] sweep.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GcStats {
+    pub blobs_kept: usize,
+    pub blobs_removed: usize,
+    pub bytes_removed: u64,
+}
+
+/// Outcome of a [`Registry::warm_cache`] preload.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WarmStats {
+    /// Planes published into the operand cache.
+    pub installed: usize,
+    /// Resident plane + exponent bytes installed.
+    pub plane_bytes: u64,
+    /// Loads served by a live file mapping (vs the read fallback).
+    pub mapped_loads: usize,
+}
+
+/// A digest-addressed store of encoded weights under named manifests.
+pub struct Registry {
+    root: PathBuf,
+}
+
+impl Registry {
+    /// Open (creating directories as needed) a registry rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        for sub in ["blobs", "manifests"] {
+            let dir = root.join(sub);
+            std::fs::create_dir_all(&dir).map_err(|e| io_err(&dir, e))?;
+        }
+        Ok(Self { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn blobs_dir(&self) -> PathBuf {
+        self.root.join("blobs")
+    }
+
+    fn manifests_dir(&self) -> PathBuf {
+        self.root.join("manifests")
+    }
+
+    fn blob_file_name(digest: Digest, fmt: BlockFormat) -> String {
+        format!(
+            "{}-m{}b{}.bfpb",
+            digest.to_hex(),
+            fmt.mantissa_bits,
+            fmt.block_size
+        )
+    }
+
+    pub fn blob_path(&self, digest: Digest, fmt: BlockFormat) -> PathBuf {
+        self.blobs_dir().join(Self::blob_file_name(digest, fmt))
+    }
+
+    pub fn has_blob(&self, digest: Digest, fmt: BlockFormat) -> bool {
+        self.blob_path(digest, fmt).is_file()
+    }
+
+    fn manifest_path(&self, name: &str) -> PathBuf {
+        self.manifests_dir().join(format!("{name}.json"))
+    }
+
+    /// Push one named checkpoint: encode-and-store every layer whose
+    /// (digest, format) blob is unseen, reuse the rest byte-for-byte,
+    /// then write the manifest. Dedup is by construction — a blob's
+    /// path is a pure function of content digest and format.
+    pub fn push(
+        &self,
+        name: &str,
+        layers: &[PushLayer<'_>],
+        meta: &BTreeMap<String, String>,
+    ) -> Result<(Manifest, PushStats)> {
+        if !valid_name(name) {
+            return Err(RegistryError::BadManifest {
+                path: self.manifests_dir().join(name),
+                detail: "manifest name must be a single non-hidden path component".into(),
+            });
+        }
+        let mut entries = Vec::with_capacity(layers.len());
+        let mut stats = PushStats {
+            layers: layers.len(),
+            ..Default::default()
+        };
+        for layer in layers {
+            let w = layer.weight;
+            let digest = content_fingerprint(&w.data, w.rows, w.cols);
+            let path = self.blob_path(digest, layer.fmt);
+            let blob_bytes = if path.is_file() {
+                stats.blobs_deduped += 1;
+                let len = std::fs::metadata(&path).map_err(|e| io_err(&path, e))?.len();
+                stats.bytes_deduped += len;
+                len
+            } else {
+                let encoded = BfpMatrix::encode_transposed(
+                    w,
+                    layer.fmt,
+                    Quantizer::nearest(layer.fmt.mantissa_bits),
+                )
+                .map_err(|e| RegistryError::Encode {
+                    layer: layer.name.to_string(),
+                    detail: e.to_string(),
+                })?;
+                let bytes = encode_blob(&encoded, digest);
+                write_atomic(&path, &bytes)?;
+                stats.blobs_written += 1;
+                stats.bytes_written += bytes.len() as u64;
+                bytes.len() as u64
+            };
+            entries.push(LayerEntry {
+                name: layer.name.to_string(),
+                digest,
+                fmt: layer.fmt,
+                layout: layer.fmt.plane_layout(),
+                rows: w.rows,
+                cols: w.cols,
+                transposed: true,
+                blob_bytes,
+            });
+        }
+        let manifest = Manifest {
+            name: name.to_string(),
+            layers: entries,
+            meta: meta.clone(),
+        };
+        write_atomic(
+            &self.manifest_path(name),
+            render_manifest(&manifest).as_bytes(),
+        )?;
+        Ok((manifest, stats))
+    }
+
+    /// Import a legacy f32 [`Checkpoint`] container: every tensor
+    /// becomes a layer encoded under `fmt_for(name)`. This subsumes the
+    /// f32 container as the registry's ingest path — the registry is
+    /// the at-rest format, the checkpoint the interchange one.
+    pub fn import_checkpoint(
+        &self,
+        ck: &Checkpoint,
+        name: &str,
+        fmt_for: impl Fn(&str) -> BlockFormat,
+    ) -> Result<(Manifest, PushStats)> {
+        let mats = ck.layer_mats().map_err(|e| RegistryError::Encode {
+            layer: name.to_string(),
+            detail: e.to_string(),
+        })?;
+        let layers: Vec<PushLayer<'_>> = mats
+            .iter()
+            .map(|(lname, mat)| PushLayer {
+                name: lname,
+                weight: mat,
+                fmt: fmt_for(lname),
+            })
+            .collect();
+        self.push(name, &layers, &ck.meta)
+    }
+
+    /// All manifest names, sorted.
+    pub fn manifest_names(&self) -> Result<Vec<String>> {
+        let dir = self.manifests_dir();
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(&dir).map_err(|e| io_err(&dir, e))? {
+            let entry = entry.map_err(|e| io_err(&dir, e))?;
+            let fname = entry.file_name();
+            if let Some(name) = fname.to_str().and_then(|f| f.strip_suffix(".json")) {
+                names.push(name.to_string());
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    /// Load and validate one manifest.
+    pub fn manifest(&self, name: &str) -> Result<Manifest> {
+        let path = self.manifest_path(name);
+        let text = std::fs::read_to_string(&path).map_err(|e| io_err(&path, e))?;
+        parse_manifest(&path, name, &text)
+    }
+
+    /// Load one blob into an owned [`BfpMatrix`], validating the full
+    /// structural contract against the manifest entry.
+    pub fn load_blob(&self, entry: &LayerEntry) -> Result<Arc<BfpMatrix>> {
+        self.load_blob_inner(entry).map(|(m, _)| m)
+    }
+
+    fn load_blob_inner(&self, entry: &LayerEntry) -> Result<(Arc<BfpMatrix>, bool)> {
+        let path = self.blob_path(entry.digest, entry.fmt);
+        if !path.is_file() {
+            return Err(RegistryError::MissingBlob {
+                digest: entry.digest,
+                m_bits: entry.fmt.mantissa_bits,
+                block: entry.fmt.block_size,
+            });
+        }
+        let mapped = mmap::map_readonly(&path).map_err(|e| io_err(&path, e))?;
+        let was_mapped = mapped.is_mapped();
+        let matrix = decode_blob(&path, &mapped, entry)?;
+        Ok((Arc::new(matrix), was_mapped))
+    }
+
+    /// Load every layer of `name` (manifest order).
+    pub fn pull(&self, name: &str) -> Result<Vec<(LayerEntry, Arc<BfpMatrix>)>> {
+        let manifest = self.manifest(name)?;
+        manifest
+            .layers
+            .into_iter()
+            .map(|entry| self.load_blob(&entry).map(|m| (entry, m)))
+            .collect()
+    }
+
+    /// Warm-start path: publish every layer of `name` into `cache`
+    /// under its hot-path key. After this, `encode_transposed_cached`
+    /// for a manifest-covered weight is a pure lookup — zero encode
+    /// operations, zero f32 touches.
+    pub fn warm_cache(&self, name: &str, cache: &OperandCache) -> Result<WarmStats> {
+        let manifest = self.manifest(name)?;
+        let mut stats = WarmStats::default();
+        for entry in &manifest.layers {
+            let (matrix, was_mapped) = self.load_blob_inner(entry)?;
+            stats.plane_bytes +=
+                (matrix.mantissas.resident_bytes() + matrix.exponents.len() * 4) as u64;
+            if was_mapped {
+                stats.mapped_loads += 1;
+            }
+            cache.preload(entry.cache_key(), matrix);
+            stats.installed += 1;
+        }
+        Ok(stats)
+    }
+
+    /// Remove blobs no manifest references, plus stale temp files.
+    /// Reachability is recomputed from every manifest at sweep time, so
+    /// a reachable blob can never be dropped (pinned by tests).
+    pub fn gc(&self) -> Result<GcStats> {
+        let mut reachable = HashSet::new();
+        for name in self.manifest_names()? {
+            for entry in self.manifest(&name)?.layers {
+                reachable.insert(Self::blob_file_name(entry.digest, entry.fmt));
+            }
+        }
+        let dir = self.blobs_dir();
+        let mut stats = GcStats::default();
+        for dirent in std::fs::read_dir(&dir).map_err(|e| io_err(&dir, e))? {
+            let dirent = dirent.map_err(|e| io_err(&dir, e))?;
+            let fname = dirent.file_name().to_string_lossy().into_owned();
+            if reachable.contains(&fname) {
+                stats.blobs_kept += 1;
+                continue;
+            }
+            let path = dirent.path();
+            let len = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            std::fs::remove_file(&path).map_err(|e| io_err(&path, e))?;
+            stats.blobs_removed += 1;
+            stats.bytes_removed += len;
+        }
+        Ok(stats)
+    }
+
+    /// Store-wide blob census for `registry ls`: (count, total bytes).
+    pub fn blob_stats(&self) -> Result<(usize, u64)> {
+        let dir = self.blobs_dir();
+        let mut count = 0usize;
+        let mut bytes = 0u64;
+        for dirent in std::fs::read_dir(&dir).map_err(|e| io_err(&dir, e))? {
+            let dirent = dirent.map_err(|e| io_err(&dir, e))?;
+            if dirent.file_name().to_string_lossy().ends_with(".bfpb") {
+                count += 1;
+                bytes += dirent.metadata().map(|m| m.len()).unwrap_or(0);
+            }
+        }
+        Ok((count, bytes))
+    }
+}
+
+/// Serialize one encoded matrix into the versioned blob byte stream.
+fn encode_blob(m: &BfpMatrix, digest: Digest) -> Vec<u8> {
+    let plane_bytes: Vec<u8> = match &m.mantissas {
+        MantissaPlane::I4Packed(v) => v.clone(),
+        MantissaPlane::I8(v) => v.iter().map(|&b| b as u8).collect(),
+        MantissaPlane::I16(v) => v.iter().flat_map(|&x| x.to_le_bytes()).collect(),
+    };
+    let mut payload = plane_bytes;
+    payload.reserve(m.exponents.len() * 4);
+    for &e in &m.exponents {
+        payload.extend_from_slice(&e.to_le_bytes());
+    }
+    let plane_len = payload.len() - m.exponents.len() * 4;
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(BLOB_MAGIC);
+    out.extend_from_slice(&BLOB_VERSION.to_le_bytes());
+    out.push(layout_byte(m.mantissas.layout()));
+    out.push(FLAG_TRANSPOSED);
+    out.extend_from_slice(&m.fmt.mantissa_bits.to_le_bytes());
+    out.extend_from_slice(&(m.fmt.block_size as u32).to_le_bytes());
+    out.extend_from_slice(&(m.rows as u64).to_le_bytes());
+    out.extend_from_slice(&(m.cols as u64).to_le_bytes());
+    out.extend_from_slice(&(plane_len as u64).to_le_bytes());
+    out.extend_from_slice(&(m.exponents.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv64(&payload).to_le_bytes());
+    out.extend_from_slice(&digest.to_le_bytes());
+    debug_assert_eq!(out.len(), HEADER_LEN);
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn corrupt(path: &Path, detail: impl Into<String>) -> RegistryError {
+    RegistryError::CorruptBlob {
+        path: path.to_path_buf(),
+        detail: detail.into(),
+    }
+}
+
+/// Parse + validate one blob against its manifest entry. Mirrors the
+/// fabric wire decoder's checklist: every length is derived twice
+/// (header vs format arithmetic) and must agree before any plane byte
+/// is trusted.
+fn decode_blob(path: &Path, bytes: &[u8], entry: &LayerEntry) -> Result<BfpMatrix> {
+    if bytes.len() < HEADER_LEN {
+        return Err(corrupt(path, format!("{} bytes < header", bytes.len())));
+    }
+    if &bytes[0..4] != BLOB_MAGIC {
+        return Err(corrupt(path, "bad magic"));
+    }
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    if version != BLOB_VERSION {
+        return Err(corrupt(path, format!("unknown blob version {version}")));
+    }
+    let layout = layout_from_byte(bytes[6])
+        .ok_or_else(|| corrupt(path, format!("unknown layout byte {}", bytes[6])))?;
+    let transposed = bytes[7] & FLAG_TRANSPOSED != 0;
+    let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+    let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+    let m_bits = u32_at(8);
+    let block = u32_at(12) as usize;
+    let rows = u64_at(16) as usize;
+    let cols = u64_at(24) as usize;
+    let plane_len = u64_at(32) as usize;
+    let exp_count = u64_at(40) as usize;
+    let payload_fnv = u64_at(48);
+    let digest = Digest::from_le_bytes(bytes[56..72].try_into().unwrap());
+
+    let fmt = BlockFormat::new(m_bits, block)
+        .map_err(|e| corrupt(path, format!("bad block format: {e}")))?;
+    if fmt != entry.fmt {
+        return Err(corrupt(
+            path,
+            format!(
+                "format m{}b{} != manifest m{}b{}",
+                m_bits, block, entry.fmt.mantissa_bits, entry.fmt.block_size
+            ),
+        ));
+    }
+    if layout != fmt.plane_layout() {
+        return Err(corrupt(path, "layout byte disagrees with format"));
+    }
+    if digest != entry.digest {
+        return Err(corrupt(
+            path,
+            format!(
+                "content digest {} != manifest {}",
+                digest.to_hex(),
+                entry.digest.to_hex()
+            ),
+        ));
+    }
+    if transposed != entry.transposed {
+        return Err(corrupt(path, "transposed flag disagrees with manifest"));
+    }
+    // A transposed encode of the k x n source is an n x k plane matrix.
+    if transposed && (rows != entry.cols || cols != entry.rows) {
+        return Err(corrupt(
+            path,
+            format!(
+                "encoded shape {rows}x{cols} does not transpose manifest {}x{}",
+                entry.rows, entry.cols
+            ),
+        ));
+    }
+    let blocks_per_row = cols.div_ceil(block);
+    let logical = rows
+        .checked_mul(blocks_per_row)
+        .and_then(|v| v.checked_mul(block))
+        .ok_or_else(|| corrupt(path, "plane size overflows"))?;
+    let want_plane = match layout {
+        PlaneLayout::I4Packed => logical / 2,
+        PlaneLayout::I8 => logical,
+        PlaneLayout::I16 => logical * 2,
+    };
+    if plane_len != want_plane {
+        return Err(corrupt(
+            path,
+            format!("plane length {plane_len} != expected {want_plane}"),
+        ));
+    }
+    if exp_count != rows * blocks_per_row {
+        return Err(corrupt(
+            path,
+            format!("exponent count {exp_count} != {}", rows * blocks_per_row),
+        ));
+    }
+    let want_total = HEADER_LEN + plane_len + exp_count * 4;
+    if bytes.len() != want_total {
+        return Err(corrupt(
+            path,
+            format!("file is {} bytes, expected {want_total}", bytes.len()),
+        ));
+    }
+    let payload = &bytes[HEADER_LEN..];
+    if fnv64(payload) != payload_fnv {
+        return Err(corrupt(path, "payload checksum mismatch"));
+    }
+    let plane = &payload[..plane_len];
+    let mantissas = match layout {
+        PlaneLayout::I4Packed => MantissaPlane::I4Packed(plane.to_vec()),
+        PlaneLayout::I8 => MantissaPlane::I8(plane.iter().map(|&b| b as i8).collect()),
+        PlaneLayout::I16 => MantissaPlane::I16(
+            plane
+                .chunks_exact(2)
+                .map(|c| i16::from_le_bytes([c[0], c[1]]))
+                .collect(),
+        ),
+    };
+    let exponents: Vec<i32> = payload[plane_len..]
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(BfpMatrix {
+        fmt,
+        rows,
+        cols,
+        blocks_per_row,
+        mantissas,
+        exponents,
+    })
+}
+
+fn render_manifest(m: &Manifest) -> String {
+    let layers = m
+        .layers
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::str(&e.name)),
+                ("digest", Json::str(e.digest.to_hex())),
+                ("m_bits", Json::num(e.fmt.mantissa_bits as f64)),
+                ("block", Json::num(e.fmt.block_size as f64)),
+                ("layout", Json::str(e.layout.label())),
+                ("rows", Json::num(e.rows as f64)),
+                ("cols", Json::num(e.cols as f64)),
+                ("transposed", Json::Bool(e.transposed)),
+                ("blob_bytes", Json::num(e.blob_bytes as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::str(MANIFEST_SCHEMA)),
+        ("name", Json::str(&m.name)),
+        ("layers", Json::Arr(layers)),
+        ("meta", Json::from_map(&m.meta)),
+    ])
+    .render()
+}
+
+fn parse_manifest(path: &Path, name: &str, text: &str) -> Result<Manifest> {
+    let bad = |detail: String| RegistryError::BadManifest {
+        path: path.to_path_buf(),
+        detail,
+    };
+    let doc = Json::parse(text).map_err(|e| bad(e.to_string()))?;
+    let schema = doc
+        .req("schema")
+        .and_then(|s| Ok(s.as_str()?.to_string()))
+        .map_err(|e| bad(e.to_string()))?;
+    if schema != MANIFEST_SCHEMA {
+        return Err(bad(format!("unknown schema {schema:?}")));
+    }
+    let doc_name = doc
+        .req("name")
+        .and_then(|s| Ok(s.as_str()?.to_string()))
+        .map_err(|e| bad(e.to_string()))?;
+    if doc_name != name {
+        return Err(bad(format!("manifest names itself {doc_name:?}")));
+    }
+    let mut layers = Vec::new();
+    for (i, layer) in doc
+        .req("layers")
+        .and_then(|l| l.as_arr())
+        .map_err(|e| bad(e.to_string()))?
+        .iter()
+        .enumerate()
+    {
+        let field = |key: &str| {
+            layer
+                .req(key)
+                .map_err(|e| bad(format!("layer {i}: {e}")))
+        };
+        let digest_hex = field("digest")?
+            .as_str()
+            .map_err(|e| bad(format!("layer {i}: {e}")))?;
+        let digest = digest_from_hex(digest_hex)
+            .ok_or_else(|| bad(format!("layer {i}: digest {digest_hex:?} is not 32 hex chars")))?;
+        let m_bits = field("m_bits")?
+            .as_usize()
+            .map_err(|e| bad(format!("layer {i}: {e}")))? as u32;
+        let block = field("block")?
+            .as_usize()
+            .map_err(|e| bad(format!("layer {i}: {e}")))?;
+        let fmt =
+            BlockFormat::new(m_bits, block).map_err(|e| bad(format!("layer {i}: {e}")))?;
+        let label = field("layout")?
+            .as_str()
+            .map_err(|e| bad(format!("layer {i}: {e}")))?
+            .to_string();
+        let layout = layout_from_label(&label)
+            .ok_or_else(|| bad(format!("layer {i}: unknown layout {label:?}")))?;
+        if layout != fmt.plane_layout() {
+            return Err(bad(format!(
+                "layer {i}: layout {label:?} disagrees with format m{m_bits}b{block}"
+            )));
+        }
+        layers.push(LayerEntry {
+            name: field("name")?
+                .as_str()
+                .map_err(|e| bad(format!("layer {i}: {e}")))?
+                .to_string(),
+            digest,
+            fmt,
+            layout,
+            rows: field("rows")?
+                .as_usize()
+                .map_err(|e| bad(format!("layer {i}: {e}")))?,
+            cols: field("cols")?
+                .as_usize()
+                .map_err(|e| bad(format!("layer {i}: {e}")))?,
+            transposed: field("transposed")?
+                .as_bool()
+                .map_err(|e| bad(format!("layer {i}: {e}")))?,
+            blob_bytes: field("blob_bytes")?
+                .as_f64()
+                .map_err(|e| bad(format!("layer {i}: {e}")))? as u64,
+        });
+    }
+    let mut meta = BTreeMap::new();
+    if let Ok(Json::Obj(fields)) = doc.req("meta") {
+        for (k, v) in fields {
+            meta.insert(
+                k.clone(),
+                v.as_str().map_err(|e| bad(e.to_string()))?.to_string(),
+            );
+        }
+    }
+    Ok(Manifest {
+        name: name.to_string(),
+        layers,
+        meta,
+    })
+}
+
+/// Write via temp file + rename so readers never observe a partial
+/// file and a crashed writer never parks garbage under a live name.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, bytes).map_err(|e| io_err(&tmp, e))?;
+    std::fs::rename(&tmp, path).map_err(|e| io_err(path, e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn temp_root(tag: &str) -> PathBuf {
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        std::env::temp_dir().join(format!(
+            "boosters-registry-{}-{}-{tag}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ))
+    }
+
+    fn mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::new(rows, cols, (0..rows * cols).map(|_| rng.normal_scaled(1.0)).collect()).unwrap()
+    }
+
+    fn fmt(m: u32, b: usize) -> BlockFormat {
+        BlockFormat::new(m, b).unwrap()
+    }
+
+    #[test]
+    fn push_pull_roundtrip_is_bit_identical() {
+        let root = temp_root("roundtrip");
+        let reg = Registry::open(&root).unwrap();
+        let weights = [mat(64, 48, 1), mat(33, 17, 2), mat(16, 64, 3)];
+        let fmts = [fmt(4, 64), fmt(6, 16), fmt(12, 16)];
+        let names = ["layer0", "layer1", "layer2"];
+        let layers: Vec<PushLayer<'_>> = weights
+            .iter()
+            .zip(&fmts)
+            .zip(names)
+            .map(|((w, &f), name)| PushLayer {
+                name,
+                weight: w,
+                fmt: f,
+            })
+            .collect();
+        let (manifest, stats) = reg.push("epoch0", &layers, &BTreeMap::new()).unwrap();
+        assert_eq!(stats.blobs_written, 3);
+        assert_eq!(stats.blobs_deduped, 0);
+        assert_eq!(manifest.layers.len(), 3);
+
+        let pulled = reg.pull("epoch0").unwrap();
+        for ((entry, loaded), (w, &f)) in pulled.iter().zip(weights.iter().zip(&fmts)) {
+            let fresh =
+                BfpMatrix::encode_transposed(w, f, Quantizer::nearest(f.mantissa_bits)).unwrap();
+            assert_eq!(**loaded, fresh, "{}", entry.name);
+            assert_eq!(entry.digest, content_fingerprint(&w.data, w.rows, w.cols));
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn push_dedups_by_digest_and_format() {
+        let root = temp_root("dedup");
+        let reg = Registry::open(&root).unwrap();
+        let w = mat(32, 32, 7);
+        let f4 = fmt(4, 16);
+        let push = |name: &str, f: BlockFormat| {
+            reg.push(
+                name,
+                &[PushLayer {
+                    name: "w",
+                    weight: &w,
+                    fmt: f,
+                }],
+                &BTreeMap::new(),
+            )
+            .unwrap()
+            .1
+        };
+        assert_eq!(push("a", f4).blobs_written, 1);
+        // Same content + format under a new manifest: pure dedup.
+        let again = push("b", f4);
+        assert_eq!(again.blobs_written, 0);
+        assert_eq!(again.blobs_deduped, 1);
+        assert!(again.bytes_deduped > 0);
+        assert!((again.dedup_ratio() - 1.0).abs() < 1e-12);
+        // Same content, different mantissa width: a distinct blob.
+        assert_eq!(push("c", fmt(6, 16)).blobs_written, 1);
+        assert_eq!(reg.blob_stats().unwrap().0, 2);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn gc_keeps_reachable_blobs_only() {
+        let root = temp_root("gc");
+        let reg = Registry::open(&root).unwrap();
+        let keep = mat(16, 16, 10);
+        let drop_ = mat(16, 16, 11);
+        let f = fmt(4, 16);
+        reg.push(
+            "keep",
+            &[PushLayer {
+                name: "w",
+                weight: &keep,
+                fmt: f,
+            }],
+            &BTreeMap::new(),
+        )
+        .unwrap();
+        reg.push(
+            "drop",
+            &[PushLayer {
+                name: "w",
+                weight: &drop_,
+                fmt: f,
+            }],
+            &BTreeMap::new(),
+        )
+        .unwrap();
+        std::fs::remove_file(root.join("manifests/drop.json")).unwrap();
+        let stats = reg.gc().unwrap();
+        assert_eq!(stats.blobs_kept, 1);
+        assert_eq!(stats.blobs_removed, 1);
+        assert!(stats.bytes_removed > 0);
+        assert!(reg.has_blob(content_fingerprint(&keep.data, 16, 16), f));
+        assert!(!reg.has_blob(content_fingerprint(&drop_.data, 16, 16), f));
+        // The surviving manifest still pulls clean.
+        assert_eq!(reg.pull("keep").unwrap().len(), 1);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn corrupt_blob_is_rejected_with_a_typed_error() {
+        let root = temp_root("corrupt");
+        let reg = Registry::open(&root).unwrap();
+        let w = mat(16, 16, 20);
+        let f = fmt(4, 16);
+        let (manifest, _) = reg
+            .push(
+                "m",
+                &[PushLayer {
+                    name: "w",
+                    weight: &w,
+                    fmt: f,
+                }],
+                &BTreeMap::new(),
+            )
+            .unwrap();
+        let entry = &manifest.layers[0];
+        let path = reg.blob_path(entry.digest, entry.fmt);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = HEADER_LEN + (bytes.len() - HEADER_LEN) / 2;
+        bytes[mid] ^= 0x5a;
+        std::fs::write(&path, &bytes).unwrap();
+        match reg.load_blob(entry) {
+            Err(RegistryError::CorruptBlob { detail, .. }) => {
+                assert!(detail.contains("checksum"), "{detail}");
+            }
+            other => panic!("expected CorruptBlob, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn truncated_and_garbage_manifests_are_typed_errors() {
+        let root = temp_root("manifest");
+        let reg = Registry::open(&root).unwrap();
+        let path = root.join("manifests/broken.json");
+        std::fs::write(&path, b"{\"schema\": \"boosters-registry-v1\"").unwrap();
+        assert!(matches!(
+            reg.manifest("broken"),
+            Err(RegistryError::BadManifest { .. })
+        ));
+        std::fs::write(&path, b"{\"schema\": \"other-v9\"}").unwrap();
+        assert!(matches!(
+            reg.manifest("broken"),
+            Err(RegistryError::BadManifest { .. })
+        ));
+        assert!(matches!(
+            reg.manifest("absent"),
+            Err(RegistryError::Io { .. })
+        ));
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn manifest_render_parse_roundtrip() {
+        let root = temp_root("render");
+        let reg = Registry::open(&root).unwrap();
+        let w = mat(24, 40, 30);
+        let mut meta = BTreeMap::new();
+        meta.insert("epoch".to_string(), "3".to_string());
+        let (pushed, _) = reg
+            .push(
+                "ck",
+                &[PushLayer {
+                    name: "fc1",
+                    weight: &w,
+                    fmt: fmt(4, 64),
+                }],
+                &meta,
+            )
+            .unwrap();
+        let loaded = reg.manifest("ck").unwrap();
+        assert_eq!(loaded.layers, pushed.layers);
+        assert_eq!(loaded.meta.get("epoch").unwrap(), "3");
+        let key = loaded.layers[0].cache_key();
+        assert_eq!(key.content, pushed.layers[0].digest);
+        assert!(key.transposed);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn bad_manifest_names_are_rejected() {
+        let root = temp_root("names");
+        let reg = Registry::open(&root).unwrap();
+        for name in ["", "a/b", "..", ".hidden", "a\\b"] {
+            assert!(
+                matches!(
+                    reg.push(name, &[], &BTreeMap::new()),
+                    Err(RegistryError::BadManifest { .. })
+                ),
+                "{name:?} should be rejected"
+            );
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn error_display_names_the_failure() {
+        let e = RegistryError::MissingBlob {
+            digest: Digest(1, 2),
+            m_bits: 4,
+            block: 64,
+        };
+        let s = e.to_string();
+        assert!(s.contains("m=4") && s.contains("b=64"), "{s}");
+    }
+}

@@ -1,4 +1,5 @@
-//! Tiny CLI argument parser (no external deps): subcommand + `--key value`
+//! Tiny CLI argument parser (no external deps): subcommand + optional
+//! verb (second positional, e.g. `repro registry push`) + `--key value`
 //! / `--flag` options.
 
 use anyhow::{anyhow, bail, Result};
@@ -7,6 +8,9 @@ use std::collections::BTreeMap;
 #[derive(Debug, Default, Clone)]
 pub struct Args {
     pub subcommand: Option<String>,
+    /// Second positional — the sub-verb of compound subcommands
+    /// (`repro registry push --dir D`). `None` for plain subcommands.
+    pub verb: Option<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
 }
@@ -30,6 +34,8 @@ impl Args {
                 }
             } else if out.subcommand.is_none() {
                 out.subcommand = Some(tok);
+            } else if out.verb.is_none() {
+                out.verb = Some(tok);
             } else {
                 bail!("unexpected positional argument {tok:?}");
             }
@@ -102,8 +108,18 @@ mod tests {
     }
 
     #[test]
+    fn verb_is_the_second_positional() {
+        let a = parse("registry push --dir /tmp/reg --name epoch3");
+        assert_eq!(a.subcommand.as_deref(), Some("registry"));
+        assert_eq!(a.verb.as_deref(), Some("push"));
+        assert_eq!(a.get("dir"), Some("/tmp/reg"));
+        assert_eq!(a.get("name"), Some("epoch3"));
+        assert!(parse("train --epochs 3").verb.is_none());
+    }
+
+    #[test]
     fn errors() {
-        assert!(Args::parse(["x".into(), "y".into()]).is_err());
+        assert!(Args::parse(["x".into(), "y".into(), "z".into()]).is_err());
         assert!(parse("train").get_parse::<usize>("epochs").unwrap().is_none());
         let bad = Args::parse(["t".into(), "--epochs".into(), "abc".into()]).unwrap();
         assert!(bad.get_parse::<usize>("epochs").is_err());

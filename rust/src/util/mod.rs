@@ -253,6 +253,29 @@ pub fn parse_fabric_mac_budget(raw: Option<&str>) -> u64 {
         .unwrap_or(DEFAULT_FABRIC_MAC_BUDGET)
 }
 
+/// Default cap on the fabric runner's resident digest-operand store:
+/// 256 MiB of encoded planes.
+pub const DEFAULT_FABRIC_STORE_BYTES: u64 = 256 << 20;
+
+/// Fabric runner operand-store budget (bytes): the single home of the
+/// `BOOSTERS_FABRIC_STORE_MB` override (any positive integer, in MiB).
+/// The runner LRU-evicts stored weight planes past this cap; an evicted
+/// digest simply re-triggers the router's `NEED_OPERAND` re-negotiation
+/// on next use (re-transfers are counted separately so the dedup
+/// counters stay monotone and exact).
+pub fn fabric_store_budget() -> u64 {
+    parse_fabric_store_budget(std::env::var("BOOSTERS_FABRIC_STORE_MB").ok().as_deref())
+}
+
+/// Pure parsing core of [`fabric_store_budget`]: malformed, zero, or
+/// missing values fall back to [`DEFAULT_FABRIC_STORE_BYTES`].
+pub fn parse_fabric_store_budget(mb: Option<&str>) -> u64 {
+    mb.and_then(|s| s.trim().parse::<u64>().ok())
+        .filter(|&n| n >= 1)
+        .map(|mb| mb << 20)
+        .unwrap_or(DEFAULT_FABRIC_STORE_BYTES)
+}
+
 /// Listen address for `repro fabric-runner` when `--listen` is not
 /// given: the single home of the `BOOSTERS_FABRIC_LISTEN` override.
 /// `Some(addr)` when set and non-empty.
@@ -347,6 +370,7 @@ pub fn validate_env_vars(get: impl Fn(&str) -> Option<String>) -> Vec<EnvIssue> 
     positive_int("BOOSTERS_ARENA_MB", "buffer-arena residency cap, MiB");
     positive_int("BOOSTERS_FABRIC_RUNNERS", "fabric runner-process count");
     positive_int("BOOSTERS_FABRIC_MAC_BUDGET", "per-runner outstanding-MAC budget");
+    positive_int("BOOSTERS_FABRIC_STORE_MB", "runner operand-store cap, MiB");
     if let Some(v) = get("BOOSTERS_FABRIC_LISTEN") {
         let trimmed = v.trim();
         if !trimmed.is_empty() && !endpoint_shape_ok(trimmed) {
@@ -525,6 +549,13 @@ mod tests {
         assert_eq!(parse_fabric_mac_budget(Some(" 1024 ")), 1024);
         assert_eq!(parse_fabric_mac_budget(Some("0")), DEFAULT_FABRIC_MAC_BUDGET);
         assert_eq!(parse_fabric_mac_budget(Some("lots")), DEFAULT_FABRIC_MAC_BUDGET);
+        // Operand-store cap: MiB converts to bytes, zero/garbage fall
+        // back — a 0 cap would evict every stored plane immediately.
+        assert_eq!(parse_fabric_store_budget(None), DEFAULT_FABRIC_STORE_BYTES);
+        assert_eq!(parse_fabric_store_budget(Some(" 32 ")), 32 << 20);
+        assert_eq!(parse_fabric_store_budget(Some("0")), DEFAULT_FABRIC_STORE_BYTES);
+        assert_eq!(parse_fabric_store_budget(Some("huge")), DEFAULT_FABRIC_STORE_BYTES);
+        assert!(fabric_store_budget() >= 1);
         // Connect lists split on commas, trim, and drop empties.
         assert!(parse_fabric_connect(None).is_empty());
         assert_eq!(
@@ -561,6 +592,7 @@ mod tests {
             ("BOOSTERS_KERNEL", " AutoVec "),
             ("BOOSTERS_FABRIC_RUNNERS", "3"),
             ("BOOSTERS_FABRIC_MAC_BUDGET", "1048576"),
+            ("BOOSTERS_FABRIC_STORE_MB", "64"),
             ("BOOSTERS_FABRIC_LISTEN", "127.0.0.1:7000"),
             ("BOOSTERS_FABRIC_CONNECT", "127.0.0.1:7001, localhost:7002"),
         ]
@@ -578,13 +610,14 @@ mod tests {
             ("BOOSTERS_AUTOTUNE", "/no/such/table.json"),
             ("BOOSTERS_FABRIC_RUNNERS", "zero"),
             ("BOOSTERS_FABRIC_MAC_BUDGET", "0"),
+            ("BOOSTERS_FABRIC_STORE_MB", "-5"),
             ("BOOSTERS_FABRIC_LISTEN", "nowhere"),
             ("BOOSTERS_FABRIC_CONNECT", "127.0.0.1:7001,bogus"),
         ]
         .into_iter()
         .collect();
         let issues = validate_env_vars(|v| bad.get(v).map(|s| s.to_string()));
-        assert_eq!(issues.len(), 11, "{issues:?}");
+        assert_eq!(issues.len(), 12, "{issues:?}");
         for issue in &issues {
             // Display output names the variable and the rejected value
             // so the operator can fix all of them from one failure.

@@ -12,10 +12,16 @@
 
 use boosters::bfp::{hbfp_gemm_scalar, BlockFormat, Mat};
 use boosters::exec::{ExecRuntime, Priority, Ticket};
-use boosters::fabric::{fetch_metrics, serve_on, FabricRouter, RouterConfig, RunnerHandle};
+use boosters::fabric::{
+    fetch_metrics, serve_on, serve_on_capped, warm_start_store, FabricRouter, RouterConfig,
+    RunnerHandle,
+};
+use boosters::registry::{PushLayer, Registry};
 use boosters::util::Rng;
+use std::collections::BTreeMap;
 use std::net::TcpListener;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.normal_scaled(1.0)).collect()
@@ -221,6 +227,204 @@ fn router_fails_over_killed_runner_without_losing_ops() {
     for h in handles {
         h.kill();
     }
+}
+
+/// Pull one counter out of a runner's snapshot pairs.
+fn counter(handle: &RunnerHandle, name: &str) -> u64 {
+    handle
+        .shared()
+        .counters_snapshot()
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, v)| *v)
+        .unwrap_or_else(|| panic!("runner counter {name:?} missing"))
+}
+
+#[test]
+fn store_cap_evicts_and_renegotiates_via_need_operand() {
+    // A 1-byte store budget: any second install evicts the first (the
+    // sole-resident rule keeps exactly one plane alive), so alternating
+    // between two weights ping-pongs the store and every revisit of an
+    // evicted digest must bounce through NEED_OPERAND re-negotiation.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let handle = serve_on_capped(listener, Arc::new(ExecRuntime::with_threads(2)), 1).unwrap();
+    let addrs = vec![handle.addr().to_string()];
+    let router = FabricRouter::connect(
+        &addrs,
+        RouterConfig::default(),
+        Arc::new(ExecRuntime::with_threads(1)),
+    )
+    .unwrap();
+
+    let mut rng = Rng::new(23);
+    let (weights, _) = build_stream(&mut rng, 2, 0, 64, 32);
+    // Serialize ops (wait each before the next) so the eviction
+    // ping-pong is deterministic: w0, w1 (evicts w0), w0 again, …
+    let ops = 6usize;
+    for i in 0..ops {
+        let (w, fmt) = &weights[i % 2];
+        let m = 2 + i;
+        let x = Arc::new(Mat::new(m, 64, randn(&mut rng, m * 64)).unwrap());
+        let t = router
+            .submit(Arc::clone(&x), Arc::clone(w), *fmt, None, Priority::Interactive)
+            .unwrap();
+        let resp = t.wait().unwrap_or_else(|e| panic!("op {i} lost: {e:#}"));
+        let want = hbfp_gemm_scalar(&x, w, *fmt).unwrap();
+        assert!(
+            resp.out
+                .data
+                .iter()
+                .zip(&want.data)
+                .all(|(g, r)| g.to_bits() == r.to_bits()),
+            "op {i} diverged after re-negotiation"
+        );
+    }
+
+    let stats = router.stats();
+    assert_eq!(stats.completed, ops as u64, "{stats:?}");
+    assert_eq!(stats.failed, 0, "{stats:?}");
+    assert!(
+        stats.retries >= 1,
+        "an evicted digest must have re-negotiated: {stats:?}"
+    );
+    // The runner attributes every crossing: evictions forced
+    // re-transfers, counted apart from first copies — so the dedup
+    // story stays monotone instead of silently eroding.
+    assert!(counter(&handle, "fabric_runner_operands_evicted") >= 2);
+    assert!(counter(&handle, "fabric_runner_operand_bytes_evicted") > 0);
+    assert!(counter(&handle, "fabric_runner_need_operand_total") >= 1);
+    assert!(counter(&handle, "fabric_runner_operands_retransferred") >= 1);
+    assert!(
+        counter(&handle, "fabric_runner_operands_stored")
+            >= 2 + counter(&handle, "fabric_runner_operands_retransferred")
+    );
+
+    drop(router);
+    handle.kill();
+}
+
+#[test]
+fn restarted_runner_rejoins_via_reconnect_and_keeps_serving() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = serve_on(listener, Arc::new(ExecRuntime::with_threads(2))).unwrap();
+    let addrs = vec![addr.to_string()];
+    let router = FabricRouter::connect(
+        &addrs,
+        RouterConfig::default(),
+        Arc::new(ExecRuntime::with_threads(1)),
+    )
+    .unwrap();
+
+    let mut rng = Rng::new(31);
+    let (weights, stream) = build_stream(&mut rng, 2, 8, 96, 40);
+    let tickets = submit_all(&router, &weights, &stream);
+    assert_bit_identical(&weights, &stream, tickets);
+    let before = router.stats();
+    assert_eq!(before.reconnects, 0, "{before:?}");
+
+    // Kill the runner (socket-level, like a crashed node), then restart
+    // a fresh one on the SAME address — the reconnect thread must redial
+    // it, wipe the stale known-set, and re-probe the negotiated digests.
+    handle.kill();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.alive_runners() > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(router.alive_runners(), 0, "kill must be observed");
+    let listener = TcpListener::bind(addr).expect("rebinding the runner address");
+    let handle = serve_on(listener, Arc::new(ExecRuntime::with_threads(2))).unwrap();
+
+    let deadline = Instant::now() + Duration::from_secs(15);
+    while router.stats().reconnects == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let mid = router.stats();
+    assert!(mid.reconnects >= 1, "router never rejoined: {mid:?}");
+    assert_eq!(router.alive_runners(), 1, "{mid:?}");
+    // The restarted store is empty, so the re-probe of previously
+    // negotiated digests answered negative — no phantom dedup hits, and
+    // the probe counter moved (counters stay monotone through death).
+    assert!(mid.probes > before.probes, "{mid:?}");
+
+    // Traffic flows again through the rejoined runner, re-shipping the
+    // weight planes it lost with the restart.
+    let (w, fmt) = &weights[0];
+    let x = Arc::new(Mat::new(3, 96, randn(&mut rng, 3 * 96)).unwrap());
+    let t = router
+        .submit(Arc::clone(&x), Arc::clone(w), *fmt, None, Priority::Interactive)
+        .unwrap();
+    let resp = t.wait().unwrap();
+    let want = hbfp_gemm_scalar(&x, w, *fmt).unwrap();
+    assert!(resp
+        .out
+        .data
+        .iter()
+        .zip(&want.data)
+        .all(|(g, r)| g.to_bits() == r.to_bits()));
+    let after = router.stats();
+    assert_eq!(after.failed, 0, "{after:?}");
+    assert!(
+        after.plane_bytes_sent > mid.plane_bytes_sent,
+        "the rejoined runner needed the planes again: {after:?}"
+    );
+
+    drop(router);
+    handle.kill();
+}
+
+#[test]
+fn registry_warm_started_runner_needs_no_plane_transfer() {
+    let mut rng = Rng::new(47);
+    let (weights, stream) = build_stream(&mut rng, 2, 10, 64, 48);
+
+    // Push the working set into a registry, then warm-start a fresh
+    // runner's operand store from it before any router connects.
+    let dir = std::env::temp_dir().join(format!("boosters-fabric-warm-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let reg = Registry::open(&dir).unwrap();
+    let names: Vec<String> = (0..weights.len()).map(|i| format!("w{i}")).collect();
+    let layers: Vec<PushLayer<'_>> = weights
+        .iter()
+        .zip(&names)
+        .map(|((w, fmt), name)| PushLayer {
+            name,
+            weight: w,
+            fmt: *fmt,
+        })
+        .collect();
+    reg.push("boot", &layers, &BTreeMap::new()).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let handle = serve_on(listener, Arc::new(ExecRuntime::with_threads(2))).unwrap();
+    let installed = warm_start_store(handle.shared(), &dir).unwrap();
+    assert_eq!(installed, weights.len());
+    assert_eq!(
+        counter(&handle, "fabric_runner_operands_preloaded"),
+        weights.len() as u64
+    );
+
+    let addrs = vec![handle.addr().to_string()];
+    let router = FabricRouter::connect(
+        &addrs,
+        RouterConfig::default(),
+        Arc::new(ExecRuntime::with_threads(1)),
+    )
+    .unwrap();
+    let tickets = submit_all(&router, &weights, &stream);
+    assert_bit_identical(&weights, &stream, tickets);
+
+    // The whole point of the warm start: every probe answers "present",
+    // so zero plane bytes ever cross the wire.
+    let stats = router.stats();
+    assert_eq!(stats.completed, 10, "{stats:?}");
+    assert_eq!(stats.plane_bytes_sent, 0, "{stats:?}");
+    assert_eq!(stats.dedup_misses, 0, "{stats:?}");
+    assert_eq!(stats.dedup_hits, 10, "{stats:?}");
+
+    drop(router);
+    handle.kill();
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

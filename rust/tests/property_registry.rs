@@ -1,0 +1,348 @@
+//! Integration contracts for the content-addressed encoded-weight
+//! registry, exercised through the public API the way real callers
+//! (checkpoint import, fabric warm start, `repro registry`) use it:
+//!
+//! * push/pull round-trips are **bit-identical** to a fresh
+//!   [`BfpMatrix::encode_transposed`] across the full plane-layout grid
+//!   (I4Packed / I8 / I16) — the zero-copy loader never re-quantizes;
+//! * cross-epoch pushes dedup exactly the unchanged layers — blob
+//!   counts are a pure function of distinct (digest, format) pairs;
+//! * [`Registry::warm_cache`] publishes planes under the *hot-path*
+//!   cache key, so `encode_transposed_cached` afterwards is all hits —
+//!   zero encode operations, the PR's warm-start acceptance bar;
+//! * the blob header's layout byte stays in lockstep with the fabric
+//!   wire mapping (1 = i4x2, 2 = i8, 3 = i16) — a registry blob and a
+//!   wire frame must never disagree about what a plane byte means;
+//! * corruption (payload flip, truncation, garbage manifest) is a
+//!   typed rejection, and `gc` keeps every manifest-reachable blob.
+
+use boosters::bfp::{BfpMatrix, BlockFormat, Mat, PlaneLayout, Quantizer};
+use boosters::exec::ExecRuntime;
+use boosters::registry::{PushLayer, Registry, RegistryError};
+use boosters::util::digest::content_fingerprint;
+use boosters::util::Rng;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+fn temp_root(tag: &str) -> PathBuf {
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    std::env::temp_dir().join(format!(
+        "boosters-prop-registry-{}-{}-{tag}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+fn mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    let data = (0..rows * cols).map(|_| rng.normal_scaled(1.0)).collect();
+    Mat::new(rows, cols, data).unwrap()
+}
+
+fn fresh_encode(w: &Mat, fmt: BlockFormat) -> BfpMatrix {
+    BfpMatrix::encode_transposed(w, fmt, Quantizer::nearest(fmt.mantissa_bits)).unwrap()
+}
+
+#[test]
+fn roundtrip_is_bit_identical_across_the_layout_grid() {
+    let root = temp_root("grid");
+    let reg = Registry::open(&root).unwrap();
+    // Shapes deliberately include block-ragged edges (33x17) so the
+    // padded-tail bytes round-trip too; formats cover all three plane
+    // layouts, 4-bit packed first — it is the paper's headline width.
+    let shapes = [(64usize, 48usize), (33, 17), (16, 64), (128, 96)];
+    let fmts = [
+        BlockFormat::new(4, 16).unwrap(),
+        BlockFormat::new(4, 64).unwrap(),
+        BlockFormat::new(6, 16).unwrap(),
+        BlockFormat::new(12, 16).unwrap(),
+    ];
+    let mut layouts_seen = Vec::new();
+    let mut weights = Vec::new();
+    for (i, &(r, c)) in shapes.iter().enumerate() {
+        for (j, &f) in fmts.iter().enumerate() {
+            weights.push((format!("w{i}f{j}"), mat(r, c, 100 + (i * 7 + j) as u64), f));
+            if !layouts_seen.contains(&f.plane_layout()) {
+                layouts_seen.push(f.plane_layout());
+            }
+        }
+    }
+    assert!(
+        layouts_seen.contains(&PlaneLayout::I4Packed)
+            && layouts_seen.contains(&PlaneLayout::I8)
+            && layouts_seen.contains(&PlaneLayout::I16),
+        "grid must cover every plane layout, saw {layouts_seen:?}"
+    );
+    let layers: Vec<PushLayer<'_>> = weights
+        .iter()
+        .map(|(name, w, f)| PushLayer {
+            name,
+            weight: w,
+            fmt: *f,
+        })
+        .collect();
+    let (_, stats) = reg.push("grid", &layers, &BTreeMap::new()).unwrap();
+    assert_eq!(stats.blobs_written, weights.len());
+    assert_eq!(stats.blobs_deduped, 0);
+
+    for ((entry, loaded), (name, w, f)) in reg.pull("grid").unwrap().iter().zip(&weights) {
+        let want = fresh_encode(w, *f);
+        assert_eq!(**loaded, want, "{name}: loaded plane diverged");
+        assert_eq!(entry.digest, content_fingerprint(&w.data, w.rows, w.cols));
+        assert_eq!(entry.layout, f.plane_layout(), "{name}");
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn blob_header_layout_byte_matches_the_wire_mapping() {
+    // Offset 6 of every blob is the plane-layout byte, and it must use
+    // the SAME mapping as the fabric wire protocol (1 = i4x2, 2 = i8,
+    // 3 = i16) — this test is the lockstep pin named in both modules'
+    // docs. If either side renumbers, this fails before any fleet does.
+    let root = temp_root("layout-byte");
+    let reg = Registry::open(&root).unwrap();
+    let cases: [(BlockFormat, PlaneLayout, u8); 3] = [
+        (BlockFormat::new(4, 16).unwrap(), PlaneLayout::I4Packed, 1),
+        (BlockFormat::new(6, 16).unwrap(), PlaneLayout::I8, 2),
+        (BlockFormat::new(12, 16).unwrap(), PlaneLayout::I16, 3),
+    ];
+    let w = mat(32, 32, 9);
+    for (i, &(f, layout, byte)) in cases.iter().enumerate() {
+        assert_eq!(f.plane_layout(), layout);
+        let (manifest, _) = reg
+            .push(
+                &format!("m{i}"),
+                &[PushLayer {
+                    name: "w",
+                    weight: &w,
+                    fmt: f,
+                }],
+                &BTreeMap::new(),
+            )
+            .unwrap();
+        let entry = &manifest.layers[0];
+        let bytes = std::fs::read(reg.blob_path(entry.digest, entry.fmt)).unwrap();
+        assert_eq!(&bytes[0..4], b"BFPR");
+        assert_eq!(
+            bytes[6], byte,
+            "layout byte for {layout:?} drifted from the wire mapping"
+        );
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn cross_epoch_pushes_dedup_exactly_the_unchanged_layers() {
+    let root = temp_root("epochs");
+    let reg = Registry::open(&root).unwrap();
+    let fmt = BlockFormat::new(4, 64).unwrap();
+    let layer_count = 6usize;
+    let epochs = 4usize;
+    // Epoch e fresh-samples layer i when `i % 3 == e % 3` (the serve-sim
+    // registry benchmark's schedule); everything else is byte-stable.
+    let mut current: Vec<Mat> = (0..layer_count)
+        .map(|i| mat(48, 32, 500 + i as u64))
+        .collect();
+    let mut distinct: std::collections::HashSet<_> = std::collections::HashSet::new();
+    let mut written = 0usize;
+    let mut deduped = 0usize;
+    for e in 0..epochs {
+        if e > 0 {
+            for i in 0..layer_count {
+                if i % 3 == e % 3 {
+                    current[i] = mat(48, 32, 1000 + (e * layer_count + i) as u64);
+                }
+            }
+        }
+        let names: Vec<String> = (0..layer_count).map(|i| format!("layer{i:02}")).collect();
+        let layers: Vec<PushLayer<'_>> = current
+            .iter()
+            .zip(&names)
+            .map(|(w, name)| PushLayer {
+                name,
+                weight: w,
+                fmt,
+            })
+            .collect();
+        let (manifest, stats) = reg
+            .push(&format!("epoch{e}"), &layers, &BTreeMap::new())
+            .unwrap();
+        // Exact dedup accounting: a layer writes a blob iff its
+        // (digest, fmt) pair is globally new.
+        let new_digests = manifest
+            .layers
+            .iter()
+            .filter(|l| distinct.insert((l.digest, l.fmt)))
+            .count();
+        assert_eq!(stats.blobs_written, new_digests, "epoch {e}");
+        assert_eq!(stats.blobs_deduped, layer_count - new_digests, "epoch {e}");
+        if e > 0 {
+            assert!(stats.dedup_ratio() > 0.0, "epoch {e} reused nothing");
+            assert_eq!(stats.blobs_deduped, layer_count - 2, "epoch {e}");
+        }
+        written += stats.blobs_written;
+        deduped += stats.blobs_deduped;
+    }
+    assert_eq!(written, distinct.len());
+    assert_eq!(written + deduped, layer_count * epochs);
+    assert_eq!(reg.blob_stats().unwrap().0, distinct.len());
+    // Every epoch remains pullable and bit-identical after the churn.
+    for (entry, loaded) in reg.pull(&format!("epoch{}", epochs - 1)).unwrap() {
+        let i: usize = entry.name.trim_start_matches("layer").parse().unwrap();
+        assert_eq!(*loaded, fresh_encode(&current[i], fmt), "{}", entry.name);
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn warm_cache_makes_the_hot_path_pure_lookup_with_zero_encodes() {
+    let root = temp_root("warm");
+    let reg = Registry::open(&root).unwrap();
+    let fmts = [
+        BlockFormat::new(4, 64).unwrap(),
+        BlockFormat::new(6, 16).unwrap(),
+    ];
+    let weights: Vec<(Mat, BlockFormat)> = (0..5)
+        .map(|i| (mat(64, 48, 700 + i as u64), fmts[i % fmts.len()]))
+        .collect();
+    let names: Vec<String> = (0..weights.len()).map(|i| format!("w{i}")).collect();
+    let layers: Vec<PushLayer<'_>> = weights
+        .iter()
+        .zip(&names)
+        .map(|((w, f), name)| PushLayer {
+            name,
+            weight: w,
+            fmt: *f,
+        })
+        .collect();
+    reg.push("ck", &layers, &BTreeMap::new()).unwrap();
+
+    // A cold runtime, warm-started purely from the registry: the
+    // subsequent hot-path encode calls must all be cache hits — the
+    // warm start's entire value proposition is zero encoder work.
+    let rt = ExecRuntime::with_threads(1);
+    let warm = reg.warm_cache("ck", rt.cache()).unwrap();
+    assert_eq!(warm.installed, weights.len());
+    assert!(warm.plane_bytes > 0);
+    assert!(warm.mapped_loads <= warm.installed);
+    assert_eq!(rt.cache().preloads(), weights.len() as u64);
+
+    for (i, (w, f)) in weights.iter().enumerate() {
+        let got = rt.encode_transposed_cached(w, *f).unwrap();
+        assert_eq!(*got, fresh_encode(w, *f), "w{i} diverged through warm cache");
+    }
+    let stats = rt.cache_stats();
+    assert_eq!(stats.misses, 0, "warm start must eliminate every encode");
+    assert_eq!(stats.hits, weights.len() as u64);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn corruption_and_truncation_are_typed_rejections() {
+    let root = temp_root("reject");
+    let reg = Registry::open(&root).unwrap();
+    let w = mat(32, 16, 800);
+    let f = BlockFormat::new(4, 16).unwrap();
+    let (manifest, _) = reg
+        .push(
+            "ck",
+            &[PushLayer {
+                name: "w",
+                weight: &w,
+                fmt: f,
+            }],
+            &BTreeMap::new(),
+        )
+        .unwrap();
+    let entry = &manifest.layers[0];
+    let path = reg.blob_path(entry.digest, entry.fmt);
+    let pristine = std::fs::read(&path).unwrap();
+
+    // Payload byte flip → checksum rejection, never a wrong matrix.
+    let mut flipped = pristine.clone();
+    let last = flipped.len() - 1;
+    flipped[last] ^= 0x80;
+    std::fs::write(&path, &flipped).unwrap();
+    match reg.load_blob(entry) {
+        Err(RegistryError::CorruptBlob { detail, .. }) => {
+            assert!(detail.contains("checksum"), "{detail}")
+        }
+        other => panic!("flipped payload: expected CorruptBlob, got {other:?}"),
+    }
+
+    // Truncation (mid-payload and mid-header) → structural rejection.
+    for cut in [pristine.len() - 8, 40] {
+        std::fs::write(&path, &pristine[..cut]).unwrap();
+        assert!(
+            matches!(reg.load_blob(entry), Err(RegistryError::CorruptBlob { .. })),
+            "truncated at {cut} must be CorruptBlob"
+        );
+    }
+
+    // Restore the blob, then break the manifest instead.
+    std::fs::write(&path, &pristine).unwrap();
+    assert_eq!(*reg.load_blob(entry).unwrap(), fresh_encode(&w, f));
+    let mpath = root.join("manifests/ck.json");
+    let mtext = std::fs::read_to_string(&mpath).unwrap();
+    std::fs::write(&mpath, &mtext[..mtext.len() / 2]).unwrap();
+    assert!(matches!(
+        reg.pull("ck"),
+        Err(RegistryError::BadManifest { .. })
+    ));
+
+    // Deleting the blob under an intact manifest is the third distinct
+    // failure: MissingBlob, not corruption.
+    std::fs::write(&mpath, &mtext).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert!(matches!(
+        reg.pull("ck"),
+        Err(RegistryError::MissingBlob { .. })
+    ));
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn gc_keeps_every_manifest_reachable_blob_through_churn() {
+    let root = temp_root("gc");
+    let reg = Registry::open(&root).unwrap();
+    let f = BlockFormat::new(4, 16).unwrap();
+    let shared = mat(24, 24, 900);
+    let only_a = mat(24, 24, 901);
+    let only_b = mat(24, 24, 902);
+    let layer_names = ["l0", "l1"];
+    let push = |name: &str, mats: &[&Mat]| {
+        let layers: Vec<PushLayer<'_>> = mats
+            .iter()
+            .zip(layer_names)
+            .map(|(w, lname)| PushLayer {
+                name: lname,
+                weight: w,
+                fmt: f,
+            })
+            .collect();
+        reg.push(name, &layers, &BTreeMap::new()).unwrap();
+    };
+    push("a", &[&shared, &only_a]);
+    push("b", &[&shared, &only_b]);
+    assert_eq!(reg.blob_stats().unwrap().0, 3);
+
+    // Nothing unreachable yet: gc is a no-op and both manifests pull.
+    let noop = reg.gc().unwrap();
+    assert_eq!((noop.blobs_kept, noop.blobs_removed), (3, 0));
+
+    // Drop manifest "a": its exclusive blob goes, the shared one stays
+    // because "b" still reaches it.
+    std::fs::remove_file(root.join("manifests/a.json")).unwrap();
+    let swept = reg.gc().unwrap();
+    assert_eq!((swept.blobs_kept, swept.blobs_removed), (2, 1));
+    assert!(swept.bytes_removed > 0);
+    assert!(reg.has_blob(content_fingerprint(&shared.data, 24, 24), f));
+    assert!(!reg.has_blob(content_fingerprint(&only_a.data, 24, 24), f));
+    let pulled = reg.pull("b").unwrap();
+    assert_eq!(pulled.len(), 2);
+    assert_eq!(*pulled[0].1, fresh_encode(&shared, f));
+    assert_eq!(*pulled[1].1, fresh_encode(&only_b, f));
+    std::fs::remove_dir_all(&root).ok();
+}
