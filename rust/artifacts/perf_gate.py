@@ -38,10 +38,46 @@ BENCHES_OF_RECORD = [
     "encode_transposed 1024x256 m=4 b=64 nibble-direct (f32)",
     "encode_transposed 1024x256 m=6 b=64 i8 writer (f32)",
     "BatchGemm 64 heterogeneous ops (MACs)",
+    "BatchGemm 64 shared-weight ops grouped (MACs)",
+    "BatchGemm 64 shared-weight ops ungrouped (MACs)",
     "sequential BatchGemm 1-op batches, same 64 ops (MACs)",
     "sequential hbfp_gemm via service, same 64 ops (MACs)",
     "BfpService async pipeline 64 ops decode-overlap (MACs)",
 ]
+
+# Weight-stationary grouping is a pure memory-traffic optimization over
+# the identical MAC work, so grouped slower than ungrouped by more than
+# measurement noise means the grouping path itself regressed. Checked
+# structurally on the FRESH artifact (both series ride in the same run,
+# so runner speed cancels) -- it is live even while the promoted
+# artifact is still the placeholder.
+GROUPED_SERIES = "BatchGemm 64 shared-weight ops grouped (MACs)"
+UNGROUPED_SERIES = "BatchGemm 64 shared-weight ops ungrouped (MACs)"
+
+
+def grouped_structural_check(fresh):
+    by_name = {r["name"]: r for r in fresh.get("results", [])}
+    g, u = by_name.get(GROUPED_SERIES), by_name.get(UNGROUPED_SERIES)
+    if g is None or u is None:
+        print(
+            "::warning::perf gate: grouped/ungrouped shared-weight series "
+            "missing from the fresh artifact; structural check skipped"
+        )
+        return 0
+    ratio = g["mean_ns"] / max(u["mean_ns"], 1e-9)
+    verdict = "REGRESSION" if ratio > THRESHOLD else "ok"
+    print(
+        f"{verdict:10} grouped vs ungrouped (same run): {u['mean_ns']:.0f} -> "
+        f"{g['mean_ns']:.0f} ns ({ratio:.2f}x)"
+    )
+    if ratio > THRESHOLD:
+        print(
+            f"::error::weight-stationary grouping is {ratio:.2f}x the ungrouped "
+            f"time on the same 64 shared-weight ops (threshold {THRESHOLD:.2f}x) "
+            f"-- grouping must never lose to per-op execution"
+        )
+        return 1
+    return 0
 
 
 # Fabric serving is wall-clock noisy (process spawn, loopback TCP, a
@@ -224,13 +260,17 @@ def main(argv):
     fresh = json.load(open(argv[1]))
     promoted = json.load(open(argv[2]))
 
+    # The grouped-vs-ungrouped comparison is within-run, so it runs on
+    # every fresh artifact BEFORE the placeholder skip below.
+    structural_rc = grouped_structural_check(fresh)
+
     if promoted.get("status") == "pending-toolchain-run":
         print(
             "::notice::perf gate skipped: promoted BENCH_gemm.json is still the "
             "pending-toolchain placeholder; promote a green run "
             "(artifacts/promote.sh) to arm the gate"
         )
-        return 0
+        return structural_rc
 
     record = promoted.get("benches_of_record") or BENCHES_OF_RECORD
     fresh_by = {r["name"]: r for r in fresh.get("results", [])}
@@ -273,7 +313,7 @@ def main(argv):
             )
         return 1
     print(f"perf gate passed: {checked} benches of record within {THRESHOLD:.2f}x")
-    return 0
+    return structural_rc
 
 
 if __name__ == "__main__":

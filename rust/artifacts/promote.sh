@@ -48,13 +48,27 @@ for needle in ("nibble-direct", "kernel="):
     if not any(needle in n for n in names):
         fail(f"BENCH_gemm is missing the {needle!r} series (old bench binary?)")
 
-for key in ("pre_encoded_ops", "encode_stage_ms", "cache_budget_mb", "p99_ms"):
+for key in (
+    "pre_encoded_ops",
+    "encode_stage_ms",
+    "cache_budget_mb",
+    "p99_ms",
+    # PR 10 schema bump: stale pre-grouping serve artifacts (no
+    # weight-stationary counters) are rejected, not silently promoted.
+    "grouped_ops",
+    "ungrouped_ops",
+    "weight_plane_loads_avoided_bytes",
+):
     if key not in serve:
         fail(f"BENCH_serve is missing {key!r} (old serve-sim binary?)")
 if serve.get("mode") != "async":
     fail("BENCH_serve must come from the --async smoke (mode != async)")
 if not serve["pre_encoded_ops"]:
     fail("BENCH_serve reports zero pre-encoded ops — pipeline not live")
+if (serve.get("grouped_ops") or 0) + (serve.get("ungrouped_ops") or 0) != serve.get(
+    "completed"
+):
+    fail("BENCH_serve grouped_ops + ungrouped_ops must partition completed ops")
 kops = serve.get("kernel_ops")
 if not isinstance(kops, list) or not kops:
     fail("BENCH_serve has no kernel_ops series (old serve-sim binary?)")

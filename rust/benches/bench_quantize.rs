@@ -312,6 +312,43 @@ fn main() {
             }
         },
     );
+    // --- weight-stationary grouping: 64 ops, one shared weight ---------
+    // The grouping showcase shape: every op multiplies against the SAME
+    // encoded weight, so the grouped run stacks all 64 into one tall-M
+    // GEMM per batch and streams the weight planes through memory once
+    // per band tile; the ungrouped run re-streams them per op. Same
+    // ops, same kernel dispatch, bit-identical outputs — the series
+    // pair measures the memory-traffic win (perf_gate checks grouped
+    // is never slower).
+    let gw = Arc::new(Mat::new(256, 64, randn(256 * 64, 300)).unwrap());
+    let gxs: Vec<Arc<Mat>> = (0..64)
+        .map(|i| {
+            let m = 8 + (i * 7) % 48;
+            Arc::new(Mat::new(m, 256, randn(m * 256, 400 + i as u64)).unwrap())
+        })
+        .collect();
+    let group_macs: f64 = gxs.iter().map(|x| (x.rows * 64 * 256) as f64).sum();
+    let gops = |xs: &[Arc<Mat>]| -> Vec<OwnedGemmOp> {
+        xs.iter()
+            .map(|x| OwnedGemmOp::new(Arc::clone(x), Arc::clone(&gw), batch_fmt).unwrap())
+            .collect()
+    };
+    suite.bench_items(
+        "BatchGemm 64 shared-weight ops grouped (MACs)",
+        Some(group_macs),
+        || {
+            let ops = gops(&gxs);
+            std::hint::black_box(BatchGemm::new(rt).group_min_ops(2).run(&ops).unwrap());
+        },
+    );
+    suite.bench_items(
+        "BatchGemm 64 shared-weight ops ungrouped (MACs)",
+        Some(group_macs),
+        || {
+            let ops = gops(&gxs);
+            std::hint::black_box(BatchGemm::new(rt).group_min_ops(0).run(&ops).unwrap());
+        },
+    );
     // The public single-op API: since PR 3 this routes through the
     // async service (admission + ticket + operand copies), so the gap
     // between this series and the 1-op-batch baseline above *is* the

@@ -8,6 +8,17 @@
 //!   block-dot inner loops ([`BlockDot`]), so every backend is
 //!   bit-identical by construction: integer MACs are exact, and the
 //!   f64 accumulation order is fixed by the shared loop.
+//! * **Grouped entry** — [`GemmKernel::run_band_macs_grouped`] is the
+//!   weight-stationary batch entry: one shared weight, many
+//!   [`GroupedMacSegment`]s (each a different activation matrix plus
+//!   its own disjoint MAC-plane slice). The provided default simply
+//!   iterates the per-segment [`GemmKernel::run_band_macs`], so every
+//!   backend is grouped-vs-per-op bit-identical *by construction* —
+//!   a backend may override it to hoist weight-plane loads across
+//!   segments, but each segment's MACs are exact independent `i32`s,
+//!   so the contract stays: same bits as running the segments one by
+//!   one. The batch scheduler uses this entry to stream each encoded
+//!   weight through memory once per band tile per group.
 //! * **Backends** — [`ScalarTiledKernel`] (portable reference, runs
 //!   every plane-layout pair), [`AutovecKernel`] (unrolled,
 //!   autovectorization-friendly `i8`/nibble loops for narrow planes),
@@ -124,6 +135,23 @@ pub struct MacBandTask<'a> {
     pub macs: &'a mut [i32],
 }
 
+/// One activation segment of a **grouped** (weight-stationary) MAC
+/// band: a band-local slice of one member op's activation rows plus
+/// the op's own MAC plane to fill. A grouped band task is a sequence
+/// of these segments against one shared weight — see
+/// [`GemmKernel::run_band_macs_grouped`].
+pub struct GroupedMacSegment<'a> {
+    /// The member op's encoded activation operand.
+    pub x: &'a BfpMatrix,
+    /// First activation row of this segment within `x`.
+    pub r0: usize,
+    /// Activation rows in this segment.
+    pub rows: usize,
+    /// The segment's band-local slice of the member op's MAC plane,
+    /// laid out exactly like [`MacBandTask::macs`].
+    pub macs: &'a mut [i32],
+}
+
 /// A band-level GEMM micro-kernel. Implementations must be pure
 /// functions of the task (no scheduling decisions) and must accumulate
 /// each output element's blocks in ascending contraction order so that
@@ -154,6 +182,37 @@ pub trait GemmKernel: Send + Sync {
     /// decode stage reproduces the fused path bit-for-bit.
     fn run_band_macs(&self, task: MacBandTask<'_>) {
         run_band_macs_generic(task);
+    }
+
+    /// The **grouped** (weight-stationary) form of
+    /// [`GemmKernel::run_band_macs`]: one shared weight operand against
+    /// a sequence of activation segments from different member ops of a
+    /// same-weight group. The contract is pure iteration — each segment
+    /// is exactly one `run_band_macs` call with the shared `w` — so the
+    /// stored MACs are bit-identical to per-op execution **by
+    /// construction** (every stored MAC is an independent exact `i32`;
+    /// no accumulator ever crosses a segment). What grouping changes is
+    /// *locality*: consecutive segments stream the same weight
+    /// mantissa/exponent planes, so the weight is loaded through the
+    /// cache hierarchy once per band task instead of once per op.
+    ///
+    /// The default inherits every backend's own tuned inner loops via
+    /// its `run_band_macs` override — backends need no grouped-specific
+    /// code, and a backend that *can* do better (e.g. pinning the
+    /// weight panel in registers across segments) may override this
+    /// while preserving the stored-MAC contract. Callers must check
+    /// [`mac_split_supported`] per segment's layout pair, same as the
+    /// per-op entry.
+    fn run_band_macs_grouped(&self, w: &BfpMatrix, segments: &mut [GroupedMacSegment<'_>]) {
+        for seg in segments.iter_mut() {
+            self.run_band_macs(MacBandTask {
+                x: seg.x,
+                w,
+                r0: seg.r0,
+                rows: seg.rows,
+                macs: &mut *seg.macs,
+            });
+        }
     }
 }
 

@@ -32,7 +32,20 @@
 //!   split execution path
 //!   ([`BatchGemm::run_split_with_stats`](scheduler::BatchGemm::run_split_with_stats)):
 //!   narrow-mantissa ops stop after storing raw `i32` block MACs into
-//!   arena-backed planes; wide ops run the fused kernel. The blocking
+//!   arena-backed planes; wide ops run the fused kernel. Since PR 10
+//!   the split path is **weight-stationary**: split ops sharing one
+//!   encoded weight — keyed by `(content digest, mantissa bits, block
+//!   size)` — execute as a single grouped GEMM whose logical tall-M
+//!   operand stacks the member activations, so the shared weight
+//!   planes stream through memory once per band tile per *group*
+//!   instead of once per *op*. Each member's MAC plane is written in
+//!   place (the stack is virtual; scatter is free), the queue's
+//!   `pop_batch` pulls same-digest ops into a batch's MAC-budget
+//!   headroom without ever jumping a waiting higher-priority class,
+//!   and `BOOSTERS_GROUP_MIN_OPS` (default 2; `0` disables) gates the
+//!   whole path. Stored split-path MACs are exact independent `i32`
+//!   integers, so grouped and per-op traversal are bit-identical by
+//!   construction (pinned by `tests/property_group.rs`). The blocking
 //!   [`BatchGemm::run`] stays a thin synchronous facade for
 //!   tests/benches — it never touches the arena or the decode stage;
 //! * **stage 3 — decode/writeback**: a dedicated decode thread turns

@@ -34,7 +34,7 @@
 //! reference (`tests/property_service.rs` pins this).
 
 use super::pool::{lock_or_poisoned, wait_or_poisoned, wait_timeout_or_poisoned};
-use super::scheduler::OwnedGemmOp;
+use super::scheduler::{GroupKey, OwnedGemmOp};
 use crate::bfp::Mat;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -351,6 +351,11 @@ pub(crate) struct Pending {
     /// encoder claimed this request (0 when never claimed). Released
     /// when the request pops into a batch.
     pre_encode_charged: u64,
+    /// Weight-identity key for group-aware batch selection, computed at
+    /// admission (outside the lock) when grouping is enabled. `None`
+    /// when `group_min_ops == 0` — the pop path then never inspects
+    /// weight identity at all.
+    group_key: Option<GroupKey>,
     seq: u64,
 }
 
@@ -407,10 +412,15 @@ pub(crate) struct SubmitQueue {
     /// Signals blocked submitters: space freed.
     space_cv: Condvar,
     capacity: usize,
+    /// Same-weight grouping threshold of the execution stage (0 =
+    /// grouping disabled). The queue only uses it as an on/off switch:
+    /// when on, admission fingerprints each op's weight and `pop_batch`
+    /// prefers same-weight ops when filling out a budget-cut batch.
+    group_min_ops: usize,
 }
 
 impl SubmitQueue {
-    pub(crate) fn new(capacity: usize) -> Self {
+    pub(crate) fn new(capacity: usize, group_min_ops: usize) -> Self {
         Self {
             state: Mutex::new(QueueState {
                 pending: Vec::new(),
@@ -423,6 +433,7 @@ impl SubmitQueue {
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
             capacity: capacity.max(1),
+            group_min_ops,
         }
     }
 
@@ -462,6 +473,7 @@ impl SubmitQueue {
         op: OwnedGemmOp,
         deadline: Option<Duration>,
         priority: Priority,
+        group_key: Option<GroupKey>,
     ) -> Arc<TicketInner> {
         let ticket = TicketInner::new();
         let now = Instant::now();
@@ -477,6 +489,7 @@ impl SubmitQueue {
             encode_claimed: false,
             queued: Arc::new(AtomicBool::new(true)),
             pre_encode_charged: 0,
+            group_key,
             seq: st.seq,
         });
         st.peak_depth = st.peak_depth.max(st.pending.len());
@@ -549,8 +562,17 @@ impl SubmitQueue {
         }
     }
 
+    /// Weight fingerprint for group-aware batch selection, computed
+    /// **before** taking the state lock (hashing a large weight under
+    /// the lock would serialize every submitter). The digest is cached
+    /// in the op's shared slot, so resubmitted clones pay it once.
+    fn group_key_for(&self, req: &GemmRequest) -> Option<GroupKey> {
+        (self.group_min_ops > 0).then(|| req.op.group_key())
+    }
+
     /// Non-blocking admission (the `submit` contract).
     pub(crate) fn push(&self, req: GemmRequest) -> Result<Arc<TicketInner>, AdmissionError> {
+        let group_key = self.group_key_for(&req);
         let mut st = lock_or_poisoned(&self.state, "service queue");
         if st.shutdown {
             return Err(AdmissionError::ShuttingDown);
@@ -560,7 +582,7 @@ impl SubmitQueue {
                 capacity: self.capacity,
             });
         }
-        Ok(self.admit_locked(&mut st, req.op, req.deadline, req.priority))
+        Ok(self.admit_locked(&mut st, req.op, req.deadline, req.priority, group_key))
     }
 
     /// Blocking admission for the synchronous facades: waits for space
@@ -569,13 +591,14 @@ impl SubmitQueue {
         &self,
         req: GemmRequest,
     ) -> Result<Arc<TicketInner>, AdmissionError> {
+        let group_key = self.group_key_for(&req);
         let mut st = lock_or_poisoned(&self.state, "service queue");
         loop {
             if st.shutdown {
                 return Err(AdmissionError::ShuttingDown);
             }
             if st.pending.len() < self.capacity {
-                return Ok(self.admit_locked(&mut st, req.op, req.deadline, req.priority));
+                return Ok(self.admit_locked(&mut st, req.op, req.deadline, req.priority, group_key));
             }
             st = wait_or_poisoned(&self.space_cv, st, "service queue");
         }
@@ -646,6 +669,57 @@ impl SubmitQueue {
             rank[i] = taken;
             taken += 1;
         }
+        // ---- group-aware fill ---------------------------------------
+        // A budget-cut batch leaves MAC headroom behind ops too big to
+        // fit. Spend it on ops that share a weight with something
+        // already taken: they ride the weight-stationary grouped path
+        // for free, and every same-weight op pulled forward is one
+        // fewer re-stream of the same encoded planes in a later batch.
+        // EDF is bent, never broken: only ops of the **highest priority
+        // class still waiting** are eligible (a Bulk op can never jump
+        // a waiting Interactive one), and the MAC budget still binds.
+        if self.group_min_ops > 0 && taken < max_ops.max(1) {
+            let mut keys: Vec<GroupKey> = Vec::new();
+            for (i, r) in rank.iter().enumerate() {
+                if *r == usize::MAX {
+                    continue;
+                }
+                if let Some(k) = st.pending[i].group_key {
+                    if !keys.contains(&k) {
+                        keys.push(k);
+                    }
+                }
+            }
+            let limit = order
+                .iter()
+                .filter(|&&i| rank[i] == usize::MAX)
+                .map(|&i| st.pending[i].priority)
+                .min();
+            if let (false, Some(limit)) = (keys.is_empty(), limit) {
+                for &i in &order {
+                    if taken >= max_ops.max(1) {
+                        break;
+                    }
+                    if rank[i] != usize::MAX {
+                        continue;
+                    }
+                    let p = &st.pending[i];
+                    if p.priority != limit {
+                        continue;
+                    }
+                    let Some(k) = p.group_key else { continue };
+                    if !keys.contains(&k) {
+                        continue;
+                    }
+                    if budget.saturating_add(p.macs) > max_macs {
+                        continue;
+                    }
+                    budget = budget.saturating_add(p.macs);
+                    rank[i] = taken;
+                    taken += 1;
+                }
+            }
+        }
         let mut batch: Vec<Option<Pending>> = (0..taken).map(|_| None).collect();
         let mut rest = Vec::with_capacity(st.pending.len() - taken);
         let mut released = 0u64;
@@ -707,7 +781,7 @@ mod tests {
 
     #[test]
     fn bounded_push_reports_queue_full() {
-        let q = SubmitQueue::new(2);
+        let q = SubmitQueue::new(2, 0);
         q.push(req(1)).unwrap();
         q.push(req(2)).unwrap();
         match q.push(req(3)) {
@@ -720,7 +794,7 @@ mod tests {
 
     #[test]
     fn pop_batch_is_edf_within_priority_under_mac_budget() {
-        let q = SubmitQueue::new(16);
+        let q = SubmitQueue::new(16, 0);
         // Bulk with the earliest deadline, then interactive requests
         // with deadlines out of submission order, then one with none.
         q.push(req(1).with_priority(Priority::Bulk).with_deadline(Duration::from_millis(1)))
@@ -749,7 +823,7 @@ mod tests {
 
     #[test]
     fn mac_budget_cuts_batches_but_never_starves() {
-        let q = SubmitQueue::new(16);
+        let q = SubmitQueue::new(16, 0);
         for m in [8usize, 8, 8] {
             q.push(req(m)).unwrap();
         }
@@ -766,9 +840,66 @@ mod tests {
         assert_eq!(q.depth(), 0);
     }
 
+    /// Request over a weight whose content is `fill` everywhere —
+    /// distinct fills give distinct group keys, equal fills share one.
+    fn wreq(m: usize, fill: f32) -> GemmRequest {
+        let x = Arc::new(Mat::zeros(m, 16));
+        let w = Arc::new(Mat::new(16, 2, vec![fill; 32]).unwrap());
+        GemmRequest::new(OwnedGemmOp::new(x, w, BlockFormat::new(4, 16).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn group_aware_pop_pulls_same_weight_ops_into_budget_headroom() {
+        // A (32 MACs, weight W1), B (256 MACs, W2), C (32 MACs, W1).
+        // A 100-MAC budget cuts after A; the group-aware fill pulls C
+        // (same weight, fits the headroom) past B, which waits.
+        let q = SubmitQueue::new(16, 2);
+        q.push(wreq(1, 1.0)).unwrap();
+        q.push(wreq(8, 2.0)).unwrap();
+        q.push(wreq(1, 1.0)).unwrap();
+        let (batch, _) = q.pop_batch(100, 16, false).unwrap();
+        assert_eq!(batch.len(), 2, "same-weight op fills the headroom");
+        assert!(batch.iter().all(|p| p.op.x.rows == 1));
+        assert_eq!(q.depth(), 1, "the big foreign-weight op waits");
+        // The fill still honors the MAC budget: nothing else fits.
+        let (rest, _) = q.pop_batch(usize::MAX, 16, false).unwrap();
+        assert_eq!(rest[0].op.x.rows, 8);
+
+        // Grouping disabled: the identical scenario takes only A.
+        let q0 = SubmitQueue::new(16, 0);
+        q0.push(wreq(1, 1.0)).unwrap();
+        q0.push(wreq(8, 2.0)).unwrap();
+        q0.push(wreq(1, 1.0)).unwrap();
+        let (batch0, _) = q0.pop_batch(100, 16, false).unwrap();
+        assert_eq!(batch0.len(), 1);
+        assert_eq!(q0.depth(), 2);
+    }
+
+    #[test]
+    fn group_aware_pop_never_jumps_a_higher_priority_class() {
+        // Taken: one Interactive op over W1. Waiting: an Interactive op
+        // over W2 (too big for the budget) and a Bulk op over W1 that
+        // would fit. The Bulk op must NOT be pulled past the waiting
+        // Interactive class, same weight or not.
+        let q = SubmitQueue::new(16, 2);
+        q.push(wreq(8, 1.0).with_priority(Priority::Interactive))
+            .unwrap();
+        q.push(wreq(8, 2.0).with_priority(Priority::Interactive))
+            .unwrap();
+        q.push(wreq(1, 1.0).with_priority(Priority::Bulk)).unwrap();
+        let (batch, _) = q.pop_batch(280, 16, false).unwrap();
+        assert_eq!(batch.len(), 1, "no pull past a waiting higher class");
+        assert_eq!(batch[0].op.x.rows, 8);
+        assert_eq!(q.depth(), 2);
+        // Within one class the pull is allowed: drain the second
+        // Interactive op, then Bulk comes out alone.
+        let (b2, _) = q.pop_batch(usize::MAX, 16, false).unwrap();
+        assert_eq!(b2.len(), 2);
+    }
+
     #[test]
     fn adaptive_pop_cuts_only_when_the_edf_head_is_due() {
-        let q = SubmitQueue::new(8);
+        let q = SubmitQueue::new(8, 0);
         let base = 1 << 20;
         // No deadlines pending: the budget scales with depth, no cut.
         q.push(req(1)).unwrap();
@@ -785,7 +916,7 @@ mod tests {
 
     #[test]
     fn claim_encode_work_marks_each_request_once() {
-        let q = SubmitQueue::new(8);
+        let q = SubmitQueue::new(8, 0);
         q.push(req(1)).unwrap();
         q.push(req(2)).unwrap();
         q.push(req(3)).unwrap();
@@ -809,7 +940,7 @@ mod tests {
 
     #[test]
     fn claim_encode_work_hands_out_edf_order() {
-        let q = SubmitQueue::new(8);
+        let q = SubmitQueue::new(8, 0);
         // Admission order 1, 2, 3 — EDF order 3, 2, 1 (interactive
         // deadlines before the bulk request).
         q.push(req(1).with_priority(Priority::Bulk)).unwrap();
@@ -831,7 +962,7 @@ mod tests {
         // requests the scheduler will pop first, not admission order.
         assert_eq!(rows, vec![3, 2, 1]);
         // A capped claim also takes the EDF head of what remains.
-        let q2 = SubmitQueue::new(8);
+        let q2 = SubmitQueue::new(8, 0);
         q2.push(req(4).with_priority(Priority::Bulk)).unwrap();
         q2.push(req(5).with_deadline(Duration::from_millis(1)).with_priority(Priority::Bulk))
             .unwrap();
@@ -841,7 +972,7 @@ mod tests {
 
     #[test]
     fn pre_encode_budget_stalls_claims_and_pops_release_bytes() {
-        let q = SubmitQueue::new(8);
+        let q = SubmitQueue::new(8, 0);
         q.push(req(1)).unwrap();
         q.push(req(2)).unwrap();
         let est = op(1, 16, 2).pre_encode_estimate_bytes();
@@ -892,7 +1023,7 @@ mod tests {
 
     #[test]
     fn shutdown_drains_then_stops() {
-        let q = SubmitQueue::new(4);
+        let q = SubmitQueue::new(4, 0);
         q.push(req(1)).unwrap();
         q.shutdown();
         assert!(matches!(q.push(req(2)), Err(AdmissionError::ShuttingDown)));

@@ -54,6 +54,7 @@ use super::ExecRuntime;
 use crate::bfp::gemm::{band_shifts, band_shifts_into, BandTask, PARALLEL_MIN_MACS};
 use crate::bfp::kernels::{self, GemmKernel, GemmShape, KernelOpCounts, MacBandTask};
 use crate::bfp::{BfpMatrix, BlockFormat, Mat, PlaneLayout, Quantizer};
+use crate::util::{content_fingerprint, Digest};
 use anyhow::{bail, Context, Result};
 use std::sync::{Arc, OnceLock};
 use std::time::Instant;
@@ -97,7 +98,19 @@ pub struct OwnedGemmOp {
     pub fmt: BlockFormat,
     /// Shared across clones; see the type docs.
     pub(crate) encoded: Arc<OnceLock<PreEncoded>>,
+    /// Lazily computed weight fingerprint, shared across clones — the
+    /// grouping identity the weight-stationary batch path and the
+    /// queue's group-aware `pop_batch` both key on.
+    pub(crate) digest: Arc<OnceLock<Digest>>,
 }
+
+/// Weight-identity key for weight-stationary grouped execution and the
+/// queue's group-aware batch selection: the 128-bit content fingerprint
+/// (it covers data *and* shape, so equal digests imply equal `K` and
+/// `N`) plus the block format, which fixes the encoded plane layout and
+/// block partitioning. Two ops with equal keys are guaranteed to share
+/// bit-identical encoded weight planes.
+pub(crate) type GroupKey = (Digest, u32, usize);
 
 impl OwnedGemmOp {
     /// Build an op, validating the contraction dims up front (the
@@ -111,7 +124,26 @@ impl OwnedGemmOp {
             w,
             fmt,
             encoded: Arc::new(OnceLock::new()),
+            digest: Arc::new(OnceLock::new()),
         })
+    }
+
+    /// Content fingerprint of the weight operand — the same digest the
+    /// operand cache and the fabric compute for this matrix. Computed
+    /// at most once and shared across clones.
+    pub(crate) fn weight_digest(&self) -> Digest {
+        *self
+            .digest
+            .get_or_init(|| content_fingerprint(&self.w.data, self.w.rows, self.w.cols))
+    }
+
+    /// Grouping key for weight-stationary execution; see [`GroupKey`].
+    pub(crate) fn group_key(&self) -> GroupKey {
+        (
+            self.weight_digest(),
+            self.fmt.mantissa_bits,
+            self.fmt.block_size,
+        )
     }
 
     /// Convenience for callers that hold plain `&Mat`s: copies both
@@ -212,6 +244,35 @@ pub struct EncodeReport {
     /// and M×N×K bucket — the ground truth behind the configured
     /// `KernelChoice` (a forced backend can still degrade per op).
     pub kernel_ops: KernelOpCounts,
+    /// Ops executed through a weight-stationary group (split path only;
+    /// the remaining `pre_encoded + inline_encoded - grouped_ops` ran
+    /// per-op).
+    pub grouped_ops: usize,
+    /// Weight-stationary groups formed for this batch (each has at
+    /// least two member ops).
+    pub groups_formed: usize,
+    /// Encoded weight plane bytes (mantissas + exponents) the grouped
+    /// path did *not* re-stream: for a group of `g` ops the weight is
+    /// loaded once per band tile instead of `g` times, saving
+    /// `(g - 1) x plane_bytes`.
+    pub weight_plane_loads_avoided: u64,
+}
+
+/// Per-op execution plan alongside the staged buffer of the split
+/// path. Fused ops keep their shift planes here (dropped after the
+/// GEMM stage); split ops carry theirs inside `StagedOut::Macs`
+/// because the decode stage needs them later.
+struct Plan {
+    kernel: &'static dyn GemmKernel,
+    band: usize,
+    fused_shifts: Option<(Vec<i32>, Vec<i32>)>,
+}
+
+/// Resident bytes of one encoded operand's planes (mantissas +
+/// per-block `i32` exponents) — what a weight-stationary group avoids
+/// re-streaming for every member after the first.
+fn encoded_plane_bytes(m: &BfpMatrix) -> u64 {
+    m.mantissas.resident_bytes() as u64 + (m.exponents.len() as u64) * 4
 }
 
 /// Batched GEMM executor over an [`ExecRuntime`] (see module docs).
@@ -220,6 +281,7 @@ pub struct BatchGemm<'rt> {
     band_rows: Option<usize>,
     cache_weights: bool,
     kernel: Option<&'static dyn GemmKernel>,
+    group_min_ops: usize,
 }
 
 impl<'rt> BatchGemm<'rt> {
@@ -229,6 +291,7 @@ impl<'rt> BatchGemm<'rt> {
             band_rows: None,
             cache_weights: true,
             kernel: None,
+            group_min_ops: crate::util::group_min_ops(),
         }
     }
 
@@ -254,6 +317,16 @@ impl<'rt> BatchGemm<'rt> {
     /// This is how the property suites pin every registered backend.
     pub fn with_kernel(mut self, kernel: &'static dyn GemmKernel) -> Self {
         self.kernel = Some(kernel);
+        self
+    }
+
+    /// Minimum number of same-weight split-path ops before the batch
+    /// executes them as one weight-stationary group (`0` disables
+    /// grouping). Defaults to the `BOOSTERS_GROUP_MIN_OPS` env knob.
+    /// Grouping never changes numerics — it only changes how many
+    /// times the shared weight planes stream through memory.
+    pub fn group_min_ops(mut self, min_ops: usize) -> Self {
+        self.group_min_ops = min_ops;
         self
     }
 
@@ -381,7 +454,7 @@ impl<'rt> BatchGemm<'rt> {
             pre_encoded,
             inline_encoded,
             encode_ns: encode_started.elapsed().as_nanos() as u64,
-            kernel_ops: KernelOpCounts::default(),
+            ..EncodeReport::default()
         };
         Ok((xenc, wenc, report))
     }
@@ -472,35 +545,31 @@ impl<'rt> BatchGemm<'rt> {
             .map(OwnedGemmOp::macs)
             .fold(0usize, usize::saturating_add);
 
-        // Per-op execution plan alongside the staged buffer. Fused ops
-        // keep their shift planes here (dropped after the GEMM stage);
-        // split ops carry theirs inside `StagedOut::Macs` because the
-        // decode stage needs them later.
-        struct Plan {
-            kernel: &'static dyn GemmKernel,
-            band: usize,
-            fused_shifts: Option<(Vec<i32>, Vec<i32>)>,
-        }
+        // Weight-stationary grouping: split-path ops sharing a weight
+        // group key execute as one tall-M grouped GEMM so the shared
+        // weight planes stream through memory once per band tile per
+        // group instead of once per op. `group_min_ops == 0` disables
+        // grouping; a group needs at least two members to save anything
+        // either way.
+        let min_group = match self.group_min_ops {
+            0 => usize::MAX,
+            n => n.max(2),
+        };
+        let grouping = min_group != usize::MAX;
 
         let mut staged: Vec<StagedOut> = Vec::with_capacity(ops.len());
         let mut plans: Vec<Option<Plan>> = Vec::with_capacity(ops.len());
+        let mut split_keys: Vec<Option<GroupKey>> = Vec::with_capacity(ops.len());
         for ((op, xp), wp) in ops.iter().zip(&xenc).zip(&wenc) {
             let (m, n) = (xp.rows, wp.rows);
             if m == 0 || n == 0 {
                 staged.push(StagedOut::Fused(Mat::zeros(op.x.rows, op.w.cols)));
                 plans.push(None);
+                split_keys.push(None);
                 continue;
             }
             let (xl, wl) = (xp.mantissas.layout(), wp.mantissas.layout());
             let block = xp.fmt.block_size;
-            let shape = GemmShape::new(m, n, xp.cols);
-            let kernel = match self.kernel {
-                Some(k) => kernels::registry().select_from(k, xl, wl, block),
-                None => kernels::active_kernel(xl, wl, block, shape),
-            };
-            report.kernel_ops.record(kernel.name(), shape.mnk_bucket());
-            let macs = m.saturating_mul(n).saturating_mul(xp.cols);
-            let band = self.band_for(m, macs, total_macs, threads);
             let kb = xp.blocks_per_row;
             if kernels::mac_split_supported(xl, wl, block) && kb > 0 {
                 let mut xsh = arena.take_i32(m * kb);
@@ -515,12 +584,25 @@ impl<'rt> BatchGemm<'rt> {
                     n,
                     kb,
                 });
-                plans.push(Some(Plan {
-                    kernel,
-                    band,
-                    fused_shifts: None,
-                }));
+                if grouping {
+                    // Kernel dispatch and banding are deferred for
+                    // split ops while grouping is on: both depend on
+                    // whether this op lands in a group (the grouped
+                    // path dispatches on the stacked M).
+                    plans.push(None);
+                    split_keys.push(Some(op.group_key()));
+                } else {
+                    plans.push(Some(self.per_op_plan(xp, wp, &mut report, total_macs, threads)));
+                    split_keys.push(None);
+                }
             } else {
+                let shape = GemmShape::new(m, n, xp.cols);
+                let kernel = match self.kernel {
+                    Some(k) => kernels::registry().select_from(k, xl, wl, block),
+                    None => kernels::active_kernel(xl, wl, block, shape),
+                };
+                report.kernel_ops.record(kernel.name(), shape.mnk_bucket());
+                let macs = m.saturating_mul(n).saturating_mul(xp.cols);
                 staged.push(StagedOut::Fused(Mat {
                     rows: m,
                     cols: n,
@@ -528,19 +610,131 @@ impl<'rt> BatchGemm<'rt> {
                 }));
                 plans.push(Some(Plan {
                     kernel,
-                    band,
+                    band: self.band_for(m, macs, total_macs, threads),
                     fused_shifts: Some((band_shifts(xp), band_shifts(wp))),
                 }));
+                split_keys.push(None);
+            }
+        }
+
+        // ---- group formation ----------------------------------------
+        // Bucket split-path ops by weight identity in submission order.
+        // Sub-threshold buckets fall back to the per-op plan;
+        // qualifying buckets become weight-stationary groups whose
+        // kernel and band height come from the stacked (tall-M) shape,
+        // so autotune buckets on the M the hardware actually streams.
+        struct GroupExec {
+            members: Vec<usize>,
+            kernel: &'static dyn GemmKernel,
+            band: usize,
+        }
+        let mut groups: Vec<GroupExec> = Vec::new();
+        if grouping {
+            let mut buckets: Vec<(GroupKey, Vec<usize>)> = Vec::new();
+            for (i, key) in split_keys.iter().enumerate() {
+                let Some(key) = key else { continue };
+                match buckets.iter_mut().find(|(k, _)| k == key) {
+                    Some((_, members)) => members.push(i),
+                    None => buckets.push((*key, vec![i])),
+                }
+            }
+            for (_, members) in buckets {
+                if members.len() < min_group {
+                    for &i in &members {
+                        plans[i] = Some(self.per_op_plan(
+                            &xenc[i],
+                            &wenc[i],
+                            &mut report,
+                            total_macs,
+                            threads,
+                        ));
+                    }
+                    continue;
+                }
+                let (xp0, wp0) = (&xenc[members[0]], &wenc[members[0]]);
+                let (n, k) = (wp0.rows, xp0.cols);
+                let (xl, wl) = (xp0.mantissas.layout(), wp0.mantissas.layout());
+                let block = xp0.fmt.block_size;
+                let total_m: usize = members.iter().map(|&i| xenc[i].rows).sum();
+                let gshape = GemmShape::new(total_m, n, k);
+                let kernel = match self.kernel {
+                    Some(kk) => kernels::registry().select_from(kk, xl, wl, block),
+                    None => kernels::active_kernel(xl, wl, block, gshape),
+                };
+                for _ in &members {
+                    report.kernel_ops.record(kernel.name(), gshape.mnk_bucket());
+                }
+                let gmacs = total_m.saturating_mul(n).saturating_mul(k);
+                report.grouped_ops += members.len();
+                report.groups_formed += 1;
+                report.weight_plane_loads_avoided +=
+                    encoded_plane_bytes(wp0).saturating_mul(members.len() as u64 - 1);
+                groups.push(GroupExec {
+                    band: self.band_for(total_m, gmacs, total_macs, threads),
+                    members,
+                    kernel,
+                });
             }
         }
 
         let mut jobs: Vec<Job> = Vec::new();
-        for ((st, plan), (xp, wp)) in staged.iter_mut().zip(&plans).zip(xenc.iter().zip(&wenc)) {
+        // Grouped members' staged slots are taken here; the per-op loop
+        // below only sees what grouping left behind.
+        let mut slots: Vec<Option<&mut StagedOut>> = staged.iter_mut().map(Some).collect();
+        for g in &groups {
+            let wref: &BfpMatrix = wenc[g.members[0]].as_ref();
+            let kernel = g.kernel;
+            let band = g.band;
+            let total_m: usize = g.members.iter().map(|&i| xenc[i].rows).sum();
+            // One segment list per band tile of the stacked row space:
+            // each member contributes the consecutive slice of its MAC
+            // plane that falls inside the tile, carved with
+            // `split_at_mut` so every band job owns disjoint storage —
+            // the per-op "scatter" is free because members' MACs are
+            // written in place, in their own planes.
+            let mut per_band: Vec<Vec<kernels::GroupedMacSegment<'_>>> =
+                (0..total_m.div_ceil(band)).map(|_| Vec::new()).collect();
+            let mut off = 0usize;
+            for &i in &g.members {
+                let st = slots[i].take().expect("grouped member owns its staged slot");
+                let StagedOut::Macs { macs, m, n, kb, .. } = st else {
+                    continue; // unreachable: groups form over split ops only
+                };
+                let (m, n, kb) = (*m, *n, *kb);
+                let xref: &BfpMatrix = xenc[i].as_ref();
+                let mut rest: &mut [i32] = &mut macs[..m * n * kb];
+                let mut row = 0usize;
+                while row < m {
+                    let tile = (off + row) / band;
+                    let rows = ((tile + 1) * band - (off + row)).min(m - row);
+                    let (seg, tail) = rest.split_at_mut(rows * n * kb);
+                    per_band[tile].push(kernels::GroupedMacSegment {
+                        x: xref,
+                        r0: row,
+                        rows,
+                        macs: seg,
+                    });
+                    rest = tail;
+                    row += rows;
+                }
+                off += m;
+            }
+            for mut segs in per_band {
+                if segs.is_empty() {
+                    continue;
+                }
+                jobs.push(Box::new(move || {
+                    kernel.run_band_macs_grouped(wref, &mut segs);
+                }) as Job);
+            }
+        }
+        for (i, plan) in plans.iter().enumerate() {
             let Some(plan) = plan else { continue };
+            let Some(st) = slots[i].take() else { continue };
             let kernel = plan.kernel;
             let band = plan.band;
-            let xref: &BfpMatrix = xp;
-            let wref: &BfpMatrix = wp;
+            let xref: &BfpMatrix = xenc[i].as_ref();
+            let wref: &BfpMatrix = wenc[i].as_ref();
             match st {
                 StagedOut::Macs { macs, n, kb, .. } => {
                     let (n, kb) = (*n, *kb);
@@ -578,8 +772,37 @@ impl<'rt> BatchGemm<'rt> {
                 }
             }
         }
+        drop(slots);
         self.rt.pool().scope_run(jobs);
         Ok(StagedBatch { staged, report })
+    }
+
+    /// Per-op split plan — kernel dispatch on the op's own shape plus
+    /// its MAC-proportional band height. Shared by the grouping-off
+    /// path and by sub-threshold grouping buckets.
+    fn per_op_plan(
+        &self,
+        xp: &BfpMatrix,
+        wp: &BfpMatrix,
+        report: &mut EncodeReport,
+        total_macs: usize,
+        threads: usize,
+    ) -> Plan {
+        let (m, n) = (xp.rows, wp.rows);
+        let (xl, wl) = (xp.mantissas.layout(), wp.mantissas.layout());
+        let block = xp.fmt.block_size;
+        let shape = GemmShape::new(m, n, xp.cols);
+        let kernel = match self.kernel {
+            Some(k) => kernels::registry().select_from(k, xl, wl, block),
+            None => kernels::active_kernel(xl, wl, block, shape),
+        };
+        report.kernel_ops.record(kernel.name(), shape.mnk_bucket());
+        let macs = m.saturating_mul(n).saturating_mul(xp.cols);
+        Plan {
+            kernel,
+            band: self.band_for(m, macs, total_macs, threads),
+            fused_shifts: None,
+        }
     }
 
     /// Shard height for one op: the explicit override, or a height that
@@ -728,12 +951,14 @@ mod tests {
                     w: w_ok,
                     fmt,
                     encoded: Default::default(),
+                    digest: Default::default(),
                 },
                 OwnedGemmOp {
                     x: a,
                     w: w_bad,
                     fmt,
                     encoded: Default::default(),
+                    digest: Default::default(),
                 },
             ])
             .unwrap_err();
@@ -901,6 +1126,61 @@ mod tests {
         assert!(after.hits > before.hits, "{after:?}");
         for s in batch.staged {
             rt.arena().put_f32(decode_staged(&rt, s).data);
+        }
+    }
+
+    #[test]
+    fn grouped_split_matches_per_op_and_counts() {
+        let rt = ExecRuntime::with_threads(3);
+        let mut rng = Rng::new(0x6A0);
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        let w = randmat(&mut rng, 48, 7);
+        let other = randmat(&mut rng, 48, 7);
+        // Three ops share `w` (one group), one op is a singleton.
+        let ops: Vec<OwnedGemmOp> = vec![
+            OwnedGemmOp::new(randmat(&mut rng, 5, 48), Arc::clone(&w), fmt).unwrap(),
+            OwnedGemmOp::new(randmat(&mut rng, 3, 48), other, fmt).unwrap(),
+            OwnedGemmOp::new(randmat(&mut rng, 9, 48), Arc::clone(&w), fmt).unwrap(),
+            OwnedGemmOp::new(randmat(&mut rng, 2, 48), w, fmt).unwrap(),
+        ];
+        let grouped = BatchGemm::new(&rt)
+            .group_min_ops(2)
+            .run_split_with_stats(&ops)
+            .unwrap();
+        assert_eq!(grouped.report.grouped_ops, 3, "{:?}", grouped.report);
+        assert_eq!(grouped.report.groups_formed, 1, "{:?}", grouped.report);
+        assert!(grouped.report.weight_plane_loads_avoided > 0);
+        assert_eq!(grouped.report.kernel_ops.total(), ops.len() as u64);
+        let off = BatchGemm::new(&rt)
+            .group_min_ops(0)
+            .run_split_with_stats(&ops)
+            .unwrap();
+        assert_eq!(off.report.grouped_ops, 0);
+        assert_eq!(off.report.groups_formed, 0);
+        assert_eq!(off.report.weight_plane_loads_avoided, 0);
+        // Tiny forced bands make every group span several band tiles;
+        // segments then cross member boundaries mid-tile.
+        let banded = BatchGemm::new(&rt)
+            .group_min_ops(2)
+            .band_rows(2)
+            .run_split_with_stats(&ops)
+            .unwrap();
+        let decode =
+            |b: StagedBatch| -> Vec<Mat> { b.staged.into_iter().map(|s| decode_staged(&rt, s)).collect() };
+        let (got, base, got_banded) = (decode(grouped), decode(off), decode(banded));
+        for (i, op) in ops.iter().enumerate() {
+            let want = hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap();
+            for (((g, b), t), s) in got[i]
+                .data
+                .iter()
+                .zip(&base[i].data)
+                .zip(&got_banded[i].data)
+                .zip(&want.data)
+            {
+                assert_eq!(g.to_bits(), b.to_bits(), "op {i}");
+                assert_eq!(g.to_bits(), t.to_bits(), "op {i}");
+                assert_eq!(g.to_bits(), s.to_bits(), "op {i}");
+            }
         }
     }
 

@@ -126,6 +126,13 @@ pub struct ServiceConfig {
     /// inline at execution. Defaults to the `BOOSTERS_PREENCODE_MB`
     /// environment knob (256 MiB when unset).
     pub pre_encode_cap_bytes: u64,
+    /// Minimum number of same-weight split-path ops in a batch before
+    /// they execute as one weight-stationary group (shared weight
+    /// planes stream through memory once per band tile per group).
+    /// `0` disables grouping — and the queue's group-aware batch fill
+    /// with it. Bit-identical either way. Defaults to the
+    /// `BOOSTERS_GROUP_MIN_OPS` environment knob (2 when unset).
+    pub group_min_ops: usize,
 }
 
 impl Default for ServiceConfig {
@@ -137,6 +144,7 @@ impl Default for ServiceConfig {
             adaptive_batch: true,
             kernel: KernelChoice::Auto,
             pre_encode_cap_bytes: crate::util::preencode_budget(),
+            group_min_ops: crate::util::group_min_ops(),
         }
     }
 }
@@ -201,6 +209,19 @@ struct ServiceCounters {
     /// separate so the overlap probe never races stats readers'
     /// expectations about `batches`.
     exec_batches_started: AtomicU64,
+    /// Split-path ops executed inside a weight-stationary group (their
+    /// shared weight planes streamed through memory once per band tile
+    /// instead of once per op).
+    grouped_ops: AtomicU64,
+    /// Ops executed outside any group — solo weights, sub-threshold
+    /// buckets, fused-path ops, and solo retries after a batch error.
+    /// `grouped_ops + ungrouped_ops == completed` always holds.
+    ungrouped_ops: AtomicU64,
+    /// Weight-stationary groups formed (each covers ≥ 2 ops).
+    groups_formed: AtomicU64,
+    /// Encoded weight-plane bytes grouping did **not** re-stream:
+    /// plane footprint × (group size − 1), summed over groups.
+    weight_plane_loads_avoided: AtomicU64,
     /// Which backend the execution stage actually dispatched per op,
     /// by M×N×K bucket (ground truth next to the configured
     /// `KernelChoice`). A mutex, not atomics: updated once per batch,
@@ -215,6 +236,18 @@ impl ServiceCounters {
         self.inline_encoded
             .fetch_add(report.inline_encoded as u64, Ordering::Relaxed);
         self.encode_ns.fetch_add(report.encode_ns, Ordering::Relaxed);
+        // Every executed op is either grouped or not; solo retries
+        // report grouped_ops == 0 and land entirely in `ungrouped`, so
+        // `grouped + ungrouped == completed` stays an invariant.
+        let total = report.pre_encoded + report.inline_encoded;
+        self.grouped_ops
+            .fetch_add(report.grouped_ops as u64, Ordering::Relaxed);
+        self.ungrouped_ops
+            .fetch_add((total - report.grouped_ops) as u64, Ordering::Relaxed);
+        self.groups_formed
+            .fetch_add(report.groups_formed as u64, Ordering::Relaxed);
+        self.weight_plane_loads_avoided
+            .fetch_add(report.weight_plane_loads_avoided, Ordering::Relaxed);
         lock_or_poisoned(&self.kernel_ops, "service kernel-op counts")
             .merge(&report.kernel_ops);
     }
@@ -275,6 +308,21 @@ pub struct ServiceStats {
     pub decoded_overlapped: u64,
     /// Cumulative decode-stage wall time in microseconds.
     pub decode_us: u64,
+    /// Split-path ops executed inside a weight-stationary group: the
+    /// scheduler stacked same-digest ops into one tall-M grouped GEMM,
+    /// streaming the shared weight planes through memory once per band
+    /// tile instead of once per op.
+    pub grouped_ops: u64,
+    /// Ops executed outside any group (solo weights, sub-threshold
+    /// buckets, fused-path ops, solo retries). The partition is exact:
+    /// `grouped_ops + ungrouped_ops == completed`.
+    pub ungrouped_ops: u64,
+    /// Weight-stationary groups formed (each covers ≥ 2 ops; divide
+    /// `grouped_ops` by this for the mean group size).
+    pub groups_formed: u64,
+    /// Encoded weight-plane bytes grouping avoided re-streaming:
+    /// plane footprint × (group size − 1), summed over groups.
+    pub weight_plane_loads_avoided: u64,
     /// Buffer-arena checkouts served from the free list.
     pub arena_hits: u64,
     /// Buffer-arena checkouts that had to allocate.
@@ -306,6 +354,10 @@ impl Default for ServiceStats {
             decode_ops: 0,
             decoded_overlapped: 0,
             decode_us: 0,
+            grouped_ops: 0,
+            ungrouped_ops: 0,
+            groups_formed: 0,
+            weight_plane_loads_avoided: 0,
             arena_hits: 0,
             arena_misses: 0,
             arena_recycled_bytes: 0,
@@ -447,7 +499,7 @@ impl BfpService {
     /// batches, direct `BatchGemm` users, and encode-only consumers all
     /// see one pool, one operand cache, and one buffer arena.
     pub fn new(rt: Arc<ExecRuntime>, cfg: ServiceConfig) -> Self {
-        let queue = Arc::new(SubmitQueue::new(cfg.queue_capacity));
+        let queue = Arc::new(SubmitQueue::new(cfg.queue_capacity, cfg.group_min_ops));
         let decode_q = Arc::new(DecodeQueue::new());
         let counters = Arc::new(ServiceCounters::default());
         counters
@@ -576,6 +628,13 @@ impl BfpService {
             decode_ops: self.counters.decode_ops.load(Ordering::Relaxed),
             decoded_overlapped: self.counters.decoded_overlapped.load(Ordering::Relaxed),
             decode_us: self.counters.decode_ns.load(Ordering::Relaxed) / 1_000,
+            grouped_ops: self.counters.grouped_ops.load(Ordering::Relaxed),
+            ungrouped_ops: self.counters.ungrouped_ops.load(Ordering::Relaxed),
+            groups_formed: self.counters.groups_formed.load(Ordering::Relaxed),
+            weight_plane_loads_avoided: self
+                .counters
+                .weight_plane_loads_avoided
+                .load(Ordering::Relaxed),
             arena_hits: arena.hits,
             arena_misses: arena.misses,
             arena_recycled_bytes: arena.recycled_bytes,
@@ -632,9 +691,10 @@ impl Drop for BfpService {
 /// A batch executor honoring the service's kernel choice (`Auto`
 /// keeps the registry's per-operand-pair dispatch).
 fn batch_stage<'rt>(rt: &'rt ExecRuntime, cfg: &ServiceConfig) -> BatchGemm<'rt> {
+    let gemm = BatchGemm::new(rt).group_min_ops(cfg.group_min_ops);
     match cfg.kernel {
-        KernelChoice::Auto => BatchGemm::new(rt),
-        choice => BatchGemm::new(rt).with_kernel(kernels::registry().resolve(choice)),
+        KernelChoice::Auto => gemm,
+        choice => gemm.with_kernel(kernels::registry().resolve(choice)),
     }
 }
 
@@ -929,6 +989,7 @@ mod tests {
             w: randmat(&mut rng, 9, 3),
             fmt,
             encoded: Default::default(),
+            digest: Default::default(),
         };
         match svc.submit(GemmRequest::new(op)) {
             Err(AdmissionError::InvalidShape { reason }) => {
@@ -1191,6 +1252,76 @@ mod tests {
         assert_eq!(stats.inline_encoded, 0, "{stats:?}");
         assert_eq!(stats.pre_encode_hit_rate(), 1.0);
         assert!(stats.encode_us > 0, "{stats:?}");
+    }
+
+    #[test]
+    fn grouped_counters_partition_completed_ops() {
+        // Pause so all ops land in one batch, four of them sharing one
+        // weight: the scheduler must form a weight-stationary group and
+        // the counters must partition exactly.
+        let svc = BfpService::new(
+            Arc::new(ExecRuntime::with_threads(2)),
+            ServiceConfig {
+                group_min_ops: 2,
+                ..Default::default()
+            },
+        );
+        svc.pause();
+        let mut rng = Rng::new(0x6209);
+        let fmt = BlockFormat::new(4, 16).unwrap();
+        let shared = randmat(&mut rng, 64, 5);
+        let solo_w = randmat(&mut rng, 64, 5);
+        let mut ops: Vec<OwnedGemmOp> = (0..4)
+            .map(|i| {
+                OwnedGemmOp::new(randmat(&mut rng, 3 + i, 64), Arc::clone(&shared), fmt).unwrap()
+            })
+            .collect();
+        ops.push(OwnedGemmOp::new(randmat(&mut rng, 4, 64), solo_w, fmt).unwrap());
+        let tickets: Vec<Ticket> = ops
+            .iter()
+            .map(|op| svc.submit(GemmRequest::new(op.clone())).unwrap())
+            .collect();
+        svc.resume();
+        for (t, op) in tickets.iter().zip(&ops) {
+            let resp = t.wait().unwrap();
+            let want = hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap();
+            for (g, s) in resp.out.data.iter().zip(&want.data) {
+                assert_eq!(g.to_bits(), s.to_bits());
+            }
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.completed, 5);
+        assert_eq!(
+            stats.grouped_ops + stats.ungrouped_ops,
+            stats.completed,
+            "{stats:?}"
+        );
+        assert_eq!(stats.grouped_ops, 4, "{stats:?}");
+        assert_eq!(stats.groups_formed, 1, "{stats:?}");
+        assert!(stats.weight_plane_loads_avoided > 0, "{stats:?}");
+
+        // With grouping disabled, the same traffic is all ungrouped.
+        let off = BfpService::new(
+            Arc::new(ExecRuntime::with_threads(2)),
+            ServiceConfig {
+                group_min_ops: 0,
+                ..Default::default()
+            },
+        );
+        off.pause();
+        let tickets: Vec<Ticket> = ops
+            .iter()
+            .map(|op| off.submit(GemmRequest::new(op.clone())).unwrap())
+            .collect();
+        off.resume();
+        for t in &tickets {
+            t.wait().unwrap();
+        }
+        let stats = off.stats();
+        assert_eq!(stats.grouped_ops, 0, "{stats:?}");
+        assert_eq!(stats.groups_formed, 0, "{stats:?}");
+        assert_eq!(stats.ungrouped_ops, 5, "{stats:?}");
+        assert_eq!(stats.weight_plane_loads_avoided, 0, "{stats:?}");
     }
 
     #[test]

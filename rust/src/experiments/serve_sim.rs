@@ -96,6 +96,13 @@ pub struct ServeSimConfig {
     pub offered_rps: f64,
     /// Async mode: per-request deadline.
     pub deadline_ms: Option<f64>,
+    /// Weight-pick skew (`--weight-reuse R`). `0.0` keeps the uniform
+    /// pick (bit-identical request stream to every earlier artifact);
+    /// `R > 0` skews picks Zipf-ishly toward low-index weights
+    /// (`u^(1+R)` scaled over the working set), concentrating traffic
+    /// on a few hot weights so weight-stationary grouping has material
+    /// same-digest runs to work with.
+    pub weight_reuse: f64,
     /// Write the metrics as a JSON artifact (`BENCH_serve.json`).
     pub json: Option<PathBuf>,
 }
@@ -111,6 +118,7 @@ impl ServeSimConfig {
             mode: ServeMode::Sync,
             offered_rps: 2000.0,
             deadline_ms: Some(25.0),
+            weight_reuse: 0.0,
             json: None,
         }
     }
@@ -125,6 +133,7 @@ impl ServeSimConfig {
             mode: ServeMode::Sync,
             offered_rps: 4000.0,
             deadline_ms: Some(25.0),
+            weight_reuse: 0.0,
             json: None,
         }
     }
@@ -244,9 +253,18 @@ fn build_workload(
         weights.push((Arc::new(Mat::new(k, n, data)?), fmts[i % fmts.len()]));
     }
     // Request stream: random weight pick, random activation height.
+    // With `weight_reuse == 0.0` the pick stays the exact historical
+    // `rng.below` call (artifact streams are bit-identical to every
+    // prior version); with R > 0 it skews Zipf-ishly toward low-index
+    // weights, concentrating traffic on a few hot weights.
     let mut requests: Vec<Request> = Vec::with_capacity(cfg.requests);
     for _ in 0..cfg.requests {
-        let wi = rng.below(weights.len());
+        let wi = if cfg.weight_reuse > 0.0 {
+            let u = rng.uniform().powf(1.0 + cfg.weight_reuse);
+            ((u * weights.len() as f64) as usize).min(weights.len() - 1)
+        } else {
+            rng.below(weights.len())
+        };
         let k = weights[wi].0.rows;
         let m = 1 + rng.below(48);
         let data = randn(&mut rng, m * k);
@@ -426,6 +444,17 @@ pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport
             format!("{:.3}", s.decode_us as f64 / 1e3),
         );
         kv(
+            "grouped ops (weight-stationary)",
+            format!(
+                "{} grouped / {} ungrouped in {} groups",
+                s.grouped_ops, s.ungrouped_ops, s.groups_formed
+            ),
+        );
+        kv(
+            "weight-plane loads avoided (KiB)",
+            (s.weight_plane_loads_avoided >> 10).to_string(),
+        );
+        kv(
             "arena checkouts",
             format!(
                 "{} hits / {} misses ({:.0}% hit rate)",
@@ -566,6 +595,16 @@ pub fn run(rt: &Arc<ExecRuntime>, cfg: &ServeSimConfig) -> Result<ServeSimReport
         ("decode_ops", svc_num(|s| s.decode_ops as f64)),
         ("decoded_overlapped", svc_num(|s| s.decoded_overlapped as f64)),
         ("decode_stage_ms", svc_num(|s| s.decode_us as f64 / 1e3)),
+        // Weight-stationary grouping counters (async mode only):
+        // grouped_ops + ungrouped_ops == completed, always.
+        ("grouped_ops", svc_num(|s| s.grouped_ops as f64)),
+        ("ungrouped_ops", svc_num(|s| s.ungrouped_ops as f64)),
+        ("groups_formed", svc_num(|s| s.groups_formed as f64)),
+        (
+            "weight_plane_loads_avoided_bytes",
+            svc_num(|s| s.weight_plane_loads_avoided as f64),
+        ),
+        ("weight_reuse", Json::Num(cfg.weight_reuse)),
         ("arena_hits", svc_num(|s| s.arena_hits as f64)),
         ("arena_misses", svc_num(|s| s.arena_misses as f64)),
         (
@@ -1524,6 +1563,12 @@ mod tests {
         // buffer-arena counters are live.
         let decode_ops = j.req("decode_ops").unwrap().as_usize().unwrap();
         assert_eq!(decode_ops, report.completed);
+        // Grouping counters partition the completed stream exactly —
+        // whatever the grouping threshold resolved to.
+        let grouped = j.req("grouped_ops").unwrap().as_usize().unwrap();
+        let ungrouped = j.req("ungrouped_ops").unwrap().as_usize().unwrap();
+        assert_eq!(grouped + ungrouped, report.completed);
+        assert!(j.req("weight_plane_loads_avoided_bytes").unwrap().as_f64().unwrap() >= 0.0);
         let overlapped = j.req("decoded_overlapped").unwrap().as_usize().unwrap();
         assert!(overlapped <= decode_ops);
         assert!(j.req("decode_stage_ms").unwrap().as_f64().unwrap() >= 0.0);
@@ -1613,6 +1658,30 @@ mod tests {
         assert!(back.req("verified").unwrap().as_bool().unwrap());
         assert!(back.req("warm_load_ms").unwrap().as_f64().unwrap() >= 0.0);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn weight_reuse_skews_picks_without_touching_the_baseline_stream() {
+        let mut cfg = ServeSimConfig::quick();
+        cfg.requests = 200;
+        cfg.weights = 6;
+        let (_, base, _) = build_workload(&cfg).unwrap();
+        cfg.weight_reuse = 3.0;
+        let (_, skewed, _) = build_workload(&cfg).unwrap();
+        let hot = |reqs: &[Request]| reqs.iter().filter(|r| r.wi == 0).count();
+        // Zipf-ish skew concentrates traffic on the low-index weights;
+        // the uniform baseline spreads it ~evenly.
+        assert!(
+            hot(&skewed) > 2 * hot(&base),
+            "skewed {} vs base {}",
+            hot(&skewed),
+            hot(&base)
+        );
+        assert!(skewed.iter().all(|r| r.wi < cfg.weights));
+        // R == 0.0 must replay the exact historical pick sequence.
+        cfg.weight_reuse = 0.0;
+        let (_, again, _) = build_workload(&cfg).unwrap();
+        assert!(base.iter().zip(&again).all(|(a, b)| a.wi == b.wi));
     }
 
     #[test]

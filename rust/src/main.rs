@@ -45,11 +45,16 @@ SUBCOMMANDS
             [--batch B] [--weights W]    GEMM request stream through the
             [--verify] [--async]         execution service; --async uses
             [--rps R] [--deadline-ms D]  open-loop BfpService admission
-            [--json PATH] [--fabric N]   (Poisson arrivals, deadlines,
-            [--registry DIR]             miss rate, queue depth) and adds
-            [--epochs N]                 per-stage latency-breakdown rows
-                                         (queue wait / encode / gemm /
-                                         decode at p50/p95/p99); --json
+            [--weight-reuse R]           (Poisson arrivals, deadlines,
+            [--json PATH] [--fabric N]   miss rate, queue depth) and adds
+            [--registry DIR]             per-stage latency-breakdown rows
+            [--epochs N]                 (queue wait / encode / gemm /
+                                         decode at p50/p95/p99);
+                                         --weight-reuse R skews weight
+                                         picks Zipf-ishly toward a few
+                                         hot weights (0 = uniform), so
+                                         weight-stationary grouping has
+                                         same-weight runs to batch; --json
                                          (or $REPRO_BENCH_JSON) writes a
                                          BENCH_serve.json artifact;
                                          --fabric N drives the stream
@@ -71,8 +76,11 @@ SUBCOMMANDS
   registry pull  --dir DIR [--name N]    blobs under a JSON manifest —
   registry ls    --dir DIR               identical blobs dedup by
   registry gc    --dir DIR               construction; pull loads + bit-
-                                         verifies; ls lists manifests;
-                                         gc removes unreachable blobs
+            [--keep-last N]              verifies; ls lists manifests;
+                                         gc removes unreachable blobs;
+                                         --keep-last N first retires all
+                                         but the N newest manifests, then
+                                         sweeps blobs nothing references
   fabric-runner [--listen HOST:PORT]     host the execution service on a
                 [--registry DIR]         TCP socket for fabric routers
                                          (default $BOOSTERS_FABRIC_LISTEN
@@ -94,6 +102,8 @@ Env knobs: BOOSTERS_KERNEL=auto|scalar|autovec|avx2|avx512|neon (GEMM backend),
   BOOSTERS_AUTOTUNE=PATH (shape-dispatch table, see bench --autotune),
   BOOSTERS_PREENCODE_MB=N (resident pre-encoded activation-plane cap),
   BOOSTERS_ARENA_MB=N (recycled output/accumulator buffer-arena cap),
+  BOOSTERS_GROUP_MIN_OPS=N (same-weight ops per batch before they run as
+  one weight-stationary grouped GEMM; 0 disables grouping; default 2),
   BOOSTERS_GEMM_THREADS=N, BOOSTERS_CACHE_ENTRIES=N, BOOSTERS_CACHE_MB=N,
   BOOSTERS_FABRIC_RUNNERS=N (serve-sim --fabric fleet size),
   BOOSTERS_FABRIC_MAC_BUDGET=N (per-runner outstanding-MAC admission cap),
@@ -254,6 +264,13 @@ fn main() -> Result<()> {
             if let Some(d) = args.get_parse::<f64>("deadline-ms")? {
                 cfg.deadline_ms = Some(d);
             }
+            if let Some(r) = args.get_parse::<f64>("weight-reuse")? {
+                anyhow::ensure!(
+                    r >= 0.0 && r.is_finite(),
+                    "--weight-reuse must be a finite non-negative number, got {r}"
+                );
+                cfg.weight_reuse = r;
+            }
             cfg.json = args
                 .get("json")
                 .map(std::path::PathBuf::from)
@@ -404,10 +421,13 @@ fn registry_cli(args: &Args) -> Result<()> {
             }
         }
         Some("gc") => {
-            let s = reg.gc()?;
+            let s = match args.get_parse::<usize>("keep-last")? {
+                Some(n) => reg.gc_keep_last(n)?,
+                None => reg.gc()?,
+            };
             println!(
-                "gc: kept {} blob(s), removed {} ({} B reclaimed)",
-                s.blobs_kept, s.blobs_removed, s.bytes_removed
+                "gc: retired {} manifest(s), kept {} blob(s), removed {} ({} B reclaimed)",
+                s.manifests_removed, s.blobs_kept, s.blobs_removed, s.bytes_removed
             );
         }
         other => bail!(

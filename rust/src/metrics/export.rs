@@ -86,6 +86,25 @@ pub fn render_text(
         service.decoded_overlapped,
     );
     push(&mut out, "exec_decode_us_total", "counter", service.decode_us);
+    push(&mut out, "exec_grouped_ops_total", "counter", service.grouped_ops);
+    push(
+        &mut out,
+        "exec_ungrouped_ops_total",
+        "counter",
+        service.ungrouped_ops,
+    );
+    push(
+        &mut out,
+        "exec_groups_formed_total",
+        "counter",
+        service.groups_formed,
+    );
+    push(
+        &mut out,
+        "exec_weight_plane_loads_avoided_bytes",
+        "counter",
+        service.weight_plane_loads_avoided,
+    );
     push(&mut out, "cache_hits_total", "counter", cache.hits);
     push(&mut out, "cache_misses_total", "counter", cache.misses);
     push(&mut out, "cache_evictions_total", "counter", cache.evictions);
@@ -135,6 +154,10 @@ mod tests {
             decode_ops: 8,
             decoded_overlapped: 5,
             decode_us: 321,
+            grouped_ops: 6,
+            ungrouped_ops: 2,
+            groups_formed: 2,
+            weight_plane_loads_avoided: 8192,
             arena_hits: 7,
             arena_misses: 1,
             arena_recycled_bytes: 2048,
@@ -199,6 +222,14 @@ boosters_exec_decode_ops_total 8
 boosters_exec_decode_overlapped_total 5
 # TYPE boosters_exec_decode_us_total counter
 boosters_exec_decode_us_total 321
+# TYPE boosters_exec_grouped_ops_total counter
+boosters_exec_grouped_ops_total 6
+# TYPE boosters_exec_ungrouped_ops_total counter
+boosters_exec_ungrouped_ops_total 2
+# TYPE boosters_exec_groups_formed_total counter
+boosters_exec_groups_formed_total 2
+# TYPE boosters_exec_weight_plane_loads_avoided_bytes counter
+boosters_exec_weight_plane_loads_avoided_bytes 8192
 # TYPE boosters_cache_hits_total counter
 boosters_cache_hits_total 9
 # TYPE boosters_cache_misses_total counter

@@ -290,6 +290,9 @@ pub struct GcStats {
     pub blobs_kept: usize,
     pub blobs_removed: usize,
     pub bytes_removed: u64,
+    /// Manifests retired by a [`Registry::gc_keep_last`] retention pass
+    /// (always 0 for plain [`Registry::gc`]).
+    pub manifests_removed: usize,
 }
 
 /// Outcome of a [`Registry::warm_cache`] preload.
@@ -544,6 +547,37 @@ impl Registry {
             stats.blobs_removed += 1;
             stats.bytes_removed += len;
         }
+        Ok(stats)
+    }
+
+    /// Retention gc (`registry gc --keep-last N`): retire every manifest
+    /// but the `keep` newest (by file modification time, name-sorted to
+    /// break ties deterministically), then run the plain reachability
+    /// sweep. Blobs the surviving manifests share with retired ones are
+    /// untouched — reachability is recomputed after retirement, so a
+    /// blob is removed only when **no** surviving manifest references
+    /// it. `keep == 0` retires every manifest and empties the store.
+    pub fn gc_keep_last(&self, keep: usize) -> Result<GcStats> {
+        let mut dated: Vec<(std::time::SystemTime, String)> = Vec::new();
+        for name in self.manifest_names()? {
+            let path = self.manifest_path(&name);
+            let mtime = std::fs::metadata(&path)
+                .and_then(|m| m.modified())
+                .map_err(|e| io_err(&path, e))?;
+            dated.push((mtime, name));
+        }
+        // Newest first; equal mtimes (coarse filesystem clocks) fall
+        // back to reverse name order so push order still wins when
+        // names sort chronologically (epoch00, epoch01, ...).
+        dated.sort_by(|a, b| b.cmp(a));
+        let mut manifests_removed = 0usize;
+        for (_, name) in dated.iter().skip(keep) {
+            let path = self.manifest_path(name);
+            std::fs::remove_file(&path).map_err(|e| io_err(&path, e))?;
+            manifests_removed += 1;
+        }
+        let mut stats = self.gc()?;
+        stats.manifests_removed = manifests_removed;
         Ok(stats)
     }
 
@@ -979,6 +1013,55 @@ mod tests {
         assert!(!reg.has_blob(content_fingerprint(&drop_.data, 16, 16), f));
         // The surviving manifest still pulls clean.
         assert_eq!(reg.pull("keep").unwrap().len(), 1);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn gc_keep_last_retires_old_manifests_but_never_shared_blobs() {
+        let root = temp_root("gc_keep_last");
+        let reg = Registry::open(&root).unwrap();
+        let f = fmt(4, 16);
+        let (m1, m2, m3) = (mat(16, 16, 1), mat(16, 16, 2), mat(16, 16, 3));
+        let push = |name: &str, mats: &[&Mat]| {
+            let layers: Vec<PushLayer<'_>> = mats
+                .iter()
+                .enumerate()
+                .map(|(i, w)| PushLayer {
+                    name: if i == 0 { "a" } else { "b" },
+                    weight: w,
+                    fmt: f,
+                })
+                .collect();
+            reg.push(name, &layers, &BTreeMap::new()).unwrap();
+        };
+        push("epoch00", &[&m1, &m2]);
+        push("epoch01", &[&m2, &m3]); // m2 dedups against epoch00
+        assert_eq!(reg.blob_stats().unwrap().0, 3);
+
+        // keep >= manifest count: retention is a no-op.
+        let s = reg.gc_keep_last(2).unwrap();
+        assert_eq!(s.manifests_removed, 0);
+        assert_eq!(s.blobs_removed, 0);
+        assert_eq!(s.blobs_kept, 3);
+
+        // keep 1: the older epoch00 is retired; its private blob (m1)
+        // goes, but m2 — shared with the surviving epoch01 — must stay.
+        let s = reg.gc_keep_last(1).unwrap();
+        assert_eq!(s.manifests_removed, 1);
+        assert_eq!(s.blobs_removed, 1);
+        assert_eq!(s.blobs_kept, 2);
+        assert!(s.bytes_removed > 0);
+        assert_eq!(reg.manifest_names().unwrap(), vec!["epoch01".to_string()]);
+        assert!(!reg.has_blob(content_fingerprint(&m1.data, 16, 16), f));
+        assert!(reg.has_blob(content_fingerprint(&m2.data, 16, 16), f));
+        assert_eq!(reg.pull("epoch01").unwrap().len(), 2);
+
+        // keep 0: everything is retired and the store empties.
+        let s = reg.gc_keep_last(0).unwrap();
+        assert_eq!(s.manifests_removed, 1);
+        assert_eq!(s.blobs_removed, 2);
+        assert!(reg.manifest_names().unwrap().is_empty());
+        assert_eq!(reg.blob_stats().unwrap().0, 0);
         std::fs::remove_dir_all(&root).ok();
     }
 

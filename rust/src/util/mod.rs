@@ -276,6 +276,30 @@ pub fn parse_fabric_store_budget(mb: Option<&str>) -> u64 {
         .unwrap_or(DEFAULT_FABRIC_STORE_BYTES)
 }
 
+/// Default same-weight grouping threshold for the batch execution
+/// stage: groups of at least this many ops execute weight-stationary.
+pub const DEFAULT_GROUP_MIN_OPS: usize = 2;
+
+/// Same-weight grouping threshold for the batch execution stage: the
+/// single home of the `BOOSTERS_GROUP_MIN_OPS` override. Ops of one
+/// batch sharing a weight `(digest, format, layout)` key execute as a
+/// single weight-stationary grouped GEMM when the group has at least
+/// this many members; `0` disables grouping entirely (the pre-group
+/// per-op behavior). Grouping is a memory-bandwidth optimization,
+/// never a numerics one — results stay bit-identical either way.
+pub fn group_min_ops() -> usize {
+    parse_group_min_ops(std::env::var("BOOSTERS_GROUP_MIN_OPS").ok().as_deref())
+}
+
+/// Pure parsing core of [`group_min_ops`]: missing or malformed values
+/// fall back to [`DEFAULT_GROUP_MIN_OPS`]; an explicit `0` is valid
+/// and disables grouping (unlike the budget knobs, where 0 would mean
+/// all-stall and is rejected).
+pub fn parse_group_min_ops(raw: Option<&str>) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok())
+        .unwrap_or(DEFAULT_GROUP_MIN_OPS)
+}
+
 /// Listen address for `repro fabric-runner` when `--listen` is not
 /// given: the single home of the `BOOSTERS_FABRIC_LISTEN` override.
 /// `Some(addr)` when set and non-empty.
@@ -396,6 +420,19 @@ pub fn validate_env_vars(get: impl Fn(&str) -> Option<String>) -> Vec<EnvIssue> 
                 var: "BOOSTERS_FABRIC_CONNECT",
                 value: v.clone(),
                 problem: format!("entry {bad:?} is not a host:port address"),
+            });
+        }
+    }
+    if let Some(v) = get("BOOSTERS_GROUP_MIN_OPS") {
+        // 0 is valid here (it disables grouping), so this knob cannot
+        // ride the positive_int helper.
+        if v.trim().parse::<u64>().is_err() {
+            issues.push(EnvIssue {
+                var: "BOOSTERS_GROUP_MIN_OPS",
+                value: v,
+                problem: "expected a non-negative integer (same-weight grouping \
+                          threshold; 0 disables)"
+                    .to_string(),
             });
         }
     }
@@ -539,6 +576,21 @@ mod tests {
     }
 
     #[test]
+    fn group_min_ops_parsing_and_fallback() {
+        // Unset or garbage -> the default threshold.
+        assert_eq!(parse_group_min_ops(None), DEFAULT_GROUP_MIN_OPS);
+        assert_eq!(parse_group_min_ops(Some("many")), DEFAULT_GROUP_MIN_OPS);
+        assert_eq!(parse_group_min_ops(Some("-2")), DEFAULT_GROUP_MIN_OPS);
+        // An explicit 0 is valid: it disables grouping.
+        assert_eq!(parse_group_min_ops(Some("0")), 0);
+        assert_eq!(parse_group_min_ops(Some(" 0 ")), 0);
+        // Any non-negative integer is accepted verbatim.
+        assert_eq!(parse_group_min_ops(Some(" 4 ")), 4);
+        // The env-reading wrapper runs without panicking.
+        let _ = group_min_ops();
+    }
+
+    #[test]
     fn fabric_knob_parsing_and_fallback() {
         // Unset -> defaults; zero and garbage fall back, never 0.
         assert_eq!(parse_fabric_runners(None), DEFAULT_FABRIC_RUNNERS);
@@ -595,6 +647,7 @@ mod tests {
             ("BOOSTERS_FABRIC_STORE_MB", "64"),
             ("BOOSTERS_FABRIC_LISTEN", "127.0.0.1:7000"),
             ("BOOSTERS_FABRIC_CONNECT", "127.0.0.1:7001, localhost:7002"),
+            ("BOOSTERS_GROUP_MIN_OPS", "0"),
         ]
         .into_iter()
         .collect();
@@ -613,11 +666,12 @@ mod tests {
             ("BOOSTERS_FABRIC_STORE_MB", "-5"),
             ("BOOSTERS_FABRIC_LISTEN", "nowhere"),
             ("BOOSTERS_FABRIC_CONNECT", "127.0.0.1:7001,bogus"),
+            ("BOOSTERS_GROUP_MIN_OPS", "many"),
         ]
         .into_iter()
         .collect();
         let issues = validate_env_vars(|v| bad.get(v).map(|s| s.to_string()));
-        assert_eq!(issues.len(), 12, "{issues:?}");
+        assert_eq!(issues.len(), 13, "{issues:?}");
         for issue in &issues {
             // Display output names the variable and the rejected value
             // so the operator can fix all of them from one failure.

@@ -1,0 +1,193 @@
+//! Property tests for weight-stationary grouped execution (PR 10):
+//! digest-grouping same-weight ops into one tall-M GEMM may change how
+//! *work* is traversed — weight planes stream once per band tile per
+//! group instead of once per op — but never a single output bit.
+//! Grouped and ungrouped runs of the same mixed batch must agree with
+//! each other and with the per-op scalar reference, across every
+//! kernel backend, pool width, and plane layout (nibble-packed i4,
+//! i8, and wide i16 planes that run fused inside the split and are
+//! never grouped), under ragged K and arbitrary submission order.
+
+use boosters::bfp::{hbfp_gemm_scalar, BlockFormat, Mat};
+use boosters::exec::{BfpService, ExecRuntime, GemmRequest, OwnedGemmOp, ServiceConfig, Ticket};
+use boosters::util::{KernelChoice, Rng};
+use std::sync::Arc;
+
+fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_scaled(1.0)).collect()
+}
+
+/// Mixed batch with deliberate same-weight runs: for each format on
+/// the grid, two shared weights carrying three ops each (distinct
+/// activation heights) plus one solo-weight op. Formats cover every
+/// plane layout — (4,16)/(4,64) nibble-packed i4, (6,64)/(8,16) i8,
+/// and (12,576)/(16,64) wide i16 planes that run fused-in-split and
+/// must ride through a grouped batch untouched. K is ragged: every
+/// weight gets its own K, so groups with different K coexist.
+fn build_grouped_ops(rng: &mut Rng) -> Vec<OwnedGemmOp> {
+    let mut out = Vec::new();
+    for &(m, b) in &[
+        (4u32, 16usize),
+        (4, 64),
+        (6, 64),
+        (8, 16),
+        // Wide mantissas -> i16 planes -> fused-in-split, never grouped.
+        (12, 576),
+        (16, 64),
+    ] {
+        let fmt = BlockFormat::new(m, b).unwrap();
+        for _ in 0..2 {
+            let k = 1 + rng.below(2 * b.min(128) + 37);
+            let c = 1 + rng.below(7);
+            let shared = Arc::new(Mat::new(k, c, randn(rng, k * c)).unwrap());
+            for _ in 0..3 {
+                let r = 1 + rng.below(9);
+                let x = Arc::new(Mat::new(r, k, randn(rng, r * k)).unwrap());
+                out.push(OwnedGemmOp::new(x, Arc::clone(&shared), fmt).unwrap());
+            }
+        }
+        // One solo weight per format: stays ungrouped by construction.
+        let k = 1 + rng.below(2 * b.min(128) + 37);
+        let c = 1 + rng.below(6);
+        let r = 1 + rng.below(5);
+        let x = Arc::new(Mat::new(r, k, randn(rng, r * k)).unwrap());
+        let w = Arc::new(Mat::new(k, c, randn(rng, k * c)).unwrap());
+        out.push(OwnedGemmOp::new(x, w, fmt).unwrap());
+    }
+    out
+}
+
+fn assert_bits_eq(a: &Mat, b: &Mat, ctx: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{ctx}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: elem {i}: {x} vs {y}");
+    }
+}
+
+/// Drive one service over `ops` in the given submission order with
+/// batch formation paused, so the whole stream lands in as few batches
+/// as the budget allows — the shape that actually forms groups.
+fn drive(svc: &BfpService, ops: &[OwnedGemmOp], order: &[usize]) -> Vec<Mat> {
+    svc.pause();
+    let tickets: Vec<(usize, Ticket)> = order
+        .iter()
+        .map(|&i| (i, svc.submit(GemmRequest::new(ops[i].clone())).unwrap()))
+        .collect();
+    svc.resume();
+    let mut outs: Vec<Option<Mat>> = (0..ops.len()).map(|_| None).collect();
+    for (i, t) in tickets {
+        outs[i] = Some(t.wait().unwrap().out);
+    }
+    outs.into_iter().map(Option::unwrap).collect()
+}
+
+/// Acceptance gate (PR 10): grouped execution is bit-identical to both
+/// the ungrouped service and the per-op scalar reference across every
+/// kernel backend × pool width × plane layout, and the grouped
+/// counters partition the completed stream exactly.
+#[test]
+fn prop_grouped_bit_identical_across_kernels_threads_layouts() {
+    let mut rng = Rng::new(0x62B1);
+    let ops = build_grouped_ops(&mut rng);
+    let order: Vec<usize> = (0..ops.len()).collect();
+    let want: Vec<Mat> = ops
+        .iter()
+        .map(|op| hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap())
+        .collect();
+    for choice in [
+        KernelChoice::Scalar,
+        KernelChoice::Autovec,
+        KernelChoice::Avx2,
+        KernelChoice::Avx512,
+        KernelChoice::Neon,
+    ] {
+        for threads in [1usize, 4] {
+            let grouped = BfpService::new(
+                Arc::new(ExecRuntime::with_threads(threads)),
+                ServiceConfig {
+                    kernel: choice,
+                    group_min_ops: 2,
+                    ..ServiceConfig::default()
+                },
+            );
+            let ungrouped = BfpService::new(
+                Arc::new(ExecRuntime::with_threads(threads)),
+                ServiceConfig {
+                    kernel: choice,
+                    group_min_ops: 0,
+                    ..ServiceConfig::default()
+                },
+            );
+            let got_g = drive(&grouped, &ops, &order);
+            let got_u = drive(&ungrouped, &ops, &order);
+            for (i, ((g, u), w)) in got_g.iter().zip(&got_u).zip(&want).enumerate() {
+                let ctx = format!(
+                    "kernel {choice:?} threads {threads} op {i} (m={} b={})",
+                    ops[i].fmt.mantissa_bits, ops[i].fmt.block_size
+                );
+                assert_bits_eq(g, w, &format!("{ctx} grouped-vs-scalar"));
+                assert_bits_eq(u, w, &format!("{ctx} ungrouped-vs-scalar"));
+            }
+            let gs = grouped.stats();
+            assert_eq!(gs.completed, ops.len() as u64, "{gs:?}");
+            assert_eq!(gs.grouped_ops + gs.ungrouped_ops, gs.completed, "{gs:?}");
+            // Same-weight narrow runs exist by construction, and the
+            // whole stream was admitted before batch formation resumed.
+            assert!(gs.grouped_ops > 0, "{gs:?}");
+            assert!(gs.groups_formed > 0, "{gs:?}");
+            assert!(gs.weight_plane_loads_avoided > 0, "{gs:?}");
+            let us = ungrouped.stats();
+            assert_eq!(us.grouped_ops, 0, "{us:?}");
+            assert_eq!(us.groups_formed, 0, "{us:?}");
+            assert_eq!(us.ungrouped_ops, us.completed, "{us:?}");
+        }
+    }
+}
+
+/// Submission order never changes a result: the same op multiset
+/// submitted forward, reversed, and weight-interleaved produces
+/// bit-identical per-op responses — grouping keys on content digest,
+/// not arrival position.
+#[test]
+fn prop_grouped_results_are_submission_order_invariant() {
+    let mut rng = Rng::new(0x0D3A);
+    let ops = build_grouped_ops(&mut rng);
+    let n = ops.len();
+    let forward: Vec<usize> = (0..n).collect();
+    let reversed: Vec<usize> = (0..n).rev().collect();
+    // Interleave front/back so same-weight triples scatter across the
+    // submission stream instead of arriving adjacent.
+    let mut interleaved = Vec::with_capacity(n);
+    for i in 0..n / 2 {
+        interleaved.push(i);
+        interleaved.push(n - 1 - i);
+    }
+    if n % 2 == 1 {
+        interleaved.push(n / 2);
+    }
+    let want: Vec<Mat> = ops
+        .iter()
+        .map(|op| hbfp_gemm_scalar(&op.x, &op.w, op.fmt).unwrap())
+        .collect();
+    for order in [&forward, &reversed, &interleaved] {
+        let svc = BfpService::new(
+            Arc::new(ExecRuntime::with_threads(2)),
+            ServiceConfig {
+                group_min_ops: 2,
+                ..ServiceConfig::default()
+            },
+        );
+        let got = drive(&svc, &ops, order);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_bits_eq(g, w, &format!("order {order:?} op {i}"));
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.completed, n as u64, "{stats:?}");
+        assert_eq!(
+            stats.grouped_ops + stats.ungrouped_ops,
+            stats.completed,
+            "{stats:?}"
+        );
+        assert!(stats.grouped_ops > 0, "{stats:?}");
+    }
+}
